@@ -1,0 +1,79 @@
+//! Standalone macro characterization — the software twin of §V.A's
+//! measurement setup (Fig. 16b): sweep the simulated die in FC test mode
+//! and print transfer function, INL, RMS and calibration statistics.
+//!
+//! Run: `cargo run --release --example characterize -- [seed]`
+
+use imagine::analog::macro_model::{CimMacro, OpConfig};
+use imagine::config::params::MacroParams;
+use imagine::util::stats;
+
+fn main() {
+    let seed: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(42);
+
+    // The measured CERBERUS sample sits in the slow corner.
+    let p = MacroParams::measured_chip();
+    let mut die = CimMacro::new(p.clone(), seed);
+
+    // ---- calibration (Fig. 19-style) ----
+    println!("== SA-offset calibration across 256 columns ==");
+    let lsb = p.adc_lsb(8, 1.0);
+    let pre: Vec<f64> = die.adcs.iter().map(|a| a.sa.offset / lsb).collect();
+    let resid = die.calibrate_all();
+    let post: Vec<f64> = resid.iter().map(|r| r / lsb).collect();
+    println!(
+        "offset spread pre-cal : {:>6.2} LSB rms, max |{:.1}| LSB",
+        stats::std(&pre),
+        stats::max_abs(&pre)
+    );
+    println!(
+        "offset spread post-cal: {:>6.2} LSB rms, max |{:.1}| LSB",
+        stats::std(&post),
+        stats::max_abs(&post)
+    );
+    let within = post.iter().filter(|e| e.abs() <= 1.0).count();
+    println!("columns within 1 LSB  : {within}/256 ({:.1}%)\n", within as f64 / 2.56);
+
+    // ---- FC-mode transfer function at 16 channels (Fig. 17-style) ----
+    println!("== 8b transfer function, 16 channels (128 rows), gamma=1 ==");
+    let cfg = OpConfig::new(8, 1, 8).with_units(4).with_gamma(1.0);
+    let rows = cfg.active_rows(&p);
+    let x = vec![0u8; rows]; // inputs at zero; sweep stored weights
+    println!("w(+1 count)  code(mean over 16 blocks)");
+    let mut codes_sweep = Vec::new();
+    for n_ones in (0..=rows).step_by(16) {
+        let w: Vec<i32> = (0..rows).map(|r| if r < n_ones { 1 } else { -1 }).collect();
+        die.load_weights_broadcast(&w, 16, 1);
+        let mut samples = Vec::new();
+        for blk in 0..16 {
+            samples.push(die.block_op(blk, &x, &cfg) as f64);
+        }
+        let mean = stats::mean(&samples);
+        codes_sweep.push(mean);
+        if n_ones % 32 == 0 {
+            println!("{n_ones:>10}  {mean:>8.2}");
+        }
+    }
+    let xs: Vec<f64> = (0..codes_sweep.len()).map(|i| i as f64).collect();
+    let inl = stats::inl_best_fit(&xs, &codes_sweep);
+    println!("max |INL| over the sweep: {:.2} LSB\n", stats::max_abs(&inl));
+
+    // ---- temporal-noise RMS (Fig. 18a-style) ----
+    println!("== output RMS vs gamma (100 repeats, fixed input) ==");
+    // Near-zero DP (balanced weights, midscale inputs) so that the γ zoom
+    // amplifies the noise floor instead of clipping (the Fig. 18a setup).
+    let w: Vec<i32> = (0..rows).map(|r| if r % 2 == 0 { 1 } else { -1 }).collect();
+    die.load_weights_broadcast(&w, 16, 1);
+    let x: Vec<u8> = vec![128u8; rows];
+    for gamma in [1.0, 2.0, 4.0, 8.0, 16.0, 32.0] {
+        let cfg = OpConfig::new(8, 1, 8).with_units(4).with_gamma(gamma);
+        let samples: Vec<f64> = (0..100).map(|_| die.block_op(0, &x, &cfg) as f64).collect();
+        let mean = stats::mean(&samples);
+        let rms: f64 = stats::std(&samples);
+        println!("gamma {gamma:>4}: mean code {mean:>7.2}, RMS {rms:.2} LSB");
+    }
+    println!("\ncharacterization done (seed {seed}, corner SS)");
+}

@@ -1,0 +1,52 @@
+//! Precision/efficiency trade-off sweep — the macro's headline feature:
+//! 1-to-8b scalable computing with quasi-linear efficiency scaling
+//! (abstract: 0.15–8 POPS/W, 2.6–154 TOPS/mm²).
+//!
+//! Prints the (r_in, r_out) grid of Fig. 22a plus the Table I extremes,
+//! at both supply points.
+//!
+//! Run: `cargo run --release --example precision_sweep`
+
+use imagine::analog::macro_model::OpConfig;
+use imagine::config::params::{MacroParams, Supply};
+use imagine::energy::{analog as ea, area, timing};
+
+fn main() {
+    for (label, supply) in [("0.4/0.8 V", Supply::NOMINAL), ("0.3/0.6 V", Supply::LOW_POWER)] {
+        let p = MacroParams::paper().with_supply(supply);
+        println!("== {label} ==");
+        println!("r_in r_out |  raw EE       8b-norm EE   throughput(8b)  AE(raw)");
+        for r_in in [1u32, 2, 4, 8] {
+            for r_out in [r_in] {
+                let cfg = OpConfig::new(r_in, 1, r_out).with_units(32);
+                let ee_raw = ea::ee_raw(&p, &cfg);
+                let ee_8b = ea::ee_8b(&p, &cfg);
+                let tput = timing::peak_throughput_8b(&p, &cfg);
+                let ae = area::area_efficiency_raw(&p, &cfg);
+                println!(
+                    "{r_in:>4} {r_out:>5} | {:>7.2} POPS/W {:>7.1} TOPS/W {:>9.3} TOPS  {:>7.1} TOPS/mm2",
+                    ee_raw / 1e15,
+                    ee_8b / 1e12,
+                    tput / 1e12,
+                    ae / 1e12,
+                );
+            }
+        }
+        // Mixed-precision corners of the paper's grid.
+        for (r_in, r_out) in [(4u32, 8u32), (8, 4), (1, 8)] {
+            let cfg = OpConfig::new(r_in, 1, r_out).with_units(32);
+            println!(
+                "{r_in:>4} {r_out:>5} | {:>7.2} POPS/W {:>7.1} TOPS/W {:>9.3} TOPS  (mixed)",
+                ea::ee_raw(&p, &cfg) / 1e15,
+                ea::ee_8b(&p, &cfg) / 1e12,
+                timing::peak_throughput_8b(&p, &cfg) / 1e12,
+            );
+        }
+        println!();
+    }
+    let p = MacroParams::paper();
+    println!(
+        "density {:.0} kB/mm2 | paper: 187 kB/mm2, 0.15-8 POPS/W, 2.6-154 TOPS/mm2",
+        p.density_kb_mm2()
+    );
+}

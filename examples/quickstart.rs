@@ -1,0 +1,81 @@
+//! Quickstart: the three-layer stack in one page.
+//!
+//! 1. Load the AOT-compiled smoke artifact (a single CIM macro matvec,
+//!    JAX/Pallas-lowered at build time) into the PJRT runtime.
+//! 2. Run it on the python-generated golden inputs and check the codes.
+//! 3. Run the same class of operation through the rust circuit-behavioral
+//!    macro simulator and show that silicon-fidelity effects (noise,
+//!    mismatch) stay within a few ADC LSBs of the ideal contract after
+//!    calibration.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use imagine::analog::macro_model::{CimMacro, OpConfig};
+use imagine::config::params::MacroParams;
+use imagine::runtime::Runtime;
+use imagine::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let dir = "artifacts";
+
+    // ---- 1. AOT artifact through PJRT (the request path) ----
+    let meta = Json::parse(&std::fs::read_to_string(format!(
+        "{dir}/smoke_cim.meta.json"
+    ))?)
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let rows = meta.req_usize("rows")?;
+    let batch = meta.req_usize("batch")?;
+    let cfg_j = meta.get("cfg").unwrap();
+
+    let mut rt = Runtime::new()?;
+    rt.load_hlo_text("smoke", format!("{dir}/smoke_cim.hlo.txt"))?;
+    println!("PJRT platform: {}", rt.platform());
+
+    let inputs: Vec<i32> = std::fs::read_to_string(format!("{dir}/smoke_cim.inputs.txt"))?
+        .split_whitespace()
+        .map(|t| t.parse().unwrap())
+        .collect();
+    let golden: Vec<i32> = std::fs::read_to_string(format!("{dir}/smoke_cim.golden.txt"))?
+        .split_whitespace()
+        .map(|t| t.parse::<f64>().unwrap() as i32)
+        .collect();
+
+    let codes = rt.run_i32("smoke", &inputs, &[batch, rows])?;
+    assert_eq!(codes, golden, "HLO output must match the python oracle");
+    println!(
+        "AOT/PJRT codes (batch 0): {:?}  -- matches python golden",
+        &codes[..8]
+    );
+
+    // ---- 2. Same class of op on the circuit-behavioral simulator ----
+    let cfg = OpConfig::new(
+        cfg_j.req_usize("r_in")? as u32,
+        cfg_j.req_usize("r_w")? as u32,
+        cfg_j.req_usize("r_out")? as u32,
+    )
+    .with_gamma(cfg_j.req_f64("gamma")?)
+    .with_units(cfg_j.req_usize("connected_units")?);
+
+    let mut die = CimMacro::new(MacroParams::paper(), 2024);
+    let mut w = Vec::with_capacity(rows);
+    let mut s = 0x1234_5678_u64;
+    for _ in 0..rows {
+        s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        w.push(if s >> 63 == 1 { 1 } else { -1 });
+    }
+    die.load_weights(&w, 1, 1);
+    die.calibrate_all();
+
+    let x: Vec<u8> = inputs[..rows].iter().map(|&v| v as u8).collect();
+    let ideal = CimMacro::ideal_code(&die.p, &x, &w, &cfg);
+    let measured = die.block_op(0, &x, &cfg);
+    println!(
+        "circuit sim: ideal code {ideal}, simulated die {measured} \
+         (delta = {} LSB; mismatch+noise, post-calibration)",
+        measured as i64 - ideal as i64
+    );
+    assert!((measured as i64 - ideal as i64).abs() <= 4);
+
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,180 @@
+"""AOT lowering: trained CIM model -> HLO *text* artifacts for the rust
+runtime.
+
+The interchange format is HLO text, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+The exported computation is the *inference* graph in ``pallas`` mode —
+the L1 kernel lowered with interpret=True so the CPU PJRT client can run
+it — taking a float image batch and returning logits. Python never runs
+at request time; the rust coordinator loads these artifacts once.
+
+Run:  python -m compile.aot --model lenet_cim --out ../artifacts
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import export
+from . import model as M
+from .kernels import cim_macro
+
+
+def infer_forward(spec: M.ModelSpec, params, x):
+    """Inference forward using the exported *physical* parameters
+    (quantized weights in macro row order, 5b beta codes).
+
+    x: [B, ...input_shape] float. Returns logits [B, 10].
+    """
+    y = x
+    conv_i = 0
+    for layer in spec.layers:
+        n = layer.name
+        cfg = layer.cfg
+        w_phys = params[f"{n}/w_phys"]
+        beta = params[f"{n}/beta_codes"]
+        a_scale = params[f"{n}/a_scale"]
+        out_gain = params[f"{n}/out_gain"]
+        m = float((1 << cfg.r_in) - 1)
+
+        if layer.kind == "dense" and y.ndim > 2:
+            y = y.reshape(y.shape[0], -1)
+        if layer.kind == "conv3":
+            b, c, h, wd = y.shape
+            pat = M.im2col(y, 3, layer.stride)
+            hh, ww = pat.shape[1], pat.shape[2]
+            x2d = pat.reshape(-1, 9 * c)
+        else:
+            x2d = y
+            b = x2d.shape[0]
+
+        xq = jnp.clip(jnp.round(x2d / a_scale), 0.0, m)
+        xq = M.pad_rows(xq, layer, (m + 1.0) / 2.0).astype(jnp.int32)
+
+        code = cim_macro.cim_matvec_pallas(xq, w_phys, cfg, beta).astype(jnp.float32)
+        half = float(1 << (cfg.r_out - 1))
+        out = (code - half) * out_gain
+        if layer.relu:
+            out = jax.nn.relu(out)
+        if layer.kind == "conv3":
+            out = out.reshape(b, hh, ww, layer.out_features).transpose(0, 3, 1, 2)
+            pool = spec.pools[conv_i] if conv_i < len(spec.pools) else None
+            out = M.pool_apply(out, pool)
+            conv_i += 1
+        y = out
+    return y
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe bridge).
+
+    print_large_constants is essential: the default printer elides big
+    weight tensors as ``constant({...})``, which the 0.5.1 text parser
+    silently mis-fills — the compiled module then computes garbage.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_model(out_dir: str, name: str, batch: int = 1) -> str:
+    """Load a trained model from out_dir and write <name>.hlo.txt."""
+    spec, params, manifest = export.load_model(out_dir, name)
+    fn = functools.partial(infer_forward, spec, params)
+
+    in_shape = (batch, *spec.input_shape)
+    x_spec = jax.ShapeDtypeStruct(in_shape, jnp.float32)
+    lowered = jax.jit(lambda x: (fn(x),)).lower(x_spec)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    meta = {
+        "model": name,
+        "batch": batch,
+        "input_shape": list(in_shape),
+        "output_shape": [batch, spec.layers[-1].out_features],
+        "hlo_chars": len(text),
+    }
+    with open(os.path.join(out_dir, f"{name}.hlo.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {len(text)} chars to {path}")
+    return path
+
+
+def lower_smoke(out_dir: str) -> str:
+    """A tiny single-layer CIM matvec HLO used by the quickstart example
+    and the runtime integration test (fixed weights, deterministic)."""
+    import numpy as np
+
+    from . import params as P
+    from .kernels import ref
+
+    cfg = P.OpConfig(r_in=4, r_w=1, r_out=8, gamma=4.0, connected_units=1)
+    rows = cfg.active_rows
+    rng = np.random.default_rng(1234)
+    w = (2 * rng.integers(0, 2, (rows, 8)) - 1).astype(np.int32)
+
+    def fn(x):
+        codes = cim_macro.cim_matvec_pallas(x, jnp.asarray(w), cfg)
+        return (codes.astype(jnp.int32),)
+
+    x_spec = jax.ShapeDtypeStruct((4, rows), jnp.int32)
+    lowered = jax.jit(fn).lower(x_spec)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, "smoke_cim.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    # Golden vectors for the rust integration test.
+    x = rng.integers(0, 16, (4, rows)).astype(np.int32)
+    codes = np.asarray(ref.cim_matvec_ref(jnp.asarray(x), jnp.asarray(w), cfg))
+    np.savetxt(os.path.join(out_dir, "smoke_cim.inputs.txt"), x, fmt="%d")
+    np.savetxt(os.path.join(out_dir, "smoke_cim.golden.txt"), codes, fmt="%d")
+    with open(os.path.join(out_dir, "smoke_cim.meta.json"), "w") as f:
+        json.dump(
+            {
+                "rows": rows,
+                "n_out": 8,
+                "batch": 4,
+                "cfg": {
+                    "r_in": cfg.r_in,
+                    "r_w": cfg.r_w,
+                    "r_out": cfg.r_out,
+                    "gamma": cfg.gamma,
+                    "connected_units": cfg.connected_units,
+                },
+                "weights_seed": 1234,
+            },
+            f,
+            indent=2,
+        )
+    print(f"wrote {len(text)} chars to {path}")
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", default=None, help="trained model name to lower")
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--smoke", action="store_true", help="emit the smoke HLO")
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    if args.smoke or args.model is None:
+        lower_smoke(args.out)
+    if args.model:
+        lower_model(args.out, args.model, args.batch)
+
+
+if __name__ == "__main__":
+    main()

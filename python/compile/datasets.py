@@ -1,0 +1,197 @@
+"""Synthetic datasets for the offline reproduction.
+
+The paper evaluates on MNIST (LeNet-5-class models, Fig. 3b / Table I)
+and CIFAR-10 (VGG-class). This environment has no network access, so we
+substitute procedurally generated datasets of matching shape and task
+structure (documented in DESIGN.md §2):
+
+* ``digits``  — 28x28 grayscale, 10 classes: seven-segment-style glyph
+  skeletons rendered with random affine jitter (shift/scale/shear),
+  stroke-width variation and pixel noise. MNIST-like dimensionality and
+  class count; linearly non-separable but learnable.
+* ``textures`` — 3x32x32 color, 10 classes: parametric texture/shape
+  families (oriented gratings, checkers, blobs, rings, corners...) with
+  random phase, frequency, color and noise. CIFAR-like shape; harder than
+  digits, exercising the deeper VGG-style model and the linear-ABN claim.
+
+Everything is deterministic in (seed, n) and pure numpy, so the rust side
+can regenerate identical data from the recorded seed.
+"""
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# digits
+# ---------------------------------------------------------------------------
+
+# Seven-segment truth table: segments (a, b, c, d, e, f, g).
+_SEGMENTS = {
+    0: "abcdef",
+    1: "bc",
+    2: "abged",
+    3: "abgcd",
+    4: "fgbc",
+    5: "afgcd",
+    6: "afgedc",
+    7: "abc",
+    8: "abcdefg",
+    9: "abcfgd",
+}
+
+# Segment endpoints on a unit glyph box (x0, y0, x1, y1) in [0,1]^2.
+_SEG_LINES = {
+    "a": (0.15, 0.05, 0.85, 0.05),
+    "b": (0.85, 0.05, 0.85, 0.50),
+    "c": (0.85, 0.50, 0.85, 0.95),
+    "d": (0.15, 0.95, 0.85, 0.95),
+    "e": (0.15, 0.50, 0.15, 0.95),
+    "f": (0.15, 0.05, 0.15, 0.50),
+    "g": (0.15, 0.50, 0.85, 0.50),
+}
+
+
+def _draw_line(img, x0, y0, x1, y1, width):
+    """Rasterize an anti-aliased thick line onto img (H, W) in-place."""
+    h, w = img.shape
+    ys, xs = np.mgrid[0:h, 0:w]
+    xs = (xs + 0.5) / w
+    ys = (ys + 0.5) / h
+    dx, dy = x1 - x0, y1 - y0
+    seg_len2 = dx * dx + dy * dy + 1e-12
+    t = ((xs - x0) * dx + (ys - y0) * dy) / seg_len2
+    t = np.clip(t, 0.0, 1.0)
+    px = x0 + t * dx
+    py = y0 + t * dy
+    dist = np.sqrt((xs - px) ** 2 + (ys - py) ** 2)
+    img += np.clip(1.0 - dist / width, 0.0, 1.0)
+
+
+def make_digits(n, seed=0, image_size=28):
+    """Generate the synthetic digit dataset.
+
+    Returns (x, y): x float32 [n, image_size, image_size] in [0, 1],
+    y int32 [n] in [0, 10).
+    """
+    rng = np.random.default_rng(seed)
+    x = np.zeros((n, image_size, image_size), np.float32)
+    y = rng.integers(0, 10, n).astype(np.int32)
+    for i in range(n):
+        img = np.zeros((image_size, image_size), np.float64)
+        # Random affine jitter of the glyph box.
+        cx = rng.uniform(0.22, 0.38)  # glyph half-width
+        cy = rng.uniform(0.28, 0.42)  # glyph half-height
+        ox = rng.uniform(0.06 + cx, 0.94 - cx)
+        oy = rng.uniform(0.04 + cy, 0.96 - cy)
+        shear = rng.uniform(-0.18, 0.18)
+        width = rng.uniform(0.045, 0.085)
+        for seg in _SEGMENTS[int(y[i])]:
+            x0, y0, x1, y1 = _SEG_LINES[seg]
+            # Map unit box -> jittered box with shear.
+            def m(px, py):
+                gx = (px - 0.5) * 2 * cx + ox + shear * (py - 0.5)
+                gy = (py - 0.5) * 2 * cy + oy
+                return gx, gy
+
+            a0, b0 = m(x0, y0)
+            a1, b1 = m(x1, y1)
+            _draw_line(img, a0, b0, a1, b1, width)
+        img = np.clip(img, 0.0, 1.0)
+        img += rng.normal(0.0, 0.08, img.shape)
+        # Occasional blur-ish smoothing via a cheap box pass.
+        if rng.random() < 0.5:
+            img = 0.25 * (
+                img
+                + np.roll(img, 1, 0)
+                + np.roll(img, 1, 1)
+                + np.roll(np.roll(img, 1, 0), 1, 1)
+            )
+        x[i] = np.clip(img, 0.0, 1.0).astype(np.float32)
+    return x, y
+
+
+# ---------------------------------------------------------------------------
+# textures (CIFAR-like)
+# ---------------------------------------------------------------------------
+
+
+def _grating(h, w, freq, angle, phase):
+    ys, xs = np.mgrid[0:h, 0:w] / h
+    u = xs * np.cos(angle) + ys * np.sin(angle)
+    return 0.5 + 0.5 * np.sin(2 * np.pi * freq * u + phase)
+
+
+def _checker(h, w, freq, phase):
+    ys, xs = np.mgrid[0:h, 0:w] / h
+    return 0.5 + 0.5 * np.sign(
+        np.sin(2 * np.pi * freq * xs + phase) * np.sin(2 * np.pi * freq * ys + phase)
+    )
+
+
+def _blob(h, w, cx, cy, r):
+    ys, xs = np.mgrid[0:h, 0:w] / h
+    d = np.sqrt((xs - cx) ** 2 + (ys - cy) ** 2)
+    return np.clip(1.0 - d / r, 0.0, 1.0)
+
+
+def _ring(h, w, cx, cy, r, thick):
+    ys, xs = np.mgrid[0:h, 0:w] / h
+    d = np.sqrt((xs - cx) ** 2 + (ys - cy) ** 2)
+    return np.clip(1.0 - np.abs(d - r) / thick, 0.0, 1.0)
+
+
+def make_textures(n, seed=0, image_size=32):
+    """Generate the synthetic 10-class texture/shape dataset.
+
+    Returns (x, y): x float32 [n, 3, image_size, image_size] in [0, 1],
+    y int32 [n].
+
+    Classes: 0-3 gratings at four orientations (freq varies), 4 checker,
+    5 blob, 6 ring, 7 two blobs, 8 grating+blob composite, 9 corner wedge.
+    """
+    rng = np.random.default_rng(seed + 1)
+    h = w = image_size
+    x = np.zeros((n, 3, h, w), np.float32)
+    y = rng.integers(0, 10, n).astype(np.int32)
+    for i in range(n):
+        c = int(y[i])
+        f = rng.uniform(2.5, 6.0)
+        ph = rng.uniform(0, 2 * np.pi)
+        if c in (0, 1, 2, 3):
+            base_angle = c * np.pi / 4
+            img = _grating(h, w, f, base_angle + rng.uniform(-0.15, 0.15), ph)
+        elif c == 4:
+            img = _checker(h, w, f * 0.7, ph)
+        elif c == 5:
+            img = _blob(h, w, rng.uniform(0.3, 0.7), rng.uniform(0.3, 0.7), rng.uniform(0.2, 0.4))
+        elif c == 6:
+            img = _ring(h, w, rng.uniform(0.35, 0.65), rng.uniform(0.35, 0.65), rng.uniform(0.2, 0.35), rng.uniform(0.05, 0.1))
+        elif c == 7:
+            img = _blob(h, w, rng.uniform(0.15, 0.4), rng.uniform(0.15, 0.4), rng.uniform(0.12, 0.25)) + _blob(
+                h, w, rng.uniform(0.6, 0.85), rng.uniform(0.6, 0.85), rng.uniform(0.12, 0.25)
+            )
+        elif c == 8:
+            img = 0.6 * _grating(h, w, f, rng.uniform(0, np.pi), ph) + 0.6 * _blob(
+                h, w, rng.uniform(0.3, 0.7), rng.uniform(0.3, 0.7), rng.uniform(0.2, 0.35)
+            )
+        else:  # 9: corner wedge
+            ys_, xs_ = np.mgrid[0:h, 0:w] / h
+            k = rng.integers(0, 4)
+            a = xs_ if k % 2 == 0 else 1 - xs_
+            b = ys_ if k < 2 else 1 - ys_
+            img = np.clip(1.5 - 2.0 * (a + b), 0.0, 1.0)
+        img = np.clip(img, 0.0, 1.0)
+        # Random colorization: per-channel affine of the base pattern.
+        for ch in range(3):
+            gain = rng.uniform(0.4, 1.0)
+            off = rng.uniform(0.0, 0.3)
+            noise = rng.normal(0.0, 0.06, img.shape)
+            x[i, ch] = np.clip(off + gain * img + noise, 0.0, 1.0).astype(np.float32)
+    return x, y
+
+
+def train_test_split(x, y, test_frac=0.2, seed=0):
+    rng = np.random.default_rng(seed + 2)
+    idx = rng.permutation(len(y))
+    n_test = int(len(y) * test_frac)
+    te, tr = idx[:n_test], idx[n_test:]
+    return (x[tr], y[tr]), (x[te], y[te])

@@ -1,0 +1,167 @@
+"""Artifact export: trained CIM model -> IMGT tensor file + JSON manifest.
+
+The IMGT binary format is defined in ``rust/src/util/tensorfile.rs``
+(keep the two writers in lockstep):
+
+    magic  b"IMGT" | version u32 | count u32
+    per tensor: name_len u32, name, dtype u8 (0=f32, 1=i8, 2=i32),
+                ndim u32, dims u32*, data (LE)
+
+Weights are exported in *physical* macro layout: rows already padded to
+DP-unit multiples and permuted to the unit-grouped row order
+(``model.im2col_row_order``), so the rust executor reproduces codes
+without re-deriving the mapping. Beta codes are the 5b ABN offsets.
+"""
+
+import json
+import os
+import struct
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from . import params as P
+
+
+def _write_tensor(f, name: str, arr: np.ndarray):
+    dtype_tag = {"float32": 0, "int8": 1, "int32": 2}[str(arr.dtype)]
+    nb = name.encode()
+    f.write(struct.pack("<I", len(nb)))
+    f.write(nb)
+    f.write(struct.pack("<B", dtype_tag))
+    f.write(struct.pack("<I", arr.ndim))
+    for d in arr.shape:
+        f.write(struct.pack("<I", d))
+    f.write(arr.astype(arr.dtype).tobytes(order="C"))
+
+
+def write_imgt(path: str, tensors: dict):
+    """tensors: ordered dict name -> np.ndarray (f32/i8/i32)."""
+    with open(path, "wb") as f:
+        f.write(b"IMGT")
+        f.write(struct.pack("<I", 1))
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            _write_tensor(f, name, np.ascontiguousarray(arr))
+
+
+def physical_weights(params, layer: M.CimLayerSpec) -> np.ndarray:
+    """Quantized weights in physical row order, int8 [rows, out]."""
+    w = params[f"{layer.name}/w"]
+    w_scale = params[f"{layer.name}/w_scale"]
+    wq = M.quantize_weight_st(w, w_scale, layer.cfg.r_w)
+    w_phys = M.pad_weight_rows(wq, layer)
+    arr = np.asarray(w_phys, np.float32)
+    assert np.all(np.abs(arr) <= (1 << layer.cfg.r_w) - 1)
+    return arr.astype(np.int8)
+
+
+def beta_codes(params, layer: M.CimLayerSpec) -> np.ndarray:
+    beta = params[f"{layer.name}/beta"]
+    codes = M._beta_codes(beta, layer.cfg)
+    return np.asarray(codes, np.float32).astype(np.int8)
+
+
+def save_model(out_dir: str, spec: M.ModelSpec, params, metrics: dict):
+    """Write <name>.imgt + <name>.manifest.json into out_dir."""
+    os.makedirs(out_dir, exist_ok=True)
+    tensors = {}
+    layer_meta = []
+    conv_i = 0
+    for layer in spec.layers:
+        tensors[f"{layer.name}/w_phys"] = physical_weights(params, layer)
+        tensors[f"{layer.name}/beta"] = beta_codes(params, layer)
+        tensors[f"{layer.name}/a_scale"] = np.asarray(
+            [float(params[f"{layer.name}/a_scale"])], np.float32
+        )
+        tensors[f"{layer.name}/out_gain"] = np.asarray(
+            [float(np.exp(params[f"{layer.name}/out_log_gain"]))], np.float32
+        )
+        pool = None
+        if layer.kind == "conv3":
+            pool = spec.pools[conv_i] if conv_i < len(spec.pools) else None
+            conv_i += 1
+        layer_meta.append(
+            {
+                "name": layer.name,
+                "kind": layer.kind,
+                "in_features": layer.in_features,
+                "out_features": layer.out_features,
+                "relu": layer.relu,
+                "stride": layer.stride,
+                "pool": pool,
+                "rows": layer.rows,
+                "cfg": {
+                    "r_in": layer.cfg.r_in,
+                    "r_w": layer.cfg.r_w,
+                    "r_out": layer.cfg.r_out,
+                    "gamma": layer.cfg.gamma,
+                    "connected_units": layer.cfg.connected_units,
+                },
+            }
+        )
+
+    imgt_path = os.path.join(out_dir, f"{spec.name}.imgt")
+    write_imgt(imgt_path, tensors)
+    manifest = {
+        "format": "imagine-model-v1",
+        "name": spec.name,
+        "input_shape": list(spec.input_shape),
+        "layers": layer_meta,
+        "metrics": {k: v for k, v in metrics.items() if k != "history"},
+        "weights_file": os.path.basename(imgt_path),
+    }
+    with open(os.path.join(out_dir, f"{spec.name}.manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return imgt_path
+
+
+def load_model(out_dir: str, name: str):
+    """Reload a saved model into (spec, params) for aot.py / tests."""
+    with open(os.path.join(out_dir, f"{name}.manifest.json")) as f:
+        manifest = json.load(f)
+    tensors = read_imgt(os.path.join(out_dir, manifest["weights_file"]))
+    layers = []
+    pools = []
+    for lm in manifest["layers"]:
+        cfg = P.OpConfig(**lm["cfg"])
+        layers.append(
+            M.CimLayerSpec(
+                lm["name"], lm["kind"], lm["in_features"], lm["out_features"],
+                cfg, lm["relu"], lm["stride"],
+            )
+        )
+        if lm["kind"] == "conv3":
+            pools.append(lm["pool"])
+    spec = M.ModelSpec(manifest["name"], tuple(manifest["input_shape"]), layers, pools)
+    params = {}
+    for lm in manifest["layers"]:
+        n = lm["name"]
+        params[f"{n}/w_phys"] = jnp.asarray(tensors[f"{n}/w_phys"], jnp.int32)
+        params[f"{n}/beta_codes"] = jnp.asarray(tensors[f"{n}/beta"], jnp.int32)
+        params[f"{n}/a_scale"] = jnp.asarray(tensors[f"{n}/a_scale"][0])
+        params[f"{n}/out_gain"] = jnp.asarray(tensors[f"{n}/out_gain"][0])
+    return spec, params, manifest
+
+
+def read_imgt(path: str) -> dict:
+    """Python-side IMGT reader (round-trip tests + aot.py)."""
+    out = {}
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        assert magic == b"IMGT", magic
+        (version,) = struct.unpack("<I", f.read(4))
+        assert version == 1
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode()
+            (tag,) = struct.unpack("<B", f.read(1))
+            (ndim,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            n = int(np.prod(dims)) if dims else 1
+            dt = {0: np.float32, 1: np.int8, 2: np.int32}[tag]
+            data = np.frombuffer(f.read(n * np.dtype(dt).itemsize), dt)
+            out[name] = data.reshape(dims)
+    return out

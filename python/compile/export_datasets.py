@@ -1,0 +1,44 @@
+"""Export the synthetic test datasets as IMGT tensors so the rust
+coordinator evaluates on exactly the same data as the python trainer
+(numpy's PCG64 streams are not reimplemented in rust — we ship the data).
+
+Run: python -m compile.export_datasets --out ../artifacts
+"""
+
+import argparse
+import os
+
+import numpy as np
+
+from . import datasets, export
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--n", type=int, default=7500,
+                    help="total samples; the trainer's split uses the same seed")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    # Mirror train.prepare_data: generate n_train+n_test then split.
+    x, y = datasets.make_digits(args.n, seed=args.seed)
+    (xtr, ytr), (xte, yte) = datasets.train_test_split(x, y, 1500 / args.n, args.seed)
+    export.write_imgt(
+        os.path.join(args.out, "digits_test.imgt"),
+        {"x": xte.astype(np.float32), "y": yte.astype(np.int32)},
+    )
+    print(f"digits_test: {xte.shape}")
+
+    xt, yt = datasets.make_textures(5000, seed=args.seed)
+    (xttr, yttr), (xtte, ytte) = datasets.train_test_split(xt, yt, 1000 / 5000, args.seed)
+    export.write_imgt(
+        os.path.join(args.out, "textures_test.imgt"),
+        {"x": xtte.astype(np.float32), "y": ytte.astype(np.int32)},
+    )
+    print(f"textures_test: {xtte.shape}")
+
+
+if __name__ == "__main__":
+    main()

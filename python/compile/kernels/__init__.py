@@ -1,0 +1,9 @@
+"""L1 kernels: the Pallas CIM macro kernel and its pure-jnp oracle."""
+
+from .cim_macro import cim_matvec_pallas  # noqa: F401
+from .ref import (  # noqa: F401
+    cim_matvec_float,
+    cim_matvec_ref,
+    quantize_inputs_unsigned,
+    quantize_weights_antipodal,
+)

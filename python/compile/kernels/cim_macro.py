@@ -1,0 +1,157 @@
+"""Layer-1 Pallas kernel: the CIM macro's bit-serial, weight-parallel
+dot-product + DSCI-ADC quantization.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's compute
+substrate is an analog crossbar, so the Pallas mapping reproduces its
+*dataflow* on a TPU-style memory hierarchy:
+
+* the weight matrix tile stays **stationary in VMEM** for the whole layer
+  (the in-memory-computing analogy) while input bitplanes stream through;
+* the input-serial accumulation of Eq. 5 is an in-kernel loop over r_in
+  bitplanes with the exact alpha_mb = 1/2 charge-sharing recurrence
+  ``acc <- acc/2 + dp/2`` (not an integer shift-add — the kernel is
+  bit-true to the charge model);
+* the inter-column weight share (Eq. 6) is linear, so multi-bit weights
+  enter as their combined signed value W = sum_k 2^k s_k with the final
+  1/2^r_w scale folded into the epilogue;
+* the DSCI ADC + ABN (Eq. 7) is the fused affine-quantize epilogue
+  (gamma zoom, 5b offset, floor, clip).
+
+The kernel is lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode emits plain HLO that both
+pytest and the rust runtime can run. Real-TPU performance is *estimated*
+from the BlockSpec (DESIGN.md §8), never measured here.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import params as P
+
+# Column tile per grid step. 128 matches both the TPU lane width and the
+# macro's natural "two 64-block halves" split.
+COL_TILE = 128
+
+
+def _cim_kernel(x_ref, w_ref, beta_ref, o_ref, *, r_in, r_w, r_out, gamma, dv_scale):
+    """One column tile: bit-serial DP + MBIW recurrence + ADC epilogue."""
+    x = x_ref[...]  # [B, R] int32 unsigned values < 2^r_in
+    w = w_ref[...].astype(jnp.float32)  # [R, C] combined signed weights
+
+    batch = x.shape[0]
+    cols = w.shape[1]
+
+    if r_in == 1:
+        # Binary inputs bypass the MBIW accumulator (full swing, §III.C).
+        s = (2 * x - 1).astype(jnp.float32)
+        acc = s @ w
+    else:
+        # Charge-sharing recurrence: acc_k = (acc_{k-1} + dp_k) / 2,
+        # LSB first, starting from the V_DDL precharge (acc = 0 in
+        # DPL-deviation units). After r_in steps bitplane b carries the
+        # weight (1/2)^(r_in - b) — Eq. 5 with alpha_mb = 1/2.
+        acc = jnp.zeros((batch, cols), jnp.float32)
+        for b in range(r_in):
+            bit = (x >> b) & 1
+            s = (2 * bit - 1).astype(jnp.float32)
+            dp = s @ w
+            acc = 0.5 * acc + 0.5 * dp
+
+    # acc is Σ_k (1/2)^(r_in-k) S_k (or S_0 for binary inputs); the column
+    # share contributes 1/2^r_w (folded, Eq. 6); dv_scale carries
+    # alpha_eff·V_DDL and both bypass exponents.
+    dv = dv_scale * acc
+    beta_v = beta_ref[...].astype(jnp.float32) * (0.030 / 16.0)
+    dv = dv + beta_v[None, :]
+
+    lsb = P.adc_lsb(r_out, gamma)
+    half = float(1 << (r_out - 1))
+    code = jnp.floor(half + dv / lsb)
+    code = jnp.clip(code, 0.0, float((1 << r_out) - 1))
+    o_ref[...] = code.astype(jnp.int32)
+
+
+def cim_matvec_pallas(x, w, cfg: P.OpConfig, beta_codes=None, col_tile: int = COL_TILE):
+    """Run the macro contract through the Pallas kernel.
+
+    Args:
+      x: int array [batch, rows] (or [rows]) of unsigned r_in-bit inputs.
+      w: int array [rows, n_out] of combined signed antipodal weights.
+      cfg: operation configuration.
+      beta_codes: optional int array [n_out] of 5b ABN offset codes.
+      col_tile: column tile width (grid granularity).
+
+    Returns:
+      int32 codes [batch, n_out] (or [n_out]).
+    """
+    x = jnp.asarray(x, jnp.int32)
+    w = jnp.asarray(w, jnp.int32)
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None, :]
+    rows, n_out = w.shape
+    assert x.shape[1] == rows
+    assert rows == cfg.active_rows, f"rows {rows} != active {cfg.active_rows}"
+
+    if beta_codes is None:
+        beta = jnp.zeros((n_out,), jnp.int32)
+    else:
+        beta = jnp.asarray(beta_codes, jnp.int32)
+
+    # Pad the column dimension to a tile multiple.
+    tile = min(col_tile, n_out) if n_out < col_tile else col_tile
+    pad = (-n_out) % tile
+    if pad:
+        w = jnp.pad(w, ((0, 0), (0, pad)), constant_values=1)
+        beta = jnp.pad(beta, (0, pad))
+    n_pad = n_out + pad
+    grid = (n_pad // tile,)
+
+    # dv per unit of the bit-serial accumulator output (see kernel docs):
+    # alpha_eff·V_DDL / 2^r_w_eff. The 1/2^r_in_eff lives in the
+    # recurrence itself.
+    rw_div = float(1 << cfg.rw_eff)
+    dv_scale = P.alpha_eff(rows) * P.VDDL / rw_div
+
+    kernel = functools.partial(
+        _cim_kernel,
+        r_in=cfg.r_in,
+        r_w=cfg.r_w,
+        r_out=cfg.r_out,
+        gamma=cfg.gamma,
+        dv_scale=dv_scale,
+    )
+    batch = x.shape[0]
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((batch, rows), lambda i: (0, 0)),
+            pl.BlockSpec((rows, tile), lambda i: (0, i)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((batch, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((batch, n_pad), jnp.int32),
+        interpret=True,
+    )(x, w, beta)
+    out = out[:, :n_out]
+    return out[0] if squeeze else out
+
+
+def vmem_footprint_bytes(rows: int, n_out: int, batch: int, col_tile: int = COL_TILE) -> int:
+    """Estimated VMEM working set of one grid step (DESIGN.md §8): the
+    resident weight tile + input block + accumulator/output tile."""
+    tile = min(col_tile, n_out)
+    w_tile = rows * tile * 4
+    x_block = batch * rows * 4
+    acc = batch * tile * 4 * 2  # accumulator + bitplane dp
+    return w_tile + x_block + acc
+
+
+def mxu_tiles_per_bitplane(rows: int, col_tile: int = COL_TILE) -> int:
+    """How many 128x128 MXU passes one bitplane's dp matmul needs —
+    the utilization estimate for DESIGN.md §8."""
+    return -(-rows // 128) * -(-col_tile // 128)

@@ -1,0 +1,92 @@
+"""Pure-jnp oracle of the CIM macro's functional contract.
+
+This is the golden reference every other implementation is tested
+against: the Pallas kernel (``cim_macro.py``), the rust behavioral
+simulator (``CimMacro::ideal_code``) and the AOT-exported HLO all have to
+reproduce these codes bit-exactly on the nominal path.
+
+Contract (see rust ``macro_model.rs`` module docs):
+
+    dot_j = sum_i (2 X_i - M) * W_ij          M = 2^r_in - 1
+    dv_j  = alpha_eff(rows) * V_DDL * dot_j / 2^(r_in' + r_w')
+    D_j   = clip( floor(2^(r_out-1) + gamma * dv_j / (alpha_adc * V_DDH
+                  / 2^(r_out-1))), 0, 2^r_out - 1 )          (Eq. 7)
+
+with the bypass rule r' = r if r > 1 else 0 (binary inputs skip the MBIW
+input accumulator, binary weights skip the column share — each preserves
+a 2x voltage swing, §III.C).
+"""
+
+import jax.numpy as jnp
+
+from .. import params as P
+
+
+def cim_matvec_ref(x, w, cfg: P.OpConfig, beta_codes=None):
+    """Ideal macro codes for unsigned inputs ``x`` against signed weights
+    ``w``.
+
+    Args:
+      x: uint/int array [rows] or [batch, rows], values in [0, 2^r_in).
+      w: int array [rows, n_out]; values must be odd-step antipodal levels
+         in [-(2^r_w - 1), 2^r_w - 1] (enforced by the caller/quantizer).
+      cfg: operation configuration (precision, gamma, connected units).
+      beta_codes: optional int array [n_out], the per-column 5b ABN offset
+         codes in [-16, 15] (each worth 30 mV / 16 on the DPL).
+
+    Returns:
+      uint32 array [n_out] or [batch, n_out] of ADC codes.
+    """
+    x = jnp.asarray(x)
+    w = jnp.asarray(w)
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None, :]
+    assert x.shape[1] == w.shape[0], f"{x.shape} vs {w.shape}"
+    assert x.shape[1] == cfg.active_rows, (
+        f"rows {x.shape[1]} != active rows {cfg.active_rows}"
+    )
+
+    m = (1 << cfg.r_in) - 1
+    xb = 2 * x.astype(jnp.int32) - m
+    dot = xb @ w.astype(jnp.int32)  # [batch, n_out]
+
+    dv = cfg.dv_scale() * dot.astype(jnp.float32)
+    if beta_codes is not None:
+        dv = dv + jnp.asarray(beta_codes, jnp.float32) * (0.030 / 16.0)
+
+    lsb = P.adc_lsb(cfg.r_out, cfg.gamma)
+    half = 1 << (cfg.r_out - 1)
+    code = jnp.floor(half + dv / lsb)
+    code = jnp.clip(code, 0, (1 << cfg.r_out) - 1).astype(jnp.uint32)
+    return code[0] if squeeze else code
+
+
+def cim_matvec_float(x, w, cfg: P.OpConfig, beta_codes=None):
+    """Differentiable surrogate: same affine map but without the floor —
+    used inside the CIM-aware training loss (the floor is applied with a
+    straight-through estimator by the caller)."""
+    x = jnp.asarray(x, jnp.float32)
+    w = jnp.asarray(w, jnp.float32)
+    m = float((1 << cfg.r_in) - 1)
+    dot = (2.0 * x - m) @ w
+    dv = cfg.dv_scale() * dot
+    if beta_codes is not None:
+        dv = dv + jnp.asarray(beta_codes, jnp.float32) * (0.030 / 16.0)
+    lsb = P.adc_lsb(cfg.r_out, cfg.gamma)
+    half = float(1 << (cfg.r_out - 1))
+    return half + dv / lsb
+
+
+def quantize_weights_antipodal(w_real, r_w: int):
+    """Map real-valued weights (already scaled to the integer grid) to the
+    macro's representable antipodal levels: odd integers in
+    [-(2^r_w - 1), 2^r_w - 1] (i.e. 2B - (2^r_w - 1), B in [0, 2^r_w))."""
+    mx = (1 << r_w) - 1
+    b = jnp.clip(jnp.round((w_real + mx) / 2.0), 0, (1 << r_w) - 1)
+    return (2 * b - mx).astype(jnp.int32)
+
+
+def quantize_inputs_unsigned(x_real, r_in: int):
+    """Clip+round real activations to the unsigned r_in-bit input grid."""
+    return jnp.clip(jnp.round(x_real), 0, (1 << r_in) - 1).astype(jnp.int32)

@@ -1,0 +1,73 @@
+"""One-shot artifact builder: trains all models, exports weights, lowers
+HLO. Invoked by `make artifacts`; everything downstream (rust runtime,
+examples, benches) consumes only the files this produces.
+
+Outputs in artifacts/:
+  smoke_cim.hlo.txt / .inputs.txt / .golden.txt / .meta.json
+  mlp784.imgt / .manifest.json / .hlo.txt / .hlo.json
+  lenet_cim.imgt / .manifest.json / .hlo.txt / .hlo.json
+  vgg_small.imgt / .manifest.json / .hlo.txt / .hlo.json
+  training_summary.json
+"""
+
+import argparse
+import json
+import os
+import time
+
+from . import aot, export
+from .train import train_model
+
+MODELS = {
+    # name: (epochs, n_train, n_test, batch, lr)
+    "mlp784": (8, 6000, 1500, 64, 2e-3),
+    "lenet_cim": (6, 6000, 1500, 64, 2e-3),
+    "vgg_small": (5, 4000, 1000, 64, 2e-3),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--fast", action="store_true",
+                    help="1-epoch tiny runs (CI smoke)")
+    ap.add_argument("--models", default=None,
+                    help="comma-separated subset of models")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    aot.lower_smoke(args.out)
+    from . import export_datasets
+    import sys
+    argv_save = sys.argv
+    sys.argv = ["export_datasets", "--out", args.out]
+    export_datasets.main()
+    sys.argv = argv_save
+
+    names = list(MODELS) if not args.models else args.models.split(",")
+    summary = {}
+    for name in names:
+        epochs, n_train, n_test, batch, lr = MODELS[name]
+        if args.fast:
+            epochs, n_train, n_test = 1, 800, 200
+        t0 = time.time()
+        print(f"=== training {name} ({epochs} epochs, {n_train} samples) ===",
+              flush=True)
+        params, spec, metrics = train_model(
+            name, epochs=epochs, n_train=n_train, n_test=n_test,
+            batch=batch, lr=lr, verbose=True,
+        )
+        export.save_model(args.out, spec, params, metrics)
+        aot.lower_model(args.out, name, batch=1)
+        metrics["wall_seconds"] = time.time() - t0
+        summary[name] = {k: v for k, v in metrics.items() if k != "history"}
+        print(f"=== {name}: acc={metrics['test_acc']*100:.2f}% "
+              f"({metrics['wall_seconds']:.0f}s) ===", flush=True)
+
+    with open(os.path.join(args.out, "training_summary.json"), "w") as f:
+        json.dump(summary, f, indent=2)
+    print(json.dumps(summary, indent=2))
+
+
+if __name__ == "__main__":
+    main()

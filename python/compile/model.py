@@ -1,0 +1,420 @@
+"""Layer-2 JAX model: CIM-mapped CNNs with hardware-aware quantization.
+
+Every compute layer runs through the macro's functional contract (the L1
+kernel / its jnp oracle): unsigned r_in-bit activations against antipodal
+r_w-bit weights, DSCI-ADC output codes with per-layer ABN gain gamma and
+per-channel 5b ABN offset beta — exactly the knobs the silicon exposes.
+
+Three execution modes share one parameter set:
+
+* ``train``  — differentiable surrogate + straight-through floor +
+  equivalent-noise injection (the paper's CIM-aware training, §I/§III.B);
+* ``eval``   — bit-exact integer forward through the jnp oracle;
+* ``pallas`` — bit-exact forward through the L1 Pallas kernel (what
+  ``aot.py`` lowers to HLO for the rust runtime).
+
+Row mapping: convolutions are expressed as im2col with the macro's
+physical row order — DP units of 36 rows = 9 kernel taps x 4 channels,
+channels grouped per unit (§III.B). Feature counts are padded to unit
+multiples with a constant input of (M+1)/2 (so 2x-M = +1) against +1
+weights; the resulting constant column offset is absorbed by beta/bias
+during training.
+"""
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import params as P
+from .kernels import cim_macro, ref
+
+
+# ---------------------------------------------------------------------------
+# Quantization helpers (straight-through estimators)
+# ---------------------------------------------------------------------------
+
+
+def ste_round(x):
+    """Round with identity gradient."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def ste_floor(x):
+    return x + jax.lax.stop_gradient(jnp.floor(x) - x)
+
+
+def quantize_act(x_real, scale, r_in):
+    """Real activations -> unsigned r_in-bit grid (differentiable)."""
+    q = ste_round(x_real / scale)
+    return jnp.clip(q, 0.0, float((1 << r_in) - 1))
+
+
+def quantize_weight_st(w_real, w_scale, r_w):
+    """Real weights -> antipodal integer levels with STE.
+
+    Levels are odd integers in [-(2^r_w - 1), 2^r_w - 1]; w_scale maps the
+    float range onto that grid.
+    """
+    mx = float((1 << r_w) - 1)
+    g = w_real / w_scale
+    b = jnp.clip(ste_round((g + mx) / 2.0), 0.0, mx)
+    return 2.0 * b - mx
+
+
+# ---------------------------------------------------------------------------
+# Layer specifications
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CimLayerSpec:
+    """One macro-mapped layer (dense or 3x3 conv)."""
+
+    name: str
+    kind: str  # "dense" | "conv3"
+    in_features: int  # dense: features; conv: input channels
+    out_features: int  # dense: outputs;  conv: output channels
+    cfg: P.OpConfig = field(default_factory=P.OpConfig)
+    relu: bool = True
+    # Spatial dims for conv layers (set by the model builder).
+    stride: int = 1
+
+    @property
+    def rows_unpadded(self) -> int:
+        return self.in_features if self.kind == "dense" else 9 * self.in_features
+
+    @property
+    def rows(self) -> int:
+        """Physical rows after padding to DP-unit multiples."""
+        return P.rows_for_units(self.units)
+
+    @property
+    def units(self) -> int:
+        if self.kind == "dense":
+            return max(1, math.ceil(self.in_features / P.ROWS_PER_UNIT))
+        return P.units_for_cin(self.in_features)
+
+    def validated(self):
+        assert self.rows <= P.N_ROWS, f"{self.name}: {self.rows} rows > macro"
+        assert self.cfg.connected_units == self.units, (
+            f"{self.name}: cfg units {self.cfg.connected_units} != {self.units}"
+        )
+        return self
+
+
+@dataclass
+class ModelSpec:
+    name: str
+    input_shape: tuple  # (C, H, W) or (features,)
+    layers: list = field(default_factory=list)
+    # Pooling after each conv layer: "max2", "avg2", "gap" or None.
+    pools: list = field(default_factory=list)
+
+
+# ---------------------------------------------------------------------------
+# im2col with the macro's physical row order
+# ---------------------------------------------------------------------------
+
+
+def im2col_row_order(c_in: int, k: int = 3):
+    """Permutation mapping (tap-major, channel-minor) patch features to
+    macro rows: unit u holds channels [4u, 4u+4) x all 9 taps, rows within
+    a unit ordered tap-major. Returns an index array `rows -> (tap, ch)`
+    flat index tap * c_in + ch into the natural patch layout."""
+    order = []
+    n_units = math.ceil(c_in / 4)
+    for u in range(n_units):
+        for tap in range(k * k):
+            for cc in range(4):
+                ch = 4 * u + cc
+                if ch < c_in:
+                    order.append(tap * c_in + ch)
+                else:
+                    order.append(-1)  # padding row
+    return np.array(order, np.int64)
+
+
+def im2col(x, k=3, stride=1):
+    """Extract 3x3 patches with zero padding 1.
+
+    x: [B, C, H, W] -> patches [B, H', W', k*k*C] (tap-major, channel-minor).
+    """
+    b, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (1, 1), (1, 1)))
+    cols = []
+    for dy in range(k):
+        for dx in range(k):
+            cols.append(xp[:, :, dy : dy + h : stride, dx : dx + w : stride])
+    # [k*k, B, C, H', W'] -> [B, H', W', k*k, C]
+    pat = jnp.stack(cols, 0).transpose(1, 3, 4, 0, 2)
+    hh, ww = pat.shape[1], pat.shape[2]
+    return pat.reshape(b, hh, ww, k * k * c)
+
+
+def pad_rows(x2d, spec: CimLayerSpec, pad_value: float):
+    """Map patch features to macro rows (physical order + unit padding).
+
+    x2d: [N, rows_unpadded] -> [N, spec.rows]. Padding rows get
+    `pad_value` ((M+1)/2 so that 2x - M = +1).
+    """
+    if spec.kind == "dense":
+        rows = spec.rows
+        n = x2d.shape[1]
+        if rows == n:
+            return x2d
+        pad = jnp.full((x2d.shape[0], rows - n), pad_value, x2d.dtype)
+        return jnp.concatenate([x2d, pad], axis=1)
+    order = im2col_row_order(spec.in_features)
+    cols = jnp.where(
+        jnp.asarray(order) >= 0,
+        x2d[:, jnp.asarray(np.maximum(order, 0))],
+        pad_value,
+    )
+    return cols
+
+
+def pad_weight_rows(w2d, spec: CimLayerSpec):
+    """Same row mapping for the weight matrix [rows_unpadded, out] ->
+    [rows, out]; padding rows get +1 (absorbed by beta/bias)."""
+    if spec.kind == "dense":
+        rows = spec.rows
+        n = w2d.shape[0]
+        if rows == n:
+            return w2d
+        pad = jnp.ones((rows - n, w2d.shape[1]), w2d.dtype)
+        return jnp.concatenate([w2d, pad], axis=0)
+    order = im2col_row_order(spec.in_features)
+    w_rows = jnp.where(
+        (jnp.asarray(order) >= 0)[:, None],
+        w2d[jnp.asarray(np.maximum(order, 0)), :],
+        1.0,
+    )
+    return w_rows
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def init_params(spec: ModelSpec, key):
+    """He-init float master weights + per-layer quant scales + ABN params."""
+    params = {}
+    for layer in spec.layers:
+        layer.validated()
+        rows = layer.rows_unpadded
+        key, k1 = jax.random.split(key)
+        w = jax.random.normal(k1, (rows, layer.out_features), jnp.float32)
+        w = w * jnp.sqrt(2.0 / rows)
+        params[f"{layer.name}/w"] = w
+        # Per-layer weight scale: map ~3 sigma onto the antipodal grid.
+        mx = float((1 << layer.cfg.r_w) - 1)
+        params[f"{layer.name}/w_scale"] = jnp.asarray(
+            3.0 * jnp.sqrt(2.0 / rows) / mx, jnp.float32
+        )
+        # Activation scale (input side), refined by calibration.
+        params[f"{layer.name}/a_scale"] = jnp.asarray(
+            1.0 / float((1 << layer.cfg.r_in) - 1), jnp.float32
+        )
+        # ABN: per-channel beta (real, quantized to 5b codes on export) and
+        # a per-layer post-ADC gain stored in LOG space (Adam's fixed-size
+        # steps would otherwise wreck a raw sub-1e-2 scale parameter).
+        params[f"{layer.name}/beta"] = jnp.zeros((layer.out_features,), jnp.float32)
+        params[f"{layer.name}/out_log_gain"] = jnp.zeros((), jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _beta_codes(beta, cfg):
+    """Real beta [out] -> 5b ABN offset codes (STE in train mode)."""
+    lsb = P.adc_lsb(cfg.r_out, cfg.gamma)
+    step = 0.030 / 16.0  # volts per code
+    codes = ste_round(beta * lsb / step)
+    return jnp.clip(codes, -16.0, 15.0)
+
+
+def cim_layer_apply(params, layer: CimLayerSpec, x_real, mode, noise_key=None,
+                    noise_lsb=0.5):
+    """Apply one CIM layer.
+
+    x_real: dense -> [N, features]; conv -> [B, C, H, W] real activations
+    (non-negative, roughly in [0, 1] x scale).
+    Returns real-valued activations for the next layer.
+    """
+    cfg = layer.cfg
+    m = float((1 << cfg.r_in) - 1)
+    # Quantization scales are calibration-owned, not optimizer-owned: a
+    # gradient step on a ~4e-3 scale would saturate the whole grid.
+    a_scale = jax.lax.stop_gradient(params[f"{layer.name}/a_scale"])
+    w = params[f"{layer.name}/w"]
+    w_scale = jax.lax.stop_gradient(params[f"{layer.name}/w_scale"])
+    beta = params[f"{layer.name}/beta"]
+    out_gain = jnp.exp(params[f"{layer.name}/out_log_gain"])
+
+    # ---- arrange activations as macro rows ----
+    if layer.kind == "conv3":
+        b, c, h, wd = x_real.shape
+        pat = im2col(x_real, 3, layer.stride)  # [B,H',W',9C]
+        hh, ww = pat.shape[1], pat.shape[2]
+        x2d = pat.reshape(-1, 9 * c)
+    else:
+        x2d = x_real
+        b = x2d.shape[0]
+
+    xq = quantize_act(x2d, a_scale, cfg.r_in)  # [N, rows_unpadded]
+    pad_val = (m + 1.0) / 2.0
+    xq = pad_rows(xq, layer, pad_val)
+
+    wq = quantize_weight_st(w, w_scale, cfg.r_w)  # [rows_unpadded, out]
+    wq = pad_weight_rows(wq, layer)
+
+    beta_q = _beta_codes(beta, cfg)
+
+    if mode == "train":
+        code = ref.cim_matvec_float(xq, wq, cfg, beta_q)
+        if noise_key is not None:
+            # Post-silicon equivalent noise: RMS grows with gamma as the
+            # LSB shrinks toward the macro's analog noise floor (§V.A).
+            sigma = noise_lsb * (1.0 + cfg.gamma / 16.0)
+            code = code + sigma * jax.random.normal(noise_key, code.shape)
+        code = ste_floor(code)
+        code = jnp.clip(code, 0.0, float((1 << cfg.r_out) - 1))
+    elif mode == "eval":
+        code = ref.cim_matvec_ref(
+            xq.astype(jnp.int32), wq.astype(jnp.int32), cfg, beta_q.astype(jnp.int32)
+        ).astype(jnp.float32)
+    elif mode == "pallas":
+        code = cim_macro.cim_matvec_pallas(
+            xq.astype(jnp.int32), wq.astype(jnp.int32), cfg, beta_q.astype(jnp.int32)
+        ).astype(jnp.float32)
+    else:
+        raise ValueError(mode)
+
+    # ---- post-ADC digital path: recenter, scale, ReLU ----
+    half = float(1 << (cfg.r_out - 1))
+    y = (code - half) * out_gain
+    if layer.relu:
+        y = jax.nn.relu(y)
+
+    if layer.kind == "conv3":
+        y = y.reshape(b, hh, ww, layer.out_features).transpose(0, 3, 1, 2)
+    return y
+
+
+def pool_apply(y, pool):
+    if pool is None:
+        return y
+    if pool == "max2":
+        b, c, h, w = y.shape
+        h2, w2 = (h // 2) * 2, (w // 2) * 2  # floor crop for odd dims
+        y = y[:, :, :h2, :w2]
+        return y.reshape(b, c, h2 // 2, 2, w2 // 2, 2).max(axis=(3, 5))
+    if pool == "avg2":
+        b, c, h, w = y.shape
+        h2, w2 = (h // 2) * 2, (w // 2) * 2
+        y = y[:, :, :h2, :w2]
+        return y.reshape(b, c, h2 // 2, 2, w2 // 2, 2).mean(axis=(3, 5))
+    if pool == "gap":
+        return y.mean(axis=(2, 3))
+    raise ValueError(pool)
+
+
+def forward(params, spec: ModelSpec, x, mode="eval", key=None, noise_lsb=0.5):
+    """Full network forward. x: [B, ...input_shape]. Returns logits or,
+    for the last (non-relu) layer, its real-valued outputs."""
+    y = x
+    conv_i = 0
+    for i, layer in enumerate(spec.layers):
+        nk = None
+        if key is not None:
+            key, nk = jax.random.split(key)
+        if layer.kind == "dense" and y.ndim > 2:
+            y = y.reshape(y.shape[0], -1)
+        y = cim_layer_apply(params, layer, y, mode, nk, noise_lsb)
+        if layer.kind == "conv3":
+            pool = spec.pools[conv_i] if conv_i < len(spec.pools) else None
+            y = pool_apply(y, pool)
+            conv_i += 1
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Model zoo
+# ---------------------------------------------------------------------------
+
+
+def _cfg(r_in, r_w, r_out, units, gamma=8.0):
+    return P.OpConfig(r_in=r_in, r_w=r_w, r_out=r_out, gamma=gamma,
+                      connected_units=units)
+
+
+def mlp_784(r_in=8, r_w=1, r_out=8, gamma=8.0):
+    """The Fig. 3(b) MLP: 784-512-128-10."""
+    layers = [
+        CimLayerSpec("fc1", "dense", 784, 512,
+                     _cfg(r_in, r_w, r_out, math.ceil(784 / 36), gamma)),
+        CimLayerSpec("fc2", "dense", 512, 128,
+                     _cfg(r_in, r_w, r_out, math.ceil(512 / 36), gamma)),
+        CimLayerSpec("fc3", "dense", 128, 10,
+                     _cfg(r_in, r_w, r_out, math.ceil(128 / 36), gamma), relu=False),
+    ]
+    return ModelSpec("mlp784", (784,), layers, [])
+
+
+def lenet_cim(r_in=4, r_w=4, r_out=8, gamma=8.0):
+    """LeNet-5-class CNN for 28x28 digits (the paper's modified 4b LeNet-5,
+    Table I note 4). Channels padded to the macro's min C_in = 4."""
+    layers = [
+        CimLayerSpec("conv1", "conv3", 4, 16, _cfg(r_in, r_w, r_out, 1, gamma)),
+        CimLayerSpec("conv2", "conv3", 16, 32, _cfg(r_in, r_w, r_out, 4, gamma)),
+        CimLayerSpec("conv3", "conv3", 32, 32, _cfg(r_in, r_w, r_out, 8, gamma)),
+        CimLayerSpec("fc1", "dense", 288, 128,
+                     _cfg(r_in, r_w, r_out, math.ceil(288 / 36), gamma)),
+        CimLayerSpec("fc2", "dense", 128, 10,
+                     _cfg(r_in, r_w, r_out, math.ceil(128 / 36), gamma), relu=False),
+    ]
+    # 28 -> pool 14 -> pool 7 -> pool 3 (floor); fc1 sees 32*3*3 = 288.
+    return ModelSpec("lenet_cim", (4, 28, 28), layers, ["max2", "max2", "max2"])
+
+
+def vgg_small(r_in=8, r_w=4, r_out=8, gamma=8.0):
+    """Compact VGG-style CNN for 3x32x32 textures (stands in for the
+    paper's VGG-16/CIFAR-10 evaluation; DESIGN.md §2)."""
+    layers = [
+        CimLayerSpec("conv1", "conv3", 4, 32, _cfg(r_in, r_w, r_out, 1, gamma)),
+        CimLayerSpec("conv2", "conv3", 32, 32, _cfg(r_in, r_w, r_out, 8, gamma)),
+        CimLayerSpec("conv3", "conv3", 32, 64, _cfg(r_in, r_w, r_out, 8, gamma)),
+        CimLayerSpec("conv4", "conv3", 64, 64, _cfg(r_in, r_w, r_out, 16, gamma)),
+        CimLayerSpec("conv5", "conv3", 64, 128, _cfg(r_in, r_w, r_out, 16, gamma)),
+        CimLayerSpec("fc1", "dense", 128, 10,
+                     _cfg(r_in, r_w, r_out, math.ceil(128 / 36), gamma), relu=False),
+    ]
+    # 32 -> p 16 -> p 8 -> (none) 8 -> p 4 -> gap; fc1 sees 128.
+    return ModelSpec(
+        "vgg_small", (4, 32, 32), layers, ["max2", "max2", None, "max2", "gap"]
+    )
+
+
+def model_by_name(name: str, **kw) -> ModelSpec:
+    zoo = {"mlp784": mlp_784, "lenet_cim": lenet_cim, "vgg_small": vgg_small}
+    return zoo[name](**kw)
+
+
+def pad_input_channels(x, c_target=4):
+    """Grayscale/3-channel images -> the macro's minimum 4-channel input
+    (extra channels zero)."""
+    if x.ndim == 3:
+        x = x[:, None, :, :]
+    b, c, h, w = x.shape
+    if c >= c_target:
+        return x
+    pad = jnp.zeros((b, c_target - c, h, w), x.dtype)
+    return jnp.concatenate([x, pad], axis=1)

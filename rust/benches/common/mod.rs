@@ -1,0 +1,30 @@
+//! Shared helpers for the figure-regeneration benches: an output sink
+//! that both prints and records into bench_out/, and tiny timing utils.
+
+use std::io::Write;
+use std::time::Instant;
+
+pub struct FigSink {
+    file: std::fs::File,
+}
+
+impl FigSink {
+    pub fn new(fig: &str) -> Self {
+        std::fs::create_dir_all("bench_out").unwrap();
+        let file = std::fs::File::create(format!("bench_out/{fig}.txt")).unwrap();
+        Self { file }
+    }
+
+    pub fn line(&mut self, s: impl AsRef<str>) {
+        let s = s.as_ref();
+        println!("{s}");
+        writeln!(self.file, "{s}").unwrap();
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}

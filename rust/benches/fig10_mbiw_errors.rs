@@ -1,0 +1,63 @@
+//! Fig. 10 — MBIW non-idealities: (a) leakage error on V_acc vs its
+//! initial value across corners; (b) charge-injection error vs the MBIW
+//! input voltage across corners; (c) the 2-D error map over
+//! (V_in,k × V_acc,k−1) with its zero-error locus.
+//!
+//! `cargo bench --bench fig10_mbiw_errors`
+
+mod common;
+
+use common::FigSink;
+use imagine::analog::mbiw::{injection_error, leakage_error};
+use imagine::config::params::{Corner, MacroParams};
+
+fn main() {
+    let mut out = FigSink::new("fig10");
+    let p0 = MacroParams::paper();
+    let lsb = p0.adc_lsb(8, 1.0);
+
+    out.line("# Fig 10a: leakage error on V_acc [uV] after the 8b window, vs V_acc");
+    out.line("V_acc[V]   TT        FF        SS        FS        SF");
+    for i in 0..9 {
+        let v = 0.2 + 0.4 * i as f64 / 8.0;
+        let mut row = format!("{v:>7.3}");
+        for c in Corner::ALL {
+            let p = p0.clone().with_corner(c);
+            row.push_str(&format!("  {:>8.2}", leakage_error(&p, v, p.t_leak) * 1e6));
+        }
+        out.line(row);
+    }
+    out.line("# negligible near mid-rail, grows exponentially toward the rails; FF worst.");
+
+    out.line("\n# Fig 10b: charge-injection error [LSB@8b] vs V_in (V_acc at mid-rail)");
+    out.line("V_in[V]    TT        FF        SS        FS        SF");
+    for i in 0..9 {
+        let v = 0.2 + 0.4 * i as f64 / 8.0;
+        let mut row = format!("{v:>7.3}");
+        for c in Corner::ALL {
+            let p = p0.clone().with_corner(c);
+            row.push_str(&format!(
+                "  {:>8.3}",
+                injection_error(&p, v, p.supply.vddh / 2.0) / lsb
+            ));
+        }
+        out.line(row);
+    }
+    out.line("# bounded within ~±1 LSB across corners (paper: modeled at train time).");
+
+    out.line("\n# Fig 10c: 2-D error map [LSB@8b], rows = V_acc,k-1, cols = V_in,k (TT)");
+    let grid: Vec<f64> = (0..9).map(|i| 0.2 + 0.4 * i as f64 / 8.0).collect();
+    let mut head = String::from("Vacc\\Vin");
+    for v in &grid {
+        head.push_str(&format!("  {v:>6.2}"));
+    }
+    out.line(head);
+    for &va in &grid {
+        let mut row = format!("{va:>8.2}");
+        for &vi in &grid {
+            row.push_str(&format!("  {:>6.2}", injection_error(&p0, vi, va) / lsb));
+        }
+        out.line(row);
+    }
+    out.line("# the sign flip across the map traces the zero-error locus of Fig. 10c.");
+}

@@ -1,0 +1,78 @@
+//! Fig. 12 — post-layout-style Monte-Carlo of the DSCI ADC: calibration
+//! convergence and conversion statistics over 100 sampled instances
+//! (γ = 1).
+//!
+//! `cargo bench --bench fig12_adc_montecarlo`
+
+mod common;
+
+use common::FigSink;
+use imagine::analog::adc::DsciAdc;
+use imagine::analog::ladder::Ladder;
+use imagine::config::params::MacroParams;
+use imagine::util::rng::Rng;
+use imagine::util::stats;
+
+fn main() {
+    let mut out = FigSink::new("fig12");
+    let p = MacroParams::paper();
+    let master = Rng::new(0xF16_12);
+
+    out.line("# Fig 12: 100 Monte-Carlo ADC instances (gamma = 1, 8b)");
+
+    // ---- calibration mode ----
+    let mut resid_lsb = Vec::new();
+    let mut codes_spread = Vec::new();
+    let lsb = p.adc_lsb(8, 1.0);
+    for i in 0..100u64 {
+        let mut rng = master.fork(i);
+        let mut adc = DsciAdc::sample(&p, &mut rng);
+        let ladder = Ladder::sample(&p, &mut rng);
+        let mut cal_rng = master.fork(1000 + i);
+        let resid = adc.calibrate(&p, Some(&mut cal_rng));
+        resid_lsb.push(resid / lsb);
+
+        // conversion mode: a mid-range input, 20 repeats with noise.
+        let dv = 0.06;
+        let want = DsciAdc::ideal_code(&p, dv, 1.0, 8) as f64;
+        let mut conv_rng = master.fork(2000 + i);
+        let errs: Vec<f64> = (0..20)
+            .map(|_| {
+                adc.convert(&p, &ladder, p.supply.vddl + dv, 1.0, 8, Some(&mut conv_rng))
+                    as f64
+                    - want
+            })
+            .collect();
+        codes_spread.push(stats::rms(&errs));
+    }
+    out.line(format!(
+        "calibration residual: rms {:.3} LSB, p95 |{:.2}| LSB, max |{:.2}| LSB",
+        stats::rms(&resid_lsb),
+        stats::percentile(&resid_lsb.iter().map(|v| v.abs()).collect::<Vec<_>>(), 95.0),
+        stats::max_abs(&resid_lsb)
+    ));
+    out.line(format!(
+        "conversion error rms: mean {:.3} LSB, max {:.3} LSB across instances",
+        stats::mean(&codes_spread),
+        stats::max_abs(&codes_spread)
+    ));
+    out.line("# paper Fig 12: calibration converges; conversion settles each SAR");
+    out.line("# decision/update within the cycle, residual errors sub-LSB at gamma=1.");
+
+    // ---- conversion transient (one instance): SAR residue walk ----
+    out.line("\n# SAR residue walk (one nominal instance, dv = 60 mV):");
+    let adc = DsciAdc::ideal();
+    let ladder = Ladder::ideal(&p);
+    let mut v = p.supply.vddl + 0.06;
+    let mut line = String::from("residue[mV]:");
+    for b in (0..8u32).rev() {
+        let d = v > p.supply.vddl;
+        let step = ladder.sar_step(&p, 8, 1.0, b);
+        v += if d { -step } else { step };
+        line.push_str(&format!(" {:>7.2}", (v - p.supply.vddl) * 1e3));
+    }
+    out.line(line);
+    let code = adc.convert(&p, &ladder, p.supply.vddl + 0.06, 1.0, 8, None);
+    out.line(format!("final code: {code} (Eq.7 ideal {})",
+        DsciAdc::ideal_code(&p, 0.06, 1.0, 8)));
+}

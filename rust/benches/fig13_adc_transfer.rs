@@ -1,0 +1,58 @@
+//! Fig. 13 — nominal post-layout ADC transfer function for increasing
+//! ABN gain γ, with INL/DNL statistics (both grow with γ as the LSB
+//! shrinks toward the fixed analog error floor).
+//!
+//! `cargo bench --bench fig13_adc_transfer`
+
+mod common;
+
+use common::FigSink;
+use imagine::analog::adc::DsciAdc;
+use imagine::analog::ladder::Ladder;
+use imagine::config::params::MacroParams;
+use imagine::util::rng::Rng;
+use imagine::util::stats;
+
+fn main() {
+    let mut out = FigSink::new("fig13");
+    let p = MacroParams::paper();
+    // A sampled (mismatched) ladder — the deterministic distortion source.
+    let mut rng = Rng::new(0xF16_13);
+    let ladder = Ladder::sample(&p, &mut rng);
+    let adc = DsciAdc::ideal(); // isolate the ladder/γ effect
+
+    out.line("# Fig 13: ADC transfer samples and INL/DNL vs gamma (8b, no offset/cal)");
+    out.line("gamma  in-range[mV]  mean|INL|  max|INL|  max|DNL|   (LSB)");
+    for gamma in [1.0f64, 2.0, 4.0, 8.0, 16.0, 32.0] {
+        let half_range = p.alpha_adc() * p.supply.vddh / gamma; // Eq. 7 span
+        let n = 257;
+        let mut codes = Vec::with_capacity(n);
+        let mut dvs = Vec::with_capacity(n);
+        for i in 0..n {
+            let dv = -half_range + 2.0 * half_range * i as f64 / (n - 1) as f64;
+            let c = adc.convert(&p, &ladder, p.supply.vddl + dv, gamma, 8, None);
+            codes.push(c as f64);
+            dvs.push(dv);
+        }
+        // INL against the best-fit line over the non-clipped interior.
+        let lo = n / 8;
+        let hi = n - n / 8;
+        let inl = stats::inl_best_fit(&dvs[lo..hi], &codes[lo..hi]);
+        let dnl = stats::dnl(&codes[lo..hi], {
+            // ideal step between successive sampled inputs
+            let (a, b, _) = stats::linreg(&dvs[lo..hi], &codes[lo..hi]);
+            let _ = a;
+            b * (dvs[1] - dvs[0])
+        });
+        out.line(format!(
+            "{gamma:>5}  {:>11.1}  {:>9.2}  {:>8.2}  {:>8.2}",
+            half_range * 2e3,
+            stats::mean(&inl.iter().map(|v| v.abs()).collect::<Vec<_>>()),
+            stats::max_abs(&inl),
+            stats::max_abs(&dnl),
+        ));
+    }
+    out.line("# paper: mean INL ~1.1 LSB, peak up to 4.5 LSB at gamma=32 — the fixed");
+    out.line("# ladder mismatch floor measured in ever-smaller LSBs. Range compresses");
+    out.line("# as 1/gamma (the zoom), matching the compressed DP swing.");
+}

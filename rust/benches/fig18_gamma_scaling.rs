@@ -1,0 +1,91 @@
+//! Fig. 18 — γ scaling effects on the macro: (a) max output RMS error
+//! vs γ (temporal noise amplified by the zoom); (b) gain linearity vs
+//! supply; (c) 8b peak energy efficiency vs γ.
+//!
+//! `cargo bench --bench fig18_gamma_scaling`
+
+mod common;
+
+use common::FigSink;
+use imagine::analog::macro_model::{CimMacro, OpConfig};
+use imagine::config::params::{MacroParams, Supply};
+use imagine::energy::{analog as ea, timing};
+use imagine::util::stats;
+
+const GAMMAS: [f64; 6] = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0];
+
+fn main() {
+    let mut out = FigSink::new("fig18");
+    let p = MacroParams::measured_chip().with_supply(Supply::LOW_POWER);
+
+    // ---- (a) max output RMS vs gamma over 16 blocks, 100 repeats ----
+    out.line("# Fig 18a: max output RMS error [LSB] vs gamma (near-zero DP, 16ch)");
+    let mut die = CimMacro::new(p.clone(), 0xF16_18);
+    die.calibrate_all();
+    let units = 4;
+    let rows = OpConfig::new(8, 1, 8).with_units(units).active_rows(&p);
+    let w: Vec<i32> = (0..rows).map(|r| if r % 2 == 0 { 1 } else { -1 }).collect();
+    die.load_weights_broadcast(&w, 16, 1);
+    let x = vec![128u8; rows];
+    out.line("gamma  maxRMS  meanRMS");
+    for gamma in GAMMAS {
+        let cfg = OpConfig::new(8, 1, 8).with_units(units).with_gamma(gamma);
+        let mut rms_per_block = Vec::new();
+        for b in 0..16 {
+            let s: Vec<f64> = (0..100).map(|_| die.block_op(b, &x, &cfg) as f64).collect();
+            rms_per_block.push(stats::std(&s));
+        }
+        out.line(format!(
+            "{gamma:>5}  {:>6.2}  {:>7.2}",
+            stats::max_abs(&rms_per_block),
+            stats::mean(&rms_per_block)
+        ));
+    }
+    out.line("# paper: 0.52 LSB max at gamma=1, scaling up with gamma (noise floor");
+    out.line("# measured in shrinking LSBs).");
+
+    // ---- (b) gain linearity vs V_DDL ----
+    out.line("\n# Fig 18b: code-vs-gamma linearity across supplies (fixed small DP)");
+    out.line("V_DDL  code(g1)  code(g2)  code(g4)  code(g8)  r2_loglog");
+    for vddl in [0.40f64, 0.36, 0.32, 0.28] {
+        let supply = Supply::new(vddl, 2.0 * vddl);
+        let pv = MacroParams::measured_chip().with_supply(supply);
+        let mut d = CimMacro::new(pv.clone(), 0x18b);
+        d.noise = false;
+        d.calibrate_all();
+        let rows = OpConfig::new(8, 1, 8).with_units(units).active_rows(&pv);
+        // Slightly unbalanced weights (Σw = +16) → a small positive DP
+        // whose code should scale linearly with gamma until clipping.
+        let w: Vec<i32> = (0..rows)
+            .map(|r| if r % 2 == 0 || r < 16 { 1 } else { -1 })
+            .collect();
+        d.load_weights_broadcast(&w, 4, 1);
+        let x = vec![255u8; rows];
+        let mut codes = Vec::new();
+        let mut row = format!("{vddl:>5.2}");
+        for gamma in [1.0, 2.0, 4.0, 8.0] {
+            let cfg = OpConfig::new(8, 1, 8).with_units(units).with_gamma(gamma);
+            let c = d.block_op(0, &x, &cfg) as f64;
+            codes.push((c - 128.0).max(0.5));
+            row.push_str(&format!("  {c:>8.1}"));
+        }
+        let lg: Vec<f64> = [1.0f64, 2.0, 4.0, 8.0].iter().map(|g| g.ln()).collect();
+        let lc: Vec<f64> = codes.iter().map(|c| c.ln()).collect();
+        let (_, slope, r2) = stats::linreg(&lg, &lc);
+        row.push_str(&format!("  {:.4} (slope {:.2})", r2, slope));
+        out.line(row);
+    }
+    out.line("# paper: linearity slowly degrades below 0.4 V; functional to 0.28 V.");
+
+    // ---- (c) peak EE vs gamma ----
+    out.line("\n# Fig 18c: 8b peak macro EE [TOPS/W 8b-norm] vs gamma (0.3/0.6 V)");
+    out.line("gamma  EE     f_max[MHz]");
+    for gamma in GAMMAS {
+        let cfg = OpConfig::new(8, 1, 8).with_gamma(gamma);
+        let ee = ea::ee_8b(&p, &cfg) / 1e12 * timing::gamma_speed_factor(gamma);
+        let f = timing::f_max_macro(&p, &cfg) * timing::gamma_speed_factor(gamma) / 1e6;
+        out.line(format!("{gamma:>5}  {ee:>5.1}  {f:>6.2}"));
+    }
+    out.line("# paper: unity gain most efficient (rail-tied MSB taps); slight");
+    out.line("# frequency bump between gamma 2-16 from compressed V_sar levels.");
+}

@@ -1,0 +1,55 @@
+//! Fig. 19 — CIM-SRAM 1b input-referred deviation across the 256 columns
+//! before and after SA-offset calibration, averaged over 100 simulated
+//! die samples.
+//!
+//! `cargo bench --bench fig19_calibration`
+
+mod common;
+
+use common::{timed, FigSink};
+use imagine::analog::macro_model::CimMacro;
+use imagine::config::params::MacroParams;
+use imagine::util::stats;
+
+fn main() {
+    let mut out = FigSink::new("fig19");
+    let p = MacroParams::measured_chip();
+    let lsb = p.adc_lsb(8, 1.0);
+
+    let samples = 100u64;
+    let mut pre_all = Vec::new();
+    let mut post_all = Vec::new();
+    let ((), secs) = timed(|| {
+        for s in 0..samples {
+            let mut die = CimMacro::new(p.clone(), 0xF16_19 + s);
+            for adc in &die.adcs {
+                pre_all.push(adc.sa.offset / lsb);
+            }
+            let resid = die.calibrate_all();
+            post_all.extend(resid.iter().map(|r| r / lsb));
+        }
+    });
+
+    out.line(format!(
+        "# Fig 19: column deviation [LSB@8b] over {samples} die samples ({secs:.1}s)"
+    ));
+    out.line(format!(
+        "pre-calibration : rms {:>6.2}  p99 |{:>5.2}|  max |{:>5.2}|",
+        stats::rms(&pre_all),
+        stats::percentile(&pre_all.iter().map(|v| v.abs()).collect::<Vec<_>>(), 99.0),
+        stats::max_abs(&pre_all)
+    ));
+    out.line(format!(
+        "post-calibration: rms {:>6.2}  p99 |{:>5.2}|  max |{:>5.2}|",
+        stats::rms(&post_all),
+        stats::percentile(&post_all.iter().map(|v| v.abs()).collect::<Vec<_>>(), 99.0),
+        stats::max_abs(&post_all)
+    ));
+    let within = post_all.iter().filter(|v| v.abs() <= 2.0).count();
+    out.line(format!(
+        "columns within 2 LSB post-cal: {:.2}%",
+        100.0 * within as f64 / post_all.len() as f64
+    ));
+    out.line("# paper: spatial deviation falls from ~17 LSB to ~2 LSB at 8b;");
+    out.line("# the residual tail comes from out-of-range SA offsets + cal noise.");
+}

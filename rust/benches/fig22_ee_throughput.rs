@@ -1,0 +1,58 @@
+//! Fig. 22 — (a) macro peak energy efficiency vs throughput for all
+//! (r_in, r_out) combinations at both supply points (binary weights,
+//! C_in = 128, γ = 1, I/O excluded — the §V.A test mode); (b) the
+//! 8b-normalized energy/op breakdown per supply source vs C_in.
+//!
+//! `cargo bench --bench fig22_ee_throughput`
+
+mod common;
+
+use common::FigSink;
+use imagine::analog::macro_model::OpConfig;
+use imagine::config::params::{MacroParams, Supply};
+use imagine::energy::{analog as ea, timing};
+
+fn main() {
+    let mut out = FigSink::new("fig22");
+
+    out.line("# Fig 22a: peak EE vs throughput, r_w=1b, C_in=128, gamma=1");
+    out.line("supply    r_in r_out  EE_raw[POPS/W]  EE_8bn[TOPS/W]  tput_raw[TOPS]");
+    for (label, supply) in [("0.4/0.8V", Supply::NOMINAL), ("0.3/0.6V", Supply::LOW_POWER)] {
+        let p = MacroParams::paper().with_supply(supply);
+        for r_in in [1u32, 2, 4, 8] {
+            for r_out in [1u32, 2, 4, 8] {
+                if r_out < r_in {
+                    continue; // r_in > r_out compresses output dynamics (§V.A)
+                }
+                let cfg = OpConfig::new(r_in, 1, r_out).with_units(32);
+                out.line(format!(
+                    "{label}  {r_in:>4} {r_out:>5}  {:>14.2}  {:>14.1}  {:>14.3}",
+                    ea::ee_raw(&p, &cfg) / 1e15,
+                    ea::ee_8b(&p, &cfg) / 1e12,
+                    timing::peak_throughput_raw(&p, &cfg) / 1e12,
+                ));
+            }
+        }
+    }
+    out.line("# paper: best efficiency at r_in=r_out=8 (1.2 POPS/W raw = 0.15 POPS/W");
+    out.line("# 8b-norm at 0.3/0.6 V); r_in<r_out costs both throughput and EE.");
+
+    out.line("\n# Fig 22b: 8b energy/op breakdown [fJ per 8b-norm op] vs C_in (0.3/0.6V)");
+    out.line("C_in  units   VDDL-side  VDDH-side  ladder   total");
+    let p = MacroParams::paper().with_supply(Supply::LOW_POWER);
+    for c_in in [4usize, 8, 16, 32, 64, 128] {
+        let units = p.units_for_cin(c_in);
+        let cfg = OpConfig::new(8, 1, 8).with_units(units);
+        let (vddl, vddh, ladder) = ea::breakdown(&p, &cfg);
+        let ops = timing::ops_8b_norm(&p, &cfg);
+        out.line(format!(
+            "{c_in:>4} {units:>6}  {:>10.2} {:>10.2} {:>7.2} {:>8.2}",
+            vddl / ops * 1e15,
+            vddh / ops * 1e15,
+            ladder / ops * 1e15,
+            (vddl + vddh + ladder) / ops * 1e15,
+        ));
+    }
+    out.line("# paper: ADC+ladder (VDDH side) dominate at small C_in; both supplies");
+    out.line("# converge to similar contributions at high C_in.");
+}

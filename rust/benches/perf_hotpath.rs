@@ -1,0 +1,99 @@
+//! §Perf — hot-path timing harness (criterion is not in the vendored dep
+//! set; plain wall-clock statistics over repeated runs).
+//!
+//! Measures the three L3 hot paths the EXPERIMENTS.md §Perf section
+//! tracks:
+//!   1. analog macro column pipeline (block_op) — the characterization
+//!      workhorse (Figs. 17-21 sweep millions of these);
+//!   2. ideal-contract matvec (the fast executor path);
+//!   3. streaming im2col of a 32×32×16 image.
+//!
+//! `cargo bench --bench perf_hotpath`
+
+mod common;
+
+use common::FigSink;
+use imagine::analog::macro_model::{CimMacro, OpConfig};
+use imagine::config::params::MacroParams;
+use imagine::coordinator::executor::ideal_codes;
+use imagine::coordinator::manifest::{Kind, Layer, Pool};
+use imagine::dataflow::im2col;
+use std::time::Instant;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, out: &mut FigSink, mut f: F) -> f64 {
+    // Warmup.
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    out.line(format!("{name:<44} {:>10.3} us/iter", per * 1e6));
+    per
+}
+
+fn main() {
+    let mut out = FigSink::new("perf");
+    out.line("# perf_hotpath — wall-clock per iteration (release)");
+    let p = MacroParams::paper();
+
+    // ---- 1. analog block_op ----
+    let mut die = CimMacro::new(p.clone(), 1);
+    let cfg = OpConfig::new(8, 1, 8).with_units(32);
+    let rows = cfg.active_rows(&p);
+    let w: Vec<i32> = (0..rows).map(|r| if r % 3 == 0 { 1 } else { -1 }).collect();
+    die.load_weights_broadcast(&w, 64, 1);
+    let x: Vec<u8> = (0..rows).map(|r| (r % 256) as u8).collect();
+    let per = bench("analog block_op (1152 rows, 8b)", 200, &mut out, || {
+        let mut acc = 0u32;
+        for b in 0..8 {
+            acc ^= die.block_op(b, &x, &cfg);
+        }
+        std::hint::black_box(acc);
+    });
+    let col_evals_per_s = 8.0 / per;
+    out.line(format!(
+        "  -> {:.2} M column-evals/s ({:.1} G cell-ops/s)",
+        col_evals_per_s / 1e6,
+        col_evals_per_s * (rows as f64) * 8.0 / 1e9
+    ));
+
+    // ---- noise-free variant (the Fig-17 style sweeps) ----
+    die.noise = false;
+    bench("analog block_op, noise off", 200, &mut out, || {
+        let mut acc = 0u32;
+        for b in 0..8 {
+            acc ^= die.block_op(b, &x, &cfg);
+        }
+        std::hint::black_box(acc);
+    });
+
+    // ---- 2. ideal-contract codes (executor fast path) ----
+    let layer = Layer {
+        name: "bench".into(),
+        kind: Kind::Dense,
+        in_features: rows,
+        out_features: 64,
+        relu: true,
+        stride: 1,
+        pool: Pool::None,
+        rows,
+        cfg,
+        w_phys: (0..rows * 64).map(|i| if i % 3 == 0 { 1 } else { -1 }).collect(),
+        beta: vec![0; 64],
+        a_scale: 1.0,
+        out_gain: 1.0,
+    };
+    bench("ideal_codes (1152x64 dense)", 500, &mut out, || {
+        std::hint::black_box(ideal_codes(&p, &layer, &x));
+    });
+
+    // ---- 3. streaming im2col ----
+    let img: Vec<u8> = (0..16 * 32 * 32).map(|i| (i % 251) as u8).collect();
+    bench("im2col 16ch 32x32 (1024 patches)", 200, &mut out, || {
+        std::hint::black_box(im2col::im2col_image(&img, 16, 32, 32, 1, 8));
+    });
+
+    out.line("\n# Targets (EXPERIMENTS.md §Perf): >=1e7 column-evals/s noise-off for");
+    out.line("# the Fig-17/19 sweeps; im2col well under the per-image macro time.");
+}

@@ -1,0 +1,303 @@
+//! Distribution-shaping charge-injection (DSCI) SAR ADC with in-ADC
+//! analog batch-normalization (§III.D–E, Figs. 11–14).
+//!
+//! The converter works directly on the column's floating DPL:
+//!
+//! 1. **Offset phase** — the 5b ABN offset unit and the 7b calibration
+//!    unit inject their pre-stored charge onto the DPL (±30 mV range,
+//!    0.47 mV calibration resolution).
+//! 2. **SAR phase** — `r_out` decision/update cycles. Each decision is a
+//!    StrongArm comparison of the DPL against mid-rail; each update
+//!    injects ±S-IN(b) through the 10T1C split-DAC. The ABN gain γ scales
+//!    all S-IN levels by 1/γ (the *zoom*), which is mathematically
+//!    equivalent to amplifying the DP distribution before an ordinary
+//!    conversion — Eq. 7:
+//!    `D = ⌊2^(r_out−1) + γ·(ΔV_MBIW+ΔV_β+ΔV_cal)/(α_adc·V_DDH/2^(r_out−1))⌋`.
+//!
+//! Calibration mode (§III.E) runs the same loop against the calibration
+//! DAC with the DPL precharged to V_DDL, converging on a code that nulls
+//! the comparator offset (to within ladder/thermal noise, and only if the
+//! offset lies within the ±30 mV compensable range).
+
+use crate::analog::ladder::Ladder;
+use crate::analog::sense_amp::SenseAmp;
+use crate::config::params::MacroParams;
+use crate::util::rng::Rng;
+
+/// One column's DSCI ADC instance.
+#[derive(Clone, Debug)]
+pub struct DsciAdc {
+    pub sa: SenseAmp,
+    /// 5b signed ABN offset code ∈ [−16, 15].
+    pub abn_offset_code: i32,
+    /// Signed calibration code ∈ [−128, 127] (7b array + 4×C_c MSB device,
+    /// 0.47 mV/step ⇒ ±60 mV range covering the 3σ pre-layout offset).
+    pub cal_code: i32,
+    /// Per-bit SAR capacitor mismatch (static, relative).
+    pub sar_cap_eps: Vec<f64>,
+}
+
+impl DsciAdc {
+    pub fn sample(p: &MacroParams, rng: &mut Rng) -> Self {
+        Self {
+            sa: SenseAmp::sample(p, rng),
+            abn_offset_code: 0,
+            cal_code: 0,
+            sar_cap_eps: (0..8).map(|_| rng.normal(0.0, p.cap_mismatch)).collect(),
+        }
+    }
+
+    pub fn ideal() -> Self {
+        Self {
+            sa: SenseAmp::ideal(),
+            abn_offset_code: 0,
+            cal_code: 0,
+            sar_cap_eps: vec![0.0; 8],
+        }
+    }
+
+    /// ABN offset voltage ΔV_β for the stored 5b code.
+    pub fn abn_offset_v(&self, p: &MacroParams) -> f64 {
+        // 5b signed, full range ±abn_offset_range on the DPL.
+        self.abn_offset_code as f64 * p.abn_offset_range / 16.0
+    }
+
+    /// Calibration voltage ΔV_cal for the stored 7b code.
+    pub fn cal_v(&self, p: &MacroParams) -> f64 {
+        self.cal_code as f64 * p.cal_step
+    }
+
+    /// Set the ABN offset from a *target voltage*, quantized to the 5b DAC.
+    pub fn set_abn_offset_target(&mut self, p: &MacroParams, v_target: f64) {
+        let step = p.abn_offset_range / 16.0;
+        self.abn_offset_code = ((v_target / step).round() as i32).clamp(-16, 15);
+    }
+
+    /// Convert the MBIW voltage on the DPL to a digital code.
+    ///
+    /// `ladder` supplies the (possibly γ-zoomed, mismatched) S-IN steps;
+    /// `rng = Some(_)` enables temporal noise (SA noise + kT/C sampling
+    /// noise on the SAR array).
+    pub fn convert(
+        &self,
+        p: &MacroParams,
+        ladder: &Ladder,
+        v_dpl: f64,
+        gamma: f64,
+        r_out: u32,
+        mut rng: Option<&mut Rng>,
+    ) -> u32 {
+        assert!((1..=8).contains(&r_out));
+        let v_mid = p.supply.vddl; // DPL mid-rail reference = V_DDH/2 = V_DDL
+        let mut v = v_dpl + self.abn_offset_v(p) + self.cal_v(p);
+        // kT/C sampling noise of the SAR array, once per conversion.
+        if let Some(r) = rng.as_deref_mut() {
+            let sigma = MacroParams::ktc_sigma(p.c_sar + p.c_p_sar);
+            v += r.normal(0.0, sigma);
+        }
+        let mut code = 0u32;
+        for b in (0..r_out).rev() {
+            let d = self.sa.decide(v, v_mid, rng.as_deref_mut());
+            code = (code << 1) | d as u32;
+            let step =
+                ladder.sar_step(p, r_out, gamma, b) * (1.0 + self.sar_cap_eps[b as usize]);
+            v += if d { -step } else { step };
+        }
+        code
+    }
+
+    /// Eq. 7 evaluated directly (the golden transfer function).
+    pub fn ideal_code(p: &MacroParams, dv: f64, gamma: f64, r_out: u32) -> u32 {
+        let half = (1u64 << (r_out - 1)) as f64;
+        let lsb = p.alpha_adc() * p.supply.vddh / (gamma * half);
+        let code = (half + dv / lsb).floor();
+        code.clamp(0.0, (1u64 << r_out) as f64 - 1.0) as u32
+    }
+
+    /// Run the calibration sequence (§III.E): with the DPL precharged to
+    /// V_DDL, SAR-search the 7b calibration code that nulls the comparator
+    /// offset. Temporal noise during calibration (if `rng` given) limits
+    /// the achievable residual, as on silicon. Returns the residual offset
+    /// [V] after calibration.
+    pub fn calibrate(&mut self, p: &MacroParams, mut rng: Option<&mut Rng>) -> f64 {
+        let v_mid = p.supply.vddl;
+        // Successive approximation over the signed code range (the MSB
+        // trial exercises the 4×C_c device that covers the 3σ pre-layout
+        // offset, §III.E). The comparator's decision at trial code t is
+        // `t·step + offset > 0`, monotone in t; bisect to the flip point.
+        let mut lo: i32 = -128;
+        let mut hi: i32 = 127;
+        for _ in 0..8 {
+            if lo >= hi {
+                break;
+            }
+            let mid = (lo + hi).div_euclid(2);
+            let v_trial = v_mid + mid as f64 * p.cal_step;
+            if self.sa.decide(v_trial, v_mid, rng.as_deref_mut()) {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        self.cal_code = hi.clamp(-128, 127);
+        self.sa.offset + self.cal_v(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::params::MacroParams;
+    use crate::util::stats;
+
+    fn setup() -> (MacroParams, Ladder, DsciAdc) {
+        let p = MacroParams::paper();
+        let l = Ladder::ideal(&p);
+        (p, l, DsciAdc::ideal())
+    }
+
+    #[test]
+    fn nominal_transfer_matches_eq7_within_one_code() {
+        let (p, l, adc) = setup();
+        for r_out in [4u32, 6, 8] {
+            for gamma in [1.0, 2.0, 4.0] {
+                for i in 0..200 {
+                    let dv = -0.35 + 0.7 * i as f64 / 199.0;
+                    let got = adc.convert(&p, &l, p.supply.vddl + dv, gamma, r_out, None);
+                    let want = DsciAdc::ideal_code(&p, dv, gamma, r_out);
+                    let diff = got as i64 - want as i64;
+                    assert!(
+                        diff.abs() <= 1,
+                        "r_out={r_out} γ={gamma} dv={dv}: got={got} want={want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn codes_clip_at_range_ends() {
+        let (p, l, adc) = setup();
+        let hi = adc.convert(&p, &l, p.supply.vddl + 2.0, 1.0, 8, None);
+        let lo = adc.convert(&p, &l, p.supply.vddl - 2.0, 1.0, 8, None);
+        assert_eq!(hi, 255);
+        assert_eq!(lo, 0);
+    }
+
+    #[test]
+    fn monotone_in_input_nominal() {
+        let (p, l, adc) = setup();
+        let mut last = 0;
+        for i in 0..500 {
+            let dv = -0.3 + 0.6 * i as f64 / 499.0;
+            let c = adc.convert(&p, &l, p.supply.vddl + dv, 2.0, 8, None);
+            assert!(c >= last, "non-monotone at i={i}");
+            last = c;
+        }
+    }
+
+    #[test]
+    fn gamma_zoom_amplifies_small_signals() {
+        let (p, l, adc) = setup();
+        let dv = 0.01;
+        let c1 = adc.convert(&p, &l, p.supply.vddl + dv, 1.0, 8, None) as i64 - 128;
+        let c8 = adc.convert(&p, &l, p.supply.vddl + dv, 8.0, 8, None) as i64 - 128;
+        // The zoomed code resolves the same ΔV with 8× finer LSBs; both
+        // quantize with ±1-code floor uncertainty.
+        assert!((c8 - 8 * c1).abs() <= 8, "c1={c1} c8={c8}");
+        assert!(c8 > c1, "zoom should enlarge the code magnitude");
+    }
+
+    #[test]
+    fn abn_offset_shifts_code() {
+        let (p, l, mut adc) = setup();
+        let c0 = adc.convert(&p, &l, p.supply.vddl, 1.0, 8, None);
+        adc.set_abn_offset_target(&p, 0.020); // +20 mV
+        let c1 = adc.convert(&p, &l, p.supply.vddl, 1.0, 8, None);
+        let lsb = p.adc_lsb(8, 1.0);
+        let expect = (0.020 / lsb).round() as i64;
+        assert!(
+            ((c1 as i64 - c0 as i64) - expect).abs() <= 1,
+            "shift={} expect={expect}",
+            c1 as i64 - c0 as i64
+        );
+    }
+
+    #[test]
+    fn offset_dac_quantizes_and_clamps() {
+        let (p, _, mut adc) = setup();
+        adc.set_abn_offset_target(&p, 1.0);
+        assert_eq!(adc.abn_offset_code, 15);
+        adc.set_abn_offset_target(&p, -1.0);
+        assert_eq!(adc.abn_offset_code, -16);
+        adc.set_abn_offset_target(&p, 0.0);
+        assert_eq!(adc.abn_offset_code, 0);
+    }
+
+    #[test]
+    fn calibration_nulls_in_range_offsets() {
+        let p = MacroParams::paper();
+        for off in [-0.055, -0.025, -0.01, 0.004, 0.017, 0.029, 0.052] {
+            let mut adc = DsciAdc::ideal();
+            adc.sa.offset = off;
+            let resid = adc.calibrate(&p, None);
+            assert!(
+                resid.abs() <= p.cal_step,
+                "offset={off}: residual={resid}"
+            );
+        }
+    }
+
+    #[test]
+    fn calibration_cannot_fix_out_of_range_offsets() {
+        let p = MacroParams::paper();
+        let mut adc = DsciAdc::ideal();
+        adc.sa.offset = 0.085; // beyond the ±60 mV DAC range
+        let resid = adc.calibrate(&p, None);
+        assert!(resid.abs() > 0.02, "resid={resid}");
+    }
+
+    #[test]
+    fn calibration_improves_population_spread() {
+        // Fig. 14c / Fig. 19: post-calibration, ~95% of columns fall within
+        // one 8b LSB.
+        let p = MacroParams::paper();
+        let mut rng = Rng::new(11);
+        let lsb = p.adc_lsb(8, 1.0);
+        let mut pre = Vec::new();
+        let mut post = Vec::new();
+        for i in 0..256 {
+            let mut adc = DsciAdc::sample(&p, &mut rng.fork(i));
+            pre.push(adc.sa.offset / lsb);
+            let mut noise = rng.fork(1000 + i);
+            let resid = adc.calibrate(&p, Some(&mut noise));
+            post.push(resid / lsb);
+        }
+        let spread_pre = stats::std(&pre);
+        let spread_post = stats::std(&post);
+        assert!(spread_pre > 4.0, "pre spread={spread_pre} LSB");
+        assert!(spread_post < spread_pre / 4.0, "post spread={spread_post}");
+        let within = post.iter().filter(|e| e.abs() <= 1.0).count();
+        assert!(within as f64 / 256.0 > 0.90, "within 1 LSB: {within}/256");
+    }
+
+    #[test]
+    fn noisy_conversion_rms_under_unity_gain_below_one_lsb() {
+        // §V.A: maximum RMS error 0.52 LSB at 8b, γ=1 after calibration.
+        let p = MacroParams::paper();
+        let l = Ladder::ideal(&p);
+        let mut adc = DsciAdc::ideal();
+        adc.sa.noise_sigma = p.sa_noise;
+        let mut rng = Rng::new(5);
+        let dv = 0.085;
+        let want = DsciAdc::ideal_code(&p, dv, 1.0, 8) as f64;
+        let errs: Vec<f64> = (0..300)
+            .map(|_| {
+                adc.convert(&p, &l, p.supply.vddl + dv, 1.0, 8, Some(&mut rng)) as f64 - want
+            })
+            .collect();
+        let rms = stats::rms(&errs);
+        assert!(rms < 1.0, "rms={rms} LSB");
+        assert!(rms > 0.05, "suspiciously quiet: rms={rms}");
+    }
+}

@@ -1,0 +1,225 @@
+//! 10T1C bitcell array model (§III.B, Fig. 2b / Fig. 7).
+//!
+//! Each bitcell stores one binary weight bit `w ∈ {0,1}` acting as a ±1
+//! factor, and couples to its column's dot-product line (DPL) through a
+//! MoM capacitance C_c = 0.7 fF. The *analog XNOR* of the broadcast input
+//! bit and the stored weight decides the polarity of the injected charge:
+//!
+//! ```text
+//!   s = (2·x − 1) · (2·w − 1)   ∈ {−1, +1}
+//! ```
+//!
+//! The array also owns the per-cell capacitor mismatch ε (device-to-device
+//! variation of C_c, σ ≈ 0.2%), drawn once per simulated die.
+
+use crate::config::params::MacroParams;
+use crate::util::rng::Rng;
+
+/// Weight storage + static per-die capacitor mismatch for the full
+/// `n_rows × n_cols` array. Storage is row-major (`row * n_cols + col`).
+#[derive(Clone, Debug)]
+pub struct BitcellArray {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    /// Weight bits, one byte per cell (0 or 1). Row-major.
+    weights: Vec<u8>,
+    /// Per-cell relative C_c mismatch (1 + eps). Row-major, f32 to halve
+    /// the footprint (1152×256 cells).
+    cap_eps: Vec<f32>,
+    /// Hot-path cache: signed mismatch-weighted factor per cell,
+    /// `(2w−1)·(1+ε)` — kept in sync by every weight write so the DP
+    /// inner loop is one multiply-add per cell. Stored COLUMN-major
+    /// (`col · n_rows + row`) so a per-unit sum reads contiguously.
+    signed: Vec<f32>,
+}
+
+impl BitcellArray {
+    /// Build an array with all-zero weights and per-die mismatch drawn
+    /// from `rng` (σ = `params.cap_mismatch`).
+    pub fn new(params: &MacroParams, rng: &mut Rng) -> Self {
+        let n = params.n_rows * params.n_cols;
+        let cap_eps: Vec<f32> = (0..n)
+            .map(|_| (rng.gaussian() * params.cap_mismatch) as f32)
+            .collect();
+        // Column-major signed cache: cell (r, c) at signed[c·n_rows + r].
+        let (nr, nc) = (params.n_rows, params.n_cols);
+        let mut signed = vec![0f32; n];
+        for c in 0..nc {
+            for r in 0..nr {
+                signed[c * nr + r] = -(1.0 + cap_eps[r * nc + c]);
+            }
+        }
+        Self {
+            n_rows: nr,
+            n_cols: nc,
+            weights: vec![0u8; n],
+            cap_eps,
+            signed,
+        }
+    }
+
+    /// Ideal array (no mismatch) — used by golden-model tests.
+    pub fn ideal(n_rows: usize, n_cols: usize) -> Self {
+        Self {
+            n_rows,
+            n_cols,
+            weights: vec![0u8; n_rows * n_cols],
+            cap_eps: vec![0.0; n_rows * n_cols],
+            signed: vec![-1.0; n_rows * n_cols],
+        }
+    }
+
+    #[inline]
+    fn idx(&self, row: usize, col: usize) -> usize {
+        debug_assert!(row < self.n_rows && col < self.n_cols);
+        row * self.n_cols + col
+    }
+
+    #[inline]
+    pub fn weight(&self, row: usize, col: usize) -> u8 {
+        self.weights[self.idx(row, col)]
+    }
+
+    #[inline]
+    pub fn set_weight(&mut self, row: usize, col: usize, w: u8) {
+        debug_assert!(w <= 1);
+        let i = self.idx(row, col);
+        self.weights[i] = w;
+        self.signed[col * self.n_rows + row] =
+            (2.0 * w as f32 - 1.0) * (1.0 + self.cap_eps[i]);
+    }
+
+    /// Write a whole column from a bit slice (SRAM R/W interface).
+    pub fn write_column(&mut self, col: usize, bits: &[u8]) {
+        assert!(bits.len() <= self.n_rows, "column write overflows array");
+        for (row, &b) in bits.iter().enumerate() {
+            self.set_weight(row, col, b);
+        }
+    }
+
+    /// Write the full array from a row-major bit matrix.
+    pub fn write_all(&mut self, bits: &[u8]) {
+        assert_eq!(bits.len(), self.weights.len());
+        for (i, &b) in bits.iter().enumerate() {
+            debug_assert!(b <= 1);
+            self.weights[i] = b;
+            let (r, c) = (i / self.n_cols, i % self.n_cols);
+            self.signed[c * self.n_rows + r] =
+                (2.0 * b as f32 - 1.0) * (1.0 + self.cap_eps[i]);
+        }
+    }
+
+    #[inline]
+    pub fn cap_eps(&self, row: usize, col: usize) -> f64 {
+        self.cap_eps[self.idx(row, col)] as f64
+    }
+
+    /// Signed XNOR contribution of one cell for input bit `x`:
+    /// s·(1+ε) with s = (2x−1)(2w−1).
+    #[inline]
+    pub fn contribution(&self, row: usize, col: usize, x: u8) -> f64 {
+        let i = self.idx(row, col);
+        let s = ((2 * x as i32 - 1) * (2 * self.weights[i] as i32 - 1)) as f64;
+        s * (1.0 + self.cap_eps[i] as f64)
+    }
+
+    /// Partial signed sum over a contiguous row range of one column for a
+    /// given input bitplane. `bits[r]` is the broadcast input bit of row
+    /// `rows.start + r`. This is the per-DP-unit quantity the settling
+    /// model needs (charge injected by one 36-row unit).
+    ///
+    /// Hot path of every characterization sweep: uses the cached signed
+    /// factors — `(2x−1)·(2w−1)(1+ε)` is `±signed[i]` — in a branchless
+    /// strided loop the compiler vectorizes.
+    pub fn unit_sum(&self, col: usize, row_start: usize, bits: &[u8]) -> f64 {
+        let base = col * self.n_rows + row_start;
+        let sc = &self.signed[base..base + bits.len()];
+        let mut s = 0.0f32;
+        for (&x, &f) in bits.iter().zip(sc) {
+            // x ∈ {0,1}: (2x−1) flips the sign.
+            s += (2 * x as i32 - 1) as f32 * f;
+        }
+        s as f64
+    }
+
+    /// Contiguous signed-factor slice of one column's first `rows` cells
+    /// (column-major cache) — lets callers fuse multi-unit reductions.
+    pub fn column_signed(&self, col: usize, rows: usize) -> &[f32] {
+        let base = col * self.n_rows;
+        &self.signed[base..base + rows]
+    }
+
+    /// Vectorizable variant: `sx[r] ∈ {−1.0, +1.0}` is the pre-expanded
+    /// bipolar input bit; the loop is a plain f32 dot product.
+    pub fn unit_sum_f32(&self, col: usize, row_start: usize, sx: &[f32]) -> f64 {
+        let base = col * self.n_rows + row_start;
+        let sc = &self.signed[base..base + sx.len()];
+        let mut acc = [0.0f32; 8];
+        let chunks = sx.len() / 8;
+        for i in 0..chunks {
+            for lane in 0..8 {
+                let j = i * 8 + lane;
+                acc[lane] += sx[j] * sc[j];
+            }
+        }
+        let mut s: f32 = acc.iter().sum();
+        for j in chunks * 8..sx.len() {
+            s += sx[j] * sc[j];
+        }
+        s as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::params::MacroParams;
+
+    #[test]
+    fn xnor_polarity() {
+        let mut a = BitcellArray::ideal(4, 2);
+        a.set_weight(0, 0, 1);
+        // x=1, w=1 → +1 ; x=0, w=1 → −1 ; x=1, w=0 → −1 ; x=0, w=0 → +1
+        assert_eq!(a.contribution(0, 0, 1), 1.0);
+        assert_eq!(a.contribution(0, 0, 0), -1.0);
+        assert_eq!(a.contribution(1, 0, 1), -1.0);
+        assert_eq!(a.contribution(1, 0, 0), 1.0);
+    }
+
+    #[test]
+    fn unit_sum_matches_manual() {
+        let mut a = BitcellArray::ideal(8, 1);
+        for r in 0..4 {
+            a.set_weight(r, 0, 1);
+        }
+        // rows 0..4 have w=1, rows 4..8 w=0; input all-ones bitplane.
+        let bits = vec![1u8; 8];
+        let s = a.unit_sum(0, 0, &bits);
+        assert_eq!(s, 4.0 - 4.0);
+        let s_lo = a.unit_sum(0, 0, &bits[..4]);
+        assert_eq!(s_lo, 4.0);
+    }
+
+    #[test]
+    fn mismatch_is_small_and_per_die() {
+        let p = MacroParams::paper();
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(2);
+        let a = BitcellArray::new(&p, &mut r1);
+        let b = BitcellArray::new(&p, &mut r2);
+        assert!(a.cap_eps(0, 0).abs() < 0.02);
+        assert_ne!(a.cap_eps(0, 0), b.cap_eps(0, 0));
+    }
+
+    #[test]
+    fn write_column_and_all() {
+        let mut a = BitcellArray::ideal(4, 4);
+        a.write_column(2, &[1, 0, 1, 1]);
+        assert_eq!(a.weight(0, 2), 1);
+        assert_eq!(a.weight(1, 2), 0);
+        assert_eq!(a.weight(3, 2), 1);
+        let bits = vec![1u8; 16];
+        a.write_all(&bits);
+        assert_eq!(a.weight(3, 3), 1);
+    }
+}

@@ -1,0 +1,256 @@
+//! Dot-product-line (DPL) charge-sharing model with split topologies and
+//! settling dynamics (§II Eq. 1–4, §III.B, Figs. 6 & 8).
+//!
+//! The DPL of one column collects the charge injected by all connected
+//! 10T1C bitcells. Three topologies are modelled (Fig. 6a):
+//!
+//! * **Baseline** — one monolithic DPL over all 1152 rows; the attenuation
+//!   α is fixed at its worst value regardless of how many rows are used.
+//! * **Parallel-split** — 32 local DPLs joined to a global DPL through
+//!   switches; connected units scale α but the global line adds C_p,glob.
+//! * **Serial-split** — units daisy-chained with transmission gates on the
+//!   main DPL (the fabricated choice). α scales with connected units, but
+//!   charge from distant units must settle through a chain of series
+//!   gates, which is what produces the paper's slow-corner measurement
+//!   artefacts (Fig. 8b/c, Fig. 17b, Fig. 20).
+//!
+//! The settling model is first-order per unit: the charge contributed by
+//! unit `u` (distance `u` gates from the MBIW end) reaches the output with
+//! a residual deficit `exp(−T_DP / τ_u)`, where
+//! `τ_u = τ_tg · (u + 1) · m(V_target) / drive(corner)` and `m(·)` is the
+//! mid-rail drive-weakening factor of a transmission gate (worst when the
+//! target voltage sits near V_DDH/2, §III.B).
+
+use crate::config::params::{DplTopology, MacroParams};
+
+/// Result of one single-bit DP phase on one column.
+#[derive(Clone, Copy, Debug)]
+pub struct DpResult {
+    /// Settled (or partially settled) DPL voltage [V].
+    pub v_dpl: f64,
+    /// The ideal target voltage had settling been complete [V].
+    pub v_ideal: f64,
+}
+
+/// Compute the ideal (fully settled) DPL voltage for a signed sum `s_total`
+/// over `connected_rows` rows: V = V_DDL + α_eff · V_DDL · Σs  (Eq. 1).
+pub fn ideal_dp_voltage(p: &MacroParams, connected_rows: usize, s_total: f64) -> f64 {
+    let alpha = p.alpha_eff(connected_rows);
+    p.supply.vddl + alpha * p.supply.vddl * s_total
+}
+
+/// Mid-rail drive weakening of a serial-split transmission gate: gates
+/// passing a voltage near V_DDH/2 have the least overdrive. Factor ≥ 1.
+pub fn midrail_weakening(p: &MacroParams, v_target: f64) -> f64 {
+    let v_mid = p.supply.vddh / 2.0;
+    let width = 0.06; // V, fitted to give Fig. 8b's T_DP requirement
+    let amp = 1.2 / p.corner.drive();
+    1.0 + amp * (-((v_target - v_mid) / width).powi(2)).exp()
+}
+
+/// One single-bit DP phase over a column, given the per-unit signed sums
+/// `unit_sums[u]` (unit 0 is adjacent to the MBIW/ADC end).
+///
+/// `connected_units` ≤ 32 units participate (serial/parallel split); for
+/// the baseline topology all 1152 rows load the line regardless.
+pub fn dp_phase(
+    p: &MacroParams,
+    unit_sums: &[f64],
+    connected_units: usize,
+    t_dp: f64,
+) -> DpResult {
+    assert!(connected_units >= 1 && connected_units <= p.n_units());
+    assert!(unit_sums.len() >= connected_units);
+    let connected_rows = p.rows_for_units(connected_units);
+    let alpha = p.alpha_eff(connected_rows);
+    let vddl = p.supply.vddl;
+
+    let s_total: f64 = unit_sums[..connected_units].iter().sum();
+    let v_ideal = vddl + alpha * vddl * s_total;
+
+    let v_dpl = match p.topology {
+        DplTopology::Baseline => v_ideal,
+        DplTopology::ParallelSplit => {
+            // Local lines settle through ONE switch each onto the global
+            // line: single-gate τ, no distance dependence (1.5 ns is
+            // enough per §III.B). Residual error is tiny but modelled.
+            let m = midrail_weakening(p, v_ideal);
+            let tau = p.tau_tg * m / p.corner.drive() / 3.0;
+            let deficit = (-t_dp / tau).exp();
+            let err: f64 = unit_sums[..connected_units]
+                .iter()
+                .map(|&s| alpha * vddl * s * deficit)
+                .sum();
+            v_ideal - err
+        }
+        DplTopology::SerialSplit => {
+            // Charge from unit u crosses u series gates; with Elmore
+            // RC-diffusion the residual deficit grows quadratically with
+            // distance. Opposing-sign unit sums do not cancel in the
+            // residual — the paper's half-1/half-0 worst case (Fig. 8b/c)
+            // and clustered-weight distortion (Fig. 20b).
+            let m = midrail_weakening(p, v_ideal);
+            let mut err = 0.0;
+            for (u, &s) in unit_sums[..connected_units].iter().enumerate() {
+                let d = u as f64 + 1.0;
+                let tau = p.tau_tg * d * d * m / p.corner.drive();
+                let xponent = t_dp / tau;
+                if xponent > 30.0 {
+                    continue; // residual < 1e-13 of the contribution
+                }
+                err += alpha * vddl * s * (-xponent).exp();
+            }
+            v_ideal - err
+        }
+    };
+    DpResult { v_dpl, v_ideal }
+}
+
+/// Maximum DPL voltage swing (one side) achievable with `connected_units`
+/// active and all cells injecting the same polarity — Fig. 6(b)'s y-axis.
+pub fn max_swing(p: &MacroParams, connected_units: usize) -> f64 {
+    let rows = p.rows_for_units(connected_units);
+    let alpha = p.alpha_eff(rows);
+    alpha * p.supply.vddl * rows as f64
+}
+
+/// Effective number of ADC bits usable for a DP with standard deviation
+/// `sigma_dp` (in units of rows) and `connected_units` active, for an
+/// `r_out`-bit full-scale ADC at gain γ — the quantity Fig. 3(a) tracks.
+///
+/// The ADC covers ±α_adc·V_DDH/(2γ)... whereas the DP distribution spans
+/// roughly ±3σ·α_eff·V_DDL. Bits that resolve voltages outside the DP
+/// span are wasted.
+pub fn effective_adc_bits(
+    p: &MacroParams,
+    connected_units: usize,
+    sigma_dp_rows: f64,
+    r_out: u32,
+    gamma: f64,
+) -> f64 {
+    let rows = p.rows_for_units(connected_units);
+    let alpha = p.alpha_eff(rows);
+    let span_dp = 2.0 * 3.0 * sigma_dp_rows * alpha * p.supply.vddl; // ±3σ
+    let lsb = p.adc_lsb(r_out, gamma);
+    let full_scale = lsb * (1u64 << r_out) as f64;
+    let used = (span_dp / full_scale).min(1.0);
+    (r_out as f64 + used.log2()).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::params::{Corner, MacroParams};
+
+    fn p() -> MacroParams {
+        MacroParams::paper()
+    }
+
+    #[test]
+    fn ideal_voltage_is_linear_in_sum() {
+        let p = p();
+        let v0 = ideal_dp_voltage(&p, 1152, 0.0);
+        assert!((v0 - p.supply.vddl).abs() < 1e-15);
+        let v1 = ideal_dp_voltage(&p, 1152, 100.0);
+        let v2 = ideal_dp_voltage(&p, 1152, 200.0);
+        assert!(((v2 - v0) - 2.0 * (v1 - v0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn swing_stays_within_rails() {
+        let p = p();
+        for units in [1, 8, 16, 32] {
+            let s = max_swing(&p, units);
+            assert!(s > 0.0 && p.supply.vddl + s < p.supply.vddh, "units={units} swing={s}");
+        }
+    }
+
+    #[test]
+    fn serial_split_beats_baseline_at_low_cin() {
+        let p = p();
+        let base = p.clone().with_topology(DplTopology::Baseline);
+        let split = p.clone().with_topology(DplTopology::SerialSplit);
+        // One unit active: split swing should be far larger (paper: up to ~20×).
+        let gain = max_swing(&split, 1) / max_swing(&base, 1);
+        assert!(gain > 5.0, "gain={gain}");
+        // At full utilization they converge (same connected capacitance).
+        let gain_full = max_swing(&split, 32) / max_swing(&base, 32);
+        assert!((gain_full - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn settling_error_vanishes_with_long_t_dp() {
+        let p = p();
+        let unit_sums = vec![36.0; 32];
+        let short = dp_phase(&p, &unit_sums, 32, 2e-9);
+        let long = dp_phase(&p, &unit_sums, 32, 100e-9);
+        let err_short = (short.v_dpl - short.v_ideal).abs();
+        let err_long = (long.v_dpl - long.v_ideal).abs();
+        assert!(err_long < err_short * 1e-3, "short={err_short} long={err_long}");
+        assert!(err_long < 1e-9);
+    }
+
+    #[test]
+    fn opposing_halves_worst_case() {
+        // Half-1/half-0 pattern: near-zero ideal target but large residual
+        // (Fig. 8b). Compare against a uniform pattern with the same |sum|.
+        let p = p();
+        let mut opposing = vec![36.0; 32];
+        for s in opposing.iter_mut().skip(16) {
+            *s = -36.0;
+        }
+        let uniform = vec![0.0; 32];
+        let r_op = dp_phase(&p, &opposing, 32, p.t_dp);
+        let r_un = dp_phase(&p, &uniform, 32, p.t_dp);
+        let err_op = (r_op.v_dpl - r_op.v_ideal).abs();
+        let err_un = (r_un.v_dpl - r_un.v_ideal).abs();
+        assert!(err_op > err_un + 1e-9, "opposing={err_op} uniform={err_un}");
+    }
+
+    #[test]
+    fn slow_corner_settles_worse() {
+        let pt = p().with_corner(Corner::Tt);
+        let ps = p().with_corner(Corner::Ss);
+        let mut sums = vec![36.0; 32];
+        for s in sums.iter_mut().skip(16) {
+            *s = -36.0;
+        }
+        let et = (dp_phase(&pt, &sums, 32, pt.t_dp).v_dpl
+            - dp_phase(&pt, &sums, 32, pt.t_dp).v_ideal)
+            .abs();
+        let es = (dp_phase(&ps, &sums, 32, ps.t_dp).v_dpl
+            - dp_phase(&ps, &sums, 32, ps.t_dp).v_ideal)
+            .abs();
+        assert!(es > et, "SS={es} TT={et}");
+    }
+
+    #[test]
+    fn effective_bits_recover_with_gamma() {
+        let p = p();
+        // Narrow distribution, quarter utilization: many wasted bits.
+        let lo = effective_adc_bits(&p, 8, 30.0, 8, 1.0);
+        let hi = effective_adc_bits(&p, 8, 30.0, 8, 8.0);
+        assert!(hi > lo + 2.5, "lo={lo} hi={hi}");
+        assert!(hi <= 8.0 + 1e-9);
+    }
+
+    #[test]
+    fn parallel_split_settles_faster_than_serial() {
+        let p = p();
+        let ser = p.clone().with_topology(DplTopology::SerialSplit);
+        let par = p.clone().with_topology(DplTopology::ParallelSplit);
+        let mut sums = vec![36.0; 32];
+        for s in sums.iter_mut().skip(16) {
+            *s = -36.0;
+        }
+        // At the parallel topology's short 1.5 ns timing, serial has much
+        // larger residual error (§III.B: parallel needs only 1.5 ns).
+        let es = (dp_phase(&ser, &sums, 32, 1.5e-9).v_dpl
+            - dp_phase(&ser, &sums, 32, 1.5e-9).v_ideal)
+            .abs();
+        let ep = (dp_phase(&par, &sums, 32, 1.5e-9).v_dpl
+            - dp_phase(&par, &sums, 32, 1.5e-9).v_ideal)
+            .abs();
+        assert!(es > ep * 3.0, "serial={es} parallel={ep}");
+    }
+}

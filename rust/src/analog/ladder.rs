@@ -1,0 +1,154 @@
+//! Gain-adaptive resistive reference ladder (§III.D, Fig. 11b).
+//!
+//! The DSCI ADC's S-IN(b) levels are tapped from a double-sided resistive
+//! ladder activated during conversion (≈1 mA for 5 ns settling). The ABN
+//! gain γ is realized by *downscaling* all S-IN levels by 1/γ — the ADC
+//! "zoom" — so no explicit amplifier touches the floating DPL.
+//!
+//! Imperfections modelled:
+//! * per-tap mismatch of the ladder resistors (static per die), whose
+//!   *absolute* voltage error is roughly constant — so its impact in LSB
+//!   grows ∝ γ (the Fig. 13 INL/DNL-vs-γ trend);
+//! * a deterministic bow from the ladder's series parasitic resistance;
+//! * a finite minimum step of V_DDH/32: MSB-array gains above 16 cannot
+//!   be generated exactly and truncate (lost-LSB regime, §III.D).
+
+use crate::config::params::MacroParams;
+use crate::util::rng::Rng;
+
+/// A fabricated ladder instance shared by all 256 column ADCs.
+#[derive(Clone, Debug)]
+pub struct Ladder {
+    /// Per-bit relative tap error (static mismatch), MSB-first, 8 entries.
+    pub tap_eps: Vec<f64>,
+    /// Deterministic bow amplitude (fraction of tap voltage).
+    pub bow: f64,
+    /// Minimum realizable tap step [V].
+    pub min_step: f64,
+    /// Maximum MSB-array gain (16).
+    pub max_msb_gain: f64,
+}
+
+impl Ladder {
+    pub fn sample(p: &MacroParams, rng: &mut Rng) -> Self {
+        let tap_eps = (0..8).map(|_| rng.normal(0.0, p.ladder_mismatch)).collect();
+        Self {
+            tap_eps,
+            bow: 0.0025,
+            min_step: p.supply.vddh / p.ladder_min_step_div,
+            max_msb_gain: p.max_msb_gain,
+        }
+    }
+
+    pub fn ideal(p: &MacroParams) -> Self {
+        Self {
+            tap_eps: vec![0.0; 8],
+            bow: 0.0,
+            min_step: p.supply.vddh / p.ladder_min_step_div,
+            max_msb_gain: p.max_msb_gain,
+        }
+    }
+
+    /// Reference injection voltage for SAR bit `b` (b = r_out−1 is the
+    /// MSB) at gain `gamma`, for an `r_out`-bit conversion.
+    ///
+    /// Ideal value: α_adc · V_DDH / γ · 2^b / 2^(r_out−1) / 2
+    /// (half-step of the remaining search interval, referred through the
+    /// SAR attenuation). Above the MSB-array gain limit the extra zoom is
+    /// produced by the LSB split-array's downscaled swing; past the
+    /// ladder's min-step resolution the level quantizes.
+    pub fn sar_step(&self, p: &MacroParams, r_out: u32, gamma: f64, b: u32) -> f64 {
+        assert!(b < r_out && r_out <= 8);
+        let ideal = p.alpha_adc() * p.supply.vddh / gamma * (1u64 << b) as f64
+            / (1u64 << (r_out - 1)) as f64
+            / 2.0;
+        // γ = 1 MSB taps connect straight to the rails (§V.A: unity gain
+        // bypasses the ladder for the MSBs) → no mismatch there.
+        let rail_direct = gamma <= 1.0 && b >= r_out.saturating_sub(2);
+        let eps = if rail_direct { 0.0 } else { self.tap_eps[(7 - b.min(7)) as usize] };
+        // Parasitic-R bow: worst mid-ladder, scaled by how deep into the
+        // ladder this tap sits (finer taps sit further from the supplies).
+        let depth = 1.0 - (1u64 << b) as f64 / (1u64 << (r_out - 1)) as f64 / 2.0;
+        let bow_err = self.bow * depth * depth;
+        // Min-step truncation: levels below the ladder's resolution (after
+        // the LSB split-array's fixed ÷4 swing reduction) collapse.
+        let lsb_split_div = 4.0;
+        let resolvable = self.min_step / lsb_split_div / 8.0;
+        let mut v = ideal * (1.0 + eps + bow_err);
+        if v < resolvable {
+            // Quantize harshly — the "lost LSB information above γ=8..16".
+            v = (v / (resolvable / 2.0)).round() * (resolvable / 2.0);
+        }
+        v
+    }
+
+    /// DC current drawn while active [A] (§III.D: 1 mA to settle in 5 ns).
+    pub fn active_current(&self) -> f64 {
+        1.0e-3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::params::MacroParams;
+
+    #[test]
+    fn steps_are_binary_weighted_at_unity_gain() {
+        let p = MacroParams::paper();
+        let l = Ladder::ideal(&p);
+        let s7 = l.sar_step(&p, 8, 1.0, 7);
+        let s6 = l.sar_step(&p, 8, 1.0, 6);
+        let s0 = l.sar_step(&p, 8, 1.0, 0);
+        assert!((s7 / s6 - 2.0).abs() < 1e-9);
+        assert!((s7 / s0 - 128.0).abs() < 1e-6);
+        // MSB step is half the (attenuated) half-range ±α_adc·V_DDH.
+        assert!((s7 - p.alpha_adc() * p.supply.vddh / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gamma_compresses_steps() {
+        let p = MacroParams::paper();
+        let l = Ladder::ideal(&p);
+        let s_g1 = l.sar_step(&p, 8, 1.0, 7);
+        let s_g4 = l.sar_step(&p, 8, 4.0, 7);
+        assert!((s_g1 / s_g4 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn high_gamma_fine_steps_quantize() {
+        let p = MacroParams::paper();
+        let l = Ladder::ideal(&p);
+        // At γ=32, the LSB steps fall below the ladder resolution and
+        // quantize — relative error of the bottom bit becomes large.
+        let ideal = p.alpha_adc() * p.supply.vddh / 32.0 / 128.0 / 2.0;
+        let got = l.sar_step(&p, 8, 32.0, 0);
+        let rel = (got - ideal).abs() / ideal;
+        let got_lo = l.sar_step(&p, 8, 1.0, 0);
+        let ideal_lo = p.alpha_adc() * p.supply.vddh / 128.0 / 2.0;
+        let rel_lo = (got_lo - ideal_lo).abs() / ideal_lo;
+        assert!(rel > rel_lo, "γ32 rel={rel} γ1 rel={rel_lo}");
+    }
+
+    #[test]
+    fn mismatch_absolute_error_constant_so_lsb_error_grows_with_gamma() {
+        let p = MacroParams::paper();
+        let mut rng = Rng::new(3);
+        let l = Ladder::sample(&p, &mut rng);
+        // Absolute error of bit-4 tap at γ=1 vs γ=8 scales down with the
+        // level, but measured IN LSB(γ) it is constant-to-growing.
+        let b = 4u32;
+        let ideal =
+            |g: f64| p.alpha_adc() * p.supply.vddh / g * (1u64 << b) as f64 / 128.0 / 2.0;
+        let err_g1 = (l.sar_step(&p, 8, 1.0, b) - ideal(1.0)).abs() / p.adc_lsb(8, 1.0);
+        let err_g8 = (l.sar_step(&p, 8, 8.0, b) - ideal(8.0)).abs() / p.adc_lsb(8, 8.0);
+        assert!(err_g8 >= err_g1 * 0.9, "g1={err_g1} g8={err_g8}");
+    }
+
+    #[test]
+    fn ladder_current_matches_paper() {
+        let p = MacroParams::paper();
+        let l = Ladder::ideal(&p);
+        assert_eq!(l.active_current(), 1.0e-3);
+    }
+}

@@ -1,0 +1,500 @@
+//! End-to-end behavioral model of the 1152×256 CIM-SRAM macro (§III,
+//! Fig. 5): the four-phase operation flow — per-bitplane charge-domain DP,
+//! MBIW input accumulation, inter-column weight accumulation, and DSCI-ADC
+//! conversion with ABN — on one continuous capacitor network.
+//!
+//! The model has two fidelity settings:
+//! * **ideal** (no mismatch, no noise, settled timing) — must agree with
+//!   the closed-form contract used by the python oracle (`ideal_code`);
+//! * **sampled** (per-die mismatch + temporal noise + corner + finite
+//!   T_DP) — reproduces the paper's measured artefacts.
+//!
+//! ### Functional contract (ideal path)
+//!
+//! With unsigned r_in-bit inputs X_i, antipodal weight bits s_{i,k} and
+//! M = 2^r_in − 1, the MBIW voltage is
+//!
+//! ```text
+//! ΔV = α_eff · V_DDL · Σ_i (2·X_i − M) · W_i / 2^(r_in' + r_w')
+//!      W_i = Σ_k 2^k s_{i,k},    r' = r if r > 1 else 0 (bypass)
+//! ```
+//!
+//! and the output code follows Eq. 7. The bypasses express §III.C: binary
+//! inputs skip the input accumulator, binary weights skip the column
+//! share, each preserving a 2× voltage swing.
+
+use crate::analog::adc::DsciAdc;
+use crate::analog::bitcell::BitcellArray;
+use crate::analog::dpl;
+use crate::analog::ladder::Ladder;
+use crate::analog::mbiw;
+use crate::config::params::MacroParams;
+use crate::util::rng::Rng;
+
+/// Per-operation configuration of the macro (precision, gain, array split).
+#[derive(Clone, Copy, Debug)]
+pub struct OpConfig {
+    /// Input precision r_in ∈ 1..=8 (bit-serial).
+    pub r_in: u32,
+    /// Weight precision r_w ∈ 1..=4 (columns per block used).
+    pub r_w: u32,
+    /// Output (ADC) precision r_out ∈ 1..=8.
+    pub r_out: u32,
+    /// ABN gain γ (ladder zoom), 1..=32.
+    pub gamma: f64,
+    /// Connected serial-split DP units (1..=32); `units_for_cin` helps.
+    pub connected_units: usize,
+    /// Single-bit DP duration [s].
+    pub t_dp: f64,
+}
+
+impl OpConfig {
+    pub fn new(r_in: u32, r_w: u32, r_out: u32) -> Self {
+        Self {
+            r_in,
+            r_w,
+            r_out,
+            gamma: 1.0,
+            connected_units: 32,
+            t_dp: 5e-9,
+        }
+    }
+
+    pub fn with_gamma(mut self, g: f64) -> Self {
+        self.gamma = g;
+        self
+    }
+
+    pub fn with_units(mut self, u: usize) -> Self {
+        self.connected_units = u;
+        self
+    }
+
+    pub fn with_t_dp(mut self, t: f64) -> Self {
+        self.t_dp = t;
+        self
+    }
+
+    pub fn validate(&self, p: &MacroParams) {
+        assert!((1..=8).contains(&self.r_in), "r_in out of range");
+        assert!(
+            (1..=p.cols_per_block as u32).contains(&self.r_w),
+            "r_w out of range"
+        );
+        assert!((1..=8).contains(&self.r_out), "r_out out of range");
+        assert!(self.gamma >= 1.0 && self.gamma <= 32.0, "gamma out of range");
+        assert!(
+            (1..=p.n_units()).contains(&self.connected_units),
+            "connected_units out of range"
+        );
+    }
+
+    /// Rows active under this configuration.
+    pub fn active_rows(&self, p: &MacroParams) -> usize {
+        p.rows_for_units(self.connected_units)
+    }
+}
+
+/// The simulated macro instance (one die).
+#[derive(Clone, Debug)]
+pub struct CimMacro {
+    pub p: MacroParams,
+    pub cells: BitcellArray,
+    pub adcs: Vec<DsciAdc>,
+    pub ladder: Ladder,
+    /// Enable temporal noise (kT/C + SA decision noise).
+    pub noise: bool,
+    rng: Rng,
+}
+
+impl CimMacro {
+    /// Fabricate a die: draw all static mismatch from `seed`.
+    pub fn new(p: MacroParams, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let cells = BitcellArray::new(&p, &mut rng);
+        let adcs = (0..p.n_cols)
+            .map(|c| DsciAdc::sample(&p, &mut rng.fork(0x5A00 + c as u64)))
+            .collect();
+        let ladder = Ladder::sample(&p, &mut rng.fork(0x1ADD));
+        Self {
+            p,
+            cells,
+            adcs,
+            ladder,
+            noise: true,
+            rng: rng.fork(0x7E3),
+        }
+    }
+
+    /// Ideal die: no mismatch, no noise. Used as the golden model and by
+    /// the HLO-equivalence integration test.
+    pub fn ideal(p: MacroParams) -> Self {
+        let cells = BitcellArray::ideal(p.n_rows, p.n_cols);
+        let adcs = (0..p.n_cols).map(|_| DsciAdc::ideal()).collect();
+        let ladder = Ladder::ideal(&p);
+        Self {
+            p,
+            cells,
+            adcs,
+            ladder,
+            noise: false,
+            rng: Rng::new(0),
+        }
+    }
+
+    /// Also zero out the deterministic non-idealities (injection, leakage,
+    /// settling) — the macro then matches `ideal_code` exactly.
+    pub fn idealize_physics(&mut self) {
+        self.p.inj_k = 0.0;
+        self.p.i_leak0 = 0.0;
+        self.p.alpha_mb_imbalance = 0.0; // α_mb exactly ½
+        self.p.tau_tg = 1e-15; // instant settling
+    }
+
+    /// Calibrate every column ADC (§III.E). Returns per-column residual
+    /// offsets [V].
+    pub fn calibrate_all(&mut self) -> Vec<f64> {
+        let p = self.p.clone();
+        let noise = self.noise;
+        let rng = self.rng.fork(0xCA1);
+        self.adcs
+            .iter_mut()
+            .enumerate()
+            .map(|(c, adc)| {
+                let mut r = rng.fork(c as u64);
+                adc.calibrate(&p, if noise { Some(&mut r) } else { None })
+            })
+            .collect()
+    }
+
+    /// Load signed integer weights for `r_w`-bit blocks. `w[row][outcol]`
+    /// with `outcol < n_blocks`, values must be representable as
+    /// Σ ±2^k over r_w antipodal bits, i.e. `2B − (2^r_w − 1)` for
+    /// B ∈ [0, 2^r_w): odd integers in [−(2^r_w −1), 2^r_w −1].
+    pub fn load_weights(&mut self, w: &[i32], n_out: usize, r_w: u32) {
+        assert!(n_out <= self.p.n_blocks());
+        assert_eq!(w.len() % n_out, 0);
+        let rows = w.len() / n_out;
+        assert!(rows <= self.p.n_rows);
+        let max = (1i32 << r_w) - 1;
+        for row in 0..rows {
+            for oc in 0..n_out {
+                let v = w[row * n_out + oc];
+                assert!(
+                    v.abs() <= max && (v + max) % 2 == 0,
+                    "weight {v} not representable with r_w={r_w} antipodal bits"
+                );
+                let b = ((v + max) / 2) as u32; // offset-binary magnitude
+                for k in 0..r_w {
+                    let bit = ((b >> k) & 1) as u8;
+                    self.cells
+                        .set_weight(row, oc * self.p.cols_per_block + k as usize, bit);
+                }
+            }
+        }
+    }
+
+    /// Load the same signed weight column into the first `n_out` blocks
+    /// (characterization sweeps drive many blocks with one pattern).
+    pub fn load_weights_broadcast(&mut self, col: &[i32], n_out: usize, r_w: u32) {
+        let rows = col.len();
+        let mut w = vec![0i32; rows * n_out];
+        for (r, &v) in col.iter().enumerate() {
+            for oc in 0..n_out {
+                w[r * n_out + oc] = v;
+            }
+        }
+        self.load_weights(&w, n_out, r_w);
+    }
+
+    /// Per-unit signed sums for one column and one (bipolar f32) bitplane.
+    /// Single fused pass over the column's signed-factor slice with
+    /// fixed-width chunks — the hottest loop of every characterization
+    /// sweep (see EXPERIMENTS.md §Perf).
+    fn unit_sums(&self, col: usize, sx: &[f32], cfg: &OpConfig) -> Vec<f64> {
+        let upr = self.p.rows_per_unit;
+        let sc = self.cells.column_signed(col, cfg.connected_units * upr);
+        let mut sums = Vec::with_capacity(cfg.connected_units);
+        for (cx, cc) in sx.chunks_exact(upr).zip(sc.chunks_exact(upr)) {
+            let mut s = 0.0f32;
+            for i in 0..upr {
+                s += cx[i] * cc[i];
+            }
+            sums.push(s as f64);
+        }
+        sums
+    }
+
+    /// One single-bit DP phase voltage on `col` for bipolar bitplane `sx`.
+    fn dp_voltage(&mut self, col: usize, sx: &[f32], cfg: &OpConfig) -> f64 {
+        let sums = self.unit_sums(col, sx, cfg);
+        let r = dpl::dp_phase(&self.p, &sums, cfg.connected_units, cfg.t_dp);
+        let mut v = r.v_dpl;
+        if self.noise {
+            let rows = cfg.active_rows(&self.p);
+            let alpha = self.p.alpha_eff(rows);
+            // Aggregated bitcell kT/C (attenuated) + DPL sampling noise.
+            let sigma_cells = self.p.v_noise_cell * alpha * (rows as f64).sqrt();
+            let c_tot = rows as f64 * self.p.c_c
+                + self.p.c_p_per_row * rows as f64
+                + self.p.c_load;
+            let sigma_dpl = MacroParams::ktc_sigma(c_tot);
+            v += self.rng.normal(0.0, (sigma_cells.powi(2) + sigma_dpl.powi(2)).sqrt());
+        }
+        v
+    }
+
+    /// Pre-expand the bit-serial input into bipolar f32 bitplanes (shared
+    /// by every column and block of one macro operation).
+    pub fn expand_bitplanes(x: &[u8], r_in: u32) -> Vec<Vec<f32>> {
+        (0..r_in)
+            .map(|b| {
+                x.iter()
+                    .map(|&xv| (2 * ((xv >> b) & 1) as i32 - 1) as f32)
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Full four-phase operation of one MBIW block. `x[r]` is the unsigned
+    /// r_in-bit input of active row r (length = cfg.active_rows()).
+    /// Returns the ADC code from the block's MSB column.
+    pub fn block_op(&mut self, block: usize, x: &[u8], cfg: &OpConfig) -> u32 {
+        let planes = Self::expand_bitplanes(x, cfg.r_in);
+        self.block_op_planes(block, &planes, x.len(), cfg)
+    }
+
+    /// `block_op` with pre-expanded bitplanes (the matvec fast path).
+    pub fn block_op_planes(
+        &mut self,
+        block: usize,
+        bitplanes: &[Vec<f32>],
+        x_len: usize,
+        cfg: &OpConfig,
+    ) -> u32 {
+        cfg.validate(&self.p);
+        let rows = cfg.active_rows(&self.p);
+        assert_eq!(x_len, rows, "input length != active rows");
+        let mut v_cols = Vec::with_capacity(cfg.r_w as usize);
+        for k in 0..cfg.r_w as usize {
+            let col = block * self.p.cols_per_block + k;
+            // Phases 1–2: bit-serial DP + input accumulation (LSB first).
+            let mut v_dp = Vec::with_capacity(cfg.r_in as usize);
+            for bits in bitplanes {
+                v_dp.push(self.dp_voltage(col, bits, cfg));
+            }
+            v_cols.push(mbiw::input_accumulation(&self.p, &v_dp));
+        }
+        // Phases 3–4: inter-column weight accumulation onto the MSB DPL.
+        let v_mbiw = mbiw::weight_accumulation(&self.p, &v_cols);
+
+        // ADC conversion with ABN gain/offset on the MSB column's DSCI.
+        let adc_col = block * self.p.cols_per_block + (cfg.r_w as usize - 1);
+        let adc = self.adcs[adc_col].clone();
+        let salt = self.rng.next_u64();
+        let mut rng = self.rng.fork(0xADC0 + adc_col as u64 ^ salt);
+        let noise_rng = if self.noise { Some(&mut rng) } else { None };
+        adc.convert(&self.p, &self.ladder, v_mbiw, cfg.gamma, cfg.r_out, noise_rng)
+    }
+
+    /// Matrix-vector product over the first `n_out` blocks. Bitplanes are
+    /// expanded once and shared across all blocks.
+    pub fn matvec(&mut self, x: &[u8], n_out: usize, cfg: &OpConfig) -> Vec<u32> {
+        assert!(n_out <= self.p.n_blocks());
+        debug_assert!(x.iter().all(|&v| (v as u32) < (1u32 << cfg.r_in)));
+        let planes = Self::expand_bitplanes(x, cfg.r_in);
+        (0..n_out)
+            .map(|blk| self.block_op_planes(blk, &planes, x.len(), cfg))
+            .collect()
+    }
+
+    /// Closed-form ideal output code for signed weights `w[row]` of one
+    /// output (see module docs) — the golden contract shared with
+    /// `python/compile/kernels/ref.py`.
+    pub fn ideal_code(
+        p: &MacroParams,
+        x: &[u8],
+        w: &[i32],
+        cfg: &OpConfig,
+    ) -> u32 {
+        assert_eq!(x.len(), w.len());
+        let rows = cfg.active_rows(p);
+        assert_eq!(x.len(), rows);
+        let m = (1i64 << cfg.r_in) - 1;
+        let dot: i64 = x
+            .iter()
+            .zip(w)
+            .map(|(&xv, &wv)| (2 * xv as i64 - m) * wv as i64)
+            .sum();
+        let rin_eff = if cfg.r_in > 1 { cfg.r_in } else { 0 };
+        let rw_eff = if cfg.r_w > 1 { cfg.r_w } else { 0 };
+        let alpha = p.alpha_eff(rows);
+        let dv = alpha * p.supply.vddl * dot as f64 / (1u64 << (rin_eff + rw_eff)) as f64;
+        DsciAdc::ideal_code(p, dv, cfg.gamma, cfg.r_out)
+    }
+
+    /// The ΔV seen by the ADC for a given dot product (used by the energy
+    /// model and by distribution analyses).
+    pub fn ideal_dv(p: &MacroParams, dot: i64, cfg: &OpConfig) -> f64 {
+        let rows = cfg.active_rows(p);
+        let rin_eff = if cfg.r_in > 1 { cfg.r_in } else { 0 };
+        let rw_eff = if cfg.r_w > 1 { cfg.r_w } else { 0 };
+        p.alpha_eff(rows) * p.supply.vddl * dot as f64
+            / (1u64 << (rin_eff + rw_eff)) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::params::MacroParams;
+
+    /// A fully-idealized macro for golden-contract tests.
+    fn golden_macro(p: &MacroParams) -> CimMacro {
+        let mut m = CimMacro::ideal(p.clone());
+        m.idealize_physics();
+        m
+    }
+
+    fn fill_inputs(rng: &mut Rng, rows: usize, r_in: u32) -> Vec<u8> {
+        (0..rows).map(|_| rng.below(1 << r_in) as u8).collect()
+    }
+
+    fn fill_weights(rng: &mut Rng, rows: usize, r_w: u32) -> Vec<i32> {
+        let max = (1i32 << r_w) - 1;
+        (0..rows)
+            .map(|_| 2 * rng.below(1 << r_w) as i32 - max)
+            .collect()
+    }
+
+    #[test]
+    fn golden_macro_matches_ideal_code_all_precisions() {
+        let p = MacroParams::paper();
+        let mut rng = Rng::new(77);
+        for (r_in, r_w, r_out) in [(1, 1, 4), (2, 1, 6), (4, 2, 8), (8, 4, 8), (8, 1, 8)] {
+            for units in [1usize, 4, 32] {
+                let cfg = OpConfig::new(r_in, r_w, r_out)
+                    .with_units(units)
+                    .with_gamma(2.0);
+                let mut m = golden_macro(&p);
+                let rows = cfg.active_rows(&p);
+                let x = fill_inputs(&mut rng, rows, r_in);
+                let w = fill_weights(&mut rng, rows, r_w);
+                // Load into block 0 with column padding beyond `rows` zeroed
+                // weights... zero *bits* mean weight −1, so restrict the
+                // comparison to exactly `rows` active rows (matching the
+                // connected-units config — disconnected units don't inject).
+                let mut m2 = m.clone();
+                m2.load_weights(&w, 1, r_w);
+                m = m2;
+                let got = m.block_op(0, &x, &cfg);
+                let want = CimMacro::ideal_code(&p, &x, &w, &cfg);
+                assert!(
+                    (got as i64 - want as i64).abs() <= 1,
+                    "r_in={r_in} r_w={r_w} r_out={r_out} units={units}: got={got} want={want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_input_zero_weight_centers_midcode() {
+        // X at midscale against balanced ±1 weights → code near 2^(r_out−1).
+        let p = MacroParams::paper();
+        let cfg = OpConfig::new(8, 1, 8).with_units(4);
+        let mut m = golden_macro(&p);
+        let rows = cfg.active_rows(&p);
+        let w: Vec<i32> = (0..rows).map(|i| if i % 2 == 0 { 1 } else { -1 }).collect();
+        m.load_weights(&w, 1, 1);
+        let x = vec![127u8; rows]; // ≈ M/2 each
+        let code = m.block_op(0, &x, &cfg);
+        assert!((code as i64 - 128).abs() <= 2, "code={code}");
+    }
+
+    #[test]
+    fn matvec_runs_all_blocks() {
+        let p = MacroParams::paper();
+        let cfg = OpConfig::new(2, 1, 4).with_units(1);
+        let mut m = CimMacro::new(p.clone(), 9);
+        m.noise = false;
+        let rows = cfg.active_rows(&p);
+        let x = vec![1u8; rows];
+        let out = m.matvec(&x, 16, &cfg);
+        assert_eq!(out.len(), 16);
+        assert!(out.iter().all(|&c| c < 16));
+    }
+
+    #[test]
+    fn load_weights_rejects_unrepresentable() {
+        let p = MacroParams::paper();
+        let mut m = CimMacro::ideal(p);
+        // 0 is even → not representable with r_w=1 (±1 only).
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            m.load_weights(&[0], 1, 1);
+        }));
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn weight_encoding_roundtrip() {
+        let p = MacroParams::paper();
+        let mut m = CimMacro::ideal(p.clone());
+        let w = [-15, -3, 1, 15, 7, -7, 5, -1];
+        m.load_weights(&w, 2, 4); // 8/2 = 4 rows × 2 outputs
+        // Decode back from bits and compare.
+        for row in 0..4 {
+            for oc in 0..2 {
+                let mut b = 0u32;
+                for k in 0..4 {
+                    b |= (m.cells.weight(row, oc * 4 + k) as u32) << k;
+                }
+                let v = 2 * b as i32 - 15;
+                assert_eq!(v, w[row * 2 + oc]);
+            }
+        }
+    }
+
+    #[test]
+    fn noisy_die_stays_close_to_golden() {
+        let p = MacroParams::paper();
+        let cfg = OpConfig::new(4, 1, 8).with_units(4).with_gamma(1.0);
+        let mut rng = Rng::new(123);
+        let rows = cfg.active_rows(&p);
+        let x = fill_inputs(&mut rng, rows, 4);
+        let w = fill_weights(&mut rng, rows, 1);
+
+        let mut die = CimMacro::new(p.clone(), 4242);
+        die.load_weights(&w, 1, 1);
+        die.calibrate_all();
+        let want = CimMacro::ideal_code(&p, &x, &w, &cfg) as f64;
+        let err: Vec<f64> = (0..30)
+            .map(|_| die.block_op(0, &x, &cfg) as f64 - want)
+            .collect();
+        let rms = crate::util::stats::rms(&err);
+        assert!(rms < 4.0, "rms={rms} LSB (post-cal should be few-LSB)");
+    }
+
+    #[test]
+    fn gamma_expands_output_range_for_narrow_dp() {
+        // The whole point of the DSCI ADC: a narrow DP distribution maps to
+        // few codes at γ=1 and many at γ=8.
+        let p = MacroParams::paper();
+        let mut rng = Rng::new(5);
+        let mut spread = |gamma: f64| {
+            let cfg = OpConfig::new(4, 1, 8).with_units(2).with_gamma(gamma);
+            let rows = cfg.active_rows(&p);
+            let mut m = golden_macro(&p);
+            let w = fill_weights(&mut rng, rows, 1);
+            m.load_weights(&w, 1, 1);
+            let mut codes = Vec::new();
+            for _ in 0..40 {
+                let x = fill_inputs(&mut rng, rows, 4);
+                codes.push(m.block_op(0, &x, &cfg) as f64);
+            }
+            crate::util::stats::std(&codes)
+        };
+        let s1 = spread(1.0);
+        let s8 = spread(8.0);
+        assert!(s8 > 3.0 * s1, "σ(γ=1)={s1} σ(γ=8)={s8}");
+    }
+}

@@ -1,0 +1,255 @@
+//! Multi-bit input-and-weight (MBIW) accumulation unit (§III.C, Fig. 9).
+//!
+//! The MBIW realizes the paper's input-serial, weight-parallel scheme with
+//! nothing but capacitive charge sharing:
+//!
+//! * **Input accumulation** (phases 1–2): the DP result of each input
+//!   bitplane is merged into the accumulation capacitance C_acc with
+//!   attenuation α_mb ≈ ½ per cycle, so after r_in LSB-first cycles the
+//!   bitplanes carry binary weights (Eq. 5):
+//!   `V_acc = V_DDL + α_eff·V_DDL · Σ_k (½)^(r_in−k) · S_k`.
+//! * **Weight accumulation** (phases 3–4): the LSB column self-weights by
+//!   sharing with a V_DDL-precharged node, then adjacent columns share
+//!   pairwise LSB→MSB, producing Eq. 6's
+//!   `V_MBIW = Σ_k (½)^(r_w−k) · V_DPL,k` on the MSB column.
+//!
+//! Non-idealities modelled (Fig. 10): leakage droop of V_acc over the
+//! accumulation window, and signal-dependent charge injection from the
+//! MOS transmission gates, whose error depends on both the incoming DP
+//! voltage and the previously stored accumulation voltage (the 2-D map of
+//! Fig. 10c with its zero-error curve).
+
+use crate::config::params::MacroParams;
+
+/// Leakage-induced voltage error on the accumulation node after holding
+/// `v_acc` for `t_hold` seconds (Fig. 10a). The droop pulls the node back
+/// toward V_DDL; it is negligible near mid-rail and grows exponentially
+/// toward the rails (subthreshold conduction of the access devices).
+pub fn leakage_error(p: &MacroParams, v_acc: f64, t_hold: f64) -> f64 {
+    let dv = v_acc - p.supply.vddl;
+    let v_t = 0.05; // subthreshold slope-ish fitting constant [V]
+    let i = p.i_leak0 * p.corner.leakage() * ((dv.abs() / v_t).exp() - 1.0);
+    -dv.signum() * i * t_hold / p.c_acc()
+}
+
+/// Charge-injection error added to V_acc when the ACC_in transmission gate
+/// opens after a share (Fig. 10b/c). The gate's channel charge and its
+/// gate-drain overlap capacitance split as a function of both terminal
+/// voltages, giving an error surface over (V_in, V_acc_prev) whose
+/// zero-error locus is the curve highlighted in Fig. 10c.
+pub fn injection_error(p: &MacroParams, v_in: f64, v_acc_prev: f64) -> f64 {
+    let v_mid = p.supply.vddh / 2.0;
+    let di = v_in - v_mid;
+    let da = v_acc_prev - v_mid;
+    // Corner dependence: Vt shift changes the channel charge at switch-off.
+    let vt_gain = 1.0 + p.corner.vt_shift() / 0.12;
+    // Linear terms of opposite sign + a bilinear term produce the curved
+    // zero-error locus; coefficients fitted so the worst case stays within
+    // ±1 LSB of an 8b ADC (paper: "reaches up to +/-1 LSB").
+    p.inj_k * vt_gain * (di - 0.75 * da + 2.2 * di * da / 0.4)
+}
+
+/// One input-accumulation share: merge the DP-phase voltage `v_dp` into the
+/// stored `v_acc_prev` with ratio α_mb, including charge injection (and
+/// leaving leakage to be applied once over the full window by the caller).
+pub fn accumulate_input(p: &MacroParams, v_acc_prev: f64, v_dp: f64) -> f64 {
+    let a = p.alpha_mb();
+    let shared = a * v_acc_prev + (1.0 - a) * v_dp;
+    shared + injection_error(p, v_dp, v_acc_prev)
+}
+
+/// Full input-serial accumulation over `r_in` bitplane DP voltages
+/// (`v_dp[k]`, k = 0 is the LSB), starting from the V_DDL precharge.
+/// Binary inputs (r_in = 1) bypass the accumulator entirely (§III.C).
+pub fn input_accumulation(p: &MacroParams, v_dp: &[f64]) -> f64 {
+    assert!(!v_dp.is_empty() && v_dp.len() <= 8);
+    if v_dp.len() == 1 {
+        return v_dp[0];
+    }
+    let mut v_acc = p.supply.vddl;
+    for &v in v_dp {
+        v_acc = accumulate_input(p, v_acc, v);
+    }
+    // Leakage integrates over the whole multi-bit window.
+    v_acc + leakage_error(p, v_acc, p.t_leak)
+}
+
+/// Ideal input accumulation (α_mb exactly ½, no injection, no leakage) —
+/// the golden reference for Eq. 5.
+pub fn input_accumulation_ideal(vddl: f64, v_dp: &[f64]) -> f64 {
+    if v_dp.len() == 1 {
+        return v_dp[0];
+    }
+    let mut v_acc = vddl;
+    for &v in v_dp {
+        v_acc = 0.5 * v_acc + 0.5 * v;
+    }
+    v_acc
+}
+
+/// Weight accumulation across a block of `r_w` adjacent columns
+/// (phases 3–4). `v_cols[k]` is the accumulated voltage of the column
+/// holding weight bit k (k = 0 is the LSB). Returns the MSB-column DPL
+/// voltage implementing Eq. 6. Each share injects a (small) gate error.
+pub fn weight_accumulation(p: &MacroParams, v_cols: &[f64]) -> f64 {
+    assert!(!v_cols.is_empty() && v_cols.len() <= 4);
+    if v_cols.len() == 1 {
+        return v_cols[0];
+    }
+    // Phase 3: LSB self-weighting against a V_DDL-precharged node.
+    let mut v = 0.5 * (v_cols[0] + p.supply.vddl);
+    v += injection_error(p, v_cols[0], p.supply.vddl) * 0.5;
+    // Phase 4: pairwise sharing LSB → MSB.
+    for &v_next in &v_cols[1..] {
+        let prev = v;
+        v = 0.5 * (v + v_next);
+        v += injection_error(p, v_next, prev) * 0.5;
+    }
+    v
+}
+
+/// Ideal Eq. 6: V = Σ_k (½)^(r_w−k) V_k, plus the V_DDL DC term that keeps
+/// the mid-rail reference in place.
+pub fn weight_accumulation_ideal(vddl: f64, v_cols: &[f64]) -> f64 {
+    let r_w = v_cols.len() as u32;
+    if r_w == 1 {
+        return v_cols[0];
+    }
+    let mut v = vddl;
+    for (k, &vk) in v_cols.iter().enumerate() {
+        let w = 0.5f64.powi((r_w - k as u32) as i32);
+        v += w * (vk - vddl);
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::params::{Corner, MacroParams};
+
+    fn quiet(p: &MacroParams) -> MacroParams {
+        // Disable non-idealities to isolate the ideal recurrences.
+        let mut q = p.clone();
+        q.inj_k = 0.0;
+        q.i_leak0 = 0.0;
+        q
+    }
+
+    #[test]
+    fn ideal_input_accumulation_matches_closed_form() {
+        // After r_in shares, bitplane k carries weight (½)^(r_in−k) and the
+        // DC stays at V_DDL: V = V_DDL + Σ (½)^(r_in−k) (v_k − V_DDL).
+        let vddl = 0.4;
+        let v_dp = [0.45, 0.38, 0.52, 0.41];
+        let got = input_accumulation_ideal(vddl, &v_dp);
+        let r_in = v_dp.len() as u32;
+        let want: f64 = vddl
+            + v_dp
+                .iter()
+                .enumerate()
+                .map(|(k, &v)| 0.5f64.powi((r_in - k as u32) as i32) * (v - vddl))
+                .sum::<f64>();
+        assert!((got - want).abs() < 1e-12, "got={got} want={want}");
+    }
+
+    #[test]
+    fn quiet_model_equals_ideal_up_to_alpha_imbalance() {
+        let p = quiet(&MacroParams::paper());
+        let v_dp = [0.42, 0.39, 0.47, 0.36, 0.44, 0.40, 0.41, 0.43];
+        let got = input_accumulation(&p, &v_dp);
+        let ideal = input_accumulation_ideal(p.supply.vddl, &v_dp);
+        // α_mb deviates from ½ by <1% (§III.C) → small but nonzero gap.
+        assert!((got - ideal).abs() < 2e-3, "got={got} ideal={ideal}");
+    }
+
+    #[test]
+    fn binary_input_bypasses_accumulator() {
+        let p = MacroParams::paper();
+        assert_eq!(input_accumulation(&p, &[0.47]), 0.47);
+    }
+
+    #[test]
+    fn leakage_negligible_midrail_grows_at_extremes() {
+        let p = MacroParams::paper().with_corner(Corner::Ff);
+        let near = leakage_error(&p, p.supply.vddl + 0.01, p.t_leak).abs();
+        let far = leakage_error(&p, p.supply.vddl + 0.20, p.t_leak).abs();
+        assert!(near < 10e-6, "near={near}");
+        assert!(far > 20.0 * near, "far={far} near={near}");
+        // Droop pulls back toward V_DDL.
+        assert!(leakage_error(&p, p.supply.vddl + 0.2, p.t_leak) < 0.0);
+        assert!(leakage_error(&p, p.supply.vddl - 0.2, p.t_leak) > 0.0);
+    }
+
+    #[test]
+    fn injection_error_bounded_by_one_lsb() {
+        // Paper: accumulation error reaches up to ±1 LSB of an 8b ADC.
+        let lsb = MacroParams::paper().adc_lsb(8, 1.0);
+        for corner in Corner::ALL {
+            let p = MacroParams::paper().with_corner(corner);
+            let mut worst = 0.0f64;
+            for i in 0..20 {
+                for a in 0..20 {
+                    let v_in = 0.2 + 0.4 * i as f64 / 19.0;
+                    let v_acc = 0.2 + 0.4 * a as f64 / 19.0;
+                    worst = worst.max(injection_error(&p, v_in, v_acc).abs());
+                }
+            }
+            assert!(worst < 1.2 * lsb, "{corner:?}: worst={worst} lsb={lsb}");
+            assert!(worst > 0.05 * lsb, "{corner:?}: error unrealistically small");
+        }
+    }
+
+    #[test]
+    fn injection_zero_error_curve_exists() {
+        // Fig. 10c: a locus of (v_in, v_acc) pairs with zero error crosses
+        // the map — check a sign change along a diagonal sweep.
+        let p = MacroParams::paper();
+        let mut signs = Vec::new();
+        for t in 0..40 {
+            let v_in = 0.25 + 0.3 * t as f64 / 39.0;
+            let v_acc = 0.55 - 0.3 * t as f64 / 39.0;
+            signs.push(injection_error(&p, v_in, v_acc) > 0.0);
+        }
+        assert!(signs.iter().any(|&s| s) && signs.iter().any(|&s| !s));
+    }
+
+    #[test]
+    fn weight_accumulation_matches_eq6() {
+        let p = quiet(&MacroParams::paper());
+        let vddl = p.supply.vddl;
+        let v_cols = [0.43, 0.37, 0.45, 0.50];
+        let got = weight_accumulation(&p, &v_cols);
+        let want = weight_accumulation_ideal(vddl, &v_cols);
+        assert!((got - want).abs() < 1e-12, "got={got} want={want}");
+        // MSB dominates: perturbing the MSB moves the output 4× more than
+        // perturbing weight bit 1 (2^2 ratio at r_w = 4... check ratios).
+        let mut v2 = v_cols;
+        v2[3] += 0.01;
+        let d_msb = weight_accumulation(&p, &v2) - got;
+        let mut v3 = v_cols;
+        v3[1] += 0.01;
+        let d_b1 = weight_accumulation(&p, &v3) - got;
+        assert!((d_msb / d_b1 - 4.0).abs() < 1e-9, "ratio={}", d_msb / d_b1);
+    }
+
+    #[test]
+    fn single_column_weight_is_identity() {
+        let p = MacroParams::paper();
+        assert_eq!(weight_accumulation(&p, &[0.44]), 0.44);
+    }
+
+    #[test]
+    fn range_compression_is_halved_per_pairwise_share() {
+        // Pairwise sharing (vs all-at-once) preserves the MSB at weight ½;
+        // verify the MSB weight equals 0.5 regardless of r_w.
+        let p = quiet(&MacroParams::paper());
+        for r_w in 2..=4 {
+            let base = vec![p.supply.vddl; r_w];
+            let mut bumped = base.clone();
+            bumped[r_w - 1] += 0.1;
+            let d = weight_accumulation(&p, &bumped) - weight_accumulation(&p, &base);
+            assert!((d - 0.05).abs() < 1e-12, "r_w={r_w} d={d}");
+        }
+    }
+}

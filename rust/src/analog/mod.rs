@@ -1,0 +1,18 @@
+//! Circuit-behavioral models of the IMAGINE analog core (§III).
+//!
+//! Module map (one file per physical block):
+//! * [`bitcell`] — 10T1C array, weight storage, per-die C_c mismatch;
+//! * [`dpl`] — dot-product-line charge sharing, split topologies, settling;
+//! * [`mbiw`] — multi-bit input-and-weight accumulator (Eq. 5–6);
+//! * [`sense_amp`] — StrongArm comparator with offset/noise;
+//! * [`ladder`] — gain-adaptive resistive reference (ABN zoom);
+//! * [`adc`] — DSCI SAR ADC with ABN offset + calibration (Eq. 7);
+//! * [`macro_model`] — the full 1152×256 macro composing all of the above.
+
+pub mod adc;
+pub mod bitcell;
+pub mod dpl;
+pub mod ladder;
+pub mod macro_model;
+pub mod mbiw;
+pub mod sense_amp;

@@ -1,0 +1,117 @@
+//! StrongArm sense amplifier model (§III.E, Fig. 14).
+//!
+//! The SAR's comparator is a low-kickback StrongArm latch with a
+//! minimum-length input pair. Minimum-length devices keep the kickback on
+//! the floating DPL below 0.03 mV but worsen mismatch: the pre-layout
+//! offset is σ = 20 mV (3σ = 60 mV), degraded a further 75% post-layout
+//! by resizing constraints and proximity effects (σ ≈ 35 mV). On top of
+//! the static offset each decision carries temporal noise.
+
+use crate::config::params::MacroParams;
+use crate::util::rng::Rng;
+
+/// One instantiated comparator: static offset drawn at "fabrication",
+/// temporal noise drawn per decision.
+#[derive(Clone, Debug)]
+pub struct SenseAmp {
+    /// Static input-referred offset [V] (per-die, per-column).
+    pub offset: f64,
+    /// Temporal decision-noise sigma [V].
+    pub noise_sigma: f64,
+    /// Kickback injected on the DPL per decision [V] (bounded < 0.03 mV).
+    pub kickback: f64,
+}
+
+impl SenseAmp {
+    /// Draw a post-layout instance.
+    pub fn sample(p: &MacroParams, rng: &mut Rng) -> Self {
+        Self {
+            offset: rng.normal(0.0, p.sa_sigma()),
+            noise_sigma: p.sa_noise,
+            kickback: 0.025e-3,
+        }
+    }
+
+    /// Draw a pre-layout instance (Fig. 14b comparison).
+    pub fn sample_prelayout(p: &MacroParams, rng: &mut Rng) -> Self {
+        Self {
+            offset: rng.normal(0.0, p.sa_sigma_prelayout),
+            noise_sigma: p.sa_noise,
+            kickback: 0.025e-3,
+        }
+    }
+
+    /// Ideal comparator (tests, golden model).
+    pub fn ideal() -> Self {
+        Self { offset: 0.0, noise_sigma: 0.0, kickback: 0.0 }
+    }
+
+    /// Compare `v_plus` against `v_minus`. `rng = None` disables temporal
+    /// noise (deterministic mode used by the golden-model tests).
+    #[inline]
+    pub fn decide(&self, v_plus: f64, v_minus: f64, rng: Option<&mut Rng>) -> bool {
+        let noise = match rng {
+            Some(r) if self.noise_sigma > 0.0 => r.normal(0.0, self.noise_sigma),
+            _ => 0.0,
+        };
+        v_plus - v_minus + self.offset + noise > 0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::params::MacroParams;
+    use crate::util::stats;
+
+    #[test]
+    fn ideal_comparator_is_exact() {
+        let sa = SenseAmp::ideal();
+        assert!(sa.decide(0.5, 0.4, None));
+        assert!(!sa.decide(0.4, 0.5, None));
+    }
+
+    #[test]
+    fn offset_shifts_threshold() {
+        let sa = SenseAmp { offset: 0.02, noise_sigma: 0.0, kickback: 0.0 };
+        // With +20 mV offset, an input 10 mV below threshold still trips.
+        assert!(sa.decide(0.39, 0.40, None));
+        assert!(!sa.decide(0.37, 0.40, None));
+    }
+
+    #[test]
+    fn postlayout_sigma_75pct_worse() {
+        let p = MacroParams::paper();
+        let mut rng = Rng::new(42);
+        let pre: Vec<f64> = (0..4000)
+            .map(|_| SenseAmp::sample_prelayout(&p, &mut rng).offset)
+            .collect();
+        let post: Vec<f64> = (0..4000)
+            .map(|_| SenseAmp::sample(&p, &mut rng).offset)
+            .collect();
+        let s_pre = stats::std(&pre);
+        let s_post = stats::std(&post);
+        assert!((s_pre - 0.020).abs() < 0.002, "pre σ={s_pre}");
+        assert!((s_post / s_pre - 1.75).abs() < 0.1, "ratio={}", s_post / s_pre);
+    }
+
+    #[test]
+    fn temporal_noise_randomizes_marginal_decisions() {
+        let p = MacroParams::paper();
+        let sa = SenseAmp { offset: 0.0, noise_sigma: p.sa_noise, kickback: 0.0 };
+        let mut rng = Rng::new(7);
+        let highs = (0..2000)
+            .filter(|_| sa.decide(0.4000, 0.4000, Some(&mut rng)))
+            .count();
+        // Exactly-at-threshold input should flip ~50/50.
+        assert!((900..1100).contains(&highs), "highs={highs}");
+    }
+
+    #[test]
+    fn kickback_below_paper_bound() {
+        let p = MacroParams::paper();
+        let mut rng = Rng::new(1);
+        let sa = SenseAmp::sample(&p, &mut rng);
+        assert!(sa.kickback < 0.03e-3);
+    }
+}

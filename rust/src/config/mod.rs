@@ -1,0 +1,6 @@
+//! Configuration: physical macro parameters, supplies, corners, and the
+//! accelerator/runtime configuration surface.
+
+pub mod params;
+
+pub use params::{Corner, DplTopology, MacroParams, Supply};

@@ -1,0 +1,463 @@
+//! Physical and architectural parameters of the IMAGINE macro.
+//!
+//! Every constant here is traceable to a number stated in the paper
+//! (section references in comments). The [`MacroParams`] struct is the
+//! single source of truth shared by the analog simulator, the energy
+//! model and the dataflow model; experiments mutate copies of it to
+//! sweep supplies, timings and corners.
+
+/// Process corner of the simulated die. The measured CERBERUS sample sits
+/// in the slow corner (§V.A: "measured slow chip corner"), which is why
+/// several measurement artefacts (zero-DP INL peak, clustered-weight
+/// distortion) appear; the simulator reproduces them under `Ss`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Corner {
+    /// Typical-typical.
+    Tt,
+    /// Fast nMOS / fast pMOS.
+    Ff,
+    /// Slow nMOS / slow pMOS (the measured sample).
+    Ss,
+    /// Fast n / slow p.
+    Fs,
+    /// Slow n / fast p.
+    Sf,
+}
+
+impl Corner {
+    pub const ALL: [Corner; 5] = [Corner::Tt, Corner::Ff, Corner::Ss, Corner::Fs, Corner::Sf];
+
+    /// Transistor drive-strength multiplier (affects settling time
+    /// constants of transmission gates and ladder buffers).
+    pub fn drive(self) -> f64 {
+        match self {
+            Corner::Tt => 1.00,
+            Corner::Ff => 1.22,
+            Corner::Ss => 0.80,
+            Corner::Fs => 1.05,
+            Corner::Sf => 0.93,
+        }
+    }
+
+    /// Subthreshold leakage multiplier (affects V_acc droop, Fig. 10a).
+    pub fn leakage(self) -> f64 {
+        match self {
+            Corner::Tt => 1.0,
+            Corner::Ff => 4.0,
+            Corner::Ss => 0.25,
+            Corner::Fs => 2.0,
+            Corner::Sf => 0.5,
+        }
+    }
+
+    /// Threshold-voltage shift [V] (affects charge injection, Fig. 10b).
+    pub fn vt_shift(self) -> f64 {
+        match self {
+            Corner::Tt => 0.0,
+            Corner::Ff => -0.040,
+            Corner::Ss => 0.040,
+            Corner::Fs => -0.015,
+            Corner::Sf => 0.015,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Corner::Tt => "TT",
+            Corner::Ff => "FF",
+            Corner::Ss => "SS",
+            Corner::Fs => "FS",
+            Corner::Sf => "SF",
+        }
+    }
+}
+
+/// Supply configuration. The paper operates the analog core between a low
+/// rail (V_DDL, DPL precharge / input drivers) and a high rail (V_DDH,
+/// ADC references and digital periphery); nominal 0.4/0.8 V with a
+/// low-power point at 0.3/0.6 V (§III.A, §V).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Supply {
+    pub vddl: f64,
+    pub vddh: f64,
+}
+
+impl Supply {
+    pub const NOMINAL: Supply = Supply { vddl: 0.4, vddh: 0.8 };
+    pub const LOW_POWER: Supply = Supply { vddl: 0.3, vddh: 0.6 };
+
+    pub fn new(vddl: f64, vddh: f64) -> Self {
+        Supply { vddl, vddh }
+    }
+
+    /// Logic-delay scale factor relative to nominal (alpha-power law fit;
+    /// ~2.8× slower at 0.6 V than 0.8 V in this 22nm FD-SOI flavour).
+    pub fn delay_scale(&self) -> f64 {
+        let x = self.vddh / 0.8;
+        x.powf(-2.4)
+    }
+
+    /// Dynamic-energy scale ∝ V².
+    pub fn energy_scale(&self) -> f64 {
+        (self.vddh / 0.8).powi(2)
+    }
+}
+
+/// Boltzmann constant × 300 K [J].
+pub const KT: f64 = 1.380649e-23 * 300.0;
+
+/// All physical/architectural parameters of the CIM-SRAM macro.
+#[derive(Clone, Debug)]
+pub struct MacroParams {
+    // ---- array geometry (§III.A) ----
+    /// Total DP rows (1152 = 32 units × 36 rows).
+    pub n_rows: usize,
+    /// Rows per DP unit (3×3 kernel × C_in=4 minimum → 36).
+    pub rows_per_unit: usize,
+    /// Total columns (256 = 64 blocks × 4 columns).
+    pub n_cols: usize,
+    /// Columns per MBIW block (max 4b weights).
+    pub cols_per_block: usize,
+
+    // ---- capacitances [F] ----
+    /// Bitcell coupling MoM capacitance C_c = 0.7 fF (§III.B).
+    pub c_c: f64,
+    /// Per-row parasitic routing capacitance on the DPL [F/row].
+    pub c_p_per_row: f64,
+    /// Total non-DP load on the DPL: MBIW + ADC ≈ 40 fF (§III.D).
+    pub c_load: f64,
+    /// Share of `c_load` on the ADC side (C_adc; the rest is C_mb).
+    pub c_adc_frac: f64,
+    /// Extra global-DPL parasitics for the *parallel*-split topology [F].
+    pub c_p_global: f64,
+    /// SAR array capacitance C_sar = 33 C_c (§III.D, Eq. 7).
+    pub c_sar: f64,
+    /// SAR-side parasitics C_p,sar [F].
+    pub c_p_sar: f64,
+
+    // ---- timing [s] ----
+    /// Single-bit DP duration (5 ns nominal, ±1 ns configurable; §III.B).
+    pub t_dp: f64,
+    /// Elmore base constant of the serial-split DPL chain [s]: unit `u`
+    /// settles with τ_u = tau_tg·(u+1)²·m(V)/drive (RC-diffusion along the
+    /// daisy-chained transmission gates).
+    pub tau_tg: f64,
+    /// MBIW accumulate/share phase duration [s].
+    pub t_acc: f64,
+    /// Single SAR decision+update cycle [s].
+    pub t_sar: f64,
+    /// Ladder settling before conversion (5 ns, 1 mA; §III.D).
+    pub t_ladder: f64,
+    /// Leakage integration window for a full 8b accumulation (Fig. 10a).
+    pub t_leak: f64,
+
+    // ---- noise / mismatch ----
+    /// kT/C noise at the bitcell, 2.4 mV rms (§III.B).
+    pub v_noise_cell: f64,
+    /// StrongArm SA offset sigma pre-layout [V] (3σ = 60 mV ⇒ σ = 20 mV).
+    pub sa_sigma_prelayout: f64,
+    /// Post-layout degradation of SA sigma (+75%, §III.E).
+    pub sa_postlayout_factor: f64,
+    /// SA temporal (decision) noise sigma [V].
+    pub sa_noise: f64,
+    /// Relative mismatch sigma of ladder taps (distorts S-IN levels).
+    pub ladder_mismatch: f64,
+    /// Relative MoM capacitor mismatch sigma (device-to-device).
+    pub cap_mismatch: f64,
+
+    // ---- ADC / ABN (§III.D–E) ----
+    /// ABN offset DAC bits (5b, ±30 mV on the DPL).
+    pub abn_offset_bits: u32,
+    /// ABN offset full range [V] (one side).
+    pub abn_offset_range: f64,
+    /// Calibration DAC bits (7b array + sign side; 256 signed levels).
+    pub cal_bits: u32,
+    /// Calibration resolution 0.47 mV (§III.E). The 4×C_c MSB device gives
+    /// a ±60 mV range covering the 3σ pre-layout SA offset.
+    pub cal_step: f64,
+    /// Minimum ladder voltage step = V_DDH / 32 (§III.D).
+    pub ladder_min_step_div: f64,
+    /// Maximum MSB-array gain (16; beyond that LSB info is lost, §III.D).
+    pub max_msb_gain: f64,
+
+    // ---- leakage / charge injection ----
+    /// Relative sizing imbalance of C_acc vs its DPL load (<1%, §III.C) —
+    /// the source of α_mb's deviation from exactly ½.
+    pub alpha_mb_imbalance: f64,
+    /// Leakage current scale on the accumulation node [A] at nominal.
+    pub i_leak0: f64,
+    /// Charge injected per transmission-gate toggle, as charge ΔQ = k·C_c·V
+    /// (dimensionless k; fitted so peak error ≈ 1 LSB @8b, Fig. 10b).
+    pub inj_k: f64,
+
+    // ---- environment ----
+    pub supply: Supply,
+    pub corner: Corner,
+    /// DPL topology (baseline / parallel-split / serial-split).
+    pub topology: DplTopology,
+
+    // ---- area [mm²], density (§V, Fig. 16) ----
+    /// Bitcell area 0.44 µm².
+    pub bitcell_area_um2: f64,
+    /// Macro area share of total accelerator (53% of 0.373 mm²).
+    pub macro_area_mm2: f64,
+    pub accel_area_mm2: f64,
+}
+
+/// DPL splitting strategy (§III.B, Fig. 6a).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DplTopology {
+    /// Single DPL spanning all 1152 rows; α = C_c / (N_rows·C_c + C_p + C_L).
+    Baseline,
+    /// Local DPL per unit + global DPL through switches; extra C_p,glob.
+    ParallelSplit,
+    /// Units daisy-chained with series switches (the fabricated choice).
+    SerialSplit,
+}
+
+impl Default for MacroParams {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
+impl MacroParams {
+    /// Parameters of the fabricated macro, as stated in the paper.
+    pub fn paper() -> Self {
+        let c_c = 0.7e-15;
+        MacroParams {
+            n_rows: 1152,
+            rows_per_unit: 36,
+            n_cols: 256,
+            cols_per_block: 4,
+
+            c_c,
+            // Fitted so baseline C_p ≈ 0.15×(N_dp·C_c) — metal routing over
+            // 1152 rows; contributes to the swing compression of Fig. 8a.
+            c_p_per_row: 0.105e-15,
+            c_load: 40e-15,
+            c_adc_frac: 0.58, // ADC dominates C_L (§III.B)
+            c_p_global: 35e-15,
+            c_sar: 33.0 * c_c,
+            c_p_sar: 6.0 * c_c,
+
+            t_dp: 5e-9,
+            tau_tg: 1.3e-12,
+            t_acc: 2e-9,
+            t_sar: 2.5e-9,
+            t_ladder: 5e-9,
+            t_leak: 8.0 * (5e-9 + 2e-9),
+
+            v_noise_cell: 2.4e-3,
+            sa_sigma_prelayout: 0.020,
+            sa_postlayout_factor: 1.75,
+            sa_noise: 0.45e-3,
+            ladder_mismatch: 0.004,
+            cap_mismatch: 0.002,
+
+            abn_offset_bits: 5,
+            abn_offset_range: 0.030,
+            cal_bits: 7,
+            cal_step: 0.47e-3,
+            ladder_min_step_div: 32.0,
+            max_msb_gain: 16.0,
+
+            alpha_mb_imbalance: 0.008,
+            i_leak0: 2.2e-12,
+            inj_k: 0.0035,
+
+            supply: Supply::NOMINAL,
+            corner: Corner::Tt,
+            topology: DplTopology::SerialSplit,
+
+            bitcell_area_um2: 0.44,
+            macro_area_mm2: 0.373 * 0.53,
+            accel_area_mm2: 0.373,
+        }
+    }
+
+    /// The measured chip: slow corner, nominal supplies.
+    pub fn measured_chip() -> Self {
+        MacroParams { corner: Corner::Ss, ..Self::paper() }
+    }
+
+    pub fn with_supply(mut self, s: Supply) -> Self {
+        self.supply = s;
+        self
+    }
+
+    pub fn with_corner(mut self, c: Corner) -> Self {
+        self.corner = c;
+        self
+    }
+
+    pub fn with_topology(mut self, t: DplTopology) -> Self {
+        self.topology = t;
+        self
+    }
+
+    /// Number of DP units (32).
+    pub fn n_units(&self) -> usize {
+        self.n_rows / self.rows_per_unit
+    }
+
+    /// Number of MBIW column blocks (64).
+    pub fn n_blocks(&self) -> usize {
+        self.n_cols / self.cols_per_block
+    }
+
+    /// Rows activated for a given number of connected units.
+    pub fn rows_for_units(&self, units: usize) -> usize {
+        units.min(self.n_units()) * self.rows_per_unit
+    }
+
+    /// Units needed for `c_in` input channels with a 3×3 kernel
+    /// (one unit = 9 taps × 4 channels).
+    pub fn units_for_cin(&self, c_in: usize) -> usize {
+        (c_in).div_ceil(4).min(self.n_units()).max(1)
+    }
+
+    /// MBIW-side share of the DPL load, C_mb [F].
+    pub fn c_mb(&self) -> f64 {
+        self.c_load * (1.0 - self.c_adc_frac)
+    }
+
+    /// ADC-side share of the DPL load, C_adc [F].
+    pub fn c_adc(&self) -> f64 {
+        self.c_load * self.c_adc_frac
+    }
+
+    /// Accumulation capacitance, sized to C_mb + C_adc (§III.C).
+    pub fn c_acc(&self) -> f64 {
+        self.c_load
+    }
+
+    /// Multi-bit attenuation factor α_mb ≈ 1/2 (Eq. 5). The below-1%
+    /// imbalance comes from capacitor sizing granularity.
+    pub fn alpha_mb(&self) -> f64 {
+        let c_acc = self.c_acc() * (1.0 + self.alpha_mb_imbalance);
+        (self.c_mb() + self.c_adc()) / (c_acc + self.c_mb() + self.c_adc())
+    }
+
+    /// SAR attenuation α_adc = C_sar / (C_sar + C_p,sar) (Eq. 7).
+    pub fn alpha_adc(&self) -> f64 {
+        self.c_sar / (self.c_sar + self.c_p_sar)
+    }
+
+    /// Effective charge-injection attenuation α_eff (Eq. 4) for a given
+    /// number of *connected* DP rows (serial/parallel split) — or all
+    /// rows for the baseline topology.
+    pub fn alpha_eff(&self, connected_rows: usize) -> f64 {
+        let (n_dp, c_p_extra) = match self.topology {
+            DplTopology::Baseline => (self.n_rows, 0.0),
+            DplTopology::ParallelSplit => (connected_rows, self.c_p_global),
+            DplTopology::SerialSplit => (connected_rows, 0.0),
+        };
+        let c_p = self.c_p_per_row * n_dp as f64 + c_p_extra;
+        self.c_c / (n_dp as f64 * self.c_c + c_p + self.c_load)
+    }
+
+    /// kT/C thermal noise sigma [V] for capacitance `c` [F].
+    pub fn ktc_sigma(c: f64) -> f64 {
+        (KT / c).sqrt()
+    }
+
+    /// Post-layout SA offset sigma [V].
+    pub fn sa_sigma(&self) -> f64 {
+        self.sa_sigma_prelayout * self.sa_postlayout_factor
+    }
+
+    /// 8b ADC LSB referred to the DPL at unity gain [V] (Eq. 7):
+    /// LSB(γ) = α_adc · V_DDH / (γ · 2^(r_out − 1)).
+    pub fn adc_lsb(&self, r_out: u32, gamma: f64) -> f64 {
+        self.alpha_adc() * self.supply.vddh / (gamma * (1u64 << (r_out - 1)) as f64)
+    }
+
+    /// SRAM capacity in kB (1152×256 bits of weights).
+    pub fn capacity_kb(&self) -> f64 {
+        (self.n_rows * self.n_cols) as f64 / 8.0 / 1024.0
+    }
+
+    /// Macro density [kB/mm²] — paper: 187 kB/mm².
+    pub fn density_kb_mm2(&self) -> f64 {
+        self.capacity_kb() / self.macro_area_mm2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_matches_paper() {
+        let p = MacroParams::paper();
+        assert_eq!(p.n_units(), 32);
+        assert_eq!(p.n_blocks(), 64);
+        assert_eq!(p.rows_for_units(32), 1152);
+        assert_eq!(p.units_for_cin(4), 1);
+        assert_eq!(p.units_for_cin(128), 32);
+        assert_eq!(p.units_for_cin(5), 2);
+    }
+
+    #[test]
+    fn density_near_187_kb_per_mm2() {
+        let p = MacroParams::paper();
+        let d = p.density_kb_mm2();
+        assert!((d - 187.0).abs() < 15.0, "density={d}");
+    }
+
+    #[test]
+    fn alpha_mb_close_to_half() {
+        let p = MacroParams::paper();
+        let a = p.alpha_mb();
+        assert!((a - 0.5).abs() < 0.01, "alpha_mb={a}");
+    }
+
+    #[test]
+    fn alpha_eff_improves_with_fewer_connected_rows() {
+        let p = MacroParams::paper(); // serial split
+        let a_full = p.alpha_eff(1152);
+        let a_small = p.alpha_eff(36);
+        assert!(a_small > a_full * 5.0, "split should strongly boost alpha");
+        // Baseline cannot benefit.
+        let pb = p.clone().with_topology(DplTopology::Baseline);
+        assert!((pb.alpha_eff(36) - pb.alpha_eff(1152)).abs() < 1e-20);
+    }
+
+    #[test]
+    fn parallel_split_pays_global_parasitics() {
+        let p = MacroParams::paper();
+        let ser = p.clone().with_topology(DplTopology::SerialSplit);
+        let par = p.clone().with_topology(DplTopology::ParallelSplit);
+        assert!(ser.alpha_eff(36) > par.alpha_eff(36));
+    }
+
+    #[test]
+    fn ktc_noise_magnitude() {
+        // kT/C of 0.7 fF at 300K ≈ 2.4 mV — the paper's §III.B number.
+        let sigma = MacroParams::ktc_sigma(0.7e-15);
+        assert!((sigma - 2.4e-3).abs() < 0.3e-3, "sigma={sigma}");
+    }
+
+    #[test]
+    fn adc_lsb_scales_with_gamma_and_bits() {
+        let p = MacroParams::paper();
+        let l1 = p.adc_lsb(8, 1.0);
+        assert!((p.adc_lsb(8, 2.0) - l1 / 2.0).abs() < 1e-12);
+        assert!((p.adc_lsb(7, 1.0) - l1 * 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn corner_multipliers_ordered() {
+        assert!(Corner::Ff.drive() > Corner::Tt.drive());
+        assert!(Corner::Ss.drive() < Corner::Tt.drive());
+        assert!(Corner::Ff.leakage() > Corner::Ss.leakage());
+    }
+
+    #[test]
+    fn supply_scales() {
+        assert!(Supply::LOW_POWER.delay_scale() > 1.5);
+        assert!((Supply::NOMINAL.delay_scale() - 1.0).abs() < 1e-9);
+        assert!(Supply::LOW_POWER.energy_scale() < 0.6);
+    }
+}

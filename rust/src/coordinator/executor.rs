@@ -1,0 +1,343 @@
+//! Network executor — the characterization path.
+//!
+//! Runs a loaded [`NetworkModel`] image-by-image through either
+//!
+//! * [`Backend::Ideal`] — the closed-form macro contract (bit-exact with
+//!   the python oracle and the AOT HLO), or
+//! * [`Backend::Analog`] — the full circuit-behavioral [`CimMacro`]
+//!   simulator (mismatch, noise, corners, settling), which is what the
+//!   silicon-fidelity experiments use.
+//!
+//! Either way the executor books dataflow cycles and energy through the
+//! pipeline/energy models, so an end-to-end run reports accuracy *and*
+//! the accelerator-level throughput/efficiency — the CERBERUS measurement
+//! setup in software.
+
+
+use crate::analog::macro_model::CimMacro;
+use crate::config::params::MacroParams;
+use crate::coordinator::manifest::{Kind, Layer, NetworkModel, Pool};
+use crate::dataflow::im2col;
+use crate::dataflow::pipeline::LayerShape;
+use crate::energy::system::{layer_cost, LayerCost};
+use anyhow::Result;
+
+/// Execution backend.
+#[derive(Clone, Debug)]
+pub enum Backend {
+    /// Closed-form ideal contract (fast; bit-exact vs python/HLO).
+    Ideal,
+    /// Circuit-behavioral simulation of one fabricated die.
+    Analog {
+        seed: u64,
+        /// Temporal noise on/off.
+        noise: bool,
+        /// Run SA-offset calibration before inference (§III.E).
+        calibrate: bool,
+    },
+}
+
+/// Per-layer analog state: one simulated die per column pass.
+struct AnalogPass {
+    mac: CimMacro,
+    /// Output range [start, end) of this pass.
+    out_start: usize,
+    out_end: usize,
+}
+
+struct LayerState {
+    passes: Vec<AnalogPass>,
+}
+
+/// The executor.
+pub struct Executor {
+    pub model: NetworkModel,
+    pub params: MacroParams,
+    backend: Backend,
+    analog: Vec<LayerState>,
+    /// Accumulated dataflow cost over everything executed.
+    pub cost: LayerCost,
+    /// Images executed.
+    pub images: u64,
+}
+
+impl Executor {
+    pub fn new(model: NetworkModel, params: MacroParams, backend: Backend) -> Result<Self> {
+        let mut analog = Vec::new();
+        if let Backend::Analog { seed, noise, calibrate } = &backend {
+            for (li, layer) in model.layers.iter().enumerate() {
+                let outs_per_pass = params.n_blocks().min(256 / layer.cfg.r_w as usize);
+                let mut passes = Vec::new();
+                let mut start = 0;
+                while start < layer.out_features {
+                    let end = (start + outs_per_pass).min(layer.out_features);
+                    let mut mac = CimMacro::new(
+                        params.clone(),
+                        seed.wrapping_add(li as u64 * 1000 + start as u64),
+                    );
+                    mac.noise = *noise;
+                    // Load this pass's weight slice [rows × (end-start)].
+                    let n_out = end - start;
+                    let mut w = vec![0i32; layer.rows * n_out];
+                    for r in 0..layer.rows {
+                        for oc in 0..n_out {
+                            w[r * n_out + oc] =
+                                layer.w_phys[r * layer.out_features + start + oc];
+                        }
+                    }
+                    mac.load_weights(&w, n_out, layer.cfg.r_w);
+                    // Program the ABN offsets.
+                    for oc in 0..n_out {
+                        let adc_col =
+                            oc * params.cols_per_block + (layer.cfg.r_w as usize - 1);
+                        mac.adcs[adc_col].abn_offset_code = layer.beta[start + oc];
+                    }
+                    if *calibrate {
+                        mac.calibrate_all();
+                    }
+                    passes.push(AnalogPass { mac, out_start: start, out_end: end });
+                    start = end;
+                }
+                analog.push(LayerState { passes });
+            }
+        }
+        Ok(Self {
+            model,
+            params,
+            backend,
+            analog,
+            cost: LayerCost::default(),
+            images: 0,
+        })
+    }
+
+    /// Run one image (flattened input in its natural shape) → logits.
+    pub fn forward(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        let mut act = x.to_vec();
+        let mut shape: Vec<usize> = self.model.input_shape.clone();
+        let n_layers = self.model.layers.len();
+        for li in 0..n_layers {
+            let layer = self.model.layers[li].clone();
+            let (out, out_shape) = self.forward_layer(li, &layer, &act, &shape)?;
+            act = out;
+            shape = out_shape;
+        }
+        self.images += 1;
+        Ok(act)
+    }
+
+    fn forward_layer(
+        &mut self,
+        li: usize,
+        layer: &Layer,
+        act: &[f32],
+        shape: &[usize],
+    ) -> Result<(Vec<f32>, Vec<usize>)> {
+        let m = ((1u32 << layer.cfg.r_in) - 1) as f32;
+        let pad_val = (((1u32 << layer.cfg.r_in)) / 2) as u8; // (M+1)/2
+        let quant = |v: f32| -> u8 { (v / layer.a_scale).round().clamp(0.0, m) as u8 };
+
+        match layer.kind {
+            Kind::Dense => {
+                let xq: Vec<u8> = act.iter().map(|&v| quant(v)).collect();
+                let mut rows = xq;
+                rows.resize(layer.rows, pad_val);
+                let codes = self.run_macro(li, layer, &rows)?;
+                let out = self.post_adc(layer, &codes);
+                self.book_cost_dense(layer);
+                Ok((out, vec![layer.out_features]))
+            }
+            Kind::Conv3 => {
+                let (c, h, w) = (shape[0], shape[1], shape[2]);
+                debug_assert_eq!(c, layer.in_features);
+                let xq: Vec<u8> = act.iter().map(|&v| quant(v)).collect();
+                let (row_vecs, oh, ow) =
+                    im2col::im2col_image(&xq, c, h, w, layer.stride, pad_val);
+                // Pad each pixel's rows to the layer's physical row count.
+                let mut fmap = vec![0f32; layer.out_features * oh * ow];
+                for (pix, rv) in row_vecs.iter().enumerate() {
+                    let mut rows = rv.clone();
+                    rows.resize(layer.rows, pad_val);
+                    let codes = self.run_macro(li, layer, &rows)?;
+                    let vals = self.post_adc(layer, &codes);
+                    let (py, px) = (pix / ow, pix % ow);
+                    for (oc, &v) in vals.iter().enumerate() {
+                        fmap[oc * oh * ow + py * ow + px] = v;
+                    }
+                }
+                let (pooled, ph, pw) = apply_pool(&fmap, layer.out_features, oh, ow, layer.pool);
+                self.book_cost_conv(layer, oh, ow);
+                if layer.pool == Pool::Gap {
+                    Ok((pooled, vec![layer.out_features]))
+                } else {
+                    Ok((pooled, vec![layer.out_features, ph, pw]))
+                }
+            }
+        }
+    }
+
+    /// One macro invocation over all column passes → codes [out_features].
+    fn run_macro(&mut self, li: usize, layer: &Layer, rows: &[u8]) -> Result<Vec<u32>> {
+        match &self.backend {
+            Backend::Ideal => Ok(ideal_codes(&self.params, layer, rows)),
+            Backend::Analog { .. } => {
+                let state = &mut self.analog[li];
+                let mut codes = vec![0u32; layer.out_features];
+                for pass in state.passes.iter_mut() {
+                    let n_out = pass.out_end - pass.out_start;
+                    let out = pass.mac.matvec(rows, n_out, &layer.cfg);
+                    codes[pass.out_start..pass.out_end].copy_from_slice(&out);
+                }
+                Ok(codes)
+            }
+        }
+    }
+
+    fn post_adc(&self, layer: &Layer, codes: &[u32]) -> Vec<f32> {
+        let half = (1u32 << (layer.cfg.r_out - 1)) as f32;
+        codes
+            .iter()
+            .map(|&c| {
+                let v = (c as f32 - half) * layer.out_gain;
+                if layer.relu {
+                    v.max(0.0)
+                } else {
+                    v
+                }
+            })
+            .collect()
+    }
+
+    fn col_passes(&self, layer: &Layer) -> usize {
+        let outs_per_pass = self.params.n_blocks();
+        layer.out_features.div_ceil(outs_per_pass)
+    }
+
+    fn book_cost_dense(&mut self, layer: &Layer) {
+        let shape = LayerShape::fc(
+            layer.in_features,
+            layer.out_features,
+            layer.cfg.r_in,
+            layer.cfg.r_out,
+        );
+        let c = layer_cost(&self.params, &shape, &layer.cfg, self.col_passes(layer), true);
+        self.cost.accumulate(&c);
+    }
+
+    fn book_cost_conv(&mut self, layer: &Layer, oh: usize, ow: usize) {
+        let shape = LayerShape::conv(
+            layer.in_features,
+            layer.out_features,
+            layer.cfg.r_in,
+            layer.cfg.r_out,
+            oh,
+            ow,
+        );
+        let c = layer_cost(&self.params, &shape, &layer.cfg, self.col_passes(layer), true);
+        self.cost.accumulate(&c);
+    }
+}
+
+/// Closed-form codes (the python oracle's contract) for one row vector.
+pub fn ideal_codes(p: &MacroParams, layer: &Layer, rows: &[u8]) -> Vec<u32> {
+    let cfg = &layer.cfg;
+    let m = (1i64 << cfg.r_in) - 1;
+    let lsb = p.adc_lsb(cfg.r_out, cfg.gamma);
+    let beta_volts_per_code = 0.030 / 16.0;
+    let rin_eff = if cfg.r_in > 1 { cfg.r_in } else { 0 };
+    let rw_eff = if cfg.r_w > 1 { cfg.r_w } else { 0 };
+    let dv_scale = p.alpha_eff(layer.rows) * p.supply.vddl
+        / (1u64 << (rin_eff + rw_eff)) as f64;
+    let half = (1u64 << (cfg.r_out - 1)) as f64;
+    let top = (1u64 << cfg.r_out) as f64 - 1.0;
+
+    let mut out = Vec::with_capacity(layer.out_features);
+    for oc in 0..layer.out_features {
+        let mut dot: i64 = 0;
+        for (r, &x) in rows.iter().enumerate() {
+            let w = layer.w_phys[r * layer.out_features + oc] as i64;
+            dot += (2 * x as i64 - m) * w;
+        }
+        let dv = dv_scale * dot as f64
+            + layer.beta[oc] as f64 * beta_volts_per_code;
+        let code = (half + dv / lsb).floor().clamp(0.0, top);
+        out.push(code as u32);
+    }
+    out
+}
+
+/// Pooling on a CHW feature map.
+pub fn apply_pool(
+    fmap: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    pool: Pool,
+) -> (Vec<f32>, usize, usize) {
+    match pool {
+        Pool::None => (fmap.to_vec(), h, w),
+        Pool::Gap => {
+            let mut out = vec![0f32; c];
+            for ch in 0..c {
+                let s: f32 = fmap[ch * h * w..(ch + 1) * h * w].iter().sum();
+                out[ch] = s / (h * w) as f32;
+            }
+            (out, 1, 1)
+        }
+        Pool::Max2 | Pool::Avg2 => {
+            let (h2, w2) = ((h / 2) * 2, (w / 2) * 2);
+            let (ph, pw) = (h2 / 2, w2 / 2);
+            let mut out = vec![0f32; c * ph * pw];
+            for ch in 0..c {
+                for py in 0..ph {
+                    for px in 0..pw {
+                        let vals = [
+                            fmap[ch * h * w + (2 * py) * w + 2 * px],
+                            fmap[ch * h * w + (2 * py) * w + 2 * px + 1],
+                            fmap[ch * h * w + (2 * py + 1) * w + 2 * px],
+                            fmap[ch * h * w + (2 * py + 1) * w + 2 * px + 1],
+                        ];
+                        out[ch * ph * pw + py * pw + px] = if pool == Pool::Max2 {
+                            vals.iter().cloned().fold(f32::MIN, f32::max)
+                        } else {
+                            vals.iter().sum::<f32>() / 4.0
+                        };
+                    }
+                }
+            }
+            (out, ph, pw)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_max2_and_avg2() {
+        // 1 channel, 2×2.
+        let fmap = [1.0, 2.0, 3.0, 4.0];
+        let (mx, h, w) = apply_pool(&fmap, 1, 2, 2, Pool::Max2);
+        assert_eq!((h, w), (1, 1));
+        assert_eq!(mx, vec![4.0]);
+        let (av, _, _) = apply_pool(&fmap, 1, 2, 2, Pool::Avg2);
+        assert_eq!(av, vec![2.5]);
+    }
+
+    #[test]
+    fn pool_gap() {
+        let fmap = [1.0, 3.0, 5.0, 7.0, 2.0, 2.0, 2.0, 2.0];
+        let (g, _, _) = apply_pool(&fmap, 2, 2, 2, Pool::Gap);
+        assert_eq!(g, vec![4.0, 2.0]);
+    }
+
+    #[test]
+    fn pool_crops_odd_dims() {
+        // 3×3 map → 1×1 after max2 (floor crop), matching python.
+        let fmap: Vec<f32> = (0..9).map(|v| v as f32).collect();
+        let (mx, h, w) = apply_pool(&fmap, 1, 3, 3, Pool::Max2);
+        assert_eq!((h, w), (1, 1));
+        assert_eq!(mx, vec![4.0]); // max of the top-left 2×2
+    }
+}

@@ -1,0 +1,195 @@
+//! Model manifest + weight loading (the python compile path's exports).
+//!
+//! `<name>.manifest.json` describes the layer graph and per-layer macro
+//! configuration; `<name>.imgt` carries the physical weights (already
+//! padded to DP-unit multiples and permuted to macro row order), the 5b
+//! ABN offset codes and the digital scales.
+
+use crate::analog::macro_model::OpConfig;
+use crate::util::json::Json;
+use crate::util::tensorfile::TensorFile;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// Pooling applied after a conv layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pool {
+    None,
+    Max2,
+    Avg2,
+    Gap,
+}
+
+impl Pool {
+    fn from_json(j: Option<&Json>) -> Result<Pool> {
+        match j {
+            None | Some(Json::Null) => Ok(Pool::None),
+            Some(Json::Str(s)) => match s.as_str() {
+                "max2" => Ok(Pool::Max2),
+                "avg2" => Ok(Pool::Avg2),
+                "gap" => Ok(Pool::Gap),
+                other => bail!("unknown pool '{other}'"),
+            },
+            _ => bail!("invalid pool field"),
+        }
+    }
+}
+
+/// Layer kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Dense,
+    Conv3,
+}
+
+/// One CIM-mapped layer with everything the executor needs.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub name: String,
+    pub kind: Kind,
+    pub in_features: usize,
+    pub out_features: usize,
+    pub relu: bool,
+    pub stride: usize,
+    pub pool: Pool,
+    pub rows: usize,
+    pub cfg: OpConfig,
+    /// Physical weights [rows × out_features], antipodal levels.
+    pub w_phys: Vec<i32>,
+    /// 5b ABN offset codes [out_features].
+    pub beta: Vec<i32>,
+    /// Input quantization scale (real → r_in-bit grid).
+    pub a_scale: f32,
+    /// Post-ADC digital gain.
+    pub out_gain: f32,
+}
+
+/// A fully loaded network.
+#[derive(Clone, Debug)]
+pub struct NetworkModel {
+    pub name: String,
+    pub input_shape: Vec<usize>,
+    pub layers: Vec<Layer>,
+    /// Training metrics recorded by the compile path (accuracy etc.).
+    pub metrics: Json,
+}
+
+impl NetworkModel {
+    /// Load `<dir>/<name>.manifest.json` + its weight file.
+    pub fn load(dir: impl AsRef<Path>, name: &str) -> Result<NetworkModel> {
+        let dir = dir.as_ref();
+        let man_path = dir.join(format!("{name}.manifest.json"));
+        let text = std::fs::read_to_string(&man_path)
+            .with_context(|| format!("reading {man_path:?}"))?;
+        let man = Json::parse(&text).map_err(|e| anyhow!("{man_path:?}: {e}"))?;
+        if man.req_str("format")? != "imagine-model-v1" {
+            bail!("unsupported manifest format");
+        }
+        let weights_file = man.req_str("weights_file")?;
+        let tf = TensorFile::load(dir.join(weights_file))?;
+
+        let input_shape: Vec<usize> = man
+            .req_arr("input_shape")?
+            .iter()
+            .map(|j| j.as_usize().context("input_shape entry"))
+            .collect::<Result<_>>()?;
+
+        let mut layers = Vec::new();
+        for lj in man.req_arr("layers")? {
+            layers.push(Self::load_layer(lj, &tf)?);
+        }
+        Ok(NetworkModel {
+            name: man.req_str("name")?.to_string(),
+            input_shape,
+            layers,
+            metrics: man.get("metrics").cloned().unwrap_or(Json::Null),
+        })
+    }
+
+    fn load_layer(lj: &Json, tf: &TensorFile) -> Result<Layer> {
+        let name = lj.req_str("name")?.to_string();
+        let kind = match lj.req_str("kind")? {
+            "dense" => Kind::Dense,
+            "conv3" => Kind::Conv3,
+            other => bail!("unknown layer kind '{other}'"),
+        };
+        let cfg_j = lj.get("cfg").context("missing cfg")?;
+        let cfg = OpConfig {
+            r_in: cfg_j.req_usize("r_in")? as u32,
+            r_w: cfg_j.req_usize("r_w")? as u32,
+            r_out: cfg_j.req_usize("r_out")? as u32,
+            gamma: cfg_j.req_f64("gamma")?,
+            connected_units: cfg_j.req_usize("connected_units")?,
+            t_dp: 5e-9,
+        };
+        let rows = lj.req_usize("rows")?;
+        let out_features = lj.req_usize("out_features")?;
+
+        let w_t = tf.req(&format!("{name}/w_phys"))?;
+        if w_t.dims != [rows, out_features] {
+            bail!(
+                "{name}: weight dims {:?} != [{rows}, {out_features}]",
+                w_t.dims
+            );
+        }
+        let w_phys: Vec<i32> = w_t.as_i8()?.iter().map(|&v| v as i32).collect();
+        let beta: Vec<i32> = tf
+            .req(&format!("{name}/beta"))?
+            .as_i8()?
+            .iter()
+            .map(|&v| v as i32)
+            .collect();
+        if beta.len() != out_features {
+            bail!("{name}: beta length mismatch");
+        }
+        let a_scale = tf.req(&format!("{name}/a_scale"))?.as_f32()?[0];
+        let out_gain = tf.req(&format!("{name}/out_gain"))?.as_f32()?[0];
+
+        Ok(Layer {
+            name,
+            kind,
+            in_features: lj.req_usize("in_features")?,
+            out_features,
+            relu: lj.get("relu").and_then(Json::as_bool).unwrap_or(true),
+            stride: lj.get("stride").and_then(Json::as_usize).unwrap_or(1),
+            pool: Pool::from_json(lj.get("pool"))?,
+            rows,
+            cfg,
+            w_phys,
+            beta,
+            a_scale,
+            out_gain,
+        })
+    }
+
+    /// Recorded test accuracy from the compile path, if present.
+    pub fn trained_accuracy(&self) -> Option<f64> {
+        self.metrics.get("test_acc").and_then(Json::as_f64)
+    }
+
+    /// Total weight bits stored in the macro across layers.
+    pub fn weight_bits(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| (l.rows * l.out_features * l.cfg.r_w as usize) as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Loading real manifests is covered by rust/tests/e2e_network.rs
+    // (requires `make artifacts`). Here: pool parsing only.
+    use super::*;
+
+    #[test]
+    fn pool_parses() {
+        assert_eq!(Pool::from_json(None).unwrap(), Pool::None);
+        assert_eq!(Pool::from_json(Some(&Json::Null)).unwrap(), Pool::None);
+        assert_eq!(
+            Pool::from_json(Some(&Json::Str("max2".into()))).unwrap(),
+            Pool::Max2
+        );
+        assert!(Pool::from_json(Some(&Json::Str("huh".into()))).is_err());
+    }
+}

@@ -1,0 +1,7 @@
+//! The L3 coordinator: model loading, layer scheduling, the network
+//! executor (ideal + circuit-accurate backends) and the inference server.
+
+pub mod executor;
+pub mod manifest;
+pub mod scheduler;
+pub mod server;

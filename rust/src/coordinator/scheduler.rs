@@ -1,0 +1,146 @@
+//! Layer-to-macro scheduling (§IV): fit checking, column tiling, weight
+//! reload accounting, and per-layer cycle/energy planning.
+//!
+//! The scheduler turns a [`NetworkModel`] into a sequence of macro
+//! *passes* — each pass holds one weight tile resident in the CIM-SRAM —
+//! and prices the plan with the pipeline and energy models. It is what
+//! the `imagine plan` CLI prints and what the end-to-end example uses to
+//! report accelerator-level numbers.
+
+use crate::coordinator::manifest::{Kind, Layer, NetworkModel};
+use crate::config::params::MacroParams;
+use crate::dataflow::pipeline::{dram_weight_cycles, LayerShape};
+use crate::energy::system::{layer_cost, LayerCost};
+
+/// One scheduled layer.
+#[derive(Clone, Debug)]
+pub struct LayerPlan {
+    pub name: String,
+    pub shape: LayerShape,
+    /// Column passes (weight tiles) needed for all outputs.
+    pub col_passes: usize,
+    /// Weight bits moved per reload of this layer's tiles.
+    pub weight_bits: u64,
+    /// DRAM cycles to (re)load weights at a 32b off-chip bus (§IV).
+    pub reload_cycles: u64,
+    /// Steady-state cost of one image through this layer.
+    pub cost: LayerCost,
+    /// Whether the layer's rows fit the macro in a single row tile.
+    pub fits_rows: bool,
+    /// Input-dominated (Eq. 9) vs output-dominated (Eq. 10).
+    pub input_dominated: bool,
+}
+
+/// Full network plan.
+#[derive(Clone, Debug)]
+pub struct NetworkPlan {
+    pub layers: Vec<LayerPlan>,
+    pub total: LayerCost,
+    pub total_reload_cycles: u64,
+}
+
+/// Spatial dims tracker for conv chains.
+fn out_dims(layer: &Layer, h: usize, w: usize) -> (usize, usize) {
+    match layer.kind {
+        Kind::Dense => (1, 1),
+        Kind::Conv3 => {
+            let (oh, ow) = (h.div_ceil(layer.stride), w.div_ceil(layer.stride));
+            match layer.pool {
+                crate::coordinator::manifest::Pool::Max2
+                | crate::coordinator::manifest::Pool::Avg2 => (oh / 2, ow / 2),
+                crate::coordinator::manifest::Pool::Gap => (1, 1),
+                crate::coordinator::manifest::Pool::None => (oh, ow),
+            }
+        }
+    }
+}
+
+/// Build the plan for a model on the given macro parameters.
+pub fn plan(model: &NetworkModel, p: &MacroParams) -> NetworkPlan {
+    let mut layers = Vec::new();
+    let mut total = LayerCost::default();
+    let mut total_reload = 0u64;
+
+    let (mut h, mut w) = match model.input_shape.len() {
+        3 => (model.input_shape[1], model.input_shape[2]),
+        _ => (1, 1),
+    };
+
+    for layer in &model.layers {
+        let (conv_oh, conv_ow) = match layer.kind {
+            Kind::Conv3 => (h.div_ceil(layer.stride), w.div_ceil(layer.stride)),
+            Kind::Dense => (1, 1),
+        };
+        let shape = match layer.kind {
+            Kind::Dense => LayerShape::fc(
+                layer.in_features,
+                layer.out_features,
+                layer.cfg.r_in,
+                layer.cfg.r_out,
+            ),
+            Kind::Conv3 => LayerShape::conv(
+                layer.in_features,
+                layer.out_features,
+                layer.cfg.r_in,
+                layer.cfg.r_out,
+                conv_oh,
+                conv_ow,
+            ),
+        };
+        let col_passes = layer.out_features.div_ceil(p.n_blocks());
+        let weight_bits = (layer.rows * layer.out_features * layer.cfg.r_w as usize) as u64;
+        let reload_cycles = dram_weight_cycles(weight_bits, 32);
+        let cost = layer_cost(p, &shape, &layer.cfg, col_passes, true);
+        total.accumulate(&cost);
+        total_reload += reload_cycles;
+        layers.push(LayerPlan {
+            name: layer.name.clone(),
+            shape,
+            col_passes,
+            weight_bits,
+            reload_cycles,
+            cost,
+            fits_rows: layer.rows <= p.n_rows,
+            input_dominated: shape.input_dominated(),
+        });
+        let (nh, nw) = out_dims(layer, h, w);
+        h = nh;
+        w = nw;
+    }
+    NetworkPlan { layers, total, total_reload_cycles: total_reload }
+}
+
+impl NetworkPlan {
+    /// Human-readable table (the `imagine plan` output).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(
+            "layer        passes  cycles      in-dom  E_macro[nJ]  E_dig[nJ]  E_leak[nJ]\n",
+        );
+        for l in &self.layers {
+            s.push_str(&format!(
+                "{:<12} {:>6}  {:>10}  {:>6}  {:>11.3}  {:>9.3}  {:>10.3}\n",
+                l.name,
+                l.col_passes,
+                l.cost.cycles,
+                if l.input_dominated { "yes" } else { "no" },
+                l.cost.e_macro * 1e9,
+                l.cost.e_digital * 1e9,
+                l.cost.e_leak * 1e9,
+            ));
+        }
+        s.push_str(&format!(
+            "TOTAL: {} cycles, {:.3} µJ/image, {:.1} GOPS eff, EE {:.1} TOPS/W (8b-norm)\n",
+            self.total.cycles,
+            self.total.e_total() * 1e6,
+            self.total.throughput_8b() / 1e9,
+            self.total.ee_8b() / 1e12,
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Plans over real manifests are exercised in rust/tests/e2e_network.rs.
+}

@@ -1,0 +1,246 @@
+//! Batch inference server — the deployable face of the coordinator.
+//!
+//! A line-delimited JSON protocol over TCP: each request line is
+//! `{"image": [f32...]}` (length must match the model's input shape) and
+//! each response line is `{"logits": [...], "class": k, "micros": t}`.
+//! `{"cmd": "stats"}` returns aggregate counters; `{"cmd": "quit"}`
+//! closes the connection.
+//!
+//! The server runs the AOT/PJRT functional path by default (python-free
+//! request path), with the ideal-contract executor as a fallback when no
+//! HLO artifact is available. std::net + a thread per connection — the
+//! vendored dependency set has no tokio, and the workload is compute-
+//! bound on the PJRT call anyway.
+
+use crate::coordinator::executor::{Backend, Executor};
+use crate::coordinator::manifest::NetworkModel;
+use crate::config::params::MacroParams;
+use crate::runtime::Runtime;
+use crate::util::json::{arr_f64, obj, Json};
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Aggregate serving statistics.
+#[derive(Default, Debug)]
+pub struct Stats {
+    pub requests: AtomicU64,
+    pub errors: AtomicU64,
+    pub total_micros: AtomicU64,
+}
+
+impl Stats {
+    pub fn snapshot_json(&self) -> Json {
+        let n = self.requests.load(Ordering::Relaxed);
+        let us = self.total_micros.load(Ordering::Relaxed);
+        obj(vec![
+            ("requests", Json::Num(n as f64)),
+            ("errors", Json::Num(self.errors.load(Ordering::Relaxed) as f64)),
+            (
+                "mean_latency_micros",
+                Json::Num(if n > 0 { us as f64 / n as f64 } else { 0.0 }),
+            ),
+        ])
+    }
+}
+
+/// Inference engine behind the server: PJRT artifact or rust executor.
+pub enum Engine {
+    Pjrt {
+        runtime: Runtime,
+        model_name: String,
+        input_shape: Vec<usize>,
+    },
+    Sim(Mutex<Executor>),
+}
+
+impl Engine {
+    /// Build from artifacts: prefer `<name>.hlo.txt`, fall back to the
+    /// ideal-contract executor on the manifest.
+    pub fn from_artifacts(dir: &str, name: &str) -> Result<Engine> {
+        let hlo = std::path::Path::new(dir).join(format!("{name}.hlo.txt"));
+        let model = NetworkModel::load(dir, name)?;
+        if hlo.exists() {
+            let mut runtime = Runtime::new()?;
+            runtime.load_hlo_text(name, &hlo)?;
+            let mut input_shape = vec![1usize];
+            input_shape.extend(&model.input_shape);
+            Ok(Engine::Pjrt { runtime, model_name: name.to_string(), input_shape })
+        } else {
+            let exec = Executor::new(model, MacroParams::paper(), Backend::Ideal)?;
+            Ok(Engine::Sim(Mutex::new(exec)))
+        }
+    }
+
+    pub fn input_len(&self) -> usize {
+        match self {
+            Engine::Pjrt { input_shape, .. } => input_shape.iter().product(),
+            Engine::Sim(e) => e.lock().unwrap().model.input_shape.iter().product(),
+        }
+    }
+
+    pub fn infer(&self, image: &[f32]) -> Result<Vec<f32>> {
+        match self {
+            Engine::Pjrt { runtime, model_name, input_shape } => {
+                runtime.run_f32(model_name, image, input_shape)
+            }
+            Engine::Sim(exec) => exec.lock().unwrap().forward(image),
+        }
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Handle one request line; returns the response line (never fails the
+/// connection — errors are reported in-band).
+pub fn handle_line(engine: &Engine, stats: &Stats, line: &str) -> Option<String> {
+    let parsed = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => {
+            stats.errors.fetch_add(1, Ordering::Relaxed);
+            return Some(
+                obj(vec![("error", Json::Str(format!("bad json: {e}")))]).to_string_compact(),
+            );
+        }
+    };
+    if let Some(cmd) = parsed.get("cmd").and_then(Json::as_str) {
+        return match cmd {
+            "stats" => Some(stats.snapshot_json().to_string_compact()),
+            "quit" => None,
+            other => Some(
+                obj(vec![("error", Json::Str(format!("unknown cmd '{other}'")))])
+                    .to_string_compact(),
+            ),
+        };
+    }
+    let image: Option<Vec<f32>> = parsed.get("image").and_then(Json::as_arr).map(|a| {
+        a.iter()
+            .map(|v| v.as_f64().unwrap_or(f64::NAN) as f32)
+            .collect()
+    });
+    let image = match image {
+        Some(v) if v.len() == engine.input_len() && v.iter().all(|x| x.is_finite()) => v,
+        _ => {
+            stats.errors.fetch_add(1, Ordering::Relaxed);
+            return Some(
+                obj(vec![(
+                    "error",
+                    Json::Str(format!(
+                        "expected 'image' with {} finite values",
+                        engine.input_len()
+                    )),
+                )])
+                .to_string_compact(),
+            );
+        }
+    };
+    let t0 = std::time::Instant::now();
+    match engine.infer(&image) {
+        Ok(logits) => {
+            let us = t0.elapsed().as_micros() as u64;
+            stats.requests.fetch_add(1, Ordering::Relaxed);
+            stats.total_micros.fetch_add(us, Ordering::Relaxed);
+            Some(
+                obj(vec![
+                    ("logits", arr_f64(&logits.iter().map(|&v| v as f64).collect::<Vec<_>>())),
+                    ("class", Json::Num(argmax(&logits) as f64)),
+                    ("micros", Json::Num(us as f64)),
+                ])
+                .to_string_compact(),
+            )
+        }
+        Err(e) => {
+            stats.errors.fetch_add(1, Ordering::Relaxed);
+            Some(obj(vec![("error", Json::Str(format!("{e:#}")))]).to_string_compact())
+        }
+    }
+}
+
+fn serve_conn(engine: &Engine, stats: &Stats, stream: TcpStream) -> Result<()> {
+    let peer = stream.peer_addr().ok();
+    let mut writer = stream.try_clone().context("cloning stream")?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match handle_line(engine, stats, &line) {
+            Some(resp) => {
+                writer.write_all(resp.as_bytes())?;
+                writer.write_all(b"\n")?;
+            }
+            None => break, // quit
+        }
+    }
+    eprintln!("connection closed: {peer:?}");
+    Ok(())
+}
+
+/// Run the server (blocks). Connections are handled sequentially on the
+/// accept thread: the PJRT client is a single-threaded C handle (!Send),
+/// and inference is compute-bound on it anyway. `max_conns` stops after
+/// N connections when Some — used by the integration test.
+pub fn serve(engine: Engine, addr: &str, max_conns: Option<usize>) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    eprintln!("imagine server listening on {addr}");
+    let stats = Stats::default();
+    let mut conns = 0usize;
+    for stream in listener.incoming() {
+        let stream = stream?;
+        if let Err(err) = serve_conn(&engine, &stats, stream) {
+            eprintln!("connection error: {err:#}");
+        }
+        conns += 1;
+        if let Some(max) = max_conns {
+            if conns >= max {
+                break;
+            }
+        }
+    }
+    eprintln!("server stats: {}", stats.snapshot_json().to_string_compact());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[2.0]), 0);
+    }
+
+    #[test]
+    fn stats_snapshot() {
+        let s = Stats::default();
+        s.requests.fetch_add(4, Ordering::Relaxed);
+        s.total_micros.fetch_add(400, Ordering::Relaxed);
+        let j = s.snapshot_json();
+        assert_eq!(j.get("requests").unwrap().as_f64(), Some(4.0));
+        assert_eq!(j.get("mean_latency_micros").unwrap().as_f64(), Some(100.0));
+    }
+
+    #[test]
+    fn bad_json_is_reported_in_band() {
+        // Engine-independent error paths (no artifacts needed): feed a
+        // request that fails to parse.
+        let s = Stats::default();
+        // A fake engine would require artifacts; the json-error path
+        // short-circuits before touching the engine, so exercising it via
+        // a null pointer is not possible in safe rust — instead this is
+        // covered in the integration test. Here we only check parsing of
+        // the cmd dispatch plumbing.
+        let _ = &s;
+        assert!(Json::parse("{nope").is_err());
+    }
+}

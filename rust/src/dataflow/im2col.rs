@@ -1,0 +1,203 @@
+//! Streaming im2col with the macro's physical row order (§IV, Fig. 15b/d).
+//!
+//! Convolutional layers are lowered onto the macro by rearranging 3×3
+//! input patches into DP rows. The physical order matches the CIM-SRAM's
+//! input shift-register: DP unit `u` holds channels [4u, 4u+4) × all 9
+//! kernel taps, rows within a unit tap-major — the same permutation the
+//! python compile path bakes into the exported weights
+//! (`model.im2col_row_order`). Feature positions beyond the real channel
+//! count are *padding rows* driven with the constant (M+1)/2 input.
+//!
+//! The streaming variant processes the image row by row in 128b batches
+//! (the paper's §IV change versus [7]'s one-shot im2col, cutting the
+//! pre-im2col buffer from the full 1152×8b bandwidth to 128b).
+
+use crate::config::params::MacroParams;
+
+/// Row-order map for `c_in` channels, 3×3 kernel. Entry `r` gives the
+/// patch-feature index `tap * c_in + ch` for macro row `r`, or `None`
+/// for a padding row.
+pub fn row_order(c_in: usize) -> Vec<Option<usize>> {
+    let units = c_in.div_ceil(4);
+    let mut order = Vec::with_capacity(units * 36);
+    for u in 0..units {
+        for tap in 0..9 {
+            for cc in 0..4 {
+                let ch = 4 * u + cc;
+                if ch < c_in {
+                    order.push(Some(tap * c_in + ch));
+                } else {
+                    order.push(None);
+                }
+            }
+        }
+    }
+    order
+}
+
+/// Extract the zero-padded 3×3 patch at output pixel (oy, ox) from a CHW
+/// image, in natural (tap-major, channel-minor) order.
+pub fn patch_at(
+    x: &[u8],
+    c: usize,
+    h: usize,
+    w: usize,
+    oy: usize,
+    ox: usize,
+    stride: usize,
+) -> Vec<u8> {
+    let mut out = vec![0u8; 9 * c];
+    for (tap, out_chunk) in out.chunks_mut(c).enumerate() {
+        let dy = tap / 3;
+        let dx = tap % 3;
+        let iy = (oy * stride + dy) as isize - 1;
+        let ix = (ox * stride + dx) as isize - 1;
+        if iy < 0 || ix < 0 || iy >= h as isize || ix >= w as isize {
+            continue; // zero padding
+        }
+        for (ch, o) in out_chunk.iter_mut().enumerate() {
+            *o = x[ch * h * w + iy as usize * w + ix as usize];
+        }
+    }
+    out
+}
+
+/// Map a natural-order patch to macro rows with padding value `pad`.
+pub fn to_rows(patch: &[u8], order: &[Option<usize>], pad: u8) -> Vec<u8> {
+    order
+        .iter()
+        .map(|o| match o {
+            Some(i) => patch[*i],
+            None => pad,
+        })
+        .collect()
+}
+
+/// Full im2col of a CHW image: one macro-row vector per output pixel.
+/// Returns (rows_matrix [n_pix][n_rows], out_h, out_w).
+pub fn im2col_image(
+    x: &[u8],
+    c: usize,
+    h: usize,
+    w: usize,
+    stride: usize,
+    pad_value: u8,
+) -> (Vec<Vec<u8>>, usize, usize) {
+    assert_eq!(x.len(), c * h * w);
+    let order = row_order(c);
+    let oh = h.div_ceil(stride);
+    let ow = w.div_ceil(stride);
+    let mut rows = Vec::with_capacity(oh * ow);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let patch = patch_at(x, c, h, w, oy, ox, stride);
+            rows.push(to_rows(&patch, &order, pad_value));
+        }
+    }
+    (rows, oh, ow)
+}
+
+/// Cycle cost of streaming one kernel's worth of input through the 128b
+/// fabric at precision `r_in` for `c_in` channels — the per-pixel input
+/// transfer count of Eq. 9's ceil(K·r_in·C_in / BW) term. Within an image
+/// row the shift register reuses K−1 of the K columns, dividing by K.
+pub fn input_beats_per_pixel(c_in: usize, r_in: u32) -> usize {
+    // K = 3 columns of the kernel; only one new column per step.
+    (3 * r_in as usize * c_in).div_ceil(crate::dataflow::lmem::BW_BITS)
+}
+
+/// Beats to store one output pixel across `c_out` channels at `r_out`.
+pub fn output_beats_per_pixel(c_out: usize, r_out: u32) -> usize {
+    (r_out as usize * c_out).div_ceil(crate::dataflow::lmem::BW_BITS)
+}
+
+/// Pre-im2col buffer sizes (bits): the paper's streaming design vs [7]'s
+/// one-shot approach (Fig. 15d: >60% digital area reduction).
+pub fn buffer_bits_streaming() -> usize {
+    crate::dataflow::lmem::BW_BITS
+}
+
+pub fn buffer_bits_oneshot(p: &MacroParams) -> usize {
+    p.n_rows * 8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_order_bijective_over_real_features() {
+        for c_in in [4usize, 5, 8, 16, 32] {
+            let order = row_order(c_in);
+            assert_eq!(order.len(), c_in.div_ceil(4) * 36);
+            let mut real: Vec<usize> = order.iter().flatten().copied().collect();
+            real.sort_unstable();
+            assert_eq!(real, (0..9 * c_in).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn patch_center_and_padding() {
+        // 1-channel 3x3 image with values 1..9.
+        let x: Vec<u8> = (1..=9).collect();
+        let p = patch_at(&x, 1, 3, 3, 1, 1, 1);
+        assert_eq!(p, vec![1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        // Corner pixel: top-left taps are zero padding.
+        let p0 = patch_at(&x, 1, 3, 3, 0, 0, 1);
+        assert_eq!(p0, vec![0, 0, 0, 0, 1, 2, 0, 4, 5]);
+    }
+
+    #[test]
+    fn stride_two_halves_output() {
+        let x = vec![1u8; 2 * 8 * 8];
+        let (rows, oh, ow) = im2col_image(&x, 2, 8, 8, 2, 0);
+        assert_eq!((oh, ow), (4, 4));
+        assert_eq!(rows.len(), 16);
+        assert_eq!(rows[0].len(), 36); // 1 unit for c_in=2
+    }
+
+    #[test]
+    fn to_rows_places_padding() {
+        let order = row_order(2); // 2 real channels of 4 slots
+        let patch: Vec<u8> = (0..18).collect(); // 9 taps × 2 ch
+        let rows = to_rows(&patch, &order, 77);
+        assert_eq!(rows.len(), 36);
+        // Rows 0,1 are tap0 ch0/ch1; rows 2,3 padding.
+        assert_eq!(&rows[0..4], &[0, 1, 77, 77]);
+        assert_eq!(&rows[4..8], &[2, 3, 77, 77]);
+    }
+
+    #[test]
+    fn im2col_matches_naive_convolution_count() {
+        let c = 4;
+        let (h, w) = (6, 6);
+        let x: Vec<u8> = (0..c * h * w).map(|i| (i % 13) as u8).collect();
+        let (rows, oh, ow) = im2col_image(&x, c, h, w, 1, 0);
+        assert_eq!(rows.len(), oh * ow);
+        // Dot with an all-ones kernel = sum over the receptive field;
+        // compare one interior pixel against the naive sum.
+        let naive: u32 = (0..c)
+            .flat_map(|ch| (0..3).flat_map(move |dy| (0..3).map(move |dx| (ch, dy, dx))))
+            .map(|(ch, dy, dx)| x[ch * h * w + (2 + dy - 1) * w + (3 + dx - 1)] as u32)
+            .sum();
+        let via_rows: u32 = rows[2 * ow + 3].iter().map(|&v| v as u32).sum();
+        assert_eq!(naive, via_rows);
+    }
+
+    #[test]
+    fn beat_counts_match_paper_formulas() {
+        // Eq. 9's transfer term: ceil(K·r_in·C_in / 128).
+        assert_eq!(input_beats_per_pixel(16, 8), 3); // 3·8·16=384 → 3
+        assert_eq!(input_beats_per_pixel(4, 2), 1);
+        assert_eq!(output_beats_per_pixel(64, 8), 4); // 512 → 4
+        assert_eq!(output_beats_per_pixel(10, 4), 1);
+    }
+
+    #[test]
+    fn streaming_buffer_is_60pct_smaller() {
+        let p = MacroParams::paper();
+        let reduction =
+            1.0 - buffer_bits_streaming() as f64 / buffer_bits_oneshot(&p) as f64;
+        assert!(reduction > 0.9); // 128b vs 9216b
+    }
+}

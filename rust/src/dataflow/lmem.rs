@@ -1,0 +1,184 @@
+//! Local memories (LMEM) and the 128b transfer fabric (§IV, Fig. 15a).
+//!
+//! The accelerator owns two 32 kB LMEMs used in a ping-pong fashion: the
+//! layer's input activations stream out of one while outputs stream into
+//! the other; they swap roles between layers so intermediate maps never
+//! leave the accelerator. All transfers are 128-bit regardless of the
+//! configured precision — the energy/cycle models count them.
+
+/// I/O bandwidth of the LMEM fabric in bits per cycle (BW in Eqs. 8–10).
+pub const BW_BITS: usize = 128;
+
+/// One 32 kB local memory with access accounting.
+#[derive(Clone, Debug)]
+pub struct Lmem {
+    pub capacity_bytes: usize,
+    data: Vec<u8>,
+    /// 128b read/write beat counters (energy model inputs).
+    pub reads: u64,
+    pub writes: u64,
+}
+
+impl Lmem {
+    pub fn new(capacity_bytes: usize) -> Self {
+        Self {
+            capacity_bytes,
+            data: vec![0u8; capacity_bytes],
+            reads: 0,
+            writes: 0,
+        }
+    }
+
+    /// The paper's 32 kB instance.
+    pub fn paper() -> Self {
+        Self::new(32 * 1024)
+    }
+
+    pub fn reset_counters(&mut self) {
+        self.reads = 0;
+        self.writes = 0;
+    }
+
+    /// Number of 128b beats to move `bits` of payload.
+    pub fn beats(bits: usize) -> usize {
+        bits.div_ceil(BW_BITS)
+    }
+
+    /// Write a byte slice at `addr`, counting 128b beats.
+    pub fn write(&mut self, addr: usize, bytes: &[u8]) -> Result<(), LmemError> {
+        if addr + bytes.len() > self.capacity_bytes {
+            return Err(LmemError::OutOfRange {
+                addr,
+                len: bytes.len(),
+                cap: self.capacity_bytes,
+            });
+        }
+        self.data[addr..addr + bytes.len()].copy_from_slice(bytes);
+        self.writes += Self::beats(bytes.len() * 8) as u64;
+        Ok(())
+    }
+
+    /// Read `len` bytes at `addr`, counting 128b beats.
+    pub fn read(&mut self, addr: usize, len: usize) -> Result<&[u8], LmemError> {
+        if addr + len > self.capacity_bytes {
+            return Err(LmemError::OutOfRange { addr, len, cap: self.capacity_bytes });
+        }
+        self.reads += Self::beats(len * 8) as u64;
+        Ok(&self.data[addr..addr + len])
+    }
+
+    /// Bytes needed to store a feature map of `n` values at `bits`
+    /// precision (packed).
+    pub fn footprint(n: usize, bits: u32) -> usize {
+        (n * bits as usize).div_ceil(8)
+    }
+
+    /// Does a feature map fit?
+    pub fn fits(&self, n: usize, bits: u32) -> bool {
+        Self::footprint(n, bits) <= self.capacity_bytes
+    }
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum LmemError {
+    OutOfRange { addr: usize, len: usize, cap: usize },
+}
+
+impl std::fmt::Display for LmemError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LmemError::OutOfRange { addr, len, cap } => {
+                write!(f, "LMEM access [{addr}, {addr}+{len}) exceeds capacity {cap}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for LmemError {}
+
+/// The ping-pong pair: input/output roles swap between layers (§IV).
+#[derive(Clone, Debug)]
+pub struct PingPong {
+    pub mems: [Lmem; 2],
+    /// Which memory currently holds the *input* activations.
+    input_idx: usize,
+    pub swaps: u64,
+}
+
+impl PingPong {
+    pub fn paper() -> Self {
+        Self {
+            mems: [Lmem::paper(), Lmem::paper()],
+            input_idx: 0,
+            swaps: 0,
+        }
+    }
+
+    pub fn input(&mut self) -> &mut Lmem {
+        &mut self.mems[self.input_idx]
+    }
+
+    pub fn output(&mut self) -> &mut Lmem {
+        &mut self.mems[1 - self.input_idx]
+    }
+
+    /// End-of-layer role swap — zero data movement, the whole point.
+    pub fn swap(&mut self) {
+        self.input_idx = 1 - self.input_idx;
+        self.swaps += 1;
+    }
+
+    pub fn total_beats(&self) -> u64 {
+        self.mems.iter().map(|m| m.reads + m.writes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn beats_round_up() {
+        assert_eq!(Lmem::beats(1), 1);
+        assert_eq!(Lmem::beats(128), 1);
+        assert_eq!(Lmem::beats(129), 2);
+        assert_eq!(Lmem::beats(1024), 8);
+    }
+
+    #[test]
+    fn rw_roundtrip_and_counting() {
+        let mut m = Lmem::new(256);
+        m.write(10, &[1, 2, 3, 4]).unwrap();
+        assert_eq!(m.read(10, 4).unwrap(), &[1, 2, 3, 4]);
+        assert_eq!(m.writes, 1); // 32 bits → 1 beat
+        assert_eq!(m.reads, 1);
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        let mut m = Lmem::new(16);
+        assert!(m.write(10, &[0u8; 10]).is_err());
+        assert!(m.read(16, 1).is_err());
+    }
+
+    #[test]
+    fn footprint_packs_bits() {
+        assert_eq!(Lmem::footprint(1000, 8), 1000);
+        assert_eq!(Lmem::footprint(1000, 4), 500);
+        assert_eq!(Lmem::footprint(1000, 1), 125);
+        // 28x28x8 image at 8b fits the 32 kB LMEM; at 8 channels of 32x32
+        // it still fits; 64x32x32 does not.
+        let m = Lmem::paper();
+        assert!(m.fits(28 * 28 * 8, 8));
+        assert!(!m.fits(64 * 32 * 32, 8));
+    }
+
+    #[test]
+    fn pingpong_swaps_roles_without_copies() {
+        let mut pp = PingPong::paper();
+        pp.output().write(0, &[7u8; 16]).unwrap();
+        pp.swap();
+        assert_eq!(pp.input().read(0, 16).unwrap(), &[7u8; 16]);
+        assert_eq!(pp.swaps, 1);
+    }
+}

@@ -1,0 +1,7 @@
+//! Digital accelerator dataflow (§IV): LMEMs, streaming im2col, the
+//! conditionally-enabled input shift register and the pipeline model.
+
+pub mod im2col;
+pub mod lmem;
+pub mod pipeline;
+pub mod shift_register;

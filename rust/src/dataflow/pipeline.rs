@@ -1,0 +1,194 @@
+//! Four-stage pipeline / stall model of the accelerator (§IV, Eqs. 8–10,
+//! Fig. 15c).
+//!
+//! The accelerator's phases — (i) input fetch, (ii) im2col, (iii) CIM
+//! computation, (iv) output store — can run serially or pipelined. The
+//! per-output-pixel cycle count is governed by which side dominates:
+//!
+//! * serial:            N_stall = 1 + N_cim + ceil(r_out·C_out / BW)
+//! * input-dominated:   N_in    = (N_cim − 1) + ceil(K·r_in·C_in / BW)
+//! * output-dominated:  N_out   = N_cim + ceil(r_out·C_out / BW) − 1
+//!
+//! plus the row-start penalty (K·N_in cycles to refill the whole kernel
+//! window when a new image row begins).
+
+use crate::dataflow::lmem::BW_BITS;
+
+/// Per-layer transfer configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerShape {
+    /// Input channels (C_in).
+    pub c_in: usize,
+    /// Output channels stored per pixel (C_out).
+    pub c_out: usize,
+    /// Kernel width K (3 for the optimized path; 1 for FC).
+    pub k: usize,
+    /// Input/output precisions.
+    pub r_in: u32,
+    pub r_out: u32,
+    /// Output spatial size (H', W') — 1×1 for FC layers.
+    pub out_h: usize,
+    pub out_w: usize,
+    /// CIM macro cycles per operation (N_cim, usually 1).
+    pub n_cim: usize,
+}
+
+impl LayerShape {
+    pub fn conv(c_in: usize, c_out: usize, r_in: u32, r_out: u32, out_h: usize, out_w: usize) -> Self {
+        Self { c_in, c_out, k: 3, r_in, r_out, out_h, out_w, n_cim: 1 }
+    }
+
+    pub fn fc(features: usize, outputs: usize, r_in: u32, r_out: u32) -> Self {
+        Self {
+            c_in: features,
+            c_out: outputs,
+            k: 1,
+            r_in,
+            r_out,
+            out_h: 1,
+            out_w: 1,
+            n_cim: 1,
+        }
+    }
+
+    /// Eq. 9 transfer term: input beats per output pixel (within a row).
+    pub fn input_beats(&self) -> usize {
+        (self.k * self.r_in as usize * self.c_in).div_ceil(BW_BITS)
+    }
+
+    /// Eq. 8/10 transfer term: output beats per pixel.
+    pub fn output_beats(&self) -> usize {
+        (self.r_out as usize * self.c_out).div_ceil(BW_BITS)
+    }
+
+    /// Eq. 8: serial (un-pipelined) stall cycles per output.
+    pub fn n_stall(&self) -> usize {
+        1 + self.n_cim + self.output_beats()
+    }
+
+    /// Eq. 9: input-dominated pipelined cycles per output.
+    pub fn n_in(&self) -> usize {
+        (self.n_cim - 1) + self.input_beats()
+    }
+
+    /// Eq. 10: output-dominated pipelined cycles per output.
+    pub fn n_out(&self) -> usize {
+        self.n_cim + self.output_beats() - 1
+    }
+
+    /// Pipelined steady-state cycles per output pixel: the slower side
+    /// dominates; never below 1 cycle.
+    pub fn n_pipelined(&self) -> usize {
+        self.n_in().max(self.n_out()).max(1)
+    }
+
+    /// Is this layer input-dominated (Fig. 15c left) ?
+    pub fn input_dominated(&self) -> bool {
+        self.n_in() >= self.n_out()
+    }
+
+    /// Total cycles for the whole output map, pipelined, including the
+    /// K·N_in row-start refills (§IV).
+    pub fn total_cycles_pipelined(&self) -> u64 {
+        let per_pixel = self.n_pipelined() as u64;
+        let row_start = (self.k.saturating_sub(1) * self.n_in().max(1)) as u64;
+        let serial_tail = self.n_stall() as u64; // pipeline drain at the end
+        self.out_h as u64 * (row_start + self.out_w as u64 * per_pixel) + serial_tail
+    }
+
+    /// Total cycles, fully serial (Eq. 8 applied per pixel) — the paper's
+    /// pipelining baseline.
+    pub fn total_cycles_serial(&self) -> u64 {
+        let per_pixel = (self.input_beats() + self.n_stall()) as u64;
+        (self.out_h * self.out_w) as u64 * per_pixel
+    }
+
+    /// Pipelining speedup (Fig. 15c's point).
+    pub fn pipeline_speedup(&self) -> f64 {
+        self.total_cycles_serial() as f64 / self.total_cycles_pipelined() as f64
+    }
+
+    /// Macro operations (DP cycles) in this layer.
+    pub fn macro_ops(&self) -> u64 {
+        (self.out_h * self.out_w) as u64
+    }
+}
+
+/// Off-chip (DRAM) transfer model for workloads exceeding on-chip
+/// capacity (§IV last paragraph): weight reload cycles at a 32b bus.
+pub fn dram_weight_cycles(weight_bits: u64, offchip_bw_bits: u64) -> u64 {
+    weight_bits.div_ceil(offchip_bw_bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq8_example() {
+        // r_out=8, C_out=64 → ceil(512/128)=4 beats; N_cim=1 → N_stall=6.
+        let l = LayerShape::conv(16, 64, 8, 8, 14, 14);
+        assert_eq!(l.n_stall(), 6);
+    }
+
+    #[test]
+    fn eq9_eq10_examples() {
+        let l = LayerShape::conv(16, 64, 8, 8, 14, 14);
+        // input: ceil(3·8·16/128)=3 → N_in = 0 + 3 = 3.
+        assert_eq!(l.n_in(), 3);
+        // output: 1 + 4 − 1 = 4 → output-dominated.
+        assert_eq!(l.n_out(), 4);
+        assert!(!l.input_dominated());
+        assert_eq!(l.n_pipelined(), 4);
+    }
+
+    #[test]
+    fn multi_cycle_cim_shifts_balance() {
+        let mut l = LayerShape::conv(64, 16, 8, 8, 14, 14);
+        l.n_cim = 4;
+        // N_in grows with N_cim (input regs must hold still, §IV).
+        assert_eq!(l.n_in(), 3 + 12usize.div_ceil(1) - 0 - 0); // (4−1)+12
+        assert_eq!(l.n_in(), 15);
+        assert_eq!(l.n_out(), 4 + 1 - 1 + 1 - 1); // N_cim + 1 beat − 1
+    }
+
+    #[test]
+    fn pipelining_never_hurts_and_helps_balanced_layers() {
+        for (c_in, c_out, r) in [(4, 16, 2u32), (16, 32, 4), (64, 64, 8), (128, 16, 8)] {
+            let l = LayerShape::conv(c_in, c_out, r, r, 16, 16);
+            assert!(
+                l.pipeline_speedup() > 0.99,
+                "c_in={c_in} c_out={c_out} r={r}: speedup={}",
+                l.pipeline_speedup()
+            );
+        }
+        // Balanced / output-dominated layers overlap fetch with compute
+        // and store — the Fig. 15c win.
+        let l = LayerShape::conv(16, 64, 4, 8, 16, 16);
+        assert!(l.pipeline_speedup() > 1.5, "speedup={}", l.pipeline_speedup());
+    }
+
+    #[test]
+    fn fc_layer_single_pixel() {
+        let l = LayerShape::fc(784, 512, 8, 8);
+        assert_eq!(l.macro_ops(), 1);
+        // input beats: ceil(784·8/128) = 49.
+        assert_eq!(l.input_beats(), 49);
+        assert!(l.input_dominated());
+    }
+
+    #[test]
+    fn dram_reload_matches_paper_scale() {
+        // §IV: with a 32b off-chip bus, reloading the full 36 kB macro
+        // costs ~the cycles of processing one image (~10k-100k cycles).
+        let cycles = dram_weight_cycles(1152 * 256, 32);
+        assert_eq!(cycles, 9216);
+    }
+
+    #[test]
+    fn total_cycles_monotone_in_spatial_size() {
+        let small = LayerShape::conv(16, 16, 4, 4, 8, 8);
+        let big = LayerShape::conv(16, 16, 4, 4, 16, 16);
+        assert!(big.total_cycles_pipelined() > small.total_cycles_pipelined());
+    }
+}

@@ -1,0 +1,143 @@
+//! Conditionally-enabled CIM input shift register (§IV, Fig. 15d).
+//!
+//! The macro's 1152×8b input register is split into 32 sub-blocks that
+//! mirror the DP-unit division. Local clock-gating (CG) latches enable
+//! only the sub-blocks a layer uses (CH_i signals), and three CS_K,j
+//! signals select which kernel column within each block updates — this is
+//! what lets the streaming im2col feed one new kernel column per step
+//! while the other two shift.
+
+use crate::config::params::MacroParams;
+
+/// The shift-register state plus activity counters for the energy model.
+#[derive(Clone, Debug)]
+pub struct ShiftRegister {
+    /// 32 sub-blocks × 36 rows × 8b values.
+    blocks: Vec<[u8; 36]>,
+    /// Per-block enable (CH_i).
+    pub enabled: Vec<bool>,
+    /// Kernel-column select within a block (CS_K, 0..3).
+    pub cs_k: usize,
+    /// Register-write activity count (energy model input).
+    pub writes: u64,
+    /// Clock-gated (suppressed) write count.
+    pub gated: u64,
+}
+
+impl ShiftRegister {
+    pub fn new(p: &MacroParams) -> Self {
+        Self {
+            blocks: vec![[0u8; 36]; p.n_units()],
+            enabled: vec![false; p.n_units()],
+            cs_k: 0,
+            writes: 0,
+            gated: 0,
+        }
+    }
+
+    /// Configure for a layer using `units` sub-blocks.
+    pub fn configure(&mut self, units: usize) {
+        for (i, e) in self.enabled.iter_mut().enumerate() {
+            *e = i < units;
+        }
+    }
+
+    /// Write one kernel column (12 values = 4 channels × 3 kernel rows)
+    /// into sub-block `u` at column slot `slot` (0..3). Disabled blocks
+    /// gate the write (counted separately — that's the §IV area/energy
+    /// win versus a monolithic register).
+    pub fn write_column(&mut self, u: usize, slot: usize, vals: &[u8; 12]) {
+        if !self.enabled[u] {
+            self.gated += 1;
+            return;
+        }
+        let base = slot * 12;
+        self.blocks[u][base..base + 12].copy_from_slice(vals);
+        self.writes += 1;
+    }
+
+    /// Load a full macro-row vector (one im2col output) into the enabled
+    /// blocks; rows beyond the vector are left untouched.
+    pub fn load_rows(&mut self, rows: &[u8]) {
+        for (u, block) in self.blocks.iter_mut().enumerate() {
+            if !self.enabled[u] {
+                if u * 36 < rows.len() {
+                    self.gated += 3;
+                }
+                continue;
+            }
+            let base = u * 36;
+            if base >= rows.len() {
+                break;
+            }
+            let n = 36.min(rows.len() - base);
+            block[..n].copy_from_slice(&rows[base..base + n]);
+            self.writes += 3; // three column slots' worth
+        }
+    }
+
+    /// Current register contents as a flat row vector for `units` blocks.
+    pub fn as_rows(&self, units: usize) -> Vec<u8> {
+        let mut out = Vec::with_capacity(units * 36);
+        for block in self.blocks.iter().take(units) {
+            out.extend_from_slice(block);
+        }
+        out
+    }
+
+    /// Fraction of register writes suppressed by clock gating.
+    pub fn gating_ratio(&self) -> f64 {
+        let total = self.writes + self.gated;
+        if total == 0 {
+            0.0
+        } else {
+            self.gated as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::params::MacroParams;
+
+    #[test]
+    fn configure_enables_prefix() {
+        let p = MacroParams::paper();
+        let mut sr = ShiftRegister::new(&p);
+        sr.configure(4);
+        assert!(sr.enabled[0] && sr.enabled[3] && !sr.enabled[4]);
+    }
+
+    #[test]
+    fn disabled_blocks_gate_writes() {
+        let p = MacroParams::paper();
+        let mut sr = ShiftRegister::new(&p);
+        sr.configure(1);
+        sr.write_column(0, 0, &[1u8; 12]);
+        sr.write_column(5, 0, &[2u8; 12]);
+        assert_eq!(sr.writes, 1);
+        assert_eq!(sr.gated, 1);
+        assert_eq!(sr.as_rows(1)[0], 1);
+    }
+
+    #[test]
+    fn load_rows_roundtrip() {
+        let p = MacroParams::paper();
+        let mut sr = ShiftRegister::new(&p);
+        sr.configure(2);
+        let rows: Vec<u8> = (0..72).map(|i| i as u8).collect();
+        sr.load_rows(&rows);
+        assert_eq!(sr.as_rows(2), rows);
+    }
+
+    #[test]
+    fn gating_ratio_reflects_small_layers() {
+        let p = MacroParams::paper();
+        let mut sr = ShiftRegister::new(&p);
+        sr.configure(1);
+        let rows: Vec<u8> = vec![1; 1152];
+        sr.load_rows(&rows);
+        assert!(sr.gating_ratio() > 0.9); // 31 of 32 blocks gated
+    }
+}

@@ -1,0 +1,283 @@
+//! Analog macro energy model (§V.A; Figs. 6c, 18c, 22).
+//!
+//! Component-wise CV² accounting over one full-array macro operation.
+//! Constants are anchored to the paper's measured headline numbers
+//! (1.2 POPS/W raw at 8b-in/1b-w/8b-out, 0.3/0.6 V, C_in = 128) and the
+//! stated qualitative behaviours: ADC+ladder dominate at small C_in
+//! (Fig. 22b), split-DPL saves up to ~72% of DP energy at 64 channels
+//! with a 40 fF load (Fig. 6c), γ=1 is the most efficient gain (Fig. 18c).
+
+use crate::analog::macro_model::OpConfig;
+use crate::config::params::{DplTopology, MacroParams};
+use crate::energy::timing;
+
+/// Mean switching activity of input lines (random data).
+const A_IN: f64 = 0.5;
+/// Mean |ΔV| on the DPL relative to full swing (narrow DP distributions).
+const A_DPL: f64 = 0.25;
+/// Sense-amp decision energy at V_DDH = 0.8 V [J].
+const E_SA0: f64 = 15.0e-15;
+/// Macro-internal control/timing energy per op at nominal [J].
+const E_CTRL0: f64 = 30.0e-12;
+/// S-IN line load per column seen by the ladder taps [F] (γ > 1 only —
+/// at unity gain the MSB taps tie to the rails).
+const C_SIN: f64 = 10.0e-15;
+/// Global calibration factor anchoring the 8b raw EE to the measured
+/// 1.2 POPS/W: covers clock distribution, references and biasing that
+/// the per-block CV² accounting does not see.
+const K_CAL: f64 = 2.9;
+
+/// DP-phase energy for one macro op [J] with `active_cols` columns
+/// enabled: input drivers charging the bitcell caps of *connected* rows
+/// across the active columns plus the DPL precharge, per input bitplane.
+pub fn e_dp_cols(p: &MacroParams, cfg: &OpConfig, active_cols: usize) -> f64 {
+    let rows = cfg.active_rows(p) as f64;
+    let cols = active_cols as f64;
+    let vddl2 = p.supply.vddl * p.supply.vddl;
+    // Input drivers see the coupling caps of the active columns.
+    let e_drivers = rows * cols * p.c_c * vddl2 * A_IN;
+    // Per-column DPL precharge of the *connected* segment + load.
+    let c_dpl = match p.topology {
+        DplTopology::Baseline => {
+            p.n_rows as f64 * (p.c_c + p.c_p_per_row) + p.c_load
+        }
+        DplTopology::ParallelSplit => {
+            rows * (p.c_c + p.c_p_per_row) + p.c_p_global + p.c_load
+        }
+        DplTopology::SerialSplit => rows * (p.c_c + p.c_p_per_row) + p.c_load,
+    };
+    let e_pre = cols * c_dpl * vddl2 * A_DPL;
+    (e_drivers + e_pre) * cfg.r_in as f64
+}
+
+/// Full-array DP energy (peak characterization mode).
+pub fn e_dp(p: &MacroParams, cfg: &OpConfig) -> f64 {
+    e_dp_cols(p, cfg, p.n_cols)
+}
+
+/// DP energy with an explicit load override (Fig. 6c sweeps C_L).
+pub fn e_dp_with_load(p: &MacroParams, cfg: &OpConfig, c_load: f64) -> f64 {
+    let mut p2 = p.clone();
+    p2.c_load = c_load;
+    e_dp(&p2, cfg)
+}
+
+/// MBIW accumulation energy [J]: charge sharing on C_acc per input bit
+/// plus the inter-column weight shares.
+pub fn e_mbiw_cols(p: &MacroParams, cfg: &OpConfig, active_cols: usize) -> f64 {
+    let vddl2 = p.supply.vddl * p.supply.vddl;
+    let shares = if cfg.r_in > 1 { cfg.r_in as f64 } else { 0.0 }
+        + if cfg.r_w > 1 { cfg.r_w as f64 } else { 0.0 };
+    active_cols as f64 * p.c_acc() * vddl2 * A_DPL * shares
+}
+
+pub fn e_mbiw(p: &MacroParams, cfg: &OpConfig) -> f64 {
+    e_mbiw_cols(p, cfg, p.n_cols)
+}
+
+/// Shared resistive ladder energy per op [J]: 1 mA DC during settling +
+/// per-step reloads; γ = 1 ties the MSB taps to the rails, relieving the
+/// ladder (§V.A / Fig. 18c).
+pub fn e_ladder(p: &MacroParams, cfg: &OpConfig) -> f64 {
+    let ladder_duty = if cfg.gamma <= 1.0 { 0.35 } else { 1.0 };
+    let t_active = p.t_ladder + cfg.r_out as f64 * p.t_sar;
+    let e_dc = 1.0e-3 * p.supply.vddh * t_active * ladder_duty;
+    // Tap loading: at γ > 1 every S-IN line reloads from a resistive tap
+    // each SAR step; at γ = 1 the MSB taps are rail-tied.
+    let e_taps = if cfg.gamma > 1.0 {
+        p.n_cols as f64 * cfg.r_out as f64 * C_SIN * p.supply.vddh * p.supply.vddh
+    } else {
+        0.0
+    };
+    e_dc + e_taps
+}
+
+/// DSCI ADC energy [J]: SAR array switching + SA decisions + ladder.
+/// Only `active_cols` column ADCs convert (column-enable gating).
+pub fn e_adc_cols(p: &MacroParams, cfg: &OpConfig, active_cols: usize) -> f64 {
+    let vddh = p.supply.vddh;
+    let es = p.supply.energy_scale();
+    // SAR switching: injected charge scales with the γ-compressed step
+    // (Q = C·V_step) but is drawn from the V_DDH rail (E = Q·V_DDH).
+    let v_step = vddh / cfg.gamma.max(1.0);
+    let e_sar = active_cols as f64
+        * (p.c_sar + p.c_p_sar)
+        * v_step
+        * vddh
+        * 0.33
+        * cfg.r_out as f64;
+    let e_sa = active_cols as f64 * cfg.r_out as f64 * E_SA0 * es;
+    // Ladder scales its tap-loading with active columns; DC is shared.
+    let col_frac = active_cols as f64 / p.n_cols as f64;
+    let ladder_duty = if cfg.gamma <= 1.0 { 0.35 } else { 1.0 };
+    let t_active = p.t_ladder + cfg.r_out as f64 * p.t_sar;
+    let e_lad_dc = 1.0e-3 * vddh * t_active * ladder_duty;
+    let e_taps = if cfg.gamma > 1.0 {
+        active_cols as f64 * cfg.r_out as f64 * C_SIN * vddh * vddh
+    } else {
+        0.0
+    };
+    let _ = col_frac;
+    e_sar + e_sa + e_lad_dc + e_taps
+}
+
+pub fn e_adc(p: &MacroParams, cfg: &OpConfig) -> f64 {
+    e_adc_cols(p, cfg, p.n_cols)
+}
+
+/// Macro control / timing-generator energy [J]: part flat (clocking,
+/// timing generator), part per-column (output registers, local CG).
+pub fn e_ctrl_cols(p: &MacroParams, cfg: &OpConfig, active_cols: usize) -> f64 {
+    let col_frac = active_cols as f64 / p.n_cols as f64;
+    E_CTRL0
+        * p.supply.energy_scale()
+        * (cfg.r_in + cfg.r_out) as f64
+        / 16.0
+        * (0.3 + 0.7 * col_frac)
+}
+
+pub fn e_ctrl(p: &MacroParams, cfg: &OpConfig) -> f64 {
+    e_ctrl_cols(p, cfg, p.n_cols)
+}
+
+/// Total macro energy for one operation with `active_cols` columns [J].
+pub fn e_macro_op_cols(p: &MacroParams, cfg: &OpConfig, active_cols: usize) -> f64 {
+    K_CAL
+        * (e_dp_cols(p, cfg, active_cols)
+            + e_mbiw_cols(p, cfg, active_cols)
+            + e_adc_cols(p, cfg, active_cols)
+            + e_ctrl_cols(p, cfg, active_cols))
+}
+
+/// Total macro energy, full array (peak characterization mode) [J].
+pub fn e_macro_op(p: &MacroParams, cfg: &OpConfig) -> f64 {
+    e_macro_op_cols(p, cfg, p.n_cols)
+}
+
+/// Component breakdown (Fig. 22b): (V_DDL-side, V_DDH-side, ladder) [J].
+pub fn breakdown(p: &MacroParams, cfg: &OpConfig) -> (f64, f64, f64) {
+    let vddl_side = K_CAL * (e_dp(p, cfg) + e_mbiw(p, cfg));
+    let ladder = K_CAL * e_ladder(p, cfg);
+    let vddh_side = K_CAL * (e_adc(p, cfg) - e_ladder(p, cfg) + e_ctrl(p, cfg));
+    (vddl_side, vddh_side, ladder)
+}
+
+/// Macro energy efficiency, raw ops at configured precision [ops/J].
+pub fn ee_raw(p: &MacroParams, cfg: &OpConfig) -> f64 {
+    timing::raw_ops(p, cfg) / e_macro_op(p, cfg)
+}
+
+/// Macro energy efficiency, 8b-normalized [ops/J] (Table I).
+pub fn ee_8b(p: &MacroParams, cfg: &OpConfig) -> f64 {
+    timing::ops_8b_norm(p, cfg) / e_macro_op(p, cfg)
+}
+
+/// DP energy savings of the serial-split DPL versus baseline (Fig. 6c),
+/// for a given number of connected units and load.
+pub fn dp_savings(p: &MacroParams, units: usize, c_load: f64) -> f64 {
+    let cfg = OpConfig::new(8, 1, 8).with_units(units);
+    let split = p
+        .clone()
+        .with_topology(DplTopology::SerialSplit);
+    let base = p.clone().with_topology(DplTopology::Baseline);
+    1.0 - e_dp_with_load(&split, &cfg, c_load) / e_dp_with_load(&base, &cfg, c_load)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::params::Supply;
+
+    #[test]
+    fn anchor_8b_raw_ee_near_1_2_pops_per_watt() {
+        // §V.A: r_in=r_out=8b, binary weights, 128 channels, unity gain,
+        // 0.3/0.6 V ⇒ ~1.2 POPS/W raw (0.15 POPS/W 8b-normalized).
+        let p = MacroParams::paper().with_supply(Supply::LOW_POWER);
+        let cfg = OpConfig::new(8, 1, 8).with_units(32);
+        let ee = ee_raw(&p, &cfg) / 1e15;
+        assert!((0.8..1.6).contains(&ee), "raw EE={ee} POPS/W");
+        let ee8 = ee_8b(&p, &cfg) / 1e12;
+        assert!((100.0..200.0).contains(&ee8), "8b-norm EE={ee8} TOPS/W");
+    }
+
+    #[test]
+    fn quasi_linear_precision_scaling() {
+        // Conclusion: 0.15→8 POPS/W from 8b to 1b ⇒ ~50× with r_in·r_w
+        // normalization removed. Raw EE for 1b ops should land in the
+        // several-POPS/W range.
+        let p = MacroParams::paper().with_supply(Supply::LOW_POWER);
+        let cfg1 = OpConfig::new(1, 1, 1).with_units(32);
+        let ee1 = ee_raw(&p, &cfg1) / 1e15;
+        assert!((3.0..14.0).contains(&ee1), "1b raw EE={ee1} POPS/W");
+        let cfg8 = OpConfig::new(8, 1, 8).with_units(32);
+        let ratio = ee1 / (ee_raw(&p, &cfg8) / 1e15);
+        assert!((3.0..10.0).contains(&ratio), "1b/8b ratio={ratio}");
+    }
+
+    #[test]
+    fn adc_dominates_at_small_cin() {
+        // Fig. 22b: at C_in=4 (1 unit) the ADC+ladder dwarf the DP side;
+        // at C_in=128 the supplies contribute comparably.
+        let p = MacroParams::paper().with_supply(Supply::LOW_POWER);
+        let small = OpConfig::new(8, 1, 8).with_units(1);
+        let big = OpConfig::new(8, 1, 8).with_units(32);
+        let (dp_s, adc_s, lad_s) = breakdown(&p, &small);
+        let (dp_b, adc_b, lad_b) = breakdown(&p, &big);
+        assert!(adc_s + lad_s > 2.0 * dp_s, "small: adc={adc_s} lad={lad_s} dp={dp_s}");
+        let ratio_big = (adc_b + lad_b) / dp_b;
+        assert!((0.3..3.0).contains(&ratio_big), "big ratio={ratio_big}");
+    }
+
+    #[test]
+    fn energy_per_op_decreases_with_cin_amortization() {
+        // Fig. 22b x-axis trend: energy / (8b-norm op) drops with C_in.
+        let p = MacroParams::paper().with_supply(Supply::LOW_POWER);
+        let mut last = f64::INFINITY;
+        for units in [1usize, 4, 16, 32] {
+            let cfg = OpConfig::new(8, 1, 8).with_units(units);
+            let e_per_op = e_macro_op(&p, &cfg) / timing::ops_8b_norm(&p, &cfg);
+            assert!(e_per_op < last, "units={units}");
+            last = e_per_op;
+        }
+    }
+
+    #[test]
+    fn unity_gain_most_efficient() {
+        // Fig. 18c: γ=1 keeps the best EE (rail-tied MSB taps).
+        let p = MacroParams::paper();
+        let e1 = e_adc(&p, &OpConfig::new(8, 1, 8).with_gamma(1.0));
+        let e8 = e_adc(&p, &OpConfig::new(8, 1, 8).with_gamma(8.0));
+        assert!(e1 < e8, "e1={e1} e8={e8}");
+    }
+
+    #[test]
+    fn split_dpl_savings_match_fig6c() {
+        // Fig. 6c: up to ~72% DP energy saving at 64 channels (16 units)
+        // with the 40 fF load; savings shrink as the load grows.
+        let p = MacroParams::paper();
+        // Our CV² substitution peaks lower than the paper's post-layout
+        // 72% at this utilization (see EXPERIMENTS.md); the shape holds:
+        // monotone in disconnected units, diminishing with load, zero at
+        // full utilization.
+        let s40 = dp_savings(&p, 16, 40e-15);
+        assert!((0.2..0.85).contains(&s40), "s40={s40}");
+        let s40_small = dp_savings(&p, 4, 40e-15);
+        assert!(s40_small > 0.55, "s40_small={s40_small}");
+        let s160 = dp_savings(&p, 4, 160e-15);
+        assert!(s160 < s40_small, "s160={s160} s40_small={s40_small}");
+        // Full utilization ⇒ no saving.
+        let s_full = dp_savings(&p, 32, 40e-15);
+        assert!(s_full.abs() < 0.05, "s_full={s_full}");
+    }
+
+    #[test]
+    fn low_voltage_saves_energy() {
+        let cfg = OpConfig::new(8, 1, 8);
+        let e_nom = e_macro_op(&MacroParams::paper(), &cfg);
+        let e_low = e_macro_op(
+            &MacroParams::paper().with_supply(Supply::LOW_POWER),
+            &cfg,
+        );
+        assert!(e_low < 0.8 * e_nom);
+    }
+}

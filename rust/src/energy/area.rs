@@ -1,0 +1,86 @@
+//! Area and density model (§V, Fig. 16c; Table I rows "Density" and
+//! "Peak AE").
+
+use crate::analog::macro_model::OpConfig;
+use crate::config::params::MacroParams;
+use crate::energy::timing;
+
+/// Macro area breakdown [mm²] (Fig. 16c: DP array 74%, ADCs <5%, the
+/// rest MBIW + periphery).
+#[derive(Clone, Copy, Debug)]
+pub struct MacroArea {
+    pub dp_array: f64,
+    pub adc: f64,
+    pub mbiw_periphery: f64,
+}
+
+impl MacroArea {
+    pub fn of(p: &MacroParams) -> Self {
+        let total = p.macro_area_mm2;
+        MacroArea {
+            dp_array: 0.74 * total,
+            adc: 0.045 * total,
+            mbiw_periphery: total - 0.74 * total - 0.045 * total,
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.dp_array + self.adc + self.mbiw_periphery
+    }
+}
+
+/// Consistency check: bitcell area × cell count against the DP-array
+/// share (layout efficiency ≈ 0.9 for the custom MoM-over-cell stack).
+pub fn dp_array_from_bitcells(p: &MacroParams) -> f64 {
+    p.n_rows as f64 * p.n_cols as f64 * p.bitcell_area_um2 * 1e-6 / 0.9
+}
+
+/// Area efficiency [ops/s/mm²], 8b-normalized (Table I "Peak AE").
+pub fn area_efficiency_8b(p: &MacroParams, cfg: &OpConfig) -> f64 {
+    timing::peak_throughput_8b(p, cfg) / p.macro_area_mm2
+}
+
+/// Area efficiency at raw precision [ops/s/mm²] — the 1b end of the
+/// paper's 2.6–154 TOPS/mm² span.
+pub fn area_efficiency_raw(p: &MacroParams, cfg: &OpConfig) -> f64 {
+    timing::peak_throughput_raw(p, cfg) / p.macro_area_mm2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let p = MacroParams::paper();
+        let a = MacroArea::of(&p);
+        assert!((a.total() - p.macro_area_mm2).abs() < 1e-12);
+        assert!(a.dp_array > 10.0 * a.adc); // ADCs < 5%, array 74%
+    }
+
+    #[test]
+    fn bitcell_accounting_consistent() {
+        let p = MacroParams::paper();
+        let from_cells = dp_array_from_bitcells(&p);
+        let a = MacroArea::of(&p);
+        let ratio = from_cells / a.dp_array;
+        assert!((0.7..1.3).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn density_matches_table1() {
+        let p = MacroParams::paper();
+        assert!((p.density_kb_mm2() - 187.0).abs() < 15.0);
+    }
+
+    #[test]
+    fn area_efficiency_span_matches_table1() {
+        // Table I: 2.6 TOPS/mm² at 8b (norm) up to ~154 TOPS/mm² at 1b raw.
+        let p = MacroParams::paper();
+        let ae8 = area_efficiency_8b(&p, &OpConfig::new(8, 1, 8)) / 1e12;
+        assert!((1.0..6.0).contains(&ae8), "8b AE={ae8} TOPS/mm²");
+        let ae1 = area_efficiency_raw(&p, &OpConfig::new(1, 1, 1)) / 1e12;
+        assert!((50.0..300.0).contains(&ae1), "1b AE={ae1} TOPS/mm²");
+        assert!(ae1 / ae8 > 20.0);
+    }
+}

@@ -1,0 +1,7 @@
+//! Energy / timing / area models of the macro and the accelerator
+//! (§V; Figs. 6c, 18c, 22, 23; Table I).
+
+pub mod analog;
+pub mod area;
+pub mod system;
+pub mod timing;

@@ -1,0 +1,207 @@
+//! System-level (CIM-CNN accelerator) energy model (§V.B; Figs. 22b, 23,
+//! Table I): digital transfers, im2col/register activity and leakage on
+//! top of the macro energy.
+
+use crate::analog::macro_model::OpConfig;
+use crate::config::params::MacroParams;
+use crate::dataflow::pipeline::LayerShape;
+use crate::energy::{analog, timing};
+
+/// Energy of one 128b LMEM beat at V_DDH = 0.8 V [J] (SRAM access + bus).
+const E_BEAT0: f64 = 9.0e-12;
+/// Shift-register / im2col datapath energy per macro op at nominal [J].
+const E_IM2COL0: f64 = 6.0e-12;
+/// Accelerator leakage power at nominal supply [W] (integrates over the
+/// MHz-range transfer cycles — the §V.B leakage sensitivity).
+const P_LEAK0: f64 = 95.0e-6;
+
+/// Per-beat transfer energy at the configured supply.
+pub fn e_beat(p: &MacroParams) -> f64 {
+    E_BEAT0 * p.supply.energy_scale()
+}
+
+/// Leakage power at the configured supply/corner.
+pub fn p_leak(p: &MacroParams) -> f64 {
+    P_LEAK0 * (p.supply.vddh / 0.8) * p.corner.leakage().sqrt()
+}
+
+/// Energy and timing summary of running one layer on the accelerator.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LayerCost {
+    /// Total macro (analog) energy [J].
+    pub e_macro: f64,
+    /// Total transfer + digital datapath energy [J].
+    pub e_digital: f64,
+    /// Leakage energy integrated over the layer runtime [J].
+    pub e_leak: f64,
+    /// Total cycles (pipelined) and wall time [s].
+    pub cycles: u64,
+    pub seconds: f64,
+    /// 8b-normalized operations executed.
+    pub ops_8b: f64,
+}
+
+impl LayerCost {
+    pub fn e_total(&self) -> f64 {
+        self.e_macro + self.e_digital + self.e_leak
+    }
+
+    /// System energy efficiency for this layer [ops/J], 8b-normalized.
+    pub fn ee_8b(&self) -> f64 {
+        self.ops_8b / self.e_total()
+    }
+
+    /// Effective throughput [ops/s], 8b-normalized.
+    pub fn throughput_8b(&self) -> f64 {
+        self.ops_8b / self.seconds
+    }
+
+    pub fn accumulate(&mut self, other: &LayerCost) {
+        self.e_macro += other.e_macro;
+        self.e_digital += other.e_digital;
+        self.e_leak += other.e_leak;
+        self.cycles += other.cycles;
+        self.seconds += other.seconds;
+        self.ops_8b += other.ops_8b;
+    }
+}
+
+/// Cost one layer: `shape` describes the transfer geometry, `cfg` the
+/// macro configuration; `col_passes` counts how many times the output
+/// columns must be re-tiled through the macro (out_features / 64 blocks),
+/// and `pipelined` selects Eq. 8 vs Eq. 9/10 behaviour.
+pub fn layer_cost(
+    p: &MacroParams,
+    shape: &LayerShape,
+    cfg: &OpConfig,
+    col_passes: usize,
+    pipelined: bool,
+) -> LayerCost {
+    let f_clk = timing::f_system(p, cfg, shape.n_cim);
+    let cycles_one = if pipelined {
+        shape.total_cycles_pipelined()
+    } else {
+        shape.total_cycles_serial()
+    };
+    let cycles = cycles_one * col_passes as u64;
+    let seconds = cycles as f64 / f_clk;
+
+    let macro_ops = shape.macro_ops() * col_passes as u64;
+    // Column-enable gating: only the columns this layer's outputs occupy
+    // switch (c_out outputs × r_w columns each, per pass).
+    let active_cols = (shape.c_out.div_ceil(col_passes) * cfg.r_w as usize).min(p.n_cols);
+    let e_macro = analog::e_macro_op_cols(p, cfg, active_cols) * macro_ops as f64;
+
+    let beats_per_pixel = shape.input_beats() + shape.output_beats();
+    let beats = beats_per_pixel as u64 * macro_ops;
+    let e_digital = beats as f64 * e_beat(p)
+        + macro_ops as f64 * E_IM2COL0 * p.supply.energy_scale();
+
+    let e_leak = p_leak(p) * seconds;
+
+    // 8b-normalized ops: only the utilized rows/columns count at the
+    // system level (unlike the macro's peak numbers).
+    let used_rows = cfg.active_rows(p) as f64;
+    let used_cols = (shape.c_out.min(p.n_cols / cfg.r_w as usize)) as f64;
+    let ops_8b = 2.0 * used_rows * used_cols * macro_ops as f64
+        * (cfg.r_in as f64 / 8.0)
+        * (cfg.r_w as f64 / 8.0);
+
+    LayerCost { e_macro, e_digital, e_leak, cycles, seconds, ops_8b }
+}
+
+/// The §V.B dedicated power test: loop the convolution of a 32×32 image
+/// with `c_in = c_out` channels at a given precision (Fig. 23's workload).
+pub fn conv_loop_cost(p: &MacroParams, c_in: usize, r: u32, pipelined: bool) -> LayerCost {
+    let units = p.units_for_cin(c_in);
+    let cfg = OpConfig::new(r, 1, r).with_units(units);
+    let shape = LayerShape::conv(c_in, c_in.max(16), r, r, 32, 32);
+    let col_passes = (c_in.max(16)).div_ceil(p.n_cols);
+    layer_cost(p, &shape, &cfg, col_passes.max(1), pipelined)
+}
+
+/// Peak-system workload: full array utilization (128 input channels, all
+/// 256 output columns) — the Table I system-EE configuration.
+pub fn peak_system_cost(p: &MacroParams, r: u32) -> LayerCost {
+    let cfg = OpConfig::new(r, 1, r).with_units(32);
+    let shape = LayerShape::conv(128, 256, r, r, 32, 32);
+    layer_cost(p, &shape, &cfg, 1, true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::params::Supply;
+
+    #[test]
+    fn system_ee_anchor_40_tops_per_watt() {
+        // §V / Table I: ~40 TOPS/W peak system EE at 0.3/0.6 V in the
+        // high-channel 8b configuration.
+        let p = MacroParams::paper().with_supply(Supply::LOW_POWER);
+        let cost = conv_loop_cost(&p, 128, 8, true);
+        let ee = cost.ee_8b() / 1e12;
+        assert!((25.0..70.0).contains(&ee), "system EE={ee} TOPS/W");
+        // Nominal supply trades a bit of efficiency for speed (40→35).
+        let pn = MacroParams::paper();
+        let een = conv_loop_cost(&pn, 128, 8, true).ee_8b() / 1e12;
+        assert!(een < ee, "nominal EE={een} low-power EE={ee}");
+    }
+
+    #[test]
+    fn transfers_dominate_small_layers() {
+        // §V.B: layers using <128b per transfer are dominated by data
+        // movement, not the macro.
+        let p = MacroParams::paper().with_supply(Supply::LOW_POWER);
+        let small = conv_loop_cost(&p, 4, 2, true);
+        assert!(
+            small.e_digital + small.e_leak > small.e_macro,
+            "digital={} leak={} macro={}",
+            small.e_digital,
+            small.e_leak,
+            small.e_macro
+        );
+        // ... while the full-utilization high-precision config is macro-
+        // dominated (paper: 70–75%; our substitution lands lower but
+        // clearly macro-first once leakage is excluded).
+        let big = peak_system_cost(&p, 8);
+        let frac = big.e_macro / big.e_total();
+        assert!((0.42..0.95).contains(&frac), "macro frac={frac}");
+        let frac_switching = big.e_macro / (big.e_macro + big.e_digital);
+        assert!(frac_switching > 0.6, "switching frac={frac_switching}");
+    }
+
+    #[test]
+    fn energy_per_op_decreases_with_cin() {
+        // Fig. 23: energy/op drops with C_in (ADC + transfer amortization).
+        let p = MacroParams::paper().with_supply(Supply::LOW_POWER);
+        let mut last = f64::INFINITY;
+        for c_in in [4usize, 16, 64, 128] {
+            let c = conv_loop_cost(&p, c_in, 8, true);
+            let e_per_op = c.e_total() / c.ops_8b;
+            assert!(e_per_op < last, "c_in={c_in}: {e_per_op} !< {last}");
+            last = e_per_op;
+        }
+    }
+
+    #[test]
+    fn pipelining_improves_throughput_not_energy_much() {
+        let p = MacroParams::paper();
+        let ser = conv_loop_cost(&p, 32, 8, false);
+        let pip = conv_loop_cost(&p, 32, 8, true);
+        assert!(pip.seconds < ser.seconds);
+        // Leakage shrinks with runtime; switching energy is identical.
+        assert!(pip.e_total() <= ser.e_total());
+        assert!((pip.e_macro - ser.e_macro).abs() < 1e-18);
+    }
+
+    #[test]
+    fn layer_cost_accumulates() {
+        let p = MacroParams::paper();
+        let a = conv_loop_cost(&p, 16, 4, true);
+        let mut sum = LayerCost::default();
+        sum.accumulate(&a);
+        sum.accumulate(&a);
+        assert!((sum.e_total() - 2.0 * a.e_total()).abs() < 1e-15);
+        assert_eq!(sum.cycles, 2 * a.cycles);
+    }
+}

@@ -1,0 +1,146 @@
+//! Macro and system timing model (§III/§IV; Figs. 22–23).
+//!
+//! One macro operation walks the four-phase flow: r_in bit-serial DP +
+//! accumulate cycles, the inter-column weight share, the ABN offset
+//! phase, the ladder settling and r_out SAR decision/update cycles. The
+//! system clock is set so a macro operation fits in N_cim cycles; digital
+//! transfer beats run at the same clock (§V.B measures both together).
+
+use crate::analog::macro_model::OpConfig;
+use crate::config::params::{MacroParams, Supply};
+
+/// Fixed per-phase overheads [s] at nominal supply.
+const T_OFFSET: f64 = 2.0e-9; // ABN offset + calibration injection
+const T_CTRL: f64 = 1.5e-9; // timing-generator margins per op
+
+/// Duration of one full macro operation [s].
+pub fn t_macro_op(p: &MacroParams, cfg: &OpConfig) -> f64 {
+    let ds = p.supply.delay_scale();
+    let t_input = cfg.r_in as f64 * (cfg.t_dp + if cfg.r_in > 1 { p.t_acc } else { 0.0 });
+    let t_weight = if cfg.r_w > 1 {
+        cfg.r_w as f64 * p.t_acc
+    } else {
+        0.0
+    };
+    let t_adc = p.t_ladder + cfg.r_out as f64 * p.t_sar;
+    // Analog phases stretch with supply-dependent switch drive too.
+    (t_input + t_weight + T_OFFSET + t_adc + T_CTRL) * ds / p.corner.drive()
+}
+
+/// Maximum macro operating frequency [Hz] for a configuration — the
+/// quantity Fig. 23 sweeps (higher precision ⇒ more serial phases ⇒
+/// lower frequency).
+pub fn f_max_macro(p: &MacroParams, cfg: &OpConfig) -> f64 {
+    1.0 / t_macro_op(p, cfg)
+}
+
+/// Digital datapath maximum clock [Hz] (limits transfers; generous at
+/// nominal, ~3× slower at 0.3/0.6 V).
+pub fn f_max_digital(supply: &Supply) -> f64 {
+    250.0e6 / supply.delay_scale()
+}
+
+/// System clock: macro op must fit in `n_cim` cycles, transfers in one.
+pub fn f_system(p: &MacroParams, cfg: &OpConfig, n_cim: usize) -> f64 {
+    let f_macro_limited = (n_cim as f64) / t_macro_op(p, cfg);
+    f_macro_limited.min(f_max_digital(&p.supply))
+}
+
+/// γ-dependent frequency tweak (§V.A, Fig. 18c): compressed V_sar levels
+/// settle slightly faster between γ=2 and 16; γ=1 ties the MSB taps to
+/// the rails (fastest reference but full swing); γ=32 strains the ladder.
+pub fn gamma_speed_factor(gamma: f64) -> f64 {
+    if gamma <= 1.0 {
+        1.0
+    } else if gamma <= 16.0 {
+        1.0 + 0.06 * (gamma.log2() / 4.0)
+    } else {
+        0.98
+    }
+}
+
+/// Raw MAC operations of one full-array macro op (2 ops per MAC).
+pub fn raw_ops(p: &MacroParams, cfg: &OpConfig) -> f64 {
+    let rows = cfg.active_rows(p);
+    let cols = p.n_cols / cfg.r_w as usize; // r_w columns form one output
+    2.0 * rows as f64 * cols as f64
+}
+
+/// 8b-normalized ops (Table I note 1: inputs AND weights to 8b).
+pub fn ops_8b_norm(p: &MacroParams, cfg: &OpConfig) -> f64 {
+    raw_ops(p, cfg) * (cfg.r_in as f64 / 8.0) * (cfg.r_w as f64 / 8.0)
+}
+
+/// Macro peak throughput [ops/s], raw at configured precision.
+pub fn peak_throughput_raw(p: &MacroParams, cfg: &OpConfig) -> f64 {
+    raw_ops(p, cfg) * f_max_macro(p, cfg) * gamma_speed_factor(cfg.gamma)
+}
+
+/// Macro peak throughput, 8b-normalized [ops/s].
+pub fn peak_throughput_8b(p: &MacroParams, cfg: &OpConfig) -> f64 {
+    ops_8b_norm(p, cfg) * f_max_macro(p, cfg) * gamma_speed_factor(cfg.gamma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::params::Supply;
+
+    fn cfg8() -> OpConfig {
+        OpConfig::new(8, 1, 8)
+    }
+
+    #[test]
+    fn op_time_scales_with_precision() {
+        let p = MacroParams::paper();
+        let t1 = t_macro_op(&p, &OpConfig::new(1, 1, 1));
+        let t8 = t_macro_op(&p, &cfg8());
+        assert!(t8 > 2.0 * t1, "t1={t1} t8={t8}");
+        // 8b op lands in the tens-of-ns regime (≈12–16 MHz at nominal).
+        assert!(t8 > 50e-9 && t8 < 120e-9, "t8={t8}");
+    }
+
+    #[test]
+    fn low_voltage_slows_down() {
+        let p_nom = MacroParams::paper();
+        let p_low = MacroParams::paper().with_supply(Supply::LOW_POWER);
+        assert!(t_macro_op(&p_low, &cfg8()) > 1.5 * t_macro_op(&p_nom, &cfg8()));
+    }
+
+    #[test]
+    fn throughput_in_paper_range() {
+        // Table I: peak throughput 0.1–0.5 TOPS (8b-normalized) across
+        // supplies; binary weights ⇒ /8 normalization.
+        let cfg = cfg8();
+        for supply in [Supply::NOMINAL, Supply::LOW_POWER] {
+            let p = MacroParams::paper().with_supply(supply);
+            let tput = peak_throughput_8b(&p, &cfg) / 1e12;
+            assert!((0.05..1.5).contains(&tput), "tput={tput} TOPS");
+        }
+    }
+
+    #[test]
+    fn raw_ops_count_full_array() {
+        let p = MacroParams::paper();
+        assert_eq!(raw_ops(&p, &cfg8()), 2.0 * 1152.0 * 256.0);
+        let cfg4 = OpConfig::new(8, 4, 8);
+        assert_eq!(raw_ops(&p, &cfg4), 2.0 * 1152.0 * 64.0);
+    }
+
+    #[test]
+    fn system_clock_respects_both_limits() {
+        let p = MacroParams::paper();
+        let f1 = f_system(&p, &cfg8(), 1);
+        assert!(f1 <= f_max_digital(&p.supply));
+        assert!((f1 - f_max_macro(&p, &cfg8())).abs() / f1 < 1e-9);
+        // Multi-cycle macro allows a faster clock.
+        let f4 = f_system(&p, &cfg8(), 4);
+        assert!(f4 > 2.0 * f1);
+    }
+
+    #[test]
+    fn gamma_speed_bump_midrange() {
+        assert!(gamma_speed_factor(8.0) > gamma_speed_factor(1.0));
+        assert!(gamma_speed_factor(32.0) < gamma_speed_factor(16.0));
+    }
+}

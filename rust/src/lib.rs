@@ -1,0 +1,30 @@
+//! # imagine — a full-stack reproduction of the IMAGINE CIM-CNN accelerator
+//!
+//! IMAGINE (Kneip et al., 2024) is a 22nm FD-SOI charge-domain
+//! compute-in-memory CNN accelerator. This crate rebuilds the entire
+//! system in software:
+//!
+//! * [`analog`] — circuit-behavioral simulator of the 1152×256 CIM-SRAM
+//!   macro (charge-sharing DP, MBIW accumulation, DSCI SAR ADC with
+//!   in-ADC analog batch-normalization, mismatch/noise/corners);
+//! * [`dataflow`] — the digital accelerator around it (LMEMs, streaming
+//!   im2col, pipeline stall model of Eqs. 8–10);
+//! * [`energy`] — energy/area/timing models regenerating the paper's
+//!   efficiency figures and Table I;
+//! * [`coordinator`] — layer scheduler, network executor, CLI server;
+//! * [`runtime`] — PJRT loader executing the AOT-compiled JAX/Pallas
+//!   artifacts (HLO text) on the request path, python-free;
+//! * [`nn`] — a small rust-native NN stack (training the Fig. 3b MLP);
+//! * [`config`], [`util`] — parameters and support code.
+//!
+//! See DESIGN.md for the experiment index and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod analog;
+pub mod config;
+pub mod coordinator;
+pub mod dataflow;
+pub mod energy;
+pub mod nn;
+pub mod runtime;
+pub mod util;

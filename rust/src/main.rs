@@ -1,0 +1,200 @@
+//! `imagine` — the IMAGINE CIM-CNN accelerator coordinator CLI.
+//!
+//! Subcommands (hand-rolled parsing; the vendored dep set has no clap):
+//!
+//!   imagine info                              macro parameters & Table I row
+//!   imagine plan  --model NAME [--dir D]      layer schedule + cost table
+//!   imagine run   --model NAME [--n N] [--backend ideal|analog|pjrt]
+//!                                             evaluate on the exported test set
+//!   imagine serve --model NAME [--addr A]     line-JSON TCP inference server
+//!
+//! Default artifact directory: ./artifacts (produced by `make artifacts`).
+
+use anyhow::{bail, Context, Result};
+use imagine::analog::macro_model::OpConfig;
+use imagine::config::params::{MacroParams, Supply};
+use imagine::coordinator::executor::{Backend, Executor};
+use imagine::coordinator::manifest::NetworkModel;
+use imagine::coordinator::scheduler;
+use imagine::coordinator::server::{serve, Engine};
+use imagine::energy::{analog as ea, area, system, timing};
+use imagine::nn::dataset::Dataset;
+use imagine::runtime::Runtime;
+use std::collections::HashMap;
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    flags
+}
+
+fn cmd_info() {
+    let p = MacroParams::paper();
+    println!("IMAGINE CIM-SRAM macro (22nm FD-SOI, reproduced in simulation)");
+    println!("  array          : {} rows x {} cols ({} units x {} blocks)",
+        p.n_rows, p.n_cols, p.n_units(), p.n_blocks());
+    println!("  capacity       : {:.0} kB   density {:.0} kB/mm^2",
+        p.capacity_kb(), p.density_kb_mm2());
+    println!("  supplies       : VDDL {} V / VDDH {} V (low-power 0.3/0.6)",
+        p.supply.vddl, p.supply.vddh);
+    println!("  bitcell        : 10T1C, C_c = {:.1} fF, {:.2} um^2",
+        p.c_c * 1e15, p.bitcell_area_um2);
+    for (label, supply) in [("0.4/0.8V", Supply::NOMINAL), ("0.3/0.6V", Supply::LOW_POWER)] {
+        let ps = MacroParams::paper().with_supply(supply);
+        let cfg8 = OpConfig::new(8, 1, 8);
+        let cfg1 = OpConfig::new(1, 1, 1);
+        println!("  {label}:");
+        println!("    macro EE  8b : {:>7.1} TOPS/W (8b-norm)   raw 1b: {:.2} POPS/W",
+            ea::ee_8b(&ps, &cfg8) / 1e12, ea::ee_raw(&ps, &cfg1) / 1e15);
+        println!("    throughput   : {:>7.3} TOPS (8b-norm)",
+            timing::peak_throughput_8b(&ps, &cfg8) / 1e12);
+        println!("    system EE    : {:>7.1} TOPS/W (conv loop, 128ch)",
+            system::conv_loop_cost(&ps, 128, 8, true).ee_8b() / 1e12);
+    }
+    let cfg8 = OpConfig::new(8, 1, 8);
+    println!("  area efficiency: {:.1} TOPS/mm^2 (8b) .. {:.0} TOPS/mm^2 (1b raw)",
+        area::area_efficiency_8b(&MacroParams::paper(), &cfg8) / 1e12,
+        area::area_efficiency_raw(&MacroParams::paper(), &OpConfig::new(1, 1, 1)) / 1e12);
+}
+
+fn load_dataset_for(model: &NetworkModel, dir: &str) -> Result<Dataset> {
+    let file = if model.input_shape == [784]
+        || model.input_shape.first() == Some(&4) && model.input_shape.get(1) == Some(&28)
+    {
+        "digits_test.imgt"
+    } else {
+        "textures_test.imgt"
+    };
+    Dataset::load_imgt(format!("{dir}/{file}"))
+}
+
+/// Prepare one image in the model's input layout.
+fn prep_image(model: &NetworkModel, ds: &Dataset, i: usize) -> Vec<f32> {
+    match model.input_shape.len() {
+        1 => ds.flat(i).to_vec(),
+        3 => ds.image_padded(i, model.input_shape[0]),
+        _ => ds.flat(i).to_vec(),
+    }
+}
+
+fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
+    let dir = flags.get("dir").map(String::as_str).unwrap_or("artifacts");
+    let name = flags.get("model").map(String::as_str).unwrap_or("lenet_cim");
+    let n: usize = flags.get("n").map(|s| s.parse()).transpose()?.unwrap_or(200);
+    let backend = flags.get("backend").map(String::as_str).unwrap_or("ideal");
+
+    let model = NetworkModel::load(dir, name)?;
+    let ds = load_dataset_for(&model, dir)?;
+    let n = n.min(ds.n);
+    println!("model {name}: {} layers, trained acc {:?}",
+        model.layers.len(), model.trained_accuracy());
+    println!("evaluating {n} images via backend '{backend}'...");
+
+    let t0 = std::time::Instant::now();
+    let (correct, cost) = match backend {
+        "pjrt" => {
+            let mut rt = Runtime::new()?;
+            rt.load_hlo_text(name, format!("{dir}/{name}.hlo.txt"))?;
+            let mut shape = vec![1usize];
+            shape.extend(&model.input_shape);
+            let mut correct = 0;
+            for i in 0..n {
+                let img = prep_image(&model, &ds, i);
+                let logits = rt.run_f32(name, &img, &shape)?;
+                let pred = logits.iter().enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+                if pred == ds.y[i] as usize { correct += 1; }
+            }
+            (correct, None)
+        }
+        "ideal" | "analog" => {
+            let be = if backend == "ideal" {
+                Backend::Ideal
+            } else {
+                Backend::Analog { seed: 42, noise: true, calibrate: true }
+            };
+            let mut exec = Executor::new(model.clone(), MacroParams::paper(), be)?;
+            let mut correct = 0;
+            for i in 0..n {
+                let img = prep_image(&model, &ds, i);
+                let logits = exec.forward(&img)?;
+                let pred = logits.iter().enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+                if pred == ds.y[i] as usize { correct += 1; }
+            }
+            (correct, Some(exec.cost))
+        }
+        other => bail!("unknown backend '{other}' (ideal|analog|pjrt)"),
+    };
+    let wall = t0.elapsed().as_secs_f64();
+    println!("accuracy: {:.2}% ({correct}/{n})   wall {:.2}s ({:.1} ms/image)",
+        100.0 * correct as f64 / n as f64, wall, 1e3 * wall / n as f64);
+    if let Some(c) = cost {
+        println!("modeled accelerator cost over the run:");
+        println!("  cycles {:>12}   model-time {:.3} ms", c.cycles, c.seconds * 1e3);
+        println!("  energy {:>9.3} uJ  (macro {:.1}% digital {:.1}% leak {:.1}%)",
+            c.e_total() * 1e6,
+            100.0 * c.e_macro / c.e_total(),
+            100.0 * c.e_digital / c.e_total(),
+            100.0 * c.e_leak / c.e_total());
+        println!("  system EE {:.1} TOPS/W (8b-norm), {:.2} GOPS effective",
+            c.ee_8b() / 1e12, c.throughput_8b() / 1e9);
+    }
+    Ok(())
+}
+
+fn cmd_plan(flags: &HashMap<String, String>) -> Result<()> {
+    let dir = flags.get("dir").map(String::as_str).unwrap_or("artifacts");
+    let name = flags.get("model").map(String::as_str).unwrap_or("lenet_cim");
+    let model = NetworkModel::load(dir, name)?;
+    let p = MacroParams::paper();
+    let plan = scheduler::plan(&model, &p);
+    println!("schedule for {name} on the {}x{} macro:", p.n_rows, p.n_cols);
+    print!("{}", plan.render());
+    println!("weight bits total: {}  DRAM reload cycles @32b: {}",
+        model.weight_bits(), plan.total_reload_cycles);
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let dir = flags.get("dir").map(String::as_str).unwrap_or("artifacts");
+    let name = flags.get("model").map(String::as_str).unwrap_or("mlp784");
+    let addr = flags.get("addr").map(String::as_str).unwrap_or("127.0.0.1:7878");
+    let engine = Engine::from_artifacts(dir, name)
+        .with_context(|| format!("loading engine for {name} from {dir}"))?;
+    serve(engine, addr, None)
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = parse_flags(&args[args.len().min(1)..]);
+    match cmd {
+        "info" => {
+            cmd_info();
+            Ok(())
+        }
+        "run" => cmd_run(&flags),
+        "plan" => cmd_plan(&flags),
+        "serve" => cmd_serve(&flags),
+        _ => {
+            println!("usage: imagine <info|run|plan|serve> [--model NAME] [--dir artifacts]");
+            println!("  run:   [--n 200] [--backend ideal|analog|pjrt]");
+            println!("  serve: [--addr 127.0.0.1:7878]");
+            Ok(())
+        }
+    }
+}

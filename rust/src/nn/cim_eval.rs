@@ -1,0 +1,278 @@
+//! Post-training CIM-mapped evaluation of an MLP — the Fig. 3(b) study.
+//!
+//! Takes a float-trained [`Mlp`] and evaluates it through the macro's
+//! functional contract: 4b antipodal weights, r_in-bit unsigned
+//! activations, an `r_out`-bit ADC, an ABN gain quantized to
+//! `gamma_bits` (γ ∈ {1, 2, …, 2^gamma_bits}), optional channel-adaptive
+//! swing (the α_eff(C_in) array split of §II) and the macro's equivalent
+//! output noise. Sweeping (gamma_bits × r_out × adaptive) regenerates the
+//! Fig. 3(b) trend: test error falls as γ precision grows, and the
+//! adaptive swing shifts the curve left by about one bit.
+//!
+//! The digital reconstruction inverts the macro contract exactly:
+//! `dot = Σ (2X−M)·W` is recovered from the code, then the offset-binary
+//! identity `Σ X·W = (dot + M·ΣW)/2` restores the real pre-activation
+//! (the `M·ΣW` constant is what the silicon's ABN offset/bias absorbs).
+
+use crate::config::params::MacroParams;
+use crate::nn::dataset::Dataset;
+use crate::nn::mlp::Mlp;
+use crate::util::rng::Rng;
+
+/// Weight precision used by the mapping (the paper's 4b LeNet setting).
+const R_W: u32 = 4;
+
+/// Evaluation configuration for one Fig. 3b grid point.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalCfg {
+    /// ADC output precision (4..=8 in the figure).
+    pub r_out: u32,
+    /// Input activation precision.
+    pub r_in: u32,
+    /// Bits available to represent the ABN gain (0 ⇒ γ ≡ 1).
+    pub gamma_bits: u32,
+    /// Channel-adaptive DPL swing (serial-split α) vs fixed full-array α.
+    pub adaptive_swing: bool,
+    /// Equivalent output noise in LSB (0 disables).
+    pub noise_lsb: f64,
+    pub seed: u64,
+}
+
+impl EvalCfg {
+    pub fn new(r_out: u32, gamma_bits: u32, adaptive_swing: bool) -> Self {
+        Self {
+            r_out,
+            r_in: 8,
+            gamma_bits,
+            adaptive_swing,
+            noise_lsb: 0.5,
+            seed: 7,
+        }
+    }
+}
+
+/// Per-layer quantized mapping state.
+struct QLayer {
+    /// Antipodal integer weights [out × in], odd levels in [−15, 15].
+    w_q: Vec<f32>,
+    /// Per-output ΣW (offset-binary correction).
+    sum_w: Vec<f32>,
+    w_scale: f32,
+    a_scale: f32,
+    alpha: f64,
+    gamma: f64,
+}
+
+fn build_qlayers(mlp: &Mlp, data: &Dataset, p: &MacroParams, cfg: &EvalCfg) -> Vec<QLayer> {
+    let m = ((1u32 << cfg.r_in) - 1) as f32;
+    let mx = ((1u32 << R_W) - 1) as f32;
+
+    // Pass 1: activation ranges from the float network.
+    let calib_n = data.n.min(96);
+    let mut act_hi = vec![1e-6f32; mlp.layers.len()];
+    for i in 0..calib_n {
+        let (acts, _) = mlp.forward_all(data.flat(i));
+        for (li, a) in acts.iter().enumerate() {
+            for &v in a.iter() {
+                act_hi[li] = act_hi[li].max(v);
+            }
+        }
+    }
+
+    // Quantize weights and derive per-layer state (γ from dv statistics).
+    let mut qlayers = Vec::new();
+    for (li, layer) in mlp.layers.iter().enumerate() {
+        let w_abs_max = layer.w.iter().fold(0f32, |a, &v| a.max(v.abs())).max(1e-9);
+        let w_scale = w_abs_max / mx;
+        let w_q: Vec<f32> = layer
+            .w
+            .iter()
+            .map(|&v| {
+                let b = ((v / w_scale + mx) / 2.0).round().clamp(0.0, mx);
+                2.0 * b - mx
+            })
+            .collect();
+        let sum_w: Vec<f32> = (0..layer.n_out)
+            .map(|o| w_q[o * layer.n_in..(o + 1) * layer.n_in].iter().sum())
+            .collect();
+
+        let rows = layer.n_in.div_ceil(p.rows_per_unit) * p.rows_per_unit;
+        let alpha = if cfg.adaptive_swing {
+            p.alpha_eff(rows)
+        } else {
+            p.alpha_eff(p.n_rows)
+        };
+        let a_scale = act_hi[li] / m;
+
+        // dv σ estimate over the calibration subset.
+        let dv_unit = alpha * p.supply.vddl
+            / (1u64 << (cfg.r_in + R_W)) as f64;
+        let mut sq = 0f64;
+        let mut cnt = 0usize;
+        for i in 0..calib_n.min(32) {
+            let (acts, _) = mlp.forward_all(data.flat(i));
+            let a = &acts[li];
+            for o in 0..layer.n_out.min(32) {
+                let row = &w_q[o * layer.n_in..(o + 1) * layer.n_in];
+                let mut dot = 0f64;
+                for (j, &av) in a.iter().enumerate() {
+                    let xq = (av / a_scale).round().clamp(0.0, m);
+                    dot += (2.0 * xq - m) as f64 * row[j] as f64;
+                }
+                let dv = dv_unit * dot;
+                sq += dv * dv;
+                cnt += 1;
+            }
+        }
+        let dv_sigma = (sq / cnt.max(1) as f64).sqrt().max(1e-9);
+
+        // γ: fill the ADC range with ~3.5σ, quantized to {1..2^bits}.
+        let ideal = p.alpha_adc() * p.supply.vddh / (3.5 * dv_sigma);
+        let max_gamma = (1u64 << cfg.gamma_bits) as f64;
+        let mut gamma = 1.0;
+        while gamma * 2.0 <= ideal.min(max_gamma) {
+            gamma *= 2.0;
+        }
+        let _ = li;
+        qlayers.push(QLayer { w_q, sum_w, w_scale, a_scale, alpha, gamma });
+    }
+    qlayers
+}
+
+/// Evaluate the MLP through the CIM contract; returns test accuracy.
+pub fn eval_cim(mlp: &Mlp, data: &Dataset, p: &MacroParams, cfg: &EvalCfg) -> f64 {
+    let qlayers = build_qlayers(mlp, data, p, cfg);
+    let mut rng = Rng::new(cfg.seed);
+    let m = ((1u32 << cfg.r_in) - 1) as f32;
+    let half = (1u64 << (cfg.r_out - 1)) as f64;
+    let top = (1u64 << cfg.r_out) as f64 - 1.0;
+
+    let mut correct = 0usize;
+    for i in 0..data.n {
+        let mut cur: Vec<f32> = data.flat(i).to_vec();
+        for (li, (layer, ql)) in mlp.layers.iter().zip(&qlayers).enumerate() {
+            let lsb = p.adc_lsb(cfg.r_out, ql.gamma);
+            let dv_unit =
+                ql.alpha * p.supply.vddl / (1u64 << (cfg.r_in + R_W)) as f64;
+            let xq: Vec<f32> = cur
+                .iter()
+                .map(|&v| (v / ql.a_scale).round().clamp(0.0, m))
+                .collect();
+            let mut out = vec![0f32; layer.n_out];
+            for o in 0..layer.n_out {
+                let row = &ql.w_q[o * layer.n_in..(o + 1) * layer.n_in];
+                let mut dot = 0f64;
+                for (j, &xv) in xq.iter().enumerate() {
+                    dot += (2.0 * xv - m) as f64 * row[j] as f64;
+                }
+                // Macro + ADC (Eq. 7), with equivalent noise.
+                let dv = dv_unit * dot;
+                let mut code = half + dv / lsb;
+                if cfg.noise_lsb > 0.0 {
+                    code += rng.normal(0.0, cfg.noise_lsb * (1.0 + ql.gamma / 16.0));
+                }
+                let code = code.floor().clamp(0.0, top);
+                // Digital reconstruction: invert Eq. 7, undo offset-binary.
+                let dot_rec = (code - half) * lsb / dv_unit;
+                let xw = (dot_rec as f32 + m * ql.sum_w[o]) / 2.0;
+                out[o] = xw * ql.a_scale * ql.w_scale + layer.b[o];
+                if li + 1 < mlp.layers.len() {
+                    out[o] = out[o].max(0.0);
+                }
+            }
+            cur = out;
+        }
+        let pred = cur
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(k, _)| k)
+            .unwrap();
+        if pred == data.y[i] as usize {
+            correct += 1;
+        }
+    }
+    correct as f64 / data.n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::mlp::Mlp;
+    use crate::util::rng::Rng;
+
+    fn toy(n: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let dim = 36; // one DP unit
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let c = rng.below(2) as i32;
+            let mu = if c == 1 { 0.7 } else { 0.25 };
+            for _ in 0..dim {
+                x.push(rng.normal(mu, 0.12).max(0.0) as f32);
+            }
+            y.push(c);
+        }
+        Dataset { x, y, n, shape: vec![dim] }
+    }
+
+    fn trained() -> (Mlp, Dataset) {
+        let train = toy(400, 1);
+        let test = toy(200, 2);
+        let mut mlp = Mlp::new(&[36, 24, 2], 5);
+        mlp.train(&train, 10, 32, 1e-2, 3);
+        (mlp, test)
+    }
+
+    #[test]
+    fn cim_eval_tracks_float_accuracy_at_high_precision() {
+        let (mlp, test) = trained();
+        let float_acc = mlp.accuracy(&test);
+        assert!(float_acc > 0.9);
+        let p = MacroParams::paper();
+        let cfg = EvalCfg {
+            noise_lsb: 0.0,
+            ..EvalCfg::new(8, 5, true)
+        };
+        let acc = eval_cim(&mlp, &test, &p, &cfg);
+        assert!(acc > float_acc - 0.08, "float={float_acc} cim={acc}");
+    }
+
+    #[test]
+    fn gamma_recovery_beats_fixed_unity_gain() {
+        // The Fig. 3b mechanism: γ≡1 + fixed full-array swing buries the
+        // DP distribution in a few ADC codes at low ADC precision.
+        let (mlp, test) = trained();
+        let p = MacroParams::paper();
+        let bad = EvalCfg {
+            noise_lsb: 0.0,
+            ..EvalCfg::new(4, 0, false)
+        };
+        let good = EvalCfg {
+            noise_lsb: 0.0,
+            ..EvalCfg::new(4, 5, true)
+        };
+        let acc_bad = eval_cim(&mlp, &test, &p, &bad);
+        let acc_good = eval_cim(&mlp, &test, &p, &good);
+        assert!(
+            acc_good > acc_bad + 0.1,
+            "bad={acc_bad} good={acc_good} (recovery expected)"
+        );
+    }
+
+    #[test]
+    fn adaptive_swing_saves_gamma_bits() {
+        // With few γ bits, enabling the channel-adaptive swing should not
+        // hurt and typically helps small-C_in layers (the §II claim).
+        let (mlp, test) = trained();
+        let p = MacroParams::paper();
+        for gb in [1u32, 2] {
+            let fixed = EvalCfg { noise_lsb: 0.0, ..EvalCfg::new(5, gb, false) };
+            let adapt = EvalCfg { noise_lsb: 0.0, ..EvalCfg::new(5, gb, true) };
+            let a_f = eval_cim(&mlp, &test, &p, &fixed);
+            let a_a = eval_cim(&mlp, &test, &p, &adapt);
+            assert!(a_a + 0.02 >= a_f, "gb={gb}: fixed={a_f} adaptive={a_a}");
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Dataset loading: the synthetic test sets exported by the compile path
+//! (`artifacts/digits_test.imgt`, `textures_test.imgt`).
+
+use crate::util::tensorfile::TensorFile;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// An image classification dataset in CHW float form.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Flattened images, `n × (c*h*w)`.
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub n: usize,
+    pub shape: Vec<usize>, // per-image shape (e.g. [28,28] or [3,32,32])
+}
+
+impl Dataset {
+    pub fn load_imgt(path: impl AsRef<Path>) -> Result<Dataset> {
+        let tf = TensorFile::load(path.as_ref())
+            .with_context(|| format!("loading dataset {:?}", path.as_ref()))?;
+        let xt = tf.req("x")?;
+        let yt = tf.req("y")?;
+        let n = xt.dims[0];
+        if yt.len() != n {
+            bail!("x/y count mismatch: {} vs {}", n, yt.len());
+        }
+        let shape = xt.dims[1..].to_vec();
+        let x = xt.to_f32();
+        let y = match &yt.data {
+            crate::util::tensorfile::TensorData::I32(v) => v.clone(),
+            other => bail!("labels must be i32, got {other:?}"),
+        };
+        Ok(Dataset { x, y, n, shape })
+    }
+
+    pub fn image_len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        let len = self.image_len();
+        &self.x[i * len..(i + 1) * len]
+    }
+
+    /// Flattened image (for MLP input).
+    pub fn flat(&self, i: usize) -> &[f32] {
+        self.image(i)
+    }
+
+    /// Image padded to `c_target` channels (zero fill) in CHW order —
+    /// mirrors python `model.pad_input_channels`.
+    pub fn image_padded(&self, i: usize, c_target: usize) -> Vec<f32> {
+        let img = self.image(i);
+        let (c, hw) = match self.shape.len() {
+            2 => (1usize, self.shape[0] * self.shape[1]),
+            3 => (self.shape[0], self.shape[1] * self.shape[2]),
+            _ => (1, img.len()),
+        };
+        let mut out = vec![0f32; c_target * hw];
+        out[..c * hw].copy_from_slice(img);
+        out
+    }
+
+    /// Spatial dims (h, w).
+    pub fn hw(&self) -> (usize, usize) {
+        match self.shape.len() {
+            2 => (self.shape[0], self.shape[1]),
+            3 => (self.shape[1], self.shape[2]),
+            _ => (1, self.image_len()),
+        }
+    }
+
+    /// Take the first `k` samples (cheap view-copy).
+    pub fn take(&self, k: usize) -> Dataset {
+        let k = k.min(self.n);
+        Dataset {
+            x: self.x[..k * self.image_len()].to_vec(),
+            y: self.y[..k].to_vec(),
+            n: k,
+            shape: self.shape.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tensorfile::{Tensor, TensorData, TensorFile};
+
+    fn fake_dataset(n: usize) -> Dataset {
+        let mut tf = TensorFile::new();
+        tf.push(Tensor {
+            name: "x".into(),
+            dims: vec![n, 2, 3, 3],
+            data: TensorData::F32((0..n * 18).map(|i| i as f32).collect()),
+        });
+        tf.push(Tensor {
+            name: "y".into(),
+            dims: vec![n],
+            data: TensorData::I32((0..n as i32).collect()),
+        });
+        let dir = std::env::temp_dir().join("imagine_ds_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("ds{n}.imgt"));
+        tf.save(&path).unwrap();
+        Dataset::load_imgt(&path).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_and_access() {
+        let ds = fake_dataset(4);
+        assert_eq!(ds.n, 4);
+        assert_eq!(ds.image_len(), 18);
+        assert_eq!(ds.image(1)[0], 18.0);
+        assert_eq!(ds.y[2], 2);
+        assert_eq!(ds.hw(), (3, 3));
+    }
+
+    #[test]
+    fn channel_padding() {
+        let ds = fake_dataset(2);
+        let p = ds.image_padded(0, 4);
+        assert_eq!(p.len(), 4 * 9);
+        assert_eq!(&p[..18], ds.image(0));
+        assert!(p[18..].iter().skip(18 - 18).all(|_| true));
+        assert!(p[2 * 9..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn take_subsets() {
+        let ds = fake_dataset(5);
+        let t = ds.take(2);
+        assert_eq!(t.n, 2);
+        assert_eq!(t.image(1), ds.image(1));
+    }
+}

@@ -1,0 +1,286 @@
+//! Rust-native MLP training — the substrate for the Fig. 3(b) study
+//! (784-512-128-10 MLP, test error vs ABN gain precision × ADC bits).
+//!
+//! Plain f32 SGD/Adam with hand-rolled dense layers; no BLAS in the
+//! vendored dependency set, so matmuls are cache-blocked loops. Training
+//! the Fig. 3b topology on a few thousand synthetic digits takes seconds
+//! in release mode, which is all the sweep needs.
+
+use crate::nn::dataset::Dataset;
+use crate::util::rng::Rng;
+
+/// One dense layer: row-major weights `[out × in]` + bias.
+#[derive(Clone, Debug)]
+pub struct Dense {
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    pub n_in: usize,
+    pub n_out: usize,
+}
+
+impl Dense {
+    pub fn new(n_in: usize, n_out: usize, rng: &mut Rng) -> Self {
+        let scale = (2.0 / n_in as f64).sqrt();
+        let w = (0..n_in * n_out)
+            .map(|_| (rng.gaussian() * scale) as f32)
+            .collect();
+        Self { w, b: vec![0.0; n_out], n_in, n_out }
+    }
+
+    /// y = W x + b.
+    pub fn forward(&self, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.n_in);
+        debug_assert_eq!(y.len(), self.n_out);
+        for (o, yo) in y.iter_mut().enumerate() {
+            let row = &self.w[o * self.n_in..(o + 1) * self.n_in];
+            let mut acc = self.b[o];
+            // 4-way unroll; the compiler vectorizes the rest.
+            let mut i = 0;
+            while i + 4 <= self.n_in {
+                acc += row[i] * x[i]
+                    + row[i + 1] * x[i + 1]
+                    + row[i + 2] * x[i + 2]
+                    + row[i + 3] * x[i + 3];
+                i += 4;
+            }
+            while i < self.n_in {
+                acc += row[i] * x[i];
+                i += 1;
+            }
+            *yo = acc;
+        }
+    }
+}
+
+/// The MLP: dense layers with ReLU between them.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub layers: Vec<Dense>,
+}
+
+/// Adam state per parameter tensor.
+struct Adam {
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl Adam {
+    fn new(n: usize) -> Self {
+        Self { m: vec![0.0; n], v: vec![0.0; n] }
+    }
+
+    fn step(&mut self, p: &mut [f32], g: &[f32], lr: f32, t: i32) {
+        let b1 = 0.9f32;
+        let b2 = 0.999f32;
+        let eps = 1e-8f32;
+        let c1 = 1.0 / (1.0 - b1.powi(t));
+        let c2 = 1.0 / (1.0 - b2.powi(t));
+        for i in 0..p.len() {
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g[i];
+            self.v[i] = b2 * self.v[i] + (1.0 - b2) * g[i] * g[i];
+            p[i] -= lr * (self.m[i] * c1) / ((self.v[i] * c2).sqrt() + eps);
+        }
+    }
+}
+
+impl Mlp {
+    /// Build with the given layer widths, e.g. `[784, 512, 128, 10]`.
+    pub fn new(widths: &[usize], seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let layers = widths
+            .windows(2)
+            .map(|w| Dense::new(w[0], w[1], &mut rng))
+            .collect();
+        Self { layers }
+    }
+
+    /// Forward pass returning all post-ReLU activations (input included)
+    /// and the final logits.
+    pub fn forward_all(&self, x: &[f32]) -> (Vec<Vec<f32>>, Vec<f32>) {
+        let mut acts = vec![x.to_vec()];
+        let mut cur = x.to_vec();
+        for (li, layer) in self.layers.iter().enumerate() {
+            let mut y = vec![0f32; layer.n_out];
+            layer.forward(&cur, &mut y);
+            if li + 1 < self.layers.len() {
+                for v in y.iter_mut() {
+                    *v = v.max(0.0);
+                }
+                acts.push(y.clone());
+            }
+            cur = y;
+        }
+        (acts, cur)
+    }
+
+    pub fn logits(&self, x: &[f32]) -> Vec<f32> {
+        self.forward_all(x).1
+    }
+
+    /// Train with Adam + softmax cross-entropy. Returns final train loss.
+    pub fn train(
+        &mut self,
+        data: &Dataset,
+        epochs: usize,
+        batch: usize,
+        lr: f32,
+        seed: u64,
+    ) -> f32 {
+        let mut rng = Rng::new(seed ^ 0xBEEF);
+        let mut adam_w: Vec<Adam> = self.layers.iter().map(|l| Adam::new(l.w.len())).collect();
+        let mut adam_b: Vec<Adam> = self.layers.iter().map(|l| Adam::new(l.b.len())).collect();
+        let mut order: Vec<usize> = (0..data.n).collect();
+        let mut t = 0i32;
+        let mut last_loss = 0.0f32;
+
+        for _ep in 0..epochs {
+            rng.shuffle(&mut order);
+            let mut ep_loss = 0.0f32;
+            let mut nb = 0;
+            for chunk in order.chunks(batch) {
+                t += 1;
+                // Accumulate gradients over the batch.
+                let mut gw: Vec<Vec<f32>> =
+                    self.layers.iter().map(|l| vec![0.0; l.w.len()]).collect();
+                let mut gb: Vec<Vec<f32>> =
+                    self.layers.iter().map(|l| vec![0.0; l.b.len()]).collect();
+                let mut loss = 0.0f32;
+                for &i in chunk {
+                    let x = data.flat(i);
+                    let yi = data.y[i] as usize;
+                    let (acts, logits) = self.forward_all(x);
+                    // softmax CE
+                    let mx = logits.iter().cloned().fold(f32::MIN, f32::max);
+                    let exps: Vec<f32> = logits.iter().map(|&v| (v - mx).exp()).collect();
+                    let sum: f32 = exps.iter().sum();
+                    loss -= (exps[yi] / sum).ln();
+                    // backward
+                    let mut delta: Vec<f32> =
+                        exps.iter().map(|&e| e / sum).collect();
+                    delta[yi] -= 1.0;
+                    for li in (0..self.layers.len()).rev() {
+                        let layer = &self.layers[li];
+                        let a_in = &acts[li];
+                        for o in 0..layer.n_out {
+                            let d = delta[o];
+                            if d != 0.0 {
+                                gb[li][o] += d;
+                                let grow = &mut gw[li][o * layer.n_in..(o + 1) * layer.n_in];
+                                for (gi, &ai) in grow.iter_mut().zip(a_in.iter()) {
+                                    *gi += d * ai;
+                                }
+                            }
+                        }
+                        if li > 0 {
+                            let mut next = vec![0f32; layer.n_in];
+                            for o in 0..layer.n_out {
+                                let d = delta[o];
+                                if d != 0.0 {
+                                    let row = &layer.w[o * layer.n_in..(o + 1) * layer.n_in];
+                                    for (ni, &wv) in next.iter_mut().zip(row.iter()) {
+                                        *ni += d * wv;
+                                    }
+                                }
+                            }
+                            // ReLU mask of the upstream activation.
+                            for (nv, &av) in next.iter_mut().zip(acts[li].iter()) {
+                                if av <= 0.0 {
+                                    *nv = 0.0;
+                                }
+                            }
+                            delta = next;
+                        }
+                    }
+                }
+                let inv = 1.0 / chunk.len() as f32;
+                for li in 0..self.layers.len() {
+                    for g in gw[li].iter_mut() {
+                        *g *= inv;
+                    }
+                    for g in gb[li].iter_mut() {
+                        *g *= inv;
+                    }
+                    adam_w[li].step(&mut self.layers[li].w, &gw[li], lr, t);
+                    adam_b[li].step(&mut self.layers[li].b, &gb[li], lr, t);
+                }
+                ep_loss += loss * inv;
+                nb += 1;
+            }
+            last_loss = ep_loss / nb as f32;
+        }
+        last_loss
+    }
+
+    /// Classification accuracy on a dataset.
+    pub fn accuracy(&self, data: &Dataset) -> f64 {
+        let mut correct = 0usize;
+        for i in 0..data.n {
+            let logits = self.logits(data.flat(i));
+            let pred = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(k, _)| k)
+                .unwrap();
+            if pred == data.y[i] as usize {
+                correct += 1;
+            }
+        }
+        correct as f64 / data.n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::dataset::Dataset;
+
+    /// A tiny separable 2-class problem: class = sign of the mean.
+    fn toy(n: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let dim = 16;
+        let mut x = Vec::with_capacity(n * dim);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let c = rng.bool(0.5) as i32;
+            let mu = if c == 1 { 0.6 } else { 0.2 };
+            for _ in 0..dim {
+                x.push(rng.normal(mu, 0.15) as f32);
+            }
+            y.push(c);
+        }
+        Dataset { x, y, n, shape: vec![dim] }
+    }
+
+    #[test]
+    fn dense_forward_matches_manual() {
+        let mut rng = Rng::new(0);
+        let mut d = Dense::new(3, 2, &mut rng);
+        d.w = vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0];
+        d.b = vec![0.5, -0.5];
+        let mut y = vec![0.0; 2];
+        d.forward(&[1.0, 1.0, 1.0], &mut y);
+        assert_eq!(y, vec![6.5, -0.5]);
+    }
+
+    #[test]
+    fn mlp_learns_toy_problem() {
+        let train = toy(400, 1);
+        let test = toy(200, 2);
+        let mut mlp = Mlp::new(&[16, 32, 2], 7);
+        let before = mlp.accuracy(&test);
+        mlp.train(&train, 8, 32, 1e-2, 3);
+        let after = mlp.accuracy(&test);
+        assert!(after > 0.95, "before={before} after={after}");
+    }
+
+    #[test]
+    fn forward_all_shapes() {
+        let mlp = Mlp::new(&[8, 6, 4, 3], 1);
+        let (acts, logits) = mlp.forward_all(&[0.5; 8]);
+        assert_eq!(acts.len(), 3); // input + two hidden
+        assert_eq!(acts[1].len(), 6);
+        assert_eq!(logits.len(), 3);
+        assert!(acts[1].iter().all(|&v| v >= 0.0)); // post-ReLU
+    }
+}

@@ -1,0 +1,6 @@
+//! Rust-native NN stack: dataset loading, MLP training and CIM-mapped
+//! post-training evaluation (the Fig. 3b study).
+
+pub mod cim_eval;
+pub mod dataset;
+pub mod mlp;

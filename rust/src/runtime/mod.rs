@@ -1,0 +1,5 @@
+//! PJRT-based runtime for AOT-compiled model artifacts (request path).
+
+pub mod pjrt;
+
+pub use pjrt::Runtime;

@@ -1,0 +1,127 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them on
+//! the request path — python-free.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO *text* (not serialized
+//! proto — xla_extension 0.5.1 rejects jax≥0.5's 64-bit instruction ids)
+//! → `HloModuleProto::from_text_file` → compile on the CPU PJRT client →
+//! execute with `Literal` buffers. Computations are compiled once and
+//! cached by name.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled executable plus bookkeeping.
+pub struct LoadedModel {
+    pub name: String,
+    pub path: PathBuf,
+    exe: xla::PjRtLoadedExecutable,
+    /// Compile wall time (perf accounting).
+    pub compile_seconds: f64,
+}
+
+/// The runtime: one PJRT CPU client + a registry of compiled models.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    models: HashMap<String, LoadedModel>,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, models: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact under `name`.
+    pub fn load_hlo_text(&mut self, name: &str, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))?;
+        self.models.insert(
+            name.to_string(),
+            LoadedModel {
+                name: name.to_string(),
+                path: path.to_path_buf(),
+                exe,
+                compile_seconds: t0.elapsed().as_secs_f64(),
+            },
+        );
+        Ok(())
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.models.contains_key(name)
+    }
+
+    pub fn model_names(&self) -> Vec<&str> {
+        self.models.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn compile_seconds(&self, name: &str) -> Option<f64> {
+        self.models.get(name).map(|m| m.compile_seconds)
+    }
+
+    fn exec_literals(&self, name: &str, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let model = self
+            .models
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{name}' not loaded"))?;
+        let result = model
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing '{name}': {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of '{name}': {e:?}"))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        lit.to_tuple1().map_err(|e| anyhow!("untupling '{name}': {e:?}"))
+    }
+
+    /// Execute a model taking one f32 tensor and returning one f32 tensor.
+    pub fn run_f32(
+        &self,
+        name: &str,
+        input: &[f32],
+        in_dims: &[usize],
+    ) -> Result<Vec<f32>> {
+        let dims: Vec<i64> = in_dims.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshaping input: {e:?}"))?;
+        let out = self.exec_literals(name, &[lit])?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("reading f32 output: {e:?}"))
+    }
+
+    /// Execute a model taking one i32 tensor and returning one i32 tensor.
+    pub fn run_i32(
+        &self,
+        name: &str,
+        input: &[i32],
+        in_dims: &[usize],
+    ) -> Result<Vec<i32>> {
+        let dims: Vec<i64> = in_dims.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshaping input: {e:?}"))?;
+        let out = self.exec_literals(name, &[lit])?;
+        out.to_vec::<i32>().map_err(|e| anyhow!("reading i32 output: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime tests live in rust/tests/runtime_integration.rs — they need
+    // the artifacts/ directory produced by `make artifacts`.
+}

@@ -1,0 +1,6 @@
+//! Shared utilities: deterministic PRNG, statistics, JSON, tensor I/O.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod tensorfile;

@@ -1,0 +1,198 @@
+//! Small statistics helpers used by the characterization benches and the
+//! measurement-style experiments (INL/DNL extraction, RMS, histograms).
+
+/// Mean of a slice. Returns 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Root-mean-square of a slice (e.g. error vectors in LSB).
+pub fn rms(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x * x).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Maximum absolute value.
+pub fn max_abs(xs: &[f64]) -> f64 {
+    xs.iter().fold(0.0f64, |a, &x| a.max(x.abs()))
+}
+
+/// Minimum and maximum. Returns (0, 0) for empty input.
+pub fn min_max(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &x in xs {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    (lo, hi)
+}
+
+/// Percentile via linear interpolation on the sorted copy (p in [0,100]).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+/// Linear regression y = a + b*x over paired slices; returns (a, b, r2).
+pub fn linreg(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2);
+    let n = xs.len() as f64;
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for i in 0..xs.len() {
+        let dx = xs[i] - mx;
+        let dy = ys[i] - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    let b = if sxx == 0.0 { 0.0 } else { sxy / sxx };
+    let a = my - b * mx;
+    let r2 = if sxx == 0.0 || syy == 0.0 {
+        1.0
+    } else {
+        (sxy * sxy) / (sxx * syy)
+    };
+    let _ = n;
+    (a, b, r2)
+}
+
+/// Integral nonlinearity of a transfer curve `codes[i]` measured against the
+/// best-fit line through (inputs, codes). Returned per point, in LSB.
+pub fn inl_best_fit(inputs: &[f64], codes: &[f64]) -> Vec<f64> {
+    let (a, b, _) = linreg(inputs, codes);
+    inputs
+        .iter()
+        .zip(codes)
+        .map(|(&x, &c)| c - (a + b * x))
+        .collect()
+}
+
+/// Differential nonlinearity: DNL[k] = (codes[k] - codes[k-1]) - ideal_step.
+pub fn dnl(codes: &[f64], ideal_step: f64) -> Vec<f64> {
+    codes
+        .windows(2)
+        .map(|w| (w[1] - w[0]) - ideal_step)
+        .collect()
+}
+
+/// Histogram with `bins` equal-width bins over [lo, hi].
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+    assert!(bins > 0 && hi > lo);
+    let mut h = vec![0usize; bins];
+    let w = (hi - lo) / bins as f64;
+    for &x in xs {
+        if x < lo || x >= hi {
+            continue;
+        }
+        let b = (((x - lo) / w) as usize).min(bins - 1);
+        h[b] += 1;
+    }
+    h
+}
+
+/// Shannon entropy (bits) of a discrete distribution given as counts.
+pub fn entropy_bits(counts: &[usize]) -> f64 {
+    let total: usize = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let mut h = 0.0;
+    for &c in counts {
+        if c > 0 {
+            let p = c as f64 / total as f64;
+            h -= p * p.log2();
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_rms_basic() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std(&xs) - (1.25f64).sqrt()).abs() < 1e-12);
+        assert!((rms(&[3.0, 4.0]) - (12.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0, 20.0, 30.0];
+        assert!((percentile(&xs, 0.0) - 0.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 30.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linreg_recovers_line() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 2.0 * x).collect();
+        let (a, b, r2) = linreg(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+        assert!((r2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn inl_of_perfect_line_is_zero() {
+        let xs: Vec<f64> = (0..32).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 4.0 * x - 1.0).collect();
+        let inl = inl_best_fit(&xs, &ys);
+        assert!(max_abs(&inl) < 1e-9);
+    }
+
+    #[test]
+    fn dnl_of_uniform_steps_is_zero() {
+        let codes: Vec<f64> = (0..16).map(|i| i as f64).collect();
+        assert!(max_abs(&dnl(&codes, 1.0)) < 1e-12);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let xs = [0.1, 0.2, 0.55, 0.9, 0.95];
+        let h = histogram(&xs, 0.0, 1.0, 2);
+        assert_eq!(h, vec![2, 3]);
+    }
+
+    #[test]
+    fn entropy_uniform_is_log2_n() {
+        let counts = [10usize; 8];
+        assert!((entropy_bits(&counts) - 3.0).abs() < 1e-12);
+    }
+}

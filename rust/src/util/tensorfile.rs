@@ -1,0 +1,337 @@
+//! Binary tensor container ("IMGT" format) used to ship trained weights
+//! from the python compile path to the rust coordinator.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic   : 4 bytes  b"IMGT"
+//! version : u32      (currently 1)
+//! count   : u32      number of tensors
+//! repeat count times:
+//!   name_len : u32, name : utf-8 bytes
+//!   dtype    : u8   (0 = f32, 1 = i8, 2 = i32)
+//!   ndim     : u32, dims : u32 × ndim
+//!   data     : dtype-sized elements, row-major
+//! ```
+//! The python writer lives in `python/compile/export.py`; keep in sync.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+pub const MAGIC: &[u8; 4] = b"IMGT";
+pub const VERSION: u32 = 1;
+
+/// Element type of a stored tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32 = 0,
+    I8 = 1,
+    I32 = 2,
+}
+
+impl DType {
+    fn from_u8(v: u8) -> Result<Self> {
+        match v {
+            0 => Ok(DType::F32),
+            1 => Ok(DType::I8),
+            2 => Ok(DType::I32),
+            _ => bail!("unknown dtype tag {v}"),
+        }
+    }
+}
+
+/// A named, shaped tensor. Data is stored as f64-agnostic raw variants to
+/// avoid pulling in a generic tensor library.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: TensorData,
+}
+
+#[derive(Clone, Debug)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I8(Vec<i8>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I8(_) => DType::I8,
+            TensorData::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// View as f32, converting integers. Cheap clone for i8/i32.
+    pub fn to_f32(&self) -> Vec<f32> {
+        match &self.data {
+            TensorData::F32(v) => v.clone(),
+            TensorData::I8(v) => v.iter().map(|&x| x as f32).collect(),
+            TensorData::I32(v) => v.iter().map(|&x| x as f32).collect(),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => Err(anyhow!("tensor '{}' is not f32", self.name)),
+        }
+    }
+
+    pub fn as_i8(&self) -> Result<&[i8]> {
+        match &self.data {
+            TensorData::I8(v) => Ok(v),
+            _ => Err(anyhow!("tensor '{}' is not i8", self.name)),
+        }
+    }
+}
+
+/// An ordered collection of tensors with name lookup.
+#[derive(Clone, Debug, Default)]
+pub struct TensorFile {
+    pub tensors: Vec<Tensor>,
+    index: BTreeMap<String, usize>,
+}
+
+impl TensorFile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, t: Tensor) {
+        self.index.insert(t.name.clone(), self.tensors.len());
+        self.tensors.push(t);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.index.get(name).map(|&i| &self.tensors[i])
+    }
+
+    pub fn req(&self, name: &str) -> Result<&Tensor> {
+        self.get(name)
+            .ok_or_else(|| anyhow!("tensor '{name}' not found in file"))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.tensors.iter().map(|t| t.name.as_str()).collect()
+    }
+
+    // ---------------- serialization ----------------
+
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for t in &self.tensors {
+            let expected: usize = t.dims.iter().product();
+            let actual = match &t.data {
+                TensorData::F32(v) => v.len(),
+                TensorData::I8(v) => v.len(),
+                TensorData::I32(v) => v.len(),
+            };
+            if expected != actual {
+                bail!(
+                    "tensor '{}' dims {:?} imply {} elements but data has {}",
+                    t.name,
+                    t.dims,
+                    expected,
+                    actual
+                );
+            }
+            w.write_all(&(t.name.len() as u32).to_le_bytes())?;
+            w.write_all(t.name.as_bytes())?;
+            w.write_all(&[t.dtype() as u8])?;
+            w.write_all(&(t.dims.len() as u32).to_le_bytes())?;
+            for &d in &t.dims {
+                w.write_all(&(d as u32).to_le_bytes())?;
+            }
+            match &t.data {
+                TensorData::F32(v) => {
+                    for x in v {
+                        w.write_all(&x.to_le_bytes())?;
+                    }
+                }
+                TensorData::I8(v) => {
+                    let bytes: Vec<u8> = v.iter().map(|&x| x as u8).collect();
+                    w.write_all(&bytes)?;
+                }
+                TensorData::I32(v) => {
+                    for x in v {
+                        w.write_all(&x.to_le_bytes())?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {:?}", path.as_ref()))?;
+        self.write_to(&mut f)
+    }
+
+    pub fn read_from(r: &mut impl Read) -> Result<Self> {
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("bad magic: {:?} (not an IMGT tensor file)", magic);
+        }
+        let version = read_u32(r)?;
+        if version != VERSION {
+            bail!("unsupported tensor file version {version}");
+        }
+        let count = read_u32(r)? as usize;
+        if count > 1_000_000 {
+            bail!("implausible tensor count {count}");
+        }
+        let mut tf = TensorFile::new();
+        for _ in 0..count {
+            let name_len = read_u32(r)? as usize;
+            if name_len > 4096 {
+                bail!("implausible tensor name length {name_len}");
+            }
+            let mut name_bytes = vec![0u8; name_len];
+            r.read_exact(&mut name_bytes)?;
+            let name = String::from_utf8(name_bytes).context("tensor name not utf-8")?;
+            let mut tag = [0u8; 1];
+            r.read_exact(&mut tag)?;
+            let dtype = DType::from_u8(tag[0])?;
+            let ndim = read_u32(r)? as usize;
+            if ndim > 16 {
+                bail!("implausible ndim {ndim}");
+            }
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(read_u32(r)? as usize);
+            }
+            let n: usize = dims.iter().product();
+            if n > 512 * 1024 * 1024 {
+                bail!("implausible tensor size {n}");
+            }
+            let data = match dtype {
+                DType::F32 => {
+                    let mut buf = vec![0u8; n * 4];
+                    r.read_exact(&mut buf)?;
+                    TensorData::F32(
+                        buf.chunks_exact(4)
+                            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                            .collect(),
+                    )
+                }
+                DType::I8 => {
+                    let mut buf = vec![0u8; n];
+                    r.read_exact(&mut buf)?;
+                    TensorData::I8(buf.into_iter().map(|b| b as i8).collect())
+                }
+                DType::I32 => {
+                    let mut buf = vec![0u8; n * 4];
+                    r.read_exact(&mut buf)?;
+                    TensorData::I32(
+                        buf.chunks_exact(4)
+                            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                            .collect(),
+                    )
+                }
+            };
+            tf.push(Tensor { name, dims, data });
+        }
+        Ok(tf)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {:?}", path.as_ref()))?;
+        Self::read_from(&mut f)
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TensorFile {
+        let mut tf = TensorFile::new();
+        tf.push(Tensor {
+            name: "w1".into(),
+            dims: vec![2, 3],
+            data: TensorData::F32(vec![1.0, -2.0, 3.5, 0.0, 1e-3, -7.25]),
+        });
+        tf.push(Tensor {
+            name: "q".into(),
+            dims: vec![4],
+            data: TensorData::I8(vec![-128, -1, 0, 127]),
+        });
+        tf.push(Tensor {
+            name: "meta".into(),
+            dims: vec![2],
+            data: TensorData::I32(vec![1152, 256]),
+        });
+        tf
+    }
+
+    #[test]
+    fn roundtrip_in_memory() {
+        let tf = sample();
+        let mut buf = Vec::new();
+        tf.write_to(&mut buf).unwrap();
+        let tf2 = TensorFile::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(tf2.tensors.len(), 3);
+        assert_eq!(tf2.req("w1").unwrap().as_f32().unwrap()[2], 3.5);
+        assert_eq!(tf2.req("q").unwrap().as_i8().unwrap(), &[-128, -1, 0, 127]);
+        assert_eq!(tf2.req("meta").unwrap().dims, vec![2]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut buf = b"NOPE".to_vec();
+        buf.extend_from_slice(&[0u8; 16]);
+        assert!(TensorFile::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn dims_data_mismatch_rejected_on_write() {
+        let mut tf = TensorFile::new();
+        tf.push(Tensor {
+            name: "bad".into(),
+            dims: vec![10],
+            data: TensorData::F32(vec![1.0]),
+        });
+        let mut buf = Vec::new();
+        assert!(tf.write_to(&mut buf).is_err());
+    }
+
+    #[test]
+    fn to_f32_converts_integers() {
+        let tf = sample();
+        assert_eq!(tf.req("q").unwrap().to_f32(), vec![-128.0, -1.0, 0.0, 127.0]);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("imgt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.imgt");
+        sample().save(&path).unwrap();
+        let tf = TensorFile::load(&path).unwrap();
+        assert_eq!(tf.names(), vec!["w1", "q", "meta"]);
+    }
+}

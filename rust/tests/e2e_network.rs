@@ -1,0 +1,159 @@
+//! End-to-end network tests over the trained artifacts: manifest loading,
+//! scheduling, executor accuracy (ideal + analog), LMEM fit checks.
+//! Requires `make artifacts` (skips otherwise).
+
+use imagine::config::params::MacroParams;
+use imagine::coordinator::executor::{Backend, Executor};
+use imagine::coordinator::manifest::NetworkModel;
+use imagine::coordinator::scheduler;
+use imagine::nn::dataset::Dataset;
+use std::path::Path;
+
+fn have_artifacts() -> bool {
+    let ok = Path::new("artifacts/lenet_cim.manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+    }
+    ok
+}
+
+fn argmax(v: &[f32]) -> usize {
+    v.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0
+}
+
+#[test]
+fn manifest_loads_all_models() {
+    if !have_artifacts() {
+        return;
+    }
+    for name in ["mlp784", "lenet_cim", "vgg_small"] {
+        let m = NetworkModel::load("artifacts", name).unwrap();
+        assert!(!m.layers.is_empty(), "{name}: no layers");
+        assert!(m.trained_accuracy().unwrap() > 0.3, "{name}: implausible acc");
+        for l in &m.layers {
+            assert_eq!(l.w_phys.len(), l.rows * l.out_features);
+            assert!(l.rows <= 1152, "{name}/{}: rows {}", l.name, l.rows);
+            assert!(l.beta.iter().all(|&b| (-16..=15).contains(&b)));
+            let mx = (1 << l.cfg.r_w) - 1;
+            assert!(l.w_phys.iter().all(|&w| w.abs() <= mx && (w + mx) % 2 == 0));
+        }
+    }
+}
+
+#[test]
+fn ideal_executor_reaches_trained_accuracy() {
+    if !have_artifacts() {
+        return;
+    }
+    let model = NetworkModel::load("artifacts", "lenet_cim").unwrap();
+    let trained = model.trained_accuracy().unwrap();
+    let ds = Dataset::load_imgt("artifacts/digits_test.imgt").unwrap();
+    let mut exec = Executor::new(model.clone(), MacroParams::paper(), Backend::Ideal).unwrap();
+    let n = 150;
+    let mut correct = 0;
+    for i in 0..n {
+        let img = ds.image_padded(i, model.input_shape[0]);
+        if argmax(&exec.forward(&img).unwrap()) == ds.y[i] as usize {
+            correct += 1;
+        }
+    }
+    let acc = correct as f64 / n as f64;
+    assert!(
+        acc > trained - 0.06,
+        "ideal executor acc {acc} << trained {trained}"
+    );
+    // Cost accounting must be populated.
+    assert!(exec.cost.cycles > 0 && exec.cost.e_total() > 0.0);
+}
+
+#[test]
+fn analog_executor_close_to_ideal() {
+    if !have_artifacts() {
+        return;
+    }
+    let model = NetworkModel::load("artifacts", "lenet_cim").unwrap();
+    let ds = Dataset::load_imgt("artifacts/digits_test.imgt").unwrap();
+    let p = MacroParams::paper();
+    let mut ideal = Executor::new(model.clone(), p.clone(), Backend::Ideal).unwrap();
+    let mut analog = Executor::new(
+        model.clone(),
+        p,
+        Backend::Analog { seed: 99, noise: true, calibrate: true },
+    )
+    .unwrap();
+    let n = 40;
+    let mut agree = 0;
+    let mut correct = 0;
+    for i in 0..n {
+        let img = ds.image_padded(i, model.input_shape[0]);
+        let a = argmax(&analog.forward(&img).unwrap());
+        let b = argmax(&ideal.forward(&img).unwrap());
+        if a == b {
+            agree += 1;
+        }
+        if a == ds.y[i] as usize {
+            correct += 1;
+        }
+    }
+    // Residual noise + mismatch legitimately flip near-tie argmaxes
+    // (the macro's RMS is ~0.5 LSB/conversion); the bulk must agree and
+    // the accuracy hold.
+    assert!(agree >= n * 3 / 4, "analog/ideal agreement {agree}/{n}");
+    assert!(correct as f64 / n as f64 > 0.8, "analog acc {correct}/{n}");
+}
+
+#[test]
+fn uncalibrated_die_degrades_gracefully() {
+    // Failure injection at system level: skipping SA calibration must
+    // hurt (or at least never help) the analog accuracy — and the run
+    // must not crash.
+    if !have_artifacts() {
+        return;
+    }
+    let model = NetworkModel::load("artifacts", "mlp784").unwrap();
+    let ds = Dataset::load_imgt("artifacts/digits_test.imgt").unwrap();
+    let p = MacroParams::paper();
+    let n = 40;
+    let mut accs = Vec::new();
+    for calibrate in [true, false] {
+        let mut exec = Executor::new(
+            model.clone(),
+            p.clone(),
+            Backend::Analog { seed: 5, noise: true, calibrate },
+        )
+        .unwrap();
+        let mut correct = 0;
+        for i in 0..n {
+            if argmax(&exec.forward(ds.flat(i)).unwrap()) == ds.y[i] as usize {
+                correct += 1;
+            }
+        }
+        accs.push(correct as f64 / n as f64);
+    }
+    assert!(accs[0] >= accs[1] - 0.05, "calibrated {} vs raw {}", accs[0], accs[1]);
+}
+
+#[test]
+fn scheduler_plans_are_consistent() {
+    if !have_artifacts() {
+        return;
+    }
+    let p = MacroParams::paper();
+    for name in ["mlp784", "lenet_cim", "vgg_small"] {
+        let model = NetworkModel::load("artifacts", name).unwrap();
+        let plan = scheduler::plan(&model, &p);
+        assert_eq!(plan.layers.len(), model.layers.len());
+        for (lp, l) in plan.layers.iter().zip(&model.layers) {
+            assert!(lp.fits_rows, "{name}/{}", l.name);
+            assert_eq!(lp.col_passes, l.out_features.div_ceil(p.n_blocks()));
+            assert!(lp.cost.cycles > 0);
+        }
+        let sum: u64 = plan.layers.iter().map(|l| l.cost.cycles).sum();
+        assert_eq!(sum, plan.total.cycles);
+        assert!(plan.total.ee_8b() > 1e11, "{name}: EE implausibly low");
+    }
+}

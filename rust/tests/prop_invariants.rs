@@ -1,0 +1,245 @@
+//! Property-based invariants over the analog substrate and dataflow —
+//! hand-rolled generators (the vendored dep set has no proptest), 32-256
+//! random cases per property, deterministic seeds.
+
+use imagine::analog::adc::DsciAdc;
+use imagine::analog::dpl;
+use imagine::analog::ladder::Ladder;
+use imagine::analog::macro_model::{CimMacro, OpConfig};
+use imagine::analog::mbiw;
+use imagine::config::params::{Corner, DplTopology, MacroParams};
+use imagine::dataflow::im2col;
+use imagine::dataflow::pipeline::LayerShape;
+use imagine::util::rng::Rng;
+
+fn rand_cfg(rng: &mut Rng) -> OpConfig {
+    OpConfig::new(
+        rng.int_range(1, 8) as u32,
+        rng.int_range(1, 4) as u32,
+        rng.int_range(1, 8) as u32,
+    )
+    .with_units(rng.int_range(1, 32) as usize)
+    .with_gamma([1.0, 2.0, 4.0, 8.0, 16.0, 32.0][rng.below(6) as usize])
+}
+
+#[test]
+fn prop_golden_macro_matches_contract() {
+    // The fully-idealized circuit pipeline equals the closed-form code
+    // for random configurations, weights and inputs (±1 code).
+    let mut rng = Rng::new(0x1111);
+    for case in 0..48 {
+        let p = MacroParams::paper();
+        let cfg = rand_cfg(&mut rng);
+        let rows = cfg.active_rows(&p);
+        let mut m = CimMacro::ideal(p.clone());
+        m.idealize_physics();
+        let max = (1i32 << cfg.r_w) - 1;
+        let w: Vec<i32> = (0..rows)
+            .map(|_| 2 * rng.below(1 << cfg.r_w) as i32 - max)
+            .collect();
+        m.load_weights(&w, 1, cfg.r_w);
+        let x: Vec<u8> = (0..rows).map(|_| rng.below(1 << cfg.r_in) as u8).collect();
+        let got = m.block_op(0, &x, &cfg) as i64;
+        let want = CimMacro::ideal_code(&m.p, &x, &w, &cfg) as i64;
+        assert!(
+            (got - want).abs() <= 1,
+            "case {case}: cfg={cfg:?} got={got} want={want}"
+        );
+    }
+}
+
+#[test]
+fn prop_adc_monotone_and_clipped() {
+    // For any static mismatch draw, the nominal (noise-free) ADC transfer
+    // is monotone non-decreasing and clipped to [0, 2^r_out).
+    let p = MacroParams::paper();
+    let mut rng = Rng::new(2);
+    for _ in 0..16 {
+        let adc = DsciAdc::sample(&p, &mut rng);
+        let ladder = Ladder::sample(&p, &mut rng);
+        let r_out = rng.int_range(2, 8) as u32;
+        let gamma = [1.0, 4.0, 16.0][rng.below(3) as usize];
+        let mut last = 0u32;
+        for i in 0..300 {
+            let dv = -0.5 + i as f64 / 299.0;
+            let c = adc.convert(&p, &ladder, p.supply.vddl + dv, gamma, r_out, None);
+            assert!(c < (1 << r_out));
+            assert!(c >= last, "non-monotone at dv={dv}");
+            last = c;
+        }
+    }
+}
+
+#[test]
+fn prop_charge_sharing_conserves_midrail() {
+    // Input accumulation of all-mid-rail DP voltages stays at V_DDL
+    // (charge conservation of the ½-share recurrence), for any r_in.
+    let mut p = MacroParams::paper();
+    p.inj_k = 0.0;
+    p.i_leak0 = 0.0;
+    p.alpha_mb_imbalance = 0.0;
+    for r_in in 1..=8 {
+        let v = mbiw::input_accumulation(&p, &vec![p.supply.vddl; r_in]);
+        assert!((v - p.supply.vddl).abs() < 1e-12, "r_in={r_in} v={v}");
+    }
+}
+
+#[test]
+fn prop_weight_share_is_linear() {
+    // Superposition: the column charge share is a linear map around the
+    // V_DDL midpoint (quiet physics).
+    let mut p = MacroParams::paper();
+    p.inj_k = 0.0;
+    let vddl = p.supply.vddl;
+    let mut rng = Rng::new(3);
+    for _ in 0..128 {
+        let n = rng.int_range(1, 4) as usize;
+        let a: Vec<f64> = (0..n).map(|_| rng.uniform_range(0.2, 0.6)).collect();
+        let b: Vec<f64> = (0..n).map(|_| rng.uniform_range(0.2, 0.6)).collect();
+        let ab: Vec<f64> = a.iter().zip(&b).map(|(x, y)| x + y - vddl).collect();
+        let lhs =
+            mbiw::weight_accumulation(&p, &a) + mbiw::weight_accumulation(&p, &b) - vddl;
+        let rhs = mbiw::weight_accumulation(&p, &ab);
+        assert!((lhs - rhs).abs() < 1e-12, "n={n} lhs={lhs} rhs={rhs}");
+    }
+}
+
+#[test]
+fn prop_split_swing_dominates_baseline() {
+    let p = MacroParams::paper();
+    let base = p.clone().with_topology(DplTopology::Baseline);
+    for units in 1..=32 {
+        let s = dpl::max_swing(&p, units);
+        let b = dpl::max_swing(&base, units);
+        assert!(s >= b - 1e-15, "units={units}: split {s} < baseline {b}");
+    }
+}
+
+#[test]
+fn prop_settling_error_monotone_in_time() {
+    // For same-polarity unit sums (no cancellation between residuals),
+    // longer T_DP never increases the settling error. Mixed-sign patterns
+    // can cross zero as individual residuals decay at different rates —
+    // physically real, so only the same-sign case is monotone.
+    let mut rng = Rng::new(5);
+    for _ in 0..32 {
+        let corner = Corner::ALL[rng.below(5) as usize];
+        let p = MacroParams::paper().with_corner(corner);
+        let units = rng.int_range(2, 32) as usize;
+        let sign = if rng.bool(0.5) { 1.0 } else { -1.0 };
+        let sums: Vec<f64> = (0..units)
+            .map(|_| sign * rng.uniform_range(1.0, 36.0))
+            .collect();
+        let mut last = f64::INFINITY;
+        for t_ns in [2.0, 4.0, 6.0, 10.0, 20.0] {
+            let r = dpl::dp_phase(&p, &sums, units, t_ns * 1e-9);
+            let err = (r.v_dpl - r.v_ideal).abs();
+            assert!(err <= last + 1e-15, "t={t_ns} err={err} last={last}");
+            last = err;
+        }
+    }
+}
+
+#[test]
+fn prop_pipeline_formulas_match_closed_form() {
+    // Eqs. 8-10 as implemented vs re-derived from first principles.
+    let mut rng = Rng::new(7);
+    for _ in 0..256 {
+        let c_in = rng.int_range(1, 512) as usize;
+        let c_out = rng.int_range(1, 512) as usize;
+        let r_in = rng.int_range(1, 8) as u32;
+        let r_out = rng.int_range(1, 8) as u32;
+        let mut l = LayerShape::conv(c_in, c_out, r_in, r_out, 8, 8);
+        l.n_cim = rng.int_range(1, 4) as usize;
+        let bw = 128usize;
+        let in_beats = (3 * r_in as usize * c_in).div_ceil(bw);
+        let out_beats = (r_out as usize * c_out).div_ceil(bw);
+        assert_eq!(l.n_stall(), 1 + l.n_cim + out_beats);
+        assert_eq!(l.n_in(), l.n_cim - 1 + in_beats);
+        assert_eq!(l.n_out(), l.n_cim + out_beats - 1);
+        assert_eq!(l.n_pipelined(), l.n_in().max(l.n_out()).max(1));
+    }
+}
+
+#[test]
+fn prop_im2col_rows_preserve_values() {
+    // Every real feature value lands at its mapped row; padding rows
+    // carry the pad value.
+    let mut rng = Rng::new(11);
+    for _ in 0..64 {
+        let c = rng.int_range(1, 24) as usize;
+        let h = rng.int_range(3, 10) as usize;
+        let w = rng.int_range(3, 10) as usize;
+        let x: Vec<u8> = (0..c * h * w).map(|_| rng.below(256) as u8).collect();
+        let oy = rng.below(h as u64) as usize;
+        let ox = rng.below(w as u64) as usize;
+        let patch = im2col::patch_at(&x, c, h, w, oy, ox, 1);
+        let order = im2col::row_order(c);
+        let rows = im2col::to_rows(&patch, &order, 99);
+        assert_eq!(rows.len(), order.len());
+        for (r, o) in order.iter().enumerate() {
+            match o {
+                Some(i) => assert_eq!(rows[r], patch[*i]),
+                None => assert_eq!(rows[r], 99),
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_calibration_never_worsens_offset() {
+    // Post-calibration residual ≤ pre-calibration offset + one step,
+    // for any offset (in- or out-of-range), noiseless decisions.
+    let p = MacroParams::paper();
+    let mut rng = Rng::new(13);
+    for _ in 0..128 {
+        let mut adc = DsciAdc::ideal();
+        adc.sa.offset = rng.normal(0.0, 0.05);
+        let before = adc.sa.offset.abs();
+        let resid = adc.calibrate(&p, None).abs();
+        assert!(
+            resid <= before + p.cal_step + 1e-12,
+            "offset={} resid={resid}",
+            adc.sa.offset
+        );
+    }
+}
+
+#[test]
+fn prop_gamma_scales_code_deviation() {
+    // Doubling γ doubles the code deviation (within quantization), until
+    // clipping — the zoom is linear. Random small DPs.
+    let p = MacroParams::paper();
+    let adc = DsciAdc::ideal();
+    let ladder = Ladder::ideal(&p);
+    let mut rng = Rng::new(17);
+    for _ in 0..64 {
+        let dv = rng.uniform_range(-0.01, 0.01);
+        let c1 = adc.convert(&p, &ladder, p.supply.vddl + dv, 4.0, 8, None) as i64 - 128;
+        let c2 = adc.convert(&p, &ladder, p.supply.vddl + dv, 8.0, 8, None) as i64 - 128;
+        assert!((c2 - 2 * c1).abs() <= 2, "dv={dv} c1={c1} c2={c2}");
+    }
+}
+
+#[test]
+fn prop_failure_injection_dead_column_detected() {
+    // A column whose SA offset exceeds the calibration range keeps a
+    // large post-cal residual — the coordinator can flag it. Inject and
+    // check detection across many dies.
+    let p = MacroParams::paper();
+    let mut rng = Rng::new(19);
+    for _ in 0..32 {
+        let mut die = CimMacro::new(p.clone(), rng.next_u64());
+        let victim = rng.below(p.n_cols as u64) as usize;
+        die.adcs[victim].sa.offset = 0.09 * if rng.bool(0.5) { 1.0 } else { -1.0 };
+        let resid = die.calibrate_all();
+        let lsb = p.adc_lsb(8, 1.0);
+        let flagged: Vec<usize> = resid
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.abs() > 4.0 * lsb)
+            .map(|(i, _)| i)
+            .collect();
+        assert!(flagged.contains(&victim), "victim {victim} not flagged: {flagged:?}");
+    }
+}

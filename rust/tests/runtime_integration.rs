@@ -1,0 +1,98 @@
+//! Integration: the PJRT runtime executing AOT artifacts must reproduce
+//! the python oracle's golden vectors and the rust ideal executor.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use imagine::runtime::Runtime;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static str> {
+    if Path::new("artifacts/smoke_cim.hlo.txt").exists() {
+        Some("artifacts")
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn smoke_hlo_matches_python_golden() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new().unwrap();
+    rt.load_hlo_text("smoke", format!("{dir}/smoke_cim.hlo.txt"))
+        .unwrap();
+
+    // Inputs and golden codes written by python aot.lower_smoke.
+    let inputs: Vec<i32> = std::fs::read_to_string(format!("{dir}/smoke_cim.inputs.txt"))
+        .unwrap()
+        .split_whitespace()
+        .map(|t| t.parse().unwrap())
+        .collect();
+    let golden: Vec<i32> = std::fs::read_to_string(format!("{dir}/smoke_cim.golden.txt"))
+        .unwrap()
+        .split_whitespace()
+        .map(|t| t.parse::<f64>().unwrap() as i32)
+        .collect();
+    let meta = std::fs::read_to_string(format!("{dir}/smoke_cim.meta.json")).unwrap();
+    let meta = imagine::util::json::Json::parse(&meta).unwrap();
+    let rows = meta.req_usize("rows").unwrap();
+    let batch = meta.req_usize("batch").unwrap();
+
+    let out = rt.run_i32("smoke", &inputs, &[batch, rows]).unwrap();
+    assert_eq!(out.len(), golden.len());
+    assert_eq!(out, golden, "HLO output != python golden");
+}
+
+#[test]
+fn model_hlo_agrees_with_ideal_executor() {
+    let Some(dir) = artifacts_dir() else { return };
+    use imagine::config::params::MacroParams;
+    use imagine::coordinator::executor::{Backend, Executor};
+    use imagine::coordinator::manifest::NetworkModel;
+    use imagine::nn::dataset::Dataset;
+
+    let model = NetworkModel::load(dir, "mlp784").unwrap();
+    let ds = Dataset::load_imgt(format!("{dir}/digits_test.imgt")).unwrap();
+    let mut rt = Runtime::new().unwrap();
+    rt.load_hlo_text("mlp784", format!("{dir}/mlp784.hlo.txt"))
+        .unwrap();
+    let mut exec = Executor::new(model, MacroParams::paper(), Backend::Ideal).unwrap();
+
+    let mut agree = 0;
+    let n = 20;
+    for i in 0..n {
+        let img = ds.flat(i);
+        let hlo_logits = rt.run_f32("mlp784", img, &[1, 784]).unwrap();
+        let sim_logits = exec.forward(img).unwrap();
+        let am = |v: &[f32]| {
+            v.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        };
+        if am(&hlo_logits) == am(&sim_logits) {
+            agree += 1;
+        }
+        // Logits should be numerically close, not just argmax-equal.
+        for (a, b) in hlo_logits.iter().zip(&sim_logits) {
+            assert!(
+                (a - b).abs() < 0.2 + 0.05 * a.abs().max(b.abs()),
+                "image {i}: hlo={hlo_logits:?} sim={sim_logits:?}"
+            );
+        }
+    }
+    assert_eq!(agree, n, "argmax disagreement between HLO and ideal sim");
+}
+
+#[test]
+fn compile_times_are_bounded() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new().unwrap();
+    rt.load_hlo_text("smoke", format!("{dir}/smoke_cim.hlo.txt"))
+        .unwrap();
+    let t = rt.compile_seconds("smoke").unwrap();
+    assert!(t < 30.0, "compile took {t}s");
+    assert!(rt.is_loaded("smoke"));
+    assert!(!rt.is_loaded("nope"));
+}
