@@ -1,0 +1,26 @@
+# Repository entry points. `cargo build/test` need no artifacts; the
+# artifact-dependent integration tests skip with a message until
+# `make artifacts` has been run (requires python3 with jax + numpy).
+
+.PHONY: build test artifacts bench fmt pytest
+
+build:
+	cargo build --release
+
+test: build
+	cargo test -q
+
+# Train + export all models, golden vectors and HLO artifacts into
+# ./artifacts (the prerequisite for tests/e2e_network.rs,
+# tests/runtime_integration.rs and `imagine run/serve` on real models).
+artifacts:
+	cd python && python3 -m compile.make_artifacts --out ../artifacts
+
+bench:
+	cargo bench --bench perf_hotpath
+
+fmt:
+	cargo fmt --all --check
+
+pytest:
+	cd python && python3 -m pytest tests -q

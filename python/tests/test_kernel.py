@@ -6,6 +6,8 @@ configuration space (precisions, gain, array split, batch)."""
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

@@ -1,12 +1,14 @@
 //! §Perf — hot-path timing harness (criterion is not in the vendored dep
 //! set; plain wall-clock statistics over repeated runs).
 //!
-//! Measures the three L3 hot paths the EXPERIMENTS.md §Perf section
-//! tracks:
+//! Measures the L3 hot paths the EXPERIMENTS.md §Perf section tracks:
 //!   1. analog macro column pipeline (block_op) — the characterization
 //!      workhorse (Figs. 17-21 sweep millions of these);
 //!   2. ideal-contract matvec (the fast executor path);
-//!   3. streaming im2col of a 32×32×16 image.
+//!   3. streaming im2col of a 32×32×16 image;
+//!   4. the batched engine vs the per-image executor — batch-size scaling
+//!      of the ideal backend (target: ≥4× images/s at batch ≥ 32 vs
+//!      batch = 1 on a 4-core runner) and the multi-die analog pool.
 //!
 //! `cargo bench --bench perf_hotpath`
 
@@ -15,9 +17,11 @@ mod common;
 use common::FigSink;
 use imagine::analog::macro_model::{CimMacro, OpConfig};
 use imagine::config::params::MacroParams;
-use imagine::coordinator::executor::ideal_codes;
-use imagine::coordinator::manifest::{Kind, Layer, Pool};
+use imagine::coordinator::executor::{ideal_codes, Backend, Executor};
+use imagine::coordinator::manifest::{Kind, Layer, NetworkModel, Pool};
 use imagine::dataflow::im2col;
+use imagine::engine::{default_workers, AnalogPool, BatchIdeal};
+use imagine::util::rng::Rng;
 use std::time::Instant;
 
 fn bench<F: FnMut()>(name: &str, iters: usize, out: &mut FigSink, mut f: F) -> f64 {
@@ -94,6 +98,88 @@ fn main() {
         std::hint::black_box(im2col::im2col_image(&img, 16, 32, 32, 1, 8));
     });
 
+    // ---- 4. batched engine: batch-size scaling of the ideal backend ----
+    out.line("");
+    out.line("# batched engine (synthetic 784-512-10 dense model, ideal backend)");
+    let workers = default_workers();
+    let model = NetworkModel::synthetic_mlp(&[784, 512, 10], 8, 4, 8, 5, &p);
+    let mut rng = Rng::new(17);
+    let n_images = 256usize;
+    let images: Vec<Vec<f32>> = (0..n_images)
+        .map(|_| (0..784).map(|_| rng.uniform() as f32).collect())
+        .collect();
+
+    // Baseline: the pre-refactor per-image executor walk.
+    let mut exec = Executor::new(model.clone(), p.clone(), Backend::Ideal).unwrap();
+    let t0 = Instant::now();
+    for im in &images {
+        std::hint::black_box(exec.forward(im).unwrap());
+    }
+    let ips_exec = n_images as f64 / t0.elapsed().as_secs_f64();
+    out.line(format!(
+        "per-image executor (legacy path)         {:>10.0} images/s",
+        ips_exec
+    ));
+
+    let engine_ips = |batch: usize| -> f64 {
+        let mut engine = BatchIdeal::new(model.clone(), p.clone(), workers).unwrap();
+        // Warmup.
+        engine.forward_batch(&images[..batch.min(n_images)]).unwrap();
+        let t0 = Instant::now();
+        for chunk in images.chunks(batch) {
+            std::hint::black_box(engine.forward_batch(chunk).unwrap());
+        }
+        n_images as f64 / t0.elapsed().as_secs_f64()
+    };
+    let ips_b1 = engine_ips(1);
+    out.line(format!(
+        "engine batch=1                           {:>10.0} images/s",
+        ips_b1
+    ));
+    let mut ips_b32 = 0.0;
+    for batch in [8usize, 32, 128] {
+        let ips = engine_ips(batch);
+        if batch == 32 {
+            ips_b32 = ips;
+        }
+        out.line(format!(
+            "engine batch={batch:<4} ({workers} workers)           {:>10.0} images/s ({:.1}x vs batch=1)",
+            ips,
+            ips / ips_b1
+        ));
+    }
+    out.line(format!(
+        "-> batch=32 speedup vs batch=1: {:.1}x (target >= 4x on a 4-core runner)",
+        ips_b32 / ips_b1
+    ));
+    out.line(format!(
+        "-> batch=32 speedup vs legacy per-image executor: {:.1}x",
+        ips_b32 / ips_exec
+    ));
+
+    // ---- 5. multi-die analog pool ----
+    let small = NetworkModel::synthetic_mlp(&[144, 32, 10], 4, 2, 6, 9, &p);
+    let analog_images: Vec<Vec<f32>> = (0..32)
+        .map(|_| (0..144).map(|_| rng.uniform() as f32).collect())
+        .collect();
+    let analog_ips = |dies: usize| -> f64 {
+        let mut pool = AnalogPool::new(small.clone(), p.clone(), 7, true, false, dies).unwrap();
+        let t0 = Instant::now();
+        std::hint::black_box(pool.forward_batch(&analog_images).unwrap());
+        analog_images.len() as f64 / t0.elapsed().as_secs_f64()
+    };
+    let a1 = analog_ips(1);
+    let an = analog_ips(workers);
+    out.line("");
+    out.line("# multi-die analog pool (144-32-10 model, noise on)");
+    out.line(format!("1 die                                    {:>10.1} images/s", a1));
+    out.line(format!(
+        "{workers} dies                                   {:>10.1} images/s ({:.1}x)",
+        an,
+        an / a1
+    ));
+
     out.line("\n# Targets (EXPERIMENTS.md §Perf): >=1e7 column-evals/s noise-off for");
-    out.line("# the Fig-17/19 sweeps; im2col well under the per-image macro time.");
+    out.line("# the Fig-17/19 sweeps; im2col well under the per-image macro time;");
+    out.line("# batched ideal engine >=4x images/s at batch>=32 vs batch=1.");
 }

@@ -194,18 +194,7 @@ impl Executor {
     }
 
     fn post_adc(&self, layer: &Layer, codes: &[u32]) -> Vec<f32> {
-        let half = (1u32 << (layer.cfg.r_out - 1)) as f32;
-        codes
-            .iter()
-            .map(|&c| {
-                let v = (c as f32 - half) * layer.out_gain;
-                if layer.relu {
-                    v.max(0.0)
-                } else {
-                    v
-                }
-            })
-            .collect()
+        post_adc(layer, codes)
     }
 
     fn col_passes(&self, layer: &Layer) -> usize {
@@ -238,19 +227,66 @@ impl Executor {
     }
 }
 
+/// Post-ADC digital stage shared by the per-image executor and the
+/// batched engine: offset-binary recentering, output gain, optional ReLU.
+pub fn post_adc(layer: &Layer, codes: &[u32]) -> Vec<f32> {
+    let half = (1u32 << (layer.cfg.r_out - 1)) as f32;
+    codes
+        .iter()
+        .map(|&c| {
+            let v = (c as f32 - half) * layer.out_gain;
+            if layer.relu {
+                v.max(0.0)
+            } else {
+                v
+            }
+        })
+        .collect()
+}
+
+/// Per-layer constants of the closed-form macro contract (the python
+/// oracle's Eq. 7 path). Factoring them out lets the batched engine map
+/// integer dot products to ADC codes through the *same* float expression
+/// as [`ideal_codes`], so both paths are bit-identical by construction.
+#[derive(Clone, Copy, Debug)]
+pub struct IdealContract {
+    /// M = 2^r_in − 1 (antipodal input recentering constant).
+    pub m: i64,
+    dv_scale: f64,
+    lsb: f64,
+    half: f64,
+    top: f64,
+    beta_volts_per_code: f64,
+}
+
+impl IdealContract {
+    pub fn new(p: &MacroParams, layer: &Layer) -> Self {
+        let cfg = &layer.cfg;
+        let rin_eff = if cfg.r_in > 1 { cfg.r_in } else { 0 };
+        let rw_eff = if cfg.r_w > 1 { cfg.r_w } else { 0 };
+        IdealContract {
+            m: (1i64 << cfg.r_in) - 1,
+            dv_scale: p.alpha_eff(layer.rows) * p.supply.vddl
+                / (1u64 << (rin_eff + rw_eff)) as f64,
+            lsb: p.adc_lsb(cfg.r_out, cfg.gamma),
+            half: (1u64 << (cfg.r_out - 1)) as f64,
+            top: (1u64 << cfg.r_out) as f64 - 1.0,
+            beta_volts_per_code: 0.030 / 16.0,
+        }
+    }
+
+    /// ADC code for a signed dot product Σ (2X−M)·W and ABN offset `beta`.
+    #[inline]
+    pub fn code(&self, dot: i64, beta: i32) -> u32 {
+        let dv = self.dv_scale * dot as f64 + beta as f64 * self.beta_volts_per_code;
+        (self.half + dv / self.lsb).floor().clamp(0.0, self.top) as u32
+    }
+}
+
 /// Closed-form codes (the python oracle's contract) for one row vector.
 pub fn ideal_codes(p: &MacroParams, layer: &Layer, rows: &[u8]) -> Vec<u32> {
-    let cfg = &layer.cfg;
-    let m = (1i64 << cfg.r_in) - 1;
-    let lsb = p.adc_lsb(cfg.r_out, cfg.gamma);
-    let beta_volts_per_code = 0.030 / 16.0;
-    let rin_eff = if cfg.r_in > 1 { cfg.r_in } else { 0 };
-    let rw_eff = if cfg.r_w > 1 { cfg.r_w } else { 0 };
-    let dv_scale = p.alpha_eff(layer.rows) * p.supply.vddl
-        / (1u64 << (rin_eff + rw_eff)) as f64;
-    let half = (1u64 << (cfg.r_out - 1)) as f64;
-    let top = (1u64 << cfg.r_out) as f64 - 1.0;
-
+    let contract = IdealContract::new(p, layer);
+    let m = contract.m;
     let mut out = Vec::with_capacity(layer.out_features);
     for oc in 0..layer.out_features {
         let mut dot: i64 = 0;
@@ -258,10 +294,7 @@ pub fn ideal_codes(p: &MacroParams, layer: &Layer, rows: &[u8]) -> Vec<u32> {
             let w = layer.w_phys[r * layer.out_features + oc] as i64;
             dot += (2 * x as i64 - m) * w;
         }
-        let dv = dv_scale * dot as f64
-            + layer.beta[oc] as f64 * beta_volts_per_code;
-        let code = (half + dv / lsb).floor().clamp(0.0, top);
-        out.push(code as u32);
+        out.push(contract.code(dot, layer.beta[oc]));
     }
     out
 }

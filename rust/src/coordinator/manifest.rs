@@ -6,7 +6,9 @@
 //! ABN offset codes and the digital scales.
 
 use crate::analog::macro_model::OpConfig;
+use crate::config::params::MacroParams;
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 use crate::util::tensorfile::TensorFile;
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::Path;
@@ -162,6 +164,41 @@ impl NetworkModel {
         })
     }
 
+    /// Random in-memory dense stack (tests/benches; no artifacts needed).
+    /// `widths` is `[in, hidden.., out]`; weights are valid antipodal
+    /// `r_w`-bit levels, betas span the 5b ABN range, and the scales are
+    /// chosen so activations in [0, 1) exercise the full code range.
+    pub fn synthetic_mlp(
+        widths: &[usize],
+        r_in: u32,
+        r_w: u32,
+        r_out: u32,
+        seed: u64,
+        p: &MacroParams,
+    ) -> NetworkModel {
+        assert!(widths.len() >= 2, "need at least input and output widths");
+        let mut rng = Rng::new(seed);
+        let mut layers = Vec::new();
+        for (li, pair) in widths.windows(2).enumerate() {
+            let last = li + 2 == widths.len();
+            layers.push(Layer::synthetic_dense(
+                &format!("fc{li}"),
+                pair[0],
+                pair[1],
+                (r_in, r_w, r_out),
+                !last,
+                &mut rng,
+                p,
+            ));
+        }
+        NetworkModel {
+            name: "synthetic_mlp".to_string(),
+            input_shape: vec![widths[0]],
+            layers,
+            metrics: Json::Null,
+        }
+    }
+
     /// Recorded test accuracy from the compile path, if present.
     pub fn trained_accuracy(&self) -> Option<f64> {
         self.metrics.get("test_acc").and_then(Json::as_f64)
@@ -176,11 +213,137 @@ impl NetworkModel {
     }
 }
 
+impl Layer {
+    fn synthetic_cfg(
+        (r_in, r_w, r_out): (u32, u32, u32),
+        rows: usize,
+        p: &MacroParams,
+    ) -> OpConfig {
+        // γ chosen so a random-weight DP distribution spreads over many
+        // ADC codes instead of collapsing onto the mid-code.
+        OpConfig {
+            r_in,
+            r_w,
+            r_out,
+            gamma: 16.0,
+            connected_units: (rows / p.rows_per_unit).max(1),
+            t_dp: 5e-9,
+        }
+    }
+
+    fn synthetic_scales(r_in: u32, r_out: u32) -> (f32, f32) {
+        let m = ((1u32 << r_in) - 1) as f32;
+        let half = (1u32 << (r_out - 1)) as f32;
+        // a_scale maps [0, 1) activations onto the full input grid; the
+        // output gain re-normalizes codes back into roughly [−1, 1].
+        (1.0 / m, 1.0 / half)
+    }
+
+    /// Random dense layer sized/padded the way the compile path pads
+    /// (rows rounded up to whole DP units).
+    pub fn synthetic_dense(
+        name: &str,
+        in_features: usize,
+        out_features: usize,
+        bits: (u32, u32, u32),
+        relu: bool,
+        rng: &mut Rng,
+        p: &MacroParams,
+    ) -> Layer {
+        let rows = in_features.div_ceil(p.rows_per_unit) * p.rows_per_unit;
+        assert!(rows <= p.n_rows, "dense layer does not fit the macro rows");
+        let (r_in, r_w, r_out) = bits;
+        let (a_scale, out_gain) = Self::synthetic_scales(r_in, r_out);
+        Layer {
+            name: name.to_string(),
+            kind: Kind::Dense,
+            in_features,
+            out_features,
+            relu,
+            stride: 1,
+            pool: Pool::None,
+            rows,
+            cfg: Self::synthetic_cfg(bits, rows, p),
+            w_phys: synthetic_weights(rng, rows * out_features, r_w),
+            beta: synthetic_betas(rng, out_features),
+            a_scale,
+            out_gain,
+        }
+    }
+
+    /// Random 3×3 conv layer in the macro's im2col row order.
+    #[allow(clippy::too_many_arguments)]
+    pub fn synthetic_conv3(
+        name: &str,
+        c_in: usize,
+        c_out: usize,
+        stride: usize,
+        pool: Pool,
+        bits: (u32, u32, u32),
+        rng: &mut Rng,
+        p: &MacroParams,
+    ) -> Layer {
+        let units = c_in.div_ceil(4);
+        let rows = units * p.rows_per_unit;
+        assert!(rows <= p.n_rows, "conv layer does not fit the macro rows");
+        let (r_in, r_w, r_out) = bits;
+        let (a_scale, out_gain) = Self::synthetic_scales(r_in, r_out);
+        Layer {
+            name: name.to_string(),
+            kind: Kind::Conv3,
+            in_features: c_in,
+            out_features: c_out,
+            relu: true,
+            stride,
+            pool,
+            rows,
+            cfg: Self::synthetic_cfg(bits, rows, p),
+            w_phys: synthetic_weights(rng, rows * c_out, r_w),
+            beta: synthetic_betas(rng, c_out),
+            a_scale,
+            out_gain,
+        }
+    }
+}
+
+/// Valid antipodal `r_w`-bit weight levels: odd values in [−(2^r_w−1), 2^r_w−1].
+fn synthetic_weights(rng: &mut Rng, n: usize, r_w: u32) -> Vec<i32> {
+    let max = (1i32 << r_w) - 1;
+    (0..n).map(|_| 2 * rng.below(1u64 << r_w) as i32 - max).collect()
+}
+
+/// 5b ABN offset codes in the manifest's [−16, 15] range.
+fn synthetic_betas(rng: &mut Rng, n: usize) -> Vec<i32> {
+    (0..n).map(|_| rng.int_range(-16, 15) as i32).collect()
+}
+
 #[cfg(test)]
 mod tests {
     // Loading real manifests is covered by rust/tests/e2e_network.rs
     // (requires `make artifacts`). Here: pool parsing only.
     use super::*;
+
+    #[test]
+    fn synthetic_models_are_manifest_valid() {
+        let p = MacroParams::paper();
+        let m = NetworkModel::synthetic_mlp(&[100, 40, 10], 8, 4, 8, 3, &p);
+        assert_eq!(m.layers.len(), 2);
+        assert_eq!(m.input_shape, vec![100]);
+        assert!(m.layers[0].relu && !m.layers[1].relu);
+        for l in &m.layers {
+            assert_eq!(l.rows % p.rows_per_unit, 0);
+            assert_eq!(l.cfg.connected_units, l.rows / p.rows_per_unit);
+            assert_eq!(l.w_phys.len(), l.rows * l.out_features);
+            assert_eq!(l.beta.len(), l.out_features);
+            let mx = (1 << l.cfg.r_w) - 1;
+            assert!(l.w_phys.iter().all(|&w| w.abs() <= mx && (w + mx) % 2 == 0));
+            assert!(l.beta.iter().all(|&b| (-16..=15).contains(&b)));
+        }
+        let mut rng = Rng::new(9);
+        let conv = Layer::synthetic_conv3("c0", 5, 12, 2, Pool::Max2, (4, 2, 6), &mut rng, &p);
+        assert_eq!(conv.rows, 2 * p.rows_per_unit); // ceil(5/4) = 2 units
+        assert_eq!(conv.cfg.connected_units, 2);
+    }
 
     #[test]
     fn pool_parses() {

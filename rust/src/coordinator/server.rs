@@ -6,29 +6,51 @@
 //! `{"cmd": "stats"}` returns aggregate counters; `{"cmd": "quit"}`
 //! closes the connection.
 //!
-//! The server runs the AOT/PJRT functional path by default (python-free
-//! request path), with the ideal-contract executor as a fallback when no
-//! HLO artifact is available. std::net + a thread per connection — the
-//! vendored dependency set has no tokio, and the workload is compute-
-//! bound on the PJRT call anyway.
+//! Concurrency model: every connection gets its own handler thread, and
+//! all handlers share one [`EngineHandle`] into the engine layer's
+//! work-queue scheduler — concurrent requests coalesce into batches
+//! instead of serializing on a global executor lock. The backend behind
+//! the queue is chosen per artifacts: the PJRT runtime when an HLO
+//! artifact exists (and the `pjrt` feature is built in), otherwise the
+//! batched ideal-contract engine on the manifest.
 
-use crate::coordinator::executor::{Backend, Executor};
-use crate::coordinator::manifest::NetworkModel;
 use crate::config::params::MacroParams;
+use crate::coordinator::manifest::NetworkModel;
+use crate::engine::{self, BatchBackend, BatchIdeal, EngineConfig, EngineHandle};
 use crate::runtime::Runtime;
 use crate::util::json::{arr_f64, obj, Json};
+use crate::util::stats::{pow2_bounds, AtomicHistogram};
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::Arc;
 
-/// Aggregate serving statistics.
-#[derive(Default, Debug)]
+/// Aggregate serving statistics: counters plus latency / batch-occupancy
+/// histograms (p50/p99, not just the mean).
+#[derive(Debug)]
 pub struct Stats {
     pub requests: AtomicU64,
     pub errors: AtomicU64,
     pub total_micros: AtomicU64,
+    /// Per-request end-to-end latency [µs].
+    pub latency: AtomicHistogram,
+    /// Images per dispatched batch (shared with the engine dispatcher).
+    pub occupancy: Arc<AtomicHistogram>,
+}
+
+impl Default for Stats {
+    fn default() -> Self {
+        Self {
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            total_micros: AtomicU64::new(0),
+            // 1 µs .. ~67 s in power-of-two buckets.
+            latency: AtomicHistogram::new(pow2_bounds(26)),
+            // Batch sizes 1 .. 1024.
+            occupancy: Arc::new(AtomicHistogram::new(pow2_bounds(10))),
+        }
+    }
 }
 
 impl Stats {
@@ -42,53 +64,134 @@ impl Stats {
                 "mean_latency_micros",
                 Json::Num(if n > 0 { us as f64 / n as f64 } else { 0.0 }),
             ),
+            ("p50_latency_micros", Json::Num(self.latency.percentile(50.0) as f64)),
+            ("p99_latency_micros", Json::Num(self.latency.percentile(99.0) as f64)),
+            ("batches", Json::Num(self.occupancy.count() as f64)),
+            ("mean_batch_occupancy", Json::Num(self.occupancy.mean())),
+            (
+                "p99_batch_occupancy",
+                Json::Num(self.occupancy.percentile(99.0) as f64),
+            ),
         ])
     }
-}
 
-/// Inference engine behind the server: PJRT artifact or rust executor.
-pub enum Engine {
-    Pjrt {
-        runtime: Runtime,
-        model_name: String,
-        input_shape: Vec<usize>,
-    },
-    Sim(Mutex<Executor>),
-}
-
-impl Engine {
-    /// Build from artifacts: prefer `<name>.hlo.txt`, fall back to the
-    /// ideal-contract executor on the manifest.
-    pub fn from_artifacts(dir: &str, name: &str) -> Result<Engine> {
-        let hlo = std::path::Path::new(dir).join(format!("{name}.hlo.txt"));
-        let model = NetworkModel::load(dir, name)?;
-        if hlo.exists() {
-            let mut runtime = Runtime::new()?;
-            runtime.load_hlo_text(name, &hlo)?;
-            let mut input_shape = vec![1usize];
-            input_shape.extend(&model.input_shape);
-            Ok(Engine::Pjrt { runtime, model_name: name.to_string(), input_shape })
-        } else {
-            let exec = Executor::new(model, MacroParams::paper(), Backend::Ideal)?;
-            Ok(Engine::Sim(Mutex::new(exec)))
-        }
-    }
-
-    pub fn input_len(&self) -> usize {
-        match self {
-            Engine::Pjrt { input_shape, .. } => input_shape.iter().product(),
-            Engine::Sim(e) => e.lock().unwrap().model.input_shape.iter().product(),
-        }
-    }
-
-    pub fn infer(&self, image: &[f32]) -> Result<Vec<f32>> {
-        match self {
-            Engine::Pjrt { runtime, model_name, input_shape } => {
-                runtime.run_f32(model_name, image, input_shape)
+    /// Multi-line human-readable summary (printed at `serve` shutdown).
+    pub fn render_summary(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "requests {}  errors {}  mean latency {:.1} us  p50 {} us  p99 {} us\n",
+            self.requests.load(Ordering::Relaxed),
+            self.errors.load(Ordering::Relaxed),
+            {
+                let n = self.requests.load(Ordering::Relaxed);
+                let us = self.total_micros.load(Ordering::Relaxed);
+                if n > 0 { us as f64 / n as f64 } else { 0.0 }
+            },
+            self.latency.percentile(50.0),
+            self.latency.percentile(99.0),
+        ));
+        s.push_str(&format!(
+            "batches {}  occupancy mean {:.2}  p99 {}\n",
+            self.occupancy.count(),
+            self.occupancy.mean(),
+            self.occupancy.percentile(99.0),
+        ));
+        if self.occupancy.count() > 0 {
+            s.push_str("batch-occupancy buckets (<=bound: count):");
+            for (bound, count) in self.occupancy.nonzero_buckets() {
+                if bound == u64::MAX {
+                    s.push_str(&format!("  >1024: {count}"));
+                } else {
+                    s.push_str(&format!("  <={bound}: {count}"));
+                }
             }
-            Engine::Sim(exec) => exec.lock().unwrap().forward(image),
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// PJRT-backed batch backend: executes the AOT HLO artifact per image on
+/// the dispatcher thread (the PJRT client is a single-threaded C handle).
+struct PjrtBackend {
+    runtime: Runtime,
+    model_name: String,
+    /// `[1, input_shape...]`.
+    input_shape: Vec<usize>,
+}
+
+impl BatchBackend for PjrtBackend {
+    fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    fn forward_batch(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        images
+            .iter()
+            .map(|im| self.runtime.run_f32(&self.model_name, im, &self.input_shape))
+            .collect()
+    }
+
+    fn describe(&self) -> String {
+        format!("PJRT/HLO artifact '{}'", self.model_name)
+    }
+}
+
+/// Start the inference engine for a model directory: PJRT when the HLO
+/// artifact is usable, otherwise the batched ideal engine on the
+/// manifest. Returns the submission handle (shareable across connection
+/// threads). Pass `stats` so the dispatcher records batch occupancy.
+pub fn start_engine(
+    dir: &str,
+    name: &str,
+    cfg: EngineConfig,
+    stats: &Stats,
+) -> Result<EngineHandle> {
+    let model = NetworkModel::load(dir, name)
+        .with_context(|| format!("loading model '{name}' from {dir}"))?;
+    let hlo = std::path::Path::new(dir).join(format!("{name}.hlo.txt"));
+    let occupancy = Some(Arc::clone(&stats.occupancy));
+
+    if hlo.exists() {
+        let model_name = name.to_string();
+        let mut input_shape = vec![1usize];
+        input_shape.extend(&model.input_shape);
+        let started = engine::start(
+            move || {
+                let mut runtime = Runtime::new()?;
+                runtime.load_hlo_text(&model_name, &hlo)?;
+                Ok(Box::new(PjrtBackend { runtime, model_name, input_shape })
+                    as Box<dyn BatchBackend>)
+            },
+            cfg,
+            occupancy.clone(),
+        );
+        match started {
+            Ok(handle) => return Ok(handle),
+            // Default builds ship the stub runtime: falling back to the
+            // ideal engine is the expected path, not an error.
+            Err(e) if !cfg!(feature = "pjrt") => {
+                eprintln!("PJRT runtime unavailable ({e:#}); falling back to ideal engine");
+            }
+            // With the real PJRT binding compiled in, a broken HLO
+            // artifact is fatal — serving numerically different logits
+            // from a silent simulator fallback is worse than refusing to
+            // start.
+            Err(e) => {
+                return Err(e)
+                    .with_context(|| format!("starting the PJRT engine for '{name}'"));
+            }
         }
     }
+    let params = MacroParams::paper();
+    let workers = cfg.workers;
+    engine::start(
+        move || {
+            Ok(Box::new(BatchIdeal::new(model, params, workers)?) as Box<dyn BatchBackend>)
+        },
+        cfg,
+        occupancy,
+    )
 }
 
 fn argmax(xs: &[f32]) -> usize {
@@ -101,7 +204,7 @@ fn argmax(xs: &[f32]) -> usize {
 
 /// Handle one request line; returns the response line (never fails the
 /// connection — errors are reported in-band).
-pub fn handle_line(engine: &Engine, stats: &Stats, line: &str) -> Option<String> {
+pub fn handle_line(engine: &EngineHandle, stats: &Stats, line: &str) -> Option<String> {
     let parsed = match Json::parse(line) {
         Ok(j) => j,
         Err(e) => {
@@ -143,11 +246,12 @@ pub fn handle_line(engine: &Engine, stats: &Stats, line: &str) -> Option<String>
         }
     };
     let t0 = std::time::Instant::now();
-    match engine.infer(&image) {
+    match engine.infer(image) {
         Ok(logits) => {
             let us = t0.elapsed().as_micros() as u64;
             stats.requests.fetch_add(1, Ordering::Relaxed);
             stats.total_micros.fetch_add(us, Ordering::Relaxed);
+            stats.latency.record(us);
             Some(
                 obj(vec![
                     ("logits", arr_f64(&logits.iter().map(|&v| v as f64).collect::<Vec<_>>())),
@@ -164,8 +268,7 @@ pub fn handle_line(engine: &Engine, stats: &Stats, line: &str) -> Option<String>
     }
 }
 
-fn serve_conn(engine: &Engine, stats: &Stats, stream: TcpStream) -> Result<()> {
-    let peer = stream.peer_addr().ok();
+fn serve_conn(engine: &EngineHandle, stats: &Stats, stream: TcpStream) -> Result<()> {
     let mut writer = stream.try_clone().context("cloning stream")?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
@@ -181,33 +284,66 @@ fn serve_conn(engine: &Engine, stats: &Stats, stream: TcpStream) -> Result<()> {
             None => break, // quit
         }
     }
-    eprintln!("connection closed: {peer:?}");
     Ok(())
 }
 
-/// Run the server (blocks). Connections are handled sequentially on the
-/// accept thread: the PJRT client is a single-threaded C handle (!Send),
-/// and inference is compute-bound on it anyway. `max_conns` stops after
-/// N connections when Some — used by the integration test.
-pub fn serve(engine: Engine, addr: &str, max_conns: Option<usize>) -> Result<()> {
-    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-    eprintln!("imagine server listening on {addr}");
-    let stats = Stats::default();
-    let mut conns = 0usize;
-    for stream in listener.incoming() {
-        let stream = stream?;
-        if let Err(err) = serve_conn(&engine, &stats, stream) {
-            eprintln!("connection error: {err:#}");
-        }
-        conns += 1;
-        if let Some(max) = max_conns {
-            if conns >= max {
-                break;
+/// Serve on an already-bound listener (tests bind port 0 and pass the
+/// listener in). Each connection runs on its own thread; `max_conns`
+/// stops *accepting* after N connections, then waits for the in-flight
+/// handlers to finish before returning.
+pub fn serve_listener(
+    engine: EngineHandle,
+    stats: &Stats,
+    listener: TcpListener,
+    max_conns: Option<usize>,
+) -> Result<()> {
+    std::thread::scope(|scope| -> Result<()> {
+        let mut conns = 0usize;
+        for stream in listener.incoming() {
+            // A transient accept failure (ECONNABORTED, EMFILE under load)
+            // must not tear down the server and its live connections.
+            let stream = match stream {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("accept error: {e}");
+                    continue;
+                }
+            };
+            let handle = engine.clone();
+            scope.spawn(move || {
+                let peer = stream.peer_addr().ok();
+                if let Err(err) = serve_conn(&handle, stats, stream) {
+                    eprintln!("connection error ({peer:?}): {err:#}");
+                }
+            });
+            conns += 1;
+            if let Some(max) = max_conns {
+                if conns >= max {
+                    break;
+                }
             }
         }
-    }
+        Ok(())
+    })?;
     eprintln!("server stats: {}", stats.snapshot_json().to_string_compact());
+    eprint!("{}", stats.render_summary());
     Ok(())
+}
+
+/// Bind `addr` and serve (blocks until `max_conns` is reached, if given).
+pub fn serve(
+    engine: EngineHandle,
+    stats: &Stats,
+    addr: &str,
+    max_conns: Option<usize>,
+) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    eprintln!(
+        "imagine server listening on {addr} ({} -> {})",
+        listener.local_addr().map(|a| a.to_string()).unwrap_or_default(),
+        engine.describe()
+    );
+    serve_listener(engine, stats, listener, max_conns)
 }
 
 #[cfg(test)]
@@ -228,19 +364,28 @@ mod tests {
         let j = s.snapshot_json();
         assert_eq!(j.get("requests").unwrap().as_f64(), Some(4.0));
         assert_eq!(j.get("mean_latency_micros").unwrap().as_f64(), Some(100.0));
+        assert_eq!(j.get("batches").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn stats_histograms_feed_percentiles() {
+        let s = Stats::default();
+        for us in [10u64, 20, 30, 40, 1000] {
+            s.latency.record(us);
+        }
+        s.occupancy.record(1);
+        s.occupancy.record(8);
+        let j = s.snapshot_json();
+        assert!(j.get("p50_latency_micros").unwrap().as_f64().unwrap() >= 20.0);
+        assert!(j.get("p99_latency_micros").unwrap().as_f64().unwrap() >= 1000.0);
+        assert_eq!(j.get("batches").unwrap().as_f64(), Some(2.0));
+        assert!((j.get("mean_batch_occupancy").unwrap().as_f64().unwrap() - 4.5).abs() < 1e-9);
+        let summary = s.render_summary();
+        assert!(summary.contains("occupancy"), "{summary}");
     }
 
     #[test]
     fn bad_json_is_reported_in_band() {
-        // Engine-independent error paths (no artifacts needed): feed a
-        // request that fails to parse.
-        let s = Stats::default();
-        // A fake engine would require artifacts; the json-error path
-        // short-circuits before touching the engine, so exercising it via
-        // a null pointer is not possible in safe rust — instead this is
-        // covered in the integration test. Here we only check parsing of
-        // the cmd dispatch plumbing.
-        let _ = &s;
         assert!(Json::parse("{nope").is_err());
     }
 }

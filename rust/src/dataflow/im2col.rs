@@ -185,6 +185,84 @@ mod tests {
     }
 
     #[test]
+    fn patch_corners_pad_with_zero() {
+        // All four corners of a 1-channel image: exactly the out-of-image
+        // taps are zero, the in-image taps carry their pixel values.
+        let (h, w) = (4usize, 5usize);
+        let x: Vec<u8> = (1..=(h * w) as u8).collect(); // 1..20, no zeros
+        let at = |y: usize, xx: usize| x[y * w + xx];
+        // Top-left: rows/cols −1 are padding.
+        let p = patch_at(&x, 1, h, w, 0, 0, 1);
+        assert_eq!(p, vec![0, 0, 0, 0, at(0, 0), at(0, 1), 0, at(1, 0), at(1, 1)]);
+        // Top-right.
+        let p = patch_at(&x, 1, h, w, 0, w - 1, 1);
+        assert_eq!(p, vec![0, 0, 0, at(0, 3), at(0, 4), 0, at(1, 3), at(1, 4), 0]);
+        // Bottom-left.
+        let p = patch_at(&x, 1, h, w, h - 1, 0, 1);
+        assert_eq!(p, vec![0, at(2, 0), at(2, 1), 0, at(3, 0), at(3, 1), 0, 0, 0]);
+        // Bottom-right.
+        let p = patch_at(&x, 1, h, w, h - 1, w - 1, 1);
+        assert_eq!(p, vec![at(2, 3), at(2, 4), 0, at(3, 3), at(3, 4), 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn stride_two_odd_dims_cover_borders() {
+        // Odd spatial size with stride 2: oh = ceil(5/2) = 3, and the last
+        // output column's patch hangs over the right/bottom border.
+        let (c, h, w) = (1usize, 5usize, 5usize);
+        let x: Vec<u8> = (1..=(h * w) as u8).collect();
+        let (rows, oh, ow) = im2col_image(&x, c, h, w, 2, 7);
+        assert_eq!((oh, ow), (3, 3));
+        assert_eq!(rows.len(), 9);
+        // Output pixel (2, 2) → input window centered at (4, 4): only the
+        // top-left 2×2 of the 3×3 window is inside the image.
+        let p = patch_at(&x, c, h, w, 2, 2, 2);
+        assert_eq!(p, vec![x[3 * w + 3], x[3 * w + 4], 0, x[4 * w + 3], x[4 * w + 4], 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn cin_not_multiple_of_unit_split() {
+        // C_in ∈ {5, 6, 7}: the second DP unit is only partially real; its
+        // missing channels must be padding rows, and every real feature
+        // must appear exactly once.
+        for c_in in [5usize, 6, 7] {
+            let order = row_order(c_in);
+            assert_eq!(order.len(), 2 * 36, "c_in={c_in}");
+            let pad_rows = order.iter().filter(|o| o.is_none()).count();
+            assert_eq!(pad_rows, 2 * 36 - 9 * c_in, "c_in={c_in}");
+            // Unit 1 rows address channels 4..8; channels ≥ c_in are padding.
+            for (r, o) in order.iter().enumerate() {
+                let cc = 4 * (r / 36) + r % 4;
+                if cc < c_in {
+                    assert!(o.is_some(), "c_in={c_in} row {r}");
+                } else {
+                    assert!(o.is_none(), "c_in={c_in} row {r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn im2col_row_vectors_match_manual_lowering() {
+        // Full cross-check on a c_in=5 (non-multiple-of-4) image: each
+        // macro row carries patch[tap·C + ch] for its (unit, tap, slot).
+        let (c, h, w) = (5usize, 4usize, 4usize);
+        let x: Vec<u8> = (0..(c * h * w) as u16).map(|v| (v % 251) as u8).collect();
+        let (rows, oh, ow) = im2col_image(&x, c, h, w, 1, 42);
+        assert_eq!((oh, ow), (4, 4));
+        let order = row_order(c);
+        for (pix, rv) in rows.iter().enumerate() {
+            let patch = patch_at(&x, c, h, w, pix / ow, pix % ow, 1);
+            for (r, o) in order.iter().enumerate() {
+                match o {
+                    Some(f) => assert_eq!(rv[r], patch[*f], "pix {pix} row {r}"),
+                    None => assert_eq!(rv[r], 42, "pix {pix} row {r}"),
+                }
+            }
+        }
+    }
+
+    #[test]
     fn beat_counts_match_paper_formulas() {
         // Eq. 9's transfer term: ceil(K·r_in·C_in / 128).
         assert_eq!(input_beats_per_pixel(16, 8), 3); // 3·8·16=384 → 3

@@ -56,6 +56,19 @@ impl LayerCost {
         self.ops_8b / self.seconds
     }
 
+    /// This cost replicated over `n` identical executions (the batched
+    /// engine books `n` images at once instead of accumulating per image).
+    pub fn scaled(&self, n: u64) -> LayerCost {
+        LayerCost {
+            e_macro: self.e_macro * n as f64,
+            e_digital: self.e_digital * n as f64,
+            e_leak: self.e_leak * n as f64,
+            cycles: self.cycles * n,
+            seconds: self.seconds * n as f64,
+            ops_8b: self.ops_8b * n as f64,
+        }
+    }
+
     pub fn accumulate(&mut self, other: &LayerCost) {
         self.e_macro += other.e_macro;
         self.e_digital += other.e_digital;
@@ -203,5 +216,10 @@ mod tests {
         sum.accumulate(&a);
         assert!((sum.e_total() - 2.0 * a.e_total()).abs() < 1e-15);
         assert_eq!(sum.cycles, 2 * a.cycles);
+        // scaled(n) is accumulate applied n times.
+        let s = a.scaled(2);
+        assert_eq!(s.cycles, sum.cycles);
+        assert!((s.e_total() - sum.e_total()).abs() < 1e-15);
+        assert!((s.ops_8b - sum.ops_8b).abs() < 1e-6);
     }
 }

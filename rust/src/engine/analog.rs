@@ -1,0 +1,106 @@
+//! Multi-die analog backend: one cloned [`CimMacro`] pipeline per worker.
+//!
+//! The circuit-behavioral simulator is inherently sequential per die (the
+//! noise RNG chain threads through every conversion), so batched analog
+//! runs scale by *fabricating more dies*: worker `d` owns a full
+//! per-layer pass pipeline seeded with a deterministic per-die seed, and
+//! a batch of images is split contiguously across dies. Worker 0 uses the
+//! base seed unchanged, so a single-worker pool reproduces the historical
+//! `Executor` + `Backend::Analog` results image for image; additional
+//! dies model exactly what multi-macro silicon would do — independent
+//! mismatch draws per die.
+
+use crate::config::params::MacroParams;
+use crate::coordinator::executor::{Backend, Executor};
+use crate::coordinator::manifest::NetworkModel;
+use crate::energy::system::LayerCost;
+use anyhow::{anyhow, Result};
+
+/// Per-die seed stride (odd 64-bit mix constant, so die seeds never
+/// collide for d < 2^63).
+const DIE_SEED_STRIDE: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// A pool of independently-fabricated simulated dies.
+pub struct AnalogPool {
+    dies: Vec<Executor>,
+    /// Images executed (across all dies).
+    pub images: u64,
+}
+
+impl AnalogPool {
+    /// Fabricate `workers` dies. Die `d` is seeded `seed + d·stride`
+    /// (die 0 keeps `seed` exactly — bit-compatible with the per-image
+    /// executor path).
+    pub fn new(
+        model: NetworkModel,
+        params: MacroParams,
+        seed: u64,
+        noise: bool,
+        calibrate: bool,
+        workers: usize,
+    ) -> Result<Self> {
+        let workers = workers.max(1);
+        let dies = (0..workers)
+            .map(|d| {
+                Executor::new(
+                    model.clone(),
+                    params.clone(),
+                    Backend::Analog {
+                        seed: seed.wrapping_add(DIE_SEED_STRIDE.wrapping_mul(d as u64)),
+                        noise,
+                        calibrate,
+                    },
+                )
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { dies, images: 0 })
+    }
+
+    pub fn n_dies(&self) -> usize {
+        self.dies.len()
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.dies[0].model.input_shape.iter().product()
+    }
+
+    /// Aggregate dataflow/energy cost across all dies.
+    pub fn cost(&self) -> LayerCost {
+        let mut total = LayerCost::default();
+        for die in &self.dies {
+            total.accumulate(&die.cost);
+        }
+        total
+    }
+
+    /// Run a batch of images, split contiguously across the dies; results
+    /// come back in submission order.
+    pub fn forward_batch(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        if images.is_empty() {
+            return Ok(Vec::new());
+        }
+        let n_dies = self.dies.len().min(images.len());
+        let chunk = images.len().div_ceil(n_dies);
+        let mut per_die: Vec<Result<Vec<Vec<f32>>>> = Vec::new();
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for (die, imgs) in self.dies.iter_mut().zip(images.chunks(chunk)) {
+                handles.push(s.spawn(move || -> Result<Vec<Vec<f32>>> {
+                    imgs.iter().map(|im| die.forward(im)).collect()
+                }));
+            }
+            for h in handles {
+                per_die.push(
+                    h.join()
+                        .unwrap_or_else(|_| Err(anyhow!("analog worker panicked"))),
+                );
+            }
+        });
+        let mut out = Vec::with_capacity(images.len());
+        for r in per_die {
+            out.extend(r?);
+        }
+        self.images += images.len() as u64;
+        Ok(out)
+    }
+}

@@ -1,0 +1,272 @@
+//! Batched ideal backend: whole-batch closed-form contract evaluation.
+//!
+//! The per-image [`Executor`](crate::coordinator::executor::Executor)
+//! walks one dot product at a time with column-strided weight access. This
+//! backend lowers a whole batch of inputs (and, for conv layers, every
+//! im2col patch of every image) into one matrix of signed input factors
+//! per layer and evaluates `codes = contract(X · W)` with the blocked
+//! [`gemm`](crate::engine::gemm) kernel — one pass over the weights per
+//! four batch vectors instead of per output channel, split across worker
+//! threads.
+//!
+//! Bit-exactness: the integer dot products are order-independent, and the
+//! float mapping from dot product to ADC code goes through the *same*
+//! [`IdealContract::code`] expression the per-image path uses, so outputs
+//! are bit-identical to `Executor` with [`Backend::Ideal`] (asserted by
+//! `tests/engine_equivalence.rs`).
+
+use crate::config::params::MacroParams;
+use crate::coordinator::executor::{apply_pool, post_adc, IdealContract};
+use crate::coordinator::manifest::{Kind, Layer, NetworkModel, Pool};
+use crate::dataflow::im2col;
+use crate::dataflow::pipeline::LayerShape;
+use crate::energy::system::{layer_cost, LayerCost};
+use crate::engine::gemm;
+use anyhow::{ensure, Result};
+
+/// The batched ideal-contract inference backend.
+pub struct BatchIdeal {
+    pub model: NetworkModel,
+    pub params: MacroParams,
+    /// Worker threads for the batched matmuls.
+    pub workers: usize,
+    contracts: Vec<IdealContract>,
+    /// Dataflow/energy cost of one image through the whole network.
+    per_image_cost: LayerCost,
+    /// Accumulated cost over everything executed.
+    pub cost: LayerCost,
+    /// Images executed.
+    pub images: u64,
+}
+
+impl BatchIdeal {
+    pub fn new(model: NetworkModel, params: MacroParams, workers: usize) -> Result<Self> {
+        // The blocked kernel accumulates in i32 (twice the SIMD lanes of
+        // i64). The executor path accumulates in i64, so guard the
+        // worst-case |Σ (2X−M)·W| per layer up front: any layer a sane
+        // manifest produces (r_in ≤ 8, |W| ≤ 15, ≤ 1152 rows → ≤ 4.4M)
+        // fits with ~500× headroom; a corrupt one fails loudly instead of
+        // silently wrapping away the bit-exactness contract.
+        for layer in &model.layers {
+            ensure!(
+                layer.cfg.r_in <= 16,
+                "layer {}: r_in {} out of range for the batched engine",
+                layer.name,
+                layer.cfg.r_in
+            );
+            let m = (1i128 << layer.cfg.r_in) - 1;
+            let w_max = layer.w_phys.iter().map(|w| (*w as i128).abs()).max().unwrap_or(0);
+            let worst = layer.rows as i128 * m * w_max;
+            ensure!(
+                worst <= i32::MAX as i128,
+                "layer {}: worst-case dot product {worst} exceeds the i32 \
+                 accumulator range ({} rows, M={m}, |W|max={w_max})",
+                layer.name,
+                layer.rows
+            );
+        }
+        let contracts = model
+            .layers
+            .iter()
+            .map(|l| IdealContract::new(&params, l))
+            .collect();
+        let per_image_cost = network_image_cost(&model, &params);
+        Ok(Self {
+            model,
+            params,
+            workers: workers.max(1),
+            contracts,
+            per_image_cost,
+            cost: LayerCost::default(),
+            images: 0,
+        })
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.model.input_shape.iter().product()
+    }
+
+    /// Run a batch of images (each in the model's natural input layout)
+    /// through the whole network; returns per-image logits.
+    pub fn forward_batch(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let input_len = self.input_len();
+        for (i, im) in images.iter().enumerate() {
+            ensure!(
+                im.len() == input_len,
+                "image {i}: expected {input_len} values, got {}",
+                im.len()
+            );
+        }
+        let mut acts: Vec<Vec<f32>> = images.to_vec();
+        let mut shape = self.model.input_shape.clone();
+        for li in 0..self.model.layers.len() {
+            let layer = &self.model.layers[li];
+            let contract = &self.contracts[li];
+            let (next, next_shape) =
+                forward_layer_batch(layer, contract, &acts, &shape, self.workers);
+            acts = next;
+            shape = next_shape;
+        }
+        self.images += images.len() as u64;
+        self.cost
+            .accumulate(&self.per_image_cost.scaled(images.len() as u64));
+        Ok(acts)
+    }
+}
+
+/// Quantize one activation vector to the layer's unsigned input grid and
+/// expand to signed antipodal factors `2X − M`, padded to the physical row
+/// count with the mid-rail constant — exactly the executor's row prep.
+fn signed_rows(layer: &Layer, contract: &IdealContract, act: &[f32], out: &mut Vec<i32>) {
+    let m_f = ((1u32 << layer.cfg.r_in) - 1) as f32;
+    let m = contract.m as i32;
+    let pad = ((1u32 << layer.cfg.r_in) / 2) as i32;
+    for &v in act.iter().take(layer.rows) {
+        let q = (v / layer.a_scale).round().clamp(0.0, m_f) as u8;
+        out.push(2 * q as i32 - m);
+    }
+    for _ in act.len()..layer.rows {
+        out.push(2 * pad - m);
+    }
+}
+
+/// Signed factors for one already-quantized macro row vector.
+fn signed_from_quantized(layer: &Layer, contract: &IdealContract, rows_u8: &[u8], out: &mut Vec<i32>) {
+    let m = contract.m as i32;
+    let pad = ((1u32 << layer.cfg.r_in) / 2) as i32;
+    for &q in rows_u8.iter().take(layer.rows) {
+        out.push(2 * q as i32 - m);
+    }
+    for _ in rows_u8.len()..layer.rows {
+        out.push(2 * pad - m);
+    }
+}
+
+fn forward_layer_batch(
+    layer: &Layer,
+    contract: &IdealContract,
+    acts: &[Vec<f32>],
+    shape: &[usize],
+    workers: usize,
+) -> (Vec<Vec<f32>>, Vec<usize>) {
+    let n_img = acts.len();
+    let n_out = layer.out_features;
+    match layer.kind {
+        Kind::Dense => {
+            let mut sx = Vec::with_capacity(n_img * layer.rows);
+            for act in acts {
+                signed_rows(layer, contract, act, &mut sx);
+            }
+            let dots = gemm::matmul_i32(&sx, &layer.w_phys, n_img, layer.rows, n_out, workers);
+            let outs = dots
+                .chunks(n_out)
+                .map(|d| {
+                    let codes: Vec<u32> = d
+                        .iter()
+                        .zip(&layer.beta)
+                        .map(|(&dot, &beta)| contract.code(dot as i64, beta))
+                        .collect();
+                    post_adc(layer, &codes)
+                })
+                .collect();
+            (outs, vec![n_out])
+        }
+        Kind::Conv3 => {
+            let (c, h, w) = (shape[0], shape[1], shape[2]);
+            debug_assert_eq!(c, layer.in_features);
+            let m_f = ((1u32 << layer.cfg.r_in) - 1) as f32;
+            let pad_val = ((1u32 << layer.cfg.r_in) / 2) as u8;
+
+            // im2col every image; all share (oh, ow).
+            let mut sx = Vec::new();
+            let mut oh = 0;
+            let mut ow = 0;
+            for act in acts {
+                let xq: Vec<u8> = act
+                    .iter()
+                    .map(|&v| (v / layer.a_scale).round().clamp(0.0, m_f) as u8)
+                    .collect();
+                let (row_vecs, ih, iw) =
+                    im2col::im2col_image(&xq, c, h, w, layer.stride, pad_val);
+                oh = ih;
+                ow = iw;
+                for rv in &row_vecs {
+                    signed_from_quantized(layer, contract, rv, &mut sx);
+                }
+            }
+            let n_pix = oh * ow;
+            let n_vec = n_img * n_pix;
+            let dots = gemm::matmul_i32(&sx, &layer.w_phys, n_vec, layer.rows, n_out, workers);
+
+            let mut outs = Vec::with_capacity(n_img);
+            let mut out_shape = vec![n_out, oh, ow];
+            for img in 0..n_img {
+                let mut fmap = vec![0f32; n_out * n_pix];
+                for pix in 0..n_pix {
+                    let d = &dots[(img * n_pix + pix) * n_out..(img * n_pix + pix + 1) * n_out];
+                    let codes: Vec<u32> = d
+                        .iter()
+                        .zip(&layer.beta)
+                        .map(|(&dot, &beta)| contract.code(dot as i64, beta))
+                        .collect();
+                    let vals = post_adc(layer, &codes);
+                    let (py, px) = (pix / ow, pix % ow);
+                    for (oc, &v) in vals.iter().enumerate() {
+                        fmap[oc * n_pix + py * ow + px] = v;
+                    }
+                }
+                let (pooled, ph, pw) = apply_pool(&fmap, n_out, oh, ow, layer.pool);
+                out_shape = if layer.pool == Pool::Gap {
+                    vec![n_out]
+                } else {
+                    vec![n_out, ph, pw]
+                };
+                outs.push(pooled);
+            }
+            (outs, out_shape)
+        }
+    }
+}
+
+/// Dataflow/energy cost of one image through the network — the same
+/// bookings the per-image executor makes, computed once up front (they
+/// depend only on the layer shapes, not the data).
+pub fn network_image_cost(model: &NetworkModel, p: &MacroParams) -> LayerCost {
+    let mut total = LayerCost::default();
+    let mut shape = model.input_shape.clone();
+    for layer in &model.layers {
+        let col_passes = layer.out_features.div_ceil(p.n_blocks());
+        match layer.kind {
+            Kind::Dense => {
+                let ls = LayerShape::fc(
+                    layer.in_features,
+                    layer.out_features,
+                    layer.cfg.r_in,
+                    layer.cfg.r_out,
+                );
+                total.accumulate(&layer_cost(p, &ls, &layer.cfg, col_passes, true));
+                shape = vec![layer.out_features];
+            }
+            Kind::Conv3 => {
+                let (h, w) = (shape[1], shape[2]);
+                let (oh, ow) = (h.div_ceil(layer.stride), w.div_ceil(layer.stride));
+                let ls = LayerShape::conv(
+                    layer.in_features,
+                    layer.out_features,
+                    layer.cfg.r_in,
+                    layer.cfg.r_out,
+                    oh,
+                    ow,
+                );
+                total.accumulate(&layer_cost(p, &ls, &layer.cfg, col_passes, true));
+                shape = match layer.pool {
+                    Pool::Gap => vec![layer.out_features],
+                    // Mirrors apply_pool's floor-crop: ph = (oh/2*2)/2.
+                    Pool::Max2 | Pool::Avg2 => vec![layer.out_features, oh / 2, ow / 2],
+                    Pool::None => vec![layer.out_features, oh, ow],
+                };
+            }
+        }
+    }
+    total
+}

@@ -1,0 +1,28 @@
+//! The batched multi-die execution engine — the shared inference layer
+//! between the dataflow/analog models below and the coordinator above.
+//!
+//! The paper's macro hits 0.15–8 POPS/W by amortizing conversion and
+//! accumulation across a whole 1152×256 array per cycle; this layer does
+//! the software equivalent for the reproduction's hot path, replacing the
+//! image-by-image, dot-by-dot inference walk:
+//!
+//! * [`gemm`] — blocked batch kernels (one weight pass per four batch
+//!   vectors, split across worker threads);
+//! * [`ideal`] — [`BatchIdeal`]: whole-batch closed-form contract
+//!   evaluation, bit-identical to the per-image executor;
+//! * [`analog`] — [`AnalogPool`]: one cloned circuit-behavioral die per
+//!   worker with deterministic per-die seeds;
+//! * [`queue`] — the work-queue scheduler ([`start`], [`EngineHandle`]):
+//!   concurrent callers submit single images, a dispatcher coalesces them
+//!   into batches (configurable size + flush interval) and runs whichever
+//!   [`BatchBackend`] is plugged in. This is what `imagine serve` uses
+//!   instead of a global `Mutex<Executor>`.
+
+pub mod analog;
+pub mod gemm;
+pub mod ideal;
+pub mod queue;
+
+pub use analog::AnalogPool;
+pub use ideal::BatchIdeal;
+pub use queue::{default_workers, start, BatchBackend, EngineConfig, EngineHandle};

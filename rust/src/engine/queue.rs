@@ -1,0 +1,358 @@
+//! Work-queue scheduler: coalesce concurrent requests into batches.
+//!
+//! The serving problem the old `Mutex<Executor>` design had: N concurrent
+//! clients fully serialize, each paying the whole per-image cost, while
+//! the batched backends get *cheaper* per image as the batch grows. The
+//! scheduler inverts that: connection handlers submit single images into
+//! a queue and block on a per-request reply channel; one dispatcher
+//! thread drains the queue into batches of up to `batch` images (waiting
+//! at most `flush_micros` after the first arrival) and runs the whole
+//! batch through the backend at once.
+//!
+//! The backend is constructed *on* the dispatcher thread from a `Send`
+//! factory closure, so non-`Send` backends (the PJRT client is a
+//! single-threaded C handle) work unchanged — they simply live and die on
+//! the dispatcher.
+
+use crate::util::stats::AtomicHistogram;
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A pluggable batch-inference backend (ideal, analog pool, PJRT, …).
+pub trait BatchBackend {
+    /// Expected flattened input length per image.
+    fn input_len(&self) -> usize;
+
+    /// Run a batch; returns one output vector per input image, in order.
+    fn forward_batch(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
+
+    /// Human-readable backend description (for logs).
+    fn describe(&self) -> String {
+        "batch backend".to_string()
+    }
+}
+
+// Trait impls delegate to the inherent methods (inherent methods win name
+// resolution, so these do not recurse).
+impl BatchBackend for crate::engine::ideal::BatchIdeal {
+    fn input_len(&self) -> usize {
+        self.input_len()
+    }
+
+    fn forward_batch(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        self.forward_batch(images)
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "batched ideal contract ({}, {} workers)",
+            self.model.name, self.workers
+        )
+    }
+}
+
+impl BatchBackend for crate::engine::analog::AnalogPool {
+    fn input_len(&self) -> usize {
+        self.input_len()
+    }
+
+    fn forward_batch(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        self.forward_batch(images)
+    }
+
+    fn describe(&self) -> String {
+        format!("analog die pool ({} dies)", self.n_dies())
+    }
+}
+
+/// Batching/parallelism knobs shared by the CLI and the server.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// Maximum images per coalesced batch.
+    pub batch: usize,
+    /// Worker threads (matmul rows / analog dies).
+    pub workers: usize,
+    /// How long the dispatcher waits for more requests after the first
+    /// one arrives before flushing a partial batch [µs].
+    pub flush_micros: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            batch: 32,
+            workers: default_workers(),
+            flush_micros: 500,
+        }
+    }
+}
+
+/// Available hardware parallelism (≥ 1).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+struct Job {
+    image: Vec<f32>,
+    resp: mpsc::Sender<std::result::Result<Vec<f32>, String>>,
+}
+
+/// Cloneable handle for submitting inference requests to the dispatcher.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Job>,
+    input_len: usize,
+    describe: String,
+    batches: Arc<AtomicU64>,
+}
+
+impl EngineHandle {
+    pub fn input_len(&self) -> usize {
+        self.input_len
+    }
+
+    pub fn describe(&self) -> &str {
+        &self.describe
+    }
+
+    /// Batches dispatched so far.
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    /// Blocking single-image inference (the dispatcher coalesces
+    /// concurrent callers into batches).
+    pub fn infer(&self, image: Vec<f32>) -> Result<Vec<f32>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Job { image, resp: rtx })
+            .map_err(|_| anyhow!("inference engine has shut down"))?;
+        match rrx.recv() {
+            Ok(Ok(v)) => Ok(v),
+            Ok(Err(e)) => Err(anyhow!("{e}")),
+            Err(_) => Err(anyhow!("inference engine dropped the request")),
+        }
+    }
+}
+
+/// Start the dispatcher. `factory` runs on the dispatcher thread (so the
+/// backend itself need not be `Send`); construction errors are reported
+/// synchronously. The scheduler shuts down when every [`EngineHandle`]
+/// clone has been dropped. `occupancy` (if given) records the size of
+/// every dispatched batch.
+pub fn start<F>(
+    factory: F,
+    cfg: EngineConfig,
+    occupancy: Option<Arc<AtomicHistogram>>,
+) -> Result<EngineHandle>
+where
+    F: FnOnce() -> Result<Box<dyn BatchBackend>> + Send + 'static,
+{
+    let (tx, rx) = mpsc::channel::<Job>();
+    let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(usize, String), String>>();
+    let batch = cfg.batch.max(1);
+    let flush = Duration::from_micros(cfg.flush_micros);
+    let batches = Arc::new(AtomicU64::new(0));
+    let batches_worker = Arc::clone(&batches);
+
+    std::thread::Builder::new()
+        .name("engine-dispatch".to_string())
+        .spawn(move || {
+            let mut backend = match factory() {
+                Ok(b) => {
+                    let _ = ready_tx.send(Ok((b.input_len(), b.describe())));
+                    b
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(format!("{e:#}")));
+                    return;
+                }
+            };
+            dispatch_loop(&mut *backend, &rx, batch, flush, &batches_worker, occupancy);
+        })
+        .map_err(|e| anyhow!("spawning dispatcher: {e}"))?;
+
+    match ready_rx.recv() {
+        Ok(Ok((input_len, describe))) => Ok(EngineHandle { tx, input_len, describe, batches }),
+        Ok(Err(e)) => Err(anyhow!("engine backend failed to start: {e}")),
+        Err(_) => Err(anyhow!("engine dispatcher died during startup")),
+    }
+}
+
+fn dispatch_loop(
+    backend: &mut dyn BatchBackend,
+    rx: &mpsc::Receiver<Job>,
+    batch: usize,
+    flush: Duration,
+    batches: &AtomicU64,
+    occupancy: Option<Arc<AtomicHistogram>>,
+) {
+    loop {
+        // Block for the first request of the next batch.
+        let first = match rx.recv() {
+            Ok(job) => job,
+            Err(_) => return, // all handles dropped
+        };
+        let mut jobs = vec![first];
+        // Opportunistically drain whatever is already queued — a
+        // concurrent burst coalesces with no waiting at all.
+        while jobs.len() < batch {
+            match rx.try_recv() {
+                Ok(job) => jobs.push(job),
+                Err(_) => break,
+            }
+        }
+        // Lone request: probe briefly for company instead of paying the
+        // whole flush window — a lock-step single client must not gain a
+        // `flush`-sized latency floor on every request.
+        if jobs.len() == 1 && batch > 1 {
+            if let Ok(job) = rx.recv_timeout(flush / 8) {
+                jobs.push(job);
+            }
+        }
+        // Once ≥ 2 requests showed up there is real concurrency: keep
+        // collecting until the batch fills or the flush window closes.
+        if jobs.len() > 1 {
+            let deadline = Instant::now() + flush;
+            while jobs.len() < batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(job) => jobs.push(job),
+                    Err(_) => break,
+                }
+            }
+        }
+
+        // Move the images out of the jobs — no per-image copies on the
+        // serving hot path.
+        let mut images = Vec::with_capacity(jobs.len());
+        let mut responders = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            images.push(job.image);
+            responders.push(job.resp);
+        }
+        batches.fetch_add(1, Ordering::Relaxed);
+        if let Some(h) = &occupancy {
+            h.record(images.len() as u64);
+        }
+        match backend.forward_batch(&images) {
+            Ok(outputs) => {
+                for (resp, out) in responders.into_iter().zip(outputs) {
+                    let _ = resp.send(Ok(out));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for resp in responders {
+                    let _ = resp.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Toy backend: output = [sum of inputs, batch size at execution].
+    struct SumBackend {
+        len: usize,
+    }
+
+    impl BatchBackend for SumBackend {
+        fn input_len(&self) -> usize {
+            self.len
+        }
+
+        fn forward_batch(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+            Ok(images
+                .iter()
+                .map(|im| vec![im.iter().sum::<f32>(), images.len() as f32])
+                .collect())
+        }
+
+        fn describe(&self) -> String {
+            "sum".to_string()
+        }
+    }
+
+    #[test]
+    fn scheduler_roundtrip_and_shutdown() {
+        let cfg = EngineConfig { batch: 4, workers: 1, flush_micros: 200 };
+        let handle =
+            start(|| Ok(Box::new(SumBackend { len: 3 }) as Box<dyn BatchBackend>), cfg, None)
+                .unwrap();
+        assert_eq!(handle.input_len(), 3);
+        assert_eq!(handle.describe(), "sum");
+        let out = handle.infer(vec![1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(out[0], 6.0);
+        assert!(handle.batches() >= 1);
+        drop(handle); // dispatcher exits once all handles are gone
+    }
+
+    #[test]
+    fn scheduler_coalesces_concurrent_requests() {
+        let occupancy = Arc::new(crate::util::stats::AtomicHistogram::new(
+            crate::util::stats::pow2_bounds(8),
+        ));
+        let cfg = EngineConfig { batch: 16, workers: 1, flush_micros: 50_000 };
+        let handle = start(
+            || Ok(Box::new(SumBackend { len: 1 }) as Box<dyn BatchBackend>),
+            cfg,
+            Some(Arc::clone(&occupancy)),
+        )
+        .unwrap();
+        let n_clients = 8;
+        let results: Vec<f32> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n_clients)
+                .map(|i| {
+                    let h = handle.clone();
+                    s.spawn(move || h.infer(vec![i as f32]).unwrap())
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()[1]).collect()
+        });
+        // All 8 ran; with a 50 ms flush window at least one batch must
+        // have coalesced more than one request.
+        assert_eq!(results.len(), n_clients);
+        assert!(occupancy.count() >= 1);
+        assert!(
+            results.iter().any(|&b| b > 1.0),
+            "no coalescing observed: {results:?}"
+        );
+    }
+
+    #[test]
+    fn factory_error_is_reported() {
+        let cfg = EngineConfig::default();
+        let err = start(|| Err(anyhow!("no artifacts")), cfg, None).err().unwrap();
+        assert!(format!("{err}").contains("no artifacts"), "{err}");
+    }
+
+    #[test]
+    fn backend_error_propagates_to_caller() {
+        struct FailBackend;
+        impl BatchBackend for FailBackend {
+            fn input_len(&self) -> usize {
+                1
+            }
+            fn forward_batch(&mut self, _: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+                Err(anyhow!("die melted"))
+            }
+        }
+        let cfg = EngineConfig { batch: 2, workers: 1, flush_micros: 100 };
+        let handle =
+            start(|| Ok(Box::new(FailBackend) as Box<dyn BatchBackend>), cfg, None).unwrap();
+        let err = handle.infer(vec![0.0]).err().unwrap();
+        assert!(format!("{err}").contains("die melted"), "{err}");
+    }
+}

@@ -9,6 +9,9 @@
 //!   in-ADC analog batch-normalization, mismatch/noise/corners);
 //! * [`dataflow`] — the digital accelerator around it (LMEMs, streaming
 //!   im2col, pipeline stall model of Eqs. 8–10);
+//! * [`engine`] — the batched multi-die execution engine (whole-batch
+//!   ideal-contract evaluation, per-worker analog die clones, and the
+//!   work-queue scheduler the server batches concurrent requests with);
 //! * [`energy`] — energy/area/timing models regenerating the paper's
 //!   efficiency figures and Table I;
 //! * [`coordinator`] — layer scheduler, network executor, CLI server;
@@ -25,6 +28,7 @@ pub mod config;
 pub mod coordinator;
 pub mod dataflow;
 pub mod energy;
+pub mod engine;
 pub mod nn;
 pub mod runtime;
 pub mod util;

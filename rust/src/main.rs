@@ -5,40 +5,85 @@
 //!   imagine info                              macro parameters & Table I row
 //!   imagine plan  --model NAME [--dir D]      layer schedule + cost table
 //!   imagine run   --model NAME [--n N] [--backend ideal|analog|pjrt]
+//!                 [--batch B] [--workers W] [--seed S]
 //!                                             evaluate on the exported test set
-//!   imagine serve --model NAME [--addr A]     line-JSON TCP inference server
+//!   imagine serve --model NAME [--addr A] [--batch B] [--workers W]
+//!                 [--flush-us T]              line-JSON TCP inference server
+//!
+//! Unknown flags are rejected with the list of valid options (a typo like
+//! `--bckend` used to silently fall through to the default backend).
 //!
 //! Default artifact directory: ./artifacts (produced by `make artifacts`).
 
 use anyhow::{bail, Context, Result};
 use imagine::analog::macro_model::OpConfig;
 use imagine::config::params::{MacroParams, Supply};
-use imagine::coordinator::executor::{Backend, Executor};
 use imagine::coordinator::manifest::NetworkModel;
 use imagine::coordinator::scheduler;
-use imagine::coordinator::server::{serve, Engine};
+use imagine::coordinator::server::{serve, start_engine, Stats};
 use imagine::energy::{analog as ea, area, system, timing};
+use imagine::engine::{default_workers, AnalogPool, BatchIdeal, EngineConfig};
 use imagine::nn::dataset::Dataset;
 use imagine::runtime::Runtime;
 use std::collections::HashMap;
 
-fn parse_flags(args: &[String]) -> HashMap<String, String> {
+/// Strict flag parser: `--key value` (or bare `--key` → "true"), every
+/// key must be in `allowed`; positional arguments are rejected.
+fn parse_flags(cmd: &str, args: &[String], allowed: &[&str]) -> Result<HashMap<String, String>> {
     let mut flags = HashMap::new();
     let mut i = 0;
     while i < args.len() {
-        if let Some(key) = args[i].strip_prefix("--") {
-            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                flags.insert(key.to_string(), args[i + 1].clone());
-                i += 2;
-            } else {
-                flags.insert(key.to_string(), "true".to_string());
-                i += 1;
-            }
+        let Some(key) = args[i].strip_prefix("--") else {
+            bail!(
+                "unexpected argument '{}' for '{cmd}' (flags start with --; valid: {})",
+                args[i],
+                render_allowed(allowed)
+            );
+        };
+        if !allowed.contains(&key) {
+            bail!(
+                "unknown flag '--{key}' for '{cmd}' (valid: {})",
+                render_allowed(allowed)
+            );
+        }
+        if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+            flags.insert(key.to_string(), args[i + 1].clone());
+            i += 2;
         } else {
+            flags.insert(key.to_string(), "true".to_string());
             i += 1;
         }
     }
-    flags
+    Ok(flags)
+}
+
+fn render_allowed(allowed: &[&str]) -> String {
+    if allowed.is_empty() {
+        return "none".to_string();
+    }
+    allowed
+        .iter()
+        .map(|a| format!("--{a}"))
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+fn flag_usize(flags: &HashMap<String, String>, key: &str, default: usize) -> Result<usize> {
+    match flags.get(key) {
+        None => Ok(default),
+        Some(s) => s
+            .parse()
+            .with_context(|| format!("--{key} expects an integer, got '{s}'")),
+    }
+}
+
+fn flag_u64(flags: &HashMap<String, String>, key: &str, default: u64) -> Result<u64> {
+    match flags.get(key) {
+        None => Ok(default),
+        Some(s) => s
+            .parse()
+            .with_context(|| format!("--{key} expects an integer, got '{s}'")),
+    }
 }
 
 fn cmd_info() {
@@ -93,15 +138,31 @@ fn prep_image(model: &NetworkModel, ds: &Dataset, i: usize) -> Vec<f32> {
 fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
     let dir = flags.get("dir").map(String::as_str).unwrap_or("artifacts");
     let name = flags.get("model").map(String::as_str).unwrap_or("lenet_cim");
-    let n: usize = flags.get("n").map(|s| s.parse()).transpose()?.unwrap_or(200);
+    let n: usize = flag_usize(flags, "n", 200)?;
     let backend = flags.get("backend").map(String::as_str).unwrap_or("ideal");
+    let batch = flag_usize(flags, "batch", 64)?.max(1);
+    let workers = flag_usize(flags, "workers", default_workers())?.max(1);
+    let seed = flag_u64(flags, "seed", 42)?;
 
     let model = NetworkModel::load(dir, name)?;
     let ds = load_dataset_for(&model, dir)?;
     let n = n.min(ds.n);
     println!("model {name}: {} layers, trained acc {:?}",
         model.layers.len(), model.trained_accuracy());
-    println!("evaluating {n} images via backend '{backend}'...");
+    println!(
+        "evaluating {n} images via backend '{backend}' (batch {batch}, {workers} workers)..."
+    );
+
+    let indices: Vec<usize> = (0..n).collect();
+    let count_correct = |preds: &[Vec<f32>], idx: &[usize], correct: &mut usize| {
+        for (logits, &i) in preds.iter().zip(idx) {
+            let pred = logits.iter().enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+            if pred == ds.y[i] as usize {
+                *correct += 1;
+            }
+        }
+    };
 
     let t0 = std::time::Instant::now();
     let (correct, cost) = match backend {
@@ -120,28 +181,46 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
             }
             (correct, None)
         }
-        "ideal" | "analog" => {
-            let be = if backend == "ideal" {
-                Backend::Ideal
-            } else {
-                Backend::Analog { seed: 42, noise: true, calibrate: true }
-            };
-            let mut exec = Executor::new(model.clone(), MacroParams::paper(), be)?;
+        "ideal" => {
+            let mut engine = BatchIdeal::new(model.clone(), MacroParams::paper(), workers)?;
             let mut correct = 0;
-            for i in 0..n {
-                let img = prep_image(&model, &ds, i);
-                let logits = exec.forward(&img)?;
-                let pred = logits.iter().enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
-                if pred == ds.y[i] as usize { correct += 1; }
+            for idx in indices.chunks(batch) {
+                let imgs: Vec<Vec<f32>> =
+                    idx.iter().map(|&i| prep_image(&model, &ds, i)).collect();
+                let outs = engine.forward_batch(&imgs)?;
+                count_correct(&outs, idx, &mut correct);
             }
-            (correct, Some(exec.cost))
+            (correct, Some(engine.cost))
+        }
+        "analog" => {
+            let mut pool = AnalogPool::new(
+                model.clone(),
+                MacroParams::paper(),
+                seed,
+                true,
+                true,
+                workers,
+            )?;
+            println!("fabricated {} simulated dies (base seed {seed})", pool.n_dies());
+            let mut correct = 0;
+            for idx in indices.chunks(batch) {
+                let imgs: Vec<Vec<f32>> =
+                    idx.iter().map(|&i| prep_image(&model, &ds, i)).collect();
+                let outs = pool.forward_batch(&imgs)?;
+                count_correct(&outs, idx, &mut correct);
+            }
+            (correct, Some(pool.cost()))
         }
         other => bail!("unknown backend '{other}' (ideal|analog|pjrt)"),
     };
     let wall = t0.elapsed().as_secs_f64();
-    println!("accuracy: {:.2}% ({correct}/{n})   wall {:.2}s ({:.1} ms/image)",
-        100.0 * correct as f64 / n as f64, wall, 1e3 * wall / n as f64);
+    println!(
+        "accuracy: {:.2}% ({correct}/{n})   wall {:.2}s ({:.2} ms/image, {:.0} images/s)",
+        100.0 * correct as f64 / n as f64,
+        wall,
+        1e3 * wall / n as f64,
+        n as f64 / wall
+    );
     if let Some(c) = cost {
         println!("modeled accelerator cost over the run:");
         println!("  cycles {:>12}   model-time {:.3} ms", c.cycles, c.seconds * 1e3);
@@ -173,28 +252,57 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let dir = flags.get("dir").map(String::as_str).unwrap_or("artifacts");
     let name = flags.get("model").map(String::as_str).unwrap_or("mlp784");
     let addr = flags.get("addr").map(String::as_str).unwrap_or("127.0.0.1:7878");
-    let engine = Engine::from_artifacts(dir, name)
-        .with_context(|| format!("loading engine for {name} from {dir}"))?;
-    serve(engine, addr, None)
+    let cfg = EngineConfig {
+        batch: flag_usize(flags, "batch", 32)?.max(1),
+        workers: flag_usize(flags, "workers", default_workers())?.max(1),
+        flush_micros: flag_u64(flags, "flush-us", 500)?,
+    };
+    let stats = Stats::default();
+    let engine = start_engine(dir, name, cfg, &stats)
+        .with_context(|| format!("starting engine for {name} from {dir}"))?;
+    eprintln!(
+        "engine: {} (batch {}, flush {} us)",
+        engine.describe(),
+        cfg.batch,
+        cfg.flush_micros
+    );
+    serve(engine, &stats, addr, None)
+}
+
+fn usage() {
+    println!("usage: imagine <info|run|plan|serve> [--model NAME] [--dir artifacts]");
+    println!("  run:   [--n 200] [--backend ideal|analog|pjrt] [--batch 64] [--workers N] [--seed 42]");
+    println!("  serve: [--addr 127.0.0.1:7878] [--batch 32] [--workers N] [--flush-us 500]");
 }
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
-    let flags = parse_flags(&args[args.len().min(1)..]);
+    let rest = &args[args.len().min(1)..];
     match cmd {
         "info" => {
+            parse_flags("info", rest, &[])?;
             cmd_info();
             Ok(())
         }
-        "run" => cmd_run(&flags),
-        "plan" => cmd_plan(&flags),
-        "serve" => cmd_serve(&flags),
-        _ => {
-            println!("usage: imagine <info|run|plan|serve> [--model NAME] [--dir artifacts]");
-            println!("  run:   [--n 200] [--backend ideal|analog|pjrt]");
-            println!("  serve: [--addr 127.0.0.1:7878]");
+        "run" => cmd_run(&parse_flags(
+            "run",
+            rest,
+            &["model", "dir", "n", "backend", "batch", "workers", "seed"],
+        )?),
+        "plan" => cmd_plan(&parse_flags("plan", rest, &["model", "dir"])?),
+        "serve" => cmd_serve(&parse_flags(
+            "serve",
+            rest,
+            &["model", "dir", "addr", "batch", "workers", "flush-us"],
+        )?),
+        "help" | "--help" | "-h" => {
+            usage();
             Ok(())
+        }
+        other => {
+            usage();
+            bail!("unknown command '{other}'");
         }
     }
 }

@@ -13,8 +13,18 @@
 //! `dot = Σ (2X−M)·W` is recovered from the code, then the offset-binary
 //! identity `Σ X·W = (dot + M·ΣW)/2` restores the real pre-activation
 //! (the `M·ΣW` constant is what the silicon's ABN offset/bias absorbs).
+//!
+//! Execution goes through the engine layer's batched kernel
+//! ([`crate::engine::gemm::rowdot_f64`]): the whole test set advances one
+//! *layer* at a time, so each layer's weight matrix is streamed once per
+//! sweep point instead of once per image. Noiseless results are
+//! bit-identical to the historical per-image loop (same per-element float
+//! expressions, same ascending-k accumulation); with `noise_lsb > 0` the
+//! RNG draw order is layer-major instead of image-major, so individual
+//! noisy codes differ draw-by-draw while the statistics are unchanged.
 
 use crate::config::params::MacroParams;
+use crate::engine::gemm;
 use crate::nn::dataset::Dataset;
 use crate::nn::mlp::Mlp;
 use crate::util::rng::Rng;
@@ -140,33 +150,48 @@ fn build_qlayers(mlp: &Mlp, data: &Dataset, p: &MacroParams, cfg: &EvalCfg) -> V
 }
 
 /// Evaluate the MLP through the CIM contract; returns test accuracy.
+/// The dataset advances layer-by-layer through batched dot products.
 pub fn eval_cim(mlp: &Mlp, data: &Dataset, p: &MacroParams, cfg: &EvalCfg) -> f64 {
+    eval_cim_workers(mlp, data, p, cfg, crate::engine::default_workers())
+}
+
+/// [`eval_cim`] with an explicit worker-thread count for the batched
+/// matmuls (`1` reproduces a fully serial evaluation).
+pub fn eval_cim_workers(
+    mlp: &Mlp,
+    data: &Dataset,
+    p: &MacroParams,
+    cfg: &EvalCfg,
+    workers: usize,
+) -> f64 {
     let qlayers = build_qlayers(mlp, data, p, cfg);
     let mut rng = Rng::new(cfg.seed);
     let m = ((1u32 << cfg.r_in) - 1) as f32;
     let half = (1u64 << (cfg.r_out - 1)) as f64;
     let top = (1u64 << cfg.r_out) as f64 - 1.0;
+    let n = data.n;
 
-    let mut correct = 0usize;
-    for i in 0..data.n {
-        let mut cur: Vec<f32> = data.flat(i).to_vec();
-        for (li, (layer, ql)) in mlp.layers.iter().zip(&qlayers).enumerate() {
-            let lsb = p.adc_lsb(cfg.r_out, ql.gamma);
-            let dv_unit =
-                ql.alpha * p.supply.vddl / (1u64 << (cfg.r_in + R_W)) as f64;
-            let xq: Vec<f32> = cur
-                .iter()
-                .map(|&v| (v / ql.a_scale).round().clamp(0.0, m))
-                .collect();
-            let mut out = vec![0f32; layer.n_out];
+    // The whole test set as one activation matrix [n × width].
+    let mut cur: Vec<f32> = data.x[..n * data.image_len()].to_vec();
+    for (li, (layer, ql)) in mlp.layers.iter().zip(&qlayers).enumerate() {
+        let lsb = p.adc_lsb(cfg.r_out, ql.gamma);
+        let dv_unit = ql.alpha * p.supply.vddl / (1u64 << (cfg.r_in + R_W)) as f64;
+        // Quantize and recenter every activation to the antipodal grid.
+        let sx: Vec<f64> = cur
+            .iter()
+            .map(|&v| {
+                let xq = (v / ql.a_scale).round().clamp(0.0, m);
+                (2.0 * xq - m) as f64
+            })
+            .collect();
+        let w64: Vec<f64> = ql.w_q.iter().map(|&w| w as f64).collect();
+        let dots = gemm::rowdot_f64(&sx, &w64, n, layer.n_in, layer.n_out, workers);
+
+        let mut out = vec![0f32; n * layer.n_out];
+        for i in 0..n {
             for o in 0..layer.n_out {
-                let row = &ql.w_q[o * layer.n_in..(o + 1) * layer.n_in];
-                let mut dot = 0f64;
-                for (j, &xv) in xq.iter().enumerate() {
-                    dot += (2.0 * xv - m) as f64 * row[j] as f64;
-                }
                 // Macro + ADC (Eq. 7), with equivalent noise.
-                let dv = dv_unit * dot;
+                let dv = dv_unit * dots[i * layer.n_out + o];
                 let mut code = half + dv / lsb;
                 if cfg.noise_lsb > 0.0 {
                     code += rng.normal(0.0, cfg.noise_lsb * (1.0 + ql.gamma / 16.0));
@@ -175,14 +200,21 @@ pub fn eval_cim(mlp: &Mlp, data: &Dataset, p: &MacroParams, cfg: &EvalCfg) -> f6
                 // Digital reconstruction: invert Eq. 7, undo offset-binary.
                 let dot_rec = (code - half) * lsb / dv_unit;
                 let xw = (dot_rec as f32 + m * ql.sum_w[o]) / 2.0;
-                out[o] = xw * ql.a_scale * ql.w_scale + layer.b[o];
+                let mut v = xw * ql.a_scale * ql.w_scale + layer.b[o];
                 if li + 1 < mlp.layers.len() {
-                    out[o] = out[o].max(0.0);
+                    v = v.max(0.0);
                 }
+                out[i * layer.n_out + o] = v;
             }
-            cur = out;
         }
-        let pred = cur
+        cur = out;
+    }
+
+    let n_out = mlp.layers.last().map(|l| l.n_out).unwrap_or(1);
+    let mut correct = 0usize;
+    for i in 0..n {
+        let logits = &cur[i * n_out..(i + 1) * n_out];
+        let pred = logits
             .iter()
             .enumerate()
             .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
@@ -192,7 +224,7 @@ pub fn eval_cim(mlp: &Mlp, data: &Dataset, p: &MacroParams, cfg: &EvalCfg) -> f6
             correct += 1;
         }
     }
-    correct as f64 / data.n as f64
+    correct as f64 / n as f64
 }
 
 #[cfg(test)]
@@ -259,6 +291,19 @@ mod tests {
             acc_good > acc_bad + 0.1,
             "bad={acc_bad} good={acc_good} (recovery expected)"
         );
+    }
+
+    #[test]
+    fn worker_count_does_not_change_noiseless_results() {
+        // The batched evaluation must be invariant to how the batch is
+        // split across threads (same per-element float expressions, same
+        // ascending-k accumulation order).
+        let (mlp, test) = trained();
+        let p = MacroParams::paper();
+        let cfg = EvalCfg { noise_lsb: 0.0, ..EvalCfg::new(6, 3, true) };
+        let a1 = eval_cim_workers(&mlp, &test, &p, &cfg, 1);
+        let a4 = eval_cim_workers(&mlp, &test, &p, &cfg, 4);
+        assert_eq!(a1, a4);
     }
 
     #[test]

@@ -1,5 +1,18 @@
 //! PJRT-based runtime for AOT-compiled model artifacts (request path).
+//!
+//! The real binding (`pjrt.rs`, behind the `pjrt` cargo feature) drives
+//! the `xla` (xla_extension) CPU client. The default build is fully
+//! offline and ships [`stub::Runtime`] instead: same API, but
+//! `Runtime::new()` reports that the PJRT path is unavailable so callers
+//! (server engine selection, `imagine run --backend pjrt`) can fall back
+//! to the rust executor engine with a clear message.
 
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
-
+#[cfg(feature = "pjrt")]
 pub use pjrt::Runtime;
+
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::Runtime;

@@ -1,0 +1,64 @@
+//! Stub PJRT runtime for builds without the `pjrt` feature.
+//!
+//! API-compatible with [`super::pjrt::Runtime`]: every constructor and
+//! execution entry point returns a descriptive error instead of running,
+//! so the rest of the stack (server engine selection, CLI backends,
+//! examples) compiles unchanged and degrades gracefully at runtime.
+
+use anyhow::{bail, Result};
+use std::path::Path;
+
+const UNAVAILABLE: &str =
+    "PJRT runtime unavailable: built without the `pjrt` cargo feature \
+     (requires the vendored `xla` bindings); use the ideal/analog backends instead";
+
+/// Placeholder for the PJRT CPU client + compiled-model registry.
+pub struct Runtime {
+    _priv: (),
+}
+
+impl Runtime {
+    pub fn new() -> Result<Self> {
+        bail!("{UNAVAILABLE}");
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn load_hlo_text(&mut self, _name: &str, _path: impl AsRef<Path>) -> Result<()> {
+        bail!("{UNAVAILABLE}");
+    }
+
+    pub fn is_loaded(&self, _name: &str) -> bool {
+        false
+    }
+
+    pub fn model_names(&self) -> Vec<&str> {
+        Vec::new()
+    }
+
+    pub fn compile_seconds(&self, _name: &str) -> Option<f64> {
+        None
+    }
+
+    pub fn run_f32(&self, _name: &str, _input: &[f32], _in_dims: &[usize]) -> Result<Vec<f32>> {
+        bail!("{UNAVAILABLE}");
+    }
+
+    pub fn run_i32(&self, _name: &str, _input: &[i32], _in_dims: &[usize]) -> Result<Vec<i32>> {
+        bail!("{UNAVAILABLE}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let err = Runtime::new().err().expect("stub must not construct");
+        let msg = format!("{err}");
+        assert!(msg.contains("pjrt"), "{msg}");
+    }
+}

@@ -139,6 +139,103 @@ pub fn entropy_bits(counts: &[usize]) -> f64 {
     h
 }
 
+/// Lock-free bucketed histogram for concurrent recording (server latency
+/// and batch-occupancy stats). Buckets are `counts[i]` for values
+/// `<= bounds[i]`, plus one overflow bucket. Recording is a single
+/// relaxed atomic increment; percentiles are approximate (bucket upper
+/// edge), which is what p50/p99 serving dashboards need.
+#[derive(Debug)]
+pub struct AtomicHistogram {
+    bounds: Vec<u64>,
+    counts: Vec<std::sync::atomic::AtomicU64>,
+    total: std::sync::atomic::AtomicU64,
+    n: std::sync::atomic::AtomicU64,
+}
+
+/// Power-of-two bucket bounds `1, 2, 4, …, 2^max_exp`.
+pub fn pow2_bounds(max_exp: u32) -> Vec<u64> {
+    (0..=max_exp).map(|e| 1u64 << e).collect()
+}
+
+impl AtomicHistogram {
+    pub fn new(bounds: Vec<u64>) -> Self {
+        assert!(!bounds.is_empty());
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must increase");
+        let counts = (0..bounds.len() + 1)
+            .map(|_| std::sync::atomic::AtomicU64::new(0))
+            .collect();
+        Self {
+            bounds,
+            counts,
+            total: std::sync::atomic::AtomicU64::new(0),
+            n: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, value: u64) {
+        use std::sync::atomic::Ordering::Relaxed;
+        let idx = self
+            .bounds
+            .partition_point(|&b| b < value)
+            .min(self.counts.len() - 1);
+        self.counts[idx].fetch_add(1, Relaxed);
+        self.total.fetch_add(value, Relaxed);
+        self.n.fetch_add(1, Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.total.load(std::sync::atomic::Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Approximate percentile (`p` in [0, 100]): the upper edge of the
+    /// bucket containing the p-th sample. Overflow reports the last bound.
+    pub fn percentile(&self, p: f64) -> u64 {
+        use std::sync::atomic::Ordering::Relaxed;
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * n as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c.load(Relaxed);
+            if seen >= rank {
+                return if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    *self.bounds.last().unwrap()
+                };
+            }
+        }
+        *self.bounds.last().unwrap()
+    }
+
+    /// (bound, count) pairs for non-empty buckets; the overflow bucket is
+    /// reported with bound `u64::MAX`.
+    pub fn nonzero_buckets(&self) -> Vec<(u64, u64)> {
+        use std::sync::atomic::Ordering::Relaxed;
+        self.counts
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| {
+                let n = c.load(Relaxed);
+                if n == 0 {
+                    return None;
+                }
+                Some((self.bounds.get(i).copied().unwrap_or(u64::MAX), n))
+            })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -194,5 +291,43 @@ mod tests {
     fn entropy_uniform_is_log2_n() {
         let counts = [10usize; 8];
         assert!((entropy_bits(&counts) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn atomic_histogram_percentiles() {
+        let h = AtomicHistogram::new(pow2_bounds(10)); // 1..1024
+        for v in 1..=100u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+        // p50 of 1..=100 lands in the (32, 64] bucket → upper edge 64.
+        assert_eq!(h.percentile(50.0), 64);
+        assert_eq!(h.percentile(99.0), 128);
+        assert_eq!(h.percentile(0.0), 1);
+        // Overflow values clamp to the top bound.
+        h.record(1u64 << 40);
+        assert_eq!(h.percentile(100.0), 1024);
+    }
+
+    #[test]
+    fn atomic_histogram_bucket_edges() {
+        let h = AtomicHistogram::new(vec![1, 2, 4]);
+        h.record(1); // bucket 0 (<=1)
+        h.record(2); // bucket 1
+        h.record(3); // bucket 2 (<=4)
+        h.record(4); // bucket 2
+        h.record(9); // overflow
+        let buckets = h.nonzero_buckets();
+        assert_eq!(buckets, vec![(1, 1), (2, 1), (4, 2), (u64::MAX, 1)]);
+        assert_eq!(h.count(), 5);
+    }
+
+    #[test]
+    fn atomic_histogram_empty() {
+        let h = AtomicHistogram::new(pow2_bounds(4));
+        assert_eq!(h.percentile(50.0), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert!(h.nonzero_buckets().is_empty());
     }
 }

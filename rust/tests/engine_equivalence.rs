@@ -1,0 +1,197 @@
+//! The batched engine against the per-image executor — the refactor's
+//! core contract: `Backend::Ideal` through `BatchIdeal` must be
+//! *bit-identical* to the historical image-by-image path, on random
+//! models, for any batch split and worker count. No artifacts needed:
+//! models are synthesized in memory.
+
+use imagine::config::params::MacroParams;
+use imagine::coordinator::executor::{Backend, Executor};
+use imagine::coordinator::manifest::{Layer, NetworkModel, Pool};
+use imagine::engine::{self, AnalogPool, BatchBackend, BatchIdeal, EngineConfig};
+use imagine::util::json::Json;
+use imagine::util::rng::Rng;
+
+fn random_images(rng: &mut Rng, n: usize, len: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|_| (0..len).map(|_| rng.uniform() as f32).collect())
+        .collect()
+}
+
+/// A small random conv+dense model exercising stride, pooling and
+/// C_in not a multiple of the 4-channel unit split.
+fn random_cnn(rng: &mut Rng, p: &MacroParams) -> NetworkModel {
+    let c_in = [1usize, 3, 5, 8][rng.below(4) as usize];
+    let h = rng.int_range(6, 10) as usize;
+    let w = rng.int_range(6, 10) as usize;
+    let c_mid = rng.int_range(4, 12) as usize;
+    let stride = if rng.bool(0.5) { 1 } else { 2 };
+    let pool = [Pool::None, Pool::Max2, Pool::Avg2][rng.below(3) as usize];
+    let bits = [(8u32, 4u32, 8u32), (4, 2, 6), (2, 1, 4)][rng.below(3) as usize];
+
+    let conv1 = Layer::synthetic_conv3("conv1", c_in, c_mid, stride, pool, bits, rng, p);
+    let gap = Layer::synthetic_conv3("gap", c_mid, 16, 1, Pool::Gap, bits, rng, p);
+    let head = Layer::synthetic_dense("head", 16, 10, bits, false, rng, p);
+    NetworkModel {
+        name: "synthetic_cnn".to_string(),
+        input_shape: vec![c_in, h, w],
+        layers: vec![conv1, gap, head],
+        metrics: Json::Null,
+    }
+}
+
+#[test]
+fn batched_ideal_bit_identical_on_random_mlps() {
+    let p = MacroParams::paper();
+    let mut rng = Rng::new(0xE061);
+    for case in 0..6 {
+        let widths = [
+            vec![64usize, 32, 10],
+            vec![100, 10],
+            vec![784, 64, 10],
+        ][case % 3]
+            .clone();
+        let model = NetworkModel::synthetic_mlp(&widths, 8, 4, 8, rng.next_u64(), &p);
+        let images = random_images(&mut rng, 9, widths[0]);
+
+        let mut exec = Executor::new(model.clone(), p.clone(), Backend::Ideal).unwrap();
+        let expected: Vec<Vec<f32>> =
+            images.iter().map(|im| exec.forward(im).unwrap()).collect();
+
+        for workers in [1usize, 3] {
+            let mut engine = BatchIdeal::new(model.clone(), p.clone(), workers).unwrap();
+            let got = engine.forward_batch(&images).unwrap();
+            assert_eq!(got, expected, "case {case} workers {workers}");
+            assert_eq!(engine.images, images.len() as u64);
+            // Dataflow cost bookings agree with the per-image path.
+            assert_eq!(engine.cost.cycles, exec.cost.cycles, "case {case}");
+            assert!((engine.cost.e_total() - exec.cost.e_total()).abs() <= 1e-12);
+        }
+    }
+}
+
+#[test]
+fn batched_ideal_bit_identical_on_random_cnns() {
+    let p = MacroParams::paper();
+    let mut rng = Rng::new(0xC44);
+    for case in 0..5 {
+        let model = random_cnn(&mut rng, &p);
+        let input_len: usize = model.input_shape.iter().product();
+        let images = random_images(&mut rng, 5, input_len);
+
+        let mut exec = Executor::new(model.clone(), p.clone(), Backend::Ideal).unwrap();
+        let expected: Vec<Vec<f32>> =
+            images.iter().map(|im| exec.forward(im).unwrap()).collect();
+
+        for workers in [1usize, 4] {
+            let mut engine = BatchIdeal::new(model.clone(), p.clone(), workers).unwrap();
+            let got = engine.forward_batch(&images).unwrap();
+            assert_eq!(got, expected, "case {case} workers {workers}");
+            assert_eq!(engine.cost.cycles, exec.cost.cycles, "case {case}");
+        }
+    }
+}
+
+#[test]
+fn batch_split_is_irrelevant() {
+    // Feeding the same images in one batch or one-by-one gives identical
+    // outputs (no cross-image leakage through the batch dimension).
+    let p = MacroParams::paper();
+    let mut rng = Rng::new(7);
+    let model = NetworkModel::synthetic_mlp(&[50, 20, 4], 8, 4, 8, 11, &p);
+    let images = random_images(&mut rng, 7, 50);
+
+    let mut whole = BatchIdeal::new(model.clone(), p.clone(), 2).unwrap();
+    let batched = whole.forward_batch(&images).unwrap();
+
+    let mut single = BatchIdeal::new(model, p, 2).unwrap();
+    for (i, im) in images.iter().enumerate() {
+        let one = single.forward_batch(std::slice::from_ref(im)).unwrap();
+        assert_eq!(one[0], batched[i], "image {i}");
+    }
+    assert_eq!(whole.cost.cycles, single.cost.cycles);
+}
+
+#[test]
+fn engine_rejects_wrong_input_length() {
+    let p = MacroParams::paper();
+    let model = NetworkModel::synthetic_mlp(&[30, 5], 8, 4, 8, 1, &p);
+    let mut engine = BatchIdeal::new(model, p, 1).unwrap();
+    let err = engine.forward_batch(&[vec![0.0; 29]]).err().unwrap();
+    assert!(format!("{err}").contains("expected 30"), "{err}");
+}
+
+#[test]
+fn analog_pool_single_die_matches_executor() {
+    // Die 0 keeps the base seed, so a 1-worker pool must reproduce the
+    // per-image analog executor bit for bit (same RNG chain, same image
+    // order).
+    let p = MacroParams::paper();
+    let mut rng = Rng::new(21);
+    let model = NetworkModel::synthetic_mlp(&[40, 12, 4], 4, 2, 6, 5, &p);
+    let images = random_images(&mut rng, 4, 40);
+
+    let seed = 4242u64;
+    let mut exec = Executor::new(
+        model.clone(),
+        p.clone(),
+        Backend::Analog { seed, noise: true, calibrate: true },
+    )
+    .unwrap();
+    let expected: Vec<Vec<f32>> = images.iter().map(|im| exec.forward(im).unwrap()).collect();
+
+    let mut pool = AnalogPool::new(model, p, seed, true, true, 1).unwrap();
+    let got = pool.forward_batch(&images).unwrap();
+    assert_eq!(got, expected);
+    assert_eq!(pool.images, images.len() as u64);
+    assert_eq!(pool.cost().cycles, exec.cost.cycles);
+}
+
+#[test]
+fn analog_pool_is_deterministic() {
+    let p = MacroParams::paper();
+    let mut rng = Rng::new(23);
+    let model = NetworkModel::synthetic_mlp(&[40, 8], 4, 2, 6, 6, &p);
+    let images = random_images(&mut rng, 6, 40);
+
+    let run = |workers: usize| {
+        let mut pool =
+            AnalogPool::new(model.clone(), p.clone(), 99, true, false, workers).unwrap();
+        pool.forward_batch(&images).unwrap()
+    };
+    // Same config → identical outputs, even with parallel dies.
+    assert_eq!(run(3), run(3));
+    assert_eq!(run(1), run(1));
+}
+
+#[test]
+fn scheduler_results_match_direct_engine() {
+    let p = MacroParams::paper();
+    let mut rng = Rng::new(31);
+    let model = NetworkModel::synthetic_mlp(&[36, 12, 3], 8, 4, 8, 2, &p);
+    let images = random_images(&mut rng, 12, 36);
+
+    let mut direct = BatchIdeal::new(model.clone(), p.clone(), 2).unwrap();
+    let expected = direct.forward_batch(&images).unwrap();
+
+    let cfg = EngineConfig { batch: 4, workers: 2, flush_micros: 2000 };
+    let handle = engine::start(
+        move || Ok(Box::new(BatchIdeal::new(model, p, 2)?) as Box<dyn BatchBackend>),
+        cfg,
+        None,
+    )
+    .unwrap();
+
+    // Submit from several client threads; results must match per image.
+    std::thread::scope(|s| {
+        let mut joins = Vec::new();
+        for (i, im) in images.iter().enumerate() {
+            let h = handle.clone();
+            let im = im.clone();
+            joins.push((i, s.spawn(move || h.infer(im).unwrap())));
+        }
+        for (i, j) in joins {
+            assert_eq!(j.join().unwrap(), expected[i], "image {i}");
+        }
+    });
+    assert!(handle.batches() >= 1);
+}

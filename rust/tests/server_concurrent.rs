@@ -1,0 +1,143 @@
+//! Concurrency: `imagine serve` must hold ≥ 8 simultaneous client
+//! connections and answer all of them while every connection stays open —
+//! impossible under the old global-`Mutex<Executor>` + sequential-accept
+//! design, where client k+1 got no response until client k disconnected.
+//! Runs entirely on a synthetic in-memory model (no artifacts).
+
+use imagine::config::params::MacroParams;
+use imagine::coordinator::manifest::NetworkModel;
+use imagine::coordinator::server::{serve_listener, Stats};
+use imagine::engine::{self, BatchBackend, BatchIdeal, EngineConfig};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Barrier};
+
+const N_CLIENTS: usize = 8;
+const REQS_PER_CLIENT: usize = 3;
+const INPUT_LEN: usize = 36;
+
+fn start_test_engine(stats: &Stats) -> engine::EngineHandle {
+    let p = MacroParams::paper();
+    let model = NetworkModel::synthetic_mlp(&[INPUT_LEN, 16, 4], 8, 4, 8, 77, &p);
+    let cfg = EngineConfig { batch: N_CLIENTS, workers: 2, flush_micros: 2000 };
+    engine::start(
+        move || Ok(Box::new(BatchIdeal::new(model, p, 2)?) as Box<dyn BatchBackend>),
+        cfg,
+        Some(Arc::clone(&stats.occupancy)),
+    )
+    .unwrap()
+}
+
+fn client(addr: std::net::SocketAddr, barrier: Arc<Barrier>, salt: usize) {
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    // Everyone connects before anyone sends: all 8 connections are open
+    // simultaneously, so a serializing server would deadlock here (the
+    // test harness timeout is the failure mode).
+    barrier.wait();
+
+    for r in 0..REQS_PER_CLIENT {
+        let img: Vec<String> = (0..INPUT_LEN)
+            .map(|k| format!("{:.4}", ((salt * 31 + r * 7 + k) % 100) as f32 / 100.0))
+            .collect();
+        writer
+            .write_all(format!("{{\"image\": [{}]}}\n", img.join(",")).as_bytes())
+            .unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(
+            line.contains("\"logits\""),
+            "client {salt} req {r}: bad response {line}"
+        );
+    }
+
+    // Ask for stats mid-flight, then quit.
+    writer.write_all(b"{\"cmd\": \"stats\"}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"requests\""), "stats line: {line}");
+    writer.write_all(b"{\"cmd\": \"quit\"}\n").unwrap();
+}
+
+#[test]
+fn eight_concurrent_clients_all_get_answers() {
+    let stats = Stats::default();
+    let handle = start_test_engine(&stats);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let barrier = Arc::new(Barrier::new(N_CLIENTS));
+
+    let clients: Vec<_> = (0..N_CLIENTS)
+        .map(|i| {
+            let b = Arc::clone(&barrier);
+            std::thread::spawn(move || client(addr, b, i))
+        })
+        .collect();
+
+    // Serve exactly N_CLIENTS connections, then return (waits for all
+    // connection handlers to finish).
+    serve_listener(handle, &stats, listener, Some(N_CLIENTS)).unwrap();
+    for c in clients {
+        c.join().unwrap();
+    }
+
+    use std::sync::atomic::Ordering;
+    assert_eq!(
+        stats.requests.load(Ordering::Relaxed),
+        (N_CLIENTS * REQS_PER_CLIENT) as u64
+    );
+    assert_eq!(stats.errors.load(Ordering::Relaxed), 0);
+    // The dispatcher saw batches, and latency percentiles are populated.
+    assert!(stats.occupancy.count() >= 1);
+    assert!(stats.latency.count() == (N_CLIENTS * REQS_PER_CLIENT) as u64);
+    assert!(stats.latency.percentile(99.0) >= stats.latency.percentile(50.0));
+    let j = stats.snapshot_json();
+    assert!(j.get("p99_latency_micros").unwrap().as_f64().unwrap() >= 1.0);
+}
+
+#[test]
+fn protocol_errors_do_not_poison_other_clients() {
+    let stats = Stats::default();
+    let handle = start_test_engine(&stats);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    let bad = std::thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        writer.write_all(b"{broken json\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("error"), "{line}");
+        writer.write_all(b"{\"image\": [1, 2]}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("expected 'image'"), "{line}");
+        writer.write_all(b"{\"cmd\": \"quit\"}\n").unwrap();
+    });
+    let good = std::thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        let img = vec!["0.5"; INPUT_LEN].join(",");
+        writer
+            .write_all(format!("{{\"image\": [{img}]}}\n").as_bytes())
+            .unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"class\""), "{line}");
+        writer.write_all(b"{\"cmd\": \"quit\"}\n").unwrap();
+    });
+
+    serve_listener(handle, &stats, listener, Some(2)).unwrap();
+    bad.join().unwrap();
+    good.join().unwrap();
+
+    use std::sync::atomic::Ordering;
+    assert_eq!(stats.requests.load(Ordering::Relaxed), 1);
+    assert_eq!(stats.errors.load(Ordering::Relaxed), 2);
+}

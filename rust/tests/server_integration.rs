@@ -1,37 +1,43 @@
-//! Server integration: line-JSON protocol over a real TCP socket against
-//! the ideal-contract engine (PJRT engine path is covered by
-//! runtime_integration; here we pin the protocol and error handling).
+//! Server integration over the *trained artifacts* (requires
+//! `make artifacts`; skips otherwise): line-JSON protocol against the
+//! batched ideal engine on the real mlp784 manifest. Synthetic-model
+//! protocol/concurrency coverage lives in `server_concurrent.rs`.
 
-use imagine::coordinator::server::{handle_line, serve, Engine, Stats};
+use imagine::coordinator::server::{handle_line, serve_listener, start_engine, Stats};
+use imagine::engine::EngineConfig;
 use imagine::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
-use std::net::TcpStream;
+use std::net::{TcpListener, TcpStream};
 use std::path::Path;
 
 fn have_artifacts() -> bool {
-    Path::new("artifacts/mlp784.manifest.json").exists()
+    let ok = Path::new("artifacts/mlp784.manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+    }
+    ok
 }
 
-fn sim_engine() -> Engine {
-    // Force the simulator engine by loading from a directory view that
-    // has the manifest; Engine::from_artifacts prefers HLO, so call the
-    // sim fallback through a temp dir without the .hlo.txt.
-    let dir = std::env::temp_dir().join("imagine_srv_test");
+/// Engine on the manifest via the sim fallback: copy the manifest +
+/// weights (without the .hlo.txt) into a temp dir so `start_engine`
+/// selects the batched ideal backend deterministically.
+fn sim_engine(stats: &Stats, tag: &str) -> imagine::engine::EngineHandle {
+    let dir = std::env::temp_dir().join(format!("imagine_srv_test_{tag}"));
     std::fs::create_dir_all(&dir).unwrap();
     for f in ["mlp784.manifest.json", "mlp784.imgt"] {
         std::fs::copy(format!("artifacts/{f}"), dir.join(f)).unwrap();
     }
-    Engine::from_artifacts(dir.to_str().unwrap(), "mlp784").unwrap()
+    let cfg = EngineConfig { batch: 8, workers: 2, flush_micros: 300 };
+    start_engine(dir.to_str().unwrap(), "mlp784", cfg, stats).unwrap()
 }
 
 #[test]
 fn handle_line_protocol() {
     if !have_artifacts() {
-        eprintln!("skipping: artifacts missing");
         return;
     }
-    let engine = sim_engine();
     let stats = Stats::default();
+    let engine = sim_engine(&stats, "protocol");
 
     // Bad JSON → in-band error.
     let resp = handle_line(&engine, &stats, "{oops").unwrap();
@@ -41,8 +47,6 @@ fn handle_line_protocol() {
     let resp = handle_line(&engine, &stats, r#"{"image": [1, 2, 3]}"#).unwrap();
     assert!(resp.contains("expected 'image'"));
 
-    //
-
     // Valid image → logits + class.
     let img = vec!["0.5"; 784].join(",");
     let resp = handle_line(&engine, &stats, &format!(r#"{{"image": [{img}]}}"#)).unwrap();
@@ -50,11 +54,13 @@ fn handle_line_protocol() {
     assert!(j.get("logits").unwrap().as_arr().unwrap().len() == 10);
     assert!(j.get("class").unwrap().as_f64().unwrap() < 10.0);
 
-    // Stats reflect the traffic.
+    // Stats reflect the traffic, including the new histogram fields.
     let resp = handle_line(&engine, &stats, r#"{"cmd": "stats"}"#).unwrap();
     let j = Json::parse(&resp).unwrap();
     assert_eq!(j.get("requests").unwrap().as_f64(), Some(1.0));
     assert_eq!(j.get("errors").unwrap().as_f64(), Some(2.0));
+    assert!(j.get("p99_latency_micros").unwrap().as_f64().unwrap() >= 1.0);
+    assert!(j.get("batches").unwrap().as_f64().unwrap() >= 1.0);
 
     // quit → None.
     assert!(handle_line(&engine, &stats, r#"{"cmd": "quit"}"#).is_none());
@@ -63,15 +69,13 @@ fn handle_line_protocol() {
 #[test]
 fn tcp_roundtrip() {
     if !have_artifacts() {
-        eprintln!("skipping: artifacts missing");
         return;
     }
-    // The PJRT handle inside Engine is !Send, so the server stays on the
-    // test thread and the *client* runs on a spawned thread.
-    let engine = sim_engine();
-    let addr = "127.0.0.1:17878";
+    let stats = Stats::default();
+    let engine = sim_engine(&stats, "tcp");
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
     let client = std::thread::spawn(move || {
-        std::thread::sleep(std::time::Duration::from_millis(300));
         let mut stream = TcpStream::connect(addr).unwrap();
         let img = vec!["0.25"; 784].join(",");
         stream
@@ -85,6 +89,6 @@ fn tcp_roundtrip() {
         assert!(j.get("class").is_some(), "bad response: {line}");
         stream.write_all(b"{\"cmd\": \"quit\"}\n").unwrap();
     });
-    serve(engine, addr, Some(1)).unwrap();
+    serve_listener(engine, &stats, listener, Some(1)).unwrap();
     client.join().unwrap();
 }
