@@ -1,14 +1,19 @@
 //! Standalone macro characterization — the software twin of §V.A's
 //! measurement setup (Fig. 16b): sweep the simulated die in FC test mode
-//! and print transfer function, INL, RMS and calibration statistics.
+//! and print transfer function, INL, RMS and calibration statistics;
+//! then re-run a network-level sweep across process corners and supply
+//! points through the `Session` facade (the corner/supply knobs every
+//! frontend shares).
 //!
 //! Run: `cargo run --release --example characterize -- [seed]`
 
 use imagine::analog::macro_model::{CimMacro, OpConfig};
-use imagine::config::params::MacroParams;
+use imagine::api::{BackendKind, Session};
+use imagine::config::params::{Corner, MacroParams, Supply};
+use imagine::coordinator::manifest::NetworkModel;
 use imagine::util::stats;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     let seed: u64 = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
@@ -75,5 +80,52 @@ fn main() {
         let rms: f64 = stats::std(&samples);
         println!("gamma {gamma:>4}: mean code {mean:>7.2}, RMS {rms:.2} LSB");
     }
-    println!("\ncharacterization done (seed {seed}, corner SS)");
+
+    // ---- network-level corner/supply sweep through the facade ----
+    // One synthetic MLP, one batch of images; per corner, fabricate an
+    // analog die pool next to an ideal reference at the *same* operating
+    // point and report the mean |analog − ideal| logit deviation.
+    println!("\n== Session facade: corner/supply sensitivity (analog vs ideal) ==");
+    let p0 = MacroParams::paper();
+    let model = NetworkModel::synthetic_mlp(&[72, 24, 10], 4, 2, 6, seed, &p0);
+    let images: Vec<Vec<f32>> = (0..8)
+        .map(|k| (0..72).map(|i| ((i * 5 + k * 11) % 16) as f32 / 16.0).collect())
+        .collect();
+    for supply in [Supply::NOMINAL, Supply::LOW_POWER] {
+        for corner in Corner::ALL {
+            let ideal = Session::builder(model.clone())
+                .backend(BackendKind::Ideal)
+                .supply(supply)
+                .corner(corner)
+                .workers(2)
+                .build()?;
+            let analog = Session::builder(model.clone())
+                .backend(BackendKind::Analog)
+                .supply(supply)
+                .corner(corner)
+                .seed(seed)
+                .workers(2)
+                .build()?;
+            let reference = ideal.infer_batch(&images)?;
+            let measured = analog.infer_batch(&images)?;
+            let mut dev = 0.0f64;
+            let mut count = 0usize;
+            for (r, m) in reference.iter().zip(&measured) {
+                for (a, b) in r.iter().zip(m) {
+                    dev += (a - b).abs() as f64;
+                    count += 1;
+                }
+            }
+            println!(
+                "supply {:.1}/{:.1} V corner {}: mean |analog - ideal| = {:.4}",
+                supply.vddl,
+                supply.vddh,
+                corner.name(),
+                dev / count as f64
+            );
+        }
+    }
+
+    println!("\ncharacterization done (seed {seed}, measured-chip corner SS for the die sweeps)");
+    Ok(())
 }

@@ -1,29 +1,24 @@
 //! End-to-end validation (DESIGN.md / EXPERIMENTS.md §E2E): run the
 //! CIM-aware-trained LeNet-class CNN over the synthetic-digit test set
-//! through the WHOLE system, three ways, and report accuracy plus the
-//! modeled accelerator throughput/energy:
+//! through the WHOLE system — every backend constructed through the one
+//! `Session` registry — and report accuracy plus the modeled accelerator
+//! throughput/energy:
 //!
-//! * `pjrt`   — the AOT HLO artifact on the PJRT runtime (request path);
-//! * `ideal`  — the rust ideal-contract executor (must match pjrt);
-//! * `analog` — the circuit-behavioral die with mismatch + noise +
+//! * `pjrt`   — the AOT HLO artifact on the PJRT runtime (skipped with a
+//!              message when this build cannot run it);
+//! * `ideal`  — the batched ideal-contract engine (must agree with pjrt);
+//! * `analog` — the circuit-behavioral die pool with mismatch + noise +
 //!              calibration (silicon fidelity).
 //!
-//! Run: `cargo run --release --example mnist_e2e -- [n_images]`
+//! Run: `make artifacts && cargo run --release --example mnist_e2e -- [n_images]`
 
+use imagine::api::{BackendKind, ImagineError, Session};
 use imagine::config::params::MacroParams;
-use imagine::coordinator::executor::{Backend, Executor};
 use imagine::coordinator::manifest::NetworkModel;
 use imagine::coordinator::scheduler;
+use imagine::energy::system::LayerCost;
 use imagine::nn::dataset::Dataset;
-use imagine::runtime::Runtime;
-
-fn argmax(v: &[f32]) -> usize {
-    v.iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .unwrap()
-        .0
-}
+use imagine::util::stats::argmax_f32 as argmax;
 
 fn main() -> anyhow::Result<()> {
     let dir = "artifacts";
@@ -41,80 +36,80 @@ fn main() -> anyhow::Result<()> {
     );
     println!("evaluating {n} synthetic-digit test images\n");
 
-    // ---- PJRT functional path ----
-    let mut rt = Runtime::new()?;
-    rt.load_hlo_text("lenet", format!("{dir}/lenet_cim.hlo.txt"))?;
-    let t0 = std::time::Instant::now();
-    let mut correct_pjrt = 0;
-    let mut pjrt_preds = Vec::with_capacity(n);
-    for i in 0..n {
-        let img = ds.image_padded(i, model.input_shape[0]);
-        let logits = rt.run_f32("lenet", &img, &[1, 4, 28, 28])?;
-        let p = argmax(&logits);
-        pjrt_preds.push(p);
-        if p == ds.y[i] as usize {
-            correct_pjrt += 1;
-        }
-    }
-    let t_pjrt = t0.elapsed().as_secs_f64();
-    println!(
-        "pjrt   : {:.2}%  ({:.1} ms/image host wall)",
-        100.0 * correct_pjrt as f64 / n as f64,
-        1e3 * t_pjrt / n as f64
-    );
+    let images: Vec<Vec<f32>> = (0..n)
+        .map(|i| ds.image_padded(i, model.input_shape[0]))
+        .collect();
 
-    // ---- rust ideal executor (must agree with pjrt) ----
-    let mut exec = Executor::new(model.clone(), MacroParams::paper(), Backend::Ideal)?;
-    let mut correct_ideal = 0;
-    let mut agree = 0;
-    for i in 0..n {
-        let img = ds.image_padded(i, model.input_shape[0]);
-        let p = argmax(&exec.forward(&img)?);
-        if p == ds.y[i] as usize {
-            correct_ideal += 1;
-        }
-        if p == pjrt_preds[i] {
-            agree += 1;
-        }
-    }
-    println!(
-        "ideal  : {:.2}%  (argmax agreement with pjrt: {agree}/{n})",
-        100.0 * correct_ideal as f64 / n as f64
-    );
+    let mut preds_by_backend: Vec<(BackendKind, Vec<usize>)> = Vec::new();
+    let mut ideal_cost: Option<(LayerCost, u64)> = None;
 
-    // ---- circuit-behavioral die ----
-    let n_analog = n.min(100); // the analog sim is ~20 ms/image
-    let mut exec_a = Executor::new(
-        model.clone(),
-        MacroParams::paper(),
-        Backend::Analog { seed: 7, noise: true, calibrate: true },
-    )?;
-    let t0 = std::time::Instant::now();
-    let mut correct_analog = 0;
-    for i in 0..n_analog {
-        let img = ds.image_padded(i, model.input_shape[0]);
-        if argmax(&exec_a.forward(&img)?) == ds.y[i] as usize {
-            correct_analog += 1;
+    for kind in [BackendKind::Pjrt, BackendKind::Ideal, BackendKind::Analog] {
+        // The analog sim is ~20 ms/image: cap its share of the run.
+        let n_eval = if kind == BackendKind::Analog { n.min(100) } else { n };
+        let session = match Session::builder(model.clone())
+            .artifacts(dir, "lenet_cim")
+            .backend(kind)
+            .seed(7)
+            .batch(64)
+            .build()
+        {
+            Ok(session) => session,
+            Err(ImagineError::BackendUnavailable { reason, .. }) => {
+                println!("{:>6} : skipped ({reason})", kind.name());
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        };
+
+        let t0 = std::time::Instant::now();
+        let mut preds = Vec::with_capacity(n_eval);
+        for chunk in images[..n_eval].chunks(64) {
+            for logits in session.infer_batch(chunk)? {
+                preds.push(argmax(&logits));
+            }
         }
+        let wall = t0.elapsed().as_secs_f64();
+        let correct = preds
+            .iter()
+            .enumerate()
+            .filter(|&(i, &p)| p == ds.y[i] as usize)
+            .count();
+        println!(
+            "{:>6} : {:.2}% over {n_eval} images ({:.1} ms/image host wall)",
+            kind.name(),
+            100.0 * correct as f64 / n_eval as f64,
+            1e3 * wall / n_eval as f64
+        );
+        if kind == BackendKind::Ideal {
+            let snap = session.snapshot()?;
+            ideal_cost = snap.cost.map(|c| (c, snap.images));
+        }
+        preds_by_backend.push((kind, preds));
     }
-    let t_analog = t0.elapsed().as_secs_f64();
-    println!(
-        "analog : {:.2}% over {n_analog} images ({:.1} ms/image sim wall)",
-        100.0 * correct_analog as f64 / n_analog as f64,
-        1e3 * t_analog / n_analog as f64
-    );
+
+    // Argmax agreement between the functional paths, when both ran.
+    let find = |kind: BackendKind| {
+        preds_by_backend
+            .iter()
+            .find(|(k, _)| *k == kind)
+            .map(|(_, p)| p)
+    };
+    if let (Some(pjrt), Some(ideal)) = (find(BackendKind::Pjrt), find(BackendKind::Ideal)) {
+        let agree = pjrt.iter().zip(ideal).filter(|(a, b)| a == b).count();
+        println!("argmax agreement pjrt vs ideal: {agree}/{}", pjrt.len().min(ideal.len()));
+    }
 
     // ---- modeled accelerator cost ----
     let plan = scheduler::plan(&model, &MacroParams::paper());
     println!("\naccelerator plan (0.4/0.8 V):\n{}", plan.render());
-    let c = &exec.cost;
-    println!(
-        "ideal-run modeled totals: {:.3} uJ over {} images -> {:.3} uJ/image, \
-         EE {:.1} TOPS/W (8b-norm)",
-        c.e_total() * 1e6,
-        exec.images,
-        c.e_total() * 1e6 / exec.images as f64,
-        c.ee_8b() / 1e12
-    );
+    if let Some((c, images_run)) = ideal_cost {
+        println!(
+            "ideal-run modeled totals: {:.3} uJ over {images_run} images -> {:.3} uJ/image, \
+             EE {:.1} TOPS/W (8b-norm)",
+            c.e_total() * 1e6,
+            c.e_total() * 1e6 / images_run as f64,
+            c.ee_8b() / 1e12
+        );
+    }
     Ok(())
 }

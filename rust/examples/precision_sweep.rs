@@ -2,35 +2,42 @@
 //! 1-to-8b scalable computing with quasi-linear efficiency scaling
 //! (abstract: 0.15–8 POPS/W, 2.6–154 TOPS/mm²).
 //!
-//! Prints the (r_in, r_out) grid of Fig. 22a plus the Table I extremes,
-//! at both supply points.
+//! Two views of the same knob:
+//!
+//! 1. the closed-form (r_in, r_out) grid of Fig. 22a plus the Table I
+//!    extremes, at both supply points;
+//! 2. the `Session` facade: the same synthetic workload rebuilt at each
+//!    precision via `SessionBuilder::precision`, with the modeled
+//!    energy-per-image read back from the running engine — energy drops
+//!    monotonically as bits are removed.
 //!
 //! Run: `cargo run --release --example precision_sweep`
 
 use imagine::analog::macro_model::OpConfig;
+use imagine::api::Session;
 use imagine::config::params::{MacroParams, Supply};
+use imagine::coordinator::manifest::NetworkModel;
 use imagine::energy::{analog as ea, area, timing};
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     for (label, supply) in [("0.4/0.8 V", Supply::NOMINAL), ("0.3/0.6 V", Supply::LOW_POWER)] {
         let p = MacroParams::paper().with_supply(supply);
         println!("== {label} ==");
         println!("r_in r_out |  raw EE       8b-norm EE   throughput(8b)  AE(raw)");
         for r_in in [1u32, 2, 4, 8] {
-            for r_out in [r_in] {
-                let cfg = OpConfig::new(r_in, 1, r_out).with_units(32);
-                let ee_raw = ea::ee_raw(&p, &cfg);
-                let ee_8b = ea::ee_8b(&p, &cfg);
-                let tput = timing::peak_throughput_8b(&p, &cfg);
-                let ae = area::area_efficiency_raw(&p, &cfg);
-                println!(
-                    "{r_in:>4} {r_out:>5} | {:>7.2} POPS/W {:>7.1} TOPS/W {:>9.3} TOPS  {:>7.1} TOPS/mm2",
-                    ee_raw / 1e15,
-                    ee_8b / 1e12,
-                    tput / 1e12,
-                    ae / 1e12,
-                );
-            }
+            let r_out = r_in;
+            let cfg = OpConfig::new(r_in, 1, r_out).with_units(32);
+            let ee_raw = ea::ee_raw(&p, &cfg);
+            let ee_8b = ea::ee_8b(&p, &cfg);
+            let tput = timing::peak_throughput_8b(&p, &cfg);
+            let ae = area::area_efficiency_raw(&p, &cfg);
+            println!(
+                "{r_in:>4} {r_out:>5} | {:>7.2} POPS/W {:>7.1} TOPS/W {:>9.3} TOPS  {:>7.1} TOPS/mm2",
+                ee_raw / 1e15,
+                ee_8b / 1e12,
+                tput / 1e12,
+                ae / 1e12,
+            );
         }
         // Mixed-precision corners of the paper's grid.
         for (r_in, r_out) in [(4u32, 8u32), (8, 4), (1, 8)] {
@@ -44,9 +51,38 @@ fn main() {
         }
         println!();
     }
+
+    // ---- the same sweep through the Session facade ----
+    let p = MacroParams::paper();
+    let model = NetworkModel::synthetic_mlp(&[288, 64, 10], 8, 1, 8, 11, &p);
+    let images: Vec<Vec<f32>> = (0..32)
+        .map(|i| (0..288).map(|k| ((i * 7 + k) % 32) as f32 / 32.0).collect())
+        .collect();
+    println!("Session-measured (synthetic 288-64-10 MLP, 32-image batch, ideal backend):");
+    println!("r_in/r_out | energy/image | modeled system EE");
+    let mut last = f64::INFINITY;
+    for r in [8u32, 4, 2, 1] {
+        let session = Session::builder(model.clone())
+            .precision(r, r)
+            .workers(2)
+            .batch(32)
+            .build()?;
+        session.infer_batch(&images)?;
+        let snap = session.snapshot()?;
+        let cost = snap.cost.expect("ideal backend models cost");
+        let per_image = cost.e_total() * 1e6 / snap.images as f64;
+        println!(
+            "{r:>5}/{r:<4} | {per_image:>9.4} uJ | {:>7.1} TOPS/W (8b-norm)",
+            cost.ee_8b() / 1e12
+        );
+        assert!(per_image <= last, "energy must not increase with fewer bits");
+        last = per_image;
+    }
+
     let p = MacroParams::paper();
     println!(
-        "density {:.0} kB/mm2 | paper: 187 kB/mm2, 0.15-8 POPS/W, 2.6-154 TOPS/mm2",
+        "\ndensity {:.0} kB/mm2 | paper: 187 kB/mm2, 0.15-8 POPS/W, 2.6-154 TOPS/mm2",
         p.density_kb_mm2()
     );
+    Ok(())
 }

@@ -1,80 +1,83 @@
-//! Quickstart: the three-layer stack in one page.
+//! Quickstart: the whole stack through the `Session` facade in one page.
 //!
-//! 1. Load the AOT-compiled smoke artifact (a single CIM macro matvec,
-//!    JAX/Pallas-lowered at build time) into the PJRT runtime.
-//! 2. Run it on the python-generated golden inputs and check the codes.
-//! 3. Run the same class of operation through the rust circuit-behavioral
-//!    macro simulator and show that silicon-fidelity effects (noise,
-//!    mismatch) stay within a few ADC LSBs of the ideal contract after
-//!    calibration.
+//! Builds a small CIM-mapped MLP in memory (no artifacts needed), then
+//! drives it through two sessions sharing the same builder API:
 //!
-//! Run: `make artifacts && cargo run --release --example quickstart`
+//! 1. the **ideal** backend — batched closed-form macro contract
+//!    (bit-exact with the python oracle), and
+//! 2. the **analog** backend — a pool of circuit-behavioral simulated
+//!    dies (mismatch + noise + SA-offset calibration).
+//!
+//! Along the way it shows the three call styles every frontend uses:
+//! sync `infer_one`, whole-batch `infer_batch`, and the async `submit`
+//! handle into the engine's work-queue scheduler.
+//!
+//! Run: `cargo run --release --example quickstart`
 
-use imagine::analog::macro_model::{CimMacro, OpConfig};
+use imagine::api::{BackendKind, Session};
 use imagine::config::params::MacroParams;
-use imagine::runtime::Runtime;
-use imagine::util::json::Json;
+use imagine::coordinator::manifest::NetworkModel;
 
 fn main() -> anyhow::Result<()> {
-    let dir = "artifacts";
+    let p = MacroParams::paper();
+    let model = NetworkModel::synthetic_mlp(&[144, 32, 10], 8, 4, 8, 7, &p);
 
-    // ---- 1. AOT artifact through PJRT (the request path) ----
-    let meta = Json::parse(&std::fs::read_to_string(format!(
-        "{dir}/smoke_cim.meta.json"
-    ))?)
-    .map_err(|e| anyhow::anyhow!("{e}"))?;
-    let rows = meta.req_usize("rows")?;
-    let batch = meta.req_usize("batch")?;
-    let cfg_j = meta.get("cfg").unwrap();
+    // ---- one builder API over every backend ----
+    let ideal = Session::builder(model.clone())
+        .backend(BackendKind::Ideal)
+        .workers(2)
+        .build()?;
+    let analog = Session::builder(model)
+        .backend(BackendKind::Analog)
+        .seed(2024)
+        .workers(2)
+        .build()?;
+    println!("ideal  session: {}", ideal.describe());
+    println!("analog session: {}", analog.describe());
 
-    let mut rt = Runtime::new()?;
-    rt.load_hlo_text("smoke", format!("{dir}/smoke_cim.hlo.txt"))?;
-    println!("PJRT platform: {}", rt.platform());
+    // ---- sync single-image inference ----
+    let image: Vec<f32> = (0..144).map(|i| (i % 16) as f32 / 16.0).collect();
+    let exact = ideal.infer_one(image.clone())?;
+    let noisy = analog.infer_one(image.clone())?;
+    let delta = exact
+        .iter()
+        .zip(&noisy)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    println!("ideal  logits[..4]: {:?}", &exact[..4]);
+    println!("analog logits[..4]: {:?}", &noisy[..4]);
+    println!("max |analog - ideal| = {delta:.4} (mismatch + noise, post-calibration)");
 
-    let inputs: Vec<i32> = std::fs::read_to_string(format!("{dir}/smoke_cim.inputs.txt"))?
-        .split_whitespace()
-        .map(|t| t.parse().unwrap())
+    // ---- whole-batch inference is bit-identical to one-by-one ----
+    let images: Vec<Vec<f32>> = (0..6)
+        .map(|k| (0..144).map(|i| ((i + 13 * k) % 32) as f32 / 32.0).collect())
         .collect();
-    let golden: Vec<i32> = std::fs::read_to_string(format!("{dir}/smoke_cim.golden.txt"))?
-        .split_whitespace()
-        .map(|t| t.parse::<f64>().unwrap() as i32)
-        .collect();
-
-    let codes = rt.run_i32("smoke", &inputs, &[batch, rows])?;
-    assert_eq!(codes, golden, "HLO output must match the python oracle");
-    println!(
-        "AOT/PJRT codes (batch 0): {:?}  -- matches python golden",
-        &codes[..8]
-    );
-
-    // ---- 2. Same class of op on the circuit-behavioral simulator ----
-    let cfg = OpConfig::new(
-        cfg_j.req_usize("r_in")? as u32,
-        cfg_j.req_usize("r_w")? as u32,
-        cfg_j.req_usize("r_out")? as u32,
-    )
-    .with_gamma(cfg_j.req_f64("gamma")?)
-    .with_units(cfg_j.req_usize("connected_units")?);
-
-    let mut die = CimMacro::new(MacroParams::paper(), 2024);
-    let mut w = Vec::with_capacity(rows);
-    let mut s = 0x1234_5678_u64;
-    for _ in 0..rows {
-        s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
-        w.push(if s >> 63 == 1 { 1 } else { -1 });
+    let batched = ideal.infer_batch(&images)?;
+    for (k, im) in images.iter().enumerate() {
+        assert_eq!(batched[k], ideal.infer_one(im.clone())?, "image {k}");
     }
-    die.load_weights(&w, 1, 1);
-    die.calibrate_all();
+    println!("batched == per-image on the ideal contract ({} images)", images.len());
 
-    let x: Vec<u8> = inputs[..rows].iter().map(|&v| v as u8).collect();
-    let ideal = CimMacro::ideal_code(&die.p, &x, &w, &cfg);
-    let measured = die.block_op(0, &x, &cfg);
-    println!(
-        "circuit sim: ideal code {ideal}, simulated die {measured} \
-         (delta = {} LSB; mismatch+noise, post-calibration)",
-        measured as i64 - ideal as i64
-    );
-    assert!((measured as i64 - ideal as i64).abs() <= 4);
+    // ---- async submission through the work queue ----
+    let pending: Vec<_> = images
+        .iter()
+        .map(|im| ideal.submit(im.clone()))
+        .collect::<Result<_, _>>()?;
+    for (k, handle) in pending.into_iter().enumerate() {
+        assert_eq!(handle.wait()?, batched[k], "async image {k}");
+    }
+    println!("async submit/wait agrees with the sync paths");
+
+    // ---- modeled accelerator cost, straight from the session ----
+    let snap = ideal.snapshot()?;
+    if let Some(cost) = snap.cost {
+        println!(
+            "modeled cost over {} images: {:.3} uJ, {:.1} TOPS/W (8b-norm)",
+            snap.images,
+            cost.e_total() * 1e6,
+            cost.ee_8b() / 1e12
+        );
+    }
 
     println!("quickstart OK");
     Ok(())

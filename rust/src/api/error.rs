@@ -1,0 +1,102 @@
+//! Typed errors for the public [`Session`](super::Session) boundary.
+//!
+//! Inside the crate the layers keep using the lightweight `anyhow`-style
+//! context chains; everything that crosses the facade is converted into
+//! one [`ImagineError`] variant so callers (the CLI, the server, external
+//! embedders) can match on failure classes instead of grepping strings.
+
+use super::session::BackendKind;
+use std::fmt;
+
+/// Every way a [`Session`](super::Session) can fail, from builder
+/// validation to a dead inference engine.
+#[derive(Debug)]
+pub enum ImagineError {
+    /// A `SessionBuilder` knob failed validation (precision out of
+    /// range, zero batch, …).
+    InvalidConfig {
+        field: &'static str,
+        message: String,
+    },
+    /// A textual option (backend, precision, supply, corner) did not
+    /// parse.
+    Parse {
+        what: &'static str,
+        value: String,
+        expected: &'static str,
+    },
+    /// Model artifacts could not be loaded.
+    ModelLoad { model: String, message: String },
+    /// The requested backend cannot run in this build or environment
+    /// (e.g. PJRT without the `pjrt` feature or an artifact directory).
+    BackendUnavailable {
+        backend: BackendKind,
+        reason: String,
+    },
+    /// An inference input was malformed (wrong length, non-finite).
+    Input { message: String },
+    /// The engine failed at runtime (backend error, dispatcher gone).
+    Engine { message: String },
+}
+
+impl ImagineError {
+    /// Wrap an engine-layer error crossing the facade boundary.
+    pub(crate) fn engine(e: anyhow::Error) -> Self {
+        ImagineError::Engine { message: format!("{e:#}") }
+    }
+}
+
+impl fmt::Display for ImagineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ImagineError::InvalidConfig { field, message } => {
+                write!(f, "invalid session config ({field}): {message}")
+            }
+            ImagineError::Parse { what, value, expected } => {
+                write!(f, "unknown {what} '{value}' (expected {expected})")
+            }
+            ImagineError::ModelLoad { model, message } => {
+                write!(f, "loading model '{model}': {message}")
+            }
+            ImagineError::BackendUnavailable { backend, reason } => {
+                write!(f, "backend '{}' unavailable: {reason}", backend.name())
+            }
+            ImagineError::Input { message } => write!(f, "bad inference input: {message}"),
+            ImagineError::Engine { message } => write!(f, "inference engine error: {message}"),
+        }
+    }
+}
+
+impl std::error::Error for ImagineError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_failure_class() {
+        let e = ImagineError::Parse {
+            what: "backend",
+            value: "bogus".to_string(),
+            expected: "ideal|analog|pjrt",
+        };
+        let s = format!("{e}");
+        assert!(s.contains("backend") && s.contains("bogus") && s.contains("ideal"), "{s}");
+
+        let e = ImagineError::BackendUnavailable {
+            backend: BackendKind::Pjrt,
+            reason: "no feature".to_string(),
+        };
+        assert!(format!("{e}").contains("pjrt"));
+    }
+
+    #[test]
+    fn converts_into_anyhow_at_the_cli_boundary() {
+        fn cli() -> anyhow::Result<()> {
+            Err(ImagineError::Input { message: "too short".to_string() })?;
+            Ok(())
+        }
+        let err = cli().unwrap_err();
+        assert!(format!("{err}").contains("too short"), "{err}");
+    }
+}

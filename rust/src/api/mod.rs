@@ -1,0 +1,30 @@
+//! # The public inference API: [`Session`] over every backend
+//!
+//! One precision-aware builder constructs every way this crate can run a
+//! network — the closed-form ideal contract, the circuit-behavioral
+//! analog die pool, or the AOT/PJRT artifact path — with the paper's
+//! operating knobs (1-to-8b precision, supply point, process corner)
+//! resolved in one place:
+//!
+//! * [`Session::builder`] / [`SessionBuilder::from_artifacts`] — entry
+//!   points over an in-memory model or compiled artifacts;
+//! * [`SessionBuilder`] — `backend / precision / supply / corner /
+//!   batch / workers / seed` knobs, validated at [`SessionBuilder::build`];
+//! * [`Session`] — sync [`Session::infer_one`] / [`Session::infer_batch`]
+//!   plus the async [`Session::submit`] handle, all backed by the
+//!   engine's work-queue scheduler;
+//! * [`ImagineError`] — the typed error enum on this boundary.
+//!
+//! The CLI (`imagine run`, `imagine serve`), the TCP server and all
+//! examples construct backends exclusively through this module, so the
+//! internal backend registry is the crate's one backend match.
+
+mod error;
+mod registry;
+mod session;
+
+pub use error::ImagineError;
+pub use session::{
+    apply_precision, parse_corner, parse_precision, parse_supply, BackendKind, PendingInference,
+    Session, SessionBuilder, SessionConfig,
+};

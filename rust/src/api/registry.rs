@@ -1,0 +1,131 @@
+//! The backend registry — the single place a [`BackendKind`] becomes a
+//! running engine.
+//!
+//! Before the facade existed, `main.rs` and the server each hand-wired
+//! their own `NetworkModel + MacroParams + backend` match (and the
+//! server could not reach the analog backend at all). Every frontend now
+//! funnels through [`start`]: the CLI, `imagine serve`, the examples and
+//! the tests all construct backends identically, and an unknown or
+//! unavailable backend fails with a typed error instead of a silent
+//! fallback.
+
+use super::error::ImagineError;
+use super::session::BackendKind;
+use crate::config::params::MacroParams;
+use crate::coordinator::manifest::NetworkModel;
+use crate::engine::{self, AnalogPool, BatchBackend, BatchIdeal, EngineConfig, EngineHandle};
+use crate::runtime::Runtime;
+use crate::util::stats::AtomicHistogram;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Everything a backend constructor may need; the session builder fills
+/// this from its resolved configuration.
+pub(crate) struct BackendSpec {
+    pub kind: BackendKind,
+    pub model: NetworkModel,
+    pub params: MacroParams,
+    pub seed: u64,
+    pub noise: bool,
+    pub calibrate: bool,
+    pub workers: usize,
+    /// `(dir, name)` of the artifact directory — required by the PJRT
+    /// backend to locate `<dir>/<name>.hlo.txt`.
+    pub artifacts: Option<(String, String)>,
+}
+
+/// PJRT-backed batch backend: executes the AOT HLO artifact per image on
+/// the dispatcher thread (the PJRT client is a single-threaded C handle,
+/// which is why the factory constructs it *on* the dispatcher).
+struct PjrtBackend {
+    runtime: Runtime,
+    model_name: String,
+    /// `[1, input_shape...]`.
+    input_shape: Vec<usize>,
+}
+
+impl BatchBackend for PjrtBackend {
+    fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    fn forward_batch(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        images
+            .iter()
+            .map(|im| self.runtime.run_f32(&self.model_name, im, &self.input_shape))
+            .collect()
+    }
+
+    fn describe(&self) -> String {
+        format!("PJRT/HLO artifact '{}'", self.model_name)
+    }
+}
+
+/// Start the engine for a backend spec. This is the only constructor
+/// path in the crate: one match over [`BackendKind`], shared by the CLI,
+/// the server and the examples.
+pub(crate) fn start(
+    spec: BackendSpec,
+    cfg: EngineConfig,
+    occupancy: Option<Arc<AtomicHistogram>>,
+) -> Result<EngineHandle, ImagineError> {
+    let kind = spec.kind;
+    let started = match kind {
+        BackendKind::Ideal => {
+            let BackendSpec { model, params, workers, .. } = spec;
+            engine::start(
+                move || {
+                    Ok(Box::new(BatchIdeal::new(model, params, workers)?)
+                        as Box<dyn BatchBackend>)
+                },
+                cfg,
+                occupancy,
+            )
+        }
+        BackendKind::Analog => {
+            let BackendSpec { model, params, seed, noise, calibrate, workers, .. } = spec;
+            engine::start(
+                move || {
+                    Ok(Box::new(AnalogPool::new(
+                        model, params, seed, noise, calibrate, workers,
+                    )?) as Box<dyn BatchBackend>)
+                },
+                cfg,
+                occupancy,
+            )
+        }
+        BackendKind::Pjrt => {
+            let Some((dir, name)) = spec.artifacts else {
+                return Err(ImagineError::BackendUnavailable {
+                    backend: kind,
+                    reason: "the PJRT backend needs an artifact directory \
+                             (SessionBuilder::from_artifacts / --dir)"
+                        .to_string(),
+                });
+            };
+            let hlo = std::path::Path::new(&dir).join(format!("{name}.hlo.txt"));
+            let mut input_shape = vec![1usize];
+            input_shape.extend(&spec.model.input_shape);
+            engine::start(
+                move || {
+                    let mut runtime = Runtime::new()?;
+                    runtime.load_hlo_text(&name, &hlo)?;
+                    Ok(Box::new(PjrtBackend { runtime, model_name: name, input_shape })
+                        as Box<dyn BatchBackend>)
+                },
+                cfg,
+                occupancy,
+            )
+        }
+    };
+    started.map_err(|e| match kind {
+        // A PJRT start failure is an availability problem (stub runtime,
+        // missing/broken HLO) — never silently fall back to a simulator
+        // that would serve numerically different logits.
+        BackendKind::Pjrt => ImagineError::BackendUnavailable {
+            backend: kind,
+            reason: format!("{e:#}"),
+        },
+        _ => ImagineError::Engine { message: format!("{e:#}") },
+    })
+}

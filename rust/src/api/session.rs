@@ -1,0 +1,631 @@
+//! The [`Session`] facade: one precision-aware builder over every
+//! backend.
+//!
+//! IMAGINE's headline feature is workload-adaptive 1-to-8b precision;
+//! this module makes that knob (plus supply, corner, backend and the
+//! batching/parallelism controls) the crate's user-facing contract:
+//!
+//! ```no_run
+//! use imagine::api::{BackendKind, Session};
+//! use imagine::config::params::MacroParams;
+//! use imagine::coordinator::manifest::NetworkModel;
+//!
+//! let p = MacroParams::paper();
+//! let model = NetworkModel::synthetic_mlp(&[144, 32, 10], 8, 4, 8, 7, &p);
+//! let session = Session::builder(model)
+//!     .backend(BackendKind::Analog)
+//!     .precision(4, 4)
+//!     .seed(2024)
+//!     .build()?;
+//! let logits = session.infer_one(vec![0.5; 144])?;
+//! # Ok::<(), imagine::api::ImagineError>(())
+//! ```
+//!
+//! Every frontend — `imagine run`, `imagine serve`, the examples — goes
+//! through this one path, so a backend constructed from the CLI is the
+//! same backend the server and the tests exercise.
+
+use super::error::ImagineError;
+use super::registry;
+use crate::config::params::{Corner, MacroParams, Supply};
+use crate::coordinator::manifest::NetworkModel;
+use crate::engine::{default_workers, EngineConfig, EngineHandle, EngineSnapshot, Pending};
+use crate::util::json::{arr_usize, obj, Json};
+use crate::util::stats::AtomicHistogram;
+use std::sync::Arc;
+
+/// Which inference backend a [`Session`] drives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    /// Batched closed-form macro contract (fast, bit-exact vs the python
+    /// oracle).
+    Ideal,
+    /// Pool of circuit-behavioral simulated dies (mismatch + noise +
+    /// corners, deterministic per-die seeds).
+    Analog,
+    /// AOT-compiled HLO artifact on the PJRT runtime (needs the `pjrt`
+    /// feature and an artifact directory).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub const ALL: [BackendKind; 3] = [BackendKind::Ideal, BackendKind::Analog, BackendKind::Pjrt];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Ideal => "ideal",
+            BackendKind::Analog => "analog",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    /// Parse a backend name; rejects anything outside the registry.
+    pub fn parse(s: &str) -> Result<BackendKind, ImagineError> {
+        for kind in BackendKind::ALL {
+            if s.eq_ignore_ascii_case(kind.name()) {
+                return Ok(kind);
+            }
+        }
+        Err(ImagineError::Parse {
+            what: "backend",
+            value: s.to_string(),
+            expected: "ideal|analog|pjrt",
+        })
+    }
+
+    /// The backend `--backend auto` resolves to for a model in `dir`:
+    /// PJRT when this build can run the HLO artifact, otherwise the
+    /// batched ideal engine.
+    pub fn auto_for(dir: &str, name: &str) -> BackendKind {
+        let hlo = std::path::Path::new(dir).join(format!("{name}.hlo.txt"));
+        if cfg!(feature = "pjrt") && hlo.exists() {
+            BackendKind::Pjrt
+        } else {
+            BackendKind::Ideal
+        }
+    }
+}
+
+/// Parse a `--precision` value: `R` (both sides) or `R_IN,R_OUT`
+/// (`:`/`/` also accepted), bits in 1..=8.
+pub fn parse_precision(s: &str) -> Result<(u32, u32), ImagineError> {
+    let err = || ImagineError::Parse {
+        what: "precision",
+        value: s.to_string(),
+        expected: "R or R_IN,R_OUT with bits in 1..=8 (e.g. 4 or 4,8)",
+    };
+    let (a, b) = match s.split_once(|c: char| c == ',' || c == ':' || c == '/') {
+        Some((a, b)) => (a, b),
+        None => (s, s),
+    };
+    let r_in: u32 = a.trim().parse().map_err(|_| err())?;
+    let r_out: u32 = b.trim().parse().map_err(|_| err())?;
+    if !(1..=8).contains(&r_in) || !(1..=8).contains(&r_out) {
+        return Err(err());
+    }
+    Ok((r_in, r_out))
+}
+
+/// Parse a `--supply` value: `nominal`, `low-power`, or an explicit
+/// `VDDL/VDDH` volt pair like `0.35/0.7`.
+pub fn parse_supply(s: &str) -> Result<Supply, ImagineError> {
+    match s {
+        "nominal" | "0.4/0.8" => return Ok(Supply::NOMINAL),
+        "low-power" | "low" | "lp" | "0.3/0.6" => return Ok(Supply::LOW_POWER),
+        _ => {}
+    }
+    if let Some((l, h)) = s.split_once('/') {
+        if let (Ok(vddl), Ok(vddh)) = (l.trim().parse::<f64>(), h.trim().parse::<f64>()) {
+            if vddl > 0.0 && vddh >= vddl {
+                return Ok(Supply::new(vddl, vddh));
+            }
+        }
+    }
+    Err(ImagineError::Parse {
+        what: "supply",
+        value: s.to_string(),
+        expected: "nominal|low-power|VDDL/VDDH (e.g. 0.35/0.7)",
+    })
+}
+
+/// Parse a `--corner` value (case-insensitive): tt|ff|ss|fs|sf.
+pub fn parse_corner(s: &str) -> Result<Corner, ImagineError> {
+    for corner in Corner::ALL {
+        if s.eq_ignore_ascii_case(corner.name()) {
+            return Ok(corner);
+        }
+    }
+    Err(ImagineError::Parse {
+        what: "corner",
+        value: s.to_string(),
+        expected: "tt|ff|ss|fs|sf",
+    })
+}
+
+/// Re-shape a model to a new (r_in, r_out) operating point, preserving
+/// each layer's real-valued full-scale range: the input quantization
+/// grid is re-spread over the same activation range and the post-ADC
+/// gain is rescaled so recentered outputs keep their magnitude — the
+/// software analogue of the paper's distribution-aware data reshaping
+/// when the precision knob moves. Weight precision (`r_w`) is a storage
+/// property of the compiled model and is left untouched.
+///
+/// Callers must keep `r_in`/`r_out` in 1..=8 (the macro's range);
+/// [`SessionBuilder::build`] validates this before applying.
+pub fn apply_precision(model: &mut NetworkModel, r_in: u32, r_out: u32) {
+    for layer in &mut model.layers {
+        let old_m = ((1u32 << layer.cfg.r_in) - 1) as f32;
+        let new_m = ((1u32 << r_in) - 1) as f32;
+        let old_half = (1u32 << (layer.cfg.r_out - 1)) as f32;
+        let new_half = (1u32 << (r_out - 1)) as f32;
+        layer.a_scale *= old_m / new_m;
+        layer.out_gain *= old_half / new_half;
+        layer.cfg.r_in = r_in;
+        layer.cfg.r_out = r_out;
+    }
+}
+
+/// The resolved configuration of a built [`Session`] — what the server's
+/// versioned `info` command reports.
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    pub model: String,
+    pub input_shape: Vec<usize>,
+    pub input_len: usize,
+    pub backend: BackendKind,
+    /// The (r_in, r_out) override, if one was applied (`None` keeps the
+    /// per-layer manifest precision).
+    pub precision: Option<(u32, u32)>,
+    pub supply: Supply,
+    pub corner: Corner,
+    pub batch: usize,
+    pub workers: usize,
+    pub flush_micros: u64,
+    pub seed: u64,
+    /// Human-readable backend description from the engine.
+    pub engine: String,
+}
+
+impl SessionConfig {
+    /// JSON form for the server's `info` protocol command.
+    pub fn to_json(&self) -> Json {
+        let precision = match self.precision {
+            Some((r_in, r_out)) => obj(vec![
+                ("r_in", Json::Num(r_in as f64)),
+                ("r_out", Json::Num(r_out as f64)),
+            ]),
+            None => Json::Null,
+        };
+        obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("backend", Json::Str(self.backend.name().to_string())),
+            ("input_shape", arr_usize(&self.input_shape)),
+            ("input_len", Json::Num(self.input_len as f64)),
+            ("precision", precision),
+            (
+                "supply",
+                obj(vec![
+                    ("vddl", Json::Num(self.supply.vddl)),
+                    ("vddh", Json::Num(self.supply.vddh)),
+                ]),
+            ),
+            ("corner", Json::Str(self.corner.name().to_string())),
+            ("batch", Json::Num(self.batch as f64)),
+            ("workers", Json::Num(self.workers as f64)),
+            ("flush_micros", Json::Num(self.flush_micros as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("engine", Json::Str(self.engine.clone())),
+        ])
+    }
+
+    /// One-line summary for logs.
+    pub fn render(&self) -> String {
+        let precision = match self.precision {
+            Some((r_in, r_out)) => format!("r_in={r_in} r_out={r_out}"),
+            None => "manifest per-layer".to_string(),
+        };
+        format!(
+            "{} via {} [{}] | precision {} | supply {:.2}/{:.2} V | corner {} | \
+             batch {} x {} workers | flush {} us | seed {}",
+            self.model,
+            self.backend.name(),
+            self.engine,
+            precision,
+            self.supply.vddl,
+            self.supply.vddh,
+            self.corner.name(),
+            self.batch,
+            self.workers,
+            self.flush_micros,
+            self.seed
+        )
+    }
+}
+
+/// Builder for a [`Session`]; start from [`Session::builder`] (in-memory
+/// model) or [`SessionBuilder::from_artifacts`] (compiled artifacts).
+pub struct SessionBuilder {
+    model: NetworkModel,
+    artifacts: Option<(String, String)>,
+    params: Option<MacroParams>,
+    backend: BackendKind,
+    precision: Option<(u32, u32)>,
+    supply: Option<Supply>,
+    corner: Option<Corner>,
+    batch: usize,
+    workers: usize,
+    flush_micros: u64,
+    seed: u64,
+    noise: bool,
+    calibrate: bool,
+    occupancy: Option<Arc<AtomicHistogram>>,
+}
+
+impl SessionBuilder {
+    fn new(model: NetworkModel) -> Self {
+        SessionBuilder {
+            model,
+            artifacts: None,
+            params: None,
+            backend: BackendKind::Ideal,
+            precision: None,
+            supply: None,
+            corner: None,
+            batch: 32,
+            workers: default_workers(),
+            flush_micros: 500,
+            seed: 42,
+            noise: true,
+            calibrate: true,
+            occupancy: None,
+        }
+    }
+
+    /// Load `<dir>/<name>.manifest.json` and remember the artifact
+    /// directory (so [`BackendKind::Pjrt`] can find the HLO file).
+    pub fn from_artifacts(dir: &str, name: &str) -> Result<SessionBuilder, ImagineError> {
+        let model = NetworkModel::load(dir, name).map_err(|e| ImagineError::ModelLoad {
+            model: name.to_string(),
+            message: format!("{e:#}"),
+        })?;
+        Ok(SessionBuilder::new(model).artifacts(dir, name))
+    }
+
+    /// Point the PJRT backend at `<dir>/<name>.hlo.txt`.
+    pub fn artifacts(mut self, dir: &str, name: &str) -> Self {
+        self.artifacts = Some((dir.to_string(), name.to_string()));
+        self
+    }
+
+    pub fn backend(mut self, kind: BackendKind) -> Self {
+        self.backend = kind;
+        self
+    }
+
+    /// Override every layer's (r_in, r_out) operating point; see
+    /// [`apply_precision`].
+    pub fn precision(mut self, r_in: u32, r_out: u32) -> Self {
+        self.precision = Some((r_in, r_out));
+        self
+    }
+
+    pub fn supply(mut self, supply: Supply) -> Self {
+        self.supply = Some(supply);
+        self
+    }
+
+    pub fn corner(mut self, corner: Corner) -> Self {
+        self.corner = Some(corner);
+        self
+    }
+
+    /// Base macro parameters (defaults to [`MacroParams::paper`]);
+    /// `supply`/`corner` settings apply on top.
+    pub fn params(mut self, params: MacroParams) -> Self {
+        self.params = Some(params);
+        self
+    }
+
+    /// Maximum images per coalesced engine batch (≥ 1).
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    /// Worker threads (matmul splits / analog dies) (≥ 1).
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// Dispatcher flush window for partial batches [µs].
+    pub fn flush_micros(mut self, micros: u64) -> Self {
+        self.flush_micros = micros;
+        self
+    }
+
+    /// Base die seed for the analog backend (die `d` derives its own).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Temporal noise on/off (analog backend).
+    pub fn noise(mut self, on: bool) -> Self {
+        self.noise = on;
+        self
+    }
+
+    /// Run SA-offset calibration before inference (analog backend).
+    pub fn calibrate(mut self, on: bool) -> Self {
+        self.calibrate = on;
+        self
+    }
+
+    /// Histogram receiving the size of every dispatched batch (the
+    /// server wires its `Stats` in here).
+    pub fn occupancy(mut self, histogram: Arc<AtomicHistogram>) -> Self {
+        self.occupancy = Some(histogram);
+        self
+    }
+
+    /// Validate the configuration, reshape the model if a precision
+    /// override is set, and start the engine through the backend
+    /// registry.
+    pub fn build(self) -> Result<Session, ImagineError> {
+        if let Some((r_in, r_out)) = self.precision {
+            if !(1..=8).contains(&r_in) || !(1..=8).contains(&r_out) {
+                return Err(ImagineError::InvalidConfig {
+                    field: "precision",
+                    message: format!("r_in={r_in} r_out={r_out} outside the macro's 1..=8 range"),
+                });
+            }
+        }
+        if self.batch == 0 {
+            return Err(ImagineError::InvalidConfig {
+                field: "batch",
+                message: "batch must be >= 1".to_string(),
+            });
+        }
+        if self.workers == 0 {
+            return Err(ImagineError::InvalidConfig {
+                field: "workers",
+                message: "workers must be >= 1".to_string(),
+            });
+        }
+
+        let mut model = self.model;
+        if let Some((r_in, r_out)) = self.precision {
+            apply_precision(&mut model, r_in, r_out);
+        }
+        let mut params = self.params.unwrap_or_else(MacroParams::paper);
+        if let Some(supply) = self.supply {
+            params.supply = supply;
+        }
+        if let Some(corner) = self.corner {
+            params.corner = corner;
+        }
+        let (supply, corner) = (params.supply, params.corner);
+
+        let model_name = model.name.clone();
+        let input_shape = model.input_shape.clone();
+        let input_len = input_shape.iter().product();
+        let cfg = EngineConfig {
+            batch: self.batch,
+            workers: self.workers,
+            flush_micros: self.flush_micros,
+        };
+        let handle = registry::start(
+            registry::BackendSpec {
+                kind: self.backend,
+                model,
+                params,
+                seed: self.seed,
+                noise: self.noise,
+                calibrate: self.calibrate,
+                workers: self.workers,
+                artifacts: self.artifacts,
+            },
+            cfg,
+            self.occupancy,
+        )?;
+        let config = SessionConfig {
+            model: model_name,
+            input_shape,
+            input_len,
+            backend: self.backend,
+            precision: self.precision,
+            supply,
+            corner,
+            batch: self.batch,
+            workers: self.workers,
+            flush_micros: self.flush_micros,
+            seed: self.seed,
+            engine: handle.describe().to_string(),
+        };
+        Ok(Session { handle, config: Arc::new(config) })
+    }
+}
+
+/// An in-flight inference submitted through [`Session::submit`].
+pub struct PendingInference(Pending);
+
+impl PendingInference {
+    /// Block until the logits arrive.
+    pub fn wait(self) -> Result<Vec<f32>, ImagineError> {
+        self.0.wait().map_err(ImagineError::engine)
+    }
+
+    /// Non-blocking poll: `None` while the batch is still in flight.
+    pub fn try_wait(&self) -> Option<Result<Vec<f32>, ImagineError>> {
+        self.0.try_wait().map(|r| r.map_err(ImagineError::engine))
+    }
+}
+
+/// A running inference session: a configured backend behind the engine
+/// work-queue, shared by every caller thread (cheap to clone).
+#[derive(Clone)]
+pub struct Session {
+    handle: EngineHandle,
+    config: Arc<SessionConfig>,
+}
+
+impl Session {
+    /// Start building a session over an in-memory model.
+    pub fn builder(model: NetworkModel) -> SessionBuilder {
+        SessionBuilder::new(model)
+    }
+
+    /// Wrap an already-started engine (tests and embedders plugging
+    /// custom [`BatchBackend`](crate::engine::BatchBackend)s).
+    pub fn from_handle(handle: EngineHandle, config: SessionConfig) -> Session {
+        Session { handle, config: Arc::new(config) }
+    }
+
+    /// The resolved configuration this session runs with.
+    pub fn config(&self) -> &SessionConfig {
+        &self.config
+    }
+
+    /// Expected flattened input length per image.
+    pub fn input_len(&self) -> usize {
+        self.config.input_len
+    }
+
+    /// The model's natural input shape.
+    pub fn input_shape(&self) -> &[usize] {
+        &self.config.input_shape
+    }
+
+    /// Human-readable backend description.
+    pub fn describe(&self) -> &str {
+        &self.config.engine
+    }
+
+    /// The underlying engine handle (server plumbing).
+    pub fn engine(&self) -> &EngineHandle {
+        &self.handle
+    }
+
+    fn check_image(&self, image: &[f32], index: usize) -> Result<(), ImagineError> {
+        if image.len() != self.config.input_len {
+            return Err(ImagineError::Input {
+                message: format!(
+                    "image {index}: expected {} values, got {}",
+                    self.config.input_len,
+                    image.len()
+                ),
+            });
+        }
+        Ok(())
+    }
+
+    /// Blocking single-image inference → logits. Concurrent callers are
+    /// coalesced into engine batches.
+    pub fn infer_one(&self, image: Vec<f32>) -> Result<Vec<f32>, ImagineError> {
+        self.check_image(&image, 0)?;
+        self.handle.infer(image).map_err(ImagineError::engine)
+    }
+
+    /// Run a whole batch as one backend dispatch (deterministic die
+    /// split on the analog backend, regardless of concurrent traffic).
+    /// Copies the batch; use [`Session::infer_batch_owned`] on hot paths
+    /// that can hand the images over.
+    pub fn infer_batch(&self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, ImagineError> {
+        self.infer_batch_owned(images.to_vec())
+    }
+
+    /// [`Session::infer_batch`] without the copy: takes ownership of the
+    /// images and moves them straight into the engine queue.
+    pub fn infer_batch_owned(&self, images: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>, ImagineError> {
+        for (i, image) in images.iter().enumerate() {
+            self.check_image(image, i)?;
+        }
+        self.handle
+            .infer_batch(images)
+            .map_err(ImagineError::engine)
+    }
+
+    /// Asynchronous submission: enqueue now, [`PendingInference::wait`]
+    /// later. The engine queue coalesces outstanding submissions.
+    pub fn submit(&self, image: Vec<f32>) -> Result<PendingInference, ImagineError> {
+        self.check_image(&image, 0)?;
+        self.handle
+            .submit(image)
+            .map(PendingInference)
+            .map_err(ImagineError::engine)
+    }
+
+    /// Engine counters plus the backend's modeled accelerator cost.
+    pub fn snapshot(&self) -> Result<EngineSnapshot, ImagineError> {
+        self.handle.snapshot().map_err(ImagineError::engine)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_roundtrips() {
+        for kind in BackendKind::ALL {
+            assert_eq!(BackendKind::parse(kind.name()).unwrap(), kind);
+        }
+        assert!(BackendKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn auto_backend_defaults_to_ideal_without_artifacts() {
+        assert_eq!(
+            BackendKind::auto_for("/nonexistent", "nope"),
+            BackendKind::Ideal
+        );
+    }
+
+    #[test]
+    fn precision_parses_single_and_pair() {
+        assert_eq!(parse_precision("4").unwrap(), (4, 4));
+        assert_eq!(parse_precision("4,8").unwrap(), (4, 8));
+        assert_eq!(parse_precision("1:8").unwrap(), (1, 8));
+        assert!(parse_precision("0").is_err());
+        assert!(parse_precision("9").is_err());
+        assert!(parse_precision("four").is_err());
+    }
+
+    #[test]
+    fn supply_and_corner_parse() {
+        assert_eq!(parse_supply("nominal").unwrap(), Supply::NOMINAL);
+        assert_eq!(parse_supply("low-power").unwrap(), Supply::LOW_POWER);
+        let s = parse_supply("0.35/0.7").unwrap();
+        assert!((s.vddl - 0.35).abs() < 1e-12 && (s.vddh - 0.7).abs() < 1e-12);
+        assert!(parse_supply("high").is_err());
+        assert!(parse_supply("0.8/0.4").is_err(), "vddh below vddl");
+        assert_eq!(parse_corner("ss").unwrap(), Corner::Ss);
+        assert_eq!(parse_corner("TT").unwrap(), Corner::Tt);
+        assert!(parse_corner("xx").is_err());
+    }
+
+    #[test]
+    fn apply_precision_preserves_full_scale() {
+        let p = MacroParams::paper();
+        let mut model = NetworkModel::synthetic_mlp(&[36, 4], 8, 4, 8, 1, &p);
+        let full_scale_in: Vec<f32> = model
+            .layers
+            .iter()
+            .map(|l| l.a_scale * ((1u32 << l.cfg.r_in) - 1) as f32)
+            .collect();
+        let full_scale_out: Vec<f32> = model
+            .layers
+            .iter()
+            .map(|l| l.out_gain * (1u32 << (l.cfg.r_out - 1)) as f32)
+            .collect();
+        apply_precision(&mut model, 2, 3);
+        for (i, l) in model.layers.iter().enumerate() {
+            assert_eq!((l.cfg.r_in, l.cfg.r_out), (2, 3));
+            let fs_in = l.a_scale * ((1u32 << l.cfg.r_in) - 1) as f32;
+            let fs_out = l.out_gain * (1u32 << (l.cfg.r_out - 1)) as f32;
+            assert!((fs_in - full_scale_in[i]).abs() < 1e-6, "layer {i}");
+            assert!((fs_out - full_scale_out[i]).abs() < 1e-6, "layer {i}");
+        }
+    }
+}

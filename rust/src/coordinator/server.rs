@@ -1,30 +1,41 @@
 //! Batch inference server — the deployable face of the coordinator.
 //!
-//! A line-delimited JSON protocol over TCP: each request line is
-//! `{"image": [f32...]}` (length must match the model's input shape) and
-//! each response line is `{"logits": [...], "class": k, "micros": t}`.
-//! `{"cmd": "stats"}` returns aggregate counters; `{"cmd": "quit"}`
-//! closes the connection.
+//! ### Protocol (version 2)
+//!
+//! Line-delimited JSON over TCP. Requests:
+//!
+//! * `{"image": [f32...]}` — run inference (length must match the
+//!   model's input length); response
+//!   `{"logits": [...], "class": k, "micros": t}` (non-finite logits are
+//!   serialized as `null` — JSON has no NaN);
+//! * `{"cmd": "info"}` — the active session configuration: protocol
+//!   version, model, backend, precision/supply/corner, batching knobs,
+//!   plus live engine counters and the modeled accelerator energy;
+//! * `{"cmd": "stats"}` — aggregate serving counters and latency /
+//!   batch-occupancy percentiles;
+//! * `{"cmd": "quit"}` — close the connection.
+//!
+//! Errors are reported in-band as `{"error": "..."}` lines.
 //!
 //! Concurrency model: every connection gets its own handler thread, and
-//! all handlers share one [`EngineHandle`] into the engine layer's
-//! work-queue scheduler — concurrent requests coalesce into batches
-//! instead of serializing on a global executor lock. The backend behind
-//! the queue is chosen per artifacts: the PJRT runtime when an HLO
-//! artifact exists (and the `pjrt` feature is built in), otherwise the
-//! batched ideal-contract engine on the manifest.
+//! all handlers share one [`Session`] into the engine layer's work-queue
+//! scheduler — concurrent requests coalesce into batches instead of
+//! serializing on a global executor lock. The backend behind the session
+//! is whatever the caller selected through the
+//! [`SessionBuilder`](crate::api::SessionBuilder) registry (`imagine
+//! serve --backend ideal|analog|pjrt|auto`).
 
-use crate::config::params::MacroParams;
-use crate::coordinator::manifest::NetworkModel;
-use crate::engine::{self, BatchBackend, BatchIdeal, EngineConfig, EngineHandle};
-use crate::runtime::Runtime;
-use crate::util::json::{arr_f64, obj, Json};
-use crate::util::stats::{pow2_bounds, AtomicHistogram};
+use crate::api::Session;
+use crate::util::json::{obj, Json};
+use crate::util::stats::{argmax_f32 as argmax, pow2_bounds, AtomicHistogram};
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+
+/// Version of the line-JSON protocol, reported by `info` and `stats`.
+pub const PROTOCOL_VERSION: u32 = 2;
 
 /// Aggregate serving statistics: counters plus latency / batch-occupancy
 /// histograms (p50/p99, not just the mean).
@@ -58,6 +69,7 @@ impl Stats {
         let n = self.requests.load(Ordering::Relaxed);
         let us = self.total_micros.load(Ordering::Relaxed);
         obj(vec![
+            ("protocol", Json::Num(PROTOCOL_VERSION as f64)),
             ("requests", Json::Num(n as f64)),
             ("errors", Json::Num(self.errors.load(Ordering::Relaxed) as f64)),
             (
@@ -111,100 +123,35 @@ impl Stats {
     }
 }
 
-/// PJRT-backed batch backend: executes the AOT HLO artifact per image on
-/// the dispatcher thread (the PJRT client is a single-threaded C handle).
-struct PjrtBackend {
-    runtime: Runtime,
-    model_name: String,
-    /// `[1, input_shape...]`.
-    input_shape: Vec<usize>,
-}
-
-impl BatchBackend for PjrtBackend {
-    fn input_len(&self) -> usize {
-        self.input_shape.iter().product()
-    }
-
-    fn forward_batch(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        images
-            .iter()
-            .map(|im| self.runtime.run_f32(&self.model_name, im, &self.input_shape))
-            .collect()
-    }
-
-    fn describe(&self) -> String {
-        format!("PJRT/HLO artifact '{}'", self.model_name)
-    }
-}
-
-/// Start the inference engine for a model directory: PJRT when the HLO
-/// artifact is usable, otherwise the batched ideal engine on the
-/// manifest. Returns the submission handle (shareable across connection
-/// threads). Pass `stats` so the dispatcher records batch occupancy.
-pub fn start_engine(
-    dir: &str,
-    name: &str,
-    cfg: EngineConfig,
-    stats: &Stats,
-) -> Result<EngineHandle> {
-    let model = NetworkModel::load(dir, name)
-        .with_context(|| format!("loading model '{name}' from {dir}"))?;
-    let hlo = std::path::Path::new(dir).join(format!("{name}.hlo.txt"));
-    let occupancy = Some(Arc::clone(&stats.occupancy));
-
-    if hlo.exists() {
-        let model_name = name.to_string();
-        let mut input_shape = vec![1usize];
-        input_shape.extend(&model.input_shape);
-        let started = engine::start(
-            move || {
-                let mut runtime = Runtime::new()?;
-                runtime.load_hlo_text(&model_name, &hlo)?;
-                Ok(Box::new(PjrtBackend { runtime, model_name, input_shape })
-                    as Box<dyn BatchBackend>)
-            },
-            cfg,
-            occupancy.clone(),
-        );
-        match started {
-            Ok(handle) => return Ok(handle),
-            // Default builds ship the stub runtime: falling back to the
-            // ideal engine is the expected path, not an error.
-            Err(e) if !cfg!(feature = "pjrt") => {
-                eprintln!("PJRT runtime unavailable ({e:#}); falling back to ideal engine");
-            }
-            // With the real PJRT binding compiled in, a broken HLO
-            // artifact is fatal — serving numerically different logits
-            // from a silent simulator fallback is worse than refusing to
-            // start.
-            Err(e) => {
-                return Err(e)
-                    .with_context(|| format!("starting the PJRT engine for '{name}'"));
+/// The `info` command: session configuration + live engine counters.
+fn info_json(session: &Session) -> Json {
+    let mut map = match session.config().to_json() {
+        Json::Obj(map) => map,
+        _ => unreachable!("SessionConfig::to_json returns an object"),
+    };
+    map.insert("protocol".to_string(), Json::Num(PROTOCOL_VERSION as f64));
+    if let Ok(snap) = session.snapshot() {
+        map.insert("images".to_string(), Json::Num(snap.images as f64));
+        map.insert("batches".to_string(), Json::Num(snap.batches as f64));
+        if let Some(cost) = snap.cost {
+            if cost.e_total() > 0.0 {
+                map.insert(
+                    "modeled_energy_uj".to_string(),
+                    Json::Num(cost.e_total() * 1e6),
+                );
+                map.insert(
+                    "modeled_ee_tops_w_8b".to_string(),
+                    Json::Num(cost.ee_8b() / 1e12),
+                );
             }
         }
     }
-    let params = MacroParams::paper();
-    let workers = cfg.workers;
-    engine::start(
-        move || {
-            Ok(Box::new(BatchIdeal::new(model, params, workers)?) as Box<dyn BatchBackend>)
-        },
-        cfg,
-        occupancy,
-    )
-}
-
-fn argmax(xs: &[f32]) -> usize {
-    xs.iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, _)| i)
-        .unwrap_or(0)
+    Json::Obj(map)
 }
 
 /// Handle one request line; returns the response line (never fails the
 /// connection — errors are reported in-band).
-pub fn handle_line(engine: &EngineHandle, stats: &Stats, line: &str) -> Option<String> {
+pub fn handle_line(session: &Session, stats: &Stats, line: &str) -> Option<String> {
     let parsed = match Json::parse(line) {
         Ok(j) => j,
         Err(e) => {
@@ -216,6 +163,7 @@ pub fn handle_line(engine: &EngineHandle, stats: &Stats, line: &str) -> Option<S
     };
     if let Some(cmd) = parsed.get("cmd").and_then(Json::as_str) {
         return match cmd {
+            "info" => Some(info_json(session).to_string_compact()),
             "stats" => Some(stats.snapshot_json().to_string_compact()),
             "quit" => None,
             other => Some(
@@ -230,7 +178,7 @@ pub fn handle_line(engine: &EngineHandle, stats: &Stats, line: &str) -> Option<S
             .collect()
     });
     let image = match image {
-        Some(v) if v.len() == engine.input_len() && v.iter().all(|x| x.is_finite()) => v,
+        Some(v) if v.len() == session.input_len() && v.iter().all(|x| x.is_finite()) => v,
         _ => {
             stats.errors.fetch_add(1, Ordering::Relaxed);
             return Some(
@@ -238,7 +186,7 @@ pub fn handle_line(engine: &EngineHandle, stats: &Stats, line: &str) -> Option<S
                     "error",
                     Json::Str(format!(
                         "expected 'image' with {} finite values",
-                        engine.input_len()
+                        session.input_len()
                     )),
                 )])
                 .to_string_compact(),
@@ -246,15 +194,24 @@ pub fn handle_line(engine: &EngineHandle, stats: &Stats, line: &str) -> Option<S
         }
     };
     let t0 = std::time::Instant::now();
-    match engine.infer(image) {
+    match session.infer_one(image) {
         Ok(logits) => {
             let us = t0.elapsed().as_micros() as u64;
             stats.requests.fetch_add(1, Ordering::Relaxed);
             stats.total_micros.fetch_add(us, Ordering::Relaxed);
             stats.latency.record(us);
+            // JSON has no NaN/Inf: serialize non-finite logits as null.
+            let logits_json = Json::Arr(
+                logits
+                    .iter()
+                    .map(|&v| {
+                        if v.is_finite() { Json::Num(v as f64) } else { Json::Null }
+                    })
+                    .collect(),
+            );
             Some(
                 obj(vec![
-                    ("logits", arr_f64(&logits.iter().map(|&v| v as f64).collect::<Vec<_>>())),
+                    ("logits", logits_json),
                     ("class", Json::Num(argmax(&logits) as f64)),
                     ("micros", Json::Num(us as f64)),
                 ])
@@ -263,12 +220,12 @@ pub fn handle_line(engine: &EngineHandle, stats: &Stats, line: &str) -> Option<S
         }
         Err(e) => {
             stats.errors.fetch_add(1, Ordering::Relaxed);
-            Some(obj(vec![("error", Json::Str(format!("{e:#}")))]).to_string_compact())
+            Some(obj(vec![("error", Json::Str(format!("{e}")))]).to_string_compact())
         }
     }
 }
 
-fn serve_conn(engine: &EngineHandle, stats: &Stats, stream: TcpStream) -> Result<()> {
+fn serve_conn(session: &Session, stats: &Stats, stream: TcpStream) -> Result<()> {
     let mut writer = stream.try_clone().context("cloning stream")?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
@@ -276,7 +233,7 @@ fn serve_conn(engine: &EngineHandle, stats: &Stats, stream: TcpStream) -> Result
         if line.trim().is_empty() {
             continue;
         }
-        match handle_line(engine, stats, &line) {
+        match handle_line(session, stats, &line) {
             Some(resp) => {
                 writer.write_all(resp.as_bytes())?;
                 writer.write_all(b"\n")?;
@@ -288,11 +245,11 @@ fn serve_conn(engine: &EngineHandle, stats: &Stats, stream: TcpStream) -> Result
 }
 
 /// Serve on an already-bound listener (tests bind port 0 and pass the
-/// listener in). Each connection runs on its own thread; `max_conns`
-/// stops *accepting* after N connections, then waits for the in-flight
-/// handlers to finish before returning.
+/// listener in). Each connection runs on its own thread sharing one
+/// session; `max_conns` stops *accepting* after N connections, then
+/// waits for the in-flight handlers to finish before returning.
 pub fn serve_listener(
-    engine: EngineHandle,
+    session: Session,
     stats: &Stats,
     listener: TcpListener,
     max_conns: Option<usize>,
@@ -309,10 +266,10 @@ pub fn serve_listener(
                     continue;
                 }
             };
-            let handle = engine.clone();
+            let conn_session = session.clone();
             scope.spawn(move || {
                 let peer = stream.peer_addr().ok();
-                if let Err(err) = serve_conn(&handle, stats, stream) {
+                if let Err(err) = serve_conn(&conn_session, stats, stream) {
                     eprintln!("connection error ({peer:?}): {err:#}");
                 }
             });
@@ -332,7 +289,7 @@ pub fn serve_listener(
 
 /// Bind `addr` and serve (blocks until `max_conns` is reached, if given).
 pub fn serve(
-    engine: EngineHandle,
+    session: Session,
     stats: &Stats,
     addr: &str,
     max_conns: Option<usize>,
@@ -341,19 +298,79 @@ pub fn serve(
     eprintln!(
         "imagine server listening on {addr} ({} -> {})",
         listener.local_addr().map(|a| a.to_string()).unwrap_or_default(),
-        engine.describe()
+        session.describe()
     );
-    serve_listener(engine, stats, listener, max_conns)
+    serve_listener(session, stats, listener, max_conns)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::{BackendKind, SessionConfig};
+    use crate::config::params::{Corner, Supply};
+    use crate::engine::{self, BatchBackend, EngineConfig};
 
     #[test]
     fn argmax_basic() {
         assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
         assert_eq!(argmax(&[2.0]), 0);
+        assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn argmax_survives_nan_logits() {
+        // Regression: partial_cmp().unwrap() used to panic here, killing
+        // the connection handler on any NaN from the analog backend.
+        assert_eq!(argmax(&[0.1, f32::NAN, 0.3]), 1); // NaN tops the total order
+        assert_eq!(argmax(&[f32::NAN]), 0);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -1.0]), 1);
+    }
+
+    fn test_config(input_len: usize) -> SessionConfig {
+        SessionConfig {
+            model: "test".to_string(),
+            input_shape: vec![input_len],
+            input_len,
+            backend: BackendKind::Ideal,
+            precision: None,
+            supply: Supply::NOMINAL,
+            corner: Corner::Tt,
+            batch: 2,
+            workers: 1,
+            flush_micros: 50,
+            seed: 0,
+            engine: "test backend".to_string(),
+        }
+    }
+
+    #[test]
+    fn nan_logits_yield_a_wellformed_response() {
+        struct NanBackend;
+        impl BatchBackend for NanBackend {
+            fn input_len(&self) -> usize {
+                2
+            }
+            fn forward_batch(&mut self, images: &[Vec<f32>]) -> anyhow::Result<Vec<Vec<f32>>> {
+                Ok(images.iter().map(|_| vec![f32::NAN, 0.5, f32::NAN]).collect())
+            }
+        }
+        let cfg = EngineConfig { batch: 2, workers: 1, flush_micros: 50 };
+        let handle = engine::start(
+            || Ok(Box::new(NanBackend) as Box<dyn BatchBackend>),
+            cfg,
+            None,
+        )
+        .unwrap();
+        let session = Session::from_handle(handle, test_config(2));
+        let stats = Stats::default();
+        let resp = handle_line(&session, &stats, r#"{"image": [0.1, 0.2]}"#).unwrap();
+        // The response must stay parseable JSON (NaN logits become null)
+        // and carry a class instead of panicking the handler.
+        let j = Json::parse(&resp).expect(&resp);
+        assert_eq!(j.get("class").unwrap().as_f64(), Some(2.0), "{resp}");
+        let logits = j.get("logits").unwrap().as_arr().unwrap();
+        assert_eq!(logits[0], Json::Null);
+        assert_eq!(logits[1].as_f64(), Some(0.5));
     }
 
     #[test]
@@ -362,6 +379,7 @@ mod tests {
         s.requests.fetch_add(4, Ordering::Relaxed);
         s.total_micros.fetch_add(400, Ordering::Relaxed);
         let j = s.snapshot_json();
+        assert_eq!(j.get("protocol").unwrap().as_f64(), Some(PROTOCOL_VERSION as f64));
         assert_eq!(j.get("requests").unwrap().as_f64(), Some(4.0));
         assert_eq!(j.get("mean_latency_micros").unwrap().as_f64(), Some(100.0));
         assert_eq!(j.get("batches").unwrap().as_f64(), Some(0.0));

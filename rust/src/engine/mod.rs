@@ -25,4 +25,6 @@ pub mod queue;
 
 pub use analog::AnalogPool;
 pub use ideal::BatchIdeal;
-pub use queue::{default_workers, start, BatchBackend, EngineConfig, EngineHandle};
+pub use queue::{
+    default_workers, start, BatchBackend, EngineConfig, EngineHandle, EngineSnapshot, Pending,
+};

@@ -14,6 +14,7 @@
 //! single-threaded C handle) work unchanged — they simply live and die on
 //! the dispatcher.
 
+use crate::energy::system::LayerCost;
 use crate::util::stats::AtomicHistogram;
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -32,6 +33,18 @@ pub trait BatchBackend {
     /// Human-readable backend description (for logs).
     fn describe(&self) -> String {
         "batch backend".to_string()
+    }
+
+    /// Images executed so far (for engine snapshots). Backends that do
+    /// not track it report 0.
+    fn images(&self) -> u64 {
+        0
+    }
+
+    /// Modeled accelerator cost accumulated so far, if this backend
+    /// models the accelerator (the PJRT path does not).
+    fn model_cost(&self) -> Option<LayerCost> {
+        None
     }
 }
 
@@ -52,6 +65,14 @@ impl BatchBackend for crate::engine::ideal::BatchIdeal {
             self.model.name, self.workers
         )
     }
+
+    fn images(&self) -> u64 {
+        self.images
+    }
+
+    fn model_cost(&self) -> Option<LayerCost> {
+        Some(self.cost)
+    }
 }
 
 impl BatchBackend for crate::engine::analog::AnalogPool {
@@ -65,6 +86,14 @@ impl BatchBackend for crate::engine::analog::AnalogPool {
 
     fn describe(&self) -> String {
         format!("analog die pool ({} dies)", self.n_dies())
+    }
+
+    fn images(&self) -> u64 {
+        self.images
+    }
+
+    fn model_cost(&self) -> Option<LayerCost> {
+        Some(self.cost())
     }
 }
 
@@ -102,10 +131,68 @@ struct Job {
     resp: mpsc::Sender<std::result::Result<Vec<f32>, String>>,
 }
 
+/// Read-only state reported by the dispatcher on request.
+#[derive(Clone, Debug)]
+pub struct EngineSnapshot {
+    /// Images executed by the backend so far.
+    pub images: u64,
+    /// Batches dispatched so far.
+    pub batches: u64,
+    /// Modeled accelerator cost, if the backend models one.
+    pub cost: Option<LayerCost>,
+}
+
+struct Probe {
+    images: u64,
+    cost: Option<LayerCost>,
+}
+
+enum Msg {
+    /// A single image to coalesce with concurrent submissions.
+    One(Job),
+    /// A caller-assembled batch, executed exactly as submitted (never
+    /// merged with other traffic — keeps multi-die splits deterministic).
+    Batch {
+        images: Vec<Vec<f32>>,
+        resp: mpsc::Sender<std::result::Result<Vec<Vec<f32>>, String>>,
+    },
+    /// Snapshot request, answered between dispatches.
+    Probe(mpsc::Sender<Probe>),
+}
+
+/// An in-flight single-image inference returned by
+/// [`EngineHandle::submit`]; resolve it with [`Pending::wait`].
+pub struct Pending {
+    rx: mpsc::Receiver<std::result::Result<Vec<f32>, String>>,
+}
+
+impl Pending {
+    /// Block until the logits arrive.
+    pub fn wait(self) -> Result<Vec<f32>> {
+        match self.rx.recv() {
+            Ok(Ok(v)) => Ok(v),
+            Ok(Err(e)) => Err(anyhow!("{e}")),
+            Err(_) => Err(anyhow!("inference engine dropped the request")),
+        }
+    }
+
+    /// Non-blocking poll: `None` while the batch is still in flight.
+    pub fn try_wait(&self) -> Option<Result<Vec<f32>>> {
+        match self.rx.try_recv() {
+            Ok(Ok(v)) => Some(Ok(v)),
+            Ok(Err(e)) => Some(Err(anyhow!("{e}"))),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Some(Err(anyhow!("inference engine dropped the request")))
+            }
+        }
+    }
+}
+
 /// Cloneable handle for submitting inference requests to the dispatcher.
 #[derive(Clone)]
 pub struct EngineHandle {
-    tx: mpsc::Sender<Job>,
+    tx: mpsc::Sender<Msg>,
     input_len: usize,
     describe: String,
     batches: Arc<AtomicU64>,
@@ -125,18 +212,57 @@ impl EngineHandle {
         self.batches.load(Ordering::Relaxed)
     }
 
+    /// Enqueue one image without blocking; the dispatcher coalesces
+    /// concurrent submissions into batches.
+    pub fn submit(&self, image: Vec<f32>) -> Result<Pending> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Msg::One(Job { image, resp: rtx }))
+            .map_err(|_| anyhow!("inference engine has shut down"))?;
+        Ok(Pending { rx: rrx })
+    }
+
     /// Blocking single-image inference (the dispatcher coalesces
     /// concurrent callers into batches).
     pub fn infer(&self, image: Vec<f32>) -> Result<Vec<f32>> {
+        self.submit(image)?.wait()
+    }
+
+    /// Run a caller-assembled batch as one backend dispatch. Unlike a
+    /// series of [`EngineHandle::submit`] calls, the batch is executed
+    /// exactly as submitted (no timing-dependent coalescing), so
+    /// seed-sensitive backends split it across dies deterministically.
+    pub fn infer_batch(&self, images: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        if images.is_empty() {
+            return Ok(Vec::new());
+        }
         let (rtx, rrx) = mpsc::channel();
         self.tx
-            .send(Job { image, resp: rtx })
+            .send(Msg::Batch { images, resp: rtx })
             .map_err(|_| anyhow!("inference engine has shut down"))?;
         match rrx.recv() {
             Ok(Ok(v)) => Ok(v),
             Ok(Err(e)) => Err(anyhow!("{e}")),
             Err(_) => Err(anyhow!("inference engine dropped the request")),
         }
+    }
+
+    /// Ask the dispatcher for its current image/batch counters and the
+    /// backend's modeled accelerator cost. Blocks while a batch is
+    /// executing (answered between dispatches).
+    pub fn snapshot(&self) -> Result<EngineSnapshot> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Msg::Probe(rtx))
+            .map_err(|_| anyhow!("inference engine has shut down"))?;
+        let probe = rrx
+            .recv()
+            .map_err(|_| anyhow!("inference engine dropped the snapshot request"))?;
+        Ok(EngineSnapshot {
+            images: probe.images,
+            batches: self.batches(),
+            cost: probe.cost,
+        })
     }
 }
 
@@ -153,7 +279,7 @@ pub fn start<F>(
 where
     F: FnOnce() -> Result<Box<dyn BatchBackend>> + Send + 'static,
 {
-    let (tx, rx) = mpsc::channel::<Job>();
+    let (tx, rx) = mpsc::channel::<Msg>();
     let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(usize, String), String>>();
     let batch = cfg.batch.max(1);
     let flush = Duration::from_micros(cfg.flush_micros);
@@ -184,40 +310,90 @@ where
     }
 }
 
+fn answer_probe(backend: &dyn BatchBackend, tx: mpsc::Sender<Probe>) {
+    let _ = tx.send(Probe { images: backend.images(), cost: backend.model_cost() });
+}
+
 fn dispatch_loop(
     backend: &mut dyn BatchBackend,
-    rx: &mpsc::Receiver<Job>,
+    rx: &mpsc::Receiver<Msg>,
     batch: usize,
     flush: Duration,
     batches: &AtomicU64,
     occupancy: Option<Arc<AtomicHistogram>>,
 ) {
+    // A whole-batch message that arrived while singles were being
+    // coalesced: flushed singles first, then handled on the next turn.
+    let mut backlog: Option<Msg> = None;
     loop {
-        // Block for the first request of the next batch.
-        let first = match rx.recv() {
-            Ok(job) => job,
-            Err(_) => return, // all handles dropped
+        let next = match backlog.take() {
+            Some(msg) => msg,
+            None => match rx.recv() {
+                Ok(msg) => msg,
+                Err(_) => return, // all handles dropped
+            },
         };
+        let first = match next {
+            Msg::Probe(tx) => {
+                answer_probe(backend, tx);
+                continue;
+            }
+            Msg::Batch { images, resp } => {
+                if images.is_empty() {
+                    let _ = resp.send(Ok(Vec::new()));
+                    continue;
+                }
+                batches.fetch_add(1, Ordering::Relaxed);
+                if let Some(h) = &occupancy {
+                    h.record(images.len() as u64);
+                }
+                let out = backend
+                    .forward_batch(&images)
+                    .map_err(|e| format!("{e:#}"));
+                let _ = resp.send(out);
+                continue;
+            }
+            Msg::One(job) => job,
+        };
+
         let mut jobs = vec![first];
         // Opportunistically drain whatever is already queued — a
         // concurrent burst coalesces with no waiting at all.
-        while jobs.len() < batch {
+        while backlog.is_none() && jobs.len() < batch {
             match rx.try_recv() {
-                Ok(job) => jobs.push(job),
+                Ok(Msg::One(job)) => jobs.push(job),
+                Ok(Msg::Probe(tx)) => answer_probe(backend, tx),
+                Ok(msg @ Msg::Batch { .. }) => backlog = Some(msg),
                 Err(_) => break,
             }
         }
         // Lone request: probe briefly for company instead of paying the
         // whole flush window — a lock-step single client must not gain a
         // `flush`-sized latency floor on every request.
-        if jobs.len() == 1 && batch > 1 {
-            if let Ok(job) = rx.recv_timeout(flush / 8) {
-                jobs.push(job);
+        if backlog.is_none() && jobs.len() == 1 && batch > 1 {
+            let deadline = Instant::now() + flush / 8;
+            loop {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(Msg::One(job)) => {
+                        jobs.push(job);
+                        break;
+                    }
+                    Ok(Msg::Probe(tx)) => answer_probe(backend, tx),
+                    Ok(msg @ Msg::Batch { .. }) => {
+                        backlog = Some(msg);
+                        break;
+                    }
+                    Err(_) => break,
+                }
             }
         }
         // Once ≥ 2 requests showed up there is real concurrency: keep
         // collecting until the batch fills or the flush window closes.
-        if jobs.len() > 1 {
+        if backlog.is_none() && jobs.len() > 1 {
             let deadline = Instant::now() + flush;
             while jobs.len() < batch {
                 let now = Instant::now();
@@ -225,7 +401,12 @@ fn dispatch_loop(
                     break;
                 }
                 match rx.recv_timeout(deadline - now) {
-                    Ok(job) => jobs.push(job),
+                    Ok(Msg::One(job)) => jobs.push(job),
+                    Ok(Msg::Probe(tx)) => answer_probe(backend, tx),
+                    Ok(msg @ Msg::Batch { .. }) => {
+                        backlog = Some(msg);
+                        break;
+                    }
                     Err(_) => break,
                 }
             }
@@ -354,5 +535,76 @@ mod tests {
             start(|| Ok(Box::new(FailBackend) as Box<dyn BatchBackend>), cfg, None).unwrap();
         let err = handle.infer(vec![0.0]).err().unwrap();
         assert!(format!("{err}").contains("die melted"), "{err}");
+    }
+
+    #[test]
+    fn whole_batch_message_is_dispatched_as_one() {
+        let occupancy = Arc::new(crate::util::stats::AtomicHistogram::new(
+            crate::util::stats::pow2_bounds(8),
+        ));
+        // batch=2 caps *coalescing*, not caller-assembled batches.
+        let cfg = EngineConfig { batch: 2, workers: 1, flush_micros: 100 };
+        let handle = start(
+            || Ok(Box::new(SumBackend { len: 1 }) as Box<dyn BatchBackend>),
+            cfg,
+            Some(Arc::clone(&occupancy)),
+        )
+        .unwrap();
+        let images: Vec<Vec<f32>> = (0..5).map(|i| vec![i as f32]).collect();
+        let outs = handle.infer_batch(images).unwrap();
+        assert_eq!(outs.len(), 5);
+        // Every output saw the full 5-image batch in one dispatch.
+        assert!(outs.iter().all(|o| o[1] == 5.0), "{outs:?}");
+        assert_eq!(handle.batches(), 1);
+        assert_eq!(occupancy.count(), 1);
+        // Empty batches short-circuit without a dispatch.
+        assert!(handle.infer_batch(Vec::new()).unwrap().is_empty());
+        assert_eq!(handle.batches(), 1);
+    }
+
+    #[test]
+    fn submit_resolves_asynchronously() {
+        let cfg = EngineConfig { batch: 4, workers: 1, flush_micros: 100 };
+        let handle =
+            start(|| Ok(Box::new(SumBackend { len: 2 }) as Box<dyn BatchBackend>), cfg, None)
+                .unwrap();
+        let pending: Vec<_> = (0..3)
+            .map(|i| handle.submit(vec![i as f32, 1.0]).unwrap())
+            .collect();
+        for (i, p) in pending.into_iter().enumerate() {
+            assert_eq!(p.wait().unwrap()[0], i as f32 + 1.0);
+        }
+    }
+
+    #[test]
+    fn snapshot_reports_backend_counters() {
+        struct Counting {
+            images: u64,
+        }
+        impl BatchBackend for Counting {
+            fn input_len(&self) -> usize {
+                1
+            }
+            fn forward_batch(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+                self.images += images.len() as u64;
+                Ok(images.iter().map(|_| vec![0.0]).collect())
+            }
+            fn images(&self) -> u64 {
+                self.images
+            }
+        }
+        let cfg = EngineConfig { batch: 4, workers: 1, flush_micros: 100 };
+        let handle = start(
+            || Ok(Box::new(Counting { images: 0 }) as Box<dyn BatchBackend>),
+            cfg,
+            None,
+        )
+        .unwrap();
+        let snap = handle.snapshot().unwrap();
+        assert_eq!((snap.images, snap.batches), (0, 0));
+        assert!(snap.cost.is_none());
+        handle.infer_batch(vec![vec![0.0], vec![1.0]]).unwrap();
+        let snap = handle.snapshot().unwrap();
+        assert_eq!((snap.images, snap.batches), (2, 1));
     }
 }

@@ -4,6 +4,11 @@
 //! compute-in-memory CNN accelerator. This crate rebuilds the entire
 //! system in software:
 //!
+//! * [`api`] — **the public facade**: [`Session`]/[`SessionBuilder`],
+//!   one precision-aware builder (`backend / precision / supply /
+//!   corner / batch / workers / seed`) over every backend, with the
+//!   typed [`ImagineError`] boundary — what the CLI, the server and the
+//!   examples are built on;
 //! * [`analog`] — circuit-behavioral simulator of the 1152×256 CIM-SRAM
 //!   macro (charge-sharing DP, MBIW accumulation, DSCI SAR ADC with
 //!   in-ADC analog batch-normalization, mismatch/noise/corners);
@@ -24,6 +29,7 @@
 //! paper-vs-measured results.
 
 pub mod analog;
+pub mod api;
 pub mod config;
 pub mod coordinator;
 pub mod dataflow;
@@ -32,3 +38,5 @@ pub mod engine;
 pub mod nn;
 pub mod runtime;
 pub mod util;
+
+pub use api::{BackendKind, ImagineError, Session, SessionBuilder};

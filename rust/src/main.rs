@@ -4,28 +4,34 @@
 //!
 //!   imagine info                              macro parameters & Table I row
 //!   imagine plan  --model NAME [--dir D]      layer schedule + cost table
-//!   imagine run   --model NAME [--n N] [--backend ideal|analog|pjrt]
-//!                 [--batch B] [--workers W] [--seed S]
-//!                                             evaluate on the exported test set
-//!   imagine serve --model NAME [--addr A] [--batch B] [--workers W]
-//!                 [--flush-us T]              line-JSON TCP inference server
+//!   imagine run   --model NAME [--n N] [--backend ideal|analog|pjrt|auto]
+//!                 [--precision R[,R_OUT]] [--supply nominal|low-power|L/H]
+//!                 [--corner tt|ff|ss|fs|sf] [--batch B] [--workers W]
+//!                 [--seed S]                  evaluate on the exported test set
+//!   imagine serve --model NAME [--addr A] [--backend ...] [--precision ...]
+//!                 [--supply ...] [--corner ...] [--batch B] [--workers W]
+//!                 [--seed S] [--flush-us T]   line-JSON TCP inference server
 //!
-//! Unknown flags are rejected with the list of valid options (a typo like
-//! `--bckend` used to silently fall through to the default backend).
+//! Both `run` and `serve` construct their backend through the one
+//! `Session` registry (`imagine::api`): the same `--backend analog
+//! --precision 4` spelling works identically on either, and unknown
+//! values are rejected with the list of valid options.
 //!
 //! Default artifact directory: ./artifacts (produced by `make artifacts`).
 
 use anyhow::{bail, Context, Result};
 use imagine::analog::macro_model::OpConfig;
+use imagine::api::{parse_corner, parse_precision, parse_supply, BackendKind, Session, SessionBuilder};
 use imagine::config::params::{MacroParams, Supply};
 use imagine::coordinator::manifest::NetworkModel;
 use imagine::coordinator::scheduler;
-use imagine::coordinator::server::{serve, start_engine, Stats};
+use imagine::coordinator::server::{serve, Stats};
 use imagine::energy::{analog as ea, area, system, timing};
-use imagine::engine::{default_workers, AnalogPool, BatchIdeal, EngineConfig};
+use imagine::engine::default_workers;
 use imagine::nn::dataset::Dataset;
-use imagine::runtime::Runtime;
+use imagine::util::stats::argmax_f32 as argmax;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Strict flag parser: `--key value` (or bare `--key` → "true"), every
 /// key must be in `allowed`; positional arguments are rejected.
@@ -115,9 +121,9 @@ fn cmd_info() {
         area::area_efficiency_raw(&MacroParams::paper(), &OpConfig::new(1, 1, 1)) / 1e12);
 }
 
-fn load_dataset_for(model: &NetworkModel, dir: &str) -> Result<Dataset> {
-    let file = if model.input_shape == [784]
-        || model.input_shape.first() == Some(&4) && model.input_shape.get(1) == Some(&28)
+fn load_dataset_for(input_shape: &[usize], dir: &str) -> Result<Dataset> {
+    let file = if input_shape == [784]
+        || input_shape.first() == Some(&4) && input_shape.get(1) == Some(&28)
     {
         "digits_test.imgt"
     } else {
@@ -127,92 +133,93 @@ fn load_dataset_for(model: &NetworkModel, dir: &str) -> Result<Dataset> {
 }
 
 /// Prepare one image in the model's input layout.
-fn prep_image(model: &NetworkModel, ds: &Dataset, i: usize) -> Vec<f32> {
-    match model.input_shape.len() {
-        1 => ds.flat(i).to_vec(),
-        3 => ds.image_padded(i, model.input_shape[0]),
+fn prep_image(input_shape: &[usize], ds: &Dataset, i: usize) -> Vec<f32> {
+    match input_shape.len() {
+        3 => ds.image_padded(i, input_shape[0]),
         _ => ds.flat(i).to_vec(),
     }
 }
 
+/// Per-subcommand defaults for the shared session flags.
+struct SessionDefaults {
+    model: &'static str,
+    backend: &'static str,
+    batch: usize,
+    flush_micros: u64,
+}
+
+const RUN_DEFAULTS: SessionDefaults =
+    SessionDefaults { model: "lenet_cim", backend: "ideal", batch: 64, flush_micros: 500 };
+const SERVE_DEFAULTS: SessionDefaults =
+    SessionDefaults { model: "mlp784", backend: "auto", batch: 32, flush_micros: 500 };
+
+/// Build a [`Session`] from CLI flags — the one construction path shared
+/// by `run` and `serve`.
+fn build_session(
+    flags: &HashMap<String, String>,
+    defaults: &SessionDefaults,
+    stats: Option<&Stats>,
+) -> Result<Session> {
+    let dir = flags.get("dir").map(String::as_str).unwrap_or("artifacts");
+    let name = flags.get("model").map(String::as_str).unwrap_or(defaults.model);
+    let backend_s = flags
+        .get("backend")
+        .map(String::as_str)
+        .unwrap_or(defaults.backend);
+    let kind = if backend_s == "auto" {
+        BackendKind::auto_for(dir, name)
+    } else {
+        // The facade's parser only knows real backends; `auto` is a CLI
+        // spelling, so re-word the error to keep it in the valid list.
+        BackendKind::parse(backend_s)
+            .map_err(|_| anyhow::anyhow!("unknown backend '{backend_s}' (valid: auto|ideal|analog|pjrt)"))?
+    };
+    let mut builder = SessionBuilder::from_artifacts(dir, name)?
+        .backend(kind)
+        .batch(flag_usize(flags, "batch", defaults.batch)?.max(1))
+        .workers(flag_usize(flags, "workers", default_workers())?.max(1))
+        .seed(flag_u64(flags, "seed", 42)?)
+        .flush_micros(flag_u64(flags, "flush-us", defaults.flush_micros)?);
+    if let Some(s) = flags.get("precision") {
+        let (r_in, r_out) = parse_precision(s)?;
+        builder = builder.precision(r_in, r_out);
+    }
+    if let Some(s) = flags.get("supply") {
+        builder = builder.supply(parse_supply(s)?);
+    }
+    if let Some(s) = flags.get("corner") {
+        builder = builder.corner(parse_corner(s)?);
+    }
+    if let Some(stats) = stats {
+        builder = builder.occupancy(Arc::clone(&stats.occupancy));
+    }
+    Ok(builder.build()?)
+}
+
 fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
     let dir = flags.get("dir").map(String::as_str).unwrap_or("artifacts");
-    let name = flags.get("model").map(String::as_str).unwrap_or("lenet_cim");
     let n: usize = flag_usize(flags, "n", 200)?;
-    let backend = flags.get("backend").map(String::as_str).unwrap_or("ideal");
-    let batch = flag_usize(flags, "batch", 64)?.max(1);
-    let workers = flag_usize(flags, "workers", default_workers())?.max(1);
-    let seed = flag_u64(flags, "seed", 42)?;
-
-    let model = NetworkModel::load(dir, name)?;
-    let ds = load_dataset_for(&model, dir)?;
+    let session = build_session(flags, &RUN_DEFAULTS, None)?;
+    let ds = load_dataset_for(session.input_shape(), dir)?;
     let n = n.min(ds.n);
-    println!("model {name}: {} layers, trained acc {:?}",
-        model.layers.len(), model.trained_accuracy());
-    println!(
-        "evaluating {n} images via backend '{backend}' (batch {batch}, {workers} workers)..."
-    );
-
-    let indices: Vec<usize> = (0..n).collect();
-    let count_correct = |preds: &[Vec<f32>], idx: &[usize], correct: &mut usize| {
-        for (logits, &i) in preds.iter().zip(idx) {
-            let pred = logits.iter().enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
-            if pred == ds.y[i] as usize {
-                *correct += 1;
-            }
-        }
-    };
+    println!("session: {}", session.config().render());
+    println!("evaluating {n} images...");
 
     let t0 = std::time::Instant::now();
-    let (correct, cost) = match backend {
-        "pjrt" => {
-            let mut rt = Runtime::new()?;
-            rt.load_hlo_text(name, format!("{dir}/{name}.hlo.txt"))?;
-            let mut shape = vec![1usize];
-            shape.extend(&model.input_shape);
-            let mut correct = 0;
-            for i in 0..n {
-                let img = prep_image(&model, &ds, i);
-                let logits = rt.run_f32(name, &img, &shape)?;
-                let pred = logits.iter().enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
-                if pred == ds.y[i] as usize { correct += 1; }
+    let indices: Vec<usize> = (0..n).collect();
+    let mut correct = 0usize;
+    for idx in indices.chunks(session.config().batch) {
+        let imgs: Vec<Vec<f32>> = idx
+            .iter()
+            .map(|&i| prep_image(session.input_shape(), &ds, i))
+            .collect();
+        let outs = session.infer_batch_owned(imgs)?;
+        for (logits, &i) in outs.iter().zip(idx) {
+            if argmax(logits) == ds.y[i] as usize {
+                correct += 1;
             }
-            (correct, None)
         }
-        "ideal" => {
-            let mut engine = BatchIdeal::new(model.clone(), MacroParams::paper(), workers)?;
-            let mut correct = 0;
-            for idx in indices.chunks(batch) {
-                let imgs: Vec<Vec<f32>> =
-                    idx.iter().map(|&i| prep_image(&model, &ds, i)).collect();
-                let outs = engine.forward_batch(&imgs)?;
-                count_correct(&outs, idx, &mut correct);
-            }
-            (correct, Some(engine.cost))
-        }
-        "analog" => {
-            let mut pool = AnalogPool::new(
-                model.clone(),
-                MacroParams::paper(),
-                seed,
-                true,
-                true,
-                workers,
-            )?;
-            println!("fabricated {} simulated dies (base seed {seed})", pool.n_dies());
-            let mut correct = 0;
-            for idx in indices.chunks(batch) {
-                let imgs: Vec<Vec<f32>> =
-                    idx.iter().map(|&i| prep_image(&model, &ds, i)).collect();
-                let outs = pool.forward_batch(&imgs)?;
-                count_correct(&outs, idx, &mut correct);
-            }
-            (correct, Some(pool.cost()))
-        }
-        other => bail!("unknown backend '{other}' (ideal|analog|pjrt)"),
-    };
+    }
     let wall = t0.elapsed().as_secs_f64();
     println!(
         "accuracy: {:.2}% ({correct}/{n})   wall {:.2}s ({:.2} ms/image, {:.0} images/s)",
@@ -221,7 +228,8 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
         1e3 * wall / n as f64,
         n as f64 / wall
     );
-    if let Some(c) = cost {
+    let snap = session.snapshot()?;
+    if let Some(c) = snap.cost {
         println!("modeled accelerator cost over the run:");
         println!("  cycles {:>12}   model-time {:.3} ms", c.cycles, c.seconds * 1e3);
         println!("  energy {:>9.3} uJ  (macro {:.1}% digital {:.1}% leak {:.1}%)",
@@ -249,30 +257,21 @@ fn cmd_plan(flags: &HashMap<String, String>) -> Result<()> {
 }
 
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
-    let dir = flags.get("dir").map(String::as_str).unwrap_or("artifacts");
-    let name = flags.get("model").map(String::as_str).unwrap_or("mlp784");
     let addr = flags.get("addr").map(String::as_str).unwrap_or("127.0.0.1:7878");
-    let cfg = EngineConfig {
-        batch: flag_usize(flags, "batch", 32)?.max(1),
-        workers: flag_usize(flags, "workers", default_workers())?.max(1),
-        flush_micros: flag_u64(flags, "flush-us", 500)?,
-    };
     let stats = Stats::default();
-    let engine = start_engine(dir, name, cfg, &stats)
-        .with_context(|| format!("starting engine for {name} from {dir}"))?;
-    eprintln!(
-        "engine: {} (batch {}, flush {} us)",
-        engine.describe(),
-        cfg.batch,
-        cfg.flush_micros
-    );
-    serve(engine, &stats, addr, None)
+    let session = build_session(flags, &SERVE_DEFAULTS, Some(&stats))?;
+    eprintln!("session: {}", session.config().render());
+    serve(session, &stats, addr, None)
 }
 
 fn usage() {
     println!("usage: imagine <info|run|plan|serve> [--model NAME] [--dir artifacts]");
-    println!("  run:   [--n 200] [--backend ideal|analog|pjrt] [--batch 64] [--workers N] [--seed 42]");
-    println!("  serve: [--addr 127.0.0.1:7878] [--batch 32] [--workers N] [--flush-us 500]");
+    println!("  run:   [--n 200] [--backend ideal|analog|pjrt|auto] [--precision R[,R_OUT]]");
+    println!("         [--supply nominal|low-power|L/H] [--corner tt|ff|ss|fs|sf]");
+    println!("         [--batch 64] [--workers N] [--seed 42]");
+    println!("  serve: [--addr 127.0.0.1:7878] [--backend auto|ideal|analog|pjrt]");
+    println!("         [--precision R[,R_OUT]] [--supply ...] [--corner ...]");
+    println!("         [--batch 32] [--workers N] [--seed 42] [--flush-us 500]");
 }
 
 fn main() -> Result<()> {
@@ -288,13 +287,19 @@ fn main() -> Result<()> {
         "run" => cmd_run(&parse_flags(
             "run",
             rest,
-            &["model", "dir", "n", "backend", "batch", "workers", "seed"],
+            &[
+                "model", "dir", "n", "backend", "precision", "supply", "corner", "batch",
+                "workers", "seed",
+            ],
         )?),
         "plan" => cmd_plan(&parse_flags("plan", rest, &["model", "dir"])?),
         "serve" => cmd_serve(&parse_flags(
             "serve",
             rest,
-            &["model", "dir", "addr", "batch", "workers", "flush-us"],
+            &[
+                "model", "dir", "addr", "backend", "precision", "supply", "corner", "batch",
+                "workers", "seed", "flush-us",
+            ],
         )?),
         "help" | "--help" | "-h" => {
             usage();

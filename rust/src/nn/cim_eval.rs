@@ -214,12 +214,7 @@ pub fn eval_cim_workers(
     let mut correct = 0usize;
     for i in 0..n {
         let logits = &cur[i * n_out..(i + 1) * n_out];
-        let pred = logits
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(k, _)| k)
-            .unwrap();
+        let pred = crate::util::stats::argmax_f32(logits);
         if pred == data.y[i] as usize {
             correct += 1;
         }

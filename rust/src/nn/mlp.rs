@@ -216,12 +216,7 @@ impl Mlp {
         let mut correct = 0usize;
         for i in 0..data.n {
             let logits = self.logits(data.flat(i));
-            let pred = logits
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(k, _)| k)
-                .unwrap();
+            let pred = crate::util::stats::argmax_f32(&logits);
             if pred == data.y[i] as usize {
                 correct += 1;
             }

@@ -31,6 +31,19 @@ pub fn max_abs(xs: &[f64]) -> f64 {
     xs.iter().fold(0.0f64, |a, &x| a.max(x.abs()))
 }
 
+/// NaN-safe argmax over logits, shared by the server, the CLI and the
+/// examples: `f32::total_cmp` gives a total order, so a noisy analog
+/// backend emitting NaN cannot panic a request handler (+NaN compares
+/// greater than every finite value and wins the argmax; ties keep the
+/// last index). Returns 0 for empty input.
+pub fn argmax_f32(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
 /// Minimum and maximum. Returns (0, 0) for empty input.
 pub fn min_max(xs: &[f64]) -> (f64, f64) {
     if xs.is_empty() {
@@ -46,10 +59,14 @@ pub fn min_max(xs: &[f64]) -> (f64, f64) {
 }
 
 /// Percentile via linear interpolation on the sorted copy (p in [0,100]).
+/// Returns 0.0 for empty input (matching `mean`/`std`); NaN values sort
+/// to the top under the total order instead of panicking.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    assert!(!xs.is_empty());
+    if xs.is_empty() {
+        return 0.0;
+    }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -257,6 +274,21 @@ mod tests {
     }
 
     #[test]
+    fn percentile_edge_cases() {
+        // Empty input: defined as 0.0, like mean/std — not a panic.
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        // Single sample: every percentile is that sample.
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[7.5], p), 7.5);
+        }
+        // All-equal distribution: interpolation between equal ranks.
+        let flat = [3.0; 5];
+        for p in [0.0, 25.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&flat, p), 3.0);
+        }
+    }
+
+    #[test]
     fn linreg_recovers_line() {
         let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
         let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 2.0 * x).collect();
@@ -327,7 +359,36 @@ mod tests {
     fn atomic_histogram_empty() {
         let h = AtomicHistogram::new(pow2_bounds(4));
         assert_eq!(h.percentile(50.0), 0);
+        assert_eq!(h.percentile(0.0), 0);
+        assert_eq!(h.percentile(100.0), 0);
         assert_eq!(h.mean(), 0.0);
         assert!(h.nonzero_buckets().is_empty());
+    }
+
+    #[test]
+    fn atomic_histogram_single_sample() {
+        let h = AtomicHistogram::new(pow2_bounds(6)); // 1..64
+        h.record(5); // lands in the (4, 8] bucket
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.mean(), 5.0);
+        // Every percentile reports the one occupied bucket's upper edge.
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(h.percentile(p), 8, "p={p}");
+        }
+        assert_eq!(h.nonzero_buckets(), vec![(8, 1)]);
+    }
+
+    #[test]
+    fn atomic_histogram_all_equal_samples() {
+        let h = AtomicHistogram::new(pow2_bounds(6));
+        for _ in 0..9 {
+            h.record(16); // exactly on a bucket bound
+        }
+        assert_eq!(h.count(), 9);
+        assert_eq!(h.mean(), 16.0);
+        for p in [0.0, 50.0, 100.0] {
+            assert_eq!(h.percentile(p), 16, "p={p}");
+        }
+        assert_eq!(h.nonzero_buckets(), vec![(16, 9)]);
     }
 }

@@ -7,6 +7,7 @@ use imagine::coordinator::executor::{Backend, Executor};
 use imagine::coordinator::manifest::NetworkModel;
 use imagine::coordinator::scheduler;
 use imagine::nn::dataset::Dataset;
+use imagine::util::stats::argmax_f32 as argmax;
 use std::path::Path;
 
 fn have_artifacts() -> bool {
@@ -15,14 +16,6 @@ fn have_artifacts() -> bool {
         eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
     }
     ok
-}
-
-fn argmax(v: &[f32]) -> usize {
-    v.iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .unwrap()
-        .0
 }
 
 #[test]

@@ -72,7 +72,7 @@ fn model_hlo_agrees_with_ideal_executor() {
         let am = |v: &[f32]| {
             v.iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .unwrap()
                 .0
         };

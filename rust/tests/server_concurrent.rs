@@ -2,12 +2,13 @@
 //! connections and answer all of them while every connection stays open —
 //! impossible under the old global-`Mutex<Executor>` + sequential-accept
 //! design, where client k+1 got no response until client k disconnected.
-//! Runs entirely on a synthetic in-memory model (no artifacts).
+//! Runs entirely on a synthetic in-memory model (no artifacts) through
+//! the `Session` facade.
 
+use imagine::api::Session;
 use imagine::config::params::MacroParams;
 use imagine::coordinator::manifest::NetworkModel;
 use imagine::coordinator::server::{serve_listener, Stats};
-use imagine::engine::{self, BatchBackend, BatchIdeal, EngineConfig};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::{Arc, Barrier};
@@ -16,16 +17,16 @@ const N_CLIENTS: usize = 8;
 const REQS_PER_CLIENT: usize = 3;
 const INPUT_LEN: usize = 36;
 
-fn start_test_engine(stats: &Stats) -> engine::EngineHandle {
+fn start_test_session(stats: &Stats) -> Session {
     let p = MacroParams::paper();
     let model = NetworkModel::synthetic_mlp(&[INPUT_LEN, 16, 4], 8, 4, 8, 77, &p);
-    let cfg = EngineConfig { batch: N_CLIENTS, workers: 2, flush_micros: 2000 };
-    engine::start(
-        move || Ok(Box::new(BatchIdeal::new(model, p, 2)?) as Box<dyn BatchBackend>),
-        cfg,
-        Some(Arc::clone(&stats.occupancy)),
-    )
-    .unwrap()
+    Session::builder(model)
+        .batch(N_CLIENTS)
+        .workers(2)
+        .flush_micros(2000)
+        .occupancy(Arc::clone(&stats.occupancy))
+        .build()
+        .unwrap()
 }
 
 fn client(addr: std::net::SocketAddr, barrier: Arc<Barrier>, salt: usize) {
@@ -53,7 +54,12 @@ fn client(addr: std::net::SocketAddr, barrier: Arc<Barrier>, salt: usize) {
         );
     }
 
-    // Ask for stats mid-flight, then quit.
+    // Ask for the session info and stats mid-flight, then quit.
+    writer.write_all(b"{\"cmd\": \"info\"}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"protocol\""), "info line: {line}");
+    assert!(line.contains("\"backend\""), "info line: {line}");
     writer.write_all(b"{\"cmd\": \"stats\"}\n").unwrap();
     let mut line = String::new();
     reader.read_line(&mut line).unwrap();
@@ -64,7 +70,7 @@ fn client(addr: std::net::SocketAddr, barrier: Arc<Barrier>, salt: usize) {
 #[test]
 fn eight_concurrent_clients_all_get_answers() {
     let stats = Stats::default();
-    let handle = start_test_engine(&stats);
+    let session = start_test_session(&stats);
 
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
@@ -79,7 +85,7 @@ fn eight_concurrent_clients_all_get_answers() {
 
     // Serve exactly N_CLIENTS connections, then return (waits for all
     // connection handlers to finish).
-    serve_listener(handle, &stats, listener, Some(N_CLIENTS)).unwrap();
+    serve_listener(session, &stats, listener, Some(N_CLIENTS)).unwrap();
     for c in clients {
         c.join().unwrap();
     }
@@ -101,7 +107,7 @@ fn eight_concurrent_clients_all_get_answers() {
 #[test]
 fn protocol_errors_do_not_poison_other_clients() {
     let stats = Stats::default();
-    let handle = start_test_engine(&stats);
+    let session = start_test_session(&stats);
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
 
@@ -133,7 +139,7 @@ fn protocol_errors_do_not_poison_other_clients() {
         writer.write_all(b"{\"cmd\": \"quit\"}\n").unwrap();
     });
 
-    serve_listener(handle, &stats, listener, Some(2)).unwrap();
+    serve_listener(session, &stats, listener, Some(2)).unwrap();
     bad.join().unwrap();
     good.join().unwrap();
 

@@ -1,14 +1,16 @@
 //! Server integration over the *trained artifacts* (requires
-//! `make artifacts`; skips otherwise): line-JSON protocol against the
-//! batched ideal engine on the real mlp784 manifest. Synthetic-model
-//! protocol/concurrency coverage lives in `server_concurrent.rs`.
+//! `make artifacts`; skips otherwise): line-JSON protocol v2 against a
+//! `Session` built through the facade on the real mlp784 manifest.
+//! Synthetic-model protocol/concurrency coverage lives in
+//! `server_concurrent.rs`.
 
-use imagine::coordinator::server::{handle_line, serve_listener, start_engine, Stats};
-use imagine::engine::EngineConfig;
+use imagine::api::{BackendKind, Session, SessionBuilder};
+use imagine::coordinator::server::{handle_line, serve_listener, Stats, PROTOCOL_VERSION};
 use imagine::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::Path;
+use std::sync::Arc;
 
 fn have_artifacts() -> bool {
     let ok = Path::new("artifacts/mlp784.manifest.json").exists();
@@ -18,17 +20,18 @@ fn have_artifacts() -> bool {
     ok
 }
 
-/// Engine on the manifest via the sim fallback: copy the manifest +
-/// weights (without the .hlo.txt) into a temp dir so `start_engine`
-/// selects the batched ideal backend deterministically.
-fn sim_engine(stats: &Stats, tag: &str) -> imagine::engine::EngineHandle {
-    let dir = std::env::temp_dir().join(format!("imagine_srv_test_{tag}"));
-    std::fs::create_dir_all(&dir).unwrap();
-    for f in ["mlp784.manifest.json", "mlp784.imgt"] {
-        std::fs::copy(format!("artifacts/{f}"), dir.join(f)).unwrap();
-    }
-    let cfg = EngineConfig { batch: 8, workers: 2, flush_micros: 300 };
-    start_engine(dir.to_str().unwrap(), "mlp784", cfg, stats).unwrap()
+/// A session on the manifest through the one registry path — explicitly
+/// the ideal backend, exactly like `imagine serve --backend ideal`.
+fn sim_session(stats: &Stats) -> Session {
+    SessionBuilder::from_artifacts("artifacts", "mlp784")
+        .unwrap()
+        .backend(BackendKind::Ideal)
+        .batch(8)
+        .workers(2)
+        .flush_micros(300)
+        .occupancy(Arc::clone(&stats.occupancy))
+        .build()
+        .unwrap()
 }
 
 #[test]
@@ -37,33 +40,77 @@ fn handle_line_protocol() {
         return;
     }
     let stats = Stats::default();
-    let engine = sim_engine(&stats, "protocol");
+    let session = sim_session(&stats);
 
     // Bad JSON → in-band error.
-    let resp = handle_line(&engine, &stats, "{oops").unwrap();
+    let resp = handle_line(&session, &stats, "{oops").unwrap();
     assert!(resp.contains("error"));
 
     // Wrong image size → in-band error.
-    let resp = handle_line(&engine, &stats, r#"{"image": [1, 2, 3]}"#).unwrap();
+    let resp = handle_line(&session, &stats, r#"{"image": [1, 2, 3]}"#).unwrap();
     assert!(resp.contains("expected 'image'"));
 
     // Valid image → logits + class.
     let img = vec!["0.5"; 784].join(",");
-    let resp = handle_line(&engine, &stats, &format!(r#"{{"image": [{img}]}}"#)).unwrap();
+    let resp = handle_line(&session, &stats, &format!(r#"{{"image": [{img}]}}"#)).unwrap();
     let j = Json::parse(&resp).unwrap();
     assert!(j.get("logits").unwrap().as_arr().unwrap().len() == 10);
     assert!(j.get("class").unwrap().as_f64().unwrap() < 10.0);
 
-    // Stats reflect the traffic, including the new histogram fields.
-    let resp = handle_line(&engine, &stats, r#"{"cmd": "stats"}"#).unwrap();
+    // info reports the versioned protocol and the active session config.
+    let resp = handle_line(&session, &stats, r#"{"cmd": "info"}"#).unwrap();
     let j = Json::parse(&resp).unwrap();
+    assert_eq!(j.get("protocol").unwrap().as_f64(), Some(PROTOCOL_VERSION as f64));
+    assert_eq!(j.get("backend").unwrap().as_str(), Some("ideal"));
+    assert_eq!(j.get("model").unwrap().as_str(), Some("mlp784"));
+    assert_eq!(j.get("input_len").unwrap().as_f64(), Some(784.0));
+    assert_eq!(j.get("batch").unwrap().as_f64(), Some(8.0));
+    assert_eq!(j.get("precision").unwrap(), &Json::Null);
+    assert_eq!(j.get("corner").unwrap().as_str(), Some("TT"));
+    assert_eq!(j.get("images").unwrap().as_f64(), Some(1.0));
+    assert!(j.get("modeled_energy_uj").unwrap().as_f64().unwrap() > 0.0);
+
+    // Stats reflect the traffic, including the protocol version and the
+    // histogram fields.
+    let resp = handle_line(&session, &stats, r#"{"cmd": "stats"}"#).unwrap();
+    let j = Json::parse(&resp).unwrap();
+    assert_eq!(j.get("protocol").unwrap().as_f64(), Some(PROTOCOL_VERSION as f64));
     assert_eq!(j.get("requests").unwrap().as_f64(), Some(1.0));
     assert_eq!(j.get("errors").unwrap().as_f64(), Some(2.0));
     assert!(j.get("p99_latency_micros").unwrap().as_f64().unwrap() >= 1.0);
     assert!(j.get("batches").unwrap().as_f64().unwrap() >= 1.0);
 
     // quit → None.
-    assert!(handle_line(&engine, &stats, r#"{"cmd": "quit"}"#).is_none());
+    assert!(handle_line(&session, &stats, r#"{"cmd": "quit"}"#).is_none());
+}
+
+#[test]
+fn analog_backend_is_reachable_through_the_server_path() {
+    if !have_artifacts() {
+        return;
+    }
+    // Regression for the pre-facade server, which hardcoded
+    // pjrt-with-ideal-fallback and could never serve the analog engine:
+    // the same registry the CLI uses must serve analog sessions too.
+    let stats = Stats::default();
+    let session = SessionBuilder::from_artifacts("artifacts", "mlp784")
+        .unwrap()
+        .backend(BackendKind::Analog)
+        .seed(3)
+        .calibrate(false)
+        .batch(4)
+        .workers(1)
+        .occupancy(Arc::clone(&stats.occupancy))
+        .build()
+        .unwrap();
+    let resp = handle_line(&session, &stats, r#"{"cmd": "info"}"#).unwrap();
+    let j = Json::parse(&resp).unwrap();
+    assert_eq!(j.get("backend").unwrap().as_str(), Some("analog"));
+
+    let img = vec!["0.25"; 784].join(",");
+    let resp = handle_line(&session, &stats, &format!(r#"{{"image": [{img}]}}"#)).unwrap();
+    let j = Json::parse(&resp).unwrap();
+    assert_eq!(j.get("logits").unwrap().as_arr().unwrap().len(), 10);
 }
 
 #[test]
@@ -72,7 +119,7 @@ fn tcp_roundtrip() {
         return;
     }
     let stats = Stats::default();
-    let engine = sim_engine(&stats, "tcp");
+    let session = sim_session(&stats);
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     let client = std::thread::spawn(move || {
@@ -89,6 +136,6 @@ fn tcp_roundtrip() {
         assert!(j.get("class").is_some(), "bad response: {line}");
         stream.write_all(b"{\"cmd\": \"quit\"}\n").unwrap();
     });
-    serve_listener(engine, &stats, listener, Some(1)).unwrap();
+    serve_listener(session, &stats, listener, Some(1)).unwrap();
     client.join().unwrap();
 }

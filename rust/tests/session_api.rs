@@ -1,0 +1,241 @@
+//! The `Session` facade: builder validation, the backend registry, the
+//! precision-scaling contract, and the sync/async call paths. Runs
+//! entirely on synthetic in-memory models (no artifacts needed).
+
+use imagine::api::{apply_precision, BackendKind, ImagineError, Session};
+use imagine::config::params::{Corner, MacroParams, Supply};
+use imagine::coordinator::executor::{Backend, Executor};
+use imagine::coordinator::manifest::NetworkModel;
+use imagine::util::rng::Rng;
+
+fn random_images(rng: &mut Rng, n: usize, len: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|_| (0..len).map(|_| rng.uniform() as f32).collect())
+        .collect()
+}
+
+#[test]
+fn builder_rejects_invalid_knobs() {
+    let p = MacroParams::paper();
+    let model = NetworkModel::synthetic_mlp(&[36, 4], 8, 4, 8, 1, &p);
+    let err = Session::builder(model.clone()).precision(0, 8).build().err().unwrap();
+    assert!(matches!(err, ImagineError::InvalidConfig { field: "precision", .. }), "{err}");
+    let err = Session::builder(model.clone()).precision(4, 9).build().err().unwrap();
+    assert!(matches!(err, ImagineError::InvalidConfig { field: "precision", .. }), "{err}");
+    let err = Session::builder(model.clone()).batch(0).build().err().unwrap();
+    assert!(matches!(err, ImagineError::InvalidConfig { field: "batch", .. }), "{err}");
+    let err = Session::builder(model).workers(0).build().err().unwrap();
+    assert!(matches!(err, ImagineError::InvalidConfig { field: "workers", .. }), "{err}");
+}
+
+#[test]
+fn pjrt_unavailability_is_a_typed_error() {
+    let p = MacroParams::paper();
+    let model = NetworkModel::synthetic_mlp(&[36, 4], 8, 4, 8, 2, &p);
+    // No artifact directory at all → unavailable, not a panic or fallback.
+    let err = Session::builder(model.clone())
+        .backend(BackendKind::Pjrt)
+        .build()
+        .err()
+        .unwrap();
+    assert!(matches!(err, ImagineError::BackendUnavailable { backend: BackendKind::Pjrt, .. }), "{err}");
+    // With a directory but no runnable runtime/HLO in the default build:
+    // still the same typed failure class.
+    let err = Session::builder(model)
+        .backend(BackendKind::Pjrt)
+        .artifacts("/nonexistent", "nope")
+        .build()
+        .err()
+        .unwrap();
+    assert!(matches!(err, ImagineError::BackendUnavailable { backend: BackendKind::Pjrt, .. }), "{err}");
+}
+
+#[test]
+fn input_length_is_validated_with_a_typed_error() {
+    let p = MacroParams::paper();
+    let model = NetworkModel::synthetic_mlp(&[30, 5], 8, 4, 8, 3, &p);
+    let session = Session::builder(model).workers(1).build().unwrap();
+    let err = session.infer_one(vec![0.0; 29]).err().unwrap();
+    assert!(matches!(err, ImagineError::Input { .. }), "{err}");
+    let err = session
+        .infer_batch(&[vec![0.0; 30], vec![0.0; 31]])
+        .err()
+        .unwrap();
+    assert!(matches!(err, ImagineError::Input { .. }), "{err}");
+}
+
+/// The tentpole precision contract: sweeping r_in/r_out ∈ {1,2,4,8}
+/// through the facade stays bit-identical to the per-image executor on
+/// the equivalently reshaped model, and outputs stay inside the
+/// closed-form full-scale bound |v| ≤ half·out_gain (= 1.0 for the
+/// synthetic scales, preserved across precisions by `apply_precision`).
+#[test]
+fn precision_sweep_matches_executor_and_stays_in_range() {
+    let p = MacroParams::paper();
+    let mut rng = Rng::new(0x5E55);
+    let model = NetworkModel::synthetic_mlp(&[72, 24, 6], 8, 4, 8, 9, &p);
+    let images = random_images(&mut rng, 5, 72);
+
+    for r in [1u32, 2, 4, 8] {
+        let mut reshaped = model.clone();
+        apply_precision(&mut reshaped, r, r);
+        let mut exec = Executor::new(reshaped, p.clone(), Backend::Ideal).unwrap();
+        let expected: Vec<Vec<f32>> =
+            images.iter().map(|im| exec.forward(im).unwrap()).collect();
+
+        let session = Session::builder(model.clone())
+            .precision(r, r)
+            .workers(2)
+            .batch(4)
+            .build()
+            .unwrap();
+        assert_eq!(session.config().precision, Some((r, r)));
+        let got = session.infer_batch(&images).unwrap();
+        assert_eq!(got, expected, "r={r}");
+        for v in got.iter().flatten() {
+            assert!(v.is_finite() && v.abs() <= 1.0 + 1e-6, "r={r} v={v}");
+        }
+    }
+}
+
+/// Fewer bits must cost less energy: the macro share strictly decreases
+/// (every phase — DP, MBIW shares, SAR decisions, control — serializes
+/// over fewer bit cycles) and the total never increases.
+#[test]
+fn energy_per_image_decreases_monotonically_with_fewer_bits() {
+    let p = MacroParams::paper();
+    let mut rng = Rng::new(0xE4E6);
+    let model = NetworkModel::synthetic_mlp(&[288, 64, 10], 8, 1, 8, 3, &p);
+    let images = random_images(&mut rng, 8, 288);
+
+    let mut macro_energy = Vec::new();
+    let mut total_energy = Vec::new();
+    for r in [8u32, 4, 2, 1] {
+        let session = Session::builder(model.clone())
+            .precision(r, r)
+            .workers(2)
+            .batch(8)
+            .build()
+            .unwrap();
+        session.infer_batch(&images).unwrap();
+        let snap = session.snapshot().unwrap();
+        assert_eq!(snap.images, images.len() as u64);
+        let cost = snap.cost.expect("ideal backend models cost");
+        macro_energy.push(cost.e_macro / snap.images as f64);
+        total_energy.push(cost.e_total() / snap.images as f64);
+    }
+    for pair in macro_energy.windows(2) {
+        assert!(pair[1] < pair[0], "macro energy must strictly decrease: {macro_energy:?}");
+    }
+    for pair in total_energy.windows(2) {
+        assert!(
+            pair[1] <= pair[0] * (1.0 + 1e-9),
+            "total energy must not increase: {total_energy:?}"
+        );
+    }
+}
+
+#[test]
+fn async_submit_matches_sync_inference() {
+    let p = MacroParams::paper();
+    let mut rng = Rng::new(41);
+    let model = NetworkModel::synthetic_mlp(&[40, 12, 4], 8, 4, 8, 5, &p);
+    let images = random_images(&mut rng, 6, 40);
+
+    let session = Session::builder(model).workers(2).batch(4).build().unwrap();
+    let expected: Vec<Vec<f32>> = images
+        .iter()
+        .map(|im| session.infer_one(im.clone()).unwrap())
+        .collect();
+    let pending: Vec<_> = images
+        .iter()
+        .map(|im| session.submit(im.clone()).unwrap())
+        .collect();
+    for (i, handle) in pending.into_iter().enumerate() {
+        assert_eq!(handle.wait().unwrap(), expected[i], "image {i}");
+    }
+}
+
+#[test]
+fn analog_sessions_are_deterministic_for_a_seed() {
+    let p = MacroParams::paper();
+    let mut rng = Rng::new(23);
+    let model = NetworkModel::synthetic_mlp(&[40, 8], 4, 2, 6, 6, &p);
+    let images = random_images(&mut rng, 6, 40);
+
+    let run = || {
+        let session = Session::builder(model.clone())
+            .backend(BackendKind::Analog)
+            .seed(99)
+            .calibrate(false)
+            .workers(3)
+            .build()
+            .unwrap();
+        // infer_batch dispatches the whole batch at once, so the die
+        // split (and with it the per-die RNG chains) is reproducible.
+        session.infer_batch(&images).unwrap()
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn sessions_share_one_engine_across_clones_and_threads() {
+    let p = MacroParams::paper();
+    let mut rng = Rng::new(31);
+    let model = NetworkModel::synthetic_mlp(&[36, 12, 3], 8, 4, 8, 2, &p);
+    let images = random_images(&mut rng, 12, 36);
+
+    let session = Session::builder(model.clone())
+        .workers(2)
+        .batch(4)
+        .flush_micros(2000)
+        .build()
+        .unwrap();
+    let mut direct = imagine::engine::BatchIdeal::new(model, p, 2).unwrap();
+    let expected = direct.forward_batch(&images).unwrap();
+
+    std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for (i, image) in images.iter().enumerate() {
+            let s = session.clone();
+            let image = image.clone();
+            joins.push((i, scope.spawn(move || s.infer_one(image).unwrap())));
+        }
+        for (i, join) in joins {
+            assert_eq!(join.join().unwrap(), expected[i], "image {i}");
+        }
+    });
+    let snap = session.snapshot().unwrap();
+    assert_eq!(snap.images, images.len() as u64);
+    assert!(snap.batches >= 1);
+}
+
+#[test]
+fn config_reports_the_resolved_operating_point() {
+    let p = MacroParams::paper();
+    let model = NetworkModel::synthetic_mlp(&[36, 4], 8, 4, 8, 8, &p);
+    let session = Session::builder(model)
+        .backend(BackendKind::Analog)
+        .precision(4, 4)
+        .supply(Supply::LOW_POWER)
+        .corner(Corner::Ss)
+        .batch(16)
+        .workers(2)
+        .seed(7)
+        .build()
+        .unwrap();
+    let config = session.config();
+    assert_eq!(config.backend, BackendKind::Analog);
+    assert_eq!(config.precision, Some((4, 4)));
+    assert_eq!(config.supply, Supply::LOW_POWER);
+    assert_eq!(config.corner, Corner::Ss);
+    assert_eq!((config.batch, config.workers, config.seed), (16, 2, 7));
+    assert_eq!(config.input_len, 36);
+    assert!(config.engine.contains("analog"), "{}", config.engine);
+
+    let json = config.to_json().to_string_compact();
+    assert!(json.contains("\"backend\":\"analog\""), "{json}");
+    assert!(json.contains("\"corner\":\"SS\""), "{json}");
+    let rendered = config.render();
+    assert!(rendered.contains("analog") && rendered.contains("SS"), "{rendered}");
+}
