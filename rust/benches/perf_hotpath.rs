@@ -98,6 +98,45 @@ fn main() {
         std::hint::black_box(im2col::im2col_image(&img, 16, 32, 32, 1, 8));
     });
 
+    // ---- 3b. im2col-backed conv3x3 batch kernel (engine::gemm) ----
+    // The conv hot path: row assembly through the macro's physical
+    // order + one blocked matmul for the whole batch of patch grids.
+    let (cc, ch, cw, c_out) = (16usize, 16usize, 16usize, 32usize);
+    let conv_rows = cc.div_ceil(4) * 36;
+    let conv_w: Vec<i32> = (0..conv_rows * c_out)
+        .map(|i| 2 * (i % 16) as i32 - 15)
+        .collect();
+    let conv_imgs: Vec<Vec<u8>> = (0..32)
+        .map(|s| (0..cc * ch * cw).map(|i| ((i + s) % 251) as u8).collect())
+        .collect();
+    let conv_ips = |batch: usize, iters: usize, out: &mut FigSink, label: &str| -> f64 {
+        let per = bench(label, iters, out, || {
+            for chunk in conv_imgs.chunks(batch) {
+                std::hint::black_box(imagine::engine::gemm::conv3x3_batch(
+                    chunk,
+                    cc,
+                    ch,
+                    cw,
+                    1,
+                    8,
+                    &conv_w,
+                    conv_rows,
+                    c_out,
+                    default_workers(),
+                ));
+            }
+        });
+        conv_imgs.len() as f64 / per
+    };
+    let conv_b1 = conv_ips(1, 5, &mut out, "conv3x3_batch 16ch 16x16 -> 32ch, batch=1");
+    let conv_b32 = conv_ips(32, 5, &mut out, "conv3x3_batch 16ch 16x16 -> 32ch, batch=32");
+    out.line(format!(
+        "-> conv3x3 batch=32 vs batch=1: {:.1}x ({:.0} vs {:.0} images/s)",
+        conv_b32 / conv_b1,
+        conv_b32,
+        conv_b1
+    ));
+
     // ---- 4. batched engine: batch-size scaling of the ideal backend ----
     out.line("");
     out.line("# batched engine (synthetic 784-512-10 dense model, ideal backend)");

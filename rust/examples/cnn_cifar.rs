@@ -1,0 +1,191 @@
+//! CNN inference through the layer-graph IR — the paper's workload
+//! class, end to end and artifact-free:
+//!
+//! 1. build a conv-conv-pool-dense graph (`nn::graph`) over procedurally
+//!    generated CIFAR-like color textures (oriented gratings, 4 classes,
+//!    3×16×16 — sized so the flattened feature map fits one macro);
+//! 2. train only the dense head on the frozen random conv features
+//!    (random convolutional features + linear readout — enough to
+//!    separate oriented textures, and trainable in seconds with the
+//!    existing MLP machinery);
+//! 3. evaluate through the CIM mapping at several precision points with
+//!    the batched graph executor (streaming-im2col lowering, Eq. 7
+//!    contract, per-layer γ/α calibration);
+//! 4. lower the same graph to a physical `NetworkModel` and serve it
+//!    through the `Session` facade on the batched ideal engine and the
+//!    circuit-behavioral analog die pool, reporting the per-layer
+//!    modeled accelerator cost (what `{"cmd":"graph_info"}` returns).
+//!
+//! Run: `cargo run --release --example cnn_cifar`
+
+use imagine::api::{BackendKind, Session};
+use imagine::config::params::MacroParams;
+use imagine::nn::cim_eval::EvalCfg;
+use imagine::nn::dataset::Dataset;
+use imagine::nn::graph::{eval_graph, Graph};
+use imagine::nn::layers::{AbnSpec, Conv3x3, DenseNode, Node, PoolKind};
+use imagine::nn::mlp::Mlp;
+use imagine::util::rng::Rng;
+use imagine::util::stats::argmax_f32 as argmax;
+
+const SIDE: usize = 16;
+const CLASSES: usize = 4;
+
+/// Procedural color textures: oriented gratings plus a checker class,
+/// randomly colorized and noised (a 16×16 miniature of the compile
+/// path's synthetic texture set).
+fn make_textures(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut x = Vec::with_capacity(n * 3 * SIDE * SIDE);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let k = rng.below(CLASSES as u64) as usize;
+        let freq = rng.uniform_range(1.5, 3.5);
+        let phase = rng.uniform_range(0.0, std::f64::consts::TAU);
+        let mut base = vec![0f32; SIDE * SIDE];
+        for (i, b) in base.iter_mut().enumerate() {
+            let (px, py) = ((i % SIDE) as f64 / SIDE as f64, (i / SIDE) as f64 / SIDE as f64);
+            let t = match k {
+                0 => px,                  // vertical stripes
+                1 => py,                  // horizontal stripes
+                2 => (px + py) / 2.0,     // diagonal stripes
+                _ => px - py,             // anti-diagonal (checker-like mix below)
+            };
+            let mut v = 0.5 + 0.5 * (std::f64::consts::TAU * freq * t + phase).sin();
+            if k == 3 {
+                v *= 0.5
+                    + 0.5 * (std::f64::consts::TAU * freq * (px * py + 0.3) + phase).cos();
+            }
+            *b = v as f32;
+        }
+        for _ch in 0..3 {
+            let gain = rng.uniform_range(0.4, 1.0) as f32;
+            let off = rng.uniform_range(0.0, 0.3) as f32;
+            for &b in &base {
+                let noisy = off + gain * b + rng.normal(0.0, 0.05) as f32;
+                x.push(noisy.clamp(0.0, 1.0));
+            }
+        }
+        y.push(k as i32);
+    }
+    Dataset { x, y, n, shape: vec![3, SIDE, SIDE] }
+}
+
+fn main() -> anyhow::Result<()> {
+    let p = MacroParams::paper();
+    let train = make_textures(512, 1);
+    let test = make_textures(256, 2);
+
+    // ---- the graph: conv-conv-pool-dense ----
+    let (c_in, h, w) = train.chw()?; // the dataset's validated CHW view
+    let mut rng = Rng::new(7);
+    let conv1 = Conv3x3::new(c_in, 8, &mut rng);
+    let conv2 = Conv3x3::new(8, 16, &mut rng);
+    let feat_len = 16 * (h / 2) * (w / 2); // 16×8×8 = 1024 macro rows
+    let mut graph = Graph::new("cnn_textures", vec![c_in, h, w])
+        .with(Node::Conv3x3(conv1))
+        .with(Node::Relu)
+        .with(Node::Conv3x3(conv2))
+        .with(Node::Relu)
+        .with(Node::Pool2x2(PoolKind::Max))
+        .with(Node::Flatten);
+    let n_trunk = graph.nodes.len();
+
+    // ---- train the dense head on the frozen conv features ----
+    let features = |ds: &Dataset| -> anyhow::Result<Dataset> {
+        let mut x = Vec::with_capacity(ds.n * feat_len);
+        for i in 0..ds.n {
+            x.extend(graph.forward_float_prefix(ds.image(i), n_trunk)?);
+        }
+        Ok(Dataset { x, y: ds.y.clone(), n: ds.n, shape: vec![feat_len] })
+    };
+    let feats_train = features(&train)?;
+    let feats_test = features(&test)?;
+    let mut head = Mlp::new(&[feat_len, CLASSES], 9);
+    let loss = head.train(&feats_train, 8, 32, 1e-2, 3);
+    let float_acc = head.accuracy(&feats_test);
+    println!("float: head train loss {loss:.3}, test accuracy {:.1}%", 100.0 * float_acc);
+
+    // Stitch the trained head into the graph; pin its ADC output to 8b
+    // regardless of the graph-level sweep point (a per-layer AbnSpec
+    // override — classifier logits keep full output precision).
+    let mut head_node = DenseNode::new(head.layers[0].clone());
+    head_node.abn = AbnSpec { r_out: Some(8), ..AbnSpec::INHERIT };
+    graph = graph.with(Node::Dense(head_node));
+
+    // ---- CIM-mapped evaluation at several precision points ----
+    println!("\nCIM-mapped accuracy (batched graph executor, noise 0.5 LSB):");
+    for (label, cfg) in [
+        ("8b in / 8b out, 5 gamma bits", EvalCfg::new(8, 5, true)),
+        ("4b in / 6b out, 5 gamma bits", EvalCfg { r_in: 4, ..EvalCfg::new(6, 5, true) }),
+        ("4b in / 4b out, gamma = 1   ", EvalCfg { r_in: 4, ..EvalCfg::new(4, 0, false) }),
+    ] {
+        let acc = eval_graph(&graph, &test, &p, &cfg)?;
+        println!("  {label} : {:.1}%", 100.0 * acc);
+    }
+
+    // ---- lower to a physical model and serve through Session ----
+    let cfg = EvalCfg { noise_lsb: 0.0, ..EvalCfg::new(8, 5, true) };
+    let model = graph.lower(&train.take(96), &p, &cfg)?;
+    println!("\nlowered model '{}' ({} layers):", model.name, model.layers.len());
+
+    let session = Session::builder(model.clone()).backend(BackendKind::Ideal).batch(64).build()?;
+    let mut correct = 0usize;
+    let indices: Vec<usize> = (0..test.n).collect();
+    for chunk in indices.chunks(64) {
+        let imgs: Vec<Vec<f32>> = chunk.iter().map(|&i| test.image(i).to_vec()).collect();
+        for (logits, &i) in session.infer_batch_owned(imgs)?.iter().zip(chunk) {
+            if argmax(logits) == test.y[i] as usize {
+                correct += 1;
+            }
+        }
+    }
+    println!(
+        " ideal engine : {:.1}% over {} images via `{}`",
+        100.0 * correct as f64 / test.n as f64,
+        test.n,
+        session.describe()
+    );
+
+    // Per-layer modeled accelerator cost — the graph_info view.
+    let snap = session.snapshot()?;
+    if let Some(costs) = snap.layer_costs {
+        println!(" per-layer modeled cost over the run (graph_info):");
+        for (summary, cost) in session.layers().iter().zip(&costs) {
+            println!(
+                "   {:<6} {:>5} -> {:<4} rows {:>4}  r {}:{}  gamma {:>4.0}  pool {:<4}  \
+                 {:>9.3} uJ  {:>7.1} TOPS/W",
+                summary.name,
+                summary.in_features,
+                summary.out_features,
+                summary.rows,
+                summary.r_in,
+                summary.r_out,
+                summary.gamma,
+                summary.pool,
+                cost.e_total() * 1e6,
+                if cost.e_total() > 0.0 { cost.ee_8b() / 1e12 } else { 0.0 },
+            );
+        }
+    }
+
+    // ---- the analog die pool on a subset (mismatch + noise + cal) ----
+    let n_analog = 16usize;
+    let analog = Session::builder(model)
+        .backend(BackendKind::Analog)
+        .seed(2024)
+        .workers(2)
+        .build()?;
+    let imgs: Vec<Vec<f32>> = (0..n_analog).map(|i| test.image(i).to_vec()).collect();
+    let outs = analog.infer_batch_owned(imgs)?;
+    let correct = outs
+        .iter()
+        .enumerate()
+        .filter(|(i, logits)| argmax(logits) == test.y[*i] as usize)
+        .count();
+    println!(
+        " analog pool  : {correct}/{n_analog} correct via `{}`",
+        analog.describe()
+    );
+    Ok(())
+}

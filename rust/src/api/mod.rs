@@ -25,6 +25,6 @@ mod session;
 
 pub use error::ImagineError;
 pub use session::{
-    apply_precision, parse_corner, parse_precision, parse_supply, BackendKind, PendingInference,
-    Session, SessionBuilder, SessionConfig,
+    apply_precision, parse_corner, parse_precision, parse_supply, BackendKind, LayerSummary,
+    PendingInference, Session, SessionBuilder, SessionConfig,
 };

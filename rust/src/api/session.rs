@@ -28,7 +28,7 @@
 use super::error::ImagineError;
 use super::registry;
 use crate::config::params::{Corner, MacroParams, Supply};
-use crate::coordinator::manifest::NetworkModel;
+use crate::coordinator::manifest::{Layer, NetworkModel};
 use crate::engine::{default_workers, EngineConfig, EngineHandle, EngineSnapshot, Pending};
 use crate::util::json::{arr_usize, obj, Json};
 use crate::util::stats::AtomicHistogram;
@@ -165,6 +165,65 @@ pub fn apply_precision(model: &mut NetworkModel, r_in: u32, r_out: u32) {
     }
 }
 
+/// Per-layer structure summary of the model a [`Session`] serves — what
+/// the server's `graph_info` command reports alongside the engine's
+/// per-layer modeled [`LayerCost`](crate::energy::system::LayerCost).
+/// Captured at build time (after any precision reshaping), so it
+/// reflects the *resolved* operating point, and kept independent of the
+/// weights so the session does not retain the model tensors.
+#[derive(Clone, Debug)]
+pub struct LayerSummary {
+    pub name: String,
+    /// `dense` or `conv3`.
+    pub kind: &'static str,
+    /// Dense: input features; conv: input channels.
+    pub in_features: usize,
+    /// Dense: outputs; conv: output channels.
+    pub out_features: usize,
+    /// Physical macro rows (padded to DP-unit multiples).
+    pub rows: usize,
+    pub r_in: u32,
+    pub r_out: u32,
+    /// ABN gain.
+    pub gamma: f64,
+    pub relu: bool,
+    /// `none`, `max2`, `avg2` or `gap`.
+    pub pool: &'static str,
+}
+
+impl LayerSummary {
+    fn from_layer(layer: &Layer) -> LayerSummary {
+        LayerSummary {
+            name: layer.name.clone(),
+            kind: layer.kind.name(),
+            in_features: layer.in_features,
+            out_features: layer.out_features,
+            rows: layer.rows,
+            r_in: layer.cfg.r_in,
+            r_out: layer.cfg.r_out,
+            gamma: layer.cfg.gamma,
+            relu: layer.relu,
+            pool: layer.pool.name(),
+        }
+    }
+
+    /// JSON form for the server's `graph_info` command.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("kind", Json::Str(self.kind.to_string())),
+            ("in_features", Json::Num(self.in_features as f64)),
+            ("out_features", Json::Num(self.out_features as f64)),
+            ("rows", Json::Num(self.rows as f64)),
+            ("r_in", Json::Num(self.r_in as f64)),
+            ("r_out", Json::Num(self.r_out as f64)),
+            ("gamma", Json::Num(self.gamma)),
+            ("relu", Json::Bool(self.relu)),
+            ("pool", Json::Str(self.pool.to_string())),
+        ])
+    }
+}
+
 /// The resolved configuration of a built [`Session`] — what the server's
 /// versioned `info` command reports.
 #[derive(Clone, Debug)]
@@ -184,6 +243,8 @@ pub struct SessionConfig {
     pub seed: u64,
     /// Human-readable backend description from the engine.
     pub engine: String,
+    /// Per-layer structure of the served model (resolved precision).
+    pub layers: Vec<LayerSummary>,
 }
 
 impl SessionConfig {
@@ -410,6 +471,7 @@ impl SessionBuilder {
         let model_name = model.name.clone();
         let input_shape = model.input_shape.clone();
         let input_len = input_shape.iter().product();
+        let layers = model.layers.iter().map(LayerSummary::from_layer).collect();
         let cfg = EngineConfig {
             batch: self.batch,
             workers: self.workers,
@@ -442,6 +504,7 @@ impl SessionBuilder {
             flush_micros: self.flush_micros,
             seed: self.seed,
             engine: handle.describe().to_string(),
+            layers,
         };
         Ok(Session { handle, config: Arc::new(config) })
     }
@@ -495,6 +558,12 @@ impl Session {
     /// The model's natural input shape.
     pub fn input_shape(&self) -> &[usize] {
         &self.config.input_shape
+    }
+
+    /// Per-layer structure of the served model (resolved precision) —
+    /// pairs with the per-layer costs in [`Session::snapshot`].
+    pub fn layers(&self) -> &[LayerSummary] {
+        &self.config.layers
     }
 
     /// Human-readable backend description.
@@ -603,6 +672,28 @@ mod tests {
         assert_eq!(parse_corner("ss").unwrap(), Corner::Ss);
         assert_eq!(parse_corner("TT").unwrap(), Corner::Tt);
         assert!(parse_corner("xx").is_err());
+    }
+
+    #[test]
+    fn sessions_expose_layer_summaries_at_resolved_precision() {
+        let p = MacroParams::paper();
+        let model = NetworkModel::synthetic_mlp(&[72, 24, 6], 8, 4, 8, 4, &p);
+        let session = Session::builder(model)
+            .precision(4, 6)
+            .workers(1)
+            .build()
+            .unwrap();
+        let layers = session.layers();
+        assert_eq!(layers.len(), 2);
+        assert_eq!(layers[0].kind, "dense");
+        assert_eq!((layers[0].in_features, layers[0].out_features), (72, 24));
+        // Summaries are captured after apply_precision.
+        assert!(layers.iter().all(|l| l.r_in == 4 && l.r_out == 6));
+        assert!(layers[0].relu && !layers[1].relu);
+        assert_eq!(layers[1].pool, "none");
+        let j = layers[1].to_json().to_string_compact();
+        assert!(j.contains("\"kind\":\"dense\""), "{j}");
+        assert!(j.contains("\"r_out\":6"), "{j}");
     }
 
     #[test]

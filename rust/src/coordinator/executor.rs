@@ -271,7 +271,9 @@ impl IdealContract {
             lsb: p.adc_lsb(cfg.r_out, cfg.gamma),
             half: (1u64 << (cfg.r_out - 1)) as f64,
             top: (1u64 << cfg.r_out) as f64 - 1.0,
-            beta_volts_per_code: 0.030 / 16.0,
+            // One 5b ABN offset code moves the DPL by range/16 — the
+            // same step the circuit-level ADC model applies.
+            beta_volts_per_code: p.abn_offset_range / 16.0,
         }
     }
 

@@ -23,6 +23,16 @@ pub enum Pool {
 }
 
 impl Pool {
+    /// Manifest/protocol spelling of this pool stage.
+    pub fn name(self) -> &'static str {
+        match self {
+            Pool::None => "none",
+            Pool::Max2 => "max2",
+            Pool::Avg2 => "avg2",
+            Pool::Gap => "gap",
+        }
+    }
+
     fn from_json(j: Option<&Json>) -> Result<Pool> {
         match j {
             None | Some(Json::Null) => Ok(Pool::None),
@@ -42,6 +52,16 @@ impl Pool {
 pub enum Kind {
     Dense,
     Conv3,
+}
+
+impl Kind {
+    /// Manifest/protocol spelling of this layer kind.
+    pub fn name(self) -> &'static str {
+        match self {
+            Kind::Dense => "dense",
+            Kind::Conv3 => "conv3",
+        }
+    }
 }
 
 /// One CIM-mapped layer with everything the executor needs.

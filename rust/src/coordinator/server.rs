@@ -11,6 +11,10 @@
 //! * `{"cmd": "info"}` — the active session configuration: protocol
 //!   version, model, backend, precision/supply/corner, batching knobs,
 //!   plus live engine counters and the modeled accelerator energy;
+//! * `{"cmd": "graph_info"}` — the served model's layer graph: one entry
+//!   per macro-mapped layer (kind, features, rows, r_in/r_out, γ, fused
+//!   relu/pool) with the per-layer modeled accelerator cost accumulated
+//!   over everything executed (cycles, energy, 8b-normalized EE);
 //! * `{"cmd": "stats"}` — aggregate serving counters and latency /
 //!   batch-occupancy percentiles;
 //! * `{"cmd": "quit"}` — close the connection.
@@ -26,7 +30,7 @@
 //! serve --backend ideal|analog|pjrt|auto`).
 
 use crate::api::Session;
-use crate::util::json::{obj, Json};
+use crate::util::json::{arr_usize, obj, Json};
 use crate::util::stats::{argmax_f32 as argmax, pow2_bounds, AtomicHistogram};
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
@@ -149,6 +153,51 @@ fn info_json(session: &Session) -> Json {
     Json::Obj(map)
 }
 
+/// The `graph_info` command: the served layer graph plus the engine's
+/// per-layer modeled accelerator cost (accumulated over the images
+/// executed so far — zero until the first inference).
+fn graph_info_json(session: &Session) -> Json {
+    let snap = session.snapshot().ok();
+    let layer_costs = snap.as_ref().and_then(|s| s.layer_costs.as_deref());
+    let layers: Vec<Json> = session
+        .config()
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, summary)| {
+            let mut map = match summary.to_json() {
+                Json::Obj(map) => map,
+                _ => unreachable!("LayerSummary::to_json returns an object"),
+            };
+            if let Some(cost) = layer_costs.and_then(|c| c.get(i)) {
+                map.insert("cycles".to_string(), Json::Num(cost.cycles as f64));
+                map.insert(
+                    "modeled_energy_uj".to_string(),
+                    Json::Num(cost.e_total() * 1e6),
+                );
+                if cost.e_total() > 0.0 {
+                    map.insert(
+                        "modeled_ee_tops_w_8b".to_string(),
+                        Json::Num(cost.ee_8b() / 1e12),
+                    );
+                }
+            }
+            Json::Obj(map)
+        })
+        .collect();
+    obj(vec![
+        ("protocol", Json::Num(PROTOCOL_VERSION as f64)),
+        ("model", Json::Str(session.config().model.clone())),
+        ("input_shape", arr_usize(session.input_shape())),
+        ("n_layers", Json::Num(layers.len() as f64)),
+        ("layers", Json::Arr(layers)),
+        (
+            "images",
+            Json::Num(snap.map(|s| s.images).unwrap_or(0) as f64),
+        ),
+    ])
+}
+
 /// Handle one request line; returns the response line (never fails the
 /// connection — errors are reported in-band).
 pub fn handle_line(session: &Session, stats: &Stats, line: &str) -> Option<String> {
@@ -164,6 +213,7 @@ pub fn handle_line(session: &Session, stats: &Stats, line: &str) -> Option<Strin
     if let Some(cmd) = parsed.get("cmd").and_then(Json::as_str) {
         return match cmd {
             "info" => Some(info_json(session).to_string_compact()),
+            "graph_info" => Some(graph_info_json(session).to_string_compact()),
             "stats" => Some(stats.snapshot_json().to_string_compact()),
             "quit" => None,
             other => Some(
@@ -340,6 +390,7 @@ mod tests {
             flush_micros: 50,
             seed: 0,
             engine: "test backend".to_string(),
+            layers: Vec::new(),
         }
     }
 
@@ -371,6 +422,44 @@ mod tests {
         let logits = j.get("logits").unwrap().as_arr().unwrap();
         assert_eq!(logits[0], Json::Null);
         assert_eq!(logits[1].as_f64(), Some(0.5));
+    }
+
+    #[test]
+    fn graph_info_reports_layers_and_per_layer_costs() {
+        use crate::config::params::MacroParams;
+        use crate::coordinator::manifest::NetworkModel;
+
+        let p = MacroParams::paper();
+        let model = NetworkModel::synthetic_mlp(&[36, 12, 3], 8, 4, 8, 2, &p);
+        let session = Session::builder(model).workers(1).batch(2).build().unwrap();
+        let stats = Stats::default();
+
+        let resp = handle_line(&session, &stats, r#"{"cmd": "graph_info"}"#).unwrap();
+        let j = Json::parse(&resp).expect(&resp);
+        assert_eq!(j.get("protocol").unwrap().as_f64(), Some(PROTOCOL_VERSION as f64));
+        assert_eq!(j.get("n_layers").unwrap().as_f64(), Some(2.0));
+        let layers = j.get("layers").unwrap().as_arr().unwrap();
+        assert_eq!(layers[0].get("kind").unwrap().as_str(), Some("dense"));
+        assert_eq!(layers[0].get("out_features").unwrap().as_f64(), Some(12.0));
+        // No images run yet: per-layer accumulated cost is zero.
+        assert_eq!(layers[0].get("modeled_energy_uj").unwrap().as_f64(), Some(0.0));
+
+        // After one inference the per-layer costs become non-zero and
+        // (summed) match the aggregate snapshot cost.
+        handle_line(&session, &stats, &format!("{{\"image\": {:?}}}", vec![0.5f32; 36]))
+            .unwrap();
+        let resp = handle_line(&session, &stats, r#"{"cmd": "graph_info"}"#).unwrap();
+        let j = Json::parse(&resp).expect(&resp);
+        assert_eq!(j.get("images").unwrap().as_f64(), Some(1.0));
+        let layers = j.get("layers").unwrap().as_arr().unwrap();
+        let per_layer_sum: f64 = layers
+            .iter()
+            .map(|l| l.get("modeled_energy_uj").unwrap().as_f64().unwrap())
+            .sum();
+        assert!(per_layer_sum > 0.0);
+        let snap = session.snapshot().unwrap();
+        let total = snap.cost.unwrap().e_total() * 1e6;
+        assert!((per_layer_sum - total).abs() < 1e-9 * total.max(1.0), "{per_layer_sum} vs {total}");
     }
 
     #[test]

@@ -23,6 +23,9 @@ const DIE_SEED_STRIDE: u64 = 0x9E37_79B9_7F4A_7C15;
 /// A pool of independently-fabricated simulated dies.
 pub struct AnalogPool {
     dies: Vec<Executor>,
+    /// Per-layer modeled cost of one image (data-independent; the same
+    /// bookings every die makes as it executes).
+    per_layer_image: Vec<LayerCost>,
     /// Images executed (across all dies).
     pub images: u64,
 }
@@ -40,6 +43,7 @@ impl AnalogPool {
         workers: usize,
     ) -> Result<Self> {
         let workers = workers.max(1);
+        let per_layer_image = crate::engine::ideal::network_layer_costs(&model, &params);
         let dies = (0..workers)
             .map(|d| {
                 Executor::new(
@@ -53,7 +57,7 @@ impl AnalogPool {
                 )
             })
             .collect::<Result<Vec<_>>>()?;
-        Ok(Self { dies, images: 0 })
+        Ok(Self { dies, per_layer_image, images: 0 })
     }
 
     pub fn n_dies(&self) -> usize {
@@ -71,6 +75,15 @@ impl AnalogPool {
             total.accumulate(&die.cost);
         }
         total
+    }
+
+    /// Accumulated per-layer modeled cost (the per-image bookings scaled
+    /// by the images executed across all dies).
+    pub fn layer_costs(&self) -> Vec<LayerCost> {
+        self.per_layer_image
+            .iter()
+            .map(|c| c.scaled(self.images))
+            .collect()
     }
 
     /// Run a batch of images, split contiguously across the dies; results

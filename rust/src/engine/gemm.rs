@@ -87,6 +87,70 @@ fn matmul_i32_chunk(a: &[i32], w: &[i32], rows: usize, n_out: usize, out: &mut [
     }
 }
 
+/// Assemble the signed antipodal row factors for a batch of quantized
+/// CHW images lowered through the streaming im2col: every output pixel
+/// of every image becomes one row vector in the macro's physical row
+/// order (padded to `rows` with the mid-rail constant, whose factor is
+/// `2·(M+1)/2 − M = +1`). Returns `(sx [n_img·oh·ow × rows], oh, ow)`.
+///
+/// This is the conv-side batch prep shared by [`conv3x3_batch`] and the
+/// ideal engine backend — the software image of the input shift
+/// register feeding the array one 128b beat at a time (§IV).
+pub fn conv3x3_signed_rows(
+    images_q: &[Vec<u8>],
+    c: usize,
+    h: usize,
+    w: usize,
+    stride: usize,
+    r_in: u32,
+    rows: usize,
+) -> (Vec<i32>, usize, usize) {
+    let m = (1i32 << r_in) - 1;
+    let pad = ((1u32 << r_in) / 2) as u8;
+    let (mut oh, mut ow) = (0usize, 0usize);
+    let mut sx = Vec::new();
+    for xq in images_q {
+        let (row_vecs, ih, iw) = crate::dataflow::im2col::im2col_image(xq, c, h, w, stride, pad);
+        (oh, ow) = (ih, iw);
+        if sx.capacity() == 0 {
+            sx.reserve(images_q.len() * row_vecs.len() * rows);
+        }
+        for rv in &row_vecs {
+            for &q in rv.iter().take(rows) {
+                sx.push(2 * q as i32 - m);
+            }
+            for _ in rv.len()..rows {
+                sx.push(2 * pad as i32 - m);
+            }
+        }
+    }
+    (sx, oh, ow)
+}
+
+/// Whole-batch 3×3 convolution on the macro's integer contract: im2col
+/// row assembly ([`conv3x3_signed_rows`]) followed by one blocked
+/// [`matmul_i32`] pass against the physical weights `[rows × n_out]`.
+/// Returns the signed dot products `[(img,pixel) × n_out]` plus the
+/// output spatial dims — the caller applies the ADC/ABN contract.
+#[allow(clippy::too_many_arguments)]
+pub fn conv3x3_batch(
+    images_q: &[Vec<u8>],
+    c: usize,
+    h: usize,
+    w: usize,
+    stride: usize,
+    r_in: u32,
+    w_phys: &[i32],
+    rows: usize,
+    n_out: usize,
+    workers: usize,
+) -> (Vec<i32>, usize, usize) {
+    let (sx, oh, ow) = conv3x3_signed_rows(images_q, c, h, w, stride, r_in, rows);
+    let n_vec = images_q.len() * oh * ow;
+    let dots = matmul_i32(&sx, w_phys, n_vec, rows, n_out, workers);
+    (dots, oh, ow)
+}
+
 /// `C[v][o] = Σ_k x[v*k_dim + k] * w[o*k_dim + k]` over `n_vec` vectors.
 pub fn rowdot_f64(
     x: &[f64],
@@ -167,6 +231,37 @@ mod tests {
                 let got = matmul_i32(&a, &w, n_vec, rows, n_out, workers);
                 assert_eq!(got, naive_i32(&a, &w, n_vec, rows, n_out), "n_vec={n_vec} workers={workers}");
             }
+        }
+    }
+
+    #[test]
+    fn conv3x3_batch_matches_per_pixel_assembly() {
+        let mut rng = Rng::new(3);
+        let (c, h, w, stride, r_in) = (3usize, 5usize, 5usize, 1usize, 4u32);
+        let rows = 2 * 36; // ceil(3/4) = 1 unit of real rows, padded to 2
+        let n_out = 6;
+        let images_q: Vec<Vec<u8>> = (0..3)
+            .map(|_| (0..c * h * w).map(|_| rng.below(16) as u8).collect())
+            .collect();
+        let w_phys: Vec<i32> =
+            (0..rows * n_out).map(|_| rng.int_range(-15, 15) as i32).collect();
+        let (dots, oh, ow) =
+            conv3x3_batch(&images_q, c, h, w, stride, r_in, &w_phys, rows, n_out, 2);
+        assert_eq!((oh, ow), (5, 5));
+        assert_eq!(dots.len(), images_q.len() * oh * ow * n_out);
+        // Cross-check one pixel against a direct per-row accumulation.
+        let m = (1i32 << r_in) - 1;
+        let pad = ((1u32 << r_in) / 2) as u8;
+        let (rvs, _, _) =
+            crate::dataflow::im2col::im2col_image(&images_q[1], c, h, w, stride, pad);
+        let pix = 7;
+        for o in 0..n_out {
+            let mut acc = 0i32;
+            for r in 0..rows {
+                let q = rvs[pix].get(r).copied().unwrap_or(pad);
+                acc += (2 * q as i32 - m) * w_phys[r * n_out + o];
+            }
+            assert_eq!(dots[(oh * ow + pix) * n_out + o], acc, "o={o}");
         }
     }
 

@@ -18,7 +18,6 @@
 use crate::config::params::MacroParams;
 use crate::coordinator::executor::{apply_pool, post_adc, IdealContract};
 use crate::coordinator::manifest::{Kind, Layer, NetworkModel, Pool};
-use crate::dataflow::im2col;
 use crate::dataflow::pipeline::LayerShape;
 use crate::energy::system::{layer_cost, LayerCost};
 use crate::engine::gemm;
@@ -31,6 +30,8 @@ pub struct BatchIdeal {
     /// Worker threads for the batched matmuls.
     pub workers: usize,
     contracts: Vec<IdealContract>,
+    /// Per-layer dataflow/energy cost of one image (data-independent).
+    per_layer_image: Vec<LayerCost>,
     /// Dataflow/energy cost of one image through the whole network.
     per_image_cost: LayerCost,
     /// Accumulated cost over everything executed.
@@ -70,12 +71,14 @@ impl BatchIdeal {
             .iter()
             .map(|l| IdealContract::new(&params, l))
             .collect();
-        let per_image_cost = network_image_cost(&model, &params);
+        let per_layer_image = network_layer_costs(&model, &params);
+        let per_image_cost = sum_costs(&per_layer_image);
         Ok(Self {
             model,
             params,
             workers: workers.max(1),
             contracts,
+            per_layer_image,
             per_image_cost,
             cost: LayerCost::default(),
             images: 0,
@@ -84,6 +87,15 @@ impl BatchIdeal {
 
     pub fn input_len(&self) -> usize {
         self.model.input_shape.iter().product()
+    }
+
+    /// Accumulated per-layer modeled cost (the per-image bookings scaled
+    /// by the images executed so far) — what the engine probe reports.
+    pub fn layer_costs(&self) -> Vec<LayerCost> {
+        self.per_layer_image
+            .iter()
+            .map(|c| c.scaled(self.images))
+            .collect()
     }
 
     /// Run a batch of images (each in the model's natural input layout)
@@ -130,18 +142,6 @@ fn signed_rows(layer: &Layer, contract: &IdealContract, act: &[f32], out: &mut V
     }
 }
 
-/// Signed factors for one already-quantized macro row vector.
-fn signed_from_quantized(layer: &Layer, contract: &IdealContract, rows_u8: &[u8], out: &mut Vec<i32>) {
-    let m = contract.m as i32;
-    let pad = ((1u32 << layer.cfg.r_in) / 2) as i32;
-    for &q in rows_u8.iter().take(layer.rows) {
-        out.push(2 * q as i32 - m);
-    }
-    for _ in rows_u8.len()..layer.rows {
-        out.push(2 * pad - m);
-    }
-}
-
 fn forward_layer_batch(
     layer: &Layer,
     contract: &IdealContract,
@@ -175,28 +175,30 @@ fn forward_layer_batch(
             let (c, h, w) = (shape[0], shape[1], shape[2]);
             debug_assert_eq!(c, layer.in_features);
             let m_f = ((1u32 << layer.cfg.r_in) - 1) as f32;
-            let pad_val = ((1u32 << layer.cfg.r_in) / 2) as u8;
 
-            // im2col every image; all share (oh, ow).
-            let mut sx = Vec::new();
-            let mut oh = 0;
-            let mut ow = 0;
-            for act in acts {
-                let xq: Vec<u8> = act
-                    .iter()
-                    .map(|&v| (v / layer.a_scale).round().clamp(0.0, m_f) as u8)
-                    .collect();
-                let (row_vecs, ih, iw) =
-                    im2col::im2col_image(&xq, c, h, w, layer.stride, pad_val);
-                oh = ih;
-                ow = iw;
-                for rv in &row_vecs {
-                    signed_from_quantized(layer, contract, rv, &mut sx);
-                }
-            }
+            // Quantize every image, then run the whole batch through the
+            // im2col-backed conv kernel in one blocked matmul pass.
+            let images_q: Vec<Vec<u8>> = acts
+                .iter()
+                .map(|act| {
+                    act.iter()
+                        .map(|&v| (v / layer.a_scale).round().clamp(0.0, m_f) as u8)
+                        .collect()
+                })
+                .collect();
+            let (dots, oh, ow) = gemm::conv3x3_batch(
+                &images_q,
+                c,
+                h,
+                w,
+                layer.stride,
+                layer.cfg.r_in,
+                &layer.w_phys,
+                layer.rows,
+                n_out,
+                workers,
+            );
             let n_pix = oh * ow;
-            let n_vec = n_img * n_pix;
-            let dots = gemm::matmul_i32(&sx, &layer.w_phys, n_vec, layer.rows, n_out, workers);
 
             let mut outs = Vec::with_capacity(n_img);
             let mut out_shape = vec![n_out, oh, ow];
@@ -228,11 +230,13 @@ fn forward_layer_batch(
     }
 }
 
-/// Dataflow/energy cost of one image through the network — the same
-/// bookings the per-image executor makes, computed once up front (they
-/// depend only on the layer shapes, not the data).
-pub fn network_image_cost(model: &NetworkModel, p: &MacroParams) -> LayerCost {
-    let mut total = LayerCost::default();
+/// Per-layer dataflow/energy cost of one image through the network —
+/// the same bookings the per-image executor makes, computed once up
+/// front (they depend only on the layer shapes, not the data). This is
+/// what the engine probe and the server's `graph_info` command report
+/// layer by layer.
+pub fn network_layer_costs(model: &NetworkModel, p: &MacroParams) -> Vec<LayerCost> {
+    let mut costs = Vec::with_capacity(model.layers.len());
     let mut shape = model.input_shape.clone();
     for layer in &model.layers {
         let col_passes = layer.out_features.div_ceil(p.n_blocks());
@@ -244,7 +248,7 @@ pub fn network_image_cost(model: &NetworkModel, p: &MacroParams) -> LayerCost {
                     layer.cfg.r_in,
                     layer.cfg.r_out,
                 );
-                total.accumulate(&layer_cost(p, &ls, &layer.cfg, col_passes, true));
+                costs.push(layer_cost(p, &ls, &layer.cfg, col_passes, true));
                 shape = vec![layer.out_features];
             }
             Kind::Conv3 => {
@@ -258,7 +262,7 @@ pub fn network_image_cost(model: &NetworkModel, p: &MacroParams) -> LayerCost {
                     oh,
                     ow,
                 );
-                total.accumulate(&layer_cost(p, &ls, &layer.cfg, col_passes, true));
+                costs.push(layer_cost(p, &ls, &layer.cfg, col_passes, true));
                 shape = match layer.pool {
                     Pool::Gap => vec![layer.out_features],
                     // Mirrors apply_pool's floor-crop: ph = (oh/2*2)/2.
@@ -268,5 +272,18 @@ pub fn network_image_cost(model: &NetworkModel, p: &MacroParams) -> LayerCost {
             }
         }
     }
+    costs
+}
+
+fn sum_costs(costs: &[LayerCost]) -> LayerCost {
+    let mut total = LayerCost::default();
+    for c in costs {
+        total.accumulate(c);
+    }
     total
+}
+
+/// Dataflow/energy cost of one image through the whole network.
+pub fn network_image_cost(model: &NetworkModel, p: &MacroParams) -> LayerCost {
+    sum_costs(&network_layer_costs(model, p))
 }

@@ -46,6 +46,13 @@ pub trait BatchBackend {
     fn model_cost(&self) -> Option<LayerCost> {
         None
     }
+
+    /// Per-layer breakdown of [`BatchBackend::model_cost`], in network
+    /// layer order, if this backend models the accelerator layer by
+    /// layer (what `{"cmd":"graph_info"}` serves).
+    fn model_layer_costs(&self) -> Option<Vec<LayerCost>> {
+        None
+    }
 }
 
 // Trait impls delegate to the inherent methods (inherent methods win name
@@ -73,6 +80,10 @@ impl BatchBackend for crate::engine::ideal::BatchIdeal {
     fn model_cost(&self) -> Option<LayerCost> {
         Some(self.cost)
     }
+
+    fn model_layer_costs(&self) -> Option<Vec<LayerCost>> {
+        Some(self.layer_costs())
+    }
 }
 
 impl BatchBackend for crate::engine::analog::AnalogPool {
@@ -94,6 +105,10 @@ impl BatchBackend for crate::engine::analog::AnalogPool {
 
     fn model_cost(&self) -> Option<LayerCost> {
         Some(self.cost())
+    }
+
+    fn model_layer_costs(&self) -> Option<Vec<LayerCost>> {
+        Some(self.layer_costs())
     }
 }
 
@@ -140,11 +155,15 @@ pub struct EngineSnapshot {
     pub batches: u64,
     /// Modeled accelerator cost, if the backend models one.
     pub cost: Option<LayerCost>,
+    /// Per-layer breakdown of `cost` in network layer order, if the
+    /// backend models the accelerator layer by layer.
+    pub layer_costs: Option<Vec<LayerCost>>,
 }
 
 struct Probe {
     images: u64,
     cost: Option<LayerCost>,
+    layer_costs: Option<Vec<LayerCost>>,
 }
 
 enum Msg {
@@ -262,6 +281,7 @@ impl EngineHandle {
             images: probe.images,
             batches: self.batches(),
             cost: probe.cost,
+            layer_costs: probe.layer_costs,
         })
     }
 }
@@ -311,7 +331,11 @@ where
 }
 
 fn answer_probe(backend: &dyn BatchBackend, tx: mpsc::Sender<Probe>) {
-    let _ = tx.send(Probe { images: backend.images(), cost: backend.model_cost() });
+    let _ = tx.send(Probe {
+        images: backend.images(),
+        cost: backend.model_cost(),
+        layer_costs: backend.model_layer_costs(),
+    });
 }
 
 fn dispatch_loop(

@@ -11,6 +11,9 @@
 //!   imagine serve --model NAME [--addr A] [--backend ...] [--precision ...]
 //!                 [--supply ...] [--corner ...] [--batch B] [--workers W]
 //!                 [--seed S] [--flush-us T]   line-JSON TCP inference server
+//!                 (protocol v2: image lines plus the info / graph_info /
+//!                 stats / quit commands; graph_info reports the served
+//!                 layer graph with per-layer modeled accelerator cost)
 //!
 //! Both `run` and `serve` construct their backend through the one
 //! `Session` registry (`imagine::api`): the same `--backend analog
@@ -272,6 +275,7 @@ fn usage() {
     println!("  serve: [--addr 127.0.0.1:7878] [--backend auto|ideal|analog|pjrt]");
     println!("         [--precision R[,R_OUT]] [--supply ...] [--corner ...]");
     println!("         [--batch 32] [--workers N] [--seed 42] [--flush-us 500]");
+    println!("         protocol v2 commands: info | graph_info | stats | quit");
 }
 
 fn main() -> Result<()> {

@@ -9,30 +9,30 @@
 //! Fig. 3(b) trend: test error falls as γ precision grows, and the
 //! adaptive swing shifts the curve left by about one bit.
 //!
-//! The digital reconstruction inverts the macro contract exactly:
-//! `dot = Σ (2X−M)·W` is recovered from the code, then the offset-binary
-//! identity `Σ X·W = (dot + M·ΣW)/2` restores the real pre-activation
-//! (the `M·ΣW` constant is what the silicon's ABN offset/bias absorbs).
-//!
-//! Execution goes through the engine layer's batched kernel
-//! ([`crate::engine::gemm::rowdot_f64`]): the whole test set advances one
-//! *layer* at a time, so each layer's weight matrix is streamed once per
-//! sweep point instead of once per image. Noiseless results are
-//! bit-identical to the historical per-image loop (same per-element float
-//! expressions, same ascending-k accumulation); with `noise_lsb > 0` the
-//! RNG draw order is layer-major instead of image-major, so individual
-//! noisy codes differ draw-by-draw while the statistics are unchanged.
+//! Since the layer-graph IR landed, an MLP is just the Dense-only
+//! special case of a [`Graph`](crate::nn::graph::Graph):
+//! [`eval_cim`] builds the trivial graph (`Dense → ReLU → … → Dense`)
+//! and runs it through the one quantize/reconstruct/noise code path in
+//! [`crate::nn::graph`] — the same contract expressions that execute the
+//! conv layers, evaluated whole-batch through
+//! [`gemm::rowdot_f64`](crate::engine::gemm::rowdot_f64). The graph
+//! path preserves the historical dense-only implementation's exact
+//! float expressions, calibration subset sizes and noise draw order, so
+//! noiseless results are bit-identical by construction (the independent
+//! behavioral guard is the naive-reference property test in
+//! `tests/graph_executor.rs`, not the delegation tests).
 
 use crate::config::params::MacroParams;
-use crate::engine::gemm;
 use crate::nn::dataset::Dataset;
+use crate::nn::graph::{eval_graph_workers, Graph};
 use crate::nn::mlp::Mlp;
-use crate::util::rng::Rng;
 
 /// Weight precision used by the mapping (the paper's 4b LeNet setting).
-const R_W: u32 = 4;
+pub const R_W: u32 = crate::nn::graph::R_W;
 
-/// Evaluation configuration for one Fig. 3b grid point.
+/// Evaluation configuration for one Fig. 3b grid point — also the
+/// graph-level default every [`AbnSpec`](crate::nn::layers::AbnSpec)
+/// resolves against.
 #[derive(Clone, Copy, Debug)]
 pub struct EvalCfg {
     /// ADC output precision (4..=8 in the figure).
@@ -61,94 +61,6 @@ impl EvalCfg {
     }
 }
 
-/// Per-layer quantized mapping state.
-struct QLayer {
-    /// Antipodal integer weights [out × in], odd levels in [−15, 15].
-    w_q: Vec<f32>,
-    /// Per-output ΣW (offset-binary correction).
-    sum_w: Vec<f32>,
-    w_scale: f32,
-    a_scale: f32,
-    alpha: f64,
-    gamma: f64,
-}
-
-fn build_qlayers(mlp: &Mlp, data: &Dataset, p: &MacroParams, cfg: &EvalCfg) -> Vec<QLayer> {
-    let m = ((1u32 << cfg.r_in) - 1) as f32;
-    let mx = ((1u32 << R_W) - 1) as f32;
-
-    // Pass 1: activation ranges from the float network.
-    let calib_n = data.n.min(96);
-    let mut act_hi = vec![1e-6f32; mlp.layers.len()];
-    for i in 0..calib_n {
-        let (acts, _) = mlp.forward_all(data.flat(i));
-        for (li, a) in acts.iter().enumerate() {
-            for &v in a.iter() {
-                act_hi[li] = act_hi[li].max(v);
-            }
-        }
-    }
-
-    // Quantize weights and derive per-layer state (γ from dv statistics).
-    let mut qlayers = Vec::new();
-    for (li, layer) in mlp.layers.iter().enumerate() {
-        let w_abs_max = layer.w.iter().fold(0f32, |a, &v| a.max(v.abs())).max(1e-9);
-        let w_scale = w_abs_max / mx;
-        let w_q: Vec<f32> = layer
-            .w
-            .iter()
-            .map(|&v| {
-                let b = ((v / w_scale + mx) / 2.0).round().clamp(0.0, mx);
-                2.0 * b - mx
-            })
-            .collect();
-        let sum_w: Vec<f32> = (0..layer.n_out)
-            .map(|o| w_q[o * layer.n_in..(o + 1) * layer.n_in].iter().sum())
-            .collect();
-
-        let rows = layer.n_in.div_ceil(p.rows_per_unit) * p.rows_per_unit;
-        let alpha = if cfg.adaptive_swing {
-            p.alpha_eff(rows)
-        } else {
-            p.alpha_eff(p.n_rows)
-        };
-        let a_scale = act_hi[li] / m;
-
-        // dv σ estimate over the calibration subset.
-        let dv_unit = alpha * p.supply.vddl
-            / (1u64 << (cfg.r_in + R_W)) as f64;
-        let mut sq = 0f64;
-        let mut cnt = 0usize;
-        for i in 0..calib_n.min(32) {
-            let (acts, _) = mlp.forward_all(data.flat(i));
-            let a = &acts[li];
-            for o in 0..layer.n_out.min(32) {
-                let row = &w_q[o * layer.n_in..(o + 1) * layer.n_in];
-                let mut dot = 0f64;
-                for (j, &av) in a.iter().enumerate() {
-                    let xq = (av / a_scale).round().clamp(0.0, m);
-                    dot += (2.0 * xq - m) as f64 * row[j] as f64;
-                }
-                let dv = dv_unit * dot;
-                sq += dv * dv;
-                cnt += 1;
-            }
-        }
-        let dv_sigma = (sq / cnt.max(1) as f64).sqrt().max(1e-9);
-
-        // γ: fill the ADC range with ~3.5σ, quantized to {1..2^bits}.
-        let ideal = p.alpha_adc() * p.supply.vddh / (3.5 * dv_sigma);
-        let max_gamma = (1u64 << cfg.gamma_bits) as f64;
-        let mut gamma = 1.0;
-        while gamma * 2.0 <= ideal.min(max_gamma) {
-            gamma *= 2.0;
-        }
-        let _ = li;
-        qlayers.push(QLayer { w_q, sum_w, w_scale, a_scale, alpha, gamma });
-    }
-    qlayers
-}
-
 /// Evaluate the MLP through the CIM contract; returns test accuracy.
 /// The dataset advances layer-by-layer through batched dot products.
 pub fn eval_cim(mlp: &Mlp, data: &Dataset, p: &MacroParams, cfg: &EvalCfg) -> f64 {
@@ -164,62 +76,9 @@ pub fn eval_cim_workers(
     cfg: &EvalCfg,
     workers: usize,
 ) -> f64 {
-    let qlayers = build_qlayers(mlp, data, p, cfg);
-    let mut rng = Rng::new(cfg.seed);
-    let m = ((1u32 << cfg.r_in) - 1) as f32;
-    let half = (1u64 << (cfg.r_out - 1)) as f64;
-    let top = (1u64 << cfg.r_out) as f64 - 1.0;
-    let n = data.n;
-
-    // The whole test set as one activation matrix [n × width].
-    let mut cur: Vec<f32> = data.x[..n * data.image_len()].to_vec();
-    for (li, (layer, ql)) in mlp.layers.iter().zip(&qlayers).enumerate() {
-        let lsb = p.adc_lsb(cfg.r_out, ql.gamma);
-        let dv_unit = ql.alpha * p.supply.vddl / (1u64 << (cfg.r_in + R_W)) as f64;
-        // Quantize and recenter every activation to the antipodal grid.
-        let sx: Vec<f64> = cur
-            .iter()
-            .map(|&v| {
-                let xq = (v / ql.a_scale).round().clamp(0.0, m);
-                (2.0 * xq - m) as f64
-            })
-            .collect();
-        let w64: Vec<f64> = ql.w_q.iter().map(|&w| w as f64).collect();
-        let dots = gemm::rowdot_f64(&sx, &w64, n, layer.n_in, layer.n_out, workers);
-
-        let mut out = vec![0f32; n * layer.n_out];
-        for i in 0..n {
-            for o in 0..layer.n_out {
-                // Macro + ADC (Eq. 7), with equivalent noise.
-                let dv = dv_unit * dots[i * layer.n_out + o];
-                let mut code = half + dv / lsb;
-                if cfg.noise_lsb > 0.0 {
-                    code += rng.normal(0.0, cfg.noise_lsb * (1.0 + ql.gamma / 16.0));
-                }
-                let code = code.floor().clamp(0.0, top);
-                // Digital reconstruction: invert Eq. 7, undo offset-binary.
-                let dot_rec = (code - half) * lsb / dv_unit;
-                let xw = (dot_rec as f32 + m * ql.sum_w[o]) / 2.0;
-                let mut v = xw * ql.a_scale * ql.w_scale + layer.b[o];
-                if li + 1 < mlp.layers.len() {
-                    v = v.max(0.0);
-                }
-                out[i * layer.n_out + o] = v;
-            }
-        }
-        cur = out;
-    }
-
-    let n_out = mlp.layers.last().map(|l| l.n_out).unwrap_or(1);
-    let mut correct = 0usize;
-    for i in 0..n {
-        let logits = &cur[i * n_out..(i + 1) * n_out];
-        let pred = crate::util::stats::argmax_f32(logits);
-        if pred == data.y[i] as usize {
-            correct += 1;
-        }
-    }
-    correct as f64 / n as f64
+    let graph = Graph::from_mlp("mlp", mlp);
+    eval_graph_workers(&graph, data, p, cfg, workers)
+        .expect("Dense-only graph evaluation cannot fail on a well-formed MLP/dataset pair")
 }
 
 #[cfg(test)]
@@ -313,6 +172,25 @@ mod tests {
             let a_f = eval_cim(&mlp, &test, &p, &fixed);
             let a_a = eval_cim(&mlp, &test, &p, &adapt);
             assert!(a_a + 0.02 >= a_f, "gb={gb}: fixed={a_f} adaptive={a_a}");
+        }
+    }
+
+    #[test]
+    fn graph_delegation_is_exact() {
+        // eval_cim is the Dense-only graph: evaluating the hand-built
+        // graph directly must give the identical accuracy (one quantize/
+        // reconstruct/noise code path, not two).
+        let (mlp, test) = trained();
+        let p = MacroParams::paper();
+        for cfg in [
+            EvalCfg { noise_lsb: 0.0, ..EvalCfg::new(8, 5, true) },
+            EvalCfg::new(5, 2, false), // with noise: same seed, same draws
+        ] {
+            let via_mlp = eval_cim(&mlp, &test, &p, &cfg);
+            let graph = crate::nn::graph::Graph::from_mlp("mlp", &mlp);
+            let via_graph =
+                crate::nn::graph::eval_graph(&graph, &test, &p, &cfg).unwrap();
+            assert_eq!(via_mlp, via_graph);
         }
     }
 }

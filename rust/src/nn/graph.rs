@@ -1,0 +1,1028 @@
+//! The CNN layer-graph IR and its batched CIM executor.
+//!
+//! A [`Graph`] is a typed sequence of [`Node`]s — `Conv3x3`, `Dense`,
+//! `Pool2x2`, `Relu`, `Flatten` — with per-layer CIM mapping overrides
+//! ([`AbnSpec`](crate::nn::layers::AbnSpec)). It is the nn-side
+//! generalization of the Fig. 3(b) MLP
+//! study to the paper's actual workload class: CNNs lowered onto the
+//! 1152×256 macro through the §IV streaming im2col.
+//!
+//! Three things happen here:
+//!
+//! 1. **Mapping** ([`MappedGraph::build`]): calibrate activation ranges
+//!    on a data subset, quantize weights to 4b antipodal levels, permute
+//!    conv kernels into the macro's physical row order
+//!    ([`im2col::row_order`], padding rows carry zero weight), derive the
+//!    channel-adaptive DPL swing α(C_in) and the ABN gain γ from the DP
+//!    voltage statistics — the same procedure `cim_eval` has always
+//!    applied to dense layers, now the crate's single quantize path.
+//! 2. **Batched execution** ([`MappedGraph::forward_batch`]): the whole
+//!    batch advances one node at a time; `Conv3x3` lowers every im2col
+//!    patch of every image into one signed-factor matrix and runs it
+//!    through [`gemm::rowdot_f64`], then applies the macro contract per
+//!    output (Eq. 7 code, equivalent output noise, offset-binary
+//!    reconstruction `Σ X·W = (dot + M·ΣW)/2`, ABN gain/offset).
+//!    Dense nodes are the single-pixel special case — bit-identical to
+//!    the historical `cim_eval` path.
+//! 3. **Lowering** ([`Graph::lower`]): emit a physical
+//!    [`NetworkModel`] (integer antipodal weights in macro row order, 5b
+//!    ABN offset codes absorbing the offset-binary constant and bias,
+//!    post-ADC gain) so the same graph runs through the
+//!    [`Session`](crate::api::Session) facade on the ideal/engine/analog
+//!    backends.
+
+use crate::config::params::MacroParams;
+use crate::coordinator::manifest::{Kind, Layer, NetworkModel, Pool};
+use crate::dataflow::im2col;
+use crate::engine::gemm;
+use crate::nn::cim_eval::EvalCfg;
+use crate::nn::dataset::Dataset;
+use crate::nn::layers::{chw, Conv3x3, DenseNode, Node, PoolKind};
+use crate::nn::mlp::Mlp;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{bail, ensure, Context, Result};
+
+/// Weight precision of the CIM mapping (the paper's 4b setting).
+pub const R_W: u32 = 4;
+
+/// A feed-forward layer graph.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub name: String,
+    /// Natural input shape (`[features]` or `[c, h, w]`).
+    pub input_shape: Vec<usize>,
+    pub nodes: Vec<Node>,
+}
+
+impl Graph {
+    pub fn new(name: impl Into<String>, input_shape: Vec<usize>) -> Graph {
+        Graph { name: name.into(), input_shape, nodes: Vec::new() }
+    }
+
+    /// Builder-style node append.
+    pub fn with(mut self, node: Node) -> Graph {
+        self.nodes.push(node);
+        self
+    }
+
+    /// An MLP as a trivial graph: Dense nodes with ReLU between them —
+    /// the special case `cim_eval` evaluates.
+    pub fn from_mlp(name: impl Into<String>, mlp: &Mlp) -> Graph {
+        let n_in = mlp.layers.first().map(|l| l.n_in).unwrap_or(0);
+        let mut graph = Graph::new(name, vec![n_in]);
+        let n_layers = mlp.layers.len();
+        for (li, layer) in mlp.layers.iter().enumerate() {
+            graph.nodes.push(Node::Dense(DenseNode::new(layer.clone())));
+            if li + 1 < n_layers {
+                graph.nodes.push(Node::Relu);
+            }
+        }
+        graph
+    }
+
+    /// Number of macro-mapped (conv/dense) nodes.
+    pub fn n_cim(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_cim()).count()
+    }
+
+    /// Shape entering every node plus the final output shape; fails on
+    /// inconsistent wiring.
+    pub fn shapes(&self) -> Result<Vec<Vec<usize>>> {
+        let mut shapes = vec![self.input_shape.clone()];
+        for (i, node) in self.nodes.iter().enumerate() {
+            let next = node
+                .out_shape(shapes.last().unwrap())
+                .with_context(|| format!("node {i} ({})", node.kind()))?;
+            shapes.push(next);
+        }
+        Ok(shapes)
+    }
+
+    /// Final output shape.
+    pub fn output_shape(&self) -> Result<Vec<usize>> {
+        Ok(self.shapes()?.pop().unwrap())
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Float forward through the first `n_nodes` nodes (the calibration
+    /// / feature-extraction path).
+    pub fn forward_float_prefix(&self, x: &[f32], n_nodes: usize) -> Result<Vec<f32>> {
+        ensure!(
+            x.len() == self.input_len(),
+            "input length {} != graph input {}",
+            x.len(),
+            self.input_len()
+        );
+        let mut act = x.to_vec();
+        let mut shape = self.input_shape.clone();
+        for node in self.nodes.iter().take(n_nodes) {
+            act = node.forward_float(&act, &shape)?;
+            shape = node.out_shape(&shape)?;
+        }
+        Ok(act)
+    }
+
+    /// Full float forward (no quantization) — the reference the CIM
+    /// mapping is calibrated against.
+    pub fn forward_float(&self, x: &[f32]) -> Result<Vec<f32>> {
+        self.forward_float_prefix(x, self.nodes.len())
+    }
+
+    /// Lower to a physical [`NetworkModel`] runnable by every
+    /// [`Session`](crate::api::Session) backend: calibrates/maps on
+    /// `calib`, then emits integer antipodal weights in macro row order
+    /// (padding rows store +1 against the +1 mid-rail input factor —
+    /// zero is not a storable level), a per-channel 5b ABN offset β
+    /// absorbing the offset-binary `M·ΣW` constant, the padding-row
+    /// constant and the float bias, and the post-ADC gain that restores
+    /// real-valued activations. ReLU and
+    /// Pool2x2 nodes directly following a macro node fuse into its
+    /// manifest layer (the accelerator's post-ADC datapath); standalone
+    /// digital nodes in other positions cannot be expressed and fail.
+    pub fn lower(&self, calib: &Dataset, p: &MacroParams, cfg: &EvalCfg) -> Result<NetworkModel> {
+        let mapped = MappedGraph::build(self, calib, p, cfg)?;
+        let mut layers = Vec::new();
+        let mut qi = 0usize;
+        let mut i = 0usize;
+        while i < self.nodes.len() {
+            match &self.nodes[i] {
+                Node::Flatten => {}
+                Node::Conv3x3(_) | Node::Dense(_) => {
+                    let kind = match &self.nodes[i] {
+                        Node::Conv3x3(_) => Kind::Conv3,
+                        _ => Kind::Dense,
+                    };
+                    let mut relu = false;
+                    let mut pool = Pool::None;
+                    if matches!(self.nodes.get(i + 1), Some(Node::Relu)) {
+                        relu = true;
+                        i += 1;
+                    }
+                    if kind == Kind::Conv3 {
+                        if let Some(Node::Pool2x2(k)) = self.nodes.get(i + 1) {
+                            pool = k.to_manifest();
+                            i += 1;
+                        }
+                    }
+                    let name = format!(
+                        "{}{}",
+                        if kind == Kind::Conv3 { "conv" } else { "fc" },
+                        qi
+                    );
+                    layers.push(lower_cim_node(&mapped.cim[qi], kind, relu, pool, name, p)?);
+                    qi += 1;
+                }
+                Node::Relu => bail!(
+                    "node {i}: standalone ReLU (not directly after a conv/dense node) \
+                     cannot be lowered to the manifest executor"
+                ),
+                Node::Pool2x2(_) => bail!(
+                    "node {i}: Pool2x2 must directly follow a Conv3x3 (+ReLU) to lower \
+                     onto the conv layer's post-ADC pool stage"
+                ),
+            }
+            i += 1;
+        }
+        Ok(NetworkModel {
+            name: self.name.clone(),
+            input_shape: self.input_shape.clone(),
+            layers,
+            metrics: Json::Null,
+        })
+    }
+}
+
+/// What a macro-mapped node executes as: dense single-pixel or conv
+/// over the im2col patch grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CimKind {
+    Dense { n_in: usize, n_out: usize },
+    Conv { c_in: usize, c_out: usize },
+}
+
+/// Quantized per-node mapping state — the generalization of the QLayer
+/// `cim_eval` builds for dense layers.
+#[derive(Clone, Debug)]
+pub struct QNode {
+    pub kind: CimKind,
+    /// gemm reduction length: dense = `n_in` (no physical padding
+    /// needed), conv = DP units × 36 macro rows (padding rows carry
+    /// zero weight).
+    pub rows: usize,
+    /// Row count the adaptive swing sees (padded to DP-unit multiples).
+    pub alpha_rows: usize,
+    /// Quantized antipodal weights `[n_out × rows]` (macro row order for
+    /// conv; odd levels in [−15, 15], exactly representable in f32).
+    pub w_q: Vec<f32>,
+    /// Per-output ΣW (offset-binary reconstruction constant).
+    pub sum_w: Vec<f32>,
+    pub bias: Vec<f32>,
+    pub w_scale: f32,
+    pub a_scale: f32,
+    /// Effective DPL swing α for this node's connected rows.
+    pub alpha: f64,
+    /// ABN gain chosen from the DP voltage statistics.
+    pub gamma: f64,
+    /// Resolved per-node CIM configuration.
+    pub cfg: EvalCfg,
+}
+
+impl QNode {
+    pub fn n_out(&self) -> usize {
+        match self.kind {
+            CimKind::Dense { n_out, .. } => n_out,
+            CimKind::Conv { c_out, .. } => c_out,
+        }
+    }
+}
+
+/// One executable step of a mapped graph.
+#[derive(Clone, Debug)]
+enum ExecOp {
+    Cim(usize),
+    Relu,
+    Pool(PoolKind),
+    Flatten,
+}
+
+/// A graph bound to the macro contract: quantized weights, per-node
+/// mapping state and the shape schedule — ready for batched execution.
+#[derive(Clone, Debug)]
+pub struct MappedGraph {
+    pub name: String,
+    pub input_shape: Vec<usize>,
+    /// Macro-mapped nodes in execution order.
+    pub cim: Vec<QNode>,
+    ops: Vec<ExecOp>,
+    /// `shapes[i]` enters op `i`; `shapes.last()` is the output shape.
+    shapes: Vec<Vec<usize>>,
+    /// Graph-level configuration (seed and noise for execution).
+    pub cfg: EvalCfg,
+    /// Macro parameters the mapping was calibrated against (supply and
+    /// ADC constants are needed again at execution time).
+    pub params: MacroParams,
+}
+
+impl MappedGraph {
+    /// Calibrate and quantize `graph` on (a subset of) `calib`.
+    pub fn build(
+        graph: &Graph,
+        calib: &Dataset,
+        p: &MacroParams,
+        cfg: &EvalCfg,
+    ) -> Result<MappedGraph> {
+        let shapes = graph.shapes()?;
+        ensure!(calib.n > 0, "empty calibration set");
+        ensure!(
+            calib.image_len() == graph.input_len(),
+            "calibration image length {} != graph input {}",
+            calib.image_len(),
+            graph.input_len()
+        );
+
+        // Pass 1: activation ranges entering each macro node, plus the
+        // first few activations stashed for the DP-voltage statistics.
+        let calib_n = calib.n.min(96);
+        let n_keep = calib_n.min(32);
+        let n_cim = graph.n_cim();
+        let mut act_hi = vec![1e-6f32; n_cim];
+        let mut stash: Vec<Vec<Vec<f32>>> = vec![Vec::new(); n_cim];
+        for i in 0..calib_n {
+            let mut act = calib.image(i).to_vec();
+            let mut ci = 0usize;
+            for (ni, node) in graph.nodes.iter().enumerate() {
+                if node.is_cim() {
+                    for &v in &act {
+                        act_hi[ci] = act_hi[ci].max(v);
+                    }
+                    if i < n_keep {
+                        stash[ci].push(act.clone());
+                    }
+                    ci += 1;
+                }
+                act = node.forward_float(&act, &shapes[ni])?;
+            }
+        }
+
+        let mut cim = Vec::with_capacity(n_cim);
+        let mut ops = Vec::with_capacity(graph.nodes.len());
+        let mut ci = 0usize;
+        for (ni, node) in graph.nodes.iter().enumerate() {
+            match node {
+                Node::Dense(d) => {
+                    let node_cfg = d.abn.resolve(cfg);
+                    cim.push(map_dense(d, &node_cfg, act_hi[ci], &stash[ci], p));
+                    ops.push(ExecOp::Cim(ci));
+                    ci += 1;
+                }
+                Node::Conv3x3(c) => {
+                    let node_cfg = c.abn.resolve(cfg);
+                    let [_, h, w] = chw(&shapes[ni])?;
+                    cim.push(map_conv(c, &node_cfg, act_hi[ci], &stash[ci], h, w, p));
+                    ops.push(ExecOp::Cim(ci));
+                    ci += 1;
+                }
+                Node::Relu => ops.push(ExecOp::Relu),
+                Node::Pool2x2(k) => ops.push(ExecOp::Pool(*k)),
+                Node::Flatten => ops.push(ExecOp::Flatten),
+            }
+        }
+        Ok(MappedGraph {
+            name: graph.name.clone(),
+            input_shape: graph.input_shape.clone(),
+            cim,
+            ops,
+            shapes,
+            cfg: *cfg,
+            params: p.clone(),
+        })
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.shapes.last().unwrap().iter().product()
+    }
+
+    /// Run a whole batch (flat `[n × input_len]`) through the quantized
+    /// graph; returns flat `[n × output_len]` outputs.
+    ///
+    /// Each call re-seeds the equivalent-noise RNG from `cfg.seed` (one
+    /// call = one reproducible evaluation). When evaluating a set in
+    /// chunks, use [`MappedGraph::forward_flat_rng`] with one RNG
+    /// threaded across the calls so noise draws stay independent
+    /// between chunks.
+    pub fn forward_flat(&self, x: &[f32], n: usize, workers: usize) -> Result<Vec<f32>> {
+        self.forward_flat_rng(x, n, workers, &mut Rng::new(self.cfg.seed))
+    }
+
+    /// [`MappedGraph::forward_flat`] with a caller-owned noise RNG.
+    pub fn forward_flat_rng(
+        &self,
+        x: &[f32],
+        n: usize,
+        workers: usize,
+        rng: &mut Rng,
+    ) -> Result<Vec<f32>> {
+        ensure!(
+            x.len() == n * self.input_len(),
+            "batch length {} != {n} × {}",
+            x.len(),
+            self.input_len()
+        );
+        let mut cur = x.to_vec();
+        for (oi, op) in self.ops.iter().enumerate() {
+            let in_shape = &self.shapes[oi];
+            let out_shape = &self.shapes[oi + 1];
+            cur = match op {
+                ExecOp::Relu => {
+                    cur.iter_mut().for_each(|v| *v = v.max(0.0));
+                    cur
+                }
+                ExecOp::Flatten => cur,
+                ExecOp::Pool(kind) => {
+                    let [c, h, w] = chw(in_shape)?;
+                    let in_len = c * h * w;
+                    let out_len: usize = out_shape.iter().product();
+                    let mut next = Vec::with_capacity(n * out_len);
+                    for img in cur.chunks(in_len) {
+                        next.extend(crate::coordinator::executor::apply_pool(
+                            img,
+                            c,
+                            h,
+                            w,
+                            kind.to_manifest(),
+                        ).0);
+                    }
+                    next
+                }
+                ExecOp::Cim(qi) => {
+                    let q = &self.cim[*qi];
+                    match q.kind {
+                        CimKind::Dense { .. } => {
+                            forward_dense(q, &self.params, &cur, n, workers, rng)
+                        }
+                        CimKind::Conv { .. } => {
+                            let [c, h, w] = chw(in_shape)?;
+                            forward_conv(q, &self.params, &cur, n, c, h, w, workers, rng)
+                        }
+                    }
+                }
+            };
+        }
+        Ok(cur)
+    }
+
+    /// [`MappedGraph::forward_flat`] over per-image vectors.
+    pub fn forward_batch(&self, images: &[Vec<f32>], workers: usize) -> Result<Vec<Vec<f32>>> {
+        let len = self.input_len();
+        let mut flat = Vec::with_capacity(images.len() * len);
+        for (i, im) in images.iter().enumerate() {
+            ensure!(im.len() == len, "image {i}: expected {len} values, got {}", im.len());
+            flat.extend_from_slice(im);
+        }
+        let out = self.forward_flat(&flat, images.len(), workers)?;
+        let out_len = self.output_len();
+        Ok(out.chunks(out_len).map(|c| c.to_vec()).collect())
+    }
+}
+
+/// Quantize a float weight matrix `[n_out × k]` to antipodal `R_W`-bit
+/// levels; returns (w_q, w_scale).
+fn quantize_weights(w: &[f32], n_out: usize, k: usize) -> (Vec<f32>, f32) {
+    let mx = ((1u32 << R_W) - 1) as f32;
+    let w_abs_max = w.iter().fold(0f32, |a, &v| a.max(v.abs())).max(1e-9);
+    let w_scale = w_abs_max / mx;
+    let w_q: Vec<f32> = w
+        .iter()
+        .map(|&v| {
+            let b = ((v / w_scale + mx) / 2.0).round().clamp(0.0, mx);
+            2.0 * b - mx
+        })
+        .collect();
+    debug_assert_eq!(w_q.len(), n_out * k);
+    (w_q, w_scale)
+}
+
+/// Quantize an ideal ABN gain to the hardware's power-of-two levels in
+/// {1 .. 2^gamma_bits}.
+fn quantize_gamma(ideal: f64, gamma_bits: u32) -> f64 {
+    let max_gamma = (1u64 << gamma_bits) as f64;
+    let mut gamma = 1.0;
+    while gamma * 2.0 <= ideal.min(max_gamma) {
+        gamma *= 2.0;
+    }
+    gamma
+}
+
+/// ABN gain from the DP voltage σ: fill the ADC range with ~3.5σ,
+/// quantized to powers of two in {1 .. 2^gamma_bits}.
+fn gamma_from_sigma(dv_sigma: f64, cfg: &EvalCfg, p: &MacroParams) -> f64 {
+    quantize_gamma(p.alpha_adc() * p.supply.vddh / (3.5 * dv_sigma), cfg.gamma_bits)
+}
+
+fn map_dense(
+    d: &DenseNode,
+    cfg: &EvalCfg,
+    act_hi: f32,
+    stash: &[Vec<f32>],
+    p: &MacroParams,
+) -> QNode {
+    let layer = &d.dense;
+    let m = ((1u32 << cfg.r_in) - 1) as f32;
+    let (w_q, w_scale) = quantize_weights(&layer.w, layer.n_out, layer.n_in);
+    let sum_w: Vec<f32> = (0..layer.n_out)
+        .map(|o| w_q[o * layer.n_in..(o + 1) * layer.n_in].iter().sum())
+        .collect();
+
+    let alpha_rows = layer.n_in.div_ceil(p.rows_per_unit) * p.rows_per_unit;
+    let alpha = if cfg.adaptive_swing {
+        p.alpha_eff(alpha_rows)
+    } else {
+        p.alpha_eff(p.n_rows)
+    };
+    let a_scale = act_hi / m;
+
+    // DP voltage σ over the stashed calibration activations — the same
+    // loop (image/channel caps, natural ascending-k accumulation) the
+    // historical cim_eval used, so MLP mappings stay bit-identical.
+    let dv_unit = alpha * p.supply.vddl / (1u64 << (cfg.r_in + R_W)) as f64;
+    let mut sq = 0f64;
+    let mut cnt = 0usize;
+    for a in stash.iter().take(32) {
+        for o in 0..layer.n_out.min(32) {
+            let row = &w_q[o * layer.n_in..(o + 1) * layer.n_in];
+            let mut dot = 0f64;
+            for (j, &av) in a.iter().enumerate() {
+                let xq = (av / a_scale).round().clamp(0.0, m);
+                dot += (2.0 * xq - m) as f64 * row[j] as f64;
+            }
+            let dv = dv_unit * dot;
+            sq += dv * dv;
+            cnt += 1;
+        }
+    }
+    let dv_sigma = (sq / cnt.max(1) as f64).sqrt().max(1e-9);
+
+    QNode {
+        kind: CimKind::Dense { n_in: layer.n_in, n_out: layer.n_out },
+        rows: layer.n_in,
+        alpha_rows,
+        w_q,
+        sum_w,
+        bias: layer.b.clone(),
+        w_scale,
+        a_scale,
+        alpha,
+        gamma: gamma_from_sigma(dv_sigma, cfg, p),
+        cfg: *cfg,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn map_conv(
+    c: &Conv3x3,
+    cfg: &EvalCfg,
+    act_hi: f32,
+    stash: &[Vec<f32>],
+    h: usize,
+    w: usize,
+    p: &MacroParams,
+) -> QNode {
+    let m = ((1u32 << cfg.r_in) - 1) as f32;
+    let (w_nat, w_scale) = quantize_weights(&c.w, c.c_out, 9 * c.c_in);
+
+    // Permute each output's kernel into the macro's physical row order;
+    // padding rows (units not filled by real channels) carry zero weight
+    // so the mid-rail padding input contributes nothing.
+    let order = im2col::row_order(c.c_in);
+    let rows = order.len();
+    let mut w_q = vec![0f32; c.c_out * rows];
+    for oc in 0..c.c_out {
+        let nat = &w_nat[oc * 9 * c.c_in..(oc + 1) * 9 * c.c_in];
+        for (r, o) in order.iter().enumerate() {
+            if let Some(f) = o {
+                w_q[oc * rows + r] = nat[*f];
+            }
+        }
+    }
+    let sum_w: Vec<f32> = (0..c.c_out)
+        .map(|oc| w_q[oc * rows..(oc + 1) * rows].iter().sum())
+        .collect();
+
+    let alpha = if cfg.adaptive_swing {
+        p.alpha_eff(rows)
+    } else {
+        p.alpha_eff(p.n_rows)
+    };
+    let a_scale = act_hi / m;
+
+    // DP voltage σ over a deterministic subset: a few calibration
+    // images, output pixels spread over the whole flattened index range
+    // (stride (n_pix−1)/15 is generally coprime with the row width, so
+    // the samples sweep columns instead of collapsing onto one border
+    // column when the width divides a power-of-two stride), the first
+    // output channels.
+    let dv_unit = alpha * p.supply.vddl / (1u64 << (cfg.r_in + R_W)) as f64;
+    let pad_val = ((1u32 << cfg.r_in) / 2) as u8;
+    let n_pix = h * w;
+    let n_samples = n_pix.min(16);
+    let mut sq = 0f64;
+    let mut cnt = 0usize;
+    for a in stash.iter().take(8) {
+        let xq: Vec<u8> = a
+            .iter()
+            .map(|&v| (v / a_scale).round().clamp(0.0, m) as u8)
+            .collect();
+        let (row_vecs, _, _) = im2col::im2col_image(&xq, c.c_in, h, w, 1, pad_val);
+        for s in 0..n_samples {
+            let pix = if n_samples > 1 { s * (n_pix - 1) / (n_samples - 1) } else { 0 };
+            let rv = &row_vecs[pix];
+            for oc in 0..c.c_out.min(32) {
+                let wrow = &w_q[oc * rows..(oc + 1) * rows];
+                let mut dot = 0f64;
+                for (r, &q) in rv.iter().enumerate() {
+                    dot += (2.0 * q as f32 - m) as f64 * wrow[r] as f64;
+                }
+                let dv = dv_unit * dot;
+                sq += dv * dv;
+                cnt += 1;
+            }
+        }
+    }
+    let dv_sigma = (sq / cnt.max(1) as f64).sqrt().max(1e-9);
+
+    QNode {
+        kind: CimKind::Conv { c_in: c.c_in, c_out: c.c_out },
+        rows,
+        alpha_rows: rows,
+        w_q,
+        sum_w,
+        bias: c.b.clone(),
+        w_scale,
+        a_scale,
+        alpha,
+        gamma: gamma_from_sigma(dv_sigma, cfg, p),
+        cfg: *cfg,
+    }
+}
+
+/// Macro + ADC + digital reconstruction for one signed dot product —
+/// the crate's single quantize/reconstruct/noise expression (Eq. 7
+/// forward, equivalent output noise, offset-binary inversion, ABN
+/// gain/offset and bias).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn macro_contract(
+    q: &QNode,
+    dot: f64,
+    o: usize,
+    dv_unit: f64,
+    lsb: f64,
+    half: f64,
+    top: f64,
+    m: f32,
+    rng: &mut Rng,
+) -> f32 {
+    let dv = dv_unit * dot;
+    let mut code = half + dv / lsb;
+    if q.cfg.noise_lsb > 0.0 {
+        code += rng.normal(0.0, q.cfg.noise_lsb * (1.0 + q.gamma / 16.0));
+    }
+    let code = code.floor().clamp(0.0, top);
+    let dot_rec = (code - half) * lsb / dv_unit;
+    let xw = (dot_rec as f32 + m * q.sum_w[o]) / 2.0;
+    xw * q.a_scale * q.w_scale + q.bias[o]
+}
+
+/// Batched dense node: quantize + recenter the whole batch, one
+/// [`gemm::rowdot_f64`] pass, then the macro contract per output.
+fn forward_dense(
+    q: &QNode,
+    p: &MacroParams,
+    cur: &[f32],
+    n: usize,
+    workers: usize,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    let (n_in, n_out) = match q.kind {
+        CimKind::Dense { n_in, n_out } => (n_in, n_out),
+        _ => unreachable!(),
+    };
+    let m = ((1u32 << q.cfg.r_in) - 1) as f32;
+    let half = (1u64 << (q.cfg.r_out - 1)) as f64;
+    let top = (1u64 << q.cfg.r_out) as f64 - 1.0;
+    let lsb = p.adc_lsb(q.cfg.r_out, q.gamma);
+    let dv_unit = q.alpha * p.supply.vddl / (1u64 << (q.cfg.r_in + R_W)) as f64;
+
+    let sx: Vec<f64> = cur
+        .iter()
+        .map(|&v| {
+            let xq = (v / q.a_scale).round().clamp(0.0, m);
+            (2.0 * xq - m) as f64
+        })
+        .collect();
+    let w64: Vec<f64> = q.w_q.iter().map(|&w| w as f64).collect();
+    let dots = gemm::rowdot_f64(&sx, &w64, n, n_in, n_out, workers);
+
+    let mut out = vec![0f32; n * n_out];
+    for i in 0..n {
+        for o in 0..n_out {
+            out[i * n_out + o] =
+                macro_contract(q, dots[i * n_out + o], o, dv_unit, lsb, half, top, m, rng);
+        }
+    }
+    out
+}
+
+/// Batched conv node: every im2col patch of every image becomes one row
+/// of a signed-factor matrix; a single whole-batch gemm produces all the
+/// dot products, then the macro contract maps them to output pixels.
+#[allow(clippy::too_many_arguments)]
+fn forward_conv(
+    q: &QNode,
+    p: &MacroParams,
+    cur: &[f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    workers: usize,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let c_out = q.n_out();
+    let m = ((1u32 << q.cfg.r_in) - 1) as f32;
+    let half = (1u64 << (q.cfg.r_out - 1)) as f64;
+    let top = (1u64 << q.cfg.r_out) as f64 - 1.0;
+    let lsb = p.adc_lsb(q.cfg.r_out, q.gamma);
+    let dv_unit = q.alpha * p.supply.vddl / (1u64 << (q.cfg.r_in + R_W)) as f64;
+
+    // One shared im2col row assembly with the engine backend (the signed
+    // factors are exact small integers, so the i32 → f64 cast is lossless
+    // and both paths stay in lock-step on the row-order convention).
+    let in_len = c * h * w;
+    let n_pix = h * w;
+    let images_q: Vec<Vec<u8>> = cur
+        .chunks(in_len)
+        .map(|img| {
+            img.iter()
+                .map(|&v| (v / q.a_scale).round().clamp(0.0, m) as u8)
+                .collect()
+        })
+        .collect();
+    let (sx_i, oh, ow) = gemm::conv3x3_signed_rows(&images_q, c, h, w, 1, q.cfg.r_in, q.rows);
+    debug_assert_eq!((oh, ow), (h, w));
+    let sx: Vec<f64> = sx_i.iter().map(|&v| v as f64).collect();
+    let w64: Vec<f64> = q.w_q.iter().map(|&w| w as f64).collect();
+    let dots = gemm::rowdot_f64(&sx, &w64, n * n_pix, q.rows, c_out, workers);
+
+    let mut out = vec![0f32; n * c_out * n_pix];
+    for img in 0..n {
+        let fmap = &mut out[img * c_out * n_pix..(img + 1) * c_out * n_pix];
+        for pix in 0..n_pix {
+            let d = &dots[(img * n_pix + pix) * c_out..(img * n_pix + pix + 1) * c_out];
+            for (oc, &dot) in d.iter().enumerate() {
+                fmap[oc * n_pix + pix] =
+                    macro_contract(q, dot, oc, dv_unit, lsb, half, top, m, rng);
+            }
+        }
+    }
+    out
+}
+
+/// Evaluate a graph on a dataset through the CIM mapping; returns test
+/// accuracy (the graph-level generalization of `cim_eval::eval_cim`).
+pub fn eval_graph(graph: &Graph, data: &Dataset, p: &MacroParams, cfg: &EvalCfg) -> Result<f64> {
+    eval_graph_workers(graph, data, p, cfg, crate::engine::default_workers())
+}
+
+/// [`eval_graph`] with an explicit worker count for the batched matmuls.
+pub fn eval_graph_workers(
+    graph: &Graph,
+    data: &Dataset,
+    p: &MacroParams,
+    cfg: &EvalCfg,
+    workers: usize,
+) -> Result<f64> {
+    let mapped = MappedGraph::build(graph, data, p, cfg)?;
+    let n = data.n;
+    let out = mapped.forward_flat(&data.x[..n * data.image_len()], n, workers)?;
+    let n_out = mapped.output_len();
+    let mut correct = 0usize;
+    for i in 0..n {
+        let logits = &out[i * n_out..(i + 1) * n_out];
+        if crate::util::stats::argmax_f32(logits) == data.y[i] as usize {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / n as f64)
+}
+
+/// Emit one physical manifest layer from a mapped node. The post-ADC
+/// gain is chosen so `(code − half)·out_gain` reproduces the real-valued
+/// `a_scale·w_scale·ΣX·W` pre-activation, and the per-channel 5b ABN
+/// offset absorbs the offset-binary `M·ΣW` constant plus the float bias
+/// (quantized to the silicon's ±16 codes of 1.875 mV — the lossy part of
+/// the lowering, exactly as on the die).
+fn lower_cim_node(
+    q: &QNode,
+    kind: Kind,
+    relu: bool,
+    pool: Pool,
+    name: String,
+    p: &MacroParams,
+) -> Result<Layer> {
+    let (in_features, out_features) = match q.kind {
+        CimKind::Dense { n_in, n_out } => (n_in, n_out),
+        CimKind::Conv { c_in, c_out } => (c_in, c_out),
+    };
+    // Physical rows: conv nodes are already in padded macro row order;
+    // dense nodes pad up to whole DP units. Padding rows carry a +1
+    // weight against the +1 mid-rail input factor (0 is not an
+    // antipodal level — the analog bitcells cannot store it); their
+    // constant `n_pad` contribution to every dot product is absorbed by
+    // the ABN offset below, exactly the python compile path's
+    // convention.
+    let rows_phys = match q.kind {
+        CimKind::Conv { .. } => q.rows,
+        CimKind::Dense { .. } => q.rows.div_ceil(p.rows_per_unit) * p.rows_per_unit,
+    };
+    ensure!(
+        rows_phys <= p.n_rows,
+        "{name}: {rows_phys} rows exceed the {}-row macro (split the layer)",
+        p.n_rows
+    );
+    let real_rows = match q.kind {
+        CimKind::Dense { n_in, .. } => n_in,
+        CimKind::Conv { c_in, .. } => 9 * c_in,
+    };
+    let n_pad = (rows_phys - real_rows) as f64;
+    let mut w_phys = vec![1i32; rows_phys * out_features];
+    for o in 0..out_features {
+        for r in 0..q.rows {
+            let wv = q.w_q[o * q.rows + r];
+            // The nn-side mapping marks conv padding rows with a 0.0
+            // weight (quantized real weights are always odd).
+            if wv != 0.0 {
+                w_phys[r * out_features + o] = wv as i32;
+            }
+        }
+    }
+
+    // The manifest executor's IdealContract convention: always the
+    // per-layer (adaptive) swing, and 1b lanes carry no sub-LSB scaling.
+    let rin_eff = if q.cfg.r_in > 1 { q.cfg.r_in } else { 0 };
+    let rw_eff = if R_W > 1 { R_W } else { 0 };
+    let dv_scale =
+        p.alpha_eff(rows_phys) * p.supply.vddl / (1u64 << (rin_eff + rw_eff)) as f64;
+    // The mapping calibrated γ against its own dv convention (q.alpha,
+    // 2^(r_in+R_W)); re-fit it to the physical contract's dv scale so
+    // the ADC fill is preserved — keep γ·dv invariant, re-quantized to
+    // the hardware's power-of-two gains. With the adaptive swing and
+    // r_in > 1 the two conventions coincide and γ passes through
+    // unchanged.
+    let dv_unit_map = q.alpha * p.supply.vddl / (1u64 << (q.cfg.r_in + R_W)) as f64;
+    let gamma = quantize_gamma(q.gamma * dv_unit_map / dv_scale, q.cfg.gamma_bits);
+    let lsb = p.adc_lsb(q.cfg.r_out, gamma);
+    let s = (q.a_scale * q.w_scale) as f64;
+    let out_gain = (s * lsb / (2.0 * dv_scale)) as f32;
+
+    // β absorbs the offset-binary constant M·ΣW, the float bias, and
+    // the −n_pad correction for the padding rows' constant +1·(+1)
+    // contribution to the physical dot product. One ABN code moves the
+    // DPL by abn_offset_range/16 — the same step the ADC model applies.
+    let beta_step = p.abn_offset_range / 16.0;
+    let m = ((1u64 << q.cfg.r_in) - 1) as f64;
+    let beta: Vec<i32> = (0..out_features)
+        .map(|o| {
+            let code = dv_scale
+                * (m * q.sum_w[o] as f64 - n_pad + 2.0 * q.bias[o] as f64 / s)
+                / beta_step;
+            code.round().clamp(-16.0, 15.0) as i32
+        })
+        .collect();
+
+    Ok(Layer {
+        name,
+        kind,
+        in_features,
+        out_features,
+        relu,
+        stride: 1,
+        pool,
+        rows: rows_phys,
+        cfg: crate::analog::macro_model::OpConfig {
+            r_in: q.cfg.r_in,
+            r_w: R_W,
+            r_out: q.cfg.r_out,
+            gamma,
+            connected_units: rows_phys / p.rows_per_unit,
+            t_dp: 5e-9,
+        },
+        w_phys,
+        beta,
+        a_scale: q.a_scale,
+        out_gain,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_conv_graph(seed: u64) -> Graph {
+        let mut rng = Rng::new(seed);
+        let conv1 = Conv3x3::new(3, 4, &mut rng);
+        let conv2 = Conv3x3::new(4, 4, &mut rng);
+        let head = crate::nn::mlp::Dense::new(4 * 3 * 3, 2, &mut rng);
+        Graph::new("toy_cnn", vec![3, 6, 6])
+            .with(Node::Conv3x3(conv1))
+            .with(Node::Relu)
+            .with(Node::Conv3x3(conv2))
+            .with(Node::Relu)
+            .with(Node::Pool2x2(PoolKind::Max))
+            .with(Node::Flatten)
+            .with(Node::Dense(DenseNode::new(head)))
+    }
+
+    fn toy_data(n: usize, len: usize, seed: u64, shape: Vec<usize>) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let x = (0..n * len).map(|_| rng.uniform() as f32).collect();
+        let y = (0..n).map(|i| (i % 2) as i32).collect();
+        Dataset { x, y, n, shape }
+    }
+
+    #[test]
+    fn graph_shapes_and_float_forward() {
+        let g = toy_conv_graph(3);
+        let shapes = g.shapes().unwrap();
+        assert_eq!(shapes.last().unwrap(), &vec![2]);
+        assert_eq!(shapes[5], vec![4, 3, 3]); // after pool
+        let y = g.forward_float(&vec![0.5; g.input_len()]).unwrap();
+        assert_eq!(y.len(), 2);
+    }
+
+    #[test]
+    fn mapped_graph_runs_and_is_worker_invariant() {
+        let g = toy_conv_graph(5);
+        let data = toy_data(12, g.input_len(), 7, vec![3, 6, 6]);
+        let p = MacroParams::paper();
+        let cfg = EvalCfg { noise_lsb: 0.0, ..EvalCfg::new(8, 5, true) };
+        let mapped = MappedGraph::build(&g, &data, &p, &cfg).unwrap();
+        let images: Vec<Vec<f32>> = (0..data.n).map(|i| data.image(i).to_vec()).collect();
+        let a = mapped.forward_batch(&images, 1).unwrap();
+        let b = mapped.forward_batch(&images, 4).unwrap();
+        assert_eq!(a, b, "worker split must not change noiseless results");
+        assert_eq!(a.len(), 12);
+        assert!(a.iter().all(|v| v.len() == 2 && v.iter().all(|x| x.is_finite())));
+    }
+
+    #[test]
+    fn noiseless_cim_tracks_float_at_high_precision() {
+        // With 8b precision and 5 γ bits the quantized graph output must
+        // correlate with the float forward (loose: same argmax usually).
+        let g = toy_conv_graph(11);
+        let data = toy_data(24, g.input_len(), 13, vec![3, 6, 6]);
+        let p = MacroParams::paper();
+        let cfg = EvalCfg { noise_lsb: 0.0, ..EvalCfg::new(8, 5, true) };
+        let mapped = MappedGraph::build(&g, &data, &p, &cfg).unwrap();
+        let mut agree = 0usize;
+        for i in 0..data.n {
+            let x = data.image(i);
+            let f = g.forward_float(x).unwrap();
+            let qv = mapped.forward_batch(&[x.to_vec()], 1).unwrap();
+            if crate::util::stats::argmax_f32(&f) == crate::util::stats::argmax_f32(&qv[0]) {
+                agree += 1;
+            }
+        }
+        assert!(agree >= data.n * 7 / 10, "agreement {agree}/{}", data.n);
+    }
+
+    #[test]
+    fn lowering_produces_a_valid_manifest_model() {
+        let g = toy_conv_graph(17);
+        let data = toy_data(16, g.input_len(), 19, vec![3, 6, 6]);
+        let p = MacroParams::paper();
+        let cfg = EvalCfg { noise_lsb: 0.0, ..EvalCfg::new(8, 5, true) };
+        let model = g.lower(&data, &p, &cfg).unwrap();
+        assert_eq!(model.layers.len(), 3);
+        assert_eq!(model.layers[0].kind, Kind::Conv3);
+        assert!(model.layers[0].relu);
+        assert_eq!(model.layers[1].pool, Pool::Max2);
+        assert_eq!(model.layers[2].kind, Kind::Dense);
+        assert!(!model.layers[2].relu);
+        for l in &model.layers {
+            assert_eq!(l.rows % p.rows_per_unit, 0, "{}", l.name);
+            assert_eq!(l.w_phys.len(), l.rows * l.out_features);
+            assert!(l.beta.iter().all(|&b| (-16..=15).contains(&b)));
+            let mx = (1 << l.cfg.r_w) - 1;
+            // Every physical weight is a representable antipodal level
+            // (odd, in range) — the analog bitcells reject anything else.
+            assert!(l.w_phys.iter().all(|&w| w.abs() <= mx && (w + mx) % 2 == 0));
+            assert!(l.out_gain.is_finite() && l.out_gain > 0.0);
+        }
+        // Conv padding rows (c_in=3 < 4-channel unit) carry the +1
+        // weight whose constant contribution β absorbs.
+        let conv = &model.layers[0];
+        let order = im2col::row_order(3);
+        for (r, o) in order.iter().enumerate() {
+            if o.is_none() {
+                for oc in 0..conv.out_features {
+                    assert_eq!(conv.w_phys[r * conv.out_features + oc], 1, "row {r}");
+                }
+            }
+        }
+        // The toy head (36 features) fills exactly one DP unit.
+        assert_eq!(model.layers[2].rows, 36);
+    }
+
+    #[test]
+    fn lowering_refits_gamma_to_the_physical_swing() {
+        // With the fixed full-array swing the mapping's dv convention is
+        // ~10x smaller than the physical per-layer contract (the
+        // executor always uses alpha_eff(rows)); the lowered γ must
+        // compensate so γ·dv stays invariant up to the power-of-two
+        // requantization — otherwise the lowered ADC rails.
+        let mut rng = Rng::new(31);
+        let dense = crate::nn::mlp::Dense::new(40, 6, &mut rng);
+        let g = Graph::new("fixed_swing", vec![40]).with(Node::Dense(DenseNode::new(dense)));
+        let data = toy_data(16, 40, 3, vec![40]);
+        let p = MacroParams::paper();
+        let cfg = EvalCfg { noise_lsb: 0.0, ..EvalCfg::new(8, 5, false) };
+        let mapped = MappedGraph::build(&g, &data, &p, &cfg).unwrap();
+        let model = g.lower(&data, &p, &cfg).unwrap();
+        let q = &mapped.cim[0];
+        let layer = &model.layers[0];
+        let dv_map = q.alpha * p.supply.vddl / (1u64 << (8 + R_W)) as f64;
+        let dv_phys =
+            p.alpha_eff(layer.rows) * p.supply.vddl / (1u64 << (8 + R_W)) as f64;
+        let product_map = q.gamma * dv_map;
+        let product_phys = layer.cfg.gamma * dv_phys;
+        assert!(layer.cfg.gamma < q.gamma, "phys {} map {}", layer.cfg.gamma, q.gamma);
+        assert!(product_phys <= product_map * (1.0 + 1e-12), "{product_phys} > {product_map}");
+        assert!(
+            layer.cfg.gamma == 1.0 || product_phys * 2.0 > product_map,
+            "gamma under-fitted: {product_phys} vs {product_map}"
+        );
+    }
+
+    #[test]
+    fn standalone_digital_nodes_refuse_to_lower() {
+        let mut rng = Rng::new(23);
+        let g = Graph::new("bad", vec![4, 4, 4])
+            .with(Node::Pool2x2(PoolKind::Max))
+            .with(Node::Conv3x3(Conv3x3::new(4, 4, &mut rng)));
+        let data = toy_data(4, 64, 1, vec![4, 4, 4]);
+        let err = g.lower(&data, &MacroParams::paper(), &EvalCfg::new(8, 5, true));
+        assert!(err.is_err());
+    }
+}

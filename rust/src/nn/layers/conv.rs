@@ -1,0 +1,116 @@
+//! The 3×3 convolution node: float weights in natural patch order.
+//!
+//! Weights are stored `[c_out × (9·c_in)]` with the patch feature index
+//! `tap * c_in + ch` — the same (tap-major, channel-minor) layout
+//! [`crate::dataflow::im2col::patch_at`] produces and the layout the
+//! macro's physical row order ([`crate::dataflow::im2col::row_order`])
+//! permutes from. [`Conv3x3::forward_image`] is the naive nested-loop
+//! float reference; the quantized macro execution in
+//! [`crate::nn::graph`] must reproduce it exactly (up to the macro
+//! contract's quantization), which the property tests assert.
+
+use super::AbnSpec;
+use crate::util::rng::Rng;
+
+/// A 3×3 convolution (zero padding 1, stride 1) with per-channel bias.
+#[derive(Clone, Debug)]
+pub struct Conv3x3 {
+    pub c_in: usize,
+    pub c_out: usize,
+    /// Float weights `[c_out × (9·c_in)]`, natural patch order
+    /// (`tap * c_in + ch`).
+    pub w: Vec<f32>,
+    /// Per-output-channel bias.
+    pub b: Vec<f32>,
+    /// Per-layer CIM mapping overrides.
+    pub abn: AbnSpec,
+}
+
+impl Conv3x3 {
+    /// He-initialized random kernel (the fan-in is the 9·c_in patch).
+    pub fn new(c_in: usize, c_out: usize, rng: &mut Rng) -> Self {
+        let fan_in = 9 * c_in;
+        let scale = (2.0 / fan_in as f64).sqrt();
+        let w = (0..c_out * fan_in)
+            .map(|_| (rng.gaussian() * scale) as f32)
+            .collect();
+        Conv3x3 { c_in, c_out, w, b: vec![0.0; c_out], abn: AbnSpec::INHERIT }
+    }
+
+    /// Build from explicit weights/bias (tests, trained imports).
+    pub fn from_weights(c_in: usize, c_out: usize, w: Vec<f32>, b: Vec<f32>) -> Self {
+        assert_eq!(w.len(), c_out * 9 * c_in);
+        assert_eq!(b.len(), c_out);
+        Conv3x3 { c_in, c_out, w, b, abn: AbnSpec::INHERIT }
+    }
+
+    /// The weight row for output channel `oc` (natural patch order).
+    pub fn w_row(&self, oc: usize) -> &[f32] {
+        &self.w[oc * 9 * self.c_in..(oc + 1) * 9 * self.c_in]
+    }
+
+    /// Naive float convolution of one CHW image (zero padding 1,
+    /// stride 1); `out` is `[c_out × h × w]` CHW.
+    pub fn forward_image(&self, x: &[f32], h: usize, w: usize, out: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.c_in * h * w);
+        debug_assert_eq!(out.len(), self.c_out * h * w);
+        for oc in 0..self.c_out {
+            let wrow = self.w_row(oc);
+            for oy in 0..h {
+                for ox in 0..w {
+                    let mut acc = self.b[oc];
+                    for tap in 0..9 {
+                        let iy = (oy + tap / 3) as isize - 1;
+                        let ix = (ox + tap % 3) as isize - 1;
+                        if iy < 0 || ix < 0 || iy >= h as isize || ix >= w as isize {
+                            continue; // zero padding
+                        }
+                        let base = iy as usize * w + ix as usize;
+                        for ch in 0..self.c_in {
+                            acc += wrow[tap * self.c_in + ch] * x[ch * h * w + base];
+                        }
+                    }
+                    out[oc * h * w + oy * w + ox] = acc;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_kernel_reproduces_the_input() {
+        // Center tap (tap 4) of channel 0 set to 1: output = input channel.
+        let (c_in, h, w) = (2usize, 4usize, 5usize);
+        let mut weights = vec![0f32; 9 * c_in];
+        weights[4 * c_in] = 1.0;
+        let conv = Conv3x3::from_weights(c_in, 1, weights, vec![0.0]);
+        let x: Vec<f32> = (0..c_in * h * w).map(|i| i as f32).collect();
+        let mut out = vec![0f32; h * w];
+        conv.forward_image(&x, h, w, &mut out);
+        assert_eq!(out, x[..h * w].to_vec());
+    }
+
+    #[test]
+    fn border_taps_read_zero_padding() {
+        // All-ones 1-channel kernel on an all-ones image: interior sums 9,
+        // edges 6, corners 4.
+        let conv = Conv3x3::from_weights(1, 1, vec![1.0; 9], vec![0.0]);
+        let (h, w) = (3usize, 3usize);
+        let mut out = vec![0f32; h * w];
+        conv.forward_image(&[1.0; 9], h, w, &mut out);
+        assert_eq!(out, vec![4.0, 6.0, 4.0, 6.0, 9.0, 6.0, 4.0, 6.0, 4.0]);
+    }
+
+    #[test]
+    fn bias_offsets_every_pixel() {
+        let conv = Conv3x3::from_weights(1, 2, vec![0.0; 18], vec![0.5, -1.0]);
+        let mut out = vec![0f32; 2 * 4];
+        conv.forward_image(&[0.0; 4], 2, 2, &mut out);
+        assert!(out[..4].iter().all(|&v| v == 0.5));
+        assert!(out[4..].iter().all(|&v| v == -1.0));
+    }
+}

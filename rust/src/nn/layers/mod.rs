@@ -1,0 +1,241 @@
+//! Typed nodes of the nn-side layer-graph IR (see [`crate::nn::graph`]).
+//!
+//! A [`Node`] is one step of a feed-forward CNN expressed the way the
+//! paper's workloads are built: 3×3 convolutions and dense matmuls that
+//! run *on the macro*, interleaved with the digital glue (ReLU, 2×2
+//! pooling, flatten) that runs in the accelerator's post-ADC datapath.
+//! Each macro-mapped node carries an [`AbnSpec`] — the per-layer CIM
+//! mapping knobs (r_in/r_out precision, ABN gain bits, channel-adaptive
+//! swing) that override the graph-level [`EvalCfg`] when set.
+//!
+//! Float forwards here are the *calibration* path: the quantized macro
+//! execution lives in [`crate::nn::graph`], and the float reference for
+//! conv layers in [`conv::Conv3x3::forward_image`] doubles as the naive
+//! nested-loop oracle the property tests compare against.
+
+pub mod conv;
+
+pub use conv::Conv3x3;
+
+use crate::coordinator::executor::apply_pool;
+use crate::coordinator::manifest::Pool;
+use crate::nn::cim_eval::EvalCfg;
+use crate::nn::mlp::Dense;
+use anyhow::{bail, Result};
+
+/// Per-node overrides of the graph-level CIM mapping configuration —
+/// the knobs the silicon exposes per layer (§II/§III.D): input/output
+/// precision, ABN gain bits and the channel-adaptive DPL swing. `None`
+/// inherits the graph-level [`EvalCfg`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AbnSpec {
+    pub r_in: Option<u32>,
+    pub r_out: Option<u32>,
+    pub gamma_bits: Option<u32>,
+    pub adaptive_swing: Option<bool>,
+}
+
+impl AbnSpec {
+    /// Inherit every knob from the graph-level configuration.
+    pub const INHERIT: AbnSpec = AbnSpec {
+        r_in: None,
+        r_out: None,
+        gamma_bits: None,
+        adaptive_swing: None,
+    };
+
+    /// Resolve against the graph-level configuration.
+    pub fn resolve(&self, cfg: &EvalCfg) -> EvalCfg {
+        EvalCfg {
+            r_in: self.r_in.unwrap_or(cfg.r_in),
+            r_out: self.r_out.unwrap_or(cfg.r_out),
+            gamma_bits: self.gamma_bits.unwrap_or(cfg.gamma_bits),
+            adaptive_swing: self.adaptive_swing.unwrap_or(cfg.adaptive_swing),
+            ..*cfg
+        }
+    }
+}
+
+/// 2×2 pooling flavor (stride 2, floor crop on odd dims — the same
+/// semantics as the manifest executor's [`Pool::Max2`]/[`Pool::Avg2`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+impl PoolKind {
+    /// The manifest-side pool this node lowers to.
+    pub fn to_manifest(self) -> Pool {
+        match self {
+            PoolKind::Max => Pool::Max2,
+            PoolKind::Avg => Pool::Avg2,
+        }
+    }
+}
+
+/// A dense (fully-connected) graph node: the float layer plus its CIM
+/// mapping overrides.
+#[derive(Clone, Debug)]
+pub struct DenseNode {
+    pub dense: Dense,
+    pub abn: AbnSpec,
+}
+
+impl DenseNode {
+    pub fn new(dense: Dense) -> Self {
+        DenseNode { dense, abn: AbnSpec::INHERIT }
+    }
+}
+
+/// One node of the layer graph.
+#[derive(Clone, Debug)]
+pub enum Node {
+    /// 3×3 convolution, zero padding 1, stride 1 — lowered onto the
+    /// macro through the §IV streaming im2col row order.
+    Conv3x3(Conv3x3),
+    /// Dense matmul — the MLP special case.
+    Dense(DenseNode),
+    /// 2×2 stride-2 pooling (digital, post-ADC).
+    Pool2x2(PoolKind),
+    /// ReLU (digital, post-ADC).
+    Relu,
+    /// CHW → flat feature vector (layout no-op; shape change only).
+    Flatten,
+}
+
+impl Node {
+    /// Short kind tag for names/logs.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Node::Conv3x3(_) => "conv3",
+            Node::Dense(_) => "dense",
+            Node::Pool2x2(_) => "pool2",
+            Node::Relu => "relu",
+            Node::Flatten => "flatten",
+        }
+    }
+
+    /// Does this node run on the macro (vs the digital datapath)?
+    pub fn is_cim(&self) -> bool {
+        matches!(self, Node::Conv3x3(_) | Node::Dense(_))
+    }
+
+    /// Shape inference: output shape for `in_shape`, or an error when
+    /// the node cannot consume it.
+    pub fn out_shape(&self, in_shape: &[usize]) -> Result<Vec<usize>> {
+        match self {
+            Node::Conv3x3(c) => {
+                let [ci, h, w] = chw(in_shape)?;
+                if ci != c.c_in {
+                    bail!("conv3x3 expects {} input channels, got shape {in_shape:?}", c.c_in);
+                }
+                Ok(vec![c.c_out, h, w])
+            }
+            Node::Pool2x2(_) => {
+                let [c, h, w] = chw(in_shape)?;
+                if h < 2 || w < 2 {
+                    bail!("pool2x2 needs spatial dims >= 2, got {in_shape:?}");
+                }
+                Ok(vec![c, h / 2, w / 2])
+            }
+            Node::Relu => Ok(in_shape.to_vec()),
+            Node::Flatten => Ok(vec![in_shape.iter().product()]),
+            Node::Dense(d) => {
+                if in_shape.len() != 1 || in_shape[0] != d.dense.n_in {
+                    bail!(
+                        "dense expects a flat [{}] input, got shape {in_shape:?} \
+                         (insert a Flatten node?)",
+                        d.dense.n_in
+                    );
+                }
+                Ok(vec![d.dense.n_out])
+            }
+        }
+    }
+
+    /// Float forward of one activation (the calibration / reference
+    /// path; the quantized macro path lives in [`crate::nn::graph`]).
+    pub fn forward_float(&self, x: &[f32], in_shape: &[usize]) -> Result<Vec<f32>> {
+        let out_shape = self.out_shape(in_shape)?;
+        Ok(match self {
+            Node::Conv3x3(c) => {
+                let [_, h, w] = chw(in_shape)?;
+                let mut out = vec![0f32; out_shape.iter().product()];
+                c.forward_image(x, h, w, &mut out);
+                out
+            }
+            Node::Dense(d) => {
+                let mut y = vec![0f32; d.dense.n_out];
+                d.dense.forward(x, &mut y);
+                y
+            }
+            Node::Pool2x2(kind) => {
+                let [c, h, w] = chw(in_shape)?;
+                apply_pool(x, c, h, w, kind.to_manifest()).0
+            }
+            Node::Relu => x.iter().map(|&v| v.max(0.0)).collect(),
+            Node::Flatten => x.to_vec(),
+        })
+    }
+}
+
+/// Destructure a CHW shape.
+pub(crate) fn chw(shape: &[usize]) -> Result<[usize; 3]> {
+    match shape {
+        [c, h, w] => Ok([*c, *h, *w]),
+        other => bail!("expected a CHW shape, got {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn shape_inference_through_a_cnn_stack() {
+        let mut rng = Rng::new(1);
+        let conv = Node::Conv3x3(Conv3x3::new(3, 8, &mut rng));
+        let shape = conv.out_shape(&[3, 16, 16]).unwrap();
+        assert_eq!(shape, vec![8, 16, 16]);
+        let shape = Node::Pool2x2(PoolKind::Max).out_shape(&shape).unwrap();
+        assert_eq!(shape, vec![8, 8, 8]);
+        let shape = Node::Flatten.out_shape(&shape).unwrap();
+        assert_eq!(shape, vec![512]);
+        let dense = Node::Dense(DenseNode::new(Dense::new(512, 10, &mut rng)));
+        assert_eq!(dense.out_shape(&shape).unwrap(), vec![10]);
+    }
+
+    #[test]
+    fn shape_errors_are_typed_out() {
+        let mut rng = Rng::new(2);
+        let conv = Node::Conv3x3(Conv3x3::new(4, 8, &mut rng));
+        assert!(conv.out_shape(&[3, 8, 8]).is_err(), "channel mismatch");
+        assert!(conv.out_shape(&[16]).is_err(), "flat input into conv");
+        let dense = Node::Dense(DenseNode::new(Dense::new(16, 4, &mut rng)));
+        assert!(dense.out_shape(&[4, 2, 2]).is_err(), "unflattened input");
+        assert!(Node::Pool2x2(PoolKind::Avg).out_shape(&[1, 1, 1]).is_err());
+    }
+
+    #[test]
+    fn abn_spec_resolution_overrides_only_set_fields() {
+        let base = EvalCfg::new(8, 5, true);
+        let spec = AbnSpec { r_out: Some(4), adaptive_swing: Some(false), ..AbnSpec::INHERIT };
+        let resolved = spec.resolve(&base);
+        assert_eq!(resolved.r_out, 4);
+        assert_eq!(resolved.r_in, base.r_in);
+        assert_eq!(resolved.gamma_bits, base.gamma_bits);
+        assert!(!resolved.adaptive_swing);
+        assert_eq!(resolved.noise_lsb, base.noise_lsb);
+    }
+
+    #[test]
+    fn pool_and_relu_float_forward() {
+        let x = vec![1.0, -2.0, 3.0, 4.0];
+        let r = Node::Relu.forward_float(&x, &[1, 2, 2]).unwrap();
+        assert_eq!(r, vec![1.0, 0.0, 3.0, 4.0]);
+        let p = Node::Pool2x2(PoolKind::Max).forward_float(&x, &[1, 2, 2]).unwrap();
+        assert_eq!(p, vec![4.0]);
+    }
+}

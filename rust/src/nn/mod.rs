@@ -1,6 +1,21 @@
-//! Rust-native NN stack: dataset loading, MLP training and CIM-mapped
-//! post-training evaluation (the Fig. 3b study).
+//! Rust-native NN stack: dataset loading, MLP training, the layer-graph
+//! IR for CNNs and the CIM-mapped post-training evaluation (the Fig. 3b
+//! study generalized to the paper's conv workloads).
+//!
+//! * [`mlp`] — float MLP training (SGD/Adam, no BLAS);
+//! * [`layers`] — typed graph nodes (`Conv3x3`, `Dense`, `Pool2x2`,
+//!   `Relu`, `Flatten`) with per-layer CIM mapping overrides;
+//! * [`graph`] — the layer-graph IR: calibration/quantization to the
+//!   macro contract, the batched graph executor (conv lowered through
+//!   the §IV streaming im2col into whole-batch gemm kernels), and
+//!   lowering to a physical [`NetworkModel`](crate::coordinator::manifest::NetworkModel)
+//!   for the `Session` backends;
+//! * [`cim_eval`] — the Fig. 3(b) sweep, now the Dense-only graph
+//!   special case;
+//! * [`dataset`] — IMGT dataset loading with CHW validation.
 
 pub mod cim_eval;
 pub mod dataset;
+pub mod graph;
+pub mod layers;
 pub mod mlp;

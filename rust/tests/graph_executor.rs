@@ -1,0 +1,326 @@
+//! The layer-graph IR's core contracts (no artifacts needed):
+//!
+//! 1. **Conv lowering is exact**: the batched graph executor (im2col
+//!    row order + whole-batch gemm) is bit-identical to a naive
+//!    nested-loop reference applying the same macro contract directly to
+//!    the convolution, over random shapes including C_in values that
+//!    leave padding rows in the DP units.
+//! 2. **MLP is the special case**: a Dense-only graph reproduces
+//!    `cim_eval` exactly, and the dense executor matches its own naive
+//!    reference.
+//! 3. **End-to-end through `Session`**: a conv-conv-pool-dense graph
+//!    lowers to a physical `NetworkModel` and runs on the per-image
+//!    ideal executor, the batched engine (bit-identical) and the analog
+//!    die pool (deterministic), with per-layer modeled costs reported
+//!    through the engine probe.
+
+use imagine::api::{BackendKind, Session};
+use imagine::config::params::MacroParams;
+use imagine::coordinator::executor::{Backend, Executor};
+use imagine::nn::cim_eval::{eval_cim, EvalCfg};
+use imagine::nn::dataset::Dataset;
+use imagine::nn::graph::{eval_graph, CimKind, Graph, MappedGraph, QNode, R_W};
+use imagine::nn::layers::{Conv3x3, DenseNode, Node, PoolKind};
+use imagine::nn::mlp::{Dense, Mlp};
+use imagine::util::rng::Rng;
+
+fn random_dataset(rng: &mut Rng, n: usize, shape: Vec<usize>) -> Dataset {
+    let len: usize = shape.iter().product();
+    Dataset {
+        x: (0..n * len).map(|_| rng.uniform() as f32).collect(),
+        y: (0..n).map(|i| (i % 2) as i32).collect(),
+        n,
+        shape,
+    }
+}
+
+/// The macro contract applied to one signed dot product — spelled out
+/// independently of the executor (same expressions as Eq. 7 + the
+/// offset-binary reconstruction).
+#[allow(clippy::too_many_arguments)]
+fn contract_ref(
+    q: &QNode,
+    p: &MacroParams,
+    dot: f64,
+    sum_w: f32,
+    bias: f32,
+    m: f32,
+) -> f32 {
+    let dv_unit = q.alpha * p.supply.vddl / (1u64 << (q.cfg.r_in + R_W)) as f64;
+    let lsb = p.adc_lsb(q.cfg.r_out, q.gamma);
+    let half = (1u64 << (q.cfg.r_out - 1)) as f64;
+    let top = (1u64 << q.cfg.r_out) as f64 - 1.0;
+    let code = (half + dv_unit * dot / lsb).floor().clamp(0.0, top);
+    let dot_rec = (code - half) * lsb / dv_unit;
+    let xw = (dot_rec as f32 + m * sum_w) / 2.0;
+    xw * q.a_scale * q.w_scale + bias
+}
+
+/// Naive quantized conv3x3: nested loops in natural (tap, channel)
+/// order — no im2col, no row permutation, no gemm.
+fn naive_conv_ref(
+    conv: &Conv3x3,
+    q: &QNode,
+    p: &MacroParams,
+    x: &[f32],
+    h: usize,
+    w: usize,
+) -> Vec<f32> {
+    let m = ((1u32 << q.cfg.r_in) - 1) as f32;
+    let mx = ((1u32 << R_W) - 1) as f32;
+    // Requantize the float weights independently with the mapped scale.
+    let w_nat: Vec<f32> = conv
+        .w
+        .iter()
+        .map(|&v| {
+            let b = ((v / q.w_scale + mx) / 2.0).round().clamp(0.0, mx);
+            2.0 * b - mx
+        })
+        .collect();
+    let xq: Vec<f32> = x
+        .iter()
+        .map(|&v| (v / q.a_scale).round().clamp(0.0, m))
+        .collect();
+    let mut out = vec![0f32; conv.c_out * h * w];
+    for oc in 0..conv.c_out {
+        let wrow = &w_nat[oc * 9 * conv.c_in..(oc + 1) * 9 * conv.c_in];
+        let sum_w: f32 = wrow.iter().sum();
+        assert_eq!(sum_w, q.sum_w[oc], "ΣW must survive the row permutation");
+        for oy in 0..h {
+            for ox in 0..w {
+                let mut dot = 0f64;
+                for tap in 0..9 {
+                    let iy = (oy + tap / 3) as isize - 1;
+                    let ix = (ox + tap % 3) as isize - 1;
+                    for ch in 0..conv.c_in {
+                        let val = if iy < 0 || ix < 0 || iy >= h as isize || ix >= w as isize
+                        {
+                            0.0
+                        } else {
+                            xq[ch * h * w + iy as usize * w + ix as usize]
+                        };
+                        dot += (2.0 * val - m) as f64 * wrow[tap * conv.c_in + ch] as f64;
+                    }
+                }
+                out[oc * h * w + oy * w + ox] =
+                    contract_ref(q, p, dot, sum_w, conv.b[oc], m);
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn prop_conv3x3_graph_executor_matches_naive_reference() {
+    // Random shapes; C_in ∈ {1, 3, 5} leaves padding rows in the DP
+    // units, {4, 16} fills them exactly.
+    let p = MacroParams::paper();
+    let mut rng = Rng::new(0xC0117);
+    for (case, &c_in) in [1usize, 3, 4, 5, 16].iter().enumerate() {
+        let h = rng.int_range(4, 7) as usize;
+        let w = rng.int_range(4, 7) as usize;
+        let c_out = rng.int_range(2, 6) as usize;
+        let r_in = [4u32, 8][rng.below(2) as usize];
+        let mut conv = Conv3x3::new(c_in, c_out, &mut rng);
+        for b in conv.b.iter_mut() {
+            *b = rng.uniform_range(-0.2, 0.2) as f32;
+        }
+        let graph = Graph::new("conv_prop", vec![c_in, h, w]).with(Node::Conv3x3(conv.clone()));
+        let data = random_dataset(&mut rng, 12, vec![c_in, h, w]);
+
+        let cfg = EvalCfg { r_in, noise_lsb: 0.0, ..EvalCfg::new(8, 5, true) };
+        let mapped = MappedGraph::build(&graph, &data, &p, &cfg).unwrap();
+        assert_eq!(mapped.cim.len(), 1);
+        let q = &mapped.cim[0];
+        assert_eq!(q.kind, CimKind::Conv { c_in, c_out });
+        assert_eq!(q.rows, c_in.div_ceil(4) * 36, "case {case}");
+
+        let images: Vec<Vec<f32>> = (0..data.n).map(|i| data.image(i).to_vec()).collect();
+        for workers in [1usize, 3] {
+            let got = mapped.forward_batch(&images, workers).unwrap();
+            for (i, im) in images.iter().enumerate() {
+                let want = naive_conv_ref(&conv, q, &p, im, h, w);
+                assert_eq!(got[i], want, "case {case} c_in={c_in} image {i} workers {workers}");
+            }
+        }
+    }
+}
+
+#[test]
+fn dense_graph_executor_matches_naive_reference() {
+    let p = MacroParams::paper();
+    let mut rng = Rng::new(0xDE45);
+    let (n_in, n_out) = (50usize, 7usize);
+    let dense = Dense::new(n_in, n_out, &mut rng);
+    let graph = Graph::new("dense_prop", vec![n_in])
+        .with(Node::Dense(DenseNode::new(dense.clone())));
+    let data = random_dataset(&mut rng, 9, vec![n_in]);
+    let cfg = EvalCfg { noise_lsb: 0.0, ..EvalCfg::new(8, 5, true) };
+    let mapped = MappedGraph::build(&graph, &data, &p, &cfg).unwrap();
+    let q = &mapped.cim[0];
+
+    let m = ((1u32 << q.cfg.r_in) - 1) as f32;
+    let mx = ((1u32 << R_W) - 1) as f32;
+    let images: Vec<Vec<f32>> = (0..data.n).map(|i| data.image(i).to_vec()).collect();
+    let got = mapped.forward_batch(&images, 2).unwrap();
+    for (i, im) in images.iter().enumerate() {
+        for o in 0..n_out {
+            // Independent weight requantization + natural-order dot.
+            let mut dot = 0f64;
+            let mut sum_w = 0f32;
+            for (j, &xv) in im.iter().enumerate() {
+                let wq = {
+                    let b = ((dense.w[o * n_in + j] / q.w_scale + mx) / 2.0)
+                        .round()
+                        .clamp(0.0, mx);
+                    2.0 * b - mx
+                };
+                sum_w += wq;
+                let xq = (xv / q.a_scale).round().clamp(0.0, m);
+                dot += (2.0 * xq - m) as f64 * wq as f64;
+            }
+            let want = contract_ref(q, &p, dot, sum_w, dense.b[o], m);
+            assert_eq!(got[i][o], want, "image {i} output {o}");
+        }
+    }
+}
+
+#[test]
+fn dense_only_graph_reproduces_cim_eval_exactly() {
+    // The MLP special case: eval_cim (which now builds the trivial
+    // graph) and a hand-built Dense/ReLU graph agree exactly, noiseless
+    // and (same seed) noisy.
+    let p = MacroParams::paper();
+    let mut rng = Rng::new(0x3B);
+    let train = random_dataset(&mut rng, 120, vec![40]);
+    let test = random_dataset(&mut rng, 80, vec![40]);
+    let mut mlp = Mlp::new(&[40, 16, 2], 9);
+    mlp.train(&train, 3, 16, 1e-2, 4);
+
+    let graph = Graph::from_mlp("mlp40", &mlp);
+    assert_eq!(graph.n_cim(), 2);
+    for cfg in [
+        EvalCfg { noise_lsb: 0.0, ..EvalCfg::new(8, 5, true) },
+        EvalCfg { noise_lsb: 0.0, ..EvalCfg::new(4, 2, false) },
+        EvalCfg::new(6, 3, true), // noise on: same seed → same draws
+    ] {
+        let via_cim_eval = eval_cim(&mlp, &test, &p, &cfg);
+        let via_graph = eval_graph(&graph, &test, &p, &cfg).unwrap();
+        assert_eq!(via_cim_eval, via_graph, "cfg {cfg:?}");
+    }
+}
+
+/// Build the acceptance graph: conv-conv-pool-dense on a small CHW
+/// input, with ReLUs after the convs.
+fn conv_conv_pool_dense(seed: u64) -> (Graph, Vec<usize>) {
+    let mut rng = Rng::new(seed);
+    let input_shape = vec![3usize, 8, 8];
+    let conv1 = Conv3x3::new(3, 8, &mut rng);
+    let conv2 = Conv3x3::new(8, 8, &mut rng);
+    let head = Dense::new(8 * 4 * 4, 4, &mut rng);
+    let graph = Graph::new("ccpd", input_shape.clone())
+        .with(Node::Conv3x3(conv1))
+        .with(Node::Relu)
+        .with(Node::Conv3x3(conv2))
+        .with(Node::Relu)
+        .with(Node::Pool2x2(PoolKind::Max))
+        .with(Node::Flatten)
+        .with(Node::Dense(DenseNode::new(head)));
+    (graph, input_shape)
+}
+
+#[test]
+fn lowered_graph_runs_on_all_three_backends() {
+    let p = MacroParams::paper();
+    let mut rng = Rng::new(0xACCE);
+    let (graph, input_shape) = conv_conv_pool_dense(77);
+    let calib = random_dataset(&mut rng, 24, input_shape.clone());
+    let cfg = EvalCfg { noise_lsb: 0.0, ..EvalCfg::new(8, 5, true) };
+    let model = graph.lower(&calib, &p, &cfg).unwrap();
+    assert_eq!(model.layers.len(), 3);
+    let input_len: usize = input_shape.iter().product();
+    let images: Vec<Vec<f32>> = (0..4)
+        .map(|_| (0..input_len).map(|_| rng.uniform() as f32).collect())
+        .collect();
+
+    // 1. Per-image ideal executor — the reference.
+    let mut exec = Executor::new(model.clone(), p.clone(), Backend::Ideal).unwrap();
+    let expected: Vec<Vec<f32>> = images.iter().map(|im| exec.forward(im).unwrap()).collect();
+    assert!(expected.iter().flatten().all(|v| v.is_finite()));
+
+    // 2. The batched engine through the Session facade: bit-identical.
+    let ideal = Session::builder(model.clone())
+        .backend(BackendKind::Ideal)
+        .workers(2)
+        .batch(4)
+        .build()
+        .unwrap();
+    let got = ideal.infer_batch(&images).unwrap();
+    assert_eq!(got, expected, "engine must match the per-image executor");
+
+    // Per-layer modeled costs flow through the probe and sum to the
+    // aggregate, one entry per lowered layer.
+    let snap = ideal.snapshot().unwrap();
+    assert_eq!(snap.images, images.len() as u64);
+    let layer_costs = snap.layer_costs.expect("ideal backend models per-layer cost");
+    assert_eq!(layer_costs.len(), ideal.layers().len());
+    let total = snap.cost.unwrap().e_total();
+    let sum: f64 = layer_costs.iter().map(|c| c.e_total()).sum();
+    assert!((sum - total).abs() <= 1e-12 * total.max(1.0), "{sum} vs {total}");
+    assert_eq!(ideal.layers()[0].kind, "conv3");
+    assert_eq!(ideal.layers()[1].pool, "max2");
+    assert_eq!(ideal.layers()[2].kind, "dense");
+
+    // 3. The analog die pool: runs end-to-end and is deterministic for
+    // a fixed seed (whole-batch dispatch → reproducible die split).
+    let analog_run = || {
+        let session = Session::builder(model.clone())
+            .backend(BackendKind::Analog)
+            .seed(7)
+            .calibrate(false)
+            .workers(2)
+            .build()
+            .unwrap();
+        session.infer_batch(&images).unwrap()
+    };
+    let a = analog_run();
+    let b = analog_run();
+    assert_eq!(a, b, "analog sessions must be reproducible for a seed");
+    assert_eq!(a.len(), images.len());
+    assert!(a.iter().flatten().all(|v| v.is_finite()));
+}
+
+#[test]
+fn lowered_dense_layer_tracks_the_nn_executor() {
+    // The lowering is lossy only through the 5b ABN-offset quantization
+    // and the β-vs-digital code-grid alignment (≲ 2 LSB per output), so
+    // a single lowered dense layer must correlate near-perfectly with
+    // the nn-side graph executor on the same mapped parameters.
+    let p = MacroParams::paper();
+    let mut rng = Rng::new(0x4A11);
+    let (n_in, n_out) = (40usize, 8usize);
+    let dense = Dense::new(n_in, n_out, &mut rng);
+    let graph =
+        Graph::new("dense_low", vec![n_in]).with(Node::Dense(DenseNode::new(dense)));
+    let calib = random_dataset(&mut rng, 32, vec![n_in]);
+    let cfg = EvalCfg { noise_lsb: 0.0, ..EvalCfg::new(8, 5, true) };
+    let mapped = MappedGraph::build(&graph, &calib, &p, &cfg).unwrap();
+    let model = graph.lower(&calib, &p, &cfg).unwrap();
+    assert_eq!(model.layers[0].rows, 72, "40 features pad to two DP units");
+    // Dense padding rows carry the +1 weight (an odd, analog-storable
+    // level) whose constant contribution β absorbs.
+    for r in 40..72 {
+        for oc in 0..8 {
+            assert_eq!(model.layers[0].w_phys[r * 8 + oc], 1, "row {r}");
+        }
+    }
+    let session = Session::builder(model).workers(1).build().unwrap();
+
+    let images: Vec<Vec<f32>> = (0..16).map(|i| calib.image(i).to_vec()).collect();
+    let nn_out = mapped.forward_batch(&images, 1).unwrap();
+    let hw_out = session.infer_batch(&images).unwrap();
+    let xs: Vec<f64> = nn_out.iter().flatten().map(|&v| v as f64).collect();
+    let ys: Vec<f64> = hw_out.iter().flatten().map(|&v| v as f64).collect();
+    let (_, _, r2) = imagine::util::stats::linreg(&xs, &ys);
+    assert!(r2 > 0.9, "lowered layer decorrelated from the nn executor: r2={r2}");
+}
