@@ -196,6 +196,55 @@ fn main() {
         ips_b32 / ips_exec
     ));
 
+    // ---- 4b. hub routing overhead: 1 vs 4 deployments ----
+    // Same total image count through the ModelHub's submit path; the
+    // difference is pure multi-tenant routing + per-key coalescing cost.
+    {
+        use imagine::api::{Deployment, ModelHub};
+        let small = NetworkModel::synthetic_mlp(&[144, 32, 10], 8, 4, 8, 5, &p);
+        let hub_images: Vec<Vec<f32>> = (0..n_images)
+            .map(|_| (0..144).map(|_| rng.uniform() as f32).collect())
+            .collect();
+        let hub_ips = |n_deps: usize| -> f64 {
+            let hub = ModelHub::builder()
+                .batch(32)
+                .workers(workers)
+                .flush_micros(200)
+                .build()
+                .unwrap();
+            let sessions: Vec<_> = (0..n_deps)
+                .map(|d| {
+                    let name = format!("m{d}");
+                    hub.deploy(&name, Deployment::new(small.clone())).unwrap();
+                    hub.session(&name).unwrap()
+                })
+                .collect();
+            // Warmup (backend construction paid outside the clock).
+            sessions[0].infer_one(hub_images[0].clone()).unwrap();
+            let t0 = Instant::now();
+            let pending: Vec<_> = hub_images
+                .iter()
+                .enumerate()
+                .map(|(i, im)| sessions[i % n_deps].submit(im.clone()).unwrap())
+                .collect();
+            for h in pending {
+                std::hint::black_box(h.wait().unwrap());
+            }
+            n_images as f64 / t0.elapsed().as_secs_f64()
+        };
+        let one = hub_ips(1);
+        let four = hub_ips(4);
+        out.line("");
+        out.line("# hub routing overhead (144-32-10 ideal model, async submit path)");
+        out.line(format!(
+            "1 deployment                             {one:>10.0} images/s"
+        ));
+        out.line(format!(
+            "4 deployments, round-robin               {four:>10.0} images/s ({:.2}x of 1-dep)",
+            four / one
+        ));
+    }
+
     // ---- 5. multi-die analog pool ----
     let small = NetworkModel::synthetic_mlp(&[144, 32, 10], 4, 2, 6, 9, &p);
     let analog_images: Vec<Vec<f32>> = (0..32)

@@ -1,20 +1,24 @@
-//! Quickstart: the whole stack through the `Session` facade in one page.
+//! Quickstart: the whole stack through the `ModelHub` in one page.
 //!
-//! Builds a small CIM-mapped MLP in memory (no artifacts needed), then
-//! drives it through two sessions sharing the same builder API:
+//! Builds two small CIM-mapped MLPs in memory (no artifacts needed) and
+//! serves them from **one hub** — one shared engine worker pool, many
+//! named deployments, any 1..=8b precision per request:
 //!
-//! 1. the **ideal** backend — batched closed-form macro contract
-//!    (bit-exact with the python oracle), and
-//! 2. the **analog** backend — a pool of circuit-behavioral simulated
-//!    dies (mismatch + noise + SA-offset calibration).
+//! 1. `"mnist"` on the **ideal** backend — batched closed-form macro
+//!    contract (bit-exact with the python oracle), and
+//! 2. `"mnist-analog"` on the **analog** backend — a pool of
+//!    circuit-behavioral simulated dies (mismatch + noise + SA-offset
+//!    calibration).
 //!
-//! Along the way it shows the three call styles every frontend uses:
-//! sync `infer_one`, whole-batch `infer_batch`, and the async `submit`
-//! handle into the engine's work-queue scheduler.
+//! Along the way it shows the call styles every frontend uses: cheap
+//! session handles with per-request precision
+//! (`hub.session(..)?.with_precision(2, 4)?`), sync `infer_one`,
+//! whole-batch `infer_batch`, the async `submit` handle, and hot
+//! deploy/undeploy while the engine keeps running.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use imagine::api::{BackendKind, Session};
+use imagine::api::{BackendKind, Deployment, ModelHub};
 use imagine::config::params::MacroParams;
 use imagine::coordinator::manifest::NetworkModel;
 
@@ -22,16 +26,16 @@ fn main() -> anyhow::Result<()> {
     let p = MacroParams::paper();
     let model = NetworkModel::synthetic_mlp(&[144, 32, 10], 8, 4, 8, 7, &p);
 
-    // ---- one builder API over every backend ----
-    let ideal = Session::builder(model.clone())
-        .backend(BackendKind::Ideal)
-        .workers(2)
-        .build()?;
-    let analog = Session::builder(model)
-        .backend(BackendKind::Analog)
-        .seed(2024)
-        .workers(2)
-        .build()?;
+    // ---- one hub, two tenants over one shared engine ----
+    let hub = ModelHub::builder().batch(32).workers(2).seed(2024).build()?;
+    hub.deploy("mnist", Deployment::new(model.clone()))?;
+    hub.deploy(
+        "mnist-analog",
+        Deployment::new(model).backend(BackendKind::Analog),
+    )?;
+    let ideal = hub.session("mnist")?;
+    let analog = hub.session("mnist-analog")?;
+    println!("deployments: {:?} (default {:?})", hub.models(), hub.default_model());
     println!("ideal  session: {}", ideal.describe());
     println!("analog session: {}", analog.describe());
 
@@ -47,6 +51,14 @@ fn main() -> anyhow::Result<()> {
     println!("ideal  logits[..4]: {:?}", &exact[..4]);
     println!("analog logits[..4]: {:?}", &noisy[..4]);
     println!("max |analog - ideal| = {delta:.4} (mismatch + noise, post-calibration)");
+
+    // ---- per-request precision: a cheap re-targeted handle ----
+    // No backend is rebuilt; the deployed one re-shapes per route key,
+    // bit-identical to a session built at that precision.
+    for r in [8u32, 4, 2, 1] {
+        let logits = ideal.with_precision(r, r)?.infer_one(image.clone())?;
+        println!("precision {r}b logits[..3]: {:?}", &logits[..3]);
+    }
 
     // ---- whole-batch inference is bit-identical to one-by-one ----
     let images: Vec<Vec<f32>> = (0..6)
@@ -67,6 +79,16 @@ fn main() -> anyhow::Result<()> {
         assert_eq!(handle.wait()?, batched[k], "async image {k}");
     }
     println!("async submit/wait agrees with the sync paths");
+
+    // ---- hot deploy/undeploy while the engine keeps running ----
+    hub.deploy("tiny", Deployment::new(NetworkModel::synthetic_mlp(&[36, 4], 8, 4, 8, 3, &p)))?;
+    let tiny_logits = hub.session("tiny")?.infer_one(vec![0.5; 36])?;
+    hub.undeploy("tiny")?;
+    println!(
+        "hot-deployed 'tiny' ({} logits), undeployed, {} models remain",
+        tiny_logits.len(),
+        hub.models().len()
+    );
 
     // ---- modeled accelerator cost, straight from the session ----
     let snap = ideal.snapshot()?;

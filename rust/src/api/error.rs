@@ -27,6 +27,10 @@ pub enum ImagineError {
     },
     /// Model artifacts could not be loaded.
     ModelLoad { model: String, message: String },
+    /// No deployment with this name in the [`ModelHub`](super::ModelHub)
+    /// (never deployed, undeployed, or replaced since the handle was
+    /// taken).
+    UnknownModel { model: String },
     /// The requested backend cannot run in this build or environment
     /// (e.g. PJRT without the `pjrt` feature or an artifact directory).
     BackendUnavailable {
@@ -57,6 +61,9 @@ impl fmt::Display for ImagineError {
             }
             ImagineError::ModelLoad { model, message } => {
                 write!(f, "loading model '{model}': {message}")
+            }
+            ImagineError::UnknownModel { model } => {
+                write!(f, "no deployed model named '{model}'")
             }
             ImagineError::BackendUnavailable { backend, reason } => {
                 write!(f, "backend '{}' unavailable: {reason}", backend.name())

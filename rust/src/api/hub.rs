@@ -1,0 +1,736 @@
+//! The [`ModelHub`]: multi-tenant serving over one shared engine.
+//!
+//! IMAGINE's headline feature is *workload-adaptive* 1-to-8b precision —
+//! a runtime knob, not a build-time constant. The hub makes the public
+//! API match the silicon: one engine worker pool serves a registry of
+//! named [`Deployment`]s (model + backend + default precision), and a
+//! [`Session`] is a cheap routed handle into it. Per-request precision
+//! re-targeting reuses the distribution-aware reshaping
+//! ([`apply_precision`](super::apply_precision)) inside the deployed
+//! backend instead of rebuilding it, so the analog die pool — its
+//! deterministic seeds, mismatch draws and calibration — is shared
+//! across all tenants and operating points:
+//!
+//! ```no_run
+//! use imagine::api::{BackendKind, Deployment, ModelHub};
+//! use imagine::config::params::MacroParams;
+//! use imagine::coordinator::manifest::NetworkModel;
+//!
+//! let p = MacroParams::paper();
+//! let hub = ModelHub::builder().batch(32).build()?;
+//! hub.deploy(
+//!     "mnist",
+//!     Deployment::new(NetworkModel::synthetic_mlp(&[144, 32, 10], 8, 4, 8, 7, &p))
+//!         .backend(BackendKind::Analog)
+//!         .precision(4, 4),
+//! )?;
+//! // A cheap handle; re-target precision per request without touching
+//! // the deployed dies:
+//! let logits = hub.session("mnist")?.with_precision(2, 4)?.infer_one(vec![0.5; 144])?;
+//! # let _ = logits;
+//! # Ok::<(), imagine::api::ImagineError>(())
+//! ```
+//!
+//! Models deploy and undeploy while traffic is flowing (the server's
+//! `{"cmd":"deploy"}`/`{"cmd":"undeploy"}`); requests route per
+//! (deployment, precision) key through the engine dispatcher, which
+//! coalesces each key's traffic into batches independently. Results at a
+//! requested precision are bit-identical to a dedicated single-model
+//! [`Session`] built at that precision (the engine backends always
+//! re-shape from a pristine copy of the deployed model).
+
+use super::error::ImagineError;
+use super::registry;
+use super::session::{
+    retarget_summaries, validate_precision, BackendKind, LayerSummary, SessionBuilder,
+    SessionConfig,
+};
+use crate::config::params::MacroParams;
+use crate::coordinator::manifest::NetworkModel;
+use crate::engine::{
+    self, BatchBackend, DeploymentId, EngineConfig, EngineHandle, EngineSnapshot, Pending,
+    RouteKey,
+};
+use crate::util::stats::AtomicHistogram;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Specification of one named model a [`ModelHub`] serves: the model
+/// itself plus its backend and per-deployment operating defaults.
+/// Engine-level knobs (batch, workers, flush window) live on the hub —
+/// all deployments share one worker pool.
+pub struct Deployment {
+    pub(crate) model: NetworkModel,
+    pub(crate) backend: BackendKind,
+    pub(crate) backend_note: Option<String>,
+    pub(crate) precision: Option<(u32, u32)>,
+    pub(crate) params: Option<MacroParams>,
+    pub(crate) supply: Option<crate::config::params::Supply>,
+    pub(crate) corner: Option<crate::config::params::Corner>,
+    pub(crate) seed: Option<u64>,
+    pub(crate) noise: bool,
+    pub(crate) calibrate: bool,
+    pub(crate) artifacts: Option<(String, String)>,
+}
+
+impl Deployment {
+    /// A deployment serving an in-memory model on the ideal backend.
+    pub fn new(model: NetworkModel) -> Deployment {
+        Deployment {
+            model,
+            backend: BackendKind::Ideal,
+            backend_note: None,
+            precision: None,
+            params: None,
+            supply: None,
+            corner: None,
+            seed: None,
+            noise: true,
+            calibrate: true,
+            artifacts: None,
+        }
+    }
+
+    /// Load `<dir>/<name>.manifest.json` and remember the artifact
+    /// directory (so [`BackendKind::Pjrt`] can find the HLO file).
+    pub fn from_artifacts(dir: &str, name: &str) -> Result<Deployment, ImagineError> {
+        let model = NetworkModel::load(dir, name).map_err(|e| ImagineError::ModelLoad {
+            model: name.to_string(),
+            message: format!("{e:#}"),
+        })?;
+        Ok(Deployment::new(model).artifacts(dir, name))
+    }
+
+    /// The name of the wrapped model (what a single-model
+    /// [`SessionBuilder`] deploys it under).
+    pub fn model_name(&self) -> &str {
+        &self.model.name
+    }
+
+    pub fn backend(mut self, kind: BackendKind) -> Self {
+        self.backend = kind;
+        self
+    }
+
+    /// Why this backend was chosen, when it was resolved rather than
+    /// requested (see [`BackendKind::auto_resolve`]); reported by the
+    /// server's `info` command.
+    pub fn backend_note(mut self, note: impl Into<String>) -> Self {
+        self.backend_note = Some(note.into());
+        self
+    }
+
+    /// Default (r_in, r_out) operating point for requests that do not
+    /// carry their own precision; `None` keeps the per-layer manifest
+    /// precision.
+    pub fn precision(mut self, r_in: u32, r_out: u32) -> Self {
+        self.precision = Some((r_in, r_out));
+        self
+    }
+
+    pub fn supply(mut self, supply: crate::config::params::Supply) -> Self {
+        self.supply = Some(supply);
+        self
+    }
+
+    pub fn corner(mut self, corner: crate::config::params::Corner) -> Self {
+        self.corner = Some(corner);
+        self
+    }
+
+    /// Base macro parameters (defaults to [`MacroParams::paper`]);
+    /// `supply`/`corner` settings apply on top.
+    pub fn params(mut self, params: MacroParams) -> Self {
+        self.params = Some(params);
+        self
+    }
+
+    /// Base die seed for the analog backend (defaults to the hub seed;
+    /// die `d` derives its own).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    /// Temporal noise on/off (analog backend).
+    pub fn noise(mut self, on: bool) -> Self {
+        self.noise = on;
+        self
+    }
+
+    /// Run SA-offset calibration before inference (analog backend).
+    pub fn calibrate(mut self, on: bool) -> Self {
+        self.calibrate = on;
+        self
+    }
+
+    /// Point the PJRT backend at `<dir>/<name>.hlo.txt`.
+    pub fn artifacts(mut self, dir: &str, name: &str) -> Self {
+        self.artifacts = Some((dir.to_string(), name.to_string()));
+        self
+    }
+
+    /// Wrap this spec in a single-model [`SessionBuilder`] (a private
+    /// one-deployment hub at build time) — the bridge between code that
+    /// assembles a [`Deployment`] and the single-model serving path.
+    pub fn into_session_builder(self) -> SessionBuilder {
+        SessionBuilder::new(self)
+    }
+}
+
+/// A live deployment: its engine id plus the resolved configuration.
+/// Ids are unique per hub and never reused, so a stale session handle to
+/// a replaced model fails cleanly instead of reaching the wrong backend.
+pub(crate) struct Deployed {
+    pub(crate) id: DeploymentId,
+    /// Deployment-order rank of the *name*: inherited across hot
+    /// reloads (which allocate a fresh engine id), so replacing the
+    /// default model in place does not silently re-route default
+    /// traffic to another deployment.
+    pub(crate) seq: u64,
+    pub(crate) default_precision: Option<(u32, u32)>,
+    pub(crate) config: Arc<SessionConfig>,
+}
+
+struct HubShared {
+    engine: EngineHandle,
+    deployments: RwLock<BTreeMap<String, Arc<Deployed>>>,
+    next_id: AtomicU64,
+    batch: usize,
+    workers: usize,
+    flush_micros: u64,
+    seed: u64,
+}
+
+/// Builder for a [`ModelHub`]: the engine-level knobs every deployment
+/// shares.
+pub struct HubBuilder {
+    batch: usize,
+    workers: usize,
+    flush_micros: u64,
+    seed: u64,
+    occupancy: Option<Arc<AtomicHistogram>>,
+}
+
+impl Default for HubBuilder {
+    fn default() -> Self {
+        HubBuilder {
+            batch: 32,
+            workers: engine::default_workers(),
+            flush_micros: 500,
+            seed: 42,
+            occupancy: None,
+        }
+    }
+}
+
+impl HubBuilder {
+    /// Maximum images per coalesced engine batch (≥ 1).
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    /// Worker threads (matmul splits / analog dies) (≥ 1).
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// Dispatcher flush window for partial batches [µs].
+    pub fn flush_micros(mut self, micros: u64) -> Self {
+        self.flush_micros = micros;
+        self
+    }
+
+    /// Default base die seed for analog deployments that do not set
+    /// their own.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Histogram receiving the size of every dispatched batch (the
+    /// server wires its `Stats` in here).
+    pub fn occupancy(mut self, histogram: Arc<AtomicHistogram>) -> Self {
+        self.occupancy = Some(histogram);
+        self
+    }
+
+    /// Validate the knobs and start the (initially empty) engine
+    /// dispatcher.
+    pub fn build(self) -> Result<ModelHub, ImagineError> {
+        if self.batch == 0 {
+            return Err(ImagineError::InvalidConfig {
+                field: "batch",
+                message: "batch must be >= 1".to_string(),
+            });
+        }
+        if self.workers == 0 {
+            return Err(ImagineError::InvalidConfig {
+                field: "workers",
+                message: "workers must be >= 1".to_string(),
+            });
+        }
+        let cfg = EngineConfig {
+            batch: self.batch,
+            workers: self.workers,
+            flush_micros: self.flush_micros,
+        };
+        let engine = engine::start(cfg, self.occupancy)
+            .map_err(|e| ImagineError::Engine { message: format!("{e:#}") })?;
+        Ok(ModelHub {
+            inner: Arc::new(HubShared {
+                engine,
+                deployments: RwLock::new(BTreeMap::new()),
+                next_id: AtomicU64::new(1),
+                batch: self.batch,
+                workers: self.workers,
+                flush_micros: self.flush_micros,
+                seed: self.seed,
+            }),
+        })
+    }
+}
+
+/// A registry of named model deployments served by one shared engine
+/// worker pool. Cheap to clone; the engine dispatcher shuts down when
+/// the last clone (including the ones inside [`Session`] handles) is
+/// dropped.
+#[derive(Clone)]
+pub struct ModelHub {
+    inner: Arc<HubShared>,
+}
+
+impl ModelHub {
+    pub fn builder() -> HubBuilder {
+        HubBuilder::default()
+    }
+
+    /// Deploy `spec` under `name`, building its backend on the shared
+    /// engine. Deploying over an existing name is a hot reload: the new
+    /// backend is installed first, then the old one is removed —
+    /// sessions already routed to the old deployment get clean in-band
+    /// errors, new sessions see the new model, and no other tenant is
+    /// disturbed.
+    pub fn deploy(&self, name: &str, spec: Deployment) -> Result<(), ImagineError> {
+        if name.is_empty() {
+            return Err(ImagineError::InvalidConfig {
+                field: "model",
+                message: "deployment name must not be empty".to_string(),
+            });
+        }
+        if let Some((r_in, r_out)) = spec.precision {
+            validate_precision(r_in, r_out)?;
+        }
+        // The PJRT artifact's arithmetic is compiled in: a default
+        // precision would pass deploy and then fail every request when
+        // the route key asks the backend to re-target. Fail fast with
+        // the real reason instead. (The pre-hub builder silently served
+        // the artifact's baked precision while reporting the override.)
+        if spec.backend == BackendKind::Pjrt && spec.precision.is_some() {
+            return Err(ImagineError::BackendUnavailable {
+                backend: BackendKind::Pjrt,
+                reason: "the HLO artifact's (r_in, r_out) is fixed at compile time; \
+                         deploy without a precision override (per-request overrides \
+                         are declined in-band)"
+                    .to_string(),
+            });
+        }
+        let Deployment {
+            model,
+            backend,
+            backend_note,
+            precision,
+            params,
+            supply,
+            corner,
+            seed,
+            noise,
+            calibrate,
+            artifacts,
+        } = spec;
+        let mut params = params.unwrap_or_else(MacroParams::paper);
+        if let Some(s) = supply {
+            params.supply = s;
+        }
+        if let Some(c) = corner {
+            params.corner = c;
+        }
+        let (supply, corner) = (params.supply, params.corner);
+        let seed = seed.unwrap_or(self.inner.seed);
+
+        let input_shape = model.input_shape.clone();
+        let input_len = input_shape.iter().product();
+        // Summaries reflect the deployment's *default* operating point;
+        // per-handle overrides re-patch them (see Session::with_precision).
+        let mut layers: Vec<LayerSummary> =
+            model.layers.iter().map(LayerSummary::from_layer).collect();
+        retarget_summaries(&mut layers, precision);
+
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let factory = registry::factory(registry::BackendSpec {
+            kind: backend,
+            model,
+            params,
+            seed,
+            noise,
+            calibrate,
+            workers: self.inner.workers,
+            artifacts,
+        })?;
+        let (_, describe) = self
+            .inner
+            .engine
+            .deploy(id, precision, factory)
+            .map_err(|e| registry::map_start_error(backend, e))?;
+
+        let config = SessionConfig {
+            model: name.to_string(),
+            input_shape,
+            input_len,
+            backend,
+            backend_note,
+            precision,
+            supply,
+            corner,
+            batch: self.inner.batch,
+            workers: self.inner.workers,
+            flush_micros: self.inner.flush_micros,
+            seed,
+            engine: describe,
+            layers,
+        };
+        self.install(name, id, precision, config)
+    }
+
+    /// Deploy a caller-provided backend (tests and embedders plugging
+    /// custom [`BatchBackend`]s). `config` describes the deployment for
+    /// `info`-style reporting; its `input_len` and `engine` fields are
+    /// overwritten with what the backend itself reports.
+    pub fn deploy_custom<F>(
+        &self,
+        name: &str,
+        mut config: SessionConfig,
+        factory: F,
+    ) -> Result<(), ImagineError>
+    where
+        F: FnOnce() -> anyhow::Result<Box<dyn BatchBackend>> + Send + 'static,
+    {
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        // The default precision is probed at deploy (retargeted on the
+        // dispatcher), so a custom backend that keeps the default
+        // `retarget` cannot be deployed into a config it would then
+        // fail every request for.
+        let (input_len, describe) = self
+            .inner
+            .engine
+            .deploy(id, config.precision, Box::new(factory))
+            .map_err(|e| ImagineError::Engine { message: format!("{e:#}") })?;
+        config.model = name.to_string();
+        config.input_len = input_len;
+        config.engine = describe;
+        let precision = config.precision;
+        self.install(name, id, precision, config)
+    }
+
+    fn install(
+        &self,
+        name: &str,
+        id: DeploymentId,
+        default_precision: Option<(u32, u32)>,
+        config: SessionConfig,
+    ) -> Result<(), ImagineError> {
+        let old = {
+            let mut map = self.inner.deployments.write().unwrap();
+            // A hot reload keeps the name's deployment-order rank, so
+            // the default model stays the default across reloads.
+            let seq = map.get(name).map(|d| d.seq).unwrap_or(id);
+            map.insert(
+                name.to_string(),
+                Arc::new(Deployed {
+                    id,
+                    seq,
+                    default_precision,
+                    config: Arc::new(config),
+                }),
+            )
+        };
+        if let Some(old) = old {
+            // Hot reload: the replacement is live before the old backend
+            // goes away.
+            let _ = self.inner.engine.undeploy(old.id);
+        }
+        Ok(())
+    }
+
+    /// Remove a deployment. In-flight requests already dispatched finish;
+    /// later requests through stale session handles fail with clean
+    /// in-band errors.
+    pub fn undeploy(&self, name: &str) -> Result<(), ImagineError> {
+        let removed = self.inner.deployments.write().unwrap().remove(name);
+        match removed {
+            Some(dep) => {
+                self.inner
+                    .engine
+                    .undeploy(dep.id)
+                    .map_err(|e| ImagineError::Engine { message: format!("{e:#}") })?;
+                Ok(())
+            }
+            None => Err(ImagineError::UnknownModel { model: name.to_string() }),
+        }
+    }
+
+    /// Names of the live deployments, sorted.
+    pub fn models(&self) -> Vec<String> {
+        self.inner.deployments.read().unwrap().keys().cloned().collect()
+    }
+
+    /// The live deployments' resolved configurations, sorted by name.
+    pub fn deployments(&self) -> Vec<(String, Arc<SessionConfig>)> {
+        self.inner
+            .deployments
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(name, dep)| (name.clone(), Arc::clone(&dep.config)))
+            .collect()
+    }
+
+    /// The one rule for "which deployment is the default": the
+    /// earliest-deployed live name (hot reloads keep a name's rank).
+    fn default_deployed(&self) -> Option<Arc<Deployed>> {
+        self.inner
+            .deployments
+            .read()
+            .unwrap()
+            .values()
+            .min_by_key(|dep| dep.seq)
+            .cloned()
+    }
+
+    /// The default deployment's name (see [`ModelHub::default_session`]
+    /// for the selection rule).
+    pub fn default_model(&self) -> Option<String> {
+        self.default_deployed()
+            .map(|dep| dep.config.model.clone())
+    }
+
+    /// A session handle on a named deployment.
+    pub fn session(&self, name: &str) -> Result<Session, ImagineError> {
+        let dep = self
+            .inner
+            .deployments
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| ImagineError::UnknownModel { model: name.to_string() })?;
+        Ok(Session::over(self.clone(), dep))
+    }
+
+    /// A session handle on the default deployment (the earliest
+    /// still-deployed model name; hot reloads keep a name's rank).
+    pub fn default_session(&self) -> Result<Session, ImagineError> {
+        let dep = self
+            .default_deployed()
+            .ok_or_else(|| ImagineError::UnknownModel {
+                model: "<no models deployed>".to_string(),
+            })?;
+        Ok(Session::over(self.clone(), dep))
+    }
+
+    /// Graceful-shutdown barrier: blocks until everything enqueued on
+    /// the engine before this call has executed and been answered.
+    pub fn drain(&self) -> Result<(), ImagineError> {
+        self.inner.engine.drain().map_err(ImagineError::engine)
+    }
+}
+
+/// An in-flight inference submitted through [`Session::submit`].
+pub struct PendingInference(Pending);
+
+impl PendingInference {
+    /// Block until the logits arrive.
+    pub fn wait(self) -> Result<Vec<f32>, ImagineError> {
+        self.0.wait().map_err(ImagineError::engine)
+    }
+
+    /// Non-blocking poll: `None` while the batch is still in flight.
+    pub fn try_wait(&self) -> Option<Result<Vec<f32>, ImagineError>> {
+        self.0.try_wait().map(|r| r.map_err(ImagineError::engine))
+    }
+}
+
+/// A cheap handle routing inference to one deployment of a
+/// [`ModelHub`], optionally at a per-handle precision override. Cloning
+/// is an `Arc` bump; all handles share the hub's engine worker pool.
+#[derive(Clone)]
+pub struct Session {
+    hub: ModelHub,
+    dep: Arc<Deployed>,
+    /// Per-handle (r_in, r_out) override; `None` routes at the
+    /// deployment's default precision.
+    precision: Option<(u32, u32)>,
+    /// The deployment config with this handle's effective precision
+    /// resolved.
+    config: Arc<SessionConfig>,
+}
+
+impl Session {
+    /// Start building a single-model session over an in-memory model
+    /// (a one-deployment [`ModelHub`] under the hood).
+    pub fn builder(model: NetworkModel) -> SessionBuilder {
+        SessionBuilder::new(Deployment::new(model))
+    }
+
+    pub(crate) fn over(hub: ModelHub, dep: Arc<Deployed>) -> Session {
+        let config = Arc::clone(&dep.config);
+        Session { hub, dep, precision: None, config }
+    }
+
+    /// Re-target this handle to a (r_in, r_out) operating point. Cheap:
+    /// no backend is rebuilt — the deployed backend re-shapes itself
+    /// (from a pristine model copy) when a batch at this precision is
+    /// dispatched, so the logits are bit-identical to a dedicated
+    /// session built at this precision.
+    pub fn with_precision(&self, r_in: u32, r_out: u32) -> Result<Session, ImagineError> {
+        validate_precision(r_in, r_out)?;
+        let mut config = (*self.dep.config).clone();
+        config.precision = Some((r_in, r_out));
+        retarget_summaries(&mut config.layers, config.precision);
+        Ok(Session {
+            hub: self.hub.clone(),
+            dep: Arc::clone(&self.dep),
+            precision: Some((r_in, r_out)),
+            config: Arc::new(config),
+        })
+    }
+
+    /// The hub this session routes into.
+    pub fn hub(&self) -> &ModelHub {
+        &self.hub
+    }
+
+    /// The deployment name this session routes to.
+    pub fn model(&self) -> &str {
+        &self.config.model
+    }
+
+    /// Whether this handle still points at the live deployment of its
+    /// name (false once the model was undeployed or replaced).
+    pub fn is_live(&self) -> bool {
+        self.hub
+            .inner
+            .deployments
+            .read()
+            .unwrap()
+            .get(&self.config.model)
+            .map(|dep| dep.id)
+            == Some(self.dep.id)
+    }
+
+    fn key(&self) -> RouteKey {
+        RouteKey::new(self.dep.id, self.precision.or(self.dep.default_precision))
+    }
+
+    /// The resolved configuration this session runs with.
+    pub fn config(&self) -> &SessionConfig {
+        &self.config
+    }
+
+    /// Expected flattened input length per image.
+    pub fn input_len(&self) -> usize {
+        self.config.input_len
+    }
+
+    /// The model's natural input shape.
+    pub fn input_shape(&self) -> &[usize] {
+        &self.config.input_shape
+    }
+
+    /// Per-layer structure of the served model (resolved precision) —
+    /// pairs with the per-layer costs in [`Session::snapshot`].
+    pub fn layers(&self) -> &[LayerSummary] {
+        &self.config.layers
+    }
+
+    /// Human-readable backend description.
+    pub fn describe(&self) -> &str {
+        &self.config.engine
+    }
+
+    fn check_image(&self, image: &[f32], index: usize) -> Result<(), ImagineError> {
+        if image.len() != self.config.input_len {
+            return Err(ImagineError::Input {
+                message: format!(
+                    "image {index}: expected {} values, got {}",
+                    self.config.input_len,
+                    image.len()
+                ),
+            });
+        }
+        Ok(())
+    }
+
+    /// Blocking single-image inference → logits. Concurrent callers on
+    /// the same (deployment, precision) key are coalesced into engine
+    /// batches.
+    pub fn infer_one(&self, image: Vec<f32>) -> Result<Vec<f32>, ImagineError> {
+        self.check_image(&image, 0)?;
+        self.hub
+            .inner
+            .engine
+            .infer(self.key(), image)
+            .map_err(ImagineError::engine)
+    }
+
+    /// Run a whole batch as one backend dispatch (deterministic die
+    /// split on the analog backend, regardless of concurrent traffic).
+    /// Copies the batch; use [`Session::infer_batch_owned`] on hot paths
+    /// that can hand the images over.
+    pub fn infer_batch(&self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, ImagineError> {
+        self.infer_batch_owned(images.to_vec())
+    }
+
+    /// [`Session::infer_batch`] without the copy: takes ownership of the
+    /// images and moves them straight into the engine queue.
+    pub fn infer_batch_owned(&self, images: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>, ImagineError> {
+        for (i, image) in images.iter().enumerate() {
+            self.check_image(image, i)?;
+        }
+        self.hub
+            .inner
+            .engine
+            .infer_batch(self.key(), images)
+            .map_err(ImagineError::engine)
+    }
+
+    /// Asynchronous submission: enqueue now, [`PendingInference::wait`]
+    /// later. The engine queue coalesces outstanding same-key
+    /// submissions.
+    pub fn submit(&self, image: Vec<f32>) -> Result<PendingInference, ImagineError> {
+        self.check_image(&image, 0)?;
+        self.hub
+            .inner
+            .engine
+            .submit(self.key(), image)
+            .map(PendingInference)
+            .map_err(ImagineError::engine)
+    }
+
+    /// This deployment's engine counters plus its backend's modeled
+    /// accelerator cost. Fails with [`ImagineError::UnknownModel`] once
+    /// the deployment is gone.
+    pub fn snapshot(&self) -> Result<EngineSnapshot, ImagineError> {
+        self.hub
+            .inner
+            .engine
+            .snapshot(self.dep.id)
+            .map_err(ImagineError::engine)?
+            .ok_or_else(|| ImagineError::UnknownModel {
+                model: self.config.model.clone(),
+            })
+    }
+}

@@ -1,18 +1,26 @@
-//! # The public inference API: [`Session`] over every backend
+//! # The public serving API: a [`ModelHub`] of named deployments
 //!
-//! One precision-aware builder constructs every way this crate can run a
-//! network — the closed-form ideal contract, the circuit-behavioral
-//! analog die pool, or the AOT/PJRT artifact path — with the paper's
-//! operating knobs (1-to-8b precision, supply point, process corner)
-//! resolved in one place:
+//! One shared engine worker pool serves many named models, each at any
+//! 1-to-8b (r_in, r_out) operating point *per request* — the paper's
+//! workload-adaptive precision as a runtime routing knob instead of a
+//! build-time constant:
 //!
-//! * [`Session::builder`] / [`SessionBuilder::from_artifacts`] — entry
-//!   points over an in-memory model or compiled artifacts;
-//! * [`SessionBuilder`] — `backend / precision / supply / corner /
-//!   batch / workers / seed` knobs, validated at [`SessionBuilder::build`];
-//! * [`Session`] — sync [`Session::infer_one`] / [`Session::infer_batch`]
-//!   plus the async [`Session::submit`] handle, all backed by the
-//!   engine's work-queue scheduler;
+//! * [`ModelHub`] / [`HubBuilder`] — the deployment registry over the
+//!   shared engine: [`ModelHub::deploy`] / [`ModelHub::undeploy`] hot
+//!   load and unload named [`Deployment`]s (model + backend + default
+//!   precision) while traffic flows;
+//! * [`Session`] — a cheap routed handle
+//!   (`hub.session("mnist")?.with_precision(2, 4)?`): sync
+//!   [`Session::infer_one`] / [`Session::infer_batch`] plus the async
+//!   [`Session::submit`] handle, coalesced per (deployment, precision)
+//!   key by the engine's work-queue scheduler. Precision re-targeting
+//!   reuses [`apply_precision`] inside the deployed backend — bit
+//!   identical to a dedicated session built at that precision, without
+//!   rebuilding the backend (the analog die pool and its deterministic
+//!   seeds are shared across all tenants);
+//! * [`SessionBuilder`] — the single-model facade (a one-deployment hub
+//!   under the hood): `backend / precision / supply / corner / batch /
+//!   workers / seed` knobs, validated at [`SessionBuilder::build`];
 //! * [`ImagineError`] — the typed error enum on this boundary.
 //!
 //! The CLI (`imagine run`, `imagine serve`), the TCP server and all
@@ -20,11 +28,13 @@
 //! internal backend registry is the crate's one backend match.
 
 mod error;
+mod hub;
 mod registry;
 mod session;
 
 pub use error::ImagineError;
+pub use hub::{Deployment, HubBuilder, ModelHub, PendingInference, Session};
 pub use session::{
     apply_precision, parse_corner, parse_precision, parse_supply, BackendKind, LayerSummary,
-    PendingInference, Session, SessionBuilder, SessionConfig,
+    SessionBuilder, SessionConfig,
 };

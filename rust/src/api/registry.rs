@@ -1,26 +1,27 @@
 //! The backend registry — the single place a [`BackendKind`] becomes a
-//! running engine.
+//! backend factory for the shared engine dispatcher.
 //!
 //! Before the facade existed, `main.rs` and the server each hand-wired
 //! their own `NetworkModel + MacroParams + backend` match (and the
 //! server could not reach the analog backend at all). Every frontend now
-//! funnels through [`start`]: the CLI, `imagine serve`, the examples and
-//! the tests all construct backends identically, and an unknown or
+//! funnels through [`factory`]: the CLI, `imagine serve`, the examples
+//! and the tests all construct backends identically, and an unknown or
 //! unavailable backend fails with a typed error instead of a silent
-//! fallback.
+//! fallback. The [`ModelHub`](super::ModelHub) hands the returned
+//! factory to [`EngineHandle::deploy`](crate::engine::EngineHandle),
+//! which runs it on the dispatcher thread (so non-`Send` backends like
+//! the PJRT client work unchanged).
 
 use super::error::ImagineError;
 use super::session::BackendKind;
 use crate::config::params::MacroParams;
 use crate::coordinator::manifest::NetworkModel;
-use crate::engine::{self, AnalogPool, BatchBackend, BatchIdeal, EngineConfig, EngineHandle};
+use crate::engine::{AnalogPool, BackendFactory, BatchBackend, BatchIdeal};
 use crate::runtime::Runtime;
-use crate::util::stats::AtomicHistogram;
 use anyhow::Result;
-use std::sync::Arc;
 
-/// Everything a backend constructor may need; the session builder fills
-/// this from its resolved configuration.
+/// Everything a backend constructor may need; the hub fills this from a
+/// deployment's resolved configuration.
 pub(crate) struct BackendSpec {
     pub kind: BackendKind,
     pub model: NetworkModel,
@@ -59,66 +60,63 @@ impl BatchBackend for PjrtBackend {
     fn describe(&self) -> String {
         format!("PJRT/HLO artifact '{}'", self.model_name)
     }
+
+    // The default `retarget` applies: the artifact's arithmetic is
+    // baked in, so explicit precision overrides are declined.
 }
 
-/// Start the engine for a backend spec. This is the only constructor
+/// Build the backend factory for a spec. This is the only constructor
 /// path in the crate: one match over [`BackendKind`], shared by the CLI,
-/// the server and the examples.
-pub(crate) fn start(
-    spec: BackendSpec,
-    cfg: EngineConfig,
-    occupancy: Option<Arc<AtomicHistogram>>,
-) -> Result<EngineHandle, ImagineError> {
+/// the server and the examples. Static prerequisites (the PJRT artifact
+/// directory) are checked here so callers get a typed error before the
+/// dispatcher is involved.
+///
+/// `Send` backends (ideal, analog) are constructed *here*, on the
+/// caller's thread, and the factory merely hands the finished backend
+/// over — a hot deploy of an analog pool (die fabrication + SA
+/// calibration) must not stall the shared dispatcher and every other
+/// tenant's traffic. Only the PJRT client, which is genuinely
+/// single-threaded and non-`Send`, is built on the dispatcher.
+pub(crate) fn factory(spec: BackendSpec) -> Result<BackendFactory, ImagineError> {
     let kind = spec.kind;
-    let started = match kind {
+    Ok(match kind {
         BackendKind::Ideal => {
             let BackendSpec { model, params, workers, .. } = spec;
-            engine::start(
-                move || {
-                    Ok(Box::new(BatchIdeal::new(model, params, workers)?)
-                        as Box<dyn BatchBackend>)
-                },
-                cfg,
-                occupancy,
-            )
+            let backend =
+                BatchIdeal::new(model, params, workers).map_err(|e| map_start_error(kind, e))?;
+            Box::new(move || Ok(Box::new(backend) as Box<dyn BatchBackend>))
         }
         BackendKind::Analog => {
             let BackendSpec { model, params, seed, noise, calibrate, workers, .. } = spec;
-            engine::start(
-                move || {
-                    Ok(Box::new(AnalogPool::new(
-                        model, params, seed, noise, calibrate, workers,
-                    )?) as Box<dyn BatchBackend>)
-                },
-                cfg,
-                occupancy,
-            )
+            let backend = AnalogPool::new(model, params, seed, noise, calibrate, workers)
+                .map_err(|e| map_start_error(kind, e))?;
+            Box::new(move || Ok(Box::new(backend) as Box<dyn BatchBackend>))
         }
         BackendKind::Pjrt => {
             let Some((dir, name)) = spec.artifacts else {
                 return Err(ImagineError::BackendUnavailable {
                     backend: kind,
                     reason: "the PJRT backend needs an artifact directory \
-                             (SessionBuilder::from_artifacts / --dir)"
+                             (Deployment::from_artifacts / --dir)"
                         .to_string(),
                 });
             };
             let hlo = std::path::Path::new(&dir).join(format!("{name}.hlo.txt"));
             let mut input_shape = vec![1usize];
             input_shape.extend(&spec.model.input_shape);
-            engine::start(
-                move || {
-                    let mut runtime = Runtime::new()?;
-                    runtime.load_hlo_text(&name, &hlo)?;
-                    Ok(Box::new(PjrtBackend { runtime, model_name: name, input_shape })
-                        as Box<dyn BatchBackend>)
-                },
-                cfg,
-                occupancy,
-            )
+            Box::new(move || {
+                let mut runtime = Runtime::new()?;
+                runtime.load_hlo_text(&name, &hlo)?;
+                Ok(Box::new(PjrtBackend { runtime, model_name: name, input_shape })
+                    as Box<dyn BatchBackend>)
+            })
         }
-    };
-    started.map_err(|e| match kind {
+    })
+}
+
+/// Classify a backend start failure crossing the facade boundary.
+pub(crate) fn map_start_error(kind: BackendKind, e: anyhow::Error) -> ImagineError {
+    match kind {
         // A PJRT start failure is an availability problem (stub runtime,
         // missing/broken HLO) — never silently fall back to a simulator
         // that would serve numerically different logits.
@@ -127,5 +125,5 @@ pub(crate) fn start(
             reason: format!("{e:#}"),
         },
         _ => ImagineError::Engine { message: format!("{e:#}") },
-    })
+    }
 }

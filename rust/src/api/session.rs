@@ -1,9 +1,13 @@
-//! The [`Session`] facade: one precision-aware builder over every
-//! backend.
+//! Session configuration: the precision-aware knob surface shared by
+//! the [`ModelHub`](super::ModelHub) and the single-model
+//! [`SessionBuilder`] facade.
 //!
 //! IMAGINE's headline feature is workload-adaptive 1-to-8b precision;
-//! this module makes that knob (plus supply, corner, backend and the
-//! batching/parallelism controls) the crate's user-facing contract:
+//! this module holds the knobs that express it — [`BackendKind`], the
+//! `--precision/--supply/--corner` parsers, the distribution-aware
+//! [`apply_precision`] reshaping, and the resolved [`SessionConfig`] the
+//! server's `info` command reports. The single-model path is a builder
+//! over a one-deployment hub:
 //!
 //! ```no_run
 //! use imagine::api::{BackendKind, Session};
@@ -22,19 +26,19 @@
 //! ```
 //!
 //! Every frontend — `imagine run`, `imagine serve`, the examples — goes
-//! through this one path, so a backend constructed from the CLI is the
-//! same backend the server and the tests exercise.
+//! through the hub, so a backend constructed from the CLI is the same
+//! backend the server and the tests exercise.
 
 use super::error::ImagineError;
-use super::registry;
+use super::hub::{Deployment, ModelHub, Session};
 use crate::config::params::{Corner, MacroParams, Supply};
 use crate::coordinator::manifest::{Layer, NetworkModel};
-use crate::engine::{default_workers, EngineConfig, EngineHandle, EngineSnapshot, Pending};
+use crate::engine::default_workers;
 use crate::util::json::{arr_usize, obj, Json};
 use crate::util::stats::AtomicHistogram;
 use std::sync::Arc;
 
-/// Which inference backend a [`Session`] drives.
+/// Which inference backend a deployment drives.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum BackendKind {
     /// Batched closed-form macro contract (fast, bit-exact vs the python
@@ -73,17 +77,96 @@ impl BackendKind {
         })
     }
 
-    /// The backend `--backend auto` resolves to for a model in `dir`:
+    /// [`BackendKind::auto_resolve`] for a deployment that also wants a
+    /// (r_in, r_out) precision override: the HLO artifact's arithmetic
+    /// is fixed at compile time, so `auto` + precision must pick the
+    /// re-targetable ideal engine even when a PJRT artifact is runnable
+    /// — "auto" exists to pick a *workable* backend, and the reason
+    /// string records the trade.
+    pub fn auto_resolve_at(
+        dir: &str,
+        name: &str,
+        precision: Option<(u32, u32)>,
+    ) -> (BackendKind, String) {
+        let (kind, note) = BackendKind::auto_resolve(dir, name);
+        if kind == BackendKind::Pjrt && precision.is_some() {
+            return (
+                BackendKind::Ideal,
+                "auto: a precision override was requested but the HLO artifact's \
+                 arithmetic is fixed at compile time — picked the batched ideal \
+                 engine instead"
+                    .to_string(),
+            );
+        }
+        (kind, note)
+    }
+
+    /// Resolve `--backend auto` for a model in `dir`, and say *why*:
     /// PJRT when this build can run the HLO artifact, otherwise the
-    /// batched ideal engine.
-    pub fn auto_for(dir: &str, name: &str) -> BackendKind {
+    /// batched ideal engine. The reason string names the decisive fact
+    /// (feature compiled out vs missing `.hlo.txt`) so a resolved-config
+    /// report never hides a silent fallback.
+    pub fn auto_resolve(dir: &str, name: &str) -> (BackendKind, String) {
         let hlo = std::path::Path::new(dir).join(format!("{name}.hlo.txt"));
-        if cfg!(feature = "pjrt") && hlo.exists() {
-            BackendKind::Pjrt
+        let have_hlo = hlo.exists();
+        let hlo = hlo.display();
+        if cfg!(feature = "pjrt") && have_hlo {
+            (
+                BackendKind::Pjrt,
+                format!("auto: running the PJRT HLO artifact at {hlo}"),
+            )
+        } else if cfg!(feature = "pjrt") {
+            (
+                BackendKind::Ideal,
+                format!("auto: no HLO artifact at {hlo} — fell back to the batched ideal engine"),
+            )
+        } else if have_hlo {
+            (
+                BackendKind::Ideal,
+                format!(
+                    "auto: HLO artifact present at {hlo} but the `pjrt` feature is not \
+                     compiled in — fell back to the batched ideal engine"
+                ),
+            )
         } else {
-            BackendKind::Ideal
+            (
+                BackendKind::Ideal,
+                format!(
+                    "auto: `pjrt` feature not compiled in and no HLO artifact at {hlo} — \
+                     using the batched ideal engine"
+                ),
+            )
         }
     }
+
+    /// The backend `--backend auto` resolves to for a model in `dir`
+    /// (see [`BackendKind::auto_resolve`] for the reasoned variant).
+    pub fn auto_for(dir: &str, name: &str) -> BackendKind {
+        BackendKind::auto_resolve(dir, name).0
+    }
+}
+
+/// Patch layer summaries to a resolved (r_in, r_out) operating point —
+/// the one place deploy-time defaults and per-handle overrides share,
+/// so the two reporting paths cannot drift.
+pub(crate) fn retarget_summaries(layers: &mut [LayerSummary], precision: Option<(u32, u32)>) {
+    if let Some((r_in, r_out)) = precision {
+        for layer in layers {
+            layer.r_in = r_in;
+            layer.r_out = r_out;
+        }
+    }
+}
+
+/// Check a (r_in, r_out) pair against the macro's 1..=8 range.
+pub(crate) fn validate_precision(r_in: u32, r_out: u32) -> Result<(), ImagineError> {
+    if !(1..=8).contains(&r_in) || !(1..=8).contains(&r_out) {
+        return Err(ImagineError::InvalidConfig {
+            field: "precision",
+            message: format!("r_in={r_in} r_out={r_out} outside the macro's 1..=8 range"),
+        });
+    }
+    Ok(())
 }
 
 /// Parse a `--precision` value: `R` (both sides) or `R_IN,R_OUT`
@@ -143,34 +226,28 @@ pub fn parse_corner(s: &str) -> Result<Corner, ImagineError> {
 }
 
 /// Re-shape a model to a new (r_in, r_out) operating point, preserving
-/// each layer's real-valued full-scale range: the input quantization
-/// grid is re-spread over the same activation range and the post-ADC
-/// gain is rescaled so recentered outputs keep their magnitude — the
-/// software analogue of the paper's distribution-aware data reshaping
-/// when the precision knob moves. Weight precision (`r_w`) is a storage
-/// property of the compiled model and is left untouched.
+/// each layer's real-valued full-scale range — the software analogue of
+/// the paper's distribution-aware data reshaping when the precision knob
+/// moves (see [`NetworkModel::retarget_precision`], which this
+/// delegates to). Weight precision (`r_w`) is a storage property of the
+/// compiled model and is left untouched.
 ///
-/// Callers must keep `r_in`/`r_out` in 1..=8 (the macro's range);
-/// [`SessionBuilder::build`] validates this before applying.
+/// Callers must keep `r_in`/`r_out` in 1..=8 (the macro's range); the
+/// hub and builders validate this before applying. The engine backends
+/// reuse the same reshaping per (deployment, precision) route key, which
+/// is what makes a per-request precision override bit-identical to a
+/// session built at that precision.
 pub fn apply_precision(model: &mut NetworkModel, r_in: u32, r_out: u32) {
-    for layer in &mut model.layers {
-        let old_m = ((1u32 << layer.cfg.r_in) - 1) as f32;
-        let new_m = ((1u32 << r_in) - 1) as f32;
-        let old_half = (1u32 << (layer.cfg.r_out - 1)) as f32;
-        let new_half = (1u32 << (r_out - 1)) as f32;
-        layer.a_scale *= old_m / new_m;
-        layer.out_gain *= old_half / new_half;
-        layer.cfg.r_in = r_in;
-        layer.cfg.r_out = r_out;
-    }
+    model.retarget_precision(r_in, r_out);
 }
 
-/// Per-layer structure summary of the model a [`Session`] serves — what
-/// the server's `graph_info` command reports alongside the engine's
+/// Per-layer structure summary of the model a session serves — what the
+/// server's `graph_info` command reports alongside the engine's
 /// per-layer modeled [`LayerCost`](crate::energy::system::LayerCost).
-/// Captured at build time (after any precision reshaping), so it
-/// reflects the *resolved* operating point, and kept independent of the
-/// weights so the session does not retain the model tensors.
+/// Captured at deploy time at the deployment's default operating point
+/// (and re-patched per precision-override handle), so it reflects the
+/// *resolved* precision, and kept independent of the weights so sessions
+/// do not retain the model tensors.
 #[derive(Clone, Debug)]
 pub struct LayerSummary {
     pub name: String,
@@ -192,7 +269,7 @@ pub struct LayerSummary {
 }
 
 impl LayerSummary {
-    fn from_layer(layer: &Layer) -> LayerSummary {
+    pub(crate) fn from_layer(layer: &Layer) -> LayerSummary {
         LayerSummary {
             name: layer.name.clone(),
             kind: layer.kind.name(),
@@ -224,16 +301,21 @@ impl LayerSummary {
     }
 }
 
-/// The resolved configuration of a built [`Session`] — what the server's
-/// versioned `info` command reports.
+/// The resolved configuration of a deployment (and of the session
+/// handles over it) — what the server's versioned `info` command
+/// reports.
 #[derive(Clone, Debug)]
 pub struct SessionConfig {
+    /// The deployment name this configuration is served under.
     pub model: String,
     pub input_shape: Vec<usize>,
     pub input_len: usize,
     pub backend: BackendKind,
-    /// The (r_in, r_out) override, if one was applied (`None` keeps the
-    /// per-layer manifest precision).
+    /// Why this backend was chosen when it was resolved (`--backend
+    /// auto`) rather than requested — never a silent fallback.
+    pub backend_note: Option<String>,
+    /// The session's effective (r_in, r_out) operating point (`None`
+    /// keeps the per-layer manifest precision).
     pub precision: Option<(u32, u32)>,
     pub supply: Supply,
     pub corner: Corner,
@@ -257,7 +339,7 @@ impl SessionConfig {
             ]),
             None => Json::Null,
         };
-        obj(vec![
+        let mut pairs = vec![
             ("model", Json::Str(self.model.clone())),
             ("backend", Json::Str(self.backend.name().to_string())),
             ("input_shape", arr_usize(&self.input_shape)),
@@ -276,7 +358,11 @@ impl SessionConfig {
             ("flush_micros", Json::Num(self.flush_micros as f64)),
             ("seed", Json::Num(self.seed as f64)),
             ("engine", Json::Str(self.engine.clone())),
-        ])
+        ];
+        if let Some(note) = &self.backend_note {
+            pairs.push(("backend_note", Json::Str(note.clone())));
+        }
+        obj(pairs)
     }
 
     /// One-line summary for logs.
@@ -285,7 +371,7 @@ impl SessionConfig {
             Some((r_in, r_out)) => format!("r_in={r_in} r_out={r_out}"),
             None => "manifest per-layer".to_string(),
         };
-        format!(
+        let mut line = format!(
             "{} via {} [{}] | precision {} | supply {:.2}/{:.2} V | corner {} | \
              batch {} x {} workers | flush {} us | seed {}",
             self.model,
@@ -299,45 +385,37 @@ impl SessionConfig {
             self.workers,
             self.flush_micros,
             self.seed
-        )
+        );
+        if let Some(note) = &self.backend_note {
+            line.push_str(&format!(" | {note}"));
+        }
+        line
     }
 }
 
-/// Builder for a [`Session`]; start from [`Session::builder`] (in-memory
-/// model) or [`SessionBuilder::from_artifacts`] (compiled artifacts).
+/// Builder for a single-model [`Session`]: a [`Deployment`] spec plus
+/// the engine knobs, deployed into a private one-model
+/// [`ModelHub`](super::ModelHub) at [`SessionBuilder::build`]. Start
+/// from [`Session::builder`] (in-memory model) or
+/// [`SessionBuilder::from_artifacts`] (compiled artifacts). Multi-model
+/// serving builds the hub directly and deploys named specs instead.
 pub struct SessionBuilder {
-    model: NetworkModel,
-    artifacts: Option<(String, String)>,
-    params: Option<MacroParams>,
-    backend: BackendKind,
-    precision: Option<(u32, u32)>,
-    supply: Option<Supply>,
-    corner: Option<Corner>,
+    spec: Deployment,
     batch: usize,
     workers: usize,
     flush_micros: u64,
     seed: u64,
-    noise: bool,
-    calibrate: bool,
     occupancy: Option<Arc<AtomicHistogram>>,
 }
 
 impl SessionBuilder {
-    fn new(model: NetworkModel) -> Self {
+    pub(crate) fn new(spec: Deployment) -> Self {
         SessionBuilder {
-            model,
-            artifacts: None,
-            params: None,
-            backend: BackendKind::Ideal,
-            precision: None,
-            supply: None,
-            corner: None,
+            spec,
             batch: 32,
             workers: default_workers(),
             flush_micros: 500,
             seed: 42,
-            noise: true,
-            calibrate: true,
             occupancy: None,
         }
     }
@@ -345,45 +423,48 @@ impl SessionBuilder {
     /// Load `<dir>/<name>.manifest.json` and remember the artifact
     /// directory (so [`BackendKind::Pjrt`] can find the HLO file).
     pub fn from_artifacts(dir: &str, name: &str) -> Result<SessionBuilder, ImagineError> {
-        let model = NetworkModel::load(dir, name).map_err(|e| ImagineError::ModelLoad {
-            model: name.to_string(),
-            message: format!("{e:#}"),
-        })?;
-        Ok(SessionBuilder::new(model).artifacts(dir, name))
+        Ok(SessionBuilder::new(Deployment::from_artifacts(dir, name)?))
     }
 
     /// Point the PJRT backend at `<dir>/<name>.hlo.txt`.
     pub fn artifacts(mut self, dir: &str, name: &str) -> Self {
-        self.artifacts = Some((dir.to_string(), name.to_string()));
+        self.spec = self.spec.artifacts(dir, name);
         self
     }
 
     pub fn backend(mut self, kind: BackendKind) -> Self {
-        self.backend = kind;
+        self.spec = self.spec.backend(kind);
+        self
+    }
+
+    /// Why the backend was chosen, when resolved via
+    /// [`BackendKind::auto_resolve`]; surfaces in the `info` output.
+    pub fn backend_note(mut self, note: impl Into<String>) -> Self {
+        self.spec = self.spec.backend_note(note);
         self
     }
 
     /// Override every layer's (r_in, r_out) operating point; see
     /// [`apply_precision`].
     pub fn precision(mut self, r_in: u32, r_out: u32) -> Self {
-        self.precision = Some((r_in, r_out));
+        self.spec = self.spec.precision(r_in, r_out);
         self
     }
 
     pub fn supply(mut self, supply: Supply) -> Self {
-        self.supply = Some(supply);
+        self.spec = self.spec.supply(supply);
         self
     }
 
     pub fn corner(mut self, corner: Corner) -> Self {
-        self.corner = Some(corner);
+        self.spec = self.spec.corner(corner);
         self
     }
 
     /// Base macro parameters (defaults to [`MacroParams::paper`]);
     /// `supply`/`corner` settings apply on top.
     pub fn params(mut self, params: MacroParams) -> Self {
-        self.params = Some(params);
+        self.spec = self.spec.params(params);
         self
     }
 
@@ -413,13 +494,13 @@ impl SessionBuilder {
 
     /// Temporal noise on/off (analog backend).
     pub fn noise(mut self, on: bool) -> Self {
-        self.noise = on;
+        self.spec = self.spec.noise(on);
         self
     }
 
     /// Run SA-offset calibration before inference (analog backend).
     pub fn calibrate(mut self, on: bool) -> Self {
-        self.calibrate = on;
+        self.spec = self.spec.calibrate(on);
         self
     }
 
@@ -430,204 +511,21 @@ impl SessionBuilder {
         self
     }
 
-    /// Validate the configuration, reshape the model if a precision
-    /// override is set, and start the engine through the backend
-    /// registry.
+    /// Validate the configuration, start a one-deployment hub and
+    /// return the session handle over it.
     pub fn build(self) -> Result<Session, ImagineError> {
-        if let Some((r_in, r_out)) = self.precision {
-            if !(1..=8).contains(&r_in) || !(1..=8).contains(&r_out) {
-                return Err(ImagineError::InvalidConfig {
-                    field: "precision",
-                    message: format!("r_in={r_in} r_out={r_out} outside the macro's 1..=8 range"),
-                });
-            }
+        let mut hub = ModelHub::builder()
+            .batch(self.batch)
+            .workers(self.workers)
+            .flush_micros(self.flush_micros)
+            .seed(self.seed);
+        if let Some(histogram) = self.occupancy {
+            hub = hub.occupancy(histogram);
         }
-        if self.batch == 0 {
-            return Err(ImagineError::InvalidConfig {
-                field: "batch",
-                message: "batch must be >= 1".to_string(),
-            });
-        }
-        if self.workers == 0 {
-            return Err(ImagineError::InvalidConfig {
-                field: "workers",
-                message: "workers must be >= 1".to_string(),
-            });
-        }
-
-        let mut model = self.model;
-        if let Some((r_in, r_out)) = self.precision {
-            apply_precision(&mut model, r_in, r_out);
-        }
-        let mut params = self.params.unwrap_or_else(MacroParams::paper);
-        if let Some(supply) = self.supply {
-            params.supply = supply;
-        }
-        if let Some(corner) = self.corner {
-            params.corner = corner;
-        }
-        let (supply, corner) = (params.supply, params.corner);
-
-        let model_name = model.name.clone();
-        let input_shape = model.input_shape.clone();
-        let input_len = input_shape.iter().product();
-        let layers = model.layers.iter().map(LayerSummary::from_layer).collect();
-        let cfg = EngineConfig {
-            batch: self.batch,
-            workers: self.workers,
-            flush_micros: self.flush_micros,
-        };
-        let handle = registry::start(
-            registry::BackendSpec {
-                kind: self.backend,
-                model,
-                params,
-                seed: self.seed,
-                noise: self.noise,
-                calibrate: self.calibrate,
-                workers: self.workers,
-                artifacts: self.artifacts,
-            },
-            cfg,
-            self.occupancy,
-        )?;
-        let config = SessionConfig {
-            model: model_name,
-            input_shape,
-            input_len,
-            backend: self.backend,
-            precision: self.precision,
-            supply,
-            corner,
-            batch: self.batch,
-            workers: self.workers,
-            flush_micros: self.flush_micros,
-            seed: self.seed,
-            engine: handle.describe().to_string(),
-            layers,
-        };
-        Ok(Session { handle, config: Arc::new(config) })
-    }
-}
-
-/// An in-flight inference submitted through [`Session::submit`].
-pub struct PendingInference(Pending);
-
-impl PendingInference {
-    /// Block until the logits arrive.
-    pub fn wait(self) -> Result<Vec<f32>, ImagineError> {
-        self.0.wait().map_err(ImagineError::engine)
-    }
-
-    /// Non-blocking poll: `None` while the batch is still in flight.
-    pub fn try_wait(&self) -> Option<Result<Vec<f32>, ImagineError>> {
-        self.0.try_wait().map(|r| r.map_err(ImagineError::engine))
-    }
-}
-
-/// A running inference session: a configured backend behind the engine
-/// work-queue, shared by every caller thread (cheap to clone).
-#[derive(Clone)]
-pub struct Session {
-    handle: EngineHandle,
-    config: Arc<SessionConfig>,
-}
-
-impl Session {
-    /// Start building a session over an in-memory model.
-    pub fn builder(model: NetworkModel) -> SessionBuilder {
-        SessionBuilder::new(model)
-    }
-
-    /// Wrap an already-started engine (tests and embedders plugging
-    /// custom [`BatchBackend`](crate::engine::BatchBackend)s).
-    pub fn from_handle(handle: EngineHandle, config: SessionConfig) -> Session {
-        Session { handle, config: Arc::new(config) }
-    }
-
-    /// The resolved configuration this session runs with.
-    pub fn config(&self) -> &SessionConfig {
-        &self.config
-    }
-
-    /// Expected flattened input length per image.
-    pub fn input_len(&self) -> usize {
-        self.config.input_len
-    }
-
-    /// The model's natural input shape.
-    pub fn input_shape(&self) -> &[usize] {
-        &self.config.input_shape
-    }
-
-    /// Per-layer structure of the served model (resolved precision) —
-    /// pairs with the per-layer costs in [`Session::snapshot`].
-    pub fn layers(&self) -> &[LayerSummary] {
-        &self.config.layers
-    }
-
-    /// Human-readable backend description.
-    pub fn describe(&self) -> &str {
-        &self.config.engine
-    }
-
-    /// The underlying engine handle (server plumbing).
-    pub fn engine(&self) -> &EngineHandle {
-        &self.handle
-    }
-
-    fn check_image(&self, image: &[f32], index: usize) -> Result<(), ImagineError> {
-        if image.len() != self.config.input_len {
-            return Err(ImagineError::Input {
-                message: format!(
-                    "image {index}: expected {} values, got {}",
-                    self.config.input_len,
-                    image.len()
-                ),
-            });
-        }
-        Ok(())
-    }
-
-    /// Blocking single-image inference → logits. Concurrent callers are
-    /// coalesced into engine batches.
-    pub fn infer_one(&self, image: Vec<f32>) -> Result<Vec<f32>, ImagineError> {
-        self.check_image(&image, 0)?;
-        self.handle.infer(image).map_err(ImagineError::engine)
-    }
-
-    /// Run a whole batch as one backend dispatch (deterministic die
-    /// split on the analog backend, regardless of concurrent traffic).
-    /// Copies the batch; use [`Session::infer_batch_owned`] on hot paths
-    /// that can hand the images over.
-    pub fn infer_batch(&self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, ImagineError> {
-        self.infer_batch_owned(images.to_vec())
-    }
-
-    /// [`Session::infer_batch`] without the copy: takes ownership of the
-    /// images and moves them straight into the engine queue.
-    pub fn infer_batch_owned(&self, images: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>, ImagineError> {
-        for (i, image) in images.iter().enumerate() {
-            self.check_image(image, i)?;
-        }
-        self.handle
-            .infer_batch(images)
-            .map_err(ImagineError::engine)
-    }
-
-    /// Asynchronous submission: enqueue now, [`PendingInference::wait`]
-    /// later. The engine queue coalesces outstanding submissions.
-    pub fn submit(&self, image: Vec<f32>) -> Result<PendingInference, ImagineError> {
-        self.check_image(&image, 0)?;
-        self.handle
-            .submit(image)
-            .map(PendingInference)
-            .map_err(ImagineError::engine)
-    }
-
-    /// Engine counters plus the backend's modeled accelerator cost.
-    pub fn snapshot(&self) -> Result<EngineSnapshot, ImagineError> {
-        self.handle.snapshot().map_err(ImagineError::engine)
+        let hub = hub.build()?;
+        let name = self.spec.model_name().to_string();
+        hub.deploy(&name, self.spec)?;
+        hub.session(&name)
     }
 }
 
@@ -644,11 +542,29 @@ mod tests {
     }
 
     #[test]
-    fn auto_backend_defaults_to_ideal_without_artifacts() {
-        assert_eq!(
-            BackendKind::auto_for("/nonexistent", "nope"),
-            BackendKind::Ideal
+    fn auto_backend_defaults_to_ideal_with_a_reason() {
+        let (kind, reason) = BackendKind::auto_resolve("/nonexistent", "nope");
+        assert_eq!(kind, BackendKind::Ideal);
+        // The reason names the decisive fact, not just the outcome.
+        assert!(
+            reason.contains("pjrt") || reason.contains("HLO"),
+            "uninformative reason: {reason}"
         );
+        assert!(reason.contains("/nonexistent"), "{reason}");
+        assert_eq!(BackendKind::auto_for("/nonexistent", "nope"), kind);
+    }
+
+    #[test]
+    fn auto_resolution_never_picks_pjrt_for_a_precision_override() {
+        // auto + precision must land on a re-targetable backend; on a
+        // pjrt-less build that is ideal either way, but the contract is
+        // asserted for both spellings (the pjrt-capable case is covered
+        // by auto_resolve_at's kind check itself).
+        for precision in [None, Some((4, 4)), Some((1, 8))] {
+            let (kind, reason) = BackendKind::auto_resolve_at("/nonexistent", "nope", precision);
+            assert_eq!(kind, BackendKind::Ideal, "{reason}");
+            assert_ne!(kind, BackendKind::Pjrt);
+        }
     }
 
     #[test]
@@ -687,7 +603,7 @@ mod tests {
         assert_eq!(layers.len(), 2);
         assert_eq!(layers[0].kind, "dense");
         assert_eq!((layers[0].in_features, layers[0].out_features), (72, 24));
-        // Summaries are captured after apply_precision.
+        // Summaries are captured at the resolved operating point.
         assert!(layers.iter().all(|l| l.r_in == 4 && l.r_out == 6));
         assert!(layers[0].relu && !layers[1].relu);
         assert_eq!(layers[1].pool, "none");

@@ -219,6 +219,141 @@ impl NetworkModel {
         }
     }
 
+    /// Write `<dir>/<name>.manifest.json` + `<dir>/<name>.imgt` — the
+    /// inverse of [`NetworkModel::load`], matching the python compile
+    /// path's export format. This is what lets tests (and embedders)
+    /// produce artifacts the server's `{"cmd":"deploy"}` hot-load path
+    /// can pick up without the python toolchain.
+    pub fn save(&self, dir: impl AsRef<Path>, name: &str) -> Result<()> {
+        use crate::util::json::{arr_usize, obj};
+        use crate::util::tensorfile::{Tensor, TensorData};
+
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+        let weights_file = format!("{name}.imgt");
+        let mut tf = TensorFile::new();
+        let mut layers_json = Vec::new();
+        for layer in &self.layers {
+            let w: Vec<i8> = layer
+                .w_phys
+                .iter()
+                .map(|&v| {
+                    i8::try_from(v).map_err(|_| anyhow!("{}: weight {v} outside i8", layer.name))
+                })
+                .collect::<Result<_>>()?;
+            let beta: Vec<i8> = layer
+                .beta
+                .iter()
+                .map(|&v| {
+                    i8::try_from(v).map_err(|_| anyhow!("{}: beta {v} outside i8", layer.name))
+                })
+                .collect::<Result<_>>()?;
+            tf.push(Tensor {
+                name: format!("{}/w_phys", layer.name),
+                dims: vec![layer.rows, layer.out_features],
+                data: TensorData::I8(w),
+            });
+            tf.push(Tensor {
+                name: format!("{}/beta", layer.name),
+                dims: vec![layer.out_features],
+                data: TensorData::I8(beta),
+            });
+            tf.push(Tensor {
+                name: format!("{}/a_scale", layer.name),
+                dims: vec![1],
+                data: TensorData::F32(vec![layer.a_scale]),
+            });
+            tf.push(Tensor {
+                name: format!("{}/out_gain", layer.name),
+                dims: vec![1],
+                data: TensorData::F32(vec![layer.out_gain]),
+            });
+            let pool = match layer.pool {
+                Pool::None => Json::Null,
+                p => Json::Str(p.name().to_string()),
+            };
+            layers_json.push(obj(vec![
+                ("name", Json::Str(layer.name.clone())),
+                ("kind", Json::Str(layer.kind.name().to_string())),
+                ("in_features", Json::Num(layer.in_features as f64)),
+                ("out_features", Json::Num(layer.out_features as f64)),
+                ("relu", Json::Bool(layer.relu)),
+                ("stride", Json::Num(layer.stride as f64)),
+                ("pool", pool),
+                ("rows", Json::Num(layer.rows as f64)),
+                (
+                    "cfg",
+                    obj(vec![
+                        ("r_in", Json::Num(layer.cfg.r_in as f64)),
+                        ("r_w", Json::Num(layer.cfg.r_w as f64)),
+                        ("r_out", Json::Num(layer.cfg.r_out as f64)),
+                        ("gamma", Json::Num(layer.cfg.gamma)),
+                        (
+                            "connected_units",
+                            Json::Num(layer.cfg.connected_units as f64),
+                        ),
+                    ]),
+                ),
+            ]));
+        }
+        tf.save(dir.join(&weights_file))?;
+        let manifest = obj(vec![
+            ("format", Json::Str("imagine-model-v1".to_string())),
+            ("name", Json::Str(self.name.clone())),
+            ("weights_file", Json::Str(weights_file)),
+            ("input_shape", arr_usize(&self.input_shape)),
+            ("layers", Json::Arr(layers_json)),
+            ("metrics", self.metrics.clone()),
+        ]);
+        let man_path = dir.join(format!("{name}.manifest.json"));
+        std::fs::write(&man_path, manifest.to_string_compact())
+            .with_context(|| format!("writing {man_path:?}"))
+    }
+
+    /// Re-shape every layer to a new (r_in, r_out) operating point,
+    /// preserving each layer's real-valued full-scale range: the input
+    /// quantization grid is re-spread over the same activation range and
+    /// the post-ADC gain is rescaled so recentered outputs keep their
+    /// magnitude — the software analogue of the paper's
+    /// distribution-aware data reshaping when the precision knob moves.
+    /// Weight precision (`r_w`) is a storage property of the compiled
+    /// model and is left untouched.
+    ///
+    /// Callers must keep `r_in`/`r_out` in 1..=8 (the macro's range);
+    /// the `api` layer validates this before applying. Re-targeting is
+    /// not float-associative across chained calls — to hop between
+    /// operating points bit-identically, always re-target a pristine
+    /// copy of the as-compiled model (what the engine backends do).
+    pub fn retarget_precision(&mut self, r_in: u32, r_out: u32) {
+        for layer in &mut self.layers {
+            let old_m = ((1u32 << layer.cfg.r_in) - 1) as f32;
+            let new_m = ((1u32 << r_in) - 1) as f32;
+            let old_half = (1u32 << (layer.cfg.r_out - 1)) as f32;
+            let new_half = (1u32 << (r_out - 1)) as f32;
+            layer.a_scale *= old_m / new_m;
+            layer.out_gain *= old_half / new_half;
+            layer.cfg.r_in = r_in;
+            layer.cfg.r_out = r_out;
+        }
+    }
+
+    /// Restore the precision-dependent scalar fields (`a_scale`,
+    /// `out_gain`, `cfg.r_in`, `cfg.r_out`) from `other` — same
+    /// compiled topology required. The engine backends re-target with
+    /// this instead of cloning the whole model: restore the pristine
+    /// scalars, then [`NetworkModel::retarget_precision`] — the exact
+    /// float operations a fresh pristine clone would see, without
+    /// copying any weight tensor (weights are precision-independent).
+    pub fn copy_precision_fields_from(&mut self, other: &NetworkModel) {
+        debug_assert_eq!(self.layers.len(), other.layers.len());
+        for (layer, base) in self.layers.iter_mut().zip(&other.layers) {
+            layer.a_scale = base.a_scale;
+            layer.out_gain = base.out_gain;
+            layer.cfg.r_in = base.cfg.r_in;
+            layer.cfg.r_out = base.cfg.r_out;
+        }
+    }
+
     /// Recorded test accuracy from the compile path, if present.
     pub fn trained_accuracy(&self) -> Option<f64> {
         self.metrics.get("test_acc").and_then(Json::as_f64)
@@ -363,6 +498,36 @@ mod tests {
         let conv = Layer::synthetic_conv3("c0", 5, 12, 2, Pool::Max2, (4, 2, 6), &mut rng, &p);
         assert_eq!(conv.rows, 2 * p.rows_per_unit); // ceil(5/4) = 2 units
         assert_eq!(conv.cfg.connected_units, 2);
+    }
+
+    #[test]
+    fn save_load_roundtrip_is_exact() {
+        // The rust-side exporter (what the server's hot-deploy tests
+        // feed) must round-trip through load bit-exactly.
+        let p = MacroParams::paper();
+        let m = NetworkModel::synthetic_mlp(&[30, 12, 5], 8, 4, 8, 21, &p);
+        let dir = std::env::temp_dir().join(format!("imagine_manifest_rt_{}", std::process::id()));
+        m.save(&dir, "rt").unwrap();
+        let loaded = NetworkModel::load(&dir, "rt").unwrap();
+        assert_eq!(loaded.name, m.name);
+        assert_eq!(loaded.input_shape, m.input_shape);
+        assert_eq!(loaded.layers.len(), m.layers.len());
+        for (a, b) in loaded.layers.iter().zip(&m.layers) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.kind, b.kind);
+            assert_eq!((a.in_features, a.out_features, a.rows), (b.in_features, b.out_features, b.rows));
+            assert_eq!((a.relu, a.stride, a.pool), (b.relu, b.stride, b.pool));
+            assert_eq!(
+                (a.cfg.r_in, a.cfg.r_w, a.cfg.r_out, a.cfg.connected_units),
+                (b.cfg.r_in, b.cfg.r_w, b.cfg.r_out, b.cfg.connected_units)
+            );
+            assert_eq!(a.cfg.gamma, b.cfg.gamma);
+            assert_eq!(a.w_phys, b.w_phys);
+            assert_eq!(a.beta, b.beta);
+            assert_eq!(a.a_scale.to_bits(), b.a_scale.to_bits());
+            assert_eq!(a.out_gain.to_bits(), b.out_gain.to_bits());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,45 +1,72 @@
-//! Batch inference server — the deployable face of the coordinator.
+//! Multi-tenant batch inference server — the deployable face of the
+//! coordinator.
 //!
-//! ### Protocol (version 2)
+//! ### Protocol (version 3)
 //!
-//! Line-delimited JSON over TCP. Requests:
+//! Line-delimited JSON over TCP. One process serves many named models
+//! over one shared engine ([`ModelHub`]); every inference request may
+//! name its model and its (r_in, r_out) precision. Requests:
 //!
-//! * `{"image": [f32...]}` — run inference (length must match the
-//!   model's input length); response
-//!   `{"logits": [...], "class": k, "micros": t}` (non-finite logits are
-//!   serialized as `null` — JSON has no NaN);
-//! * `{"cmd": "info"}` — the active session configuration: protocol
-//!   version, model, backend, precision/supply/corner, batching knobs,
-//!   plus live engine counters and the modeled accelerator energy;
-//! * `{"cmd": "graph_info"}` — the served model's layer graph: one entry
-//!   per macro-mapped layer (kind, features, rows, r_in/r_out, γ, fused
-//!   relu/pool) with the per-layer modeled accelerator cost accumulated
-//!   over everything executed (cycles, energy, 8b-normalized EE);
+//! * `{"image": [f32...], "model": "mnist", "precision": "2,4"}` — run
+//!   inference. `model` falls back to the default deployment (the
+//!   earliest still-deployed model) and `precision` (a number `R` or a
+//!   string `"R_IN,R_OUT"`) falls back to the deployment's default;
+//!   per-request precision produces logits bit-identical to a dedicated
+//!   session built at that precision. Response
+//!   `{"model": "mnist", "logits": [...], "class": k, "micros": t}`
+//!   (non-finite logits are serialized as `null` — JSON has no NaN);
+//! * `{"cmd": "models"}` — the deployment registry: the default model
+//!   plus every deployment's backend, shapes, default precision and
+//!   served image count;
+//! * `{"cmd": "deploy", "name": "m2", "dir": "artifacts", "manifest":
+//!   "mlp784", "backend": "auto", "precision": 4}` — hot-load a model
+//!   from tensorfile artifacts while traffic flows (`manifest` defaults
+//!   to `name`; deploying over an existing name is a hot reload);
+//! * `{"cmd": "undeploy", "name": "m2"}` — unload a model; concurrent
+//!   connections stay up, requests to the gone model get in-band errors;
+//! * `{"cmd": "info", "model": ..., "precision": ...}` — one
+//!   deployment's resolved configuration (including *why* `--backend
+//!   auto` chose its backend), plus live engine counters and the modeled
+//!   accelerator energy;
+//! * `{"cmd": "graph_info", "model": ...}` — a served model's layer
+//!   graph with per-layer modeled accelerator cost;
 //! * `{"cmd": "stats"}` — aggregate serving counters and latency /
 //!   batch-occupancy percentiles;
-//! * `{"cmd": "quit"}` — close the connection.
+//! * `{"cmd": "quit"}` — close this connection;
+//! * `{"cmd": "shutdown"}` — gracefully stop the whole server: stop
+//!   accepting, let in-flight requests finish, drain the engine queue,
+//!   then return from `serve` (SIGINT does the same in `imagine serve`).
 //!
 //! Errors are reported in-band as `{"error": "..."}` lines.
 //!
 //! Concurrency model: every connection gets its own handler thread, and
-//! all handlers share one [`Session`] into the engine layer's work-queue
-//! scheduler — concurrent requests coalesce into batches instead of
-//! serializing on a global executor lock. The backend behind the session
-//! is whatever the caller selected through the
-//! [`SessionBuilder`](crate::api::SessionBuilder) registry (`imagine
-//! serve --backend ideal|analog|pjrt|auto`).
+//! all handlers share one [`ModelHub`] into the engine layer's
+//! work-queue scheduler — concurrent requests coalesce per (deployment,
+//! precision) key instead of serializing on a global executor lock.
 
-use crate::api::Session;
+use crate::api::{parse_precision, Deployment, ImagineError, ModelHub, Session};
 use crate::util::json::{arr_usize, obj, Json};
 use crate::util::stats::{argmax_f32 as argmax, pow2_bounds, AtomicHistogram};
 use anyhow::{Context, Result};
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Version of the line-JSON protocol, reported by `info` and `stats`.
-pub const PROTOCOL_VERSION: u32 = 2;
+pub const PROTOCOL_VERSION: u32 = 3;
+
+/// How long connection handlers block in `read` before checking the
+/// server stop flag (bounds graceful-shutdown latency for idle
+/// connections).
+const READ_POLL: Duration = Duration::from_millis(250);
+
+/// Upper bound on a blocked response write: generous enough for a slow
+/// reader, but a client that stops draining its socket cannot pin a
+/// handler thread (and with it, graceful shutdown) forever.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// Aggregate serving statistics: counters plus latency / batch-occupancy
 /// histograms (p50/p99, not just the mean).
@@ -127,7 +154,112 @@ impl Stats {
     }
 }
 
-/// The `info` command: session configuration + live engine counters.
+/// Everything the connection handlers share: the hub, the counters, and
+/// the graceful-shutdown flag.
+pub struct ServerState {
+    hub: ModelHub,
+    pub stats: Stats,
+    stop: AtomicBool,
+}
+
+impl ServerState {
+    pub fn new(hub: ModelHub, stats: Stats) -> ServerState {
+        ServerState { hub, stats, stop: AtomicBool::new(false) }
+    }
+
+    pub fn hub(&self) -> &ModelHub {
+        &self.hub
+    }
+
+    /// Ask the server to shut down gracefully: stop accepting, finish
+    /// in-flight requests, drain the engine, return from `serve`.
+    pub fn request_stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    pub fn stop_requested(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+}
+
+/// Per-connection cache of routed session handles, keyed by the
+/// request's (model, precision) pair (`None` model = the default
+/// deployment). Handles are revalidated against the hub so a hot
+/// reload or undeploy is picked up on the next request. Lookups are
+/// allocation-free on the steady-state hit path (named models probe a
+/// `&str`-borrowable map; a key `String` is built only on a miss).
+#[derive(Default)]
+pub struct SessionCache {
+    named: HashMap<String, HashMap<Option<(u32, u32)>, Session>>,
+    default: HashMap<Option<(u32, u32)>, Session>,
+}
+
+impl SessionCache {
+    pub fn new() -> SessionCache {
+        SessionCache::default()
+    }
+
+    fn resolve(
+        &mut self,
+        hub: &ModelHub,
+        model: Option<&str>,
+        precision: Option<(u32, u32)>,
+    ) -> Result<Session, ImagineError> {
+        let cached = match model {
+            Some(name) => self.named.get(name).and_then(|m| m.get(&precision)),
+            None => self.default.get(&precision),
+        };
+        if let Some(session) = cached {
+            if session.is_live() {
+                return Ok(session.clone());
+            }
+        }
+        let base = match model {
+            Some(name) => hub.session(name)?,
+            None => hub.default_session()?,
+        };
+        let session = match precision {
+            Some((r_in, r_out)) => base.with_precision(r_in, r_out)?,
+            None => base,
+        };
+        match model {
+            Some(name) => {
+                self.named
+                    .entry(name.to_string())
+                    .or_default()
+                    .insert(precision, session.clone());
+            }
+            None => {
+                self.default.insert(precision, session.clone());
+            }
+        }
+        Ok(session)
+    }
+}
+
+fn error_json(message: impl std::fmt::Display) -> String {
+    obj(vec![("error", Json::Str(format!("{message}")))]).to_string_compact()
+}
+
+/// The request's precision override: a number `R` or a string
+/// `"R_IN,R_OUT"`; absent/null = the deployment default.
+fn request_precision(parsed: &Json) -> Result<Option<(u32, u32)>, ImagineError> {
+    match parsed.get("precision") {
+        None | Some(Json::Null) => Ok(None),
+        Some(Json::Str(s)) => parse_precision(s).map(Some),
+        Some(other) => match other.as_usize() {
+            Some(r) => parse_precision(&r.to_string()).map(Some),
+            None => Err(ImagineError::Parse {
+                what: "precision",
+                value: other.to_string_compact(),
+                expected: "R or \"R_IN,R_OUT\" with bits in 1..=8",
+            }),
+        },
+    }
+}
+
+/// The `info` command: one deployment's resolved configuration + its
+/// live engine counters.
 fn info_json(session: &Session) -> Json {
     let mut map = match session.config().to_json() {
         Json::Obj(map) => map,
@@ -153,7 +285,7 @@ fn info_json(session: &Session) -> Json {
     Json::Obj(map)
 }
 
-/// The `graph_info` command: the served layer graph plus the engine's
+/// The `graph_info` command: a served layer graph plus the engine's
 /// per-layer modeled accelerator cost (accumulated over the images
 /// executed so far — zero until the first inference).
 fn graph_info_json(session: &Session) -> Json {
@@ -187,7 +319,7 @@ fn graph_info_json(session: &Session) -> Json {
         .collect();
     obj(vec![
         ("protocol", Json::Num(PROTOCOL_VERSION as f64)),
-        ("model", Json::Str(session.config().model.clone())),
+        ("model", Json::Str(session.model().to_string())),
         ("input_shape", arr_usize(session.input_shape())),
         ("n_layers", Json::Num(layers.len() as f64)),
         ("layers", Json::Arr(layers)),
@@ -198,30 +330,181 @@ fn graph_info_json(session: &Session) -> Json {
     ])
 }
 
-/// Handle one request line; returns the response line (never fails the
-/// connection — errors are reported in-band).
-pub fn handle_line(session: &Session, stats: &Stats, line: &str) -> Option<String> {
+/// The `models` command: the deployment registry.
+fn models_json(hub: &ModelHub) -> Json {
+    let models: Vec<Json> = hub
+        .deployments()
+        .into_iter()
+        .map(|(name, config)| {
+            let images = hub
+                .session(&name)
+                .ok()
+                .and_then(|s| s.snapshot().ok())
+                .map(|s| s.images)
+                .unwrap_or(0);
+            let precision = match config.precision {
+                Some((r_in, r_out)) => obj(vec![
+                    ("r_in", Json::Num(r_in as f64)),
+                    ("r_out", Json::Num(r_out as f64)),
+                ]),
+                None => Json::Null,
+            };
+            let mut pairs = vec![
+                ("name", Json::Str(name)),
+                ("backend", Json::Str(config.backend.name().to_string())),
+                ("input_shape", arr_usize(&config.input_shape)),
+                ("input_len", Json::Num(config.input_len as f64)),
+                ("precision", precision),
+                ("images", Json::Num(images as f64)),
+            ];
+            if let Some(note) = &config.backend_note {
+                pairs.push(("backend_note", Json::Str(note.clone())));
+            }
+            obj(pairs)
+        })
+        .collect();
+    obj(vec![
+        ("protocol", Json::Num(PROTOCOL_VERSION as f64)),
+        (
+            "default",
+            hub.default_model().map(Json::Str).unwrap_or(Json::Null),
+        ),
+        ("n_models", Json::Num(models.len() as f64)),
+        ("models", Json::Arr(models)),
+    ])
+}
+
+/// The `deploy` command: hot-load a model from tensorfile artifacts.
+fn cmd_deploy(state: &ServerState, parsed: &Json) -> Result<String, ImagineError> {
+    let Some(name) = parsed.get("name").and_then(Json::as_str) else {
+        return Err(ImagineError::InvalidConfig {
+            field: "name",
+            message: "deploy needs a \"name\"".to_string(),
+        });
+    };
+    let dir = parsed.get("dir").and_then(Json::as_str).unwrap_or("artifacts");
+    let manifest = parsed.get("manifest").and_then(Json::as_str).unwrap_or(name);
+    let precision = request_precision(parsed)?;
+    let mut spec = Deployment::from_artifacts(dir, manifest)?;
+    let backend_s = parsed.get("backend").and_then(Json::as_str).unwrap_or("auto");
+    if backend_s == "auto" {
+        // A requested default precision steers auto away from PJRT
+        // (whose arithmetic is fixed at compile time).
+        let (kind, note) = crate::api::BackendKind::auto_resolve_at(dir, manifest, precision);
+        spec = spec.backend(kind).backend_note(note);
+    } else {
+        spec = spec.backend(crate::api::BackendKind::parse(backend_s)?);
+    }
+    if let Some((r_in, r_out)) = precision {
+        spec = spec.precision(r_in, r_out);
+    }
+    if let Some(seed) = parsed.get("seed").and_then(Json::as_usize) {
+        spec = spec.seed(seed as u64);
+    }
+    state.hub.deploy(name, spec)?;
+    let config = state.hub.session(name)?.config().clone();
+    let mut map = match config.to_json() {
+        Json::Obj(map) => map,
+        _ => unreachable!("SessionConfig::to_json returns an object"),
+    };
+    map.insert("protocol".to_string(), Json::Num(PROTOCOL_VERSION as f64));
+    map.insert("deployed".to_string(), Json::Str(name.to_string()));
+    Ok(Json::Obj(map).to_string_compact())
+}
+
+/// Handle one request line; returns the response line, or `None` to
+/// close the connection (`quit`). Never fails the connection — errors
+/// are reported in-band.
+pub fn handle_line(state: &ServerState, cache: &mut SessionCache, line: &str) -> Option<String> {
+    let stats = &state.stats;
     let parsed = match Json::parse(line) {
         Ok(j) => j,
         Err(e) => {
             stats.errors.fetch_add(1, Ordering::Relaxed);
-            return Some(
-                obj(vec![("error", Json::Str(format!("bad json: {e}")))]).to_string_compact(),
-            );
+            return Some(error_json(format!("bad json: {e}")));
         }
     };
     if let Some(cmd) = parsed.get("cmd").and_then(Json::as_str) {
+        let model = parsed.get("model").and_then(Json::as_str);
         return match cmd {
-            "info" => Some(info_json(session).to_string_compact()),
-            "graph_info" => Some(graph_info_json(session).to_string_compact()),
+            "info" | "graph_info" => {
+                let precision = match request_precision(&parsed) {
+                    Ok(p) => p,
+                    Err(e) => {
+                        stats.errors.fetch_add(1, Ordering::Relaxed);
+                        return Some(error_json(e));
+                    }
+                };
+                match cache.resolve(&state.hub, model, precision) {
+                    Ok(session) if cmd == "info" => {
+                        Some(info_json(&session).to_string_compact())
+                    }
+                    Ok(session) => Some(graph_info_json(&session).to_string_compact()),
+                    Err(e) => {
+                        stats.errors.fetch_add(1, Ordering::Relaxed);
+                        Some(error_json(e))
+                    }
+                }
+            }
+            "models" => Some(models_json(&state.hub).to_string_compact()),
+            "deploy" => match cmd_deploy(state, &parsed) {
+                Ok(resp) => Some(resp),
+                Err(e) => {
+                    stats.errors.fetch_add(1, Ordering::Relaxed);
+                    Some(error_json(e))
+                }
+            },
+            "undeploy" => {
+                let Some(name) = parsed.get("name").and_then(Json::as_str) else {
+                    stats.errors.fetch_add(1, Ordering::Relaxed);
+                    return Some(error_json("undeploy needs a \"name\""));
+                };
+                match state.hub.undeploy(name) {
+                    Ok(()) => Some(
+                        obj(vec![
+                            ("protocol", Json::Num(PROTOCOL_VERSION as f64)),
+                            ("undeployed", Json::Str(name.to_string())),
+                        ])
+                        .to_string_compact(),
+                    ),
+                    Err(e) => {
+                        stats.errors.fetch_add(1, Ordering::Relaxed);
+                        Some(error_json(e))
+                    }
+                }
+            }
             "stats" => Some(stats.snapshot_json().to_string_compact()),
-            "quit" => None,
-            other => Some(
-                obj(vec![("error", Json::Str(format!("unknown cmd '{other}'")))])
+            "shutdown" => {
+                state.request_stop();
+                Some(
+                    obj(vec![
+                        ("protocol", Json::Num(PROTOCOL_VERSION as f64)),
+                        ("shutting_down", Json::Bool(true)),
+                    ])
                     .to_string_compact(),
-            ),
+                )
+            }
+            "quit" => None,
+            other => Some(error_json(format!("unknown cmd '{other}'"))),
         };
     }
+
+    // Inference request: optional per-request model + precision routing.
+    let model = parsed.get("model").and_then(Json::as_str);
+    let precision = match request_precision(&parsed) {
+        Ok(p) => p,
+        Err(e) => {
+            stats.errors.fetch_add(1, Ordering::Relaxed);
+            return Some(error_json(e));
+        }
+    };
+    let session = match cache.resolve(&state.hub, model, precision) {
+        Ok(s) => s,
+        Err(e) => {
+            stats.errors.fetch_add(1, Ordering::Relaxed);
+            return Some(error_json(e));
+        }
+    };
     let image: Option<Vec<f32>> = parsed.get("image").and_then(Json::as_arr).map(|a| {
         a.iter()
             .map(|v| v.as_f64().unwrap_or(f64::NAN) as f32)
@@ -231,16 +514,10 @@ pub fn handle_line(session: &Session, stats: &Stats, line: &str) -> Option<Strin
         Some(v) if v.len() == session.input_len() && v.iter().all(|x| x.is_finite()) => v,
         _ => {
             stats.errors.fetch_add(1, Ordering::Relaxed);
-            return Some(
-                obj(vec![(
-                    "error",
-                    Json::Str(format!(
-                        "expected 'image' with {} finite values",
-                        session.input_len()
-                    )),
-                )])
-                .to_string_compact(),
-            );
+            return Some(error_json(format!(
+                "expected 'image' with {} finite values",
+                session.input_len()
+            )));
         }
     };
     let t0 = std::time::Instant::now();
@@ -261,6 +538,7 @@ pub fn handle_line(session: &Session, stats: &Stats, line: &str) -> Option<Strin
             );
             Some(
                 obj(vec![
+                    ("model", Json::Str(session.model().to_string())),
                     ("logits", logits_json),
                     ("class", Json::Num(argmax(&logits) as f64)),
                     ("micros", Json::Num(us as f64)),
@@ -270,95 +548,248 @@ pub fn handle_line(session: &Session, stats: &Stats, line: &str) -> Option<Strin
         }
         Err(e) => {
             stats.errors.fetch_add(1, Ordering::Relaxed);
-            Some(obj(vec![("error", Json::Str(format!("{e}")))]).to_string_compact())
+            Some(error_json(e))
         }
     }
 }
 
-fn serve_conn(session: &Session, stats: &Stats, stream: TcpStream) -> Result<()> {
+fn serve_conn(state: &ServerState, stream: TcpStream) -> Result<()> {
+    // Bounded reads so idle connections notice a graceful shutdown, and
+    // bounded writes so a client that stops reading responses cannot
+    // pin this handler (a timed-out write drops the connection).
+    stream
+        .set_read_timeout(Some(READ_POLL))
+        .context("setting read timeout")?;
+    stream
+        .set_write_timeout(Some(WRITE_TIMEOUT))
+        .context("setting write timeout")?;
     let mut writer = stream.try_clone().context("cloning stream")?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        match handle_line(session, stats, &line) {
-            Some(resp) => {
-                writer.write_all(resp.as_bytes())?;
-                writer.write_all(b"\n")?;
+    let mut reader = BufReader::new(stream);
+    let mut cache = SessionCache::new();
+    // Accumulate raw bytes, not a String: read_line's UTF-8 guard
+    // discards everything a call appended when a timeout lands mid
+    // multi-byte character, silently corrupting the request stream.
+    // read_until keeps partial bytes across timeouts; UTF-8 is only
+    // decoded once a full line is in hand.
+    let mut line = Vec::new();
+    loop {
+        match reader.read_until(b'\n', &mut line) {
+            Ok(0) => break, // EOF
+            Ok(_) => {
+                let quit = {
+                    let text = String::from_utf8_lossy(&line);
+                    let text = text.trim();
+                    if text.is_empty() {
+                        false
+                    } else {
+                        match handle_line(state, &mut cache, text) {
+                            Some(resp) => {
+                                writer.write_all(resp.as_bytes())?;
+                                writer.write_all(b"\n")?;
+                                false
+                            }
+                            None => true,
+                        }
+                    }
+                };
+                if quit {
+                    break;
+                }
+                line.clear();
+                // A busy connection must also observe a graceful stop:
+                // finish the request just handled, then close, instead
+                // of out-running the read-timeout check forever.
+                if state.stop_requested() {
+                    break;
+                }
             }
-            None => break, // quit
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // `line` keeps any bytes already read; the next
+                // read_until call appends the rest of the request.
+                if state.stop_requested() {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
         }
     }
     Ok(())
 }
 
 /// Serve on an already-bound listener (tests bind port 0 and pass the
-/// listener in). Each connection runs on its own thread sharing one
-/// session; `max_conns` stops *accepting* after N connections, then
-/// waits for the in-flight handlers to finish before returning.
+/// listener in). Each connection runs on its own thread sharing the
+/// state's hub; `max_conns` stops *accepting* after N connections. The
+/// loop also stops when [`ServerState::request_stop`] fires (the
+/// `shutdown` command or SIGINT); either way it waits for the in-flight
+/// handlers to finish and drains the engine queue before returning —
+/// queued work is never abandoned.
 pub fn serve_listener(
-    session: Session,
-    stats: &Stats,
+    state: &ServerState,
     listener: TcpListener,
     max_conns: Option<usize>,
 ) -> Result<()> {
+    listener
+        .set_nonblocking(true)
+        .context("setting listener non-blocking")?;
     std::thread::scope(|scope| -> Result<()> {
         let mut conns = 0usize;
-        for stream in listener.incoming() {
-            // A transient accept failure (ECONNABORTED, EMFILE under load)
-            // must not tear down the server and its live connections.
-            let stream = match stream {
-                Ok(s) => s,
+        loop {
+            if state.stop_requested() {
+                break;
+            }
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    // The accepted socket must block (with the read
+                    // timeout serve_conn sets). A failure here is a
+                    // per-connection problem — drop the socket, keep
+                    // serving everyone else.
+                    if let Err(e) = stream.set_nonblocking(false) {
+                        eprintln!("accept error (set_nonblocking): {e}");
+                        continue;
+                    }
+                    scope.spawn(move || {
+                        let peer = stream.peer_addr().ok();
+                        if let Err(err) = serve_conn(state, stream) {
+                            eprintln!("connection error ({peer:?}): {err:#}");
+                        }
+                    });
+                    conns += 1;
+                    if let Some(max) = max_conns {
+                        if conns >= max {
+                            break;
+                        }
+                    }
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::Interrupted =>
+                {
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                // A transient accept failure (ECONNABORTED, EMFILE under
+                // load) must not tear down the server and its live
+                // connections.
                 Err(e) => {
                     eprintln!("accept error: {e}");
-                    continue;
-                }
-            };
-            let conn_session = session.clone();
-            scope.spawn(move || {
-                let peer = stream.peer_addr().ok();
-                if let Err(err) = serve_conn(&conn_session, stats, stream) {
-                    eprintln!("connection error ({peer:?}): {err:#}");
-                }
-            });
-            conns += 1;
-            if let Some(max) = max_conns {
-                if conns >= max {
-                    break;
+                    std::thread::sleep(Duration::from_millis(25));
                 }
             }
         }
         Ok(())
     })?;
-    eprintln!("server stats: {}", stats.snapshot_json().to_string_compact());
-    eprint!("{}", stats.render_summary());
+    // Every handler has exited; drain whatever is still queued in the
+    // engine (async submissions, work enqueued right before shutdown).
+    if let Err(e) = state.hub.drain() {
+        eprintln!("engine drain error: {e}");
+    }
+    sigint_release(state);
+    eprintln!(
+        "server stats: {}",
+        state.stats.snapshot_json().to_string_compact()
+    );
+    eprint!("{}", state.stats.render_summary());
     Ok(())
 }
 
-/// Bind `addr` and serve (blocks until `max_conns` is reached, if given).
-pub fn serve(
-    session: Session,
-    stats: &Stats,
-    addr: &str,
-    max_conns: Option<usize>,
-) -> Result<()> {
+/// Bind `addr` and serve (blocks until `max_conns` is reached or a stop
+/// is requested, then drains gracefully).
+pub fn serve(state: &ServerState, addr: &str, max_conns: Option<usize>) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     eprintln!(
-        "imagine server listening on {addr} ({} -> {})",
+        "imagine server listening on {addr} ({}), serving {:?} (default {:?})",
         listener.local_addr().map(|a| a.to_string()).unwrap_or_default(),
-        session.describe()
+        state.hub.models(),
+        state.hub.default_model(),
     );
-    serve_listener(session, stats, listener, max_conns)
+    serve_listener(state, listener, max_conns)
+}
+
+#[cfg(unix)]
+static SIGINT_HIT: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+#[cfg(unix)]
+static SIGINT_ACTIVE: std::sync::Mutex<Option<Arc<ServerState>>> = std::sync::Mutex::new(None);
+
+/// Install a SIGINT handler that requests a graceful server stop (drain
+/// in-flight engine batches, then return from `serve`) instead of
+/// killing the process with queued work. A second Ctrl-C while a stop
+/// is already in progress force-quits (exit 130) — the drain may be
+/// stuck behind a wedged batch. One watcher thread serves the whole
+/// process: re-installing for a later server re-points it, and
+/// `serve_listener` releases the registration (dropping the state) when
+/// it returns, so a Ctrl-C with no server running exits instead of
+/// being swallowed. No-op off unix.
+#[cfg(unix)]
+pub fn install_sigint_stop(state: Arc<ServerState>) {
+    static WATCHER: std::sync::Once = std::sync::Once::new();
+    extern "C" fn on_sigint(_sig: i32) {
+        // Only async-signal-safe work here: set the flag, nothing else.
+        SIGINT_HIT.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        // libc is linked by std on unix; declare the one symbol we need
+        // rather than pulling a crate into the vendored dependency set.
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    *SIGINT_ACTIVE.lock().unwrap() = Some(state);
+    WATCHER.call_once(|| {
+        const SIGINT: i32 = 2;
+        let _ = unsafe { signal(SIGINT, on_sigint) };
+        std::thread::spawn(|| loop {
+            // swap, not load: consume each signal exactly once.
+            if SIGINT_HIT.swap(false, Ordering::SeqCst) {
+                let active = SIGINT_ACTIVE.lock().unwrap().clone();
+                match active {
+                    Some(state) if !state.stop_requested() => {
+                        eprintln!(
+                            "SIGINT: draining in-flight batches, shutting down \
+                             (Ctrl-C again to force quit)..."
+                        );
+                        state.request_stop();
+                    }
+                    // Stop already in progress (wedged drain?) or no
+                    // server registered: behave like an unhandled ^C.
+                    _ => {
+                        eprintln!("SIGINT: exiting immediately");
+                        std::process::exit(130);
+                    }
+                }
+            }
+            std::thread::sleep(Duration::from_millis(100));
+        });
+    });
+}
+
+#[cfg(not(unix))]
+pub fn install_sigint_stop(_state: Arc<ServerState>) {}
+
+/// Drop the SIGINT registration if it points at `state` — called when
+/// its server returns, so the watcher does not retain a dead hub or
+/// swallow signals meant for nobody.
+fn sigint_release(state: &ServerState) {
+    #[cfg(unix)]
+    {
+        let mut active = SIGINT_ACTIVE.lock().unwrap();
+        if let Some(current) = active.as_ref() {
+            if std::ptr::eq(current.as_ref(), state) {
+                *active = None;
+            }
+        }
+    }
+    #[cfg(not(unix))]
+    let _ = state;
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::api::{BackendKind, SessionConfig};
-    use crate::config::params::{Corner, Supply};
-    use crate::engine::{self, BatchBackend, EngineConfig};
+    use crate::api::{BackendKind, ModelHub, SessionConfig};
+    use crate::config::params::{Corner, MacroParams, Supply};
+    use crate::coordinator::manifest::NetworkModel;
+    use crate::engine::BatchBackend;
 
     #[test]
     fn argmax_basic() {
@@ -382,6 +813,7 @@ mod tests {
             input_shape: vec![input_len],
             input_len,
             backend: BackendKind::Ideal,
+            backend_note: None,
             precision: None,
             supply: Supply::NOMINAL,
             corner: Corner::Tt,
@@ -392,6 +824,10 @@ mod tests {
             engine: "test backend".to_string(),
             layers: Vec::new(),
         }
+    }
+
+    fn state_over(hub: ModelHub) -> ServerState {
+        ServerState::new(hub, Stats::default())
     }
 
     #[test]
@@ -405,20 +841,19 @@ mod tests {
                 Ok(images.iter().map(|_| vec![f32::NAN, 0.5, f32::NAN]).collect())
             }
         }
-        let cfg = EngineConfig { batch: 2, workers: 1, flush_micros: 50 };
-        let handle = engine::start(
-            || Ok(Box::new(NanBackend) as Box<dyn BatchBackend>),
-            cfg,
-            None,
-        )
+        let hub = ModelHub::builder().batch(2).workers(1).flush_micros(50).build().unwrap();
+        hub.deploy_custom("test", test_config(2), || {
+            Ok(Box::new(NanBackend) as Box<dyn BatchBackend>)
+        })
         .unwrap();
-        let session = Session::from_handle(handle, test_config(2));
-        let stats = Stats::default();
-        let resp = handle_line(&session, &stats, r#"{"image": [0.1, 0.2]}"#).unwrap();
+        let state = state_over(hub);
+        let mut cache = SessionCache::new();
+        let resp = handle_line(&state, &mut cache, r#"{"image": [0.1, 0.2]}"#).unwrap();
         // The response must stay parseable JSON (NaN logits become null)
         // and carry a class instead of panicking the handler.
         let j = Json::parse(&resp).expect(&resp);
         assert_eq!(j.get("class").unwrap().as_f64(), Some(2.0), "{resp}");
+        assert_eq!(j.get("model").unwrap().as_str(), Some("test"), "{resp}");
         let logits = j.get("logits").unwrap().as_arr().unwrap();
         assert_eq!(logits[0], Json::Null);
         assert_eq!(logits[1].as_f64(), Some(0.5));
@@ -426,15 +861,13 @@ mod tests {
 
     #[test]
     fn graph_info_reports_layers_and_per_layer_costs() {
-        use crate::config::params::MacroParams;
-        use crate::coordinator::manifest::NetworkModel;
-
         let p = MacroParams::paper();
         let model = NetworkModel::synthetic_mlp(&[36, 12, 3], 8, 4, 8, 2, &p);
-        let session = Session::builder(model).workers(1).batch(2).build().unwrap();
-        let stats = Stats::default();
+        let session = crate::api::Session::builder(model).workers(1).batch(2).build().unwrap();
+        let state = state_over(session.hub().clone());
+        let mut cache = SessionCache::new();
 
-        let resp = handle_line(&session, &stats, r#"{"cmd": "graph_info"}"#).unwrap();
+        let resp = handle_line(&state, &mut cache, r#"{"cmd": "graph_info"}"#).unwrap();
         let j = Json::parse(&resp).expect(&resp);
         assert_eq!(j.get("protocol").unwrap().as_f64(), Some(PROTOCOL_VERSION as f64));
         assert_eq!(j.get("n_layers").unwrap().as_f64(), Some(2.0));
@@ -446,9 +879,13 @@ mod tests {
 
         // After one inference the per-layer costs become non-zero and
         // (summed) match the aggregate snapshot cost.
-        handle_line(&session, &stats, &format!("{{\"image\": {:?}}}", vec![0.5f32; 36]))
-            .unwrap();
-        let resp = handle_line(&session, &stats, r#"{"cmd": "graph_info"}"#).unwrap();
+        handle_line(
+            &state,
+            &mut cache,
+            &format!("{{\"image\": {:?}}}", vec![0.5f32; 36]),
+        )
+        .unwrap();
+        let resp = handle_line(&state, &mut cache, r#"{"cmd": "graph_info"}"#).unwrap();
         let j = Json::parse(&resp).expect(&resp);
         assert_eq!(j.get("images").unwrap().as_f64(), Some(1.0));
         let layers = j.get("layers").unwrap().as_arr().unwrap();
@@ -459,7 +896,88 @@ mod tests {
         assert!(per_layer_sum > 0.0);
         let snap = session.snapshot().unwrap();
         let total = snap.cost.unwrap().e_total() * 1e6;
-        assert!((per_layer_sum - total).abs() < 1e-9 * total.max(1.0), "{per_layer_sum} vs {total}");
+        assert!(
+            (per_layer_sum - total).abs() < 1e-9 * total.max(1.0),
+            "{per_layer_sum} vs {total}"
+        );
+    }
+
+    #[test]
+    fn models_deploy_and_per_request_routing_through_handle_line() {
+        let p = MacroParams::paper();
+        let hub = ModelHub::builder().batch(4).workers(1).build().unwrap();
+        hub.deploy(
+            "a",
+            crate::api::Deployment::new(NetworkModel::synthetic_mlp(&[12, 3], 8, 4, 8, 5, &p)),
+        )
+        .unwrap();
+        hub.deploy(
+            "b",
+            crate::api::Deployment::new(NetworkModel::synthetic_mlp(&[20, 4], 8, 4, 8, 6, &p))
+                .precision(4, 4),
+        )
+        .unwrap();
+        let state = state_over(hub);
+        let mut cache = SessionCache::new();
+
+        // models lists both, default is the first deployed.
+        let resp = handle_line(&state, &mut cache, r#"{"cmd": "models"}"#).unwrap();
+        let j = Json::parse(&resp).expect(&resp);
+        assert_eq!(j.get("default").unwrap().as_str(), Some("a"));
+        assert_eq!(j.get("n_models").unwrap().as_f64(), Some(2.0));
+
+        // No model field → default deployment a (12 inputs).
+        let resp =
+            handle_line(&state, &mut cache, &format!("{{\"image\": {:?}}}", vec![0.5f32; 12]))
+                .unwrap();
+        assert!(resp.contains("\"model\":\"a\""), "{resp}");
+        // Explicit model + per-request precision → routed to b.
+        let resp = handle_line(
+            &state,
+            &mut cache,
+            &format!("{{\"model\": \"b\", \"precision\": 2, \"image\": {:?}}}", vec![0.5f32; 20]),
+        )
+        .unwrap();
+        assert!(resp.contains("\"model\":\"b\""), "{resp}");
+
+        // Unknown model and bad precision error in-band.
+        let resp = handle_line(
+            &state,
+            &mut cache,
+            &format!("{{\"model\": \"zzz\", \"image\": {:?}}}", vec![0.5f32; 12]),
+        )
+        .unwrap();
+        assert!(resp.contains("error") && resp.contains("zzz"), "{resp}");
+        let resp = handle_line(
+            &state,
+            &mut cache,
+            &format!("{{\"precision\": 9, \"image\": {:?}}}", vec![0.5f32; 12]),
+        )
+        .unwrap();
+        assert!(resp.contains("error"), "{resp}");
+
+        // Undeploy the default; the other model takes over as default.
+        let resp = handle_line(&state, &mut cache, r#"{"cmd": "undeploy", "name": "a"}"#).unwrap();
+        assert!(resp.contains("\"undeployed\":\"a\""), "{resp}");
+        let resp = handle_line(&state, &mut cache, r#"{"cmd": "models"}"#).unwrap();
+        let j = Json::parse(&resp).expect(&resp);
+        assert_eq!(j.get("default").unwrap().as_str(), Some("b"));
+        // The cached default-route session is revalidated, not reused.
+        let resp =
+            handle_line(&state, &mut cache, &format!("{{\"image\": {:?}}}", vec![0.5f32; 20]))
+                .unwrap();
+        assert!(resp.contains("\"model\":\"b\""), "{resp}");
+    }
+
+    #[test]
+    fn shutdown_command_requests_stop() {
+        let hub = ModelHub::builder().workers(1).build().unwrap();
+        let state = state_over(hub);
+        let mut cache = SessionCache::new();
+        assert!(!state.stop_requested());
+        let resp = handle_line(&state, &mut cache, r#"{"cmd": "shutdown"}"#).unwrap();
+        assert!(resp.contains("shutting_down"), "{resp}");
+        assert!(state.stop_requested());
     }
 
     #[test]

@@ -23,9 +23,22 @@ const DIE_SEED_STRIDE: u64 = 0x9E37_79B9_7F4A_7C15;
 /// A pool of independently-fabricated simulated dies.
 pub struct AnalogPool {
     dies: Vec<Executor>,
-    /// Per-layer modeled cost of one image (data-independent; the same
-    /// bookings every die makes as it executes).
+    params: MacroParams,
+    /// Pristine copy of the as-fabricated model. Precision re-targeting
+    /// re-shapes from here (never from an already-reshaped model, float
+    /// rescaling is not associative) and only touches the model each die
+    /// serves — the fabricated die state itself (mismatch draws, loaded
+    /// weights, ABN offsets, SA calibration) depends only on
+    /// precision-independent layer fields (`rows`, `w_phys`, `beta`,
+    /// `r_w`), which is what makes the re-target cheap: no re-fab, no
+    /// re-calibration, seeds and RNG chains untouched.
+    base: NetworkModel,
+    /// Per-layer modeled cost of one image at the current operating
+    /// point (data-independent; the same bookings every die makes).
     per_layer_image: Vec<LayerCost>,
+    /// Per-layer cost accumulated over everything executed (booked per
+    /// batch at the precision it actually ran at).
+    accum_layers: Vec<LayerCost>,
     /// Images executed (across all dies).
     pub images: u64,
 }
@@ -44,6 +57,7 @@ impl AnalogPool {
     ) -> Result<Self> {
         let workers = workers.max(1);
         let per_layer_image = crate::engine::ideal::network_layer_costs(&model, &params);
+        let accum_layers = vec![LayerCost::default(); model.layers.len()];
         let dies = (0..workers)
             .map(|d| {
                 Executor::new(
@@ -57,7 +71,34 @@ impl AnalogPool {
                 )
             })
             .collect::<Result<Vec<_>>>()?;
-        Ok(Self { dies, per_layer_image, images: 0 })
+        Ok(Self {
+            base: model,
+            params,
+            dies,
+            per_layer_image,
+            accum_layers,
+            images: 0,
+        })
+    }
+
+    /// Re-shape every die's served model to (r_in, r_out), or back to
+    /// the as-fabricated precision (`None`). The dies themselves are
+    /// untouched — see the `base` field docs — so a pool re-targeted to
+    /// some point behaves exactly like a pool freshly fabricated at that
+    /// point (same seeds, same mismatch, same calibration). Only the
+    /// per-layer precision scalars move (restored from base, then
+    /// re-derived through the same reshaping a fresh model would get):
+    /// no weight tensor is cloned, so interleaved multi-precision
+    /// traffic re-targets in O(dies × layers).
+    pub fn retarget(&mut self, precision: Option<(u32, u32)>) {
+        for die in &mut self.dies {
+            die.model.copy_precision_fields_from(&self.base);
+            if let Some((r_in, r_out)) = precision {
+                die.model.retarget_precision(r_in, r_out);
+            }
+        }
+        self.per_layer_image =
+            crate::engine::ideal::network_layer_costs(&self.dies[0].model, &self.params);
     }
 
     pub fn n_dies(&self) -> usize {
@@ -77,13 +118,9 @@ impl AnalogPool {
         total
     }
 
-    /// Accumulated per-layer modeled cost (the per-image bookings scaled
-    /// by the images executed across all dies).
+    /// Per-layer modeled cost accumulated over everything executed.
     pub fn layer_costs(&self) -> Vec<LayerCost> {
-        self.per_layer_image
-            .iter()
-            .map(|c| c.scaled(self.images))
-            .collect()
+        self.accum_layers.clone()
     }
 
     /// Run a batch of images, split contiguously across the dies; results
@@ -113,7 +150,11 @@ impl AnalogPool {
         for r in per_die {
             out.extend(r?);
         }
-        self.images += images.len() as u64;
+        let n = images.len() as u64;
+        self.images += n;
+        for (acc, per_image) in self.accum_layers.iter_mut().zip(&self.per_layer_image) {
+            acc.accumulate(&per_image.scaled(n));
+        }
         Ok(out)
     }
 }

@@ -29,11 +29,22 @@ pub struct BatchIdeal {
     pub params: MacroParams,
     /// Worker threads for the batched matmuls.
     pub workers: usize,
+    /// Pristine copy of the as-constructed model: precision re-targeting
+    /// always starts from here, never from an already-reshaped model, so
+    /// hopping between operating points stays bit-identical to a backend
+    /// freshly built at each point (float rescaling is not associative).
+    base: NetworkModel,
     contracts: Vec<IdealContract>,
-    /// Per-layer dataflow/energy cost of one image (data-independent).
+    /// Per-layer dataflow/energy cost of one image at the *current*
+    /// operating point (data-independent).
     per_layer_image: Vec<LayerCost>,
-    /// Dataflow/energy cost of one image through the whole network.
+    /// Dataflow/energy cost of one image through the whole network at
+    /// the current operating point.
     per_image_cost: LayerCost,
+    /// Per-layer cost accumulated over everything executed (booked at
+    /// dispatch time, so mixed-precision traffic accumulates each batch
+    /// at the precision it actually ran at).
+    accum_layers: Vec<LayerCost>,
     /// Accumulated cost over everything executed.
     pub cost: LayerCost,
     /// Images executed.
@@ -41,21 +52,24 @@ pub struct BatchIdeal {
 }
 
 impl BatchIdeal {
-    pub fn new(model: NetworkModel, params: MacroParams, workers: usize) -> Result<Self> {
-        // The blocked kernel accumulates in i32 (twice the SIMD lanes of
-        // i64). The executor path accumulates in i64, so guard the
-        // worst-case |Σ (2X−M)·W| per layer up front: any layer a sane
-        // manifest produces (r_in ≤ 8, |W| ≤ 15, ≤ 1152 rows → ≤ 4.4M)
-        // fits with ~500× headroom; a corrupt one fails loudly instead of
-        // silently wrapping away the bit-exactness contract.
+    /// The blocked kernel accumulates in i32 (twice the SIMD lanes of
+    /// i64). The executor path accumulates in i64, so guard the
+    /// worst-case |Σ (2X−M)·W| per layer up front: any layer a sane
+    /// manifest produces (r_in ≤ 8, |W| ≤ 15, ≤ 1152 rows → ≤ 4.4M)
+    /// fits with ~500× headroom; a corrupt one fails loudly instead of
+    /// silently wrapping away the bit-exactness contract. `precision`
+    /// checks a prospective (r_in, r_out) re-target point (a wider r_in
+    /// raises the bound) *before* any state is touched, keeping
+    /// re-targeting all-or-nothing.
+    fn validate_at(model: &NetworkModel, precision: Option<(u32, u32)>) -> Result<()> {
         for layer in &model.layers {
+            let r_in = precision.map(|(r_in, _)| r_in).unwrap_or(layer.cfg.r_in);
             ensure!(
-                layer.cfg.r_in <= 16,
-                "layer {}: r_in {} out of range for the batched engine",
-                layer.name,
-                layer.cfg.r_in
+                r_in <= 16,
+                "layer {}: r_in {r_in} out of range for the batched engine",
+                layer.name
             );
-            let m = (1i128 << layer.cfg.r_in) - 1;
+            let m = (1i128 << r_in) - 1;
             let w_max = layer.w_phys.iter().map(|w| (*w as i128).abs()).max().unwrap_or(0);
             let worst = layer.rows as i128 * m * w_max;
             ensure!(
@@ -66,6 +80,11 @@ impl BatchIdeal {
                 layer.rows
             );
         }
+        Ok(())
+    }
+
+    pub fn new(model: NetworkModel, params: MacroParams, workers: usize) -> Result<Self> {
+        Self::validate_at(&model, None)?;
         let contracts = model
             .layers
             .iter()
@@ -73,29 +92,57 @@ impl BatchIdeal {
             .collect();
         let per_layer_image = network_layer_costs(&model, &params);
         let per_image_cost = sum_costs(&per_layer_image);
+        let accum_layers = vec![LayerCost::default(); model.layers.len()];
         Ok(Self {
+            base: model.clone(),
             model,
             params,
             workers: workers.max(1),
             contracts,
             per_layer_image,
             per_image_cost,
+            accum_layers,
             cost: LayerCost::default(),
             images: 0,
         })
+    }
+
+    /// Re-shape the served model to (r_in, r_out), or back to its
+    /// as-constructed precision (`None`), re-deriving the per-layer
+    /// contracts and cost bookings. Always reshapes from the pristine
+    /// base operating point — restoring the base scalars and replaying
+    /// [`NetworkModel::retarget_precision`] performs the exact float
+    /// operations a fresh clone would see, so the results after any
+    /// sequence of re-targets are bit-identical to a `BatchIdeal` built
+    /// directly at the requested point, without cloning any weight
+    /// tensor (re-targeting is O(layers), so interleaved multi-precision
+    /// traffic does not thrash). All-or-nothing: a point that fails
+    /// validation leaves the backend untouched.
+    pub fn retarget(&mut self, precision: Option<(u32, u32)>) -> Result<()> {
+        Self::validate_at(&self.base, precision)?;
+        self.model.copy_precision_fields_from(&self.base);
+        if let Some((r_in, r_out)) = precision {
+            self.model.retarget_precision(r_in, r_out);
+        }
+        self.contracts = self
+            .model
+            .layers
+            .iter()
+            .map(|l| IdealContract::new(&self.params, l))
+            .collect();
+        self.per_layer_image = network_layer_costs(&self.model, &self.params);
+        self.per_image_cost = sum_costs(&self.per_layer_image);
+        Ok(())
     }
 
     pub fn input_len(&self) -> usize {
         self.model.input_shape.iter().product()
     }
 
-    /// Accumulated per-layer modeled cost (the per-image bookings scaled
-    /// by the images executed so far) — what the engine probe reports.
+    /// Per-layer modeled cost accumulated over everything executed —
+    /// what the engine probe reports.
     pub fn layer_costs(&self) -> Vec<LayerCost> {
-        self.per_layer_image
-            .iter()
-            .map(|c| c.scaled(self.images))
-            .collect()
+        self.accum_layers.clone()
     }
 
     /// Run a batch of images (each in the model's natural input layout)
@@ -119,9 +166,12 @@ impl BatchIdeal {
             acts = next;
             shape = next_shape;
         }
-        self.images += images.len() as u64;
-        self.cost
-            .accumulate(&self.per_image_cost.scaled(images.len() as u64));
+        let n = images.len() as u64;
+        self.images += n;
+        self.cost.accumulate(&self.per_image_cost.scaled(n));
+        for (acc, per_image) in self.accum_layers.iter_mut().zip(&self.per_layer_image) {
+            acc.accumulate(&per_image.scaled(n));
+        }
         Ok(acts)
     }
 }

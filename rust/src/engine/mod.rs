@@ -12,11 +12,16 @@
 //!   evaluation, bit-identical to the per-image executor;
 //! * [`analog`] — [`AnalogPool`]: one cloned circuit-behavioral die per
 //!   worker with deterministic per-die seeds;
-//! * [`queue`] — the work-queue scheduler ([`start`], [`EngineHandle`]):
-//!   concurrent callers submit single images, a dispatcher coalesces them
-//!   into batches (configurable size + flush interval) and runs whichever
-//!   [`BatchBackend`] is plugged in. This is what `imagine serve` uses
-//!   instead of a global `Mutex<Executor>`.
+//! * [`queue`] — the multi-tenant work-queue scheduler ([`start`],
+//!   [`EngineHandle`]): concurrent callers submit single images tagged
+//!   with a [`RouteKey`] (deployment id + requested precision), a
+//!   dispatcher coalesces same-key jobs into batches (configurable size +
+//!   flush interval), [`BatchBackend::retarget`]s the deployment's
+//!   backend when the requested (r_in, r_out) point changes, and runs the
+//!   batch. Backends are installed/removed at runtime
+//!   ([`EngineHandle::deploy`] / [`EngineHandle::undeploy`]) — this is
+//!   what the `ModelHub` serves every tenant through, instead of one
+//!   engine (and one precision) per process.
 
 pub mod analog;
 pub mod gemm;
@@ -26,5 +31,6 @@ pub mod queue;
 pub use analog::AnalogPool;
 pub use ideal::BatchIdeal;
 pub use queue::{
-    default_workers, start, BatchBackend, EngineConfig, EngineHandle, EngineSnapshot, Pending,
+    default_workers, start, BackendFactory, BatchBackend, DeploymentId, EngineConfig,
+    EngineHandle, EngineSnapshot, Pending, RouteKey,
 };

@@ -1,4 +1,5 @@
-//! Work-queue scheduler: coalesce concurrent requests into batches.
+//! Multi-tenant work-queue scheduler: coalesce concurrent requests into
+//! batches, routed per (deployment, precision) key.
 //!
 //! The serving problem the old `Mutex<Executor>` design had: N concurrent
 //! clients fully serialize, each paying the whole per-image cost, while
@@ -9,7 +10,17 @@
 //! at most `flush_micros` after the first arrival) and runs the whole
 //! batch through the backend at once.
 //!
-//! The backend is constructed *on* the dispatcher thread from a `Send`
+//! Since the ModelHub redesign, one dispatcher serves *many* backends: a
+//! [`RouteKey`] names the deployment and the requested (r_in, r_out)
+//! operating point, jobs only coalesce with jobs of the same key, and the
+//! dispatcher [`BatchBackend::retarget`]s a deployment's backend when the
+//! key's precision differs from the point it is currently shaped at.
+//! Backends are installed and removed at runtime with
+//! [`EngineHandle::deploy`] / [`EngineHandle::undeploy`] without stopping
+//! the dispatcher, and [`EngineHandle::drain`] is the graceful-shutdown
+//! barrier: it resolves once everything enqueued before it has executed.
+//!
+//! Backends are constructed *on* the dispatcher thread from a `Send`
 //! factory closure, so non-`Send` backends (the PJRT client is a
 //! single-threaded C handle) work unchanged — they simply live and die on
 //! the dispatcher.
@@ -17,10 +28,37 @@
 use crate::energy::system::LayerCost;
 use crate::util::stats::AtomicHistogram;
 use anyhow::{anyhow, Result};
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Identifies one deployed backend inside the dispatcher. The hub above
+/// maps names to ids; ids are never reused, so a stale handle to an
+/// undeployed (or replaced) model fails cleanly instead of hitting the
+/// wrong tenant.
+pub type DeploymentId = u64;
+
+/// Where a request is routed: which deployment, at which (r_in, r_out)
+/// operating point. `None` precision means the model's as-deployed
+/// manifest precision. Jobs coalesce into one batch only when their
+/// whole key matches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct RouteKey {
+    pub dep: DeploymentId,
+    pub precision: Option<(u32, u32)>,
+}
+
+impl RouteKey {
+    pub fn new(dep: DeploymentId, precision: Option<(u32, u32)>) -> RouteKey {
+        RouteKey { dep, precision }
+    }
+}
+
+/// Constructor closure for a deployment's backend; runs on the
+/// dispatcher thread (so the backend itself need not be `Send`).
+pub type BackendFactory = Box<dyn FnOnce() -> Result<Box<dyn BatchBackend>> + Send>;
 
 /// A pluggable batch-inference backend (ideal, analog pool, PJRT, …).
 pub trait BatchBackend {
@@ -53,6 +91,24 @@ pub trait BatchBackend {
     fn model_layer_costs(&self) -> Option<Vec<LayerCost>> {
         None
     }
+
+    /// Re-shape the served model to the (r_in, r_out) operating point
+    /// (`None` = back to the as-deployed manifest precision) without
+    /// rebuilding the backend — die state, seeds and calibration are
+    /// preserved. Implementations must re-shape from a pristine copy of
+    /// the deployed model so hopping between precisions never
+    /// accumulates float error (the per-request-precision contract:
+    /// results stay bit-identical to a backend freshly built at that
+    /// point). The default declines any explicit precision, which is
+    /// correct for backends with baked-in arithmetic (PJRT artifacts).
+    fn retarget(&mut self, precision: Option<(u32, u32)>) -> Result<()> {
+        match precision {
+            None => Ok(()),
+            Some((r_in, r_out)) => Err(anyhow!(
+                "this backend cannot re-target precision (requested r_in={r_in} r_out={r_out})"
+            )),
+        }
+    }
 }
 
 // Trait impls delegate to the inherent methods (inherent methods win name
@@ -84,6 +140,10 @@ impl BatchBackend for crate::engine::ideal::BatchIdeal {
     fn model_layer_costs(&self) -> Option<Vec<LayerCost>> {
         Some(self.layer_costs())
     }
+
+    fn retarget(&mut self, precision: Option<(u32, u32)>) -> Result<()> {
+        self.retarget(precision)
+    }
 }
 
 impl BatchBackend for crate::engine::analog::AnalogPool {
@@ -109,6 +169,11 @@ impl BatchBackend for crate::engine::analog::AnalogPool {
 
     fn model_layer_costs(&self) -> Option<Vec<LayerCost>> {
         Some(self.layer_costs())
+    }
+
+    fn retarget(&mut self, precision: Option<(u32, u32)>) -> Result<()> {
+        self.retarget(precision);
+        Ok(())
     }
 }
 
@@ -146,12 +211,12 @@ struct Job {
     resp: mpsc::Sender<std::result::Result<Vec<f32>, String>>,
 }
 
-/// Read-only state reported by the dispatcher on request.
+/// Read-only per-deployment state reported by the dispatcher on request.
 #[derive(Clone, Debug)]
 pub struct EngineSnapshot {
-    /// Images executed by the backend so far.
+    /// Images executed by this deployment's backend so far.
     pub images: u64,
-    /// Batches dispatched so far.
+    /// Batches dispatched to this deployment so far.
     pub batches: u64,
     /// Modeled accelerator cost, if the backend models one.
     pub cost: Option<LayerCost>,
@@ -160,23 +225,54 @@ pub struct EngineSnapshot {
     pub layer_costs: Option<Vec<LayerCost>>,
 }
 
-struct Probe {
-    images: u64,
-    cost: Option<LayerCost>,
-    layer_costs: Option<Vec<LayerCost>>,
-}
-
 enum Msg {
-    /// A single image to coalesce with concurrent submissions.
-    One(Job),
+    /// A single image to coalesce with concurrent same-key submissions.
+    One { key: RouteKey, job: Job },
     /// A caller-assembled batch, executed exactly as submitted (never
     /// merged with other traffic — keeps multi-die splits deterministic).
     Batch {
+        key: RouteKey,
         images: Vec<Vec<f32>>,
         resp: mpsc::Sender<std::result::Result<Vec<Vec<f32>>, String>>,
     },
-    /// Snapshot request, answered between dispatches.
-    Probe(mpsc::Sender<Probe>),
+    /// Per-deployment snapshot request (`None` reply = not deployed),
+    /// answered between dispatches.
+    Probe {
+        dep: DeploymentId,
+        resp: mpsc::Sender<Option<EngineSnapshot>>,
+    },
+    /// Install a backend under `dep`; the factory runs on the dispatcher
+    /// thread and the reply carries (input_len, describe) on success.
+    /// A default `precision` is probed (retargeted) immediately, so a
+    /// backend that cannot serve it fails the deploy instead of failing
+    /// every subsequent request.
+    Deploy {
+        dep: DeploymentId,
+        precision: Option<(u32, u32)>,
+        factory: BackendFactory,
+        resp: mpsc::Sender<std::result::Result<(usize, String), String>>,
+    },
+    /// Remove a backend; reply says whether it existed.
+    Undeploy {
+        dep: DeploymentId,
+        resp: mpsc::Sender<bool>,
+    },
+    /// Graceful-shutdown barrier: acked once everything enqueued before
+    /// it has been executed.
+    Drain { resp: mpsc::Sender<()> },
+}
+
+impl Msg {
+    /// Messages that stop the coalescing scan: they must execute in
+    /// queue order relative to the batches around them (a job enqueued
+    /// after an `Undeploy` must not be served by the removed backend;
+    /// `Drain` must not overtake work).
+    fn is_barrier(&self) -> bool {
+        matches!(
+            self,
+            Msg::Batch { .. } | Msg::Deploy { .. } | Msg::Undeploy { .. } | Msg::Drain { .. }
+        )
+    }
 }
 
 /// An in-flight single-image inference returned by
@@ -208,57 +304,79 @@ impl Pending {
     }
 }
 
-/// Cloneable handle for submitting inference requests to the dispatcher.
+/// Cloneable handle for submitting inference requests and managing
+/// deployments on the shared dispatcher.
 #[derive(Clone)]
 pub struct EngineHandle {
     tx: mpsc::Sender<Msg>,
-    input_len: usize,
-    describe: String,
     batches: Arc<AtomicU64>,
 }
 
 impl EngineHandle {
-    pub fn input_len(&self) -> usize {
-        self.input_len
-    }
-
-    pub fn describe(&self) -> &str {
-        &self.describe
-    }
-
-    /// Batches dispatched so far.
+    /// Batches dispatched so far, across all deployments.
     pub fn batches(&self) -> u64 {
         self.batches.load(Ordering::Relaxed)
     }
 
-    /// Enqueue one image without blocking; the dispatcher coalesces
-    /// concurrent submissions into batches.
-    pub fn submit(&self, image: Vec<f32>) -> Result<Pending> {
-        let (rtx, rrx) = mpsc::channel();
+    fn send(&self, msg: Msg) -> Result<()> {
         self.tx
-            .send(Msg::One(Job { image, resp: rtx }))
-            .map_err(|_| anyhow!("inference engine has shut down"))?;
+            .send(msg)
+            .map_err(|_| anyhow!("inference engine has shut down"))
+    }
+
+    /// Install a backend under `dep` (replacing nothing — ids are unique
+    /// by construction). Blocks until the factory ran on the dispatcher;
+    /// returns the backend's (input_len, description). If `precision`
+    /// is set it is retargeted immediately — the deploy fails up front
+    /// when the backend cannot serve its own default operating point.
+    pub fn deploy(
+        &self,
+        dep: DeploymentId,
+        precision: Option<(u32, u32)>,
+        factory: BackendFactory,
+    ) -> Result<(usize, String)> {
+        let (rtx, rrx) = mpsc::channel();
+        self.send(Msg::Deploy { dep, precision, factory, resp: rtx })?;
+        match rrx.recv() {
+            Ok(Ok(info)) => Ok(info),
+            Ok(Err(e)) => Err(anyhow!("engine backend failed to start: {e}")),
+            Err(_) => Err(anyhow!("inference engine dropped the deploy request")),
+        }
+    }
+
+    /// Remove a deployment's backend; returns whether it existed.
+    /// Requests already coalescing ahead of this message still complete.
+    pub fn undeploy(&self, dep: DeploymentId) -> Result<bool> {
+        let (rtx, rrx) = mpsc::channel();
+        self.send(Msg::Undeploy { dep, resp: rtx })?;
+        rrx.recv()
+            .map_err(|_| anyhow!("inference engine dropped the undeploy request"))
+    }
+
+    /// Enqueue one image without blocking; the dispatcher coalesces
+    /// concurrent same-key submissions into batches.
+    pub fn submit(&self, key: RouteKey, image: Vec<f32>) -> Result<Pending> {
+        let (rtx, rrx) = mpsc::channel();
+        self.send(Msg::One { key, job: Job { image, resp: rtx } })?;
         Ok(Pending { rx: rrx })
     }
 
     /// Blocking single-image inference (the dispatcher coalesces
-    /// concurrent callers into batches).
-    pub fn infer(&self, image: Vec<f32>) -> Result<Vec<f32>> {
-        self.submit(image)?.wait()
+    /// concurrent same-key callers into batches).
+    pub fn infer(&self, key: RouteKey, image: Vec<f32>) -> Result<Vec<f32>> {
+        self.submit(key, image)?.wait()
     }
 
     /// Run a caller-assembled batch as one backend dispatch. Unlike a
     /// series of [`EngineHandle::submit`] calls, the batch is executed
     /// exactly as submitted (no timing-dependent coalescing), so
     /// seed-sensitive backends split it across dies deterministically.
-    pub fn infer_batch(&self, images: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+    pub fn infer_batch(&self, key: RouteKey, images: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
         if images.is_empty() {
             return Ok(Vec::new());
         }
         let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .send(Msg::Batch { images, resp: rtx })
-            .map_err(|_| anyhow!("inference engine has shut down"))?;
+        self.send(Msg::Batch { key, images, resp: rtx })?;
         match rrx.recv() {
             Ok(Ok(v)) => Ok(v),
             Ok(Err(e)) => Err(anyhow!("{e}")),
@@ -266,41 +384,33 @@ impl EngineHandle {
         }
     }
 
-    /// Ask the dispatcher for its current image/batch counters and the
-    /// backend's modeled accelerator cost. Blocks while a batch is
-    /// executing (answered between dispatches).
-    pub fn snapshot(&self) -> Result<EngineSnapshot> {
+    /// Ask the dispatcher for a deployment's image/batch counters and
+    /// its backend's modeled accelerator cost. `Ok(None)` means the
+    /// deployment does not exist (never did, or was undeployed). Blocks
+    /// while a batch is executing (answered between dispatches).
+    pub fn snapshot(&self, dep: DeploymentId) -> Result<Option<EngineSnapshot>> {
         let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .send(Msg::Probe(rtx))
-            .map_err(|_| anyhow!("inference engine has shut down"))?;
-        let probe = rrx
-            .recv()
-            .map_err(|_| anyhow!("inference engine dropped the snapshot request"))?;
-        Ok(EngineSnapshot {
-            images: probe.images,
-            batches: self.batches(),
-            cost: probe.cost,
-            layer_costs: probe.layer_costs,
-        })
+        self.send(Msg::Probe { dep, resp: rtx })?;
+        rrx.recv()
+            .map_err(|_| anyhow!("inference engine dropped the snapshot request"))
+    }
+
+    /// Graceful-shutdown barrier: blocks until every request enqueued
+    /// before this call has been executed and answered.
+    pub fn drain(&self) -> Result<()> {
+        let (rtx, rrx) = mpsc::channel();
+        self.send(Msg::Drain { resp: rtx })?;
+        rrx.recv()
+            .map_err(|_| anyhow!("inference engine dropped the drain request"))
     }
 }
 
-/// Start the dispatcher. `factory` runs on the dispatcher thread (so the
-/// backend itself need not be `Send`); construction errors are reported
-/// synchronously. The scheduler shuts down when every [`EngineHandle`]
-/// clone has been dropped. `occupancy` (if given) records the size of
-/// every dispatched batch.
-pub fn start<F>(
-    factory: F,
-    cfg: EngineConfig,
-    occupancy: Option<Arc<AtomicHistogram>>,
-) -> Result<EngineHandle>
-where
-    F: FnOnce() -> Result<Box<dyn BatchBackend>> + Send + 'static,
-{
+/// Start an empty dispatcher (no deployments yet); install backends with
+/// [`EngineHandle::deploy`]. The scheduler shuts down when every
+/// [`EngineHandle`] clone has been dropped. `occupancy` (if given)
+/// records the size of every dispatched batch.
+pub fn start(cfg: EngineConfig, occupancy: Option<Arc<AtomicHistogram>>) -> Result<EngineHandle> {
     let (tx, rx) = mpsc::channel::<Msg>();
-    let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(usize, String), String>>();
     let batch = cfg.batch.max(1);
     let flush = Duration::from_micros(cfg.flush_micros);
     let batches = Arc::new(AtomicU64::new(0));
@@ -309,92 +419,191 @@ where
     std::thread::Builder::new()
         .name("engine-dispatch".to_string())
         .spawn(move || {
-            let mut backend = match factory() {
-                Ok(b) => {
-                    let _ = ready_tx.send(Ok((b.input_len(), b.describe())));
-                    b
-                }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(format!("{e:#}")));
-                    return;
-                }
-            };
-            dispatch_loop(&mut *backend, &rx, batch, flush, &batches_worker, occupancy);
+            dispatch_loop(&rx, batch, flush, &batches_worker, occupancy);
         })
         .map_err(|e| anyhow!("spawning dispatcher: {e}"))?;
-
-    match ready_rx.recv() {
-        Ok(Ok((input_len, describe))) => Ok(EngineHandle { tx, input_len, describe, batches }),
-        Ok(Err(e)) => Err(anyhow!("engine backend failed to start: {e}")),
-        Err(_) => Err(anyhow!("engine dispatcher died during startup")),
-    }
+    Ok(EngineHandle { tx, batches })
 }
 
-fn answer_probe(backend: &dyn BatchBackend, tx: mpsc::Sender<Probe>) {
-    let _ = tx.send(Probe {
-        images: backend.images(),
-        cost: backend.model_cost(),
-        layer_costs: backend.model_layer_costs(),
+/// One deployed backend plus the dispatcher's bookkeeping for it.
+struct Tenant {
+    backend: Box<dyn BatchBackend>,
+    /// The (r_in, r_out) point the backend is currently shaped at
+    /// (`None` = as-deployed manifest precision).
+    current: Option<(u32, u32)>,
+    /// Batches dispatched to this deployment.
+    batches: u64,
+}
+
+fn answer_probe(
+    tenants: &HashMap<DeploymentId, Tenant>,
+    dep: DeploymentId,
+    tx: mpsc::Sender<Option<EngineSnapshot>>,
+) {
+    let snap = tenants.get(&dep).map(|t| EngineSnapshot {
+        images: t.backend.images(),
+        batches: t.batches,
+        cost: t.backend.model_cost(),
+        layer_costs: t.backend.model_layer_costs(),
     });
+    let _ = tx.send(snap);
+}
+
+/// Run one batch for a route key: look the tenant up, re-target its
+/// precision if the key asks for a different operating point, execute.
+fn run_batch(
+    tenants: &mut HashMap<DeploymentId, Tenant>,
+    key: RouteKey,
+    images: &[Vec<f32>],
+    batches: &AtomicU64,
+    occupancy: &Option<Arc<AtomicHistogram>>,
+) -> std::result::Result<Vec<Vec<f32>>, String> {
+    let tenant = tenants.get_mut(&key.dep).ok_or_else(|| {
+        format!(
+            "model deployment {} is not loaded (undeployed or replaced mid-request)",
+            key.dep
+        )
+    })?;
+    if tenant.current != key.precision {
+        tenant
+            .backend
+            .retarget(key.precision)
+            .map_err(|e| format!("re-targeting precision: {e:#}"))?;
+        tenant.current = key.precision;
+    }
+    batches.fetch_add(1, Ordering::Relaxed);
+    tenant.batches += 1;
+    if let Some(h) = occupancy {
+        h.record(images.len() as u64);
+    }
+    tenant
+        .backend
+        .forward_batch(images)
+        .map_err(|e| format!("{e:#}"))
+}
+
+/// Pull same-key single-image jobs out of the backlog (preserving the
+/// relative order of everything else) until `jobs` reaches `batch` —
+/// but never past a parked barrier: a job that arrived after an
+/// `Undeploy`/`Drain` must not jump ahead of it. Returns whether the
+/// backlog holds a barrier (the caller then stops coalescing fresh
+/// channel traffic too, so queue order is preserved end to end).
+fn take_same_key(
+    backlog: &mut VecDeque<Msg>,
+    key: RouteKey,
+    jobs: &mut Vec<Job>,
+    batch: usize,
+) -> bool {
+    let mut rest = VecDeque::with_capacity(backlog.len());
+    let mut blocked = false;
+    while let Some(msg) = backlog.pop_front() {
+        match msg {
+            Msg::One { key: k, job } if !blocked && k == key && jobs.len() < batch => {
+                jobs.push(job)
+            }
+            other => {
+                blocked = blocked || other.is_barrier();
+                rest.push_back(other);
+            }
+        }
+    }
+    *backlog = rest;
+    blocked
 }
 
 fn dispatch_loop(
-    backend: &mut dyn BatchBackend,
     rx: &mpsc::Receiver<Msg>,
     batch: usize,
     flush: Duration,
     batches: &AtomicU64,
     occupancy: Option<Arc<AtomicHistogram>>,
 ) {
-    // A whole-batch message that arrived while singles were being
-    // coalesced: flushed singles first, then handled on the next turn.
-    let mut backlog: Option<Msg> = None;
+    let mut tenants: HashMap<DeploymentId, Tenant> = HashMap::new();
+    // Messages pulled off the channel while coalescing a different key:
+    // handled in arrival order on the following turns.
+    let mut backlog: VecDeque<Msg> = VecDeque::new();
     loop {
-        let next = match backlog.take() {
+        let next = match backlog.pop_front() {
             Some(msg) => msg,
             None => match rx.recv() {
                 Ok(msg) => msg,
                 Err(_) => return, // all handles dropped
             },
         };
-        let first = match next {
-            Msg::Probe(tx) => {
-                answer_probe(backend, tx);
+        let (key, first) = match next {
+            Msg::Probe { dep, resp } => {
+                answer_probe(&tenants, dep, resp);
                 continue;
             }
-            Msg::Batch { images, resp } => {
+            Msg::Deploy { dep, precision, factory, resp } => {
+                let reply = factory()
+                    .and_then(|mut backend| {
+                        // Probe the default operating point now: a
+                        // backend that declines it must fail the
+                        // deploy, not every later request.
+                        if precision.is_some() {
+                            backend.retarget(precision)?;
+                        }
+                        Ok(backend)
+                    })
+                    .map(|backend| {
+                        let info = (backend.input_len(), backend.describe());
+                        tenants.insert(
+                            dep,
+                            Tenant { backend, current: precision, batches: 0 },
+                        );
+                        info
+                    });
+                let _ = resp.send(reply.map_err(|e| format!("{e:#}")));
+                continue;
+            }
+            Msg::Undeploy { dep, resp } => {
+                let _ = resp.send(tenants.remove(&dep).is_some());
+                continue;
+            }
+            Msg::Drain { resp } => {
+                // The queue is FIFO and every earlier message has been
+                // fully executed by the time this one is handled, so the
+                // ack itself is the barrier.
+                let _ = resp.send(());
+                continue;
+            }
+            Msg::Batch { key, images, resp } => {
                 if images.is_empty() {
                     let _ = resp.send(Ok(Vec::new()));
                     continue;
                 }
-                batches.fetch_add(1, Ordering::Relaxed);
-                if let Some(h) = &occupancy {
-                    h.record(images.len() as u64);
-                }
-                let out = backend
-                    .forward_batch(&images)
-                    .map_err(|e| format!("{e:#}"));
+                let out = run_batch(&mut tenants, key, &images, batches, &occupancy);
                 let _ = resp.send(out);
                 continue;
             }
-            Msg::One(job) => job,
+            Msg::One { key, job } => (key, job),
         };
 
         let mut jobs = vec![first];
+        // Same-key jobs parked earlier (while another key coalesced)
+        // join this batch first; a barrier already parked in the
+        // backlog stops all further coalescing for this turn.
+        let mut barrier = take_same_key(&mut backlog, key, &mut jobs, batch);
         // Opportunistically drain whatever is already queued — a
-        // concurrent burst coalesces with no waiting at all.
-        while backlog.is_none() && jobs.len() < batch {
+        // concurrent same-key burst coalesces with no waiting at all;
+        // other keys park in the backlog, barriers stop the scan.
+        while jobs.len() < batch && !barrier {
             match rx.try_recv() {
-                Ok(Msg::One(job)) => jobs.push(job),
-                Ok(Msg::Probe(tx)) => answer_probe(backend, tx),
-                Ok(msg @ Msg::Batch { .. }) => backlog = Some(msg),
+                Ok(Msg::One { key: k, job }) if k == key => jobs.push(job),
+                Ok(Msg::Probe { dep, resp }) => answer_probe(&tenants, dep, resp),
+                Ok(other) => {
+                    barrier = other.is_barrier();
+                    backlog.push_back(other);
+                }
                 Err(_) => break,
             }
         }
-        // Lone request: probe briefly for company instead of paying the
-        // whole flush window — a lock-step single client must not gain a
-        // `flush`-sized latency floor on every request.
-        if backlog.is_none() && jobs.len() == 1 && batch > 1 {
+        // Lone request with nothing else pending: probe briefly for
+        // company instead of paying the whole flush window — a lock-step
+        // single client must not gain a `flush`-sized latency floor on
+        // every request.
+        if backlog.is_empty() && !barrier && jobs.len() == 1 && batch > 1 {
             let deadline = Instant::now() + flush / 8;
             loop {
                 let now = Instant::now();
@@ -402,22 +611,23 @@ fn dispatch_loop(
                     break;
                 }
                 match rx.recv_timeout(deadline - now) {
-                    Ok(Msg::One(job)) => {
+                    Ok(Msg::One { key: k, job }) if k == key => {
                         jobs.push(job);
                         break;
                     }
-                    Ok(Msg::Probe(tx)) => answer_probe(backend, tx),
-                    Ok(msg @ Msg::Batch { .. }) => {
-                        backlog = Some(msg);
+                    Ok(Msg::Probe { dep, resp }) => answer_probe(&tenants, dep, resp),
+                    Ok(other) => {
+                        backlog.push_back(other);
                         break;
                     }
                     Err(_) => break,
                 }
             }
         }
-        // Once ≥ 2 requests showed up there is real concurrency: keep
-        // collecting until the batch fills or the flush window closes.
-        if backlog.is_none() && jobs.len() > 1 {
+        // Once ≥ 2 same-key requests showed up there is real
+        // concurrency: keep collecting until the batch fills or the
+        // flush window closes — but never while other work waits.
+        if backlog.is_empty() && !barrier && jobs.len() > 1 {
             let deadline = Instant::now() + flush;
             while jobs.len() < batch {
                 let now = Instant::now();
@@ -425,10 +635,10 @@ fn dispatch_loop(
                     break;
                 }
                 match rx.recv_timeout(deadline - now) {
-                    Ok(Msg::One(job)) => jobs.push(job),
-                    Ok(Msg::Probe(tx)) => answer_probe(backend, tx),
-                    Ok(msg @ Msg::Batch { .. }) => {
-                        backlog = Some(msg);
+                    Ok(Msg::One { key: k, job }) if k == key => jobs.push(job),
+                    Ok(Msg::Probe { dep, resp }) => answer_probe(&tenants, dep, resp),
+                    Ok(other) => {
+                        backlog.push_back(other);
                         break;
                     }
                     Err(_) => break,
@@ -444,18 +654,13 @@ fn dispatch_loop(
             images.push(job.image);
             responders.push(job.resp);
         }
-        batches.fetch_add(1, Ordering::Relaxed);
-        if let Some(h) = &occupancy {
-            h.record(images.len() as u64);
-        }
-        match backend.forward_batch(&images) {
+        match run_batch(&mut tenants, key, &images, batches, &occupancy) {
             Ok(outputs) => {
                 for (resp, out) in responders.into_iter().zip(outputs) {
                     let _ = resp.send(Ok(out));
                 }
             }
-            Err(e) => {
-                let msg = format!("{e:#}");
+            Err(msg) => {
                 for resp in responders {
                     let _ = resp.send(Err(msg.clone()));
                 }
@@ -468,9 +673,11 @@ fn dispatch_loop(
 mod tests {
     use super::*;
 
-    /// Toy backend: output = [sum of inputs, batch size at execution].
+    /// Toy backend: output = [sum of inputs, batch size at execution,
+    /// r_in the backend is currently shaped at (0 = manifest)].
     struct SumBackend {
         len: usize,
+        r_in: u32,
     }
 
     impl BatchBackend for SumBackend {
@@ -481,24 +688,41 @@ mod tests {
         fn forward_batch(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
             Ok(images
                 .iter()
-                .map(|im| vec![im.iter().sum::<f32>(), images.len() as f32])
+                .map(|im| {
+                    vec![
+                        im.iter().sum::<f32>(),
+                        images.len() as f32,
+                        self.r_in as f32,
+                    ]
+                })
                 .collect())
         }
 
         fn describe(&self) -> String {
             "sum".to_string()
         }
+
+        fn retarget(&mut self, precision: Option<(u32, u32)>) -> Result<()> {
+            self.r_in = precision.map(|(r_in, _)| r_in).unwrap_or(0);
+            Ok(())
+        }
+    }
+
+    fn sum_factory(len: usize) -> BackendFactory {
+        Box::new(move || Ok(Box::new(SumBackend { len, r_in: 0 }) as Box<dyn BatchBackend>))
+    }
+
+    fn key(dep: DeploymentId) -> RouteKey {
+        RouteKey::new(dep, None)
     }
 
     #[test]
     fn scheduler_roundtrip_and_shutdown() {
         let cfg = EngineConfig { batch: 4, workers: 1, flush_micros: 200 };
-        let handle =
-            start(|| Ok(Box::new(SumBackend { len: 3 }) as Box<dyn BatchBackend>), cfg, None)
-                .unwrap();
-        assert_eq!(handle.input_len(), 3);
-        assert_eq!(handle.describe(), "sum");
-        let out = handle.infer(vec![1.0, 2.0, 3.0]).unwrap();
+        let handle = start(cfg, None).unwrap();
+        let (input_len, desc) = handle.deploy(1, None, sum_factory(3)).unwrap();
+        assert_eq!((input_len, desc.as_str()), (3, "sum"));
+        let out = handle.infer(key(1), vec![1.0, 2.0, 3.0]).unwrap();
         assert_eq!(out[0], 6.0);
         assert!(handle.batches() >= 1);
         drop(handle); // dispatcher exits once all handles are gone
@@ -510,18 +734,14 @@ mod tests {
             crate::util::stats::pow2_bounds(8),
         ));
         let cfg = EngineConfig { batch: 16, workers: 1, flush_micros: 50_000 };
-        let handle = start(
-            || Ok(Box::new(SumBackend { len: 1 }) as Box<dyn BatchBackend>),
-            cfg,
-            Some(Arc::clone(&occupancy)),
-        )
-        .unwrap();
+        let handle = start(cfg, Some(Arc::clone(&occupancy))).unwrap();
+        handle.deploy(1, None, sum_factory(1)).unwrap();
         let n_clients = 8;
         let results: Vec<f32> = std::thread::scope(|s| {
             let handles: Vec<_> = (0..n_clients)
                 .map(|i| {
                     let h = handle.clone();
-                    s.spawn(move || h.infer(vec![i as f32]).unwrap())
+                    s.spawn(move || h.infer(key(1), vec![i as f32]).unwrap())
                 })
                 .collect();
             handles.into_iter().map(|h| h.join().unwrap()[1]).collect()
@@ -537,10 +757,70 @@ mod tests {
     }
 
     #[test]
+    fn batches_only_coalesce_within_a_route_key() {
+        let cfg = EngineConfig { batch: 16, workers: 1, flush_micros: 50_000 };
+        let handle = start(cfg, None).unwrap();
+        handle.deploy(1, None, sum_factory(1)).unwrap();
+        handle.deploy(2, None, sum_factory(1)).unwrap();
+        // Mixed keys: two deployments plus one precision override on
+        // deployment 1 — all submitted before anything dispatches.
+        let keys = [
+            key(1),
+            key(2),
+            RouteKey::new(1, Some((2, 2))),
+            key(1),
+            key(2),
+            RouteKey::new(1, Some((2, 2))),
+        ];
+        let pending: Vec<_> = keys
+            .iter()
+            .map(|&k| handle.submit(k, vec![1.0]).unwrap())
+            .collect();
+        let outs: Vec<Vec<f32>> = pending.into_iter().map(|p| p.wait().unwrap()).collect();
+        // Every response saw only its own key's batch (≤ 2 images here),
+        // and the precision override reached the backend via retarget.
+        for (k, out) in keys.iter().zip(&outs) {
+            assert!(out[1] <= 2.0, "cross-key coalescing: {outs:?}");
+            let expect_r = k.precision.map(|(r, _)| r).unwrap_or(0) as f32;
+            assert_eq!(out[2], expect_r, "key {k:?} got {out:?}");
+        }
+    }
+
+    #[test]
     fn factory_error_is_reported() {
-        let cfg = EngineConfig::default();
-        let err = start(|| Err(anyhow!("no artifacts")), cfg, None).err().unwrap();
+        let handle = start(EngineConfig::default(), None).unwrap();
+        let err = handle
+            .deploy(1, None, Box::new(|| Err(anyhow!("no artifacts"))))
+            .err()
+            .unwrap();
         assert!(format!("{err}").contains("no artifacts"), "{err}");
+        // The failed deploy left nothing behind.
+        assert!(handle.snapshot(1).unwrap().is_none());
+    }
+
+    #[test]
+    fn unknown_deployment_errors_in_band() {
+        let cfg = EngineConfig { batch: 2, workers: 1, flush_micros: 100 };
+        let handle = start(cfg, None).unwrap();
+        let err = handle.infer(key(9), vec![0.0]).err().unwrap();
+        assert!(format!("{err}").contains("not loaded"), "{err}");
+        let err = handle.infer_batch(key(9), vec![vec![0.0]]).err().unwrap();
+        assert!(format!("{err}").contains("not loaded"), "{err}");
+    }
+
+    #[test]
+    fn undeploy_removes_and_redeploy_works_without_restart() {
+        let cfg = EngineConfig { batch: 2, workers: 1, flush_micros: 100 };
+        let handle = start(cfg, None).unwrap();
+        handle.deploy(1, None, sum_factory(1)).unwrap();
+        handle.infer(key(1), vec![2.0]).unwrap();
+        assert!(handle.undeploy(1).unwrap());
+        assert!(!handle.undeploy(1).unwrap(), "second undeploy is a no-op");
+        assert!(handle.infer(key(1), vec![2.0]).is_err());
+        assert!(handle.snapshot(1).unwrap().is_none());
+        // A new id takes over without restarting the dispatcher.
+        handle.deploy(2, None, sum_factory(1)).unwrap();
+        assert_eq!(handle.infer(key(2), vec![2.0]).unwrap()[0], 2.0);
     }
 
     #[test]
@@ -555,10 +835,51 @@ mod tests {
             }
         }
         let cfg = EngineConfig { batch: 2, workers: 1, flush_micros: 100 };
-        let handle =
-            start(|| Ok(Box::new(FailBackend) as Box<dyn BatchBackend>), cfg, None).unwrap();
-        let err = handle.infer(vec![0.0]).err().unwrap();
+        let handle = start(cfg, None).unwrap();
+        handle
+            .deploy(1, None, Box::new(|| Ok(Box::new(FailBackend) as Box<dyn BatchBackend>)))
+            .unwrap();
+        let err = handle.infer(key(1), vec![0.0]).err().unwrap();
         assert!(format!("{err}").contains("die melted"), "{err}");
+    }
+
+    #[test]
+    fn retarget_refusal_errors_without_poisoning_the_tenant() {
+        struct FixedBackend;
+        impl BatchBackend for FixedBackend {
+            fn input_len(&self) -> usize {
+                1
+            }
+            fn forward_batch(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+                Ok(images.iter().map(|_| vec![1.0]).collect())
+            }
+            // Default retarget: declines any explicit precision.
+        }
+        let cfg = EngineConfig { batch: 2, workers: 1, flush_micros: 100 };
+        let handle = start(cfg, None).unwrap();
+        handle
+            .deploy(1, None, Box::new(|| Ok(Box::new(FixedBackend) as Box<dyn BatchBackend>)))
+            .unwrap();
+        let err = handle
+            .infer(RouteKey::new(1, Some((4, 4))), vec![0.0])
+            .err()
+            .unwrap();
+        assert!(format!("{err}").contains("re-target"), "{err}");
+        // Default-precision traffic still flows.
+        assert_eq!(handle.infer(key(1), vec![0.0]).unwrap(), vec![1.0]);
+        // Deploying such a backend WITH a default precision fails the
+        // deploy itself (the point is probed up front), leaving nothing
+        // behind.
+        let err = handle
+            .deploy(
+                2,
+                Some((4, 4)),
+                Box::new(|| Ok(Box::new(FixedBackend) as Box<dyn BatchBackend>)),
+            )
+            .err()
+            .unwrap();
+        assert!(format!("{err}").contains("re-target"), "{err}");
+        assert!(handle.snapshot(2).unwrap().is_none());
     }
 
     #[test]
@@ -568,40 +889,38 @@ mod tests {
         ));
         // batch=2 caps *coalescing*, not caller-assembled batches.
         let cfg = EngineConfig { batch: 2, workers: 1, flush_micros: 100 };
-        let handle = start(
-            || Ok(Box::new(SumBackend { len: 1 }) as Box<dyn BatchBackend>),
-            cfg,
-            Some(Arc::clone(&occupancy)),
-        )
-        .unwrap();
+        let handle = start(cfg, Some(Arc::clone(&occupancy))).unwrap();
+        handle.deploy(1, None, sum_factory(1)).unwrap();
         let images: Vec<Vec<f32>> = (0..5).map(|i| vec![i as f32]).collect();
-        let outs = handle.infer_batch(images).unwrap();
+        let outs = handle.infer_batch(key(1), images).unwrap();
         assert_eq!(outs.len(), 5);
         // Every output saw the full 5-image batch in one dispatch.
         assert!(outs.iter().all(|o| o[1] == 5.0), "{outs:?}");
         assert_eq!(handle.batches(), 1);
         assert_eq!(occupancy.count(), 1);
         // Empty batches short-circuit without a dispatch.
-        assert!(handle.infer_batch(Vec::new()).unwrap().is_empty());
+        assert!(handle.infer_batch(key(1), Vec::new()).unwrap().is_empty());
         assert_eq!(handle.batches(), 1);
     }
 
     #[test]
-    fn submit_resolves_asynchronously() {
+    fn submit_resolves_asynchronously_and_drain_is_a_barrier() {
         let cfg = EngineConfig { batch: 4, workers: 1, flush_micros: 100 };
-        let handle =
-            start(|| Ok(Box::new(SumBackend { len: 2 }) as Box<dyn BatchBackend>), cfg, None)
-                .unwrap();
+        let handle = start(cfg, None).unwrap();
+        handle.deploy(1, None, sum_factory(2)).unwrap();
         let pending: Vec<_> = (0..3)
-            .map(|i| handle.submit(vec![i as f32, 1.0]).unwrap())
+            .map(|i| handle.submit(key(1), vec![i as f32, 1.0]).unwrap())
             .collect();
+        // Drain resolves only after everything enqueued before it ran.
+        handle.drain().unwrap();
         for (i, p) in pending.into_iter().enumerate() {
-            assert_eq!(p.wait().unwrap()[0], i as f32 + 1.0);
+            let out = p.try_wait().expect("resolved before drain ack").unwrap();
+            assert_eq!(out[0], i as f32 + 1.0);
         }
     }
 
     #[test]
-    fn snapshot_reports_backend_counters() {
+    fn snapshot_reports_per_deployment_counters() {
         struct Counting {
             images: u64,
         }
@@ -618,17 +937,20 @@ mod tests {
             }
         }
         let cfg = EngineConfig { batch: 4, workers: 1, flush_micros: 100 };
-        let handle = start(
-            || Ok(Box::new(Counting { images: 0 }) as Box<dyn BatchBackend>),
-            cfg,
-            None,
-        )
-        .unwrap();
-        let snap = handle.snapshot().unwrap();
+        let handle = start(cfg, None).unwrap();
+        for dep in [1u64, 2] {
+            handle
+                .deploy(dep, None, Box::new(|| Ok(Box::new(Counting { images: 0 }) as Box<dyn BatchBackend>)))
+                .unwrap();
+        }
+        let snap = handle.snapshot(1).unwrap().unwrap();
         assert_eq!((snap.images, snap.batches), (0, 0));
         assert!(snap.cost.is_none());
-        handle.infer_batch(vec![vec![0.0], vec![1.0]]).unwrap();
-        let snap = handle.snapshot().unwrap();
+        handle.infer_batch(key(1), vec![vec![0.0], vec![1.0]]).unwrap();
+        // Counters are per deployment: 2 never ran anything.
+        let snap = handle.snapshot(1).unwrap().unwrap();
         assert_eq!((snap.images, snap.batches), (2, 1));
+        let snap = handle.snapshot(2).unwrap().unwrap();
+        assert_eq!((snap.images, snap.batches), (0, 0));
     }
 }

@@ -4,11 +4,11 @@
 //! compute-in-memory CNN accelerator. This crate rebuilds the entire
 //! system in software:
 //!
-//! * [`api`] — **the public facade**: [`Session`]/[`SessionBuilder`],
-//!   one precision-aware builder (`backend / precision / supply /
-//!   corner / batch / workers / seed`) over every backend, with the
-//!   typed [`ImagineError`] boundary — what the CLI, the server and the
-//!   examples are built on;
+//! * [`api`] — **the public facade**: a [`ModelHub`] registry of named
+//!   deployments over one shared engine, with [`Session`] as a cheap
+//!   per-(model, precision) routed handle, the single-model
+//!   [`SessionBuilder`], and the typed [`ImagineError`] boundary — what
+//!   the CLI, the server and the examples are built on;
 //! * [`analog`] — circuit-behavioral simulator of the 1152×256 CIM-SRAM
 //!   macro (charge-sharing DP, MBIW accumulation, DSCI SAR ADC with
 //!   in-ADC analog batch-normalization, mismatch/noise/corners);
@@ -39,4 +39,4 @@ pub mod nn;
 pub mod runtime;
 pub mod util;
 
-pub use api::{BackendKind, ImagineError, Session, SessionBuilder};
+pub use api::{BackendKind, Deployment, ImagineError, ModelHub, Session, SessionBuilder};

@@ -8,15 +8,20 @@
 //!                 [--precision R[,R_OUT]] [--supply nominal|low-power|L/H]
 //!                 [--corner tt|ff|ss|fs|sf] [--batch B] [--workers W]
 //!                 [--seed S]                  evaluate on the exported test set
-//!   imagine serve --model NAME [--addr A] [--backend ...] [--precision ...]
-//!                 [--supply ...] [--corner ...] [--batch B] [--workers W]
-//!                 [--seed S] [--flush-us T]   line-JSON TCP inference server
-//!                 (protocol v2: image lines plus the info / graph_info /
-//!                 stats / quit commands; graph_info reports the served
-//!                 layer graph with per-layer modeled accelerator cost)
+//!   imagine serve --model NAME[=DIR] (repeatable) [--addr A] [--backend ...]
+//!                 [--precision ...] [--supply ...] [--corner ...] [--batch B]
+//!                 [--workers W] [--seed S] [--flush-us T]
+//!                 line-JSON TCP inference server (protocol v3): every
+//!                 `--model` flag deploys one named model onto the shared
+//!                 engine (`--model mnist=exports` loads
+//!                 exports/mnist.manifest.json); requests route per
+//!                 (model, precision), and models hot-deploy/undeploy at
+//!                 runtime via the `deploy`/`undeploy` commands. SIGINT
+//!                 or `{"cmd":"shutdown"}` drains in-flight batches
+//!                 before exit.
 //!
-//! Both `run` and `serve` construct their backend through the one
-//! `Session` registry (`imagine::api`): the same `--backend analog
+//! Both `run` and `serve` construct their backends through the one
+//! `ModelHub` registry (`imagine::api`): the same `--backend analog
 //! --precision 4` spelling works identically on either, and unknown
 //! values are rejected with the list of valid options.
 //!
@@ -24,22 +29,47 @@
 
 use anyhow::{bail, Context, Result};
 use imagine::analog::macro_model::OpConfig;
-use imagine::api::{parse_corner, parse_precision, parse_supply, BackendKind, Session, SessionBuilder};
+use imagine::api::{
+    parse_corner, parse_precision, parse_supply, BackendKind, Deployment, ModelHub, Session,
+};
 use imagine::config::params::{MacroParams, Supply};
 use imagine::coordinator::manifest::NetworkModel;
 use imagine::coordinator::scheduler;
-use imagine::coordinator::server::{serve, Stats};
+use imagine::coordinator::server::{self, serve, ServerState, Stats};
 use imagine::energy::{analog as ea, area, system, timing};
 use imagine::engine::default_workers;
 use imagine::nn::dataset::Dataset;
 use imagine::util::stats::argmax_f32 as argmax;
-use std::collections::HashMap;
 use std::sync::Arc;
+
+/// Parsed `--key value` flags, in order. Repeatable keys (serve's
+/// `--model`) keep every occurrence; single-valued lookups take the
+/// last.
+struct Flags(Vec<(String, String)>);
+
+impl Flags {
+    /// Last occurrence of `--key`, if any.
+    fn get(&self, key: &str) -> Option<&str> {
+        self.0
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Every occurrence of `--key`, in order.
+    fn all<'a>(&'a self, key: &'a str) -> impl Iterator<Item = &'a str> {
+        self.0
+            .iter()
+            .filter(move |(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+}
 
 /// Strict flag parser: `--key value` (or bare `--key` → "true"), every
 /// key must be in `allowed`; positional arguments are rejected.
-fn parse_flags(cmd: &str, args: &[String], allowed: &[&str]) -> Result<HashMap<String, String>> {
-    let mut flags = HashMap::new();
+fn parse_flags(cmd: &str, args: &[String], allowed: &[&str]) -> Result<Flags> {
+    let mut flags = Vec::new();
     let mut i = 0;
     while i < args.len() {
         let Some(key) = args[i].strip_prefix("--") else {
@@ -56,14 +86,14 @@ fn parse_flags(cmd: &str, args: &[String], allowed: &[&str]) -> Result<HashMap<S
             );
         }
         if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-            flags.insert(key.to_string(), args[i + 1].clone());
+            flags.push((key.to_string(), args[i + 1].clone()));
             i += 2;
         } else {
-            flags.insert(key.to_string(), "true".to_string());
+            flags.push((key.to_string(), "true".to_string()));
             i += 1;
         }
     }
-    Ok(flags)
+    Ok(Flags(flags))
 }
 
 fn render_allowed(allowed: &[&str]) -> String {
@@ -77,7 +107,7 @@ fn render_allowed(allowed: &[&str]) -> String {
         .join(", ")
 }
 
-fn flag_usize(flags: &HashMap<String, String>, key: &str, default: usize) -> Result<usize> {
+fn flag_usize(flags: &Flags, key: &str, default: usize) -> Result<usize> {
     match flags.get(key) {
         None => Ok(default),
         Some(s) => s
@@ -86,7 +116,7 @@ fn flag_usize(flags: &HashMap<String, String>, key: &str, default: usize) -> Res
     }
 }
 
-fn flag_u64(flags: &HashMap<String, String>, key: &str, default: u64) -> Result<u64> {
+fn flag_u64(flags: &Flags, key: &str, default: u64) -> Result<u64> {
     match flags.get(key) {
         None => Ok(default),
         Some(s) => s
@@ -156,53 +186,87 @@ const RUN_DEFAULTS: SessionDefaults =
 const SERVE_DEFAULTS: SessionDefaults =
     SessionDefaults { model: "mlp784", backend: "auto", batch: 32, flush_micros: 500 };
 
-/// Build a [`Session`] from CLI flags — the one construction path shared
-/// by `run` and `serve`.
-fn build_session(
-    flags: &HashMap<String, String>,
+/// Resolve the `--backend` spelling for a model in `dir`: `auto` picks
+/// through the registry and reports *why*; anything else must be a real
+/// backend name.
+fn resolve_backend(
+    flags: &Flags,
     defaults: &SessionDefaults,
-    stats: Option<&Stats>,
-) -> Result<Session> {
-    let dir = flags.get("dir").map(String::as_str).unwrap_or("artifacts");
-    let name = flags.get("model").map(String::as_str).unwrap_or(defaults.model);
-    let backend_s = flags
-        .get("backend")
-        .map(String::as_str)
-        .unwrap_or(defaults.backend);
-    let kind = if backend_s == "auto" {
-        BackendKind::auto_for(dir, name)
+    dir: &str,
+    name: &str,
+) -> Result<(BackendKind, Option<String>)> {
+    let backend_s = flags.get("backend").unwrap_or(defaults.backend);
+    if backend_s == "auto" {
+        // A --precision override steers auto away from PJRT (whose
+        // arithmetic is fixed at compile time).
+        let precision = match flags.get("precision") {
+            Some(s) => Some(parse_precision(s)?),
+            None => None,
+        };
+        let (kind, note) = BackendKind::auto_resolve_at(dir, name, precision);
+        Ok((kind, Some(note)))
     } else {
         // The facade's parser only knows real backends; `auto` is a CLI
         // spelling, so re-word the error to keep it in the valid list.
-        BackendKind::parse(backend_s)
-            .map_err(|_| anyhow::anyhow!("unknown backend '{backend_s}' (valid: auto|ideal|analog|pjrt)"))?
-    };
-    let mut builder = SessionBuilder::from_artifacts(dir, name)?
-        .backend(kind)
+        let kind = BackendKind::parse(backend_s).map_err(|_| {
+            anyhow::anyhow!("unknown backend '{backend_s}' (valid: auto|ideal|analog|pjrt)")
+        })?;
+        Ok((kind, None))
+    }
+}
+
+/// Apply the shared per-deployment flags (precision/supply/corner) to a
+/// spec.
+fn apply_deployment_flags(mut spec: Deployment, flags: &Flags) -> Result<Deployment> {
+    if let Some(s) = flags.get("precision") {
+        let (r_in, r_out) = parse_precision(s)?;
+        spec = spec.precision(r_in, r_out);
+    }
+    if let Some(s) = flags.get("supply") {
+        spec = spec.supply(parse_supply(s)?);
+    }
+    if let Some(s) = flags.get("corner") {
+        spec = spec.corner(parse_corner(s)?);
+    }
+    Ok(spec)
+}
+
+/// Assemble one [`Deployment`] spec from CLI flags — the one
+/// interpretation of `--backend/--precision/--supply/--corner` shared
+/// by `imagine run` (single-model session) and every `imagine serve`
+/// `--model` flag.
+fn deployment_from_flags(
+    flags: &Flags,
+    defaults: &SessionDefaults,
+    dir: &str,
+    name: &str,
+) -> Result<Deployment> {
+    let (kind, note) = resolve_backend(flags, defaults, dir, name)?;
+    let mut spec = Deployment::from_artifacts(dir, name)?.backend(kind);
+    if let Some(note) = note {
+        spec = spec.backend_note(note);
+    }
+    apply_deployment_flags(spec, flags)
+}
+
+/// Build a single-model [`Session`] from CLI flags — what `imagine run`
+/// uses (`imagine serve` builds a multi-model hub instead).
+fn build_session(flags: &Flags, defaults: &SessionDefaults) -> Result<Session> {
+    let dir = flags.get("dir").unwrap_or("artifacts");
+    let name = flags.get("model").unwrap_or(defaults.model);
+    let builder = deployment_from_flags(flags, defaults, dir, name)?
+        .into_session_builder()
         .batch(flag_usize(flags, "batch", defaults.batch)?.max(1))
         .workers(flag_usize(flags, "workers", default_workers())?.max(1))
         .seed(flag_u64(flags, "seed", 42)?)
         .flush_micros(flag_u64(flags, "flush-us", defaults.flush_micros)?);
-    if let Some(s) = flags.get("precision") {
-        let (r_in, r_out) = parse_precision(s)?;
-        builder = builder.precision(r_in, r_out);
-    }
-    if let Some(s) = flags.get("supply") {
-        builder = builder.supply(parse_supply(s)?);
-    }
-    if let Some(s) = flags.get("corner") {
-        builder = builder.corner(parse_corner(s)?);
-    }
-    if let Some(stats) = stats {
-        builder = builder.occupancy(Arc::clone(&stats.occupancy));
-    }
     Ok(builder.build()?)
 }
 
-fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
-    let dir = flags.get("dir").map(String::as_str).unwrap_or("artifacts");
+fn cmd_run(flags: &Flags) -> Result<()> {
+    let dir = flags.get("dir").unwrap_or("artifacts");
     let n: usize = flag_usize(flags, "n", 200)?;
-    let session = build_session(flags, &RUN_DEFAULTS, None)?;
+    let session = build_session(flags, &RUN_DEFAULTS)?;
     let ds = load_dataset_for(session.input_shape(), dir)?;
     let n = n.min(ds.n);
     println!("session: {}", session.config().render());
@@ -246,9 +310,9 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-fn cmd_plan(flags: &HashMap<String, String>) -> Result<()> {
-    let dir = flags.get("dir").map(String::as_str).unwrap_or("artifacts");
-    let name = flags.get("model").map(String::as_str).unwrap_or("lenet_cim");
+fn cmd_plan(flags: &Flags) -> Result<()> {
+    let dir = flags.get("dir").unwrap_or("artifacts");
+    let name = flags.get("model").unwrap_or("lenet_cim");
     let model = NetworkModel::load(dir, name)?;
     let p = MacroParams::paper();
     let plan = scheduler::plan(&model, &p);
@@ -259,12 +323,40 @@ fn cmd_plan(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
-    let addr = flags.get("addr").map(String::as_str).unwrap_or("127.0.0.1:7878");
+/// One `--model` value: `NAME` (artifacts from `--dir`) or `NAME=DIR`.
+fn split_model_spec<'a>(spec: &'a str, default_dir: &'a str) -> (&'a str, &'a str) {
+    match spec.split_once('=') {
+        Some((name, dir)) => (name, dir),
+        None => (spec, default_dir),
+    }
+}
+
+fn cmd_serve(flags: &Flags) -> Result<()> {
+    let addr = flags.get("addr").unwrap_or("127.0.0.1:7878");
+    let default_dir = flags.get("dir").unwrap_or("artifacts");
     let stats = Stats::default();
-    let session = build_session(flags, &SERVE_DEFAULTS, Some(&stats))?;
-    eprintln!("session: {}", session.config().render());
-    serve(session, &stats, addr, None)
+    let hub = ModelHub::builder()
+        .batch(flag_usize(flags, "batch", SERVE_DEFAULTS.batch)?.max(1))
+        .workers(flag_usize(flags, "workers", default_workers())?.max(1))
+        .seed(flag_u64(flags, "seed", 42)?)
+        .flush_micros(flag_u64(flags, "flush-us", SERVE_DEFAULTS.flush_micros)?)
+        .occupancy(Arc::clone(&stats.occupancy))
+        .build()?;
+
+    let mut specs: Vec<String> = flags.all("model").map(str::to_string).collect();
+    if specs.is_empty() {
+        specs.push(SERVE_DEFAULTS.model.to_string());
+    }
+    for model_spec in &specs {
+        let (name, dir) = split_model_spec(model_spec, default_dir);
+        let spec = deployment_from_flags(flags, &SERVE_DEFAULTS, dir, name)?;
+        hub.deploy(name, spec)?;
+        eprintln!("deployed: {}", hub.session(name)?.config().render());
+    }
+
+    let state = Arc::new(ServerState::new(hub, stats));
+    server::install_sigint_stop(Arc::clone(&state));
+    serve(&state, addr, None)
 }
 
 fn usage() {
@@ -272,10 +364,13 @@ fn usage() {
     println!("  run:   [--n 200] [--backend ideal|analog|pjrt|auto] [--precision R[,R_OUT]]");
     println!("         [--supply nominal|low-power|L/H] [--corner tt|ff|ss|fs|sf]");
     println!("         [--batch 64] [--workers N] [--seed 42]");
-    println!("  serve: [--addr 127.0.0.1:7878] [--backend auto|ideal|analog|pjrt]");
+    println!("  serve: --model NAME[=DIR] (repeatable: one deployment per flag)");
+    println!("         [--addr 127.0.0.1:7878] [--backend auto|ideal|analog|pjrt]");
     println!("         [--precision R[,R_OUT]] [--supply ...] [--corner ...]");
     println!("         [--batch 32] [--workers N] [--seed 42] [--flush-us 500]");
-    println!("         protocol v2 commands: info | graph_info | stats | quit");
+    println!("         protocol v3: image requests route per (model, precision);");
+    println!("         commands: models | deploy | undeploy | info | graph_info |");
+    println!("         stats | quit | shutdown (SIGINT/shutdown drain in-flight work)");
 }
 
 fn main() -> Result<()> {

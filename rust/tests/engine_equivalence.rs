@@ -7,7 +7,7 @@
 use imagine::config::params::MacroParams;
 use imagine::coordinator::executor::{Backend, Executor};
 use imagine::coordinator::manifest::{Layer, NetworkModel, Pool};
-use imagine::engine::{self, AnalogPool, BatchBackend, BatchIdeal, EngineConfig};
+use imagine::engine::{self, AnalogPool, BatchBackend, BatchIdeal, EngineConfig, RouteKey};
 use imagine::util::json::Json;
 use imagine::util::rng::Rng;
 
@@ -174,12 +174,15 @@ fn scheduler_results_match_direct_engine() {
     let expected = direct.forward_batch(&images).unwrap();
 
     let cfg = EngineConfig { batch: 4, workers: 2, flush_micros: 2000 };
-    let handle = engine::start(
-        move || Ok(Box::new(BatchIdeal::new(model, p, 2)?) as Box<dyn BatchBackend>),
-        cfg,
-        None,
-    )
-    .unwrap();
+    let handle = engine::start(cfg, None).unwrap();
+    handle
+        .deploy(
+            1,
+            None,
+            Box::new(move || Ok(Box::new(BatchIdeal::new(model, p, 2)?) as Box<dyn BatchBackend>)),
+        )
+        .unwrap();
+    let key = RouteKey::new(1, None);
 
     // Submit from several client threads; results must match per image.
     std::thread::scope(|s| {
@@ -187,7 +190,7 @@ fn scheduler_results_match_direct_engine() {
         for (i, im) in images.iter().enumerate() {
             let h = handle.clone();
             let im = im.clone();
-            joins.push((i, s.spawn(move || h.infer(im).unwrap())));
+            joins.push((i, s.spawn(move || h.infer(key, im).unwrap())));
         }
         for (i, j) in joins {
             assert_eq!(j.join().unwrap(), expected[i], "image {i}");

@@ -1,50 +1,103 @@
-//! Concurrency: `imagine serve` must hold ≥ 8 simultaneous client
-//! connections and answer all of them while every connection stays open —
-//! impossible under the old global-`Mutex<Executor>` + sequential-accept
-//! design, where client k+1 got no response until client k disconnected.
-//! Runs entirely on a synthetic in-memory model (no artifacts) through
-//! the `Session` facade.
+//! Concurrency over the multi-tenant server: `imagine serve` must hold
+//! ≥ 8 simultaneous client connections across *two deployments at
+//! different precisions* and answer all of them bit-identically to
+//! dedicated single-model sessions, while models hot-deploy/undeploy
+//! under the traffic. Runs entirely on synthetic in-memory models (no
+//! artifacts) through the `ModelHub` + protocol v3.
 
-use imagine::api::Session;
+use imagine::api::{Deployment, ModelHub, Session};
 use imagine::config::params::MacroParams;
 use imagine::coordinator::manifest::NetworkModel;
-use imagine::coordinator::server::{serve_listener, Stats};
+use imagine::coordinator::server::{serve_listener, ServerState, Stats};
+use imagine::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::{Arc, Barrier};
 
 const N_CLIENTS: usize = 8;
 const REQS_PER_CLIENT: usize = 3;
-const INPUT_LEN: usize = 36;
+const ALPHA_LEN: usize = 36;
+const BETA_LEN: usize = 24;
 
-fn start_test_session(stats: &Stats) -> Session {
-    let p = MacroParams::paper();
-    let model = NetworkModel::synthetic_mlp(&[INPUT_LEN, 16, 4], 8, 4, 8, 77, &p);
-    Session::builder(model)
+fn alpha_model() -> NetworkModel {
+    NetworkModel::synthetic_mlp(&[ALPHA_LEN, 16, 4], 8, 4, 8, 77, &MacroParams::paper())
+}
+
+fn beta_model() -> NetworkModel {
+    NetworkModel::synthetic_mlp(&[BETA_LEN, 10, 3], 8, 4, 8, 78, &MacroParams::paper())
+}
+
+/// A hub serving alpha (manifest precision) and beta (default 4,4).
+fn start_test_state() -> ServerState {
+    let stats = Stats::default();
+    let hub = ModelHub::builder()
         .batch(N_CLIENTS)
         .workers(2)
         .flush_micros(2000)
         .occupancy(Arc::clone(&stats.occupancy))
         .build()
-        .unwrap()
+        .unwrap();
+    hub.deploy("alpha", Deployment::new(alpha_model())).unwrap();
+    hub.deploy("beta", Deployment::new(beta_model()).precision(4, 4))
+        .unwrap();
+    ServerState::new(hub, stats)
 }
 
-fn client(addr: std::net::SocketAddr, barrier: Arc<Barrier>, salt: usize) {
+fn test_image(len: usize, salt: usize, r: usize) -> Vec<f32> {
+    (0..len)
+        .map(|k| ((salt * 31 + r * 7 + k) % 100) as f32 / 100.0)
+        .collect()
+}
+
+fn request_line(model: &str, precision: Option<u32>, image: &[f32]) -> String {
+    let img: Vec<String> = image.iter().map(|v| format!("{v}")).collect();
+    match precision {
+        Some(p) => format!(
+            "{{\"model\": \"{model}\", \"precision\": {p}, \"image\": [{}]}}",
+            img.join(",")
+        ),
+        None => format!("{{\"model\": \"{model}\", \"image\": [{}]}}", img.join(",")),
+    }
+}
+
+/// Parse a response's logits back to f32. Rust's float formatting is
+/// shortest-roundtrip, so equality against the oracle is exact.
+fn logits_of(line: &str) -> Vec<f32> {
+    let j = Json::parse(line.trim()).unwrap_or_else(|e| panic!("{line}: {e}"));
+    j.get("logits")
+        .unwrap_or_else(|| panic!("no logits in {line}"))
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect()
+}
+
+/// One client: pinned to a (model, precision) route, verifies every
+/// response against the expected logits.
+#[allow(clippy::too_many_arguments)]
+fn client(
+    addr: std::net::SocketAddr,
+    barrier: Arc<Barrier>,
+    salt: usize,
+    model: &str,
+    precision: Option<u32>,
+    input_len: usize,
+    expected: Vec<Vec<f32>>,
+) {
     let stream = TcpStream::connect(addr).unwrap();
     let mut writer = stream.try_clone().unwrap();
     let mut reader = BufReader::new(stream);
 
-    // Everyone connects before anyone sends: all 8 connections are open
+    // Everyone connects before anyone sends: all connections are open
     // simultaneously, so a serializing server would deadlock here (the
     // test harness timeout is the failure mode).
     barrier.wait();
 
     for r in 0..REQS_PER_CLIENT {
-        let img: Vec<String> = (0..INPUT_LEN)
-            .map(|k| format!("{:.4}", ((salt * 31 + r * 7 + k) % 100) as f32 / 100.0))
-            .collect();
+        let image = test_image(input_len, salt, r);
         writer
-            .write_all(format!("{{\"image\": [{}]}}\n", img.join(",")).as_bytes())
+            .write_all(format!("{}\n", request_line(model, precision, &image)).as_bytes())
             .unwrap();
         let mut line = String::new();
         reader.read_line(&mut line).unwrap();
@@ -52,13 +105,24 @@ fn client(addr: std::net::SocketAddr, barrier: Arc<Barrier>, salt: usize) {
             line.contains("\"logits\""),
             "client {salt} req {r}: bad response {line}"
         );
+        assert!(
+            line.contains(&format!("\"model\":\"{model}\"")),
+            "client {salt} req {r}: wrong model in {line}"
+        );
+        assert_eq!(
+            logits_of(&line),
+            expected[r],
+            "client {salt} req {r}: not bit-identical to the dedicated session"
+        );
     }
 
     // Ask for the session info and stats mid-flight, then quit.
-    writer.write_all(b"{\"cmd\": \"info\"}\n").unwrap();
+    writer
+        .write_all(format!("{{\"cmd\": \"info\", \"model\": \"{model}\"}}\n").as_bytes())
+        .unwrap();
     let mut line = String::new();
     reader.read_line(&mut line).unwrap();
-    assert!(line.contains("\"protocol\""), "info line: {line}");
+    assert!(line.contains("\"protocol\":3"), "info line: {line}");
     assert!(line.contains("\"backend\""), "info line: {line}");
     writer.write_all(b"{\"cmd\": \"stats\"}\n").unwrap();
     let mut line = String::new();
@@ -67,47 +131,83 @@ fn client(addr: std::net::SocketAddr, barrier: Arc<Barrier>, salt: usize) {
     writer.write_all(b"{\"cmd\": \"quit\"}\n").unwrap();
 }
 
+/// 8 concurrent clients, 4 routes: (alpha, manifest), (alpha, 2b),
+/// (beta, default 4b), (beta, 8b). Every response must be bit-identical
+/// to a dedicated `Session` built at that model+precision.
 #[test]
-fn eight_concurrent_clients_all_get_answers() {
-    let stats = Stats::default();
-    let session = start_test_session(&stats);
+fn concurrent_clients_across_models_and_precisions_get_exact_answers() {
+    let state = start_test_state();
+
+    // Oracles: dedicated single-model sessions per route.
+    let oracle = |model: NetworkModel, precision: Option<u32>, len: usize, salt: usize| {
+        let mut builder = Session::builder(model).workers(2);
+        if let Some(r) = precision {
+            builder = builder.precision(r, r);
+        }
+        let session = builder.build().unwrap();
+        (0..REQS_PER_CLIENT)
+            .map(|r| session.infer_one(test_image(len, salt, r)).unwrap())
+            .collect::<Vec<_>>()
+    };
+    // Route table: client i uses routes[i % 4].
+    type Route = (&'static str, Option<u32>, usize);
+    let routes: [Route; 4] = [
+        ("alpha", None, ALPHA_LEN),
+        ("alpha", Some(2), ALPHA_LEN),
+        ("beta", None, BETA_LEN), // falls back to the deployment default (4,4)
+        ("beta", Some(8), BETA_LEN),
+    ];
+    let expectations: Vec<Vec<Vec<f32>>> = (0..N_CLIENTS)
+        .map(|i| {
+            let (model, precision, len) = routes[i % routes.len()];
+            // "beta" with no request precision = the deployment's 4b default.
+            let effective = match (model, precision) {
+                ("beta", None) => Some(4),
+                _ => precision,
+            };
+            let m = if model == "alpha" { alpha_model() } else { beta_model() };
+            oracle(m, effective, len, i)
+        })
+        .collect();
 
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     let barrier = Arc::new(Barrier::new(N_CLIENTS));
 
-    let clients: Vec<_> = (0..N_CLIENTS)
-        .map(|i| {
+    let clients: Vec<_> = expectations
+        .into_iter()
+        .enumerate()
+        .map(|(i, expected)| {
             let b = Arc::clone(&barrier);
-            std::thread::spawn(move || client(addr, b, i))
+            let (model, precision, len) = routes[i % routes.len()];
+            std::thread::spawn(move || client(addr, b, i, model, precision, len, expected))
         })
         .collect();
 
     // Serve exactly N_CLIENTS connections, then return (waits for all
-    // connection handlers to finish).
-    serve_listener(session, &stats, listener, Some(N_CLIENTS)).unwrap();
+    // connection handlers to finish, then drains the engine).
+    serve_listener(&state, listener, Some(N_CLIENTS)).unwrap();
     for c in clients {
         c.join().unwrap();
     }
 
     use std::sync::atomic::Ordering;
     assert_eq!(
-        stats.requests.load(Ordering::Relaxed),
+        state.stats.requests.load(Ordering::Relaxed),
         (N_CLIENTS * REQS_PER_CLIENT) as u64
     );
-    assert_eq!(stats.errors.load(Ordering::Relaxed), 0);
+    assert_eq!(state.stats.errors.load(Ordering::Relaxed), 0);
     // The dispatcher saw batches, and latency percentiles are populated.
-    assert!(stats.occupancy.count() >= 1);
-    assert!(stats.latency.count() == (N_CLIENTS * REQS_PER_CLIENT) as u64);
-    assert!(stats.latency.percentile(99.0) >= stats.latency.percentile(50.0));
-    let j = stats.snapshot_json();
+    assert!(state.stats.occupancy.count() >= 1);
+    assert!(state.stats.latency.count() == (N_CLIENTS * REQS_PER_CLIENT) as u64);
+    assert!(state.stats.latency.percentile(99.0) >= state.stats.latency.percentile(50.0));
+    let j = state.stats.snapshot_json();
     assert!(j.get("p99_latency_micros").unwrap().as_f64().unwrap() >= 1.0);
 }
 
 #[test]
 fn protocol_errors_do_not_poison_other_clients() {
-    let stats = Stats::default();
-    let session = start_test_session(&stats);
+    let state = start_test_state();
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
 
@@ -129,21 +229,178 @@ fn protocol_errors_do_not_poison_other_clients() {
         let stream = TcpStream::connect(addr).unwrap();
         let mut writer = stream.try_clone().unwrap();
         let mut reader = BufReader::new(stream);
-        let img = vec!["0.5"; INPUT_LEN].join(",");
+        let img = vec!["0.5"; ALPHA_LEN].join(",");
         writer
             .write_all(format!("{{\"image\": [{img}]}}\n").as_bytes())
             .unwrap();
         let mut line = String::new();
         reader.read_line(&mut line).unwrap();
         assert!(line.contains("\"class\""), "{line}");
+        // No model field → routed to the default deployment (alpha).
+        assert!(line.contains("\"model\":\"alpha\""), "{line}");
         writer.write_all(b"{\"cmd\": \"quit\"}\n").unwrap();
     });
 
-    serve_listener(session, &stats, listener, Some(2)).unwrap();
+    serve_listener(&state, listener, Some(2)).unwrap();
     bad.join().unwrap();
     good.join().unwrap();
 
     use std::sync::atomic::Ordering;
-    assert_eq!(stats.requests.load(Ordering::Relaxed), 1);
-    assert_eq!(stats.errors.load(Ordering::Relaxed), 2);
+    assert_eq!(state.stats.requests.load(Ordering::Relaxed), 1);
+    assert_eq!(state.stats.errors.load(Ordering::Relaxed), 2);
+}
+
+/// Hot deploy/undeploy while a client hammers another deployment: the
+/// long-lived connection must see zero errors, and the deploy/undeploy
+/// client observes the gamma model appear, serve, and disappear — all
+/// over one server lifetime, no connection drops.
+#[test]
+fn deploy_and_undeploy_mid_traffic_does_not_disturb_connections() {
+    let state = start_test_state();
+    // Artifacts for the hot-load path, produced by the rust exporter.
+    let dir = std::env::temp_dir().join(format!("imagine_hotload_{}", std::process::id()));
+    let gamma = NetworkModel::synthetic_mlp(&[16, 5], 8, 4, 8, 123, &MacroParams::paper());
+    gamma.save(&dir, "gamma").unwrap();
+    let dir_s = dir.to_str().unwrap().to_string();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let barrier = Arc::new(Barrier::new(2));
+
+    let steady = {
+        let b = Arc::clone(&barrier);
+        std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            let mut writer = stream.try_clone().unwrap();
+            let mut reader = BufReader::new(stream);
+            b.wait();
+            // Keep alpha traffic flowing across the deploy/undeploy
+            // events on the other connection.
+            for r in 0..24 {
+                let image = test_image(ALPHA_LEN, 1, r);
+                writer
+                    .write_all(format!("{}\n", request_line("alpha", None, &image)).as_bytes())
+                    .unwrap();
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                assert!(
+                    line.contains("\"logits\"") && !line.contains("error"),
+                    "steady client disturbed at req {r}: {line}"
+                );
+            }
+            writer.write_all(b"{\"cmd\": \"quit\"}\n").unwrap();
+        })
+    };
+
+    let admin = {
+        let b = Arc::clone(&barrier);
+        std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            let mut writer = stream.try_clone().unwrap();
+            let mut reader = BufReader::new(stream);
+            let mut line = String::new();
+            b.wait();
+
+            // Hot-deploy gamma from the tensorfile manifest.
+            writer
+                .write_all(
+                    format!(
+                        "{{\"cmd\": \"deploy\", \"name\": \"gamma\", \"dir\": \"{dir_s}\", \
+                         \"precision\": 4}}\n"
+                    )
+                    .as_bytes(),
+                )
+                .unwrap();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains("\"deployed\":\"gamma\""), "{line}");
+
+            // It serves immediately, on this same connection.
+            let image = vec![0.25f32; 16];
+            writer
+                .write_all(format!("{}\n", request_line("gamma", None, &image)).as_bytes())
+                .unwrap();
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains("\"model\":\"gamma\""), "{line}");
+
+            // models lists all three.
+            writer.write_all(b"{\"cmd\": \"models\"}\n").unwrap();
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            let j = Json::parse(line.trim()).unwrap();
+            assert_eq!(j.get("n_models").unwrap().as_f64(), Some(3.0), "{line}");
+
+            // Undeploy; subsequent requests to gamma fail in-band while
+            // the connection survives.
+            writer
+                .write_all(b"{\"cmd\": \"undeploy\", \"name\": \"gamma\"}\n")
+                .unwrap();
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains("\"undeployed\":\"gamma\""), "{line}");
+            writer
+                .write_all(format!("{}\n", request_line("gamma", None, &image)).as_bytes())
+                .unwrap();
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains("error") && line.contains("gamma"), "{line}");
+
+            // Still alive: alpha answers on this connection too.
+            let image = test_image(ALPHA_LEN, 9, 0);
+            writer
+                .write_all(format!("{}\n", request_line("alpha", None, &image)).as_bytes())
+                .unwrap();
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains("\"model\":\"alpha\""), "{line}");
+            writer.write_all(b"{\"cmd\": \"quit\"}\n").unwrap();
+        })
+    };
+
+    serve_listener(&state, listener, Some(2)).unwrap();
+    steady.join().unwrap();
+    admin.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    use std::sync::atomic::Ordering;
+    // The only error on the books is the expected post-undeploy gamma
+    // request; the steady client saw none.
+    assert_eq!(state.stats.errors.load(Ordering::Relaxed), 1);
+}
+
+/// `{"cmd":"shutdown"}` stops the whole server gracefully: the accept
+/// loop exits without a max_conns bound, in-flight work finishes, and
+/// serve_listener returns after draining the engine.
+#[test]
+fn shutdown_command_stops_the_server_gracefully() {
+    let state = start_test_state();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    let client = std::thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        // Real work first, then ask the server to shut down.
+        let image = test_image(ALPHA_LEN, 3, 0);
+        writer
+            .write_all(format!("{}\n", request_line("alpha", None, &image)).as_bytes())
+            .unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"logits\""), "{line}");
+        writer.write_all(b"{\"cmd\": \"shutdown\"}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("shutting_down"), "{line}");
+    });
+
+    // No max_conns: only the shutdown command ends this call.
+    serve_listener(&state, listener, None).unwrap();
+    client.join().unwrap();
+    assert!(state.stop_requested());
+
+    use std::sync::atomic::Ordering;
+    assert_eq!(state.stats.requests.load(Ordering::Relaxed), 1);
+    assert_eq!(state.stats.errors.load(Ordering::Relaxed), 0);
 }

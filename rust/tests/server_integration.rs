@@ -1,11 +1,13 @@
 //! Server integration over the *trained artifacts* (requires
-//! `make artifacts`; skips otherwise): line-JSON protocol v2 against a
-//! `Session` built through the facade on the real mlp784 manifest.
+//! `make artifacts`; skips otherwise): line-JSON protocol v3 against a
+//! `ModelHub` built through the facade on the real mlp784 manifest.
 //! Synthetic-model protocol/concurrency coverage lives in
 //! `server_concurrent.rs`.
 
-use imagine::api::{BackendKind, Session, SessionBuilder};
-use imagine::coordinator::server::{handle_line, serve_listener, Stats, PROTOCOL_VERSION};
+use imagine::api::{BackendKind, Deployment, ModelHub};
+use imagine::coordinator::server::{
+    handle_line, serve_listener, ServerState, SessionCache, Stats, PROTOCOL_VERSION,
+};
 use imagine::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -20,18 +22,25 @@ fn have_artifacts() -> bool {
     ok
 }
 
-/// A session on the manifest through the one registry path — explicitly
+/// A hub over the manifest through the one registry path — explicitly
 /// the ideal backend, exactly like `imagine serve --backend ideal`.
-fn sim_session(stats: &Stats) -> Session {
-    SessionBuilder::from_artifacts("artifacts", "mlp784")
-        .unwrap()
-        .backend(BackendKind::Ideal)
+fn sim_state() -> ServerState {
+    let stats = Stats::default();
+    let hub = ModelHub::builder()
         .batch(8)
         .workers(2)
         .flush_micros(300)
         .occupancy(Arc::clone(&stats.occupancy))
         .build()
-        .unwrap()
+        .unwrap();
+    hub.deploy(
+        "mlp784",
+        Deployment::from_artifacts("artifacts", "mlp784")
+            .unwrap()
+            .backend(BackendKind::Ideal),
+    )
+    .unwrap();
+    ServerState::new(hub, stats)
 }
 
 #[test]
@@ -39,26 +48,27 @@ fn handle_line_protocol() {
     if !have_artifacts() {
         return;
     }
-    let stats = Stats::default();
-    let session = sim_session(&stats);
+    let state = sim_state();
+    let mut cache = SessionCache::new();
 
     // Bad JSON → in-band error.
-    let resp = handle_line(&session, &stats, "{oops").unwrap();
+    let resp = handle_line(&state, &mut cache, "{oops").unwrap();
     assert!(resp.contains("error"));
 
     // Wrong image size → in-band error.
-    let resp = handle_line(&session, &stats, r#"{"image": [1, 2, 3]}"#).unwrap();
+    let resp = handle_line(&state, &mut cache, r#"{"image": [1, 2, 3]}"#).unwrap();
     assert!(resp.contains("expected 'image'"));
 
-    // Valid image → logits + class.
+    // Valid image → logits + class (+ the routed model name).
     let img = vec!["0.5"; 784].join(",");
-    let resp = handle_line(&session, &stats, &format!(r#"{{"image": [{img}]}}"#)).unwrap();
+    let resp = handle_line(&state, &mut cache, &format!(r#"{{"image": [{img}]}}"#)).unwrap();
     let j = Json::parse(&resp).unwrap();
     assert!(j.get("logits").unwrap().as_arr().unwrap().len() == 10);
     assert!(j.get("class").unwrap().as_f64().unwrap() < 10.0);
+    assert_eq!(j.get("model").unwrap().as_str(), Some("mlp784"));
 
-    // info reports the versioned protocol and the active session config.
-    let resp = handle_line(&session, &stats, r#"{"cmd": "info"}"#).unwrap();
+    // info reports the versioned protocol and the deployment config.
+    let resp = handle_line(&state, &mut cache, r#"{"cmd": "info"}"#).unwrap();
     let j = Json::parse(&resp).unwrap();
     assert_eq!(j.get("protocol").unwrap().as_f64(), Some(PROTOCOL_VERSION as f64));
     assert_eq!(j.get("backend").unwrap().as_str(), Some("ideal"));
@@ -70,9 +80,28 @@ fn handle_line_protocol() {
     assert_eq!(j.get("images").unwrap().as_f64(), Some(1.0));
     assert!(j.get("modeled_energy_uj").unwrap().as_f64().unwrap() > 0.0);
 
+    // models lists the single deployment as the default.
+    let resp = handle_line(&state, &mut cache, r#"{"cmd": "models"}"#).unwrap();
+    let j = Json::parse(&resp).unwrap();
+    assert_eq!(j.get("default").unwrap().as_str(), Some("mlp784"));
+    assert_eq!(j.get("n_models").unwrap().as_f64(), Some(1.0));
+
+    // Per-request precision serves the same model re-shaped; bits echo
+    // through info with an explicit precision.
+    let resp = handle_line(
+        &state,
+        &mut cache,
+        r#"{"cmd": "info", "model": "mlp784", "precision": "2,4"}"#,
+    )
+    .unwrap();
+    let j = Json::parse(&resp).unwrap();
+    let p = j.get("precision").unwrap();
+    assert_eq!(p.get("r_in").unwrap().as_f64(), Some(2.0), "{resp}");
+    assert_eq!(p.get("r_out").unwrap().as_f64(), Some(4.0), "{resp}");
+
     // Stats reflect the traffic, including the protocol version and the
     // histogram fields.
-    let resp = handle_line(&session, &stats, r#"{"cmd": "stats"}"#).unwrap();
+    let resp = handle_line(&state, &mut cache, r#"{"cmd": "stats"}"#).unwrap();
     let j = Json::parse(&resp).unwrap();
     assert_eq!(j.get("protocol").unwrap().as_f64(), Some(PROTOCOL_VERSION as f64));
     assert_eq!(j.get("requests").unwrap().as_f64(), Some(1.0));
@@ -81,7 +110,42 @@ fn handle_line_protocol() {
     assert!(j.get("batches").unwrap().as_f64().unwrap() >= 1.0);
 
     // quit → None.
-    assert!(handle_line(&session, &stats, r#"{"cmd": "quit"}"#).is_none());
+    assert!(handle_line(&state, &mut cache, r#"{"cmd": "quit"}"#).is_none());
+}
+
+#[test]
+fn deploy_command_hot_loads_a_second_model_from_artifacts() {
+    if !have_artifacts() {
+        return;
+    }
+    let state = sim_state();
+    let mut cache = SessionCache::new();
+
+    // Deploy the same manifest under a second name, 2b, via the command.
+    let resp = handle_line(
+        &state,
+        &mut cache,
+        r#"{"cmd": "deploy", "name": "mlp2b", "dir": "artifacts", "manifest": "mlp784", "backend": "ideal", "precision": 2}"#,
+    )
+    .unwrap();
+    let j = Json::parse(&resp).expect(&resp);
+    assert_eq!(j.get("deployed").unwrap().as_str(), Some("mlp2b"));
+
+    let img = vec!["0.5"; 784].join(",");
+    let resp = handle_line(
+        &state,
+        &mut cache,
+        &format!(r#"{{"model": "mlp2b", "image": [{img}]}}"#),
+    )
+    .unwrap();
+    assert!(resp.contains("\"model\":\"mlp2b\""), "{resp}");
+
+    // Undeploy removes it; the default deployment still serves.
+    let resp =
+        handle_line(&state, &mut cache, r#"{"cmd": "undeploy", "name": "mlp2b"}"#).unwrap();
+    assert!(resp.contains("\"undeployed\":\"mlp2b\""), "{resp}");
+    let resp = handle_line(&state, &mut cache, &format!(r#"{{"image": [{img}]}}"#)).unwrap();
+    assert!(resp.contains("\"model\":\"mlp784\""), "{resp}");
 }
 
 #[test]
@@ -91,24 +155,31 @@ fn analog_backend_is_reachable_through_the_server_path() {
     }
     // Regression for the pre-facade server, which hardcoded
     // pjrt-with-ideal-fallback and could never serve the analog engine:
-    // the same registry the CLI uses must serve analog sessions too.
+    // the same registry the CLI uses must serve analog deployments too.
     let stats = Stats::default();
-    let session = SessionBuilder::from_artifacts("artifacts", "mlp784")
-        .unwrap()
-        .backend(BackendKind::Analog)
-        .seed(3)
-        .calibrate(false)
+    let hub = ModelHub::builder()
         .batch(4)
         .workers(1)
         .occupancy(Arc::clone(&stats.occupancy))
         .build()
         .unwrap();
-    let resp = handle_line(&session, &stats, r#"{"cmd": "info"}"#).unwrap();
+    hub.deploy(
+        "mlp784",
+        Deployment::from_artifacts("artifacts", "mlp784")
+            .unwrap()
+            .backend(BackendKind::Analog)
+            .seed(3)
+            .calibrate(false),
+    )
+    .unwrap();
+    let state = ServerState::new(hub, stats);
+    let mut cache = SessionCache::new();
+    let resp = handle_line(&state, &mut cache, r#"{"cmd": "info"}"#).unwrap();
     let j = Json::parse(&resp).unwrap();
     assert_eq!(j.get("backend").unwrap().as_str(), Some("analog"));
 
     let img = vec!["0.25"; 784].join(",");
-    let resp = handle_line(&session, &stats, &format!(r#"{{"image": [{img}]}}"#)).unwrap();
+    let resp = handle_line(&state, &mut cache, &format!(r#"{{"image": [{img}]}}"#)).unwrap();
     let j = Json::parse(&resp).unwrap();
     assert_eq!(j.get("logits").unwrap().as_arr().unwrap().len(), 10);
 }
@@ -118,8 +189,7 @@ fn tcp_roundtrip() {
     if !have_artifacts() {
         return;
     }
-    let stats = Stats::default();
-    let session = sim_session(&stats);
+    let state = sim_state();
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     let client = std::thread::spawn(move || {
@@ -136,6 +206,6 @@ fn tcp_roundtrip() {
         assert!(j.get("class").is_some(), "bad response: {line}");
         stream.write_all(b"{\"cmd\": \"quit\"}\n").unwrap();
     });
-    serve_listener(session, &stats, listener, Some(1)).unwrap();
+    serve_listener(&state, listener, Some(1)).unwrap();
     client.join().unwrap();
 }

@@ -1,8 +1,10 @@
-//! The `Session` facade: builder validation, the backend registry, the
-//! precision-scaling contract, and the sync/async call paths. Runs
-//! entirely on synthetic in-memory models (no artifacts needed).
+//! The public API: builder validation, the backend registry, the
+//! precision-scaling contract, the sync/async call paths, and the
+//! `ModelHub` multi-tenant contract (per-request precision bit-identity,
+//! hot deploy/undeploy, per-deployment isolation). Runs entirely on
+//! synthetic in-memory models (no artifacts needed).
 
-use imagine::api::{apply_precision, BackendKind, ImagineError, Session};
+use imagine::api::{apply_precision, BackendKind, Deployment, ImagineError, ModelHub, Session};
 use imagine::config::params::{Corner, MacroParams, Supply};
 use imagine::coordinator::executor::{Backend, Executor};
 use imagine::coordinator::manifest::NetworkModel;
@@ -39,6 +41,18 @@ fn pjrt_unavailability_is_a_typed_error() {
         .err()
         .unwrap();
     assert!(matches!(err, ImagineError::BackendUnavailable { backend: BackendKind::Pjrt, .. }), "{err}");
+    // A precision override on a PJRT deployment is rejected at deploy
+    // time — the artifact's arithmetic is compiled in, so accepting it
+    // would make every subsequent request fail at the retarget step.
+    let err = Session::builder(model.clone())
+        .backend(BackendKind::Pjrt)
+        .artifacts("/nonexistent", "nope")
+        .precision(4, 4)
+        .build()
+        .err()
+        .unwrap();
+    assert!(matches!(err, ImagineError::BackendUnavailable { backend: BackendKind::Pjrt, .. }), "{err}");
+    assert!(format!("{err}").contains("compile time"), "{err}");
     // With a directory but no runnable runtime/HLO in the default build:
     // still the same typed failure class.
     let err = Session::builder(model)
@@ -208,6 +222,197 @@ fn sessions_share_one_engine_across_clones_and_threads() {
     let snap = session.snapshot().unwrap();
     assert_eq!(snap.images, images.len() as u64);
     assert!(snap.batches >= 1);
+}
+
+/// The ModelHub acceptance contract: one engine serves two named models,
+/// and a per-request precision override r ∈ {1, 2, 4, 8} produces logits
+/// *bit-identical* to a dedicated single-model `Session` built at that
+/// precision — even with interleaved traffic at other precisions and on
+/// the other deployment between requests (re-targeting always reshapes
+/// from the pristine deployed model, so nothing accumulates).
+#[test]
+fn hub_serves_two_models_with_per_request_precision_bit_identical() {
+    let p = MacroParams::paper();
+    let mut rng = Rng::new(0xB0B);
+    let model_a = NetworkModel::synthetic_mlp(&[72, 24, 6], 8, 4, 8, 9, &p);
+    let model_b = NetworkModel::synthetic_mlp(&[40, 12, 4], 8, 4, 8, 11, &p);
+    let images_a = random_images(&mut rng, 5, 72);
+    let images_b = random_images(&mut rng, 5, 40);
+
+    let hub = ModelHub::builder().batch(8).workers(2).build().unwrap();
+    hub.deploy("a", Deployment::new(model_a.clone())).unwrap();
+    hub.deploy("b", Deployment::new(model_b.clone()).precision(4, 4))
+        .unwrap();
+    assert_eq!(hub.models(), vec!["a".to_string(), "b".to_string()]);
+    assert_eq!(hub.default_model().as_deref(), Some("a"));
+
+    for r in [1u32, 2, 4, 8] {
+        // Dedicated single-model sessions at precision r: the oracle.
+        let expect_a = Session::builder(model_a.clone())
+            .precision(r, r)
+            .workers(2)
+            .build()
+            .unwrap()
+            .infer_batch(&images_a)
+            .unwrap();
+        let expect_b = Session::builder(model_b.clone())
+            .precision(r, r)
+            .workers(2)
+            .build()
+            .unwrap()
+            .infer_batch(&images_b)
+            .unwrap();
+
+        let sa = hub.session("a").unwrap().with_precision(r, r).unwrap();
+        let sb = hub.session("b").unwrap().with_precision(r, r).unwrap();
+        assert_eq!(sa.config().precision, Some((r, r)));
+        assert_eq!(sa.infer_batch(&images_a).unwrap(), expect_a, "model a, r={r}");
+        // Interleave: b at its deployment default (4,4), then at r.
+        hub.session("b").unwrap().infer_batch(&images_b).unwrap();
+        assert_eq!(sb.infer_batch(&images_b).unwrap(), expect_b, "model b, r={r}");
+        // Hop a through another operating point and back to r: still
+        // bit-identical (no float-rescale accumulation).
+        hub.session("a")
+            .unwrap()
+            .with_precision(3, 5)
+            .unwrap()
+            .infer_batch(&images_a)
+            .unwrap();
+        assert_eq!(
+            sa.infer_batch(&images_a).unwrap(),
+            expect_a,
+            "model a after precision hops, r={r}"
+        );
+    }
+}
+
+/// The analog pool re-targets without re-fabrication: with temporal
+/// noise off (the forward pass is then a pure function of die state),
+/// a hub session re-targeted to r must match a dedicated analog session
+/// *built* at r with the same seed — same mismatch draws, same
+/// calibration, same die split.
+#[test]
+fn analog_hub_precision_matches_dedicated_session_noise_off() {
+    let p = MacroParams::paper();
+    let mut rng = Rng::new(0xA11A);
+    let model = NetworkModel::synthetic_mlp(&[40, 8], 8, 2, 8, 6, &p);
+    let images = random_images(&mut rng, 4, 40);
+
+    let shared = Session::builder(model.clone())
+        .backend(BackendKind::Analog)
+        .seed(99)
+        .noise(false)
+        .workers(2)
+        .build()
+        .unwrap();
+    for r in [2u32, 4, 8] {
+        let expect = Session::builder(model.clone())
+            .backend(BackendKind::Analog)
+            .seed(99)
+            .noise(false)
+            .workers(2)
+            .precision(r, r)
+            .build()
+            .unwrap()
+            .infer_batch(&images)
+            .unwrap();
+        // Traffic at the manifest precision first, then re-target.
+        shared.infer_batch(&images).unwrap();
+        let got = shared
+            .with_precision(r, r)
+            .unwrap()
+            .infer_batch(&images)
+            .unwrap();
+        assert_eq!(got, expect, "analog r={r}");
+    }
+}
+
+#[test]
+fn hub_deploy_undeploy_and_typed_errors() {
+    let p = MacroParams::paper();
+    let hub = ModelHub::builder().workers(1).build().unwrap();
+    assert!(matches!(
+        hub.session("nope").err().unwrap(),
+        ImagineError::UnknownModel { .. }
+    ));
+    assert!(matches!(
+        hub.undeploy("nope").err().unwrap(),
+        ImagineError::UnknownModel { .. }
+    ));
+    assert!(hub.default_session().is_err(), "empty hub has no default");
+
+    let model = NetworkModel::synthetic_mlp(&[12, 3], 8, 4, 8, 5, &p);
+    hub.deploy("m", Deployment::new(model.clone())).unwrap();
+    let session = hub.session("m").unwrap();
+    assert_eq!(session.infer_one(vec![0.5; 12]).unwrap().len(), 3);
+    assert!(session.is_live());
+    // Handle-level precision validation is typed.
+    assert!(matches!(
+        session.with_precision(0, 4).err().unwrap(),
+        ImagineError::InvalidConfig { field: "precision", .. }
+    ));
+
+    // Undeploy: stale handles fail cleanly, the registry forgets the name.
+    hub.undeploy("m").unwrap();
+    assert!(!session.is_live());
+    assert!(session.infer_one(vec![0.5; 12]).is_err());
+    assert!(matches!(
+        session.snapshot().err().unwrap(),
+        ImagineError::UnknownModel { .. }
+    ));
+    assert!(hub.models().is_empty());
+
+    // Redeploying the name (hot reload) serves fresh sessions; the old
+    // handle stays stale (its deployment id is gone for good).
+    hub.deploy("m", Deployment::new(model)).unwrap();
+    assert!(hub.session("m").unwrap().infer_one(vec![0.5; 12]).is_ok());
+    assert!(!session.is_live(), "stale handle must not resurrect");
+}
+
+#[test]
+fn hub_snapshots_and_default_are_per_deployment() {
+    let p = MacroParams::paper();
+    let mut rng = Rng::new(77);
+    let hub = ModelHub::builder().workers(1).build().unwrap();
+    hub.deploy(
+        "x",
+        Deployment::new(NetworkModel::synthetic_mlp(&[12, 3], 8, 4, 8, 1, &p)),
+    )
+    .unwrap();
+    hub.deploy(
+        "y",
+        Deployment::new(NetworkModel::synthetic_mlp(&[20, 4], 8, 4, 8, 2, &p)),
+    )
+    .unwrap();
+    assert_eq!(hub.default_model().as_deref(), Some("x"));
+
+    let sx = hub.session("x").unwrap();
+    let sy = hub.session("y").unwrap();
+    sx.infer_batch(&random_images(&mut rng, 3, 12)).unwrap();
+    sy.infer_batch(&random_images(&mut rng, 2, 20)).unwrap();
+    // Counters and modeled cost are isolated per deployment.
+    let snap_x = sx.snapshot().unwrap();
+    let snap_y = sy.snapshot().unwrap();
+    assert_eq!((snap_x.images, snap_x.batches), (3, 1));
+    assert_eq!((snap_y.images, snap_y.batches), (2, 1));
+    assert!(snap_x.cost.unwrap().e_total() > 0.0);
+
+    // Hot-reloading the default model in place must NOT re-route
+    // default traffic to another deployment (the name keeps its rank,
+    // even though the reload gets a fresh engine id).
+    hub.deploy(
+        "x",
+        Deployment::new(NetworkModel::synthetic_mlp(&[12, 3], 8, 4, 8, 9, &p)),
+    )
+    .unwrap();
+    assert_eq!(hub.default_model().as_deref(), Some("x"));
+    assert!(!sx.is_live(), "pre-reload handle goes stale");
+    assert_eq!(hub.default_session().unwrap().model(), "x");
+
+    // Removing the default promotes the next-oldest deployment.
+    hub.undeploy("x").unwrap();
+    assert_eq!(hub.default_model().as_deref(), Some("y"));
+    assert_eq!(hub.default_session().unwrap().model(), "y");
 }
 
 #[test]
