@@ -2,7 +2,7 @@
 # artifact-dependent integration tests skip with a message until
 # `make artifacts` has been run (requires python3 with jax + numpy).
 
-.PHONY: build test artifacts bench fmt pytest
+.PHONY: build test artifacts bench bench-check fmt pytest ci
 
 build:
 	cargo build --release
@@ -18,9 +18,32 @@ artifacts:
 
 bench:
 	cargo bench --bench perf_hotpath
+	cargo bench --bench train_smoke
+
+# What the CI bench job runs: benches + the 25%-regression gate against
+# the committed baseline, writing the merged BENCH_pr5.json report.
+# (cargo runs bench binaries with CWD = the package root, so the metric
+# JSONs land under rust/bench_out/.)
+bench-check: bench
+	python3 scripts/bench_guard.py \
+	  --merge rust/bench_out/perf.json rust/bench_out/train_smoke.json \
+	  --out BENCH_pr5.json --baseline BENCH_baseline.json
 
 fmt:
 	cargo fmt --all --check
 
 pytest:
 	cd python && python3 -m pytest tests -q
+
+# Mirror the CI workflow locally (rust job matrix + lint job) so a push
+# that passes `make ci` passes the workflow: both feature-matrix arms
+# (build, test, bench compilation), blocking clippy/fmt.
+ci:
+	cargo build --release --no-default-features
+	cargo test -q --no-default-features
+	cargo bench --no-run --no-default-features
+	cargo build --release --features pjrt
+	cargo test -q --features pjrt
+	cargo bench --no-run --features pjrt
+	cargo clippy --all-targets -- -D warnings
+	cargo fmt --all --check

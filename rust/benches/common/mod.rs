@@ -1,5 +1,7 @@
 //! Shared helpers for the figure-regeneration benches: an output sink
-//! that both prints and records into bench_out/, and tiny timing utils.
+//! that both prints and records into bench_out/, a machine-readable
+//! metric sink (what the CI bench job's regression gate reads), and tiny
+//! timing utils.
 
 use std::io::Write;
 use std::time::Instant;
@@ -22,7 +24,43 @@ impl FigSink {
     }
 }
 
+/// Collects named scalar metrics and writes them as a flat JSON object
+/// to `bench_out/<name>.json` on [`MetricSink::write`]. Key convention
+/// (consumed by `scripts/bench_guard.py`): `*_per_s` is
+/// higher-is-better, `*_ns_per_*` / `*_us_per_*` is lower-is-better.
+#[allow(dead_code)]
+pub struct MetricSink {
+    name: String,
+    metrics: Vec<(String, f64)>,
+}
+
+#[allow(dead_code)]
+impl MetricSink {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), metrics: Vec::new() }
+    }
+
+    pub fn metric(&mut self, key: &str, value: f64) {
+        self.metrics.push((key.to_string(), value));
+    }
+
+    /// Serialize to `bench_out/<name>.json` (flat object, finite values
+    /// only — the guard treats missing keys as "not measured").
+    pub fn write(&self) {
+        std::fs::create_dir_all("bench_out").unwrap();
+        let body: Vec<String> = self
+            .metrics
+            .iter()
+            .filter(|(_, v)| v.is_finite())
+            .map(|(k, v)| format!("  \"{k}\": {v:.6}"))
+            .collect();
+        let json = format!("{{\n{}\n}}\n", body.join(",\n"));
+        std::fs::write(format!("bench_out/{}.json", self.name), json).unwrap();
+    }
+}
+
 /// Time a closure, returning (result, seconds).
+#[allow(dead_code)]
 pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
     let t0 = Instant::now();
     let r = f();

@@ -14,7 +14,7 @@
 
 mod common;
 
-use common::FigSink;
+use common::{FigSink, MetricSink};
 use imagine::analog::macro_model::{CimMacro, OpConfig};
 use imagine::config::params::MacroParams;
 use imagine::coordinator::executor::{ideal_codes, Backend, Executor};
@@ -38,6 +38,7 @@ fn bench<F: FnMut()>(name: &str, iters: usize, out: &mut FigSink, mut f: F) -> f
 
 fn main() {
     let mut out = FigSink::new("perf");
+    let mut metrics = MetricSink::new("perf");
     out.line("# perf_hotpath — wall-clock per iteration (release)");
     let p = MacroParams::paper();
 
@@ -136,6 +137,7 @@ fn main() {
         conv_b32,
         conv_b1
     ));
+    metrics.metric("conv3x3_batch32_images_per_s", conv_b32);
 
     // ---- 4. batched engine: batch-size scaling of the ideal backend ----
     out.line("");
@@ -195,6 +197,8 @@ fn main() {
         "-> batch=32 speedup vs legacy per-image executor: {:.1}x",
         ips_b32 / ips_exec
     ));
+    metrics.metric("engine_batch32_images_per_s", ips_b32);
+    metrics.metric("engine_batch32_ns_per_image", 1e9 / ips_b32.max(1e-9));
 
     // ---- 4b. hub routing overhead: 1 vs 4 deployments ----
     // Same total image count through the ModelHub's submit path; the
@@ -266,6 +270,8 @@ fn main() {
         an,
         an / a1
     ));
+    metrics.metric("analog_pool_images_per_s", an);
+    metrics.write();
 
     out.line("\n# Targets (EXPERIMENTS.md §Perf): >=1e7 column-evals/s noise-off for");
     out.line("# the Fig-17/19 sweeps; im2col well under the per-image macro time;");

@@ -1,0 +1,66 @@
+//! Train-smoke timing: how fast the CIM-aware trainer steps on a small
+//! synthetic task. Feeds `bench_out/train_smoke.json`, which the CI
+//! bench job's regression gate (`scripts/bench_guard.py`) compares
+//! against the committed `BENCH_baseline.json`.
+//!
+//! `cargo bench --bench train_smoke`
+
+mod common;
+
+use common::{FigSink, MetricSink};
+use imagine::config::params::MacroParams;
+use imagine::nn::dataset::Dataset;
+use imagine::nn::graph::Graph;
+use imagine::nn::layers::{DenseNode, Node};
+use imagine::nn::mlp::Dense;
+use imagine::nn::train::{train_graph, NoiseInjection, TrainConfig};
+use imagine::util::rng::Rng;
+
+fn main() {
+    let mut out = FigSink::new("train_smoke");
+    let mut metrics = MetricSink::new("train_smoke");
+    out.line("# train_smoke — CIM-aware trainer throughput (release)");
+
+    let p = MacroParams::paper();
+    let train = Dataset::synthetic(480, vec![8, 8], 10, 5, 11, 0.22);
+    let mut rng = Rng::new(3);
+    let mut graph = Graph::new("bench_mlp", vec![64])
+        .with(Node::Dense(DenseNode::new(Dense::new(64, 32, &mut rng))))
+        .with(Node::Relu)
+        .with(Node::Dense(DenseNode::new(Dense::new(32, 10, &mut rng))));
+
+    let cfg = TrainConfig {
+        epochs: 4,
+        batch: 32,
+        noise: NoiseInjection::Lsb(0.5),
+        seed: 7,
+        ..TrainConfig::default()
+    };
+    let report = train_graph(&mut graph, &train, &p, &cfg).expect("train smoke");
+    out.line(format!(
+        "mlp 64-32-10, 480 images x {} epochs (σ = {:.2} LSB):",
+        cfg.epochs, report.noise_lsb
+    ));
+    out.line(format!(
+        "  {:>8} steps in {:.3}s  ->  {:>8.1} steps/s, {:>8.0} images/s",
+        report.steps,
+        report.wall_seconds,
+        report.steps_per_s(),
+        report.images_per_s()
+    ));
+    out.line(format!(
+        "  loss {:.3} -> {:.3}",
+        report.epoch_losses.first().unwrap(),
+        report.final_loss()
+    ));
+    // An honesty check, not a unit test: a smoke run whose loss does not
+    // move is timing a broken trainer.
+    assert!(
+        report.final_loss() < report.epoch_losses[0],
+        "train smoke did not reduce the loss: {:?}",
+        report.epoch_losses
+    );
+    metrics.metric("train_steps_per_s", report.steps_per_s());
+    metrics.metric("train_images_per_s", report.images_per_s());
+    metrics.write();
+}

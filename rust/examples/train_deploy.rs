@@ -1,0 +1,154 @@
+//! End-to-end CIM-aware training walkthrough — the paper's accuracy
+//! pillar in one run, no artifacts or python required:
+//!
+//! 1. **characterize** — probe the analog backend's equivalent output
+//!    noise at the configured supply/corner;
+//! 2. **train** — two identical MLPs on a synthetic digit task, one with
+//!    the measured σ injected into every forward (STE through the 4b
+//!    antipodal weight quantizer and the r_in/r_out activation grids),
+//!    one noise-free;
+//! 3. **evaluate** — both through the in-process CIM mapping and the
+//!    circuit-behavioral analog die pool: the noise-trained network
+//!    holds its accuracy where the noise-free one degrades;
+//! 4. **deploy** — lower the noise-trained graph, save artifacts, and
+//!    serve them back through a `ModelHub` session.
+//!
+//! Run: `cargo run --release --example train_deploy`
+
+use imagine::api::{
+    BackendKind, Deployment, ModelHub, NoiseInjection, TrainConfig, Trainer,
+};
+use imagine::config::params::MacroParams;
+use imagine::engine::noise::probe_equivalent_noise;
+use imagine::nn::dataset::Dataset;
+use imagine::nn::graph::Graph;
+use imagine::nn::layers::{DenseNode, Node};
+use imagine::nn::mlp::Dense;
+use imagine::util::rng::Rng;
+use imagine::util::stats::argmax_f32 as argmax;
+
+fn digit_graph(seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    Graph::new("cim_digits", vec![64])
+        .with(Node::Dense(DenseNode::new(Dense::new(64, 32, &mut rng))))
+        .with(Node::Relu)
+        .with(Node::Dense(DenseNode::new(Dense::new(32, 10, &mut rng))))
+}
+
+fn analog_accuracy(
+    model: &imagine::coordinator::manifest::NetworkModel,
+    test: &Dataset,
+    seed: u64,
+) -> anyhow::Result<f64> {
+    let session = imagine::api::Session::builder(model.clone())
+        .backend(BackendKind::Analog)
+        .seed(seed)
+        .workers(2)
+        .build()?;
+    let images: Vec<Vec<f32>> = (0..test.n).map(|i| test.image(i).to_vec()).collect();
+    let outs = session.infer_batch_owned(images)?;
+    let correct = outs
+        .iter()
+        .zip(&test.y)
+        .filter(|(logits, &y)| argmax(logits) == y as usize)
+        .count();
+    Ok(correct as f64 / test.n as f64)
+}
+
+fn main() -> anyhow::Result<()> {
+    let p = MacroParams::paper();
+    let train = Dataset::synthetic(480, vec![8, 8], 10, 5, 11, 0.22);
+    let test = Dataset::synthetic(240, vec![8, 8], 10, 5, 12, 0.22);
+
+    // ---- 1. characterize the die ----
+    let stats = probe_equivalent_noise(&p, 8, 4, 7)?;
+    println!(
+        "probed equivalent noise @ r_in=8 r_out=4, {:.2}/{:.2} V {}: \
+         temporal {:.3} LSB + fixed-pattern {:.3} LSB = {:.3} LSB",
+        p.supply.vddl,
+        p.supply.vddh,
+        p.corner.name(),
+        stats.sigma_temporal_lsb,
+        stats.sigma_mismatch_lsb,
+        stats.total_lsb()
+    );
+
+    // ---- 2. train twice: measured noise in the loop vs none ----
+    let base = TrainConfig { epochs: 6, r_in: 8, r_out: 4, seed: 7, ..TrainConfig::default() };
+    let noisy_cfg = TrainConfig { noise: NoiseInjection::Probe, ..base };
+    let clean_cfg = TrainConfig { noise: NoiseInjection::Off, ..base };
+    println!("\ntraining with injected σ (probe) ...");
+    let noisy = Trainer::new(digit_graph(3)).config(noisy_cfg).fit(&train)?;
+    println!(
+        "  {} steps, {:.0} steps/s, final loss {:.3} (σ = {:.3} LSB in the loop)",
+        noisy.report.steps,
+        noisy.report.steps_per_s(),
+        noisy.report.final_loss(),
+        noisy.report.noise_lsb
+    );
+    println!("training noise-free ...");
+    let clean = Trainer::new(digit_graph(3)).config(clean_cfg).fit(&train)?;
+    println!(
+        "  {} steps, {:.0} steps/s, final loss {:.3}",
+        clean.report.steps,
+        clean.report.steps_per_s(),
+        clean.report.final_loss()
+    );
+
+    // ---- 3. evaluate: in-process mapping and the analog die pool ----
+    let sigma = noisy.report.noise_lsb;
+    println!("\nheld-out accuracy (240 images):");
+    println!(
+        "  in-process CIM, noiseless : noise-trained {:.1}%  noise-free {:.1}%",
+        100.0 * noisy.accuracy_cim(&test, 0.0)?,
+        100.0 * clean.accuracy_cim(&test, 0.0)?
+    );
+    println!(
+        "  in-process CIM, σ={sigma:.2}   : noise-trained {:.1}%  noise-free {:.1}%",
+        100.0 * noisy.accuracy_cim(&test, sigma)?,
+        100.0 * clean.accuracy_cim(&test, sigma)?
+    );
+    let noisy_model = noisy.lower(&train)?;
+    let clean_model = clean.lower(&train)?;
+    let analog_n = analog_accuracy(&noisy_model, &test, 2024)?;
+    let analog_c = analog_accuracy(&clean_model, &test, 2024)?;
+    println!(
+        "  analog die pool           : noise-trained {:.1}%  noise-free {:.1}%",
+        100.0 * analog_n,
+        100.0 * analog_c
+    );
+
+    // ---- 4. deploy the noise-trained model and serve it back ----
+    let dir = std::env::temp_dir().join(format!("imagine_train_deploy_{}", std::process::id()));
+    let dir = dir.to_str().unwrap().to_string();
+    noisy.save(&dir, "cim_digits", &train)?;
+    println!("\nexported {dir}/cim_digits.manifest.json (+ .imgt)");
+
+    let hub = ModelHub::builder().batch(32).build()?;
+    hub.deploy("digits", Deployment::from_artifacts(&dir, "cim_digits")?)?;
+    let session = hub.session("digits")?;
+    println!("serving: {}", session.config().render());
+    let mut agree = 0usize;
+    let mapped_acc = noisy.accuracy_cim(&test, 0.0)?;
+    let mut correct = 0usize;
+    for i in 0..test.n {
+        let logits = session.infer_one(test.image(i).to_vec())?;
+        let pred = argmax(&logits);
+        if pred == test.y[i] as usize {
+            correct += 1;
+        }
+        let inproc = noisy.graph.forward_float(test.image(i))?;
+        if pred == argmax(&inproc) {
+            agree += 1;
+        }
+    }
+    println!(
+        "served accuracy {:.1}% (in-process mapping {:.1}%), served-vs-float agreement {}/{}",
+        100.0 * correct as f64 / test.n as f64,
+        100.0 * mapped_acc,
+        agree,
+        test.n
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}

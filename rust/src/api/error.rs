@@ -41,12 +41,20 @@ pub enum ImagineError {
     Input { message: String },
     /// The engine failed at runtime (backend error, dispatcher gone).
     Engine { message: String },
+    /// The CIM-aware trainer rejected its configuration or data, or a
+    /// training-time evaluation/lowering failed.
+    Train { message: String },
 }
 
 impl ImagineError {
     /// Wrap an engine-layer error crossing the facade boundary.
     pub(crate) fn engine(e: anyhow::Error) -> Self {
         ImagineError::Engine { message: format!("{e:#}") }
+    }
+
+    /// Wrap a trainer-layer error crossing the facade boundary.
+    pub(crate) fn train(e: anyhow::Error) -> Self {
+        ImagineError::Train { message: format!("{e:#}") }
     }
 }
 
@@ -70,6 +78,7 @@ impl fmt::Display for ImagineError {
             }
             ImagineError::Input { message } => write!(f, "bad inference input: {message}"),
             ImagineError::Engine { message } => write!(f, "inference engine error: {message}"),
+            ImagineError::Train { message } => write!(f, "training error: {message}"),
         }
     }
 }

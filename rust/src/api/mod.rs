@@ -21,20 +21,28 @@
 //! * [`SessionBuilder`] — the single-model facade (a one-deployment hub
 //!   under the hood): `backend / precision / supply / corner / batch /
 //!   workers / seed` knobs, validated at [`SessionBuilder::build`];
+//! * [`Trainer`] / [`TrainConfig`] — CIM-aware training (STE through
+//!   the macro's quantizers, post-silicon equivalent noise injected per
+//!   forward); a [`TrainedModel`] lowers, saves and deploys straight
+//!   into the hub — train → lower → serve in one binary;
 //! * [`ImagineError`] — the typed error enum on this boundary.
 //!
-//! The CLI (`imagine run`, `imagine serve`), the TCP server and all
-//! examples construct backends exclusively through this module, so the
-//! internal backend registry is the crate's one backend match.
+//! The CLI (`imagine run`, `imagine train`, `imagine serve`), the TCP
+//! server and all examples construct backends exclusively through this
+//! module, so the internal backend registry is the crate's one backend
+//! match.
 
 mod error;
 mod hub;
 mod registry;
 mod session;
+mod train;
 
+pub use crate::nn::train::{NoiseInjection, TrainConfig, TrainReport};
 pub use error::ImagineError;
 pub use hub::{Deployment, HubBuilder, ModelHub, PendingInference, Session};
 pub use session::{
     apply_precision, parse_corner, parse_precision, parse_supply, BackendKind, LayerSummary,
     SessionBuilder, SessionConfig,
 };
+pub use train::{TrainedModel, Trainer};

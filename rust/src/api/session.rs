@@ -110,12 +110,12 @@ impl BackendKind {
         let hlo = std::path::Path::new(dir).join(format!("{name}.hlo.txt"));
         let have_hlo = hlo.exists();
         let hlo = hlo.display();
-        if cfg!(feature = "pjrt") && have_hlo {
+        if crate::runtime::PJRT_AVAILABLE && have_hlo {
             (
                 BackendKind::Pjrt,
                 format!("auto: running the PJRT HLO artifact at {hlo}"),
             )
-        } else if cfg!(feature = "pjrt") {
+        } else if crate::runtime::PJRT_AVAILABLE {
             (
                 BackendKind::Ideal,
                 format!("auto: no HLO artifact at {hlo} — fell back to the batched ideal engine"),
@@ -124,16 +124,16 @@ impl BackendKind {
             (
                 BackendKind::Ideal,
                 format!(
-                    "auto: HLO artifact present at {hlo} but the `pjrt` feature is not \
-                     compiled in — fell back to the batched ideal engine"
+                    "auto: HLO artifact present at {hlo} but this build cannot run the PJRT \
+                     runtime (pjrt+xla features) — fell back to the batched ideal engine"
                 ),
             )
         } else {
             (
                 BackendKind::Ideal,
                 format!(
-                    "auto: `pjrt` feature not compiled in and no HLO artifact at {hlo} — \
-                     using the batched ideal engine"
+                    "auto: PJRT runtime not compiled in (pjrt+xla features) and no HLO \
+                     artifact at {hlo} — using the batched ideal engine"
                 ),
             )
         }

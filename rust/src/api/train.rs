@@ -1,0 +1,242 @@
+//! The [`Trainer`] facade: CIM-aware training behind the public API,
+//! closing the loop **train → lower → serve** in one binary.
+//!
+//! [`Trainer::fit`] runs [`crate::nn::train::train_graph`] (STE gradients
+//! through the macro's quantizers, equivalent noise injected per
+//! forward) and returns a [`TrainedModel`] that knows how to evaluate
+//! itself, lower to a physical [`NetworkModel`], save artifacts the
+//! server's hot-deploy path loads, and wrap itself in a [`Deployment`]
+//! for a [`ModelHub`](super::ModelHub):
+//!
+//! ```no_run
+//! use imagine::api::{ModelHub, Trainer, TrainConfig, NoiseInjection};
+//! use imagine::nn::dataset::Dataset;
+//! use imagine::nn::graph::Graph;
+//! # fn mlp_graph() -> Graph { unimplemented!() }
+//!
+//! let train = Dataset::synthetic(480, vec![8, 8], 10, 5, 11, 0.22);
+//! let trained = Trainer::new(mlp_graph())
+//!     .config(TrainConfig { noise: NoiseInjection::Probe, ..TrainConfig::default() })
+//!     .fit(&train)?;
+//! trained.save("exports", "cim_digits", &train)?;   // → imagine serve --model cim_digits=exports
+//! let hub = ModelHub::builder().build()?;
+//! hub.deploy("digits", trained.deployment(&train)?)?; // or straight into a hub
+//! # Ok::<(), imagine::api::ImagineError>(())
+//! ```
+
+use super::error::ImagineError;
+use super::hub::Deployment;
+use crate::config::params::MacroParams;
+use crate::coordinator::manifest::NetworkModel;
+use crate::nn::dataset::Dataset;
+use crate::nn::graph::{eval_graph_workers, Graph};
+use crate::nn::train::{train_graph, TrainConfig, TrainReport};
+use crate::util::json::{obj, Json};
+
+/// Builder-style facade over the CIM-aware trainer.
+pub struct Trainer {
+    graph: Graph,
+    config: TrainConfig,
+    params: MacroParams,
+}
+
+impl Trainer {
+    /// Train `graph` (its current weights are the initialization) with
+    /// the default [`TrainConfig`] and paper parameters.
+    pub fn new(graph: Graph) -> Trainer {
+        Trainer { graph, config: TrainConfig::default(), params: MacroParams::paper() }
+    }
+
+    pub fn config(mut self, config: TrainConfig) -> Trainer {
+        self.config = config;
+        self
+    }
+
+    /// Macro parameters to train against (supply/corner set the probed
+    /// noise operating point).
+    pub fn params(mut self, params: MacroParams) -> Trainer {
+        self.params = params;
+        self
+    }
+
+    /// Run the training loop on `data`; deterministic per config seed.
+    pub fn fit(mut self, data: &Dataset) -> Result<TrainedModel, ImagineError> {
+        let report = train_graph(&mut self.graph, data, &self.params, &self.config)
+            .map_err(ImagineError::train)?;
+        Ok(TrainedModel {
+            graph: self.graph,
+            report,
+            config: self.config,
+            params: self.params,
+        })
+    }
+}
+
+/// A trained graph plus everything needed to evaluate and deploy it.
+pub struct TrainedModel {
+    /// The trained float graph (master weights).
+    pub graph: Graph,
+    pub report: TrainReport,
+    config: TrainConfig,
+    params: MacroParams,
+}
+
+impl TrainedModel {
+    /// The configuration the model was trained with.
+    pub fn config(&self) -> &TrainConfig {
+        &self.config
+    }
+
+    pub fn params(&self) -> &MacroParams {
+        &self.params
+    }
+
+    /// Float-forward accuracy (no quantization) on `data`.
+    pub fn accuracy_float(&self, data: &Dataset) -> Result<f64, ImagineError> {
+        let mut correct = 0usize;
+        for i in 0..data.n {
+            let logits = self.graph.forward_float(data.image(i)).map_err(ImagineError::train)?;
+            if crate::util::stats::argmax_f32(&logits) == data.y[i] as usize {
+                correct += 1;
+            }
+        }
+        Ok(correct as f64 / data.n.max(1) as f64)
+    }
+
+    /// Accuracy through the CIM mapping at the training operating point,
+    /// with `noise_lsb` equivalent output noise injected (0 ⇒ noiseless).
+    pub fn accuracy_cim(&self, data: &Dataset, noise_lsb: f64) -> Result<f64, ImagineError> {
+        eval_graph_workers(
+            &self.graph,
+            data,
+            &self.params,
+            &self.config.eval_cfg(noise_lsb),
+            self.config.workers.max(1),
+        )
+        .map_err(ImagineError::train)
+    }
+
+    /// Lower to a physical [`NetworkModel`] (integer antipodal weights in
+    /// macro row order, 5b ABN offsets, post-ADC gains), calibrated on
+    /// `calib` at the training operating point, with the training
+    /// metrics recorded in the manifest's `metrics` field.
+    pub fn lower(&self, calib: &Dataset) -> Result<NetworkModel, ImagineError> {
+        let cfg = self.config.eval_cfg(self.report.noise_lsb);
+        let mut model =
+            self.graph.lower(calib, &self.params, &cfg).map_err(ImagineError::train)?;
+        model.metrics = obj(vec![
+            ("trained_by", Json::Str("imagine-train".to_string())),
+            ("epochs", Json::Num(self.report.epoch_losses.len() as f64)),
+            ("final_loss", Json::Num(self.report.final_loss())),
+            ("noise_lsb", Json::Num(self.report.noise_lsb)),
+            ("r_in", Json::Num(f64::from(self.config.r_in))),
+            ("r_out", Json::Num(f64::from(self.config.r_out))),
+            ("seed", Json::Num(self.config.seed as f64)),
+        ]);
+        Ok(model)
+    }
+
+    /// Lower and export `<dir>/<name>.manifest.json` + `<dir>/<name>.imgt`
+    /// — artifacts `imagine serve --model <name>=<dir>` (or the server's
+    /// `{"cmd":"deploy"}`) loads directly. Returns the lowered model.
+    pub fn save(
+        &self,
+        dir: &str,
+        name: &str,
+        calib: &Dataset,
+    ) -> Result<NetworkModel, ImagineError> {
+        let mut model = self.lower(calib)?;
+        model.name = name.to_string();
+        model.save(dir, name).map_err(|e| ImagineError::ModelLoad {
+            model: name.to_string(),
+            message: format!("{e:#}"),
+        })?;
+        Ok(model)
+    }
+
+    /// Wrap the lowered model in a [`Deployment`] spec for
+    /// [`ModelHub::deploy`](super::ModelHub::deploy) — in-memory, no
+    /// artifact round-trip.
+    pub fn deployment(&self, calib: &Dataset) -> Result<Deployment, ImagineError> {
+        Ok(Deployment::new(self.lower(calib)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{BackendKind, ModelHub, NoiseInjection};
+    use crate::nn::layers::{DenseNode, Node};
+    use crate::nn::mlp::Dense;
+    use crate::util::rng::Rng;
+
+    fn task(n: usize, draw_seed: u64) -> Dataset {
+        Dataset::synthetic(n, vec![6, 6], 4, 5, draw_seed, 0.2)
+    }
+
+    fn graph(seed: u64) -> Graph {
+        let mut rng = Rng::new(seed);
+        Graph::new("api_train", vec![36])
+            .with(Node::Dense(DenseNode::new(Dense::new(36, 16, &mut rng))))
+            .with(Node::Relu)
+            .with(Node::Dense(DenseNode::new(Dense::new(16, 4, &mut rng))))
+    }
+
+    #[test]
+    fn fit_lower_deploy_roundtrip() {
+        let train = task(160, 11);
+        let test = task(80, 12);
+        let cfg = TrainConfig {
+            epochs: 4,
+            noise: NoiseInjection::Off,
+            workers: 1,
+            ..TrainConfig::default()
+        };
+        let trained = Trainer::new(graph(3)).config(cfg).fit(&train).unwrap();
+        assert!(trained.accuracy_cim(&test, 0.0).unwrap() > 0.75);
+
+        let model = trained.lower(&train).unwrap();
+        assert_eq!(model.layers.len(), 2);
+        assert!(model.metrics.get("final_loss").is_some());
+
+        // The lowered model serves through the hub and mostly agrees
+        // with the in-process mapping on held-out data.
+        let hub = ModelHub::builder().workers(1).build().unwrap();
+        hub.deploy("t", trained.deployment(&train).unwrap().backend(BackendKind::Ideal))
+            .unwrap();
+        let session = hub.session("t").unwrap();
+        let mut correct = 0usize;
+        for i in 0..test.n {
+            let logits = session.infer_one(test.image(i).to_vec()).unwrap();
+            if crate::util::stats::argmax_f32(&logits) == test.y[i] as usize {
+                correct += 1;
+            }
+        }
+        let served = correct as f64 / test.n as f64;
+        let inproc = trained.accuracy_cim(&test, 0.0).unwrap();
+        assert!(
+            (served - inproc).abs() < 0.15,
+            "served {served} vs in-process {inproc}"
+        );
+    }
+
+    #[test]
+    fn save_exports_servable_artifacts() {
+        let train = task(120, 21);
+        let cfg = TrainConfig {
+            epochs: 2,
+            noise: NoiseInjection::Off,
+            workers: 1,
+            ..TrainConfig::default()
+        };
+        let trained = Trainer::new(graph(9)).config(cfg).fit(&train).unwrap();
+        let dir = std::env::temp_dir().join(format!("imagine_api_train_{}", std::process::id()));
+        let dir = dir.to_str().unwrap().to_string();
+        trained.save(&dir, "toy", &train).unwrap();
+        let loaded = NetworkModel::load(&dir, "toy").unwrap();
+        assert_eq!(loaded.name, "toy");
+        assert_eq!(loaded.layers.len(), 2);
+        assert!(loaded.metrics.get("noise_lsb").is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

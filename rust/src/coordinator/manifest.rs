@@ -515,7 +515,10 @@ mod tests {
         for (a, b) in loaded.layers.iter().zip(&m.layers) {
             assert_eq!(a.name, b.name);
             assert_eq!(a.kind, b.kind);
-            assert_eq!((a.in_features, a.out_features, a.rows), (b.in_features, b.out_features, b.rows));
+            assert_eq!(
+                (a.in_features, a.out_features, a.rows),
+                (b.in_features, b.out_features, b.rows)
+            );
             assert_eq!((a.relu, a.stride, a.pool), (b.relu, b.stride, b.pool));
             assert_eq!(
                 (a.cfg.r_in, a.cfg.r_w, a.cfg.r_out, a.cfg.connected_units),

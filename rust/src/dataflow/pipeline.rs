@@ -34,7 +34,14 @@ pub struct LayerShape {
 }
 
 impl LayerShape {
-    pub fn conv(c_in: usize, c_out: usize, r_in: u32, r_out: u32, out_h: usize, out_w: usize) -> Self {
+    pub fn conv(
+        c_in: usize,
+        c_out: usize,
+        r_in: u32,
+        r_out: u32,
+        out_h: usize,
+        out_w: usize,
+    ) -> Self {
         Self { c_in, c_out, k: 3, r_in, r_out, out_h, out_w, n_cim: 1 }
     }
 

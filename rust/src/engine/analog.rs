@@ -17,8 +17,10 @@ use crate::energy::system::LayerCost;
 use anyhow::{anyhow, Result};
 
 /// Per-die seed stride (odd 64-bit mix constant, so die seeds never
-/// collide for d < 2^63).
-const DIE_SEED_STRIDE: u64 = 0x9E37_79B9_7F4A_7C15;
+/// collide for d < 2^63). Shared with the equivalent-noise probe
+/// ([`super::noise`]) so a probed die `d` is the same fabrication the
+/// pool's worker `d` would serve with.
+pub(crate) const DIE_SEED_STRIDE: u64 = 0x9E37_79B9_7F4A_7C15;
 
 /// A pool of independently-fabricated simulated dies.
 pub struct AnalogPool {

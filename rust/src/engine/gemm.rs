@@ -229,7 +229,8 @@ mod tests {
                 let w: Vec<i32> =
                     (0..rows * n_out).map(|_| rng.int_range(-15, 15) as i32).collect();
                 let got = matmul_i32(&a, &w, n_vec, rows, n_out, workers);
-                assert_eq!(got, naive_i32(&a, &w, n_vec, rows, n_out), "n_vec={n_vec} workers={workers}");
+                let want = naive_i32(&a, &w, n_vec, rows, n_out);
+                assert_eq!(got, want, "n_vec={n_vec} workers={workers}");
             }
         }
     }

@@ -12,6 +12,9 @@
 //!   evaluation, bit-identical to the per-image executor;
 //! * [`analog`] — [`AnalogPool`]: one cloned circuit-behavioral die per
 //!   worker with deterministic per-die seeds;
+//! * [`noise`] — the equivalent-output-noise probe: measure the analog
+//!   backend's temporal + fixed-pattern σ at a supply/corner, which the
+//!   CIM-aware trainer injects back into its forward passes;
 //! * [`queue`] — the multi-tenant work-queue scheduler ([`start`],
 //!   [`EngineHandle`]): concurrent callers submit single images tagged
 //!   with a [`RouteKey`] (deployment id + requested precision), a
@@ -26,10 +29,12 @@
 pub mod analog;
 pub mod gemm;
 pub mod ideal;
+pub mod noise;
 pub mod queue;
 
 pub use analog::AnalogPool;
 pub use ideal::BatchIdeal;
+pub use noise::NoiseStats;
 pub use queue::{
     default_workers, start, BackendFactory, BatchBackend, DeploymentId, EngineConfig,
     EngineHandle, EngineSnapshot, Pending, RouteKey,

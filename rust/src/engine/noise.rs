@@ -1,0 +1,189 @@
+//! Equivalent-output-noise characterization of the analog backend — the
+//! software image of measuring a fabricated die.
+//!
+//! The paper's training story hinges on "including the post-silicon
+//! equivalent noise within a CIM-aware CNN training framework": you
+//! measure what the silicon actually does to a conversion (thermal kT/C,
+//! SA decision noise, residual offsets, mismatch) as one equivalent σ at
+//! the ADC output, then inject that σ during training.
+//! [`probe_equivalent_noise`] performs the measurement against the
+//! circuit-behavioral simulator at the configured supply/corner: it
+//! fabricates a few independent dies (the same deterministic per-die
+//! seeding [`AnalogPool`](super::AnalogPool) uses), replays fixed inputs
+//! through each, and splits the observed code spread into a *temporal*
+//! component (repeat-to-repeat on one die) and a *fixed-pattern*
+//! component (die-to-die after averaging out the temporal part).
+//!
+//! `nn::train` consumes [`NoiseStats::total_lsb`] when the trainer is
+//! configured with `NoiseInjection::Probe`, closing the
+//! characterize → train → deploy loop inside one binary.
+
+use crate::config::params::MacroParams;
+use crate::coordinator::executor::{Backend, Executor};
+use crate::coordinator::manifest::NetworkModel;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Context, Result};
+
+/// The probe's measurement: equivalent output noise in ADC LSB.
+#[derive(Clone, Copy, Debug)]
+pub struct NoiseStats {
+    /// Repeat-to-repeat spread on one die (temporal noise).
+    pub sigma_temporal_lsb: f64,
+    /// Die-to-die spread of the per-die mean (mismatch / fixed-pattern
+    /// residue after calibration).
+    pub sigma_mismatch_lsb: f64,
+    pub dies: usize,
+    pub repeats: usize,
+}
+
+impl NoiseStats {
+    /// The combined equivalent σ a single conversion sees (the two
+    /// components are independent).
+    pub fn total_lsb(&self) -> f64 {
+        (self.sigma_temporal_lsb.powi(2) + self.sigma_mismatch_lsb.powi(2)).sqrt()
+    }
+}
+
+/// Probe the analog backend's equivalent output noise at `(r_in, r_out)`
+/// under `p`'s supply/corner with the default die/repeat budget.
+pub fn probe_equivalent_noise(
+    p: &MacroParams,
+    r_in: u32,
+    r_out: u32,
+    seed: u64,
+) -> Result<NoiseStats> {
+    probe_equivalent_noise_with(p, r_in, r_out, seed, 2, 8)
+}
+
+/// [`probe_equivalent_noise`] with an explicit measurement budget.
+/// Deterministic for a given `(p, r_in, r_out, seed, dies, repeats)`.
+pub fn probe_equivalent_noise_with(
+    p: &MacroParams,
+    r_in: u32,
+    r_out: u32,
+    seed: u64,
+    dies: usize,
+    repeats: usize,
+) -> Result<NoiseStats> {
+    ensure!(dies >= 1, "need at least one die");
+    ensure!(repeats >= 2, "need at least two repeats to estimate a spread");
+    ensure!(
+        (1..=8).contains(&r_in) && (1..=8).contains(&r_out),
+        "precision r_in={r_in} r_out={r_out} outside the macro's 1..=8 range"
+    );
+
+    // A single dense probe layer (4 DP units, no ReLU so negative codes
+    // are observable); γ=16 spreads random-weight DP voltages over many
+    // codes instead of collapsing onto mid-code.
+    const N_IN: usize = 144;
+    const N_OUT: usize = 16;
+    const N_IMAGES: usize = 4;
+    let model = NetworkModel::synthetic_mlp(&[N_IN, N_OUT], r_in, 4, r_out, seed ^ 0xA5A5, p);
+    let out_gain = f64::from(model.layers[0].out_gain);
+    // The executor emits `(code − half)·out_gain`, so recovered values
+    // live in `[−half, half − 1]`.
+    let half = (1u64 << (r_out - 1)) as f64;
+
+    let mut img_rng = Rng::new(seed ^ 0x0B5E_0B5E_0B5E_0B5E);
+    let images: Vec<Vec<f32>> = (0..N_IMAGES)
+        .map(|_| (0..N_IN).map(|_| img_rng.uniform() as f32).collect())
+        .collect();
+
+    // codes[die][image][rep][o]
+    let mut codes = vec![vec![vec![[0f64; N_OUT]; repeats]; N_IMAGES]; dies];
+    for (d, die_codes) in codes.iter_mut().enumerate() {
+        let die_seed = seed.wrapping_add(super::analog::DIE_SEED_STRIDE.wrapping_mul(d as u64));
+        let mut die = Executor::new(
+            model.clone(),
+            p.clone(),
+            Backend::Analog { seed: die_seed, noise: true, calibrate: true },
+        )
+        .context("fabricating probe die")?;
+        for (img, reps) in images.iter().zip(die_codes.iter_mut()) {
+            for rep in reps.iter_mut() {
+                let out = die.forward(img)?;
+                for (o, &v) in out.iter().enumerate() {
+                    // Outputs are affine in the code; the slope is the
+                    // post-ADC gain, so this recovers spreads in LSB.
+                    rep[o] = f64::from(v) / out_gain;
+                }
+            }
+        }
+    }
+
+    // Temporal σ: per (die, image, output) spread over repeats, skipping
+    // rail-saturated outputs whose spread is clipped away.
+    let mut t_sq = 0.0;
+    let mut t_n = 0usize;
+    let mut per_die_mean = vec![vec![[0f64; N_OUT]; N_IMAGES]; dies];
+    for d in 0..dies {
+        for i in 0..N_IMAGES {
+            for o in 0..N_OUT {
+                let vals: Vec<f64> = (0..repeats).map(|r| codes[d][i][r][o]).collect();
+                let mean = vals.iter().sum::<f64>() / repeats as f64;
+                per_die_mean[d][i][o] = mean;
+                let (lo, hi) = vals.iter().fold((f64::MAX, f64::MIN), |(lo, hi), &v| {
+                    (lo.min(v), hi.max(v))
+                });
+                if lo <= -half + 1.0 || hi >= half - 2.0 {
+                    continue; // railed at least once: spread is censored
+                }
+                let sq: f64 = vals.iter().map(|v| (v - mean) * (v - mean)).sum();
+                t_sq += sq / (repeats - 1) as f64;
+                t_n += 1;
+            }
+        }
+    }
+    ensure!(t_n > 0, "every probe output railed; cannot estimate temporal noise");
+    let sigma_temporal = (t_sq / t_n as f64).sqrt();
+
+    // Fixed-pattern σ: spread of the per-die means across dies.
+    let mut m_sq = 0.0;
+    let mut m_n = 0usize;
+    if dies >= 2 {
+        for i in 0..N_IMAGES {
+            for o in 0..N_OUT {
+                let means: Vec<f64> = (0..dies).map(|d| per_die_mean[d][i][o]).collect();
+                let mean = means.iter().sum::<f64>() / dies as f64;
+                let var =
+                    means.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / (dies - 1) as f64;
+                m_sq += var;
+                m_n += 1;
+            }
+        }
+    }
+    let sigma_mismatch = if m_n > 0 { (m_sq / m_n as f64).sqrt() } else { 0.0 };
+
+    Ok(NoiseStats {
+        sigma_temporal_lsb: sigma_temporal,
+        sigma_mismatch_lsb: sigma_mismatch,
+        dies,
+        repeats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_is_deterministic_and_positive() {
+        let p = MacroParams::paper();
+        // r_out = 8: the finest LSB, so the temporal spread is never
+        // quantized away entirely.
+        let a = probe_equivalent_noise_with(&p, 8, 8, 7, 1, 4).unwrap();
+        let b = probe_equivalent_noise_with(&p, 8, 8, 7, 1, 4).unwrap();
+        assert_eq!(a.sigma_temporal_lsb.to_bits(), b.sigma_temporal_lsb.to_bits());
+        assert!(a.sigma_temporal_lsb > 0.0, "analog backend must show temporal noise");
+        assert!(a.total_lsb() >= a.sigma_temporal_lsb);
+        assert_eq!(a.sigma_mismatch_lsb, 0.0, "one die has no die-to-die spread");
+    }
+
+    #[test]
+    fn probe_rejects_bad_budgets() {
+        let p = MacroParams::paper();
+        assert!(probe_equivalent_noise_with(&p, 8, 6, 7, 0, 4).is_err());
+        assert!(probe_equivalent_noise_with(&p, 8, 6, 7, 1, 1).is_err());
+        assert!(probe_equivalent_noise_with(&p, 9, 6, 7, 1, 4).is_err());
+    }
+}

@@ -940,7 +940,11 @@ mod tests {
         let handle = start(cfg, None).unwrap();
         for dep in [1u64, 2] {
             handle
-                .deploy(dep, None, Box::new(|| Ok(Box::new(Counting { images: 0 }) as Box<dyn BatchBackend>)))
+                .deploy(
+                    dep,
+                    None,
+                    Box::new(|| Ok(Box::new(Counting { images: 0 }) as Box<dyn BatchBackend>)),
+                )
                 .unwrap();
         }
         let snap = handle.snapshot(1).unwrap().unwrap();

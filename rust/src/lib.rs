@@ -22,7 +22,8 @@
 //! * [`coordinator`] — layer scheduler, network executor, CLI server;
 //! * [`runtime`] — PJRT loader executing the AOT-compiled JAX/Pallas
 //!   artifacts (HLO text) on the request path, python-free;
-//! * [`nn`] — a small rust-native NN stack (training the Fig. 3b MLP);
+//! * [`nn`] — the rust-native NN stack: the layer-graph IR and the
+//!   CIM-aware trainer (STE quantizers + equivalent-noise injection);
 //! * [`config`], [`util`] — parameters and support code.
 //!
 //! See DESIGN.md for the experiment index and EXPERIMENTS.md for
@@ -39,4 +40,7 @@ pub mod nn;
 pub mod runtime;
 pub mod util;
 
-pub use api::{BackendKind, Deployment, ImagineError, ModelHub, Session, SessionBuilder};
+pub use api::{
+    BackendKind, Deployment, ImagineError, ModelHub, Session, SessionBuilder, TrainConfig,
+    Trainer,
+};

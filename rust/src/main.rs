@@ -4,6 +4,15 @@
 //!
 //!   imagine info                              macro parameters & Table I row
 //!   imagine plan  --model NAME [--dir D]      layer schedule + cost table
+//!   imagine train [--arch mlp|cnn] [--data synthetic|PATH.imgt]
+//!                 [--epochs E] [--lr LR] [--noise probe|off|SIGMA]
+//!                 [--precision R[,R_OUT]] [--supply ...] [--corner ...]
+//!                 [--seed S] [--out DIR]
+//!                 CIM-aware training: STE gradients through the macro's
+//!                 quantizers with the equivalent noise injected per
+//!                 forward (`probe` measures it at the configured
+//!                 supply/corner); --out exports artifacts that deploy
+//!                 straight into `imagine serve --model NAME=DIR`
 //!   imagine run   --model NAME [--n N] [--backend ideal|analog|pjrt|auto]
 //!                 [--precision R[,R_OUT]] [--supply nominal|low-power|L/H]
 //!                 [--corner tt|ff|ss|fs|sf] [--batch B] [--workers W]
@@ -30,7 +39,8 @@
 use anyhow::{bail, Context, Result};
 use imagine::analog::macro_model::OpConfig;
 use imagine::api::{
-    parse_corner, parse_precision, parse_supply, BackendKind, Deployment, ModelHub, Session,
+    parse_corner, parse_precision, parse_supply, BackendKind, Deployment, ModelHub,
+    NoiseInjection, Session, TrainConfig, Trainer,
 };
 use imagine::config::params::{MacroParams, Supply};
 use imagine::coordinator::manifest::NetworkModel;
@@ -323,6 +333,185 @@ fn cmd_plan(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
+fn flag_f32(flags: &Flags, key: &str, default: f32) -> Result<f32> {
+    match flags.get(key) {
+        None => Ok(default),
+        Some(s) => s
+            .parse()
+            .with_context(|| format!("--{key} expects a float, got '{s}'")),
+    }
+}
+
+/// Parse `--noise off|probe|SIGMA` (σ in ADC LSB).
+fn parse_noise(s: &str) -> Result<NoiseInjection> {
+    match s {
+        "off" | "0" => Ok(NoiseInjection::Off),
+        "probe" => Ok(NoiseInjection::Probe),
+        other => match other.parse::<f64>() {
+            Ok(v) if v.is_finite() && v >= 0.0 => Ok(NoiseInjection::Lsb(v)),
+            _ => bail!("--noise expects off|probe|SIGMA (σ in ADC LSB, >= 0), got '{other}'"),
+        },
+    }
+}
+
+/// Build the training graph for `--arch`.
+fn train_arch(
+    arch: &str,
+    input_shape: &[usize],
+    classes: usize,
+    seed: u64,
+) -> Result<imagine::nn::graph::Graph> {
+    use imagine::nn::graph::Graph;
+    use imagine::nn::layers::{Conv3x3, DenseNode, Node, PoolKind};
+    use imagine::nn::mlp::Dense;
+    let mut rng = imagine::util::rng::Rng::new(seed);
+    let input_len: usize = input_shape.iter().product();
+    match arch {
+        "mlp" => {
+            let hidden = (input_len / 2).clamp(16, 96);
+            Ok(Graph::new("cim_mlp", vec![input_len])
+                .with(Node::Dense(DenseNode::new(Dense::new(input_len, hidden, &mut rng))))
+                .with(Node::Relu)
+                .with(Node::Dense(DenseNode::new(Dense::new(hidden, classes, &mut rng)))))
+        }
+        "cnn" => {
+            let (c, h, w) = match input_shape {
+                [h, w] => (1usize, *h, *w),
+                [c, h, w] => (*c, *h, *w),
+                other => bail!("--arch cnn needs an image-shaped dataset, got {other:?}"),
+            };
+            if h < 4 || w < 4 {
+                bail!("--arch cnn needs spatial dims >= 4, got {h}x{w}");
+            }
+            let c_mid = 8usize;
+            let flat = c_mid * (h / 2) * (w / 2);
+            Ok(Graph::new("cim_cnn", vec![c, h, w])
+                .with(Node::Conv3x3(Conv3x3::new(c, c_mid, &mut rng)))
+                .with(Node::Relu)
+                .with(Node::Pool2x2(PoolKind::Max))
+                .with(Node::Flatten)
+                .with(Node::Dense(DenseNode::new(Dense::new(flat, classes, &mut rng)))))
+        }
+        other => bail!("unknown --arch '{other}' (valid: mlp|cnn)"),
+    }
+}
+
+fn cmd_train(flags: &Flags) -> Result<()> {
+    let seed = flag_u64(flags, "seed", 7)?;
+    let classes = flag_usize(flags, "classes", 10)?.max(2);
+    let arch = flags.get("arch").unwrap_or("mlp");
+
+    // Dataset: a file exported by the compile path, or the deterministic
+    // in-process synthetic task (templates fixed by --seed, so train and
+    // held-out draws share one task).
+    let data_spec = flags.get("data").unwrap_or("synthetic");
+    let (train_set, test_set) = if data_spec == "synthetic" {
+        let n = flag_usize(flags, "n", 480)?.max(classes * 4);
+        let shape = vec![8usize, 8usize];
+        let jitter = 0.22;
+        (
+            Dataset::synthetic(n, shape.clone(), classes, seed, seed ^ 0x11, jitter),
+            Dataset::synthetic(n / 2, shape, classes, seed, seed ^ 0x22, jitter),
+        )
+    } else {
+        let full = Dataset::load_imgt(data_spec)?;
+        let n_test = (full.n / 4).max(1);
+        let n_train = full.n - n_test;
+        let len = full.image_len();
+        let train = Dataset {
+            x: full.x[..n_train * len].to_vec(),
+            y: full.y[..n_train].to_vec(),
+            n: n_train,
+            shape: full.shape.clone(),
+        };
+        let test = Dataset {
+            x: full.x[n_train * len..].to_vec(),
+            y: full.y[n_train..].to_vec(),
+            n: n_test,
+            shape: full.shape,
+        };
+        (train, test)
+    };
+
+    let mut config = TrainConfig {
+        epochs: flag_usize(flags, "epochs", 6)?,
+        batch: flag_usize(flags, "batch", 32)?,
+        lr: flag_f32(flags, "lr", 0.04)?,
+        momentum: flag_f32(flags, "momentum", 0.9)?,
+        seed,
+        noise: parse_noise(flags.get("noise").unwrap_or("probe"))?,
+        workers: flag_usize(flags, "workers", 0)?,
+        ..TrainConfig::default()
+    };
+    if let Some(s) = flags.get("precision") {
+        let (r_in, r_out) = parse_precision(s)?;
+        config.r_in = r_in;
+        config.r_out = r_out;
+    }
+
+    // Operating point of the simulated silicon: what `--noise probe`
+    // characterizes and what the lowering targets.
+    let mut params = MacroParams::paper();
+    if let Some(s) = flags.get("supply") {
+        params.supply = parse_supply(s)?;
+    }
+    if let Some(s) = flags.get("corner") {
+        params.corner = parse_corner(s)?;
+    }
+
+    let graph = train_arch(arch, &train_set.shape, classes, seed)?;
+    println!(
+        "training {arch} on {} images ({} classes, shape {:?}) | r_in={} r_out={} | \
+         noise {:?} | supply {:.2}/{:.2} V corner {} | epochs {} batch {} lr {} \
+         momentum {} seed {}",
+        train_set.n,
+        classes,
+        train_set.shape,
+        config.r_in,
+        config.r_out,
+        config.noise,
+        params.supply.vddl,
+        params.supply.vddh,
+        params.corner.name(),
+        config.epochs,
+        config.batch,
+        config.lr,
+        config.momentum,
+        config.seed
+    );
+
+    let trained = Trainer::new(graph).config(config).params(params).fit(&train_set)?;
+    for (ep, loss) in trained.report.epoch_losses.iter().enumerate() {
+        println!("  epoch {:>2}: loss {loss:.4}", ep + 1);
+    }
+    println!(
+        "trained {} steps in {:.2}s ({:.0} steps/s, {:.0} images/s) | injected σ = {:.3} LSB",
+        trained.report.steps,
+        trained.report.wall_seconds,
+        trained.report.steps_per_s(),
+        trained.report.images_per_s(),
+        trained.report.noise_lsb
+    );
+
+    let acc_float = trained.accuracy_float(&test_set)?;
+    let acc_cim = trained.accuracy_cim(&test_set, 0.0)?;
+    let acc_noisy = trained.accuracy_cim(&test_set, trained.report.noise_lsb)?;
+    println!(
+        "held-out accuracy: float {:.1}% | CIM noiseless {:.1}% | CIM @ trained σ {:.1}%",
+        100.0 * acc_float,
+        100.0 * acc_cim,
+        100.0 * acc_noisy
+    );
+
+    if let Some(out) = flags.get("out") {
+        let name = flags.get("name").unwrap_or("cim_net");
+        trained.save(out, name, &train_set)?;
+        println!("exported {out}/{name}.manifest.json + {out}/{name}.imgt");
+        println!("deploy with: imagine serve --model {name}={out}");
+    }
+    Ok(())
+}
+
 /// One `--model` value: `NAME` (artifacts from `--dir`) or `NAME=DIR`.
 fn split_model_spec<'a>(spec: &'a str, default_dir: &'a str) -> (&'a str, &'a str) {
     match spec.split_once('=') {
@@ -360,10 +549,17 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
 }
 
 fn usage() {
-    println!("usage: imagine <info|run|plan|serve> [--model NAME] [--dir artifacts]");
+    println!("usage: imagine <info|run|plan|train|serve> [--model NAME] [--dir artifacts]");
     println!("  run:   [--n 200] [--backend ideal|analog|pjrt|auto] [--precision R[,R_OUT]]");
     println!("         [--supply nominal|low-power|L/H] [--corner tt|ff|ss|fs|sf]");
     println!("         [--batch 64] [--workers N] [--seed 42]");
+    println!("  train: [--arch mlp|cnn] [--data synthetic|PATH.imgt] [--n 480] [--classes 10]");
+    println!("         [--epochs 6] [--batch 32] [--lr 0.04] [--momentum 0.9]");
+    println!("         [--noise probe|off|SIGMA] [--precision R[,R_OUT]]");
+    println!("         [--supply nominal|low-power|L/H] [--corner tt|ff|ss|fs|sf]");
+    println!("         [--seed 7] [--workers N] [--out DIR] [--name cim_net]");
+    println!("         CIM-aware training (STE quantizers + equivalent-noise injection);");
+    println!("         --out exports artifacts `imagine serve --model NAME=DIR` deploys");
     println!("  serve: --model NAME[=DIR] (repeatable: one deployment per flag)");
     println!("         [--addr 127.0.0.1:7878] [--backend auto|ideal|analog|pjrt]");
     println!("         [--precision R[,R_OUT]] [--supply ...] [--corner ...]");
@@ -392,6 +588,14 @@ fn main() -> Result<()> {
             ],
         )?),
         "plan" => cmd_plan(&parse_flags("plan", rest, &["model", "dir"])?),
+        "train" => cmd_train(&parse_flags(
+            "train",
+            rest,
+            &[
+                "arch", "data", "n", "classes", "epochs", "batch", "lr", "momentum", "noise",
+                "precision", "supply", "corner", "seed", "workers", "out", "name",
+            ],
+        )?),
         "serve" => cmd_serve(&parse_flags(
             "serve",
             rest,

@@ -238,6 +238,18 @@ impl QNode {
             CimKind::Conv { c_out, .. } => c_out,
         }
     }
+
+    /// The contract constants every per-output evaluation needs:
+    /// `(m, half, top, lsb, dv_unit)` — shared by the inference forwards
+    /// here and the trainer's quantization-aware forward.
+    pub(crate) fn contract_consts(&self, p: &MacroParams) -> (f32, f64, f64, f64, f64) {
+        let m = ((1u32 << self.cfg.r_in) - 1) as f32;
+        let half = (1u64 << (self.cfg.r_out - 1)) as f64;
+        let top = (1u64 << self.cfg.r_out) as f64 - 1.0;
+        let lsb = p.adc_lsb(self.cfg.r_out, self.gamma);
+        let dv_unit = self.alpha * p.supply.vddl / (1u64 << (self.cfg.r_in + R_W)) as f64;
+        (m, half, top, lsb, dv_unit)
+    }
 }
 
 /// One executable step of a mapped graph.
@@ -434,8 +446,10 @@ impl MappedGraph {
 }
 
 /// Quantize a float weight matrix `[n_out × k]` to antipodal `R_W`-bit
-/// levels; returns (w_q, w_scale).
-fn quantize_weights(w: &[f32], n_out: usize, k: usize) -> (Vec<f32>, f32) {
+/// levels; returns (w_q, w_scale). Shared with the CIM-aware trainer
+/// (`nn::train`), which re-quantizes after every weight update — the
+/// straight-through estimator's forward half.
+pub(crate) fn quantize_weights(w: &[f32], n_out: usize, k: usize) -> (Vec<f32>, f32) {
     let mx = ((1u32 << R_W) - 1) as f32;
     let w_abs_max = w.iter().fold(0f32, |a, &v| a.max(v.abs())).max(1e-9);
     let w_scale = w_abs_max / mx;
@@ -465,6 +479,26 @@ fn quantize_gamma(ideal: f64, gamma_bits: u32) -> f64 {
 /// quantized to powers of two in {1 .. 2^gamma_bits}.
 fn gamma_from_sigma(dv_sigma: f64, cfg: &EvalCfg, p: &MacroParams) -> f64 {
     quantize_gamma(p.alpha_adc() * p.supply.vddh / (3.5 * dv_sigma), cfg.gamma_bits)
+}
+
+/// Permute natural-order conv weights `[c_out × 9·c_in]` into the
+/// macro's physical row order; padding rows (units not filled by real
+/// channels) carry zero weight so the mid-rail padding input contributes
+/// nothing. Returns `(w_rows, rows)`. Shared by the mapping and the
+/// trainer's per-step weight refresh.
+pub(crate) fn permute_conv_rows(w_nat: &[f32], c_in: usize, c_out: usize) -> (Vec<f32>, usize) {
+    let order = im2col::row_order(c_in);
+    let rows = order.len();
+    let mut w_q = vec![0f32; c_out * rows];
+    for oc in 0..c_out {
+        let nat = &w_nat[oc * 9 * c_in..(oc + 1) * 9 * c_in];
+        for (r, o) in order.iter().enumerate() {
+            if let Some(f) = o {
+                w_q[oc * rows + r] = nat[*f];
+            }
+        }
+    }
+    (w_q, rows)
 }
 
 fn map_dense(
@@ -538,20 +572,8 @@ fn map_conv(
     let m = ((1u32 << cfg.r_in) - 1) as f32;
     let (w_nat, w_scale) = quantize_weights(&c.w, c.c_out, 9 * c.c_in);
 
-    // Permute each output's kernel into the macro's physical row order;
-    // padding rows (units not filled by real channels) carry zero weight
-    // so the mid-rail padding input contributes nothing.
-    let order = im2col::row_order(c.c_in);
-    let rows = order.len();
-    let mut w_q = vec![0f32; c.c_out * rows];
-    for oc in 0..c.c_out {
-        let nat = &w_nat[oc * 9 * c.c_in..(oc + 1) * 9 * c.c_in];
-        for (r, o) in order.iter().enumerate() {
-            if let Some(f) = o {
-                w_q[oc * rows + r] = nat[*f];
-            }
-        }
-    }
+    // Permute each output's kernel into the macro's physical row order.
+    let (w_q, rows) = permute_conv_rows(&w_nat, c.c_in, c.c_out);
     let sum_w: Vec<f32> = (0..c.c_out)
         .map(|oc| w_q[oc * rows..(oc + 1) * rows].iter().sum())
         .collect();
@@ -616,7 +638,36 @@ fn map_conv(
 /// Macro + ADC + digital reconstruction for one signed dot product —
 /// the crate's single quantize/reconstruct/noise expression (Eq. 7
 /// forward, equivalent output noise, offset-binary inversion, ABN
-/// gain/offset and bias).
+/// gain/offset and bias). The boolean reports whether the ADC code
+/// stayed inside its `[0, top]` rails — the trainer's straight-through
+/// pass-through mask (gradients stop where the conversion clipped).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub(crate) fn macro_contract_masked(
+    q: &QNode,
+    dot: f64,
+    o: usize,
+    dv_unit: f64,
+    lsb: f64,
+    half: f64,
+    top: f64,
+    m: f32,
+    rng: &mut Rng,
+) -> (f32, bool) {
+    let dv = dv_unit * dot;
+    let mut code = half + dv / lsb;
+    if q.cfg.noise_lsb > 0.0 {
+        code += rng.normal(0.0, q.cfg.noise_lsb * (1.0 + q.gamma / 16.0));
+    }
+    let code = code.floor();
+    let in_range = (0.0..=top).contains(&code);
+    let code = code.clamp(0.0, top);
+    let dot_rec = (code - half) * lsb / dv_unit;
+    let xw = (dot_rec as f32 + m * q.sum_w[o]) / 2.0;
+    (xw * q.a_scale * q.w_scale + q.bias[o], in_range)
+}
+
+/// [`macro_contract_masked`] without the rail mask (the inference path).
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn macro_contract(
@@ -630,15 +681,7 @@ fn macro_contract(
     m: f32,
     rng: &mut Rng,
 ) -> f32 {
-    let dv = dv_unit * dot;
-    let mut code = half + dv / lsb;
-    if q.cfg.noise_lsb > 0.0 {
-        code += rng.normal(0.0, q.cfg.noise_lsb * (1.0 + q.gamma / 16.0));
-    }
-    let code = code.floor().clamp(0.0, top);
-    let dot_rec = (code - half) * lsb / dv_unit;
-    let xw = (dot_rec as f32 + m * q.sum_w[o]) / 2.0;
-    xw * q.a_scale * q.w_scale + q.bias[o]
+    macro_contract_masked(q, dot, o, dv_unit, lsb, half, top, m, rng).0
 }
 
 /// Batched dense node: quantize + recenter the whole batch, one
@@ -655,11 +698,7 @@ fn forward_dense(
         CimKind::Dense { n_in, n_out } => (n_in, n_out),
         _ => unreachable!(),
     };
-    let m = ((1u32 << q.cfg.r_in) - 1) as f32;
-    let half = (1u64 << (q.cfg.r_out - 1)) as f64;
-    let top = (1u64 << q.cfg.r_out) as f64 - 1.0;
-    let lsb = p.adc_lsb(q.cfg.r_out, q.gamma);
-    let dv_unit = q.alpha * p.supply.vddl / (1u64 << (q.cfg.r_in + R_W)) as f64;
+    let (m, half, top, lsb, dv_unit) = q.contract_consts(p);
 
     let sx: Vec<f64> = cur
         .iter()
@@ -700,11 +739,7 @@ fn forward_conv(
         return Vec::new();
     }
     let c_out = q.n_out();
-    let m = ((1u32 << q.cfg.r_in) - 1) as f32;
-    let half = (1u64 << (q.cfg.r_out - 1)) as f64;
-    let top = (1u64 << q.cfg.r_out) as f64 - 1.0;
-    let lsb = p.adc_lsb(q.cfg.r_out, q.gamma);
-    let dv_unit = q.alpha * p.supply.vddl / (1u64 << (q.cfg.r_in + R_W)) as f64;
+    let (m, half, top, lsb, dv_unit) = q.contract_consts(p);
 
     // One shared im2col row assembly with the engine backend (the signed
     // factors are exact small integers, so the i32 → f64 cast is lossless

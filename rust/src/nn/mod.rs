@@ -12,10 +12,15 @@
 //!   for the `Session` backends;
 //! * [`cim_eval`] — the Fig. 3(b) sweep, now the Dense-only graph
 //!   special case;
-//! * [`dataset`] — IMGT dataset loading with CHW validation.
+//! * [`train`] — CIM-aware training: STE gradients through the macro's
+//!   quantizers with the post-silicon equivalent noise injected into
+//!   every forward (the paper's distribution-aware training loop);
+//! * [`dataset`] — IMGT dataset loading with CHW validation and the
+//!   deterministic synthetic task generator the trainer smoke-tests on.
 
 pub mod cim_eval;
 pub mod dataset;
 pub mod graph;
 pub mod layers;
 pub mod mlp;
+pub mod train;

@@ -1,0 +1,619 @@
+//! CIM-aware training over the layer-graph IR — the paper's missing
+//! pillar: "including the post-silicon equivalent noise within a
+//! CIM-aware CNN training framework".
+//!
+//! [`train_graph`] runs minibatch SGD with momentum and softmax
+//! cross-entropy over a [`Graph`], where every macro-mapped node's
+//! forward is the *inference* contract itself (the same
+//! quantize/reconstruct/noise expression the executor evaluates — see
+//! the `qat` submodule) and the backward is its straight-through
+//! estimator. Each
+//! forward injects the macro's equivalent output noise, so the network
+//! learns weights whose decision margins survive the analog conversion —
+//! distribution-aware robustness, not just quantization awareness.
+//!
+//! Three noise sources are selectable through [`NoiseInjection`]:
+//! nothing (pure QAT), a fixed σ in ADC LSB, or [`NoiseInjection::Probe`]
+//! — σ measured from the circuit-behavioral analog backend at the
+//! configured supply/corner via
+//! [`engine::noise::probe_equivalent_noise`], the software image of
+//! characterizing a fabricated die and feeding the measurement back into
+//! training.
+//!
+//! The mapping (activation ranges, ABN gains, adaptive swings) is
+//! recalibrated from the evolving float weights every
+//! [`TrainConfig::recalibrate_every`] epochs — the training-time
+//! counterpart of the paper's distribution-aware data reshaping — and a
+//! trained graph lowers through the existing [`Graph::lower`] path
+//! straight into the serving stack.
+
+pub(crate) mod qat;
+
+use crate::config::params::MacroParams;
+use crate::engine;
+use crate::nn::cim_eval::EvalCfg;
+use crate::nn::dataset::Dataset;
+use crate::nn::graph::{Graph, MappedGraph};
+use crate::nn::layers::{chw, Node, PoolKind};
+use crate::util::rng::Rng;
+use anyhow::{ensure, Context, Result};
+use qat::TrainNode;
+
+/// Where the equivalent output noise injected during training comes
+/// from.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum NoiseInjection {
+    /// No injection: plain quantization-aware training.
+    Off,
+    /// Fixed equivalent output noise, in ADC LSB (the γ-dependent
+    /// scaling of the macro contract applies on top, exactly as at
+    /// inference).
+    Lsb(f64),
+    /// Measure σ from the circuit-behavioral analog backend at the
+    /// configured supply/corner ([`engine::noise::probe_equivalent_noise`])
+    /// and train against it — the paper's post-silicon loop.
+    Probe,
+}
+
+/// Hyper-parameters and CIM operating point of one training run.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub batch: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    /// Seeds minibatch shuffling and the noise draws; two runs with the
+    /// same config and seed are bit-identical.
+    pub seed: u64,
+    pub noise: NoiseInjection,
+    /// Input activation precision the network trains (and deploys) at.
+    pub r_in: u32,
+    /// ADC output precision.
+    pub r_out: u32,
+    pub gamma_bits: u32,
+    pub adaptive_swing: bool,
+    /// Calibration subset size for the per-epoch remapping.
+    pub calib_n: usize,
+    /// Remap (activation ranges, γ, α) every this many epochs (0 ⇒ only
+    /// once, before the first epoch).
+    pub recalibrate_every: usize,
+    /// Worker threads for the batched matmuls (does not affect results —
+    /// the kernels are bit-identical across splits).
+    pub workers: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            epochs: 6,
+            batch: 32,
+            lr: 0.04,
+            momentum: 0.9,
+            seed: 7,
+            noise: NoiseInjection::Lsb(0.5),
+            r_in: 8,
+            r_out: 6,
+            gamma_bits: 5,
+            adaptive_swing: true,
+            calib_n: 96,
+            recalibrate_every: 1,
+            workers: 0, // 0 ⇒ engine::default_workers()
+        }
+    }
+}
+
+impl TrainConfig {
+    /// The graph-level evaluation config this run trains against, with
+    /// the resolved injection σ.
+    pub fn eval_cfg(&self, noise_lsb: f64) -> EvalCfg {
+        EvalCfg {
+            r_out: self.r_out,
+            r_in: self.r_in,
+            gamma_bits: self.gamma_bits,
+            adaptive_swing: self.adaptive_swing,
+            noise_lsb,
+            seed: self.seed,
+        }
+    }
+
+    /// Resolve [`TrainConfig::noise`] to a σ in ADC LSB (probing the
+    /// analog backend when asked to).
+    pub fn resolve_noise_lsb(&self, p: &MacroParams) -> Result<f64> {
+        match self.noise {
+            NoiseInjection::Off => Ok(0.0),
+            NoiseInjection::Lsb(v) => {
+                ensure!(v.is_finite() && v >= 0.0, "noise σ must be finite and >= 0, got {v}");
+                Ok(v)
+            }
+            NoiseInjection::Probe => {
+                let stats =
+                    engine::noise::probe_equivalent_noise(p, self.r_in, self.r_out, self.seed)?;
+                Ok(stats.total_lsb())
+            }
+        }
+    }
+
+    fn resolved_workers(&self) -> usize {
+        if self.workers == 0 {
+            engine::default_workers()
+        } else {
+            self.workers
+        }
+    }
+}
+
+/// What one training run did.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    /// Mean minibatch loss per epoch (measured with the configured noise
+    /// injected, so it fluctuates with σ > 0).
+    pub epoch_losses: Vec<f64>,
+    pub steps: u64,
+    pub images: u64,
+    pub wall_seconds: f64,
+    /// The σ actually injected (resolved from [`NoiseInjection`]).
+    pub noise_lsb: f64,
+}
+
+impl TrainReport {
+    pub fn final_loss(&self) -> f64 {
+        self.epoch_losses.last().copied().unwrap_or(f64::NAN)
+    }
+
+    pub fn steps_per_s(&self) -> f64 {
+        self.steps as f64 / self.wall_seconds.max(1e-12)
+    }
+
+    pub fn images_per_s(&self) -> f64 {
+        self.images as f64 / self.wall_seconds.max(1e-12)
+    }
+}
+
+/// Per-parameter-tensor SGD momentum state.
+struct Momentum {
+    vw: Vec<f32>,
+    vb: Vec<f32>,
+}
+
+impl Momentum {
+    fn step(&mut self, w: &mut [f32], b: &mut [f32], g: &qat::NodeGrads, lr: f32, mu: f32) {
+        for (i, wv) in w.iter_mut().enumerate() {
+            self.vw[i] = mu * self.vw[i] - lr * g.gw[i];
+            *wv += self.vw[i];
+        }
+        for (i, bv) in b.iter_mut().enumerate() {
+            self.vb[i] = mu * self.vb[i] - lr * g.gb[i];
+            *bv += self.vb[i];
+        }
+    }
+}
+
+/// Train `graph` in place on `data`. Deterministic: the same graph,
+/// data, params and config produce bit-identical weights and losses.
+pub fn train_graph(
+    graph: &mut Graph,
+    data: &Dataset,
+    p: &MacroParams,
+    cfg: &TrainConfig,
+) -> Result<TrainReport> {
+    ensure!(cfg.epochs > 0, "epochs must be >= 1");
+    ensure!(cfg.batch > 0, "batch must be >= 1");
+    ensure!(cfg.lr > 0.0 && cfg.lr.is_finite(), "lr must be a positive float");
+    ensure!((0.0..1.0).contains(&cfg.momentum), "momentum must be in [0, 1)");
+    ensure!(
+        (1..=8).contains(&cfg.r_in) && (1..=8).contains(&cfg.r_out),
+        "precision r_in={} r_out={} outside the macro's 1..=8 range",
+        cfg.r_in,
+        cfg.r_out
+    );
+    ensure!(data.n > 0, "empty training set");
+    ensure!(
+        data.image_len() == graph.input_len(),
+        "training image length {} != graph input {}",
+        data.image_len(),
+        graph.input_len()
+    );
+    let out_shape = graph.output_shape()?;
+    ensure!(
+        out_shape.len() == 1 && out_shape[0] >= 2,
+        "training needs a flat class-logit output, got shape {out_shape:?}"
+    );
+    let n_classes = out_shape[0];
+    for (i, &y) in data.y.iter().enumerate() {
+        ensure!(
+            (0..n_classes as i32).contains(&y),
+            "label {y} of image {i} outside 0..{n_classes}"
+        );
+    }
+
+    let noise_lsb = cfg.resolve_noise_lsb(p).context("resolving noise injection")?;
+    let ecfg = cfg.eval_cfg(noise_lsb);
+    let workers = cfg.resolved_workers();
+    let shapes = graph.shapes()?;
+    let calib = data.take(cfg.calib_n.max(1));
+
+    // Initial mapping: per-node activation ranges, γ, α from the float
+    // graph — the same procedure inference mapping uses.
+    let mut states = build_states(graph, &calib, p, &ecfg)?;
+    let cim_nodes: Vec<usize> = graph
+        .nodes
+        .iter()
+        .enumerate()
+        .filter(|(_, n)| n.is_cim())
+        .map(|(i, _)| i)
+        .collect();
+    let mut momentum: Vec<Momentum> = cim_nodes
+        .iter()
+        .map(|&ni| match &graph.nodes[ni] {
+            Node::Dense(d) => Momentum {
+                vw: vec![0.0; d.dense.w.len()],
+                vb: vec![0.0; d.dense.b.len()],
+            },
+            Node::Conv3x3(c) => Momentum { vw: vec![0.0; c.w.len()], vb: vec![0.0; c.b.len()] },
+            _ => unreachable!(),
+        })
+        .collect();
+
+    let mut shuffle_rng = Rng::new(cfg.seed ^ 0x5EED_5EED_5EED_5EED);
+    let mut noise_rng = Rng::new(cfg.seed ^ 0x0153_0153_0153_0153);
+    let mut order: Vec<usize> = (0..data.n).collect();
+    let mut epoch_losses = Vec::with_capacity(cfg.epochs);
+    let mut steps = 0u64;
+    let mut images = 0u64;
+    let t0 = std::time::Instant::now();
+
+    for epoch in 0..cfg.epochs {
+        if epoch > 0 && cfg.recalibrate_every > 0 && epoch % cfg.recalibrate_every == 0 {
+            let mapped = MappedGraph::build(graph, &calib, p, &ecfg)?;
+            for (state, (q, &ni)) in
+                states.iter_mut().zip(mapped.cim.into_iter().zip(&cim_nodes))
+            {
+                state.recalibrate(q, &graph.nodes[ni]);
+            }
+        }
+        shuffle_rng.shuffle(&mut order);
+        let mut ep_loss = 0.0f64;
+        let mut n_batches = 0usize;
+        for chunk in order.chunks(cfg.batch) {
+            let n = chunk.len();
+            let mut x = Vec::with_capacity(n * data.image_len());
+            for &i in chunk {
+                x.extend_from_slice(data.image(i));
+            }
+
+            // ---- forward, caching what each backward needs ----
+            // Only Relu/Pool2x2 backwards read their forward input (CIM
+            // nodes carry their own CimCache); don't clone activations
+            // for the rest.
+            let mut inputs: Vec<Option<Vec<f32>>> = Vec::with_capacity(graph.nodes.len());
+            let mut caches: Vec<Option<qat::CimCache>> = Vec::with_capacity(graph.nodes.len());
+            let mut ci = 0usize;
+            let mut cur = x;
+            for (ni, node) in graph.nodes.iter().enumerate() {
+                inputs.push(match node {
+                    Node::Relu | Node::Pool2x2(_) => Some(cur.clone()),
+                    _ => None,
+                });
+                let in_shape = &shapes[ni];
+                cur = match node {
+                    Node::Dense(_) => {
+                        let (y, cache) =
+                            states[ci].forward_dense(p, &cur, n, workers, &mut noise_rng);
+                        caches.push(Some(cache));
+                        ci += 1;
+                        y
+                    }
+                    Node::Conv3x3(_) => {
+                        let [c, h, w] = chw(in_shape)?;
+                        let (y, cache) = states[ci]
+                            .forward_conv(p, &cur, n, c, h, w, workers, &mut noise_rng);
+                        caches.push(Some(cache));
+                        ci += 1;
+                        y
+                    }
+                    Node::Relu => {
+                        caches.push(None);
+                        cur.iter().map(|&v| v.max(0.0)).collect()
+                    }
+                    Node::Pool2x2(kind) => {
+                        caches.push(None);
+                        let [c, h, w] = chw(in_shape)?;
+                        let in_len = c * h * w;
+                        let mut next = Vec::new();
+                        for img in cur.chunks(in_len) {
+                            next.extend(
+                                crate::coordinator::executor::apply_pool(
+                                    img,
+                                    c,
+                                    h,
+                                    w,
+                                    kind.to_manifest(),
+                                )
+                                .0,
+                            );
+                        }
+                        next
+                    }
+                    Node::Flatten => {
+                        caches.push(None);
+                        cur
+                    }
+                };
+            }
+
+            // ---- softmax cross-entropy ----
+            let logits = cur;
+            let mut delta = vec![0f32; n * n_classes];
+            let mut loss = 0.0f64;
+            let inv = 1.0 / n as f32;
+            for i in 0..n {
+                let lrow = &logits[i * n_classes..(i + 1) * n_classes];
+                let yi = data.y[chunk[i]] as usize;
+                let mx = lrow.iter().cloned().fold(f32::MIN, f32::max);
+                let exps: Vec<f32> = lrow.iter().map(|&v| (v - mx).exp()).collect();
+                let sum: f32 = exps.iter().sum();
+                loss -= f64::from((exps[yi] / sum).max(1e-12).ln());
+                let drow = &mut delta[i * n_classes..(i + 1) * n_classes];
+                for (d, &e) in drow.iter_mut().zip(&exps) {
+                    *d = e / sum * inv;
+                }
+                drow[yi] -= inv;
+            }
+            ep_loss += loss / n as f64;
+
+            // ---- backward + SGD, walking the graph in reverse ----
+            let mut ci = states.len();
+            for ni in (0..graph.nodes.len()).rev() {
+                if graph.nodes[ni].is_cim() {
+                    ci -= 1;
+                    let grads = {
+                        let cache = caches[ni].as_ref().unwrap();
+                        match &graph.nodes[ni] {
+                            Node::Dense(_) => states[ci].backward_dense(cache, &delta, n),
+                            Node::Conv3x3(_) => {
+                                let [c, h, w] = chw(&shapes[ni])?;
+                                states[ci].backward_conv(cache, &delta, n, c, h, w)
+                            }
+                            _ => unreachable!(),
+                        }
+                    };
+                    // Parameter update on the master float weights.
+                    apply_update(
+                        &mut graph.nodes[ni],
+                        &mut momentum[ci],
+                        &grads,
+                        cfg.lr,
+                        cfg.momentum,
+                    );
+                    delta = grads.dx;
+                    continue;
+                }
+                delta = match &graph.nodes[ni] {
+                    Node::Relu => {
+                        let mut d = delta;
+                        let x_in = inputs[ni].as_ref().unwrap();
+                        for (dv, &xv) in d.iter_mut().zip(x_in) {
+                            if xv <= 0.0 {
+                                *dv = 0.0;
+                            }
+                        }
+                        d
+                    }
+                    Node::Pool2x2(kind) => {
+                        let [c, h, w] = chw(&shapes[ni])?;
+                        pool_backward(&delta, inputs[ni].as_ref().unwrap(), n, c, h, w, *kind)
+                    }
+                    Node::Flatten => delta,
+                    _ => unreachable!(),
+                };
+            }
+
+            // The optimizer moved the master weights: re-quantize for
+            // the next minibatch (the STE's forward half).
+            for (state, &ni) in states.iter_mut().zip(&cim_nodes) {
+                state.refresh_weights(&graph.nodes[ni]);
+            }
+            steps += 1;
+            images += n as u64;
+            n_batches += 1;
+        }
+        epoch_losses.push(ep_loss / n_batches as f64);
+    }
+
+    Ok(TrainReport {
+        epoch_losses,
+        steps,
+        images,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        noise_lsb,
+    })
+}
+
+/// Build per-CIM-node training state from a fresh mapping of `graph`.
+fn build_states(
+    graph: &Graph,
+    calib: &Dataset,
+    p: &MacroParams,
+    ecfg: &EvalCfg,
+) -> Result<Vec<TrainNode>> {
+    let mapped = MappedGraph::build(graph, calib, p, ecfg)?;
+    Ok(mapped
+        .cim
+        .into_iter()
+        .zip(graph.nodes.iter().filter(|n| n.is_cim()))
+        .map(|(q, node)| TrainNode::new(q, node))
+        .collect())
+}
+
+fn apply_update(node: &mut Node, mom: &mut Momentum, grads: &qat::NodeGrads, lr: f32, mu: f32) {
+    match node {
+        Node::Dense(d) => mom.step(&mut d.dense.w, &mut d.dense.b, grads, lr, mu),
+        Node::Conv3x3(c) => mom.step(&mut c.w, &mut c.b, grads, lr, mu),
+        _ => unreachable!(),
+    }
+}
+
+/// Backward of the executor's 2×2 stride-2 pool (floor crop on odd
+/// dims): max routes to the first element attaining the window max, avg
+/// spreads evenly; cropped cells get no gradient.
+fn pool_backward(
+    delta: &[f32],
+    input: &[f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    kind: PoolKind,
+) -> Vec<f32> {
+    let (ph, pw) = (h / 2, w / 2);
+    let in_len = c * h * w;
+    let out_len = c * ph * pw;
+    let mut dx = vec![0f32; n * in_len];
+    for img in 0..n {
+        let xin = &input[img * in_len..(img + 1) * in_len];
+        let din = &delta[img * out_len..(img + 1) * out_len];
+        let dxi = &mut dx[img * in_len..(img + 1) * in_len];
+        for ch in 0..c {
+            for py in 0..ph {
+                for px in 0..pw {
+                    let d = din[ch * ph * pw + py * pw + px];
+                    if d == 0.0 {
+                        continue;
+                    }
+                    let idx = [
+                        ch * h * w + (2 * py) * w + 2 * px,
+                        ch * h * w + (2 * py) * w + 2 * px + 1,
+                        ch * h * w + (2 * py + 1) * w + 2 * px,
+                        ch * h * w + (2 * py + 1) * w + 2 * px + 1,
+                    ];
+                    match kind {
+                        PoolKind::Max => {
+                            let mut best = idx[0];
+                            for &i in &idx[1..] {
+                                if xin[i] > xin[best] {
+                                    best = i;
+                                }
+                            }
+                            dxi[best] += d;
+                        }
+                        PoolKind::Avg => {
+                            for &i in &idx {
+                                dxi[i] += d / 4.0;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::layers::{Conv3x3, DenseNode};
+    use crate::nn::mlp::Dense;
+
+    fn toy_task(n: usize, draw_seed: u64) -> Dataset {
+        Dataset::synthetic(n, vec![6, 6], 4, 5, draw_seed, 0.2)
+    }
+
+    fn mlp_graph(seed: u64) -> Graph {
+        let mut rng = Rng::new(seed);
+        Graph::new("train_mlp", vec![36])
+            .with(Node::Dense(DenseNode::new(Dense::new(36, 16, &mut rng))))
+            .with(Node::Relu)
+            .with(Node::Dense(DenseNode::new(Dense::new(16, 4, &mut rng))))
+    }
+
+    #[test]
+    fn qat_training_reduces_loss_and_learns() {
+        let train = toy_task(240, 11);
+        let mut g = mlp_graph(3);
+        let cfg = TrainConfig {
+            epochs: 5,
+            noise: NoiseInjection::Off,
+            workers: 1,
+            ..TrainConfig::default()
+        };
+        let p = MacroParams::paper();
+        let report = train_graph(&mut g, &train, &p, &cfg).unwrap();
+        assert_eq!(report.epoch_losses.len(), 5);
+        assert!(
+            report.final_loss() < report.epoch_losses[0] * 0.6,
+            "losses {:?}",
+            report.epoch_losses
+        );
+        // The trained graph classifies held-out draws well under the
+        // noiseless CIM mapping it was trained against.
+        let test = toy_task(120, 12);
+        let acc = crate::nn::graph::eval_graph_workers(
+            &g,
+            &test,
+            &p,
+            &cfg.eval_cfg(0.0),
+            1,
+        )
+        .unwrap();
+        assert!(acc > 0.8, "acc {acc}");
+    }
+
+    #[test]
+    fn conv_graph_trains_end_to_end() {
+        let mut rng = Rng::new(5);
+        let mut g = Graph::new("train_cnn", vec![1, 6, 6])
+            .with(Node::Conv3x3(Conv3x3::new(1, 4, &mut rng)))
+            .with(Node::Relu)
+            .with(Node::Pool2x2(PoolKind::Max))
+            .with(Node::Flatten)
+            .with(Node::Dense(DenseNode::new(Dense::new(4 * 3 * 3, 4, &mut rng))));
+        let train = Dataset::synthetic(120, vec![1, 6, 6], 4, 9, 1, 0.18);
+        let cfg = TrainConfig {
+            epochs: 3,
+            noise: NoiseInjection::Lsb(0.25),
+            workers: 1,
+            ..TrainConfig::default()
+        };
+        let p = MacroParams::paper();
+        let report = train_graph(&mut g, &train, &p, &cfg).unwrap();
+        assert!(
+            report.final_loss() < report.epoch_losses[0],
+            "losses {:?}",
+            report.epoch_losses
+        );
+        assert_eq!(report.noise_lsb, 0.25);
+    }
+
+    #[test]
+    fn training_rejects_malformed_inputs() {
+        let p = MacroParams::paper();
+        let mut g = mlp_graph(1);
+        let bad_len = Dataset { x: vec![0.0; 10], y: vec![0], n: 1, shape: vec![10] };
+        assert!(train_graph(&mut g, &bad_len, &p, &TrainConfig::default()).is_err());
+        let bad_label = Dataset { x: vec![0.0; 36], y: vec![9], n: 1, shape: vec![36] };
+        assert!(train_graph(&mut g, &bad_label, &p, &TrainConfig::default()).is_err());
+        let data = toy_task(8, 1);
+        let bad_lr = TrainConfig { lr: 0.0, ..TrainConfig::default() };
+        assert!(train_graph(&mut g, &data, &p, &bad_lr).is_err());
+        let bad_r = TrainConfig { r_out: 9, ..TrainConfig::default() };
+        assert!(train_graph(&mut g, &data, &p, &bad_r).is_err());
+    }
+
+    #[test]
+    fn pool_backward_routes_to_argmax_and_spreads_avg() {
+        // One channel, 2x2 → one output.
+        let input = vec![0.1, 0.9, 0.3, 0.2];
+        let delta = vec![1.0];
+        let dmax = pool_backward(&delta, &input, 1, 1, 2, 2, PoolKind::Max);
+        assert_eq!(dmax, vec![0.0, 1.0, 0.0, 0.0]);
+        let davg = pool_backward(&delta, &input, 1, 1, 2, 2, PoolKind::Avg);
+        assert_eq!(davg, vec![0.25; 4]);
+        // Odd dims: the cropped column gets no gradient.
+        let input3 = vec![0.0, 0.0, 5.0, 0.1, 0.0, 5.0, 1.0, 1.0, 5.0];
+        let d3 = pool_backward(&[1.0], &input3, 1, 1, 3, 3, PoolKind::Max);
+        assert_eq!(d3[2], 0.0);
+        assert_eq!(d3[5], 0.0);
+        assert_eq!(d3.iter().sum::<f32>(), 1.0);
+    }
+}

@@ -1,0 +1,330 @@
+//! Quantization-aware forward/backward of one macro-mapped node.
+//!
+//! The forward half is the *inference* contract, verbatim: the same
+//! [`macro_contract_masked`] expression the graph executor evaluates —
+//! r_in-grid activation quantization, 4b-antipodal weights, the Eq. 7
+//! ADC code (γ gain, floor, rails), the configured equivalent output
+//! noise, offset-binary reconstruction. What training adds is the
+//! *straight-through estimator* backward: each quantizer acts as the
+//! identity inside its representable range and blocks gradients where it
+//! clipped —
+//!
+//! * activations: gradients pass where `x / a_scale ∈ [−½, M+½]` (the
+//!   rounding basin of a representable code), stop where the input grid
+//!   clamped;
+//! * the ADC: gradients pass where the code stayed inside `[0, top]`,
+//!   stop where the conversion railed;
+//! * weights: the antipodal grid spans the per-tensor max, so every
+//!   master weight is representable and gradients always pass; the
+//!   backward matmuls use the *dequantized* values (`w_q · w_scale`,
+//!   `x_q · a_scale`) the macro actually multiplied.
+//!
+//! The bias is applied after the ADC (the ABN offset path), so its
+//! gradient is never masked by the rails.
+//!
+//! Conv nodes replicate the macro's im2col border convention: out-of-map
+//! taps read the mid-rail constant (signed factor +1), not zero — the
+//! network trains against the exact arithmetic it will be lowered onto.
+
+use crate::config::params::MacroParams;
+use crate::engine::gemm;
+use crate::nn::graph::{macro_contract_masked, permute_conv_rows, quantize_weights, CimKind, QNode};
+use crate::nn::layers::Node;
+use crate::util::rng::Rng;
+
+/// Everything the backward pass needs from one quantized forward.
+pub(crate) struct CimCache {
+    /// Dequantized inputs the macro actually saw (`x_q · a_scale`),
+    /// `[n × in_len]` (conv: natural CHW).
+    pub x_tilde: Vec<f32>,
+    /// STE pass-through per input element (inside the r_in grid).
+    pub in_mask: Vec<bool>,
+    /// STE pass-through per output element (ADC stayed off the rails).
+    pub out_mask: Vec<bool>,
+}
+
+/// Gradients of one node w.r.t. its master parameters and input.
+pub(crate) struct NodeGrads {
+    /// Natural-order weight gradient (dense `[n_out × n_in]`, conv
+    /// `[c_out × 9·c_in]`).
+    pub gw: Vec<f32>,
+    pub gb: Vec<f32>,
+    /// Gradient w.r.t. the node input, `[n × in_len]`.
+    pub dx: Vec<f32>,
+}
+
+/// One macro-mapped node under training: the mapping state (recalibrated
+/// per epoch) plus the natural-order quantized weights (refreshed after
+/// every optimizer step).
+pub(crate) struct TrainNode {
+    /// Mapping state in the executor's layout (conv weights in macro row
+    /// order) — `w_q`/`sum_w`/`w_scale`/`bias` are refreshed per step,
+    /// `a_scale`/`alpha`/`gamma`/`cfg` per recalibration.
+    pub q: QNode,
+    /// Natural-order quantized weight levels (the layout the backward
+    /// pass and the master weights use). For dense nodes this aliases
+    /// `q.w_q`'s layout; for conv it is the un-permuted kernel.
+    pub w_q_nat: Vec<f32>,
+}
+
+impl TrainNode {
+    pub fn new(q: QNode, node: &Node) -> TrainNode {
+        let mut t = TrainNode { q, w_q_nat: Vec::new() };
+        t.refresh_weights(node);
+        t
+    }
+
+    /// Adopt a freshly recalibrated mapping (new `a_scale`/`γ`/`α`) and
+    /// re-derive the weight-dependent fields from the master weights.
+    pub fn recalibrate(&mut self, q: QNode, node: &Node) {
+        self.q = q;
+        self.refresh_weights(node);
+    }
+
+    /// Re-quantize the master weights after an optimizer step — the
+    /// forward half of the weight STE.
+    pub fn refresh_weights(&mut self, node: &Node) {
+        match node {
+            Node::Dense(d) => {
+                let (w_q, w_scale) = quantize_weights(&d.dense.w, d.dense.n_out, d.dense.n_in);
+                self.q.sum_w = (0..d.dense.n_out)
+                    .map(|o| w_q[o * d.dense.n_in..(o + 1) * d.dense.n_in].iter().sum())
+                    .collect();
+                self.w_q_nat = w_q.clone();
+                self.q.w_q = w_q;
+                self.q.w_scale = w_scale;
+                self.q.bias = d.dense.b.clone();
+            }
+            Node::Conv3x3(c) => {
+                let (w_nat, w_scale) = quantize_weights(&c.w, c.c_out, 9 * c.c_in);
+                let (w_rows, rows) = permute_conv_rows(&w_nat, c.c_in, c.c_out);
+                debug_assert_eq!(rows, self.q.rows);
+                self.q.sum_w = (0..c.c_out)
+                    .map(|oc| w_rows[oc * rows..(oc + 1) * rows].iter().sum())
+                    .collect();
+                self.w_q_nat = w_nat;
+                self.q.w_q = w_rows;
+                self.q.w_scale = w_scale;
+                self.q.bias = c.b.clone();
+            }
+            other => unreachable!("TrainNode over a digital node {}", other.kind()),
+        }
+    }
+
+    /// Quantize a batch of activations onto the node's r_in grid.
+    /// Returns `(x_q, x_tilde, in_mask)`.
+    fn quantize_input(&self, x: &[f32], m: f32) -> (Vec<f32>, Vec<f32>, Vec<bool>) {
+        let a = self.q.a_scale;
+        let mut x_q = Vec::with_capacity(x.len());
+        let mut x_tilde = Vec::with_capacity(x.len());
+        let mut in_mask = Vec::with_capacity(x.len());
+        for &v in x {
+            let t = v / a;
+            in_mask.push((-0.5..=m + 0.5).contains(&t));
+            let q = t.round().clamp(0.0, m);
+            x_q.push(q);
+            x_tilde.push(q * a);
+        }
+        (x_q, x_tilde, in_mask)
+    }
+
+    /// Quantized dense forward over a flat batch `[n × n_in]` — the
+    /// executor's batched dense path plus the STE masks.
+    pub fn forward_dense(
+        &self,
+        p: &MacroParams,
+        x: &[f32],
+        n: usize,
+        workers: usize,
+        rng: &mut Rng,
+    ) -> (Vec<f32>, CimCache) {
+        let (n_in, n_out) = match self.q.kind {
+            CimKind::Dense { n_in, n_out } => (n_in, n_out),
+            _ => unreachable!(),
+        };
+        let (m, half, top, lsb, dv_unit) = self.q.contract_consts(p);
+        let (x_q, x_tilde, in_mask) = self.quantize_input(x, m);
+        let sx: Vec<f64> = x_q.iter().map(|&q| (2.0 * q - m) as f64).collect();
+        let w64: Vec<f64> = self.q.w_q.iter().map(|&w| w as f64).collect();
+        let dots = gemm::rowdot_f64(&sx, &w64, n, n_in, n_out, workers);
+
+        let mut out = vec![0f32; n * n_out];
+        let mut out_mask = vec![false; n * n_out];
+        for i in 0..n {
+            for o in 0..n_out {
+                let (y, ok) = macro_contract_masked(
+                    &self.q,
+                    dots[i * n_out + o],
+                    o,
+                    dv_unit,
+                    lsb,
+                    half,
+                    top,
+                    m,
+                    rng,
+                );
+                out[i * n_out + o] = y;
+                out_mask[i * n_out + o] = ok;
+            }
+        }
+        (out, CimCache { x_tilde, in_mask, out_mask })
+    }
+
+    /// Dense STE backward: `delta` is `∂L/∂y`, `[n × n_out]`.
+    pub fn backward_dense(&self, cache: &CimCache, delta: &[f32], n: usize) -> NodeGrads {
+        let (n_in, n_out) = match self.q.kind {
+            CimKind::Dense { n_in, n_out } => (n_in, n_out),
+            _ => unreachable!(),
+        };
+        let ws = self.q.w_scale;
+        let mut gw = vec![0f32; n_out * n_in];
+        let mut gb = vec![0f32; n_out];
+        let mut dx = vec![0f32; n * n_in];
+        for i in 0..n {
+            let x_t = &cache.x_tilde[i * n_in..(i + 1) * n_in];
+            let dxi = &mut dx[i * n_in..(i + 1) * n_in];
+            for o in 0..n_out {
+                let d_raw = delta[i * n_out + o];
+                if d_raw == 0.0 {
+                    continue;
+                }
+                gb[o] += d_raw; // bias is post-ADC: never rail-masked
+                if !cache.out_mask[i * n_out + o] {
+                    continue;
+                }
+                let grow = &mut gw[o * n_in..(o + 1) * n_in];
+                let wrow = &self.w_q_nat[o * n_in..(o + 1) * n_in];
+                for j in 0..n_in {
+                    grow[j] += d_raw * x_t[j];
+                    dxi[j] += d_raw * wrow[j] * ws;
+                }
+            }
+            for (v, &ok) in dxi.iter_mut().zip(&cache.in_mask[i * n_in..(i + 1) * n_in]) {
+                if !ok {
+                    *v = 0.0;
+                }
+            }
+        }
+        NodeGrads { gw, gb, dx }
+    }
+
+    /// Quantized conv forward over a flat CHW batch `[n × c·h·w]` — the
+    /// executor's im2col batch path (mid-rail borders, macro row order)
+    /// plus the STE masks.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_conv(
+        &self,
+        p: &MacroParams,
+        x: &[f32],
+        n: usize,
+        c: usize,
+        h: usize,
+        w: usize,
+        workers: usize,
+        rng: &mut Rng,
+    ) -> (Vec<f32>, CimCache) {
+        let c_out = self.q.n_out();
+        let (m, half, top, lsb, dv_unit) = self.q.contract_consts(p);
+        let (x_q, x_tilde, in_mask) = self.quantize_input(x, m);
+
+        let in_len = c * h * w;
+        let n_pix = h * w;
+        let images_q: Vec<Vec<u8>> = x_q
+            .chunks(in_len)
+            .map(|img| img.iter().map(|&q| q as u8).collect())
+            .collect();
+        let (sx_i, oh, ow) =
+            gemm::conv3x3_signed_rows(&images_q, c, h, w, 1, self.q.cfg.r_in, self.q.rows);
+        debug_assert_eq!((oh, ow), (h, w));
+        let sx: Vec<f64> = sx_i.iter().map(|&v| v as f64).collect();
+        let w64: Vec<f64> = self.q.w_q.iter().map(|&wv| wv as f64).collect();
+        let dots = gemm::rowdot_f64(&sx, &w64, n * n_pix, self.q.rows, c_out, workers);
+
+        let mut out = vec![0f32; n * c_out * n_pix];
+        let mut out_mask = vec![false; n * c_out * n_pix];
+        for img in 0..n {
+            let fmap = &mut out[img * c_out * n_pix..(img + 1) * c_out * n_pix];
+            let fmask = &mut out_mask[img * c_out * n_pix..(img + 1) * c_out * n_pix];
+            for pix in 0..n_pix {
+                let d = &dots[(img * n_pix + pix) * c_out..(img * n_pix + pix + 1) * c_out];
+                for (oc, &dot) in d.iter().enumerate() {
+                    let (y, ok) = macro_contract_masked(
+                        &self.q, dot, oc, dv_unit, lsb, half, top, m, rng,
+                    );
+                    fmap[oc * n_pix + pix] = y;
+                    fmask[oc * n_pix + pix] = ok;
+                }
+            }
+        }
+        (out, CimCache { x_tilde, in_mask, out_mask })
+    }
+
+    /// Conv STE backward. Border taps read the mid-rail constant in the
+    /// forward, so they contribute a constant-input term to the weight
+    /// gradient and no input gradient.
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward_conv(
+        &self,
+        cache: &CimCache,
+        delta: &[f32],
+        n: usize,
+        c: usize,
+        h: usize,
+        w: usize,
+    ) -> NodeGrads {
+        let c_out = self.q.n_out();
+        let ws = self.q.w_scale;
+        // Mid-rail border: signed factor +1 ⇒ x̃ = a_scale · 2^(r_in−1).
+        let pad_x = self.q.a_scale * ((1u32 << self.q.cfg.r_in) / 2) as f32;
+        let n_pix = h * w;
+        let in_len = c * n_pix;
+        let mut gw = vec![0f32; c_out * 9 * c];
+        let mut gb = vec![0f32; c_out];
+        let mut dx = vec![0f32; n * in_len];
+        for img in 0..n {
+            let x_t = &cache.x_tilde[img * in_len..(img + 1) * in_len];
+            let dxi = &mut dx[img * in_len..(img + 1) * in_len];
+            let dimg = &delta[img * c_out * n_pix..(img + 1) * c_out * n_pix];
+            let mimg = &cache.out_mask[img * c_out * n_pix..(img + 1) * c_out * n_pix];
+            for oc in 0..c_out {
+                let grow = &mut gw[oc * 9 * c..(oc + 1) * 9 * c];
+                let wrow = &self.w_q_nat[oc * 9 * c..(oc + 1) * 9 * c];
+                for oy in 0..h {
+                    for ox in 0..w {
+                        let pix = oy * w + ox;
+                        let d_raw = dimg[oc * n_pix + pix];
+                        if d_raw == 0.0 {
+                            continue;
+                        }
+                        gb[oc] += d_raw;
+                        if !mimg[oc * n_pix + pix] {
+                            continue;
+                        }
+                        for tap in 0..9 {
+                            let iy = (oy + tap / 3) as isize - 1;
+                            let ix = (ox + tap % 3) as isize - 1;
+                            if iy < 0 || ix < 0 || iy >= h as isize || ix >= w as isize {
+                                for ch in 0..c {
+                                    grow[tap * c + ch] += d_raw * pad_x;
+                                }
+                                continue;
+                            }
+                            let base = iy as usize * w + ix as usize;
+                            for ch in 0..c {
+                                grow[tap * c + ch] += d_raw * x_t[ch * n_pix + base];
+                                dxi[ch * n_pix + base] += d_raw * wrow[tap * c + ch] * ws;
+                            }
+                        }
+                    }
+                }
+            }
+            for (v, &ok) in dxi.iter_mut().zip(&cache.in_mask[img * in_len..(img + 1) * in_len])
+            {
+                if !ok {
+                    *v = 0.0;
+                }
+            }
+        }
+        NodeGrads { gw, gb, dx }
+    }
+}

@@ -1,18 +1,27 @@
 //! PJRT-based runtime for AOT-compiled model artifacts (request path).
 //!
-//! The real binding (`pjrt.rs`, behind the `pjrt` cargo feature) drives
-//! the `xla` (xla_extension) CPU client. The default build is fully
-//! offline and ships [`stub::Runtime`] instead: same API, but
-//! `Runtime::new()` reports that the PJRT path is unavailable so callers
-//! (server engine selection, `imagine run --backend pjrt`) can fall back
-//! to the rust executor engine with a clear message.
+//! The real binding (`pjrt.rs`) drives the `xla` (xla_extension) CPU
+//! client and needs two things: the `pjrt` cargo feature (the runtime
+//! surface) *and* the `xla` cargo feature (the vendored bindings crate,
+//! added to the dependency set by hand — the default build environment
+//! is offline). Every other combination ships [`stub::Runtime`]: same
+//! API, but `Runtime::new()` reports exactly which half is missing so
+//! callers (server engine selection, `imagine run --backend pjrt`) fall
+//! back to the rust executor engine with a clear message. This split is
+//! what lets CI build `--features pjrt` without the bindings and keep
+//! the feature-gated code paths from rotting unbuilt.
 
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", feature = "xla"))]
 pub mod pjrt;
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", feature = "xla"))]
 pub use pjrt::Runtime;
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", feature = "xla")))]
 pub mod stub;
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", feature = "xla")))]
 pub use stub::Runtime;
+
+/// Whether this build can actually execute HLO artifacts (both the
+/// `pjrt` surface and the `xla` bindings compiled in). `--backend auto`
+/// resolution keys off this, not the raw feature flags.
+pub const PJRT_AVAILABLE: bool = cfg!(all(feature = "pjrt", feature = "xla"));

@@ -1,16 +1,23 @@
-//! Stub PJRT runtime for builds without the `pjrt` feature.
+//! Stub PJRT runtime for builds that cannot run HLO artifacts.
 //!
-//! API-compatible with [`super::pjrt::Runtime`]: every constructor and
+//! API-compatible with the real `pjrt::Runtime`: every constructor and
 //! execution entry point returns a descriptive error instead of running,
 //! so the rest of the stack (server engine selection, CLI backends,
-//! examples) compiles unchanged and degrades gracefully at runtime.
+//! examples) compiles unchanged and degrades gracefully at runtime. The
+//! error names the missing half — the `pjrt` feature, or the `xla`
+//! bindings dependency it drives.
 
 use anyhow::{bail, Result};
 use std::path::Path;
 
-const UNAVAILABLE: &str =
+const UNAVAILABLE: &str = if cfg!(feature = "pjrt") {
+    "PJRT runtime unavailable: the `pjrt` feature is compiled in but the `xla` bindings \
+     dependency/feature is not (vendor the xla crate and build with --features pjrt,xla); \
+     use the ideal/analog backends instead"
+} else {
     "PJRT runtime unavailable: built without the `pjrt` cargo feature \
-     (requires the vendored `xla` bindings); use the ideal/analog backends instead";
+     (requires the vendored `xla` bindings); use the ideal/analog backends instead"
+};
 
 /// Placeholder for the PJRT CPU client + compiled-model registry.
 pub struct Runtime {

@@ -40,7 +40,10 @@ fn pjrt_unavailability_is_a_typed_error() {
         .build()
         .err()
         .unwrap();
-    assert!(matches!(err, ImagineError::BackendUnavailable { backend: BackendKind::Pjrt, .. }), "{err}");
+    assert!(
+        matches!(err, ImagineError::BackendUnavailable { backend: BackendKind::Pjrt, .. }),
+        "{err}"
+    );
     // A precision override on a PJRT deployment is rejected at deploy
     // time — the artifact's arithmetic is compiled in, so accepting it
     // would make every subsequent request fail at the retarget step.
@@ -51,7 +54,10 @@ fn pjrt_unavailability_is_a_typed_error() {
         .build()
         .err()
         .unwrap();
-    assert!(matches!(err, ImagineError::BackendUnavailable { backend: BackendKind::Pjrt, .. }), "{err}");
+    assert!(
+        matches!(err, ImagineError::BackendUnavailable { backend: BackendKind::Pjrt, .. }),
+        "{err}"
+    );
     assert!(format!("{err}").contains("compile time"), "{err}");
     // With a directory but no runnable runtime/HLO in the default build:
     // still the same typed failure class.
@@ -61,7 +67,10 @@ fn pjrt_unavailability_is_a_typed_error() {
         .build()
         .err()
         .unwrap();
-    assert!(matches!(err, ImagineError::BackendUnavailable { backend: BackendKind::Pjrt, .. }), "{err}");
+    assert!(
+        matches!(err, ImagineError::BackendUnavailable { backend: BackendKind::Pjrt, .. }),
+        "{err}"
+    );
 }
 
 #[test]

@@ -1,0 +1,286 @@
+//! Deterministic training-convergence smoke tests for the CIM-aware
+//! trainer (`nn::train` / `api::Trainer`).
+//!
+//! Everything runs on the deterministic synthetic task generator —
+//! templates fixed by a task seed, draws by a draw seed — so no
+//! artifacts or python toolchain are involved:
+//!
+//! * loss strictly decreases over 5 epochs from a fixed seed;
+//! * two runs with the same seed are bit-identical (weights and losses);
+//! * noise-injected training demonstrably improves robustness over
+//!   noise-free training — under the controlled in-process equivalent-
+//!   noise evaluation *and* under the circuit-behavioral analog backend
+//!   (margins averaged over independent training seeds so the assertion
+//!   tests the mechanism, not one lucky draw);
+//! * a trained graph saves artifacts that deploy through the `ModelHub`
+//!   and serve with ≥90 % argmax agreement vs the in-process evaluation.
+
+use imagine::api::{BackendKind, NoiseInjection, Session, TrainConfig, Trainer};
+use imagine::config::params::{MacroParams, Supply};
+use imagine::coordinator::manifest::NetworkModel;
+use imagine::nn::dataset::Dataset;
+use imagine::nn::graph::{Graph, MappedGraph};
+use imagine::nn::layers::{DenseNode, Node};
+use imagine::nn::mlp::Dense;
+use imagine::util::rng::Rng;
+use imagine::util::stats::argmax_f32 as argmax;
+
+const TASK_SEED: u64 = 5;
+const JITTER: f64 = 0.22;
+
+fn train_set() -> Dataset {
+    Dataset::synthetic(480, vec![8, 8], 10, TASK_SEED, 11, JITTER)
+}
+
+fn test_set(n: usize) -> Dataset {
+    Dataset::synthetic(n, vec![8, 8], 10, TASK_SEED, 12, JITTER)
+}
+
+fn digit_graph(seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    Graph::new("conv_test_mlp", vec![64])
+        .with(Node::Dense(DenseNode::new(Dense::new(64, 32, &mut rng))))
+        .with(Node::Relu)
+        .with(Node::Dense(DenseNode::new(Dense::new(32, 10, &mut rng))))
+}
+
+fn base_config(seed: u64, noise: NoiseInjection) -> TrainConfig {
+    TrainConfig {
+        epochs: 6,
+        batch: 32,
+        lr: 0.04,
+        momentum: 0.9,
+        seed,
+        noise,
+        r_in: 8,
+        r_out: 4,
+        workers: 1,
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn loss_strictly_decreases_over_five_epochs() {
+    let mut graph = digit_graph(3);
+    let cfg = TrainConfig { epochs: 5, ..base_config(3, NoiseInjection::Off) };
+    let report = imagine::nn::train::train_graph(
+        &mut graph,
+        &train_set(),
+        &MacroParams::paper(),
+        &cfg,
+    )
+    .unwrap();
+    assert_eq!(report.epoch_losses.len(), 5);
+    for w in report.epoch_losses.windows(2) {
+        assert!(
+            w[1] < w[0],
+            "loss must strictly decrease: {:?}",
+            report.epoch_losses
+        );
+    }
+    assert!(
+        report.final_loss() < report.epoch_losses[0] / 2.0,
+        "five epochs should at least halve the loss: {:?}",
+        report.epoch_losses
+    );
+}
+
+#[test]
+fn same_seed_runs_are_bit_identical() {
+    let data = train_set();
+    let run = || {
+        let mut graph = digit_graph(9);
+        let cfg = TrainConfig { epochs: 2, ..base_config(21, NoiseInjection::Lsb(0.5)) };
+        let report =
+            imagine::nn::train::train_graph(&mut graph, &data, &MacroParams::paper(), &cfg)
+                .unwrap();
+        (graph, report)
+    };
+    let (ga, ra) = run();
+    let (gb, rb) = run();
+    assert_eq!(ra.epoch_losses.len(), rb.epoch_losses.len());
+    for (a, b) in ra.epoch_losses.iter().zip(&rb.epoch_losses) {
+        assert_eq!(a.to_bits(), b.to_bits(), "losses must be bit-identical");
+    }
+    for (na, nb) in ga.nodes.iter().zip(&gb.nodes) {
+        match (na, nb) {
+            (Node::Dense(a), Node::Dense(b)) => {
+                assert_eq!(a.dense.w.len(), b.dense.w.len());
+                for (wa, wb) in a.dense.w.iter().zip(&b.dense.w) {
+                    assert_eq!(wa.to_bits(), wb.to_bits(), "weights must be bit-identical");
+                }
+                for (ba, bb) in a.dense.b.iter().zip(&b.dense.b) {
+                    assert_eq!(ba.to_bits(), bb.to_bits());
+                }
+            }
+            (Node::Relu, Node::Relu) => {}
+            other => panic!("node mismatch {other:?}"),
+        }
+    }
+}
+
+/// Train the (noise-injected, noise-free) pair for one seed; returns the
+/// two trained models.
+fn train_pair(
+    data: &Dataset,
+    seed: u64,
+) -> (imagine::api::TrainedModel, imagine::api::TrainedModel) {
+    let noisy = Trainer::new(digit_graph(seed))
+        .config(base_config(seed, NoiseInjection::Lsb(0.5)))
+        .fit(data)
+        .unwrap();
+    let clean = Trainer::new(digit_graph(seed))
+        .config(base_config(seed, NoiseInjection::Off))
+        .fit(data)
+        .unwrap();
+    (noisy, clean)
+}
+
+#[test]
+fn noise_injected_training_beats_noise_free_under_equivalent_noise() {
+    // Controlled half of the robustness claim: evaluate both arms through
+    // the in-process CIM mapping with the trained σ injected. Margins are
+    // averaged over independent training seeds and noise draws so the
+    // assertion tests the mechanism, not one lucky initialization (the
+    // python-prototyped margin distribution is ≥ +0.05 on average with
+    // every 2-seed mean positive).
+    let train = train_set();
+    let test = test_set(240);
+    let mut margin_sum = 0.0;
+    let mut noisy_sum = 0.0;
+    for seed in [3u64, 17] {
+        let (noisy, clean) = train_pair(&train, seed);
+        for eval_seed in [101u64, 102, 103] {
+            let eval = |m: &imagine::api::TrainedModel| {
+                let cfg = imagine::nn::cim_eval::EvalCfg {
+                    seed: eval_seed,
+                    ..m.config().eval_cfg(0.5)
+                };
+                imagine::nn::graph::eval_graph_workers(
+                    &m.graph,
+                    &test,
+                    &MacroParams::paper(),
+                    &cfg,
+                    1,
+                )
+                .unwrap()
+            };
+            let an = eval(&noisy);
+            let ac = eval(&clean);
+            margin_sum += an - ac;
+            noisy_sum += an;
+        }
+    }
+    let mean_margin = margin_sum / 6.0;
+    let mean_noisy = noisy_sum / 6.0;
+    assert!(
+        mean_margin > 0.0,
+        "noise-injected training must beat noise-free under equivalent noise \
+         (mean margin {mean_margin:+.4})"
+    );
+    assert!(mean_noisy > 0.45, "noise-trained accuracy collapsed: {mean_noisy}");
+}
+
+fn analog_accuracy(model: &NetworkModel, test: &Dataset, params: &MacroParams) -> f64 {
+    let session = Session::builder(model.clone())
+        .backend(BackendKind::Analog)
+        .params(params.clone())
+        .seed(2024)
+        .workers(4)
+        .batch(64)
+        .build()
+        .unwrap();
+    let images: Vec<Vec<f32>> = (0..test.n).map(|i| test.image(i).to_vec()).collect();
+    let outs = session.infer_batch_owned(images).unwrap();
+    outs.iter()
+        .zip(&test.y)
+        .filter(|(logits, &y)| argmax(logits) == y as usize)
+        .count() as f64
+        / test.n as f64
+}
+
+#[test]
+fn noise_injected_training_beats_noise_free_on_the_analog_backend() {
+    // The paper's claim end to end: lower both arms and run them on the
+    // circuit-behavioral die pool (mismatch + temporal noise +
+    // calibration) at the low-power supply point, where conversion
+    // nonidealities are largest relative to the signal. Margins average
+    // over three independent training seeds and a 4-die pool.
+    let train = train_set();
+    let test = test_set(160);
+    let lp = MacroParams::paper().with_supply(Supply::LOW_POWER);
+    let mut margin_sum = 0.0;
+    let mut noisy_sum = 0.0;
+    for seed in [3u64, 17, 29] {
+        let (noisy, clean) = train_pair(&train, seed);
+        let nm = noisy.lower(&train).unwrap();
+        let cm = clean.lower(&train).unwrap();
+        let an = analog_accuracy(&nm, &test, &lp);
+        let ac = analog_accuracy(&cm, &test, &lp);
+        margin_sum += an - ac;
+        noisy_sum += an;
+    }
+    let mean_margin = margin_sum / 3.0;
+    let mean_noisy = noisy_sum / 3.0;
+    assert!(
+        mean_margin > 0.0,
+        "noise-injected training must beat noise-free on the analog backend \
+         (mean margin {mean_margin:+.4})"
+    );
+    assert!(
+        mean_noisy > 0.25,
+        "analog-backend accuracy collapsed to near-chance: {mean_noisy}"
+    );
+}
+
+#[test]
+fn trained_model_saves_and_serves_with_high_agreement() {
+    // The acceptance loop: train → save artifacts → deploy from the
+    // artifact dir → served predictions agree ≥90% with the in-process
+    // CIM evaluation of the same graph.
+    let train = train_set();
+    let test = test_set(160);
+    let trained = Trainer::new(digit_graph(3))
+        .config(base_config(3, NoiseInjection::Lsb(0.5)))
+        .fit(&train)
+        .unwrap();
+
+    let dir = std::env::temp_dir().join(format!("imagine_train_conv_{}", std::process::id()));
+    let dir = dir.to_str().unwrap().to_string();
+    trained.save(&dir, "convnet", &train).unwrap();
+
+    // In-process predictions: the mapped graph, noiseless.
+    let cfg = trained.config().eval_cfg(0.0);
+    let mapped =
+        MappedGraph::build(&trained.graph, &train.take(96), &MacroParams::paper(), &cfg).unwrap();
+    let images: Vec<Vec<f32>> = (0..test.n).map(|i| test.image(i).to_vec()).collect();
+    let inproc = mapped.forward_batch(&images, 1).unwrap();
+
+    // Served predictions: artifacts → deployment → ideal backend.
+    let session = imagine::api::SessionBuilder::from_artifacts(&dir, "convnet")
+        .unwrap()
+        .backend(BackendKind::Ideal)
+        .workers(1)
+        .build()
+        .unwrap();
+    let served = session.infer_batch_owned(images).unwrap();
+
+    let agree = inproc
+        .iter()
+        .zip(&served)
+        .filter(|(a, b)| argmax(a) == argmax(b))
+        .count();
+    assert!(
+        agree as f64 >= 0.9 * test.n as f64,
+        "served model agrees on only {agree}/{} predictions",
+        test.n
+    );
+    // And the served accuracy itself stays useful.
+    let correct = served
+        .iter()
+        .zip(&test.y)
+        .filter(|(logits, &y)| argmax(logits) == y as usize)
+        .count();
+    assert!(correct as f64 > 0.7 * test.n as f64, "served accuracy {correct}/{}", test.n);
+    let _ = std::fs::remove_dir_all(&dir);
+}

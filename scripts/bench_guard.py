@@ -1,0 +1,102 @@
+#!/usr/bin/env python3
+"""Merge bench metric JSONs into one BENCH report and gate on regressions.
+
+Usage:
+  python3 scripts/bench_guard.py \
+      --merge bench_out/perf.json bench_out/train_smoke.json \
+      --out BENCH_pr5.json --baseline BENCH_baseline.json [--tolerance 0.25]
+
+Reads flat {metric: value} objects produced by the benches' MetricSink,
+merges them (later files win on key collisions), writes the merged report
+to --out, and compares against the committed baseline:
+
+  * keys matching *_per_s           are higher-is-better
+  * keys matching *_ns_per_* / *_us_per_*  are lower-is-better
+  * keys present in only one side are reported but never fail the gate
+  * a value regressing more than --tolerance (default 25%) past the
+    baseline fails with exit code 1
+
+Baselines committed from a developer machine are conservative floors; CI
+uploads the fresh report as an artifact so the baseline can be tightened
+from real runner numbers (copy the artifact over BENCH_baseline.json).
+
+Stdlib only — runs on a bare CI runner.
+"""
+
+import argparse
+import json
+import sys
+
+
+def lower_is_better(key: str) -> bool:
+    return "_ns_per_" in key or "_us_per_" in key or key.endswith("_ns") or key.endswith("_us")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--merge", nargs="+", required=True, help="metric JSONs to merge")
+    ap.add_argument("--out", required=True, help="merged report path")
+    ap.add_argument("--baseline", required=True, help="committed baseline JSON")
+    ap.add_argument("--tolerance", type=float, default=0.25, help="allowed regression fraction")
+    args = ap.parse_args()
+
+    merged = {}
+    for path in args.merge:
+        try:
+            with open(path) as fh:
+                part = json.load(fh)
+        except FileNotFoundError:
+            print(f"bench_guard: missing {path} (bench did not run?)", file=sys.stderr)
+            return 1
+        if not isinstance(part, dict):
+            print(f"bench_guard: {path} is not a flat JSON object", file=sys.stderr)
+            return 1
+        merged.update({k: float(v) for k, v in part.items()})
+
+    with open(args.out, "w") as fh:
+        json.dump(merged, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(f"bench_guard: wrote {args.out} with {len(merged)} metrics")
+
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    baseline = {k: v for k, v in baseline.items() if not k.startswith("_")}
+
+    failures = []
+    for key in sorted(set(merged) | set(baseline)):
+        if key not in merged:
+            print(f"  {key:<40} baseline {baseline[key]:>12.1f}  (not measured this run)")
+            continue
+        if key not in baseline:
+            print(f"  {key:<40} current  {merged[key]:>12.1f}  (no baseline yet)")
+            continue
+        cur, base = merged[key], float(baseline[key])
+        if lower_is_better(key):
+            limit = base * (1.0 + args.tolerance)
+            ok = cur <= limit
+            direction = "<="
+        else:
+            limit = base * (1.0 - args.tolerance)
+            ok = cur >= limit
+            direction = ">="
+        status = "ok " if ok else "REGRESSION"
+        print(
+            f"  {key:<40} current {cur:>12.1f}  baseline {base:>12.1f}  "
+            f"(need {direction} {limit:.1f})  {status}"
+        )
+        if not ok:
+            failures.append(key)
+
+    if failures:
+        print(
+            f"bench_guard: {len(failures)} metric(s) regressed more than "
+            f"{args.tolerance:.0%} vs {args.baseline}: {', '.join(failures)}",
+            file=sys.stderr,
+        )
+        return 1
+    print("bench_guard: no regressions beyond tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
