@@ -17,17 +17,19 @@ artifacts:
 	cd python && python3 -m compile.make_artifacts --out ../artifacts
 
 bench:
-	cargo bench --bench perf_hotpath
+	cargo bench --bench perf_hotpath --features simd
 	cargo bench --bench train_smoke
 
 # What the CI bench job runs: benches + the 25%-regression gate against
-# the committed baseline, writing the merged BENCH_pr5.json report.
-# (cargo runs bench binaries with CWD = the package root, so the metric
-# JSONs land under rust/bench_out/.)
+# the committed baseline, writing the merged BENCH_report.json report and
+# a tightened BENCH_suggested.json candidate baseline. (cargo runs bench
+# binaries with CWD = the package root, so the metric JSONs land under
+# rust/bench_out/.)
 bench-check: bench
 	python3 scripts/bench_guard.py \
 	  --merge rust/bench_out/perf.json rust/bench_out/train_smoke.json \
-	  --out BENCH_pr5.json --baseline BENCH_baseline.json
+	  --out BENCH_report.json --baseline BENCH_baseline.json \
+	  --suggest BENCH_suggested.json
 
 fmt:
 	cargo fmt --all --check
@@ -36,7 +38,7 @@ pytest:
 	cd python && python3 -m pytest tests -q
 
 # Mirror the CI workflow locally (rust job matrix + lint job) so a push
-# that passes `make ci` passes the workflow: both feature-matrix arms
+# that passes `make ci` passes the workflow: all feature-matrix arms
 # (build, test, bench compilation), blocking clippy/fmt.
 ci:
 	cargo build --release --no-default-features
@@ -45,5 +47,8 @@ ci:
 	cargo build --release --features pjrt
 	cargo test -q --features pjrt
 	cargo bench --no-run --features pjrt
+	cargo build --release --features simd
+	cargo test -q --features simd
+	cargo bench --no-run --features simd
 	cargo clippy --all-targets -- -D warnings
 	cargo fmt --all --check

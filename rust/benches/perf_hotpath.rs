@@ -139,6 +139,190 @@ fn main() {
     ));
     metrics.metric("conv3x3_batch32_images_per_s", conv_b32);
 
+    // ---- 3c. kernel matrix: scalar vs dispatch vs forced paths ----
+    // Single-worker gemm timings over the precision grid the dispatcher
+    // keys on: 576x64 odd antipodal weights (bit-plane eligible), valid
+    // signed input factors 2q - M at each r_in. workers=1 isolates the
+    // kernel itself from thread-splitting effects.
+    out.line("");
+    out.line("# kernel matrix (576x64 gemm, workers=1)");
+    {
+        use imagine::engine::kernels::{self, KernelPath};
+        out.line(format!(
+            "explicit ISA: {}",
+            kernels::explicit_isa().unwrap_or("none (portable tier)")
+        ));
+        let (k_rows, k_out) = (576usize, 64usize);
+        let kw: Vec<i32> = (0..k_rows * k_out).map(|i| 2 * (i % 16) as i32 - 15).collect();
+        let mut krng = Rng::new(41);
+        let mut bp_speedup = [0.0f64; 2]; // r_in = 1, 2 at batch=32
+        let mut simd_speedup_r8 = 0.0f64;
+        for r in [1u32, 2, 4, 8] {
+            let m = (1i32 << r) - 1;
+            for n_vec in [1usize, 32] {
+                let a: Vec<i32> = (0..n_vec * k_rows)
+                    .map(|_| 2 * krng.below(1 + m as u64) as i32 - m)
+                    .collect();
+                let iters = if n_vec == 1 { 200 } else { 20 };
+                let label = format!("gemm r={r} batch={n_vec:<2} scalar");
+                let t_scalar = bench(&label, iters, &mut out, || {
+                    std::hint::black_box(imagine::engine::gemm::matmul_i32(
+                        &a,
+                        &kw,
+                        n_vec,
+                        k_rows,
+                        k_out,
+                        1,
+                    ));
+                });
+                let chosen = kernels::select_gemm(Some(r), k_rows, k_out, n_vec, &kw);
+                let label = format!("gemm r={r} batch={n_vec:<2} dispatch[{}]", chosen.name());
+                let t_disp = bench(&label, iters, &mut out, || {
+                    std::hint::black_box(kernels::matmul_i32(
+                        &a,
+                        &kw,
+                        n_vec,
+                        k_rows,
+                        k_out,
+                        1,
+                        Some(r),
+                    ));
+                });
+                let label = format!("gemm r={r} batch={n_vec:<2} forced portable");
+                bench(&label, iters, &mut out, || {
+                    std::hint::black_box(kernels::matmul_i32_with(
+                        KernelPath::Portable,
+                        &a,
+                        &kw,
+                        n_vec,
+                        k_rows,
+                        k_out,
+                        1,
+                        Some(r),
+                    ));
+                });
+                let label = format!("gemm r={r} batch={n_vec:<2} forced bitplane");
+                let t_bp = bench(&label, iters, &mut out, || {
+                    std::hint::black_box(kernels::matmul_i32_with(
+                        KernelPath::BitPlane,
+                        &a,
+                        &kw,
+                        n_vec,
+                        k_rows,
+                        k_out,
+                        1,
+                        Some(r),
+                    ));
+                });
+                let mmacs = n_vec as f64 * k_rows as f64 * k_out as f64 / 1e6;
+                out.line(format!(
+                    "  -> {:.0} scalar / {:.0} dispatch MMAC/s",
+                    mmacs / t_scalar,
+                    mmacs / t_disp
+                ));
+                if n_vec == 32 {
+                    match r {
+                        1 => bp_speedup[0] = t_scalar / t_bp,
+                        2 => bp_speedup[1] = t_scalar / t_bp,
+                        8 => simd_speedup_r8 = t_scalar / t_disp,
+                        _ => {}
+                    }
+                }
+            }
+        }
+        out.line(format!(
+            "-> bit-plane r_in=1: {:.1}x vs scalar; r_in=2: {:.1}x; dispatch r_in=8: {:.2}x",
+            bp_speedup[0],
+            bp_speedup[1],
+            simd_speedup_r8
+        ));
+        metrics.metric("kernel_bitplane_rin1_speedup_x", bp_speedup[0]);
+        metrics.metric("kernel_bitplane_rin2_speedup_x", bp_speedup[1]);
+        metrics.metric("kernel_simd_rin8_speedup_x", simd_speedup_r8);
+    }
+
+    // ---- 3d. direct conv vs whole-batch im2col materialization ----
+    // Same workload as 3b but through engine::kernels::conv3x3_direct,
+    // which streams per-image row assembly into the gemm instead of
+    // materializing the [(img*oh*ow) x rows] factor buffer. Peak scratch
+    // is workers x (oh*ow*rows) instead of n_img x (oh*ow*rows).
+    out.line("");
+    out.line("# direct conv (16ch 16x16 -> 32ch, batch=32)");
+    {
+        use imagine::engine::kernels;
+        let conv_workers = 4usize;
+        let per = bench("conv3x3_direct batch=32 r_in=8", 5, &mut out, || {
+            std::hint::black_box(kernels::conv3x3_direct(
+                &conv_imgs,
+                cc,
+                ch,
+                cw,
+                1,
+                8,
+                &conv_w,
+                conv_rows,
+                c_out,
+                conv_workers,
+            ));
+        });
+        let direct_ips = conv_imgs.len() as f64 / per;
+        out.line(format!(
+            "-> direct vs materialized im2col (batch=32): {:.2}x ({:.0} vs {:.0} images/s)",
+            direct_ips / conv_b32,
+            direct_ips,
+            conv_b32
+        ));
+        // Deterministic memory model: the materialized path holds the
+        // whole batch's factor rows at once; direct conv holds one
+        // per-image scratch per worker.
+        let per_image_words = (ch * cw) * conv_rows; // stride 1, same-size output
+        let mem_reduction = conv_imgs.len() as f64 / conv_workers as f64;
+        out.line(format!(
+            "-> peak factor scratch: {:.2} MiB materialized vs {:.2} MiB direct ({:.1}x)",
+            (conv_imgs.len() * per_image_words * 4) as f64 / (1024.0 * 1024.0),
+            (conv_workers * per_image_words * 4) as f64 / (1024.0 * 1024.0),
+            mem_reduction
+        ));
+        metrics.metric("conv3x3_direct_batch32_images_per_s", direct_ips);
+        metrics.metric("directconv_mem_reduction_x", mem_reduction);
+
+        // Precision scaling: binary inputs let the conv gemm ride the
+        // bit-plane path; compare against the same images at r_in=8.
+        let bin_imgs: Vec<Vec<u8>> = (0..32)
+            .map(|s| (0..cc * ch * cw).map(|i| ((i + s) % 2) as u8).collect())
+            .collect();
+        let t_r1 = bench("conv3x3_direct batch=32 r_in=1", 5, &mut out, || {
+            std::hint::black_box(kernels::conv3x3_direct(
+                &bin_imgs,
+                cc,
+                ch,
+                cw,
+                1,
+                1,
+                &conv_w,
+                conv_rows,
+                c_out,
+                conv_workers,
+            ));
+        });
+        let t_r8 = bench("conv3x3_direct batch=32 r_in=8 (same imgs)", 5, &mut out, || {
+            std::hint::black_box(kernels::conv3x3_direct(
+                &bin_imgs,
+                cc,
+                ch,
+                cw,
+                1,
+                8,
+                &conv_w,
+                conv_rows,
+                c_out,
+                conv_workers,
+            ));
+        });
+        out.line(format!("-> direct conv r_in=1 vs r_in=8: {:.1}x", t_r8 / t_r1));
+        metrics.metric("conv3x3_direct_rin1_speedup_x", t_r8 / t_r1);
+    }
+
     // ---- 4. batched engine: batch-size scaling of the ideal backend ----
     out.line("");
     out.line("# batched engine (synthetic 784-512-10 dense model, ideal backend)");

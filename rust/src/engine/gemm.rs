@@ -16,6 +16,12 @@
 //! Both kernels split the batch dimension across scoped worker threads;
 //! with a single worker (or a single vector) they degrade to the plain
 //! serial loop with no thread overhead.
+//!
+//! These are the **scalar reference** kernels: [`super::kernels`]
+//! dispatches between them, the SIMD tiles, and the low-precision
+//! bit-plane engine, and every alternate path is tested bit-identical
+//! to the functions in this module. New call sites should go through
+//! `engine::kernels` so they inherit precision/ISA-adaptive dispatch.
 
 /// `C[v][o] = Σ_r a[v*rows + r] * w[r*n_out + o]` over `n_vec` vectors.
 pub fn matmul_i32(
@@ -49,7 +55,7 @@ pub fn matmul_i32(
     out
 }
 
-fn matmul_i32_chunk(a: &[i32], w: &[i32], rows: usize, n_out: usize, out: &mut [i32]) {
+pub(crate) fn matmul_i32_chunk(a: &[i32], w: &[i32], rows: usize, n_out: usize, out: &mut [i32]) {
     let n_vec = a.len() / rows;
     let mut v = 0;
     // Four batch vectors per weight pass.
@@ -105,26 +111,47 @@ pub fn conv3x3_signed_rows(
     r_in: u32,
     rows: usize,
 ) -> (Vec<i32>, usize, usize) {
-    let m = (1i32 << r_in) - 1;
-    let pad = ((1u32 << r_in) / 2) as u8;
     let (mut oh, mut ow) = (0usize, 0usize);
     let mut sx = Vec::new();
-    for xq in images_q {
-        let (row_vecs, ih, iw) = crate::dataflow::im2col::im2col_image(xq, c, h, w, stride, pad);
-        (oh, ow) = (ih, iw);
-        if sx.capacity() == 0 {
-            sx.reserve(images_q.len() * row_vecs.len() * rows);
-        }
-        for rv in &row_vecs {
-            for &q in rv.iter().take(rows) {
-                sx.push(2 * q as i32 - m);
-            }
-            for _ in rv.len()..rows {
-                sx.push(2 * pad as i32 - m);
-            }
+    for (i, xq) in images_q.iter().enumerate() {
+        (oh, ow) = conv3x3_signed_rows_into(xq, c, h, w, stride, r_in, rows, &mut sx);
+        if i == 0 {
+            sx.reserve(images_q.len().saturating_sub(1) * oh * ow * rows);
         }
     }
     (sx, oh, ow)
+}
+
+/// Per-image core of [`conv3x3_signed_rows`]: appends the signed row
+/// factors for **one** quantized CHW image to `sx` and returns
+/// `(oh, ow)`. The direct-conv kernel (`kernels::conv3x3_direct`)
+/// streams the batch through a per-worker scratch buffer with this,
+/// instead of materializing the whole-batch `[(img·oh·ow) × rows]`
+/// matrix.
+#[allow(clippy::too_many_arguments)]
+pub fn conv3x3_signed_rows_into(
+    xq: &[u8],
+    c: usize,
+    h: usize,
+    w: usize,
+    stride: usize,
+    r_in: u32,
+    rows: usize,
+    sx: &mut Vec<i32>,
+) -> (usize, usize) {
+    let m = (1i32 << r_in) - 1;
+    let pad = ((1u32 << r_in) / 2) as u8;
+    let (row_vecs, oh, ow) = crate::dataflow::im2col::im2col_image(xq, c, h, w, stride, pad);
+    sx.reserve(row_vecs.len() * rows);
+    for rv in &row_vecs {
+        for &q in rv.iter().take(rows) {
+            sx.push(2 * q as i32 - m);
+        }
+        for _ in rv.len()..rows {
+            sx.push(2 * pad as i32 - m);
+        }
+    }
+    (oh, ow)
 }
 
 /// Whole-batch 3×3 convolution on the macro's integer contract: im2col

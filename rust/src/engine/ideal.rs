@@ -4,10 +4,11 @@
 //! walks one dot product at a time with column-strided weight access. This
 //! backend lowers a whole batch of inputs (and, for conv layers, every
 //! im2col patch of every image) into one matrix of signed input factors
-//! per layer and evaluates `codes = contract(X · W)` with the blocked
-//! [`gemm`](crate::engine::gemm) kernel — one pass over the weights per
-//! four batch vectors instead of per output channel, split across worker
-//! threads.
+//! per layer and evaluates `codes = contract(X · W)` through the
+//! precision/ISA-adaptive [`kernels`](crate::engine::kernels) dispatch —
+//! SIMD tiles at high precision, the bit-plane popcount engine at
+//! `r_in ≤ 2`, and a streaming direct conv that never materializes the
+//! whole-batch im2col matrix — split across worker threads.
 //!
 //! Bit-exactness: the integer dot products are order-independent, and the
 //! float mapping from dot product to ADC code goes through the *same*
@@ -20,7 +21,7 @@ use crate::coordinator::executor::{apply_pool, post_adc, IdealContract};
 use crate::coordinator::manifest::{Kind, Layer, NetworkModel, Pool};
 use crate::dataflow::pipeline::LayerShape;
 use crate::energy::system::{layer_cost, LayerCost};
-use crate::engine::gemm;
+use crate::engine::kernels;
 use anyhow::{ensure, Result};
 
 /// The batched ideal-contract inference backend.
@@ -207,7 +208,15 @@ fn forward_layer_batch(
             for act in acts {
                 signed_rows(layer, contract, act, &mut sx);
             }
-            let dots = gemm::matmul_i32(&sx, &layer.w_phys, n_img, layer.rows, n_out, workers);
+            let dots = kernels::matmul_i32(
+                &sx,
+                &layer.w_phys,
+                n_img,
+                layer.rows,
+                n_out,
+                workers,
+                Some(layer.cfg.r_in),
+            );
             let outs = dots
                 .chunks(n_out)
                 .map(|d| {
@@ -226,8 +235,9 @@ fn forward_layer_batch(
             debug_assert_eq!(c, layer.in_features);
             let m_f = ((1u32 << layer.cfg.r_in) - 1) as f32;
 
-            // Quantize every image, then run the whole batch through the
-            // im2col-backed conv kernel in one blocked matmul pass.
+            // Quantize every image, then stream the batch through the
+            // direct conv kernel — per-worker im2col scratch instead of
+            // the whole-batch row matrix, dispatched per precision/ISA.
             let images_q: Vec<Vec<u8>> = acts
                 .iter()
                 .map(|act| {
@@ -236,7 +246,7 @@ fn forward_layer_batch(
                         .collect()
                 })
                 .collect();
-            let (dots, oh, ow) = gemm::conv3x3_batch(
+            let (dots, oh, ow) = kernels::conv3x3_direct(
                 &images_q,
                 c,
                 h,

@@ -1,0 +1,1056 @@
+//! Precision- and ISA-adaptive kernel dispatch for the engine hot path.
+//!
+//! The macro's headline property is throughput that *scales with input
+//! precision* (0.15–8 POPS/W from 8b down to 1b, §VI): the array
+//! accumulates input bit-planes serially, so a 1b input costs 1/8th of
+//! an 8b input. The scalar kernels in [`super::gemm`] pay the same i32
+//! cost at every `r_in`, which flattens exactly the curve the paper is
+//! about. This module restores it in software with three kernel
+//! families behind one dispatch point:
+//!
+//! * **Scalar** — the reference kernels from [`super::gemm`], always
+//!   available, the bit-identity oracle every other path is tested
+//!   against.
+//! * **SIMD** — `Portable` is a lane-blocked form (8×i32 / 4×f64
+//!   accumulator tiles) written so LLVM autovectorizes it on any
+//!   target; `Avx2` / `Neon` are explicit `std::arch` intrinsics
+//!   compiled only under the `simd` cargo feature and *selected* only
+//!   when runtime detection (`is_x86_feature_detected!` /
+//!   `is_aarch64_feature_detected!`) confirms the ISA, with automatic
+//!   fallback to `Portable` otherwise.
+//! * **BitPlane** — the software image of the macro's input-serial
+//!   accumulation, used at `r_in ∈ {1,2}`: input factors and weight
+//!   levels are packed into per-row `u64` masks and each dot product
+//!   becomes a handful of XOR/AND/popcount passes, so cost scales with
+//!   `r_in` like the silicon does (see [`matmul_i32`] for the math).
+//!
+//! # Bit-identity contract
+//!
+//! Every path returns results **bit-identical** to the scalar
+//! reference — a hard equality, not a tolerance:
+//!
+//! * i32 accumulation is exact and associative (two's-complement
+//!   wrapping), so any re-ordering (SIMD lanes, bit-plane algebra,
+//!   thread splits) produces the same words.
+//! * The f64 [`rowdot_f64`] lane kernel assigns one *output* per lane
+//!   and accumulates ascending-`k` within the lane — the exact
+//!   floating-point operation sequence of the scalar loop per output —
+//!   so no float addition is ever re-associated. (Rust never contracts
+//!   `a*b + c` into an FMA implicitly, so lane and scalar code compile
+//!   to the same rounding behaviour.)
+//!
+//! `tests/kernel_equivalence.rs` asserts both properties across shapes,
+//! remainder classes, worker counts and the full `r_in` grid, in both
+//! the default and `--features simd` builds.
+//!
+//! # Selection rules ([`select_gemm`])
+//!
+//! | Condition (checked in order) | Path |
+//! |---|---|
+//! | `r_in ≤ 2`, `n_vec ≥ 4`, `rows ≥ 32`, weights all odd-or-zero with `|w| ≤ 15` | `BitPlane` |
+//! | `n_out ≥ 8`, `simd` feature on, AVX2 detected at runtime | `Avx2` |
+//! | `n_out ≥ 8`, `simd` feature on, NEON detected at runtime | `Neon` |
+//! | `n_out ≥ 8` | `Portable` |
+//! | otherwise | `Scalar` |
+//!
+//! The weight eligibility rule matches the two layouts that reach the
+//! kernels: physical manifest weights are antipodal levels
+//! `{±1, ±3, …, ±15}` (all odd), and graph/trainer quantized weights
+//! are those levels *or exactly 0* on `permute_conv_rows` padding rows.
+//! Zero rows are excluded from the popcount via a per-output validity
+//! mask rather than rejected.
+//!
+//! Callers that cannot name an input precision pass `r_in = None` and
+//! get the SIMD/scalar tier only.
+
+use super::gemm;
+
+/// Antipodal weight level bound for the 4b weight path (`R_W = 4`,
+/// levels `2k − 15` for `k ∈ 0..16`).
+const W_LEVEL_MAX: i32 = 15;
+/// Number of weight bit-planes (`R_W`).
+const W_PLANES: usize = 4;
+/// Auto-selection only uses the bit-plane engine where it clearly wins.
+const BITPLANE_MAX_RIN: u32 = 2;
+/// Forced bit-plane execution (benches, tests) is valid up to 8b input.
+const BITPLANE_RIN_LIMIT: u32 = 8;
+const BITPLANE_MIN_VECS: usize = 4;
+const BITPLANE_MIN_ROWS: usize = 32;
+/// i32 lane-tile width of the portable/AVX2 kernels.
+const I32_LANES: usize = 8;
+/// f64 lane-tile width of the portable rowdot kernel.
+const F64_LANES: usize = 4;
+
+// ---------------------------------------------------------------------------
+// ISA capability detection
+// ---------------------------------------------------------------------------
+
+/// Which explicit-SIMD instruction sets this process may use. Without
+/// the `simd` cargo feature both flags are `false` and dispatch stops
+/// at the portable tier — the forced-fallback behaviour the tests pin.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Caps {
+    pub avx2: bool,
+    pub neon: bool,
+}
+
+/// Runtime ISA detection, evaluated once per process. Compiled to
+/// `Caps::default()` unless the `simd` feature is enabled *and* the
+/// target architecture has an explicit kernel.
+pub fn caps() -> Caps {
+    static CAPS: std::sync::OnceLock<Caps> = std::sync::OnceLock::new();
+    *CAPS.get_or_init(detect_caps)
+}
+
+fn detect_caps() -> Caps {
+    #[allow(unused_mut)]
+    let mut caps = Caps::default();
+    #[cfg(all(feature = "simd", any(target_arch = "x86", target_arch = "x86_64")))]
+    {
+        caps.avx2 = is_x86_feature_detected!("avx2");
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    {
+        caps.neon = std::arch::is_aarch64_feature_detected!("neon");
+    }
+    caps
+}
+
+/// Name of the explicit ISA the dispatcher would use, if any — what the
+/// benches print so a run is attributable to a kernel tier.
+pub fn explicit_isa() -> Option<&'static str> {
+    let c = caps();
+    if c.avx2 {
+        Some("avx2")
+    } else if c.neon {
+        Some("neon")
+    } else {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Kernel paths and selection
+// ---------------------------------------------------------------------------
+
+/// One concrete kernel implementation the dispatcher can route a call
+/// to. `Avx2`/`Neon` exist as variants on every target so selection
+/// logic is testable anywhere; [`path_available`] reports whether a
+/// variant can actually execute in this build/process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelPath {
+    /// Reference kernels from [`super::gemm`].
+    Scalar,
+    /// Lane-blocked autovectorizable kernel (any target, any build).
+    Portable,
+    /// Explicit AVX2 intrinsics (`simd` feature + runtime detection).
+    Avx2,
+    /// Explicit NEON intrinsics (`simd` feature + runtime detection).
+    Neon,
+    /// Input-serial bit-plane popcount engine for low `r_in`.
+    BitPlane,
+}
+
+impl KernelPath {
+    /// Stable lowercase label for bench output and logs.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelPath::Scalar => "scalar",
+            KernelPath::Portable => "portable",
+            KernelPath::Avx2 => "avx2",
+            KernelPath::Neon => "neon",
+            KernelPath::BitPlane => "bitplane",
+        }
+    }
+}
+
+/// Whether `path` can execute in this build on this machine.
+pub fn path_available(path: KernelPath) -> bool {
+    match path {
+        KernelPath::Scalar | KernelPath::Portable | KernelPath::BitPlane => true,
+        KernelPath::Avx2 => caps().avx2,
+        KernelPath::Neon => caps().neon,
+    }
+}
+
+/// True when every weight is representable by the 4-plane antipodal
+/// decomposition: an odd level with `|w| ≤ 15`, or exactly 0 (a
+/// `permute_conv_rows` padding row, excluded via the validity mask).
+pub fn weights_bitplane_eligible(w: &[i32]) -> bool {
+    w.iter().all(|&v| v == 0 || (v.abs() <= W_LEVEL_MAX && (v & 1) != 0))
+}
+
+/// [`select_gemm`] with injected [`Caps`] — lets tests pin the
+/// selection table without depending on the host CPU.
+pub fn select_gemm_with(
+    caps: Caps,
+    r_in: Option<u32>,
+    rows: usize,
+    n_out: usize,
+    n_vec: usize,
+    w: &[i32],
+) -> KernelPath {
+    let bitplane_ok = r_in.is_some_and(|r| (1..=BITPLANE_MAX_RIN).contains(&r))
+        && n_vec >= BITPLANE_MIN_VECS
+        && rows >= BITPLANE_MIN_ROWS
+        && weights_bitplane_eligible(w);
+    if bitplane_ok {
+        return KernelPath::BitPlane;
+    }
+    if n_out >= I32_LANES {
+        if caps.avx2 {
+            return KernelPath::Avx2;
+        }
+        if caps.neon {
+            return KernelPath::Neon;
+        }
+        return KernelPath::Portable;
+    }
+    KernelPath::Scalar
+}
+
+/// Pick the i32 gemm kernel for a call shape (see the module-level
+/// selection table). `r_in = None` disables the bit-plane tier.
+pub fn select_gemm(
+    r_in: Option<u32>,
+    rows: usize,
+    n_out: usize,
+    n_vec: usize,
+    w: &[i32],
+) -> KernelPath {
+    select_gemm_with(caps(), r_in, rows, n_out, n_vec, w)
+}
+
+// ---------------------------------------------------------------------------
+// Dispatching i32 gemm
+// ---------------------------------------------------------------------------
+
+/// Precision-aware drop-in for [`gemm::matmul_i32`]:
+/// `C[v][o] = Σ_r a[v·rows + r] · w[r·n_out + o]`, bit-identical to the
+/// scalar kernel on every path.
+///
+/// # Bit-plane math (`r_in ≤ 2` tier)
+///
+/// With `M = 2^r_in − 1`, an antipodal input factor decomposes over the
+/// bits of its level `q` as `s = 2q − M = Σ_b 2^b (2q_b − 1)`, and a 4b
+/// antipodal weight over the bits of `k = (w + 15)/2` as
+/// `w = Σ_j 2^j (2k_j − 1)`. Each `(b, j)` pair is a ±1 dot product,
+/// which over packed `u64` masks `A_b`, `C_j` and a validity mask `Z`
+/// (1 for rows with a nonzero weight, 0 for padding) is
+/// `pop(Z) − 2·pop((A_b ⊕ C_j) & Z)`. Summing with the binary weights:
+///
+/// ```text
+/// dot[o] = 15 · M · pop(Z[o]) − 2 · Σ_b 2^b Σ_j 2^j pop((A_b ⊕ C_j[o]) & Z[o])
+/// ```
+///
+/// — `r_in · 4` popcount passes per output instead of `rows`
+/// multiply-adds, i.e. cost proportional to the input bit-width,
+/// mirroring the macro's input-serial accumulation. All quantities are
+/// exact integers, so the result equals the scalar i32 kernel bit for
+/// bit. A vector whose entries are not valid antipodal factors for
+/// `r_in` (wrong parity or out of range) silently falls back to the
+/// scalar kernel for that vector only.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_i32(
+    a: &[i32],
+    w: &[i32],
+    n_vec: usize,
+    rows: usize,
+    n_out: usize,
+    workers: usize,
+    r_in: Option<u32>,
+) -> Vec<i32> {
+    assert_eq!(a.len(), n_vec * rows);
+    assert_eq!(w.len(), rows * n_out);
+    let path = select_gemm(r_in, rows, n_out, n_vec, w);
+    matmul_i32_path(path, a, w, n_vec, rows, n_out, workers, r_in)
+}
+
+/// Run the i32 gemm through one specific [`KernelPath`], or `None` if
+/// that path cannot execute here (missing ISA, or `BitPlane` with
+/// ineligible weights / no `r_in`). Benches and the equivalence tests
+/// use this to pit paths against each other on identical inputs.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_i32_with(
+    path: KernelPath,
+    a: &[i32],
+    w: &[i32],
+    n_vec: usize,
+    rows: usize,
+    n_out: usize,
+    workers: usize,
+    r_in: Option<u32>,
+) -> Option<Vec<i32>> {
+    assert_eq!(a.len(), n_vec * rows);
+    assert_eq!(w.len(), rows * n_out);
+    if !path_available(path) {
+        return None;
+    }
+    if path == KernelPath::BitPlane {
+        let r = r_in?;
+        if !(1..=BITPLANE_RIN_LIMIT).contains(&r) || !weights_bitplane_eligible(w) {
+            return None;
+        }
+    }
+    Some(matmul_i32_path(path, a, w, n_vec, rows, n_out, workers, r_in))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn matmul_i32_path(
+    path: KernelPath,
+    a: &[i32],
+    w: &[i32],
+    n_vec: usize,
+    rows: usize,
+    n_out: usize,
+    workers: usize,
+    r_in: Option<u32>,
+) -> Vec<i32> {
+    let mut out = vec![0i32; n_vec * n_out];
+    if n_vec == 0 || n_out == 0 {
+        return out;
+    }
+    // Weight-side preparation is done once and shared by every worker
+    // chunk, so bit-plane packing is amortized across the whole batch.
+    let (path, prep) = prepare_gemm(path, w, rows, n_out, n_vec, r_in);
+    let workers = workers.clamp(1, n_vec);
+    let chunk_vecs = n_vec.div_ceil(workers);
+    if workers == 1 {
+        run_gemm_chunk(path, prep.as_ref(), a, w, rows, n_out, &mut out);
+        return out;
+    }
+    let prep_ref = prep.as_ref();
+    std::thread::scope(|s| {
+        for (a_chunk, out_chunk) in a
+            .chunks(chunk_vecs * rows)
+            .zip(out.chunks_mut(chunk_vecs * n_out))
+        {
+            s.spawn(move || run_gemm_chunk(path, prep_ref, a_chunk, w, rows, n_out, out_chunk));
+        }
+    });
+    out
+}
+
+/// Resolve the weight-side state for `path`; demotes `BitPlane` to the
+/// best SIMD tier if packing turns out impossible (defensive — the
+/// selector already checked eligibility).
+fn prepare_gemm(
+    path: KernelPath,
+    w: &[i32],
+    rows: usize,
+    n_out: usize,
+    n_vec: usize,
+    r_in: Option<u32>,
+) -> (KernelPath, Option<BitPlanes>) {
+    if path != KernelPath::BitPlane {
+        return (path, None);
+    }
+    match r_in.and_then(|r| BitPlanes::pack(w, rows, n_out, r)) {
+        Some(bp) => (KernelPath::BitPlane, Some(bp)),
+        None => (select_gemm(None, rows, n_out, n_vec, w), None),
+    }
+}
+
+fn run_gemm_chunk(
+    path: KernelPath,
+    bp: Option<&BitPlanes>,
+    a: &[i32],
+    w: &[i32],
+    rows: usize,
+    n_out: usize,
+    out: &mut [i32],
+) {
+    match path {
+        KernelPath::Scalar => gemm::matmul_i32_chunk(a, w, rows, n_out, out),
+        KernelPath::Portable => portable_i32_chunk(a, w, rows, n_out, out),
+        KernelPath::BitPlane => {
+            bitplane_chunk(bp.expect("bit-plane prep missing"), a, w, rows, n_out, out)
+        }
+        #[cfg(all(feature = "simd", any(target_arch = "x86", target_arch = "x86_64")))]
+        // SAFETY: `Avx2` is only selected (or accepted by
+        // `path_available`) after `is_x86_feature_detected!("avx2")`.
+        KernelPath::Avx2 => unsafe { x86::matmul_i32_chunk_avx2(a, w, rows, n_out, out) },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        // SAFETY: `Neon` is only selected after runtime NEON detection.
+        KernelPath::Neon => unsafe { arm::matmul_i32_chunk_neon(a, w, rows, n_out, out) },
+        #[cfg(not(all(feature = "simd", any(target_arch = "x86", target_arch = "x86_64"))))]
+        KernelPath::Avx2 => portable_i32_chunk(a, w, rows, n_out, out),
+        #[cfg(not(all(feature = "simd", target_arch = "aarch64")))]
+        KernelPath::Neon => portable_i32_chunk(a, w, rows, n_out, out),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Portable lane-blocked i32 kernel
+// ---------------------------------------------------------------------------
+
+/// Lane-blocked i32 gemm: 8-wide output tiles × 4 batch vectors, the
+/// shape LLVM autovectorizes into full-width vector FMAs on any target
+/// (and the exact shape the explicit AVX2 kernel hand-writes).
+/// i32 addition is associative, so this is bit-identical to scalar.
+fn portable_i32_chunk(a: &[i32], w: &[i32], rows: usize, n_out: usize, out: &mut [i32]) {
+    let n_vec = a.len() / rows;
+    let mut v = 0;
+    while v + 4 <= n_vec {
+        portable_i32_vecs::<4>(a, w, rows, n_out, v, out);
+        v += 4;
+    }
+    while v < n_vec {
+        portable_i32_vecs::<1>(a, w, rows, n_out, v, out);
+        v += 1;
+    }
+}
+
+fn portable_i32_vecs<const B: usize>(
+    a: &[i32],
+    w: &[i32],
+    rows: usize,
+    n_out: usize,
+    v: usize,
+    out: &mut [i32],
+) {
+    let mut oc = 0;
+    while oc + I32_LANES <= n_out {
+        let mut acc = [[0i32; I32_LANES]; B];
+        for r in 0..rows {
+            let wv: &[i32; I32_LANES] =
+                w[r * n_out + oc..r * n_out + oc + I32_LANES].try_into().unwrap();
+            for (b, acc_b) in acc.iter_mut().enumerate() {
+                let s = a[(v + b) * rows + r];
+                for (lane, &wl) in acc_b.iter_mut().zip(wv.iter()) {
+                    *lane += s * wl;
+                }
+            }
+        }
+        for (b, acc_b) in acc.iter().enumerate() {
+            out[(v + b) * n_out + oc..(v + b) * n_out + oc + I32_LANES].copy_from_slice(acc_b);
+        }
+        oc += I32_LANES;
+    }
+    // Output remainder (n_out % 8): plain scalar accumulation.
+    for b in 0..B {
+        for o in oc..n_out {
+            let mut acc = 0i32;
+            for r in 0..rows {
+                acc += a[(v + b) * rows + r] * w[r * n_out + o];
+            }
+            out[(v + b) * n_out + o] = acc;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Explicit ISA kernels (feature = "simd")
+// ---------------------------------------------------------------------------
+
+#[cfg(all(feature = "simd", any(target_arch = "x86", target_arch = "x86_64")))]
+mod x86 {
+    #[cfg(target_arch = "x86")]
+    use std::arch::x86::*;
+    #[cfg(target_arch = "x86_64")]
+    use std::arch::x86_64::*;
+
+    /// AVX2 i32 gemm chunk: 8-lane `__m256i` output tiles × 4 batch
+    /// vectors (4 accumulator registers per weight pass).
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn matmul_i32_chunk_avx2(
+        a: &[i32],
+        w: &[i32],
+        rows: usize,
+        n_out: usize,
+        out: &mut [i32],
+    ) {
+        let n_vec = a.len() / rows;
+        let mut v = 0;
+        while v + 4 <= n_vec {
+            vecs_avx2::<4>(a, w, rows, n_out, v, out);
+            v += 4;
+        }
+        while v < n_vec {
+            vecs_avx2::<1>(a, w, rows, n_out, v, out);
+            v += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn vecs_avx2<const B: usize>(
+        a: &[i32],
+        w: &[i32],
+        rows: usize,
+        n_out: usize,
+        v: usize,
+        out: &mut [i32],
+    ) {
+        let mut oc = 0;
+        while oc + 8 <= n_out {
+            let mut acc = [_mm256_setzero_si256(); B];
+            for r in 0..rows {
+                let wv = _mm256_loadu_si256(w.as_ptr().add(r * n_out + oc) as *const __m256i);
+                for (b, acc_b) in acc.iter_mut().enumerate() {
+                    let s = _mm256_set1_epi32(a[(v + b) * rows + r]);
+                    *acc_b = _mm256_add_epi32(*acc_b, _mm256_mullo_epi32(s, wv));
+                }
+            }
+            for (b, acc_b) in acc.iter().enumerate() {
+                _mm256_storeu_si256(
+                    out.as_mut_ptr().add((v + b) * n_out + oc) as *mut __m256i,
+                    *acc_b,
+                );
+            }
+            oc += 8;
+        }
+        for b in 0..B {
+            for o in oc..n_out {
+                let mut acc = 0i32;
+                for r in 0..rows {
+                    acc = acc.wrapping_add(a[(v + b) * rows + r].wrapping_mul(w[r * n_out + o]));
+                }
+                out[(v + b) * n_out + o] = acc;
+            }
+        }
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+mod arm {
+    use std::arch::aarch64::*;
+
+    /// NEON i32 gemm chunk: two 4-lane `int32x4_t` tiles (8 outputs)
+    /// × 4 batch vectors per weight pass.
+    ///
+    /// # Safety
+    /// Caller must have verified NEON support at runtime.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn matmul_i32_chunk_neon(
+        a: &[i32],
+        w: &[i32],
+        rows: usize,
+        n_out: usize,
+        out: &mut [i32],
+    ) {
+        let n_vec = a.len() / rows;
+        let mut v = 0;
+        while v + 4 <= n_vec {
+            vecs_neon::<4>(a, w, rows, n_out, v, out);
+            v += 4;
+        }
+        while v < n_vec {
+            vecs_neon::<1>(a, w, rows, n_out, v, out);
+            v += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn vecs_neon<const B: usize>(
+        a: &[i32],
+        w: &[i32],
+        rows: usize,
+        n_out: usize,
+        v: usize,
+        out: &mut [i32],
+    ) {
+        let mut oc = 0;
+        while oc + 8 <= n_out {
+            let mut lo = [vdupq_n_s32(0); B];
+            let mut hi = [vdupq_n_s32(0); B];
+            for r in 0..rows {
+                let wp = w.as_ptr().add(r * n_out + oc);
+                let wlo = vld1q_s32(wp);
+                let whi = vld1q_s32(wp.add(4));
+                for b in 0..B {
+                    let s = vdupq_n_s32(a[(v + b) * rows + r]);
+                    lo[b] = vmlaq_s32(lo[b], s, wlo);
+                    hi[b] = vmlaq_s32(hi[b], s, whi);
+                }
+            }
+            for b in 0..B {
+                let op = out.as_mut_ptr().add((v + b) * n_out + oc);
+                vst1q_s32(op, lo[b]);
+                vst1q_s32(op.add(4), hi[b]);
+            }
+            oc += 8;
+        }
+        for b in 0..B {
+            for o in oc..n_out {
+                let mut acc = 0i32;
+                for r in 0..rows {
+                    acc = acc.wrapping_add(a[(v + b) * rows + r].wrapping_mul(w[r * n_out + o]));
+                }
+                out[(v + b) * n_out + o] = acc;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bit-plane engine
+// ---------------------------------------------------------------------------
+
+/// Packed weight bit-planes for one `[rows × n_out]` weight matrix:
+/// per output, four `u64` mask arrays (one per weight bit of
+/// `k = (w+15)/2`) plus a validity mask `Z` that excludes zero-weight
+/// padding rows and the unused tail of the last word.
+struct BitPlanes {
+    r_in: u32,
+    words: usize,
+    /// `[n_out × W_PLANES × words]`, plane-major per output.
+    planes: Vec<u64>,
+    /// `[n_out × words]` validity masks.
+    zmask: Vec<u64>,
+    /// `pop(Z[o])` per output.
+    zpop: Vec<i32>,
+}
+
+impl BitPlanes {
+    fn pack(w: &[i32], rows: usize, n_out: usize, r_in: u32) -> Option<Self> {
+        if !(1..=BITPLANE_RIN_LIMIT).contains(&r_in) || !weights_bitplane_eligible(w) {
+            return None;
+        }
+        let words = rows.div_ceil(64);
+        let mut planes = vec![0u64; n_out * W_PLANES * words];
+        let mut zmask = vec![0u64; n_out * words];
+        for r in 0..rows {
+            let (wd, bit) = (r / 64, 1u64 << (r % 64));
+            for (o, &v) in w[r * n_out..(r + 1) * n_out].iter().enumerate() {
+                if v == 0 {
+                    continue;
+                }
+                zmask[o * words + wd] |= bit;
+                let k = ((v + W_LEVEL_MAX) / 2) as u64;
+                let base = (o * W_PLANES) * words + wd;
+                for j in 0..W_PLANES {
+                    if (k >> j) & 1 == 1 {
+                        planes[base + j * words] |= bit;
+                    }
+                }
+            }
+        }
+        let zpop = zmask
+            .chunks(words.max(1))
+            .map(|zs| zs.iter().map(|z| z.count_ones() as i32).sum())
+            .collect();
+        Some(Self { r_in, words, planes, zmask, zpop })
+    }
+}
+
+/// Pack one vector of antipodal factors into `r_in` bit-plane masks.
+/// Returns `false` (leaving `planes` partially filled) if any entry is
+/// not a valid factor `2q − M` with `q ∈ [0, M]` — the caller then
+/// falls back to the scalar kernel for that vector.
+fn pack_input_planes(sx: &[i32], r_in: u32, words: usize, planes: &mut [u64]) -> bool {
+    let m = (1i32 << r_in) - 1;
+    for (r, &s) in sx.iter().enumerate() {
+        let q2 = s + m; // = 2q for a valid antipodal factor
+        if q2 < 0 || q2 > 2 * m || (q2 & 1) != 0 {
+            return false;
+        }
+        let q = (q2 >> 1) as u64;
+        let (wd, bit) = (r / 64, 1u64 << (r % 64));
+        for (b, plane) in planes.chunks_exact_mut(words).enumerate() {
+            if (q >> b) & 1 == 1 {
+                plane[wd] |= bit;
+            }
+        }
+    }
+    true
+}
+
+fn bitplane_chunk(
+    bp: &BitPlanes,
+    a: &[i32],
+    w: &[i32],
+    rows: usize,
+    n_out: usize,
+    out: &mut [i32],
+) {
+    if rows == 0 {
+        return;
+    }
+    let words = bp.words;
+    let r_bits = bp.r_in as usize;
+    let base = W_LEVEL_MAX * ((1i32 << bp.r_in) - 1); // 15 · M
+    let mut a_planes = vec![0u64; r_bits * words];
+    for (sx, bo) in a.chunks_exact(rows).zip(out.chunks_exact_mut(n_out)) {
+        a_planes.iter_mut().for_each(|p| *p = 0);
+        if !pack_input_planes(sx, bp.r_in, words, &mut a_planes) {
+            // Not antipodal factors for this r_in — scalar fallback for
+            // this vector only (bo is still all zeros; the scalar chunk
+            // accumulates into it).
+            gemm::matmul_i32_chunk(sx, w, rows, n_out, bo);
+            continue;
+        }
+        for (o, slot) in bo.iter_mut().enumerate() {
+            let z = &bp.zmask[o * words..(o + 1) * words];
+            let mut weighted = 0i32;
+            for (b, ab) in a_planes.chunks_exact(words).enumerate() {
+                let mut per_bit = 0i32;
+                for j in 0..W_PLANES {
+                    let cj = &bp.planes[(o * W_PLANES + j) * words..(o * W_PLANES + j + 1) * words];
+                    let mut pc = 0u32;
+                    for ((aw, cw), zw) in ab.iter().zip(cj.iter()).zip(z.iter()) {
+                        pc += ((aw ^ cw) & zw).count_ones();
+                    }
+                    per_bit += (pc as i32) << j;
+                }
+                weighted += per_bit << b;
+            }
+            // dot = 15·M·pop(Z) − 2·Σ_b 2^b Σ_j 2^j pop((A_b ⊕ C_j) & Z)
+            *slot = base * bp.zpop[o] - 2 * weighted;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Direct (streaming) conv3x3
+// ---------------------------------------------------------------------------
+
+/// Drop-in for [`gemm::conv3x3_batch`] that never materializes the
+/// whole-batch `[(img·oh·ow) × rows]` im2col buffer: each worker
+/// re-assembles one image's signed rows into a scratch buffer
+/// ([`gemm::conv3x3_signed_rows_into`]) and runs the selected kernel on
+/// it, so peak extra memory is `workers × oh·ow·rows` i32 instead of
+/// `n_img × oh·ow·rows`. Weight-side preparation (bit-plane packing) is
+/// still done once for the whole batch. Bit-identical to
+/// `conv3x3_batch` by the kernel equivalence contract.
+#[allow(clippy::too_many_arguments)]
+pub fn conv3x3_direct(
+    images_q: &[Vec<u8>],
+    c: usize,
+    h: usize,
+    w: usize,
+    stride: usize,
+    r_in: u32,
+    w_phys: &[i32],
+    rows: usize,
+    n_out: usize,
+    workers: usize,
+) -> (Vec<i32>, usize, usize) {
+    assert_eq!(w_phys.len(), rows * n_out);
+    if images_q.is_empty() {
+        return (Vec::new(), 0, 0);
+    }
+    let oh = h.div_ceil(stride);
+    let ow = w.div_ceil(stride);
+    let n_pix = oh * ow;
+    let n_img = images_q.len();
+    let mut out = vec![0i32; n_img * n_pix * n_out];
+    if n_out == 0 || n_pix == 0 {
+        return (out, oh, ow);
+    }
+    let selected = select_gemm(Some(r_in), rows, n_out, n_img * n_pix, w_phys);
+    let (path, prep) = prepare_gemm(selected, w_phys, rows, n_out, n_img * n_pix, Some(r_in));
+    let prep_ref = prep.as_ref();
+    let run_images = |imgs: &[Vec<u8>], out_chunk: &mut [i32]| {
+        let mut sx = Vec::with_capacity(n_pix * rows);
+        for (i, img) in imgs.iter().enumerate() {
+            sx.clear();
+            let dims = gemm::conv3x3_signed_rows_into(img, c, h, w, stride, r_in, rows, &mut sx);
+            debug_assert_eq!(dims, (oh, ow));
+            run_gemm_chunk(
+                path,
+                prep_ref,
+                &sx,
+                w_phys,
+                rows,
+                n_out,
+                &mut out_chunk[i * n_pix * n_out..(i + 1) * n_pix * n_out],
+            );
+        }
+    };
+    let workers = workers.clamp(1, n_img);
+    if workers == 1 {
+        run_images(images_q, &mut out);
+        return (out, oh, ow);
+    }
+    let chunk_imgs = n_img.div_ceil(workers);
+    std::thread::scope(|s| {
+        for (imgs, out_chunk) in images_q
+            .chunks(chunk_imgs)
+            .zip(out.chunks_mut(chunk_imgs * n_pix * n_out))
+        {
+            let run_images = &run_images;
+            s.spawn(move || run_images(imgs, out_chunk));
+        }
+    });
+    (out, oh, ow)
+}
+
+// ---------------------------------------------------------------------------
+// f64 rowdot (order-preserving lanes)
+// ---------------------------------------------------------------------------
+
+/// Drop-in for [`gemm::rowdot_f64`] with a lane-blocked fast path:
+/// weights are transposed into `[k × 4]` tiles and each of 4 lanes owns
+/// one *output*, accumulating ascending-`k` — the identical
+/// floating-point operation sequence as the scalar loop per output, so
+/// results are bit-identical (float addition is never re-associated;
+/// the lanes merely run four independent scalar recurrences side by
+/// side, which is also why it beats the scalar kernel: the serial
+/// add-latency chain stops being the bottleneck).
+pub fn rowdot_f64(
+    x: &[f64],
+    w: &[f64],
+    n_vec: usize,
+    k_dim: usize,
+    n_out: usize,
+    workers: usize,
+) -> Vec<f64> {
+    assert_eq!(x.len(), n_vec * k_dim);
+    assert_eq!(w.len(), n_out * k_dim);
+    match select_rowdot(n_vec, k_dim, n_out) {
+        KernelPath::Scalar => gemm::rowdot_f64(x, w, n_vec, k_dim, n_out, workers),
+        _ => rowdot_lanes(x, w, n_vec, k_dim, n_out, workers),
+    }
+}
+
+/// Run the f64 rowdot through one specific path (`Scalar` or
+/// `Portable`); `None` for paths that have no f64 kernel.
+pub fn rowdot_f64_with(
+    path: KernelPath,
+    x: &[f64],
+    w: &[f64],
+    n_vec: usize,
+    k_dim: usize,
+    n_out: usize,
+    workers: usize,
+) -> Option<Vec<f64>> {
+    assert_eq!(x.len(), n_vec * k_dim);
+    assert_eq!(w.len(), n_out * k_dim);
+    match path {
+        KernelPath::Scalar => Some(gemm::rowdot_f64(x, w, n_vec, k_dim, n_out, workers)),
+        KernelPath::Portable => {
+            if n_vec == 0 || n_out == 0 {
+                return Some(vec![0f64; n_vec * n_out]);
+            }
+            Some(rowdot_lanes(x, w, n_vec, k_dim, n_out, workers))
+        }
+        _ => None,
+    }
+}
+
+fn select_rowdot(n_vec: usize, k_dim: usize, n_out: usize) -> KernelPath {
+    if n_vec > 0 && n_out >= F64_LANES && k_dim >= 4 {
+        KernelPath::Portable
+    } else {
+        KernelPath::Scalar
+    }
+}
+
+fn rowdot_lanes(
+    x: &[f64],
+    w: &[f64],
+    n_vec: usize,
+    k_dim: usize,
+    n_out: usize,
+    workers: usize,
+) -> Vec<f64> {
+    // Transpose whole output tiles once: wt[t][k][lane] = w[t·4+lane][k].
+    let n_tiles = n_out / F64_LANES;
+    let mut wt = vec![0f64; n_tiles * k_dim * F64_LANES];
+    for t in 0..n_tiles {
+        let tile = &mut wt[t * k_dim * F64_LANES..(t + 1) * k_dim * F64_LANES];
+        for l in 0..F64_LANES {
+            let wo = &w[(t * F64_LANES + l) * k_dim..(t * F64_LANES + l + 1) * k_dim];
+            for (k, &wv) in wo.iter().enumerate() {
+                tile[k * F64_LANES + l] = wv;
+            }
+        }
+    }
+    let mut out = vec![0f64; n_vec * n_out];
+    let workers = workers.clamp(1, n_vec);
+    let chunk_vecs = n_vec.div_ceil(workers);
+    if workers == 1 {
+        rowdot_lanes_chunk(x, w, &wt, k_dim, n_out, &mut out);
+        return out;
+    }
+    let wt_ref = &wt;
+    std::thread::scope(|s| {
+        for (x_chunk, out_chunk) in x
+            .chunks(chunk_vecs * k_dim)
+            .zip(out.chunks_mut(chunk_vecs * n_out))
+        {
+            s.spawn(move || rowdot_lanes_chunk(x_chunk, w, wt_ref, k_dim, n_out, out_chunk));
+        }
+    });
+    out
+}
+
+fn rowdot_lanes_chunk(
+    x: &[f64],
+    w: &[f64],
+    wt: &[f64],
+    k_dim: usize,
+    n_out: usize,
+    out: &mut [f64],
+) {
+    let n_vec = x.len() / k_dim;
+    let n_tiles = n_out / F64_LANES;
+    for v in 0..n_vec {
+        let xv = &x[v * k_dim..(v + 1) * k_dim];
+        let bo = &mut out[v * n_out..(v + 1) * n_out];
+        for t in 0..n_tiles {
+            let tile = &wt[t * k_dim * F64_LANES..(t + 1) * k_dim * F64_LANES];
+            let mut acc = [0f64; F64_LANES];
+            for (xk, wk) in xv.iter().zip(tile.chunks_exact(F64_LANES)) {
+                for (lane, &wv) in acc.iter_mut().zip(wk.iter()) {
+                    *lane += *xk * wv;
+                }
+            }
+            bo[t * F64_LANES..(t + 1) * F64_LANES].copy_from_slice(&acc);
+        }
+        // Output remainder: the plain scalar ascending-k loop.
+        for (o, slot) in bo.iter_mut().enumerate().skip(n_tiles * F64_LANES) {
+            let wo = &w[o * k_dim..(o + 1) * k_dim];
+            let mut dot = 0f64;
+            for (xk, wv) in xv.iter().zip(wo.iter()) {
+                dot += xk * wv;
+            }
+            *slot = dot;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exact-integer fast path helpers (trainer / graph forward)
+// ---------------------------------------------------------------------------
+
+/// Convert a quantized weight matrix stored one row per *output*
+/// (`[n_out × k_dim]` f32, the training layout) into the kernel's
+/// row-major `[k_dim × n_out]` i32 layout. Returns `None` if any weight
+/// is non-integral or implausibly large — the caller then keeps the f64
+/// rowdot path. Also returns `max |w|` for the overflow bound.
+pub fn quantized_rowmajor_i32(w_q: &[f32], n_out: usize, k_dim: usize) -> Option<(Vec<i32>, i32)> {
+    assert_eq!(w_q.len(), n_out * k_dim);
+    let mut wi = vec![0i32; k_dim * n_out];
+    let mut wmax = 0i32;
+    for (o, row) in w_q.chunks_exact(k_dim.max(1)).enumerate() {
+        for (k, &v) in row.iter().enumerate() {
+            if v != v.trunc() || v.abs() > 1_048_576.0 {
+                return None;
+            }
+            let vi = v as i32;
+            wmax = wmax.max(vi.abs());
+            wi[k * n_out + o] = vi;
+        }
+    }
+    Some((wi, wmax))
+}
+
+/// Whether integer dots for this shape are exact in both i32 and f64:
+/// `k_dim · (2^r_in − 1) · max|w| ≤ i32::MAX` bounds every partial sum,
+/// and anything below 2³¹ is trivially exact in f64 — so computing the
+/// dots through the i32 kernels and casting is bit-identical to the
+/// f64 rowdot on the same integers.
+pub fn quantized_dot_fits_i32(k_dim: usize, r_in: u32, w_abs_max: i32) -> bool {
+    r_in <= 16 && (k_dim as i64) * ((1i64 << r_in) - 1) * (w_abs_max as i64) <= i32::MAX as i64
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic scoped-thread chunk map
+// ---------------------------------------------------------------------------
+
+/// Split `0..n` into fixed-size `chunk` ranges and map `f` over them on
+/// scoped worker threads, returning the per-chunk results **in chunk
+/// order**. The chunk grid depends only on `(n, chunk)` — never on
+/// `workers` — so any reduction over the returned Vec is bit-identical
+/// across worker counts. This is the helper the trainer's parallel
+/// backward pass uses to keep float gradient accumulation
+/// deterministic.
+pub fn scoped_chunk_map<T, F>(n: usize, chunk: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, std::ops::Range<usize>) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let chunk = chunk.max(1);
+    let n_chunks = n.div_ceil(chunk);
+    let ranges: Vec<std::ops::Range<usize>> =
+        (0..n_chunks).map(|i| i * chunk..((i + 1) * chunk).min(n)).collect();
+    let workers = workers.clamp(1, n_chunks);
+    if workers == 1 {
+        return ranges.into_iter().enumerate().map(|(i, r)| f(i, r)).collect();
+    }
+    let mut slots: Vec<Option<T>> = (0..n_chunks).map(|_| None).collect();
+    let stride = n_chunks.div_ceil(workers);
+    let (ranges_ref, f_ref) = (&ranges, &f);
+    std::thread::scope(|s| {
+        for (wi, slot_chunk) in slots.chunks_mut(stride).enumerate() {
+            s.spawn(move || {
+                for (j, slot) in slot_chunk.iter_mut().enumerate() {
+                    let idx = wi * stride + j;
+                    *slot = Some(f_ref(idx, ranges_ref[idx].clone()));
+                }
+            });
+        }
+    });
+    slots.into_iter().map(|o| o.expect("chunk result missing")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitplane_hand_example() {
+        // r_in = 1 (M = 1), rows = 2, w = [3, −5], factors s = [+1, −1]
+        // (q = [1, 0]): dot = 1·3 + (−1)·(−5) = 8.
+        let w = vec![3i32, -5];
+        let a = vec![1i32, -1];
+        let got = matmul_i32_with(KernelPath::BitPlane, &a, &w, 1, 2, 1, 1, Some(1)).unwrap();
+        assert_eq!(got, vec![8]);
+    }
+
+    #[test]
+    fn bitplane_rejects_even_weights_and_missing_rin() {
+        let w = vec![2i32, 3]; // 2 is not an odd antipodal level
+        let a = vec![1i32, -1];
+        assert!(matmul_i32_with(KernelPath::BitPlane, &a, &w, 1, 2, 1, 1, Some(1)).is_none());
+        let w_ok = vec![3i32, -5];
+        assert!(matmul_i32_with(KernelPath::BitPlane, &a, &w_ok, 1, 2, 1, 1, None).is_none());
+    }
+
+    #[test]
+    fn selection_table_with_injected_caps() {
+        let none = Caps::default();
+        let avx = Caps { avx2: true, neon: false };
+        let w_ok = vec![1i32; 64 * 16];
+        let w_bad = vec![2i32; 64 * 16];
+        // Bit-plane tier: low r_in + eligible weights + big enough call.
+        assert_eq!(select_gemm_with(none, Some(1), 64, 16, 8, &w_ok), KernelPath::BitPlane);
+        assert_eq!(select_gemm_with(avx, Some(2), 64, 16, 8, &w_ok), KernelPath::BitPlane);
+        // Ineligible weights or high precision → SIMD tier.
+        assert_eq!(select_gemm_with(none, Some(1), 64, 16, 8, &w_bad), KernelPath::Portable);
+        assert_eq!(select_gemm_with(avx, Some(8), 64, 16, 8, &w_ok), KernelPath::Avx2);
+        // Too-small calls stay scalar / skip bit-plane.
+        assert_eq!(select_gemm_with(none, Some(1), 64, 4, 8, &w_ok[..64 * 4]), KernelPath::Scalar);
+        assert_eq!(select_gemm_with(none, Some(1), 64, 16, 2, &w_ok), KernelPath::Portable);
+        assert_eq!(select_gemm_with(none, None, 64, 16, 8, &w_ok), KernelPath::Portable);
+    }
+
+    #[test]
+    fn scoped_chunk_map_is_worker_invariant() {
+        let f = |i: usize, r: std::ops::Range<usize>| (i, r.start, r.end);
+        let one = scoped_chunk_map(23, 8, 1, f);
+        for workers in [2usize, 3, 7, 16] {
+            assert_eq!(scoped_chunk_map(23, 8, workers, f), one);
+        }
+        assert_eq!(one, vec![(0, 0, 8), (1, 8, 16), (2, 16, 23)]);
+        assert!(scoped_chunk_map(0, 8, 4, f).is_empty());
+    }
+
+    #[test]
+    fn quantized_rowmajor_rejects_non_integral() {
+        assert!(quantized_rowmajor_i32(&[1.0, -3.0, 0.5, 2.0], 2, 2).is_none());
+        let (wi, wmax) = quantized_rowmajor_i32(&[1.0, -3.0, 15.0, 0.0], 2, 2).unwrap();
+        // [n_out × k] row-per-output → row-major [k × n_out].
+        assert_eq!(wi, vec![1, 15, -3, 0]);
+        assert_eq!(wmax, 15);
+        assert!(quantized_dot_fits_i32(1152, 8, 15));
+        assert!(!quantized_dot_fits_i32(1 << 20, 16, 1 << 16));
+    }
+}

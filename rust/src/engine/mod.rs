@@ -6,8 +6,14 @@
 //! the software equivalent for the reproduction's hot path, replacing the
 //! image-by-image, dot-by-dot inference walk:
 //!
-//! * [`gemm`] — blocked batch kernels (one weight pass per four batch
-//!   vectors, split across worker threads);
+//! * [`gemm`] — the scalar reference kernels (one weight pass per four
+//!   batch vectors, split across worker threads);
+//! * [`kernels`] — precision/ISA-adaptive dispatch over the gemm/conv
+//!   hot path: portable-SIMD and `std::arch` AVX2/NEON tiles (behind
+//!   the `simd` feature with runtime detection), a bit-plane popcount
+//!   engine at `r_in ∈ {1,2}` that makes software cost scale with input
+//!   precision like the silicon, and a direct conv3x3 that skips the
+//!   whole-batch im2col buffer — all bit-identical to [`gemm`];
 //! * [`ideal`] — [`BatchIdeal`]: whole-batch closed-form contract
 //!   evaluation, bit-identical to the per-image executor;
 //! * [`analog`] — [`AnalogPool`]: one cloned circuit-behavioral die per
@@ -29,6 +35,7 @@
 pub mod analog;
 pub mod gemm;
 pub mod ideal;
+pub mod kernels;
 pub mod noise;
 pub mod queue;
 

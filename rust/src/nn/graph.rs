@@ -17,11 +17,14 @@
 //!    voltage statistics — the same procedure `cim_eval` has always
 //!    applied to dense layers, now the crate's single quantize path.
 //! 2. **Batched execution** ([`MappedGraph::forward_batch`]): the whole
-//!    batch advances one node at a time; `Conv3x3` lowers every im2col
-//!    patch of every image into one signed-factor matrix and runs it
-//!    through [`gemm::rowdot_f64`], then applies the macro contract per
-//!    output (Eq. 7 code, equivalent output noise, offset-binary
-//!    reconstruction `Σ X·W = (dot + M·ΣW)/2`, ABN gain/offset).
+//!    batch advances one node at a time; `Conv3x3` streams every im2col
+//!    patch of every image through the precision/ISA-adaptive
+//!    [`kernels`] dispatch (the quantized weights and signed factors are
+//!    exact small integers, so the i32 kernels — SIMD or bit-plane — are
+//!    bit-identical to [`gemm::rowdot_f64`] on the same data), then
+//!    applies the macro contract per output (Eq. 7 code, equivalent
+//!    output noise, offset-binary reconstruction
+//!    `Σ X·W = (dot + M·ΣW)/2`, ABN gain/offset).
 //!    Dense nodes are the single-pixel special case — bit-identical to
 //!    the historical `cim_eval` path.
 //! 3. **Lowering** ([`Graph::lower`]): emit a physical
@@ -34,7 +37,7 @@
 use crate::config::params::MacroParams;
 use crate::coordinator::manifest::{Kind, Layer, NetworkModel, Pool};
 use crate::dataflow::im2col;
-use crate::engine::gemm;
+use crate::engine::{gemm, kernels};
 use crate::nn::cim_eval::EvalCfg;
 use crate::nn::dataset::Dataset;
 use crate::nn::layers::{chw, Conv3x3, DenseNode, Node, PoolKind};
@@ -685,7 +688,13 @@ fn macro_contract(
 }
 
 /// Batched dense node: quantize + recenter the whole batch, one
-/// [`gemm::rowdot_f64`] pass, then the macro contract per output.
+/// dispatched kernel pass, then the macro contract per output.
+///
+/// The quantized weights are exact small integers and the signed
+/// factors are exact small integers, so (when the overflow bound
+/// holds) the dots are computed through the i32 kernel dispatch —
+/// picking up SIMD and, at `r_in ≤ 2`, the bit-plane engine — and cast
+/// back to f64, bit-identical to the f64 rowdot on the same data.
 fn forward_dense(
     q: &QNode,
     p: &MacroParams,
@@ -700,15 +709,34 @@ fn forward_dense(
     };
     let (m, half, top, lsb, dv_unit) = q.contract_consts(p);
 
-    let sx: Vec<f64> = cur
-        .iter()
-        .map(|&v| {
-            let xq = (v / q.a_scale).round().clamp(0.0, m);
-            (2.0 * xq - m) as f64
-        })
-        .collect();
-    let w64: Vec<f64> = q.w_q.iter().map(|&w| w as f64).collect();
-    let dots = gemm::rowdot_f64(&sx, &w64, n, n_in, n_out, workers);
+    let dots: Vec<f64> = match kernels::quantized_rowmajor_i32(&q.w_q, n_out, n_in)
+        .filter(|&(_, wmax)| kernels::quantized_dot_fits_i32(n_in, q.cfg.r_in, wmax))
+    {
+        Some((wi, _)) => {
+            let sx_i: Vec<i32> = cur
+                .iter()
+                .map(|&v| {
+                    let xq = (v / q.a_scale).round().clamp(0.0, m);
+                    (2.0 * xq - m) as i32
+                })
+                .collect();
+            kernels::matmul_i32(&sx_i, &wi, n, n_in, n_out, workers, Some(q.cfg.r_in))
+                .into_iter()
+                .map(|d| d as f64)
+                .collect()
+        }
+        None => {
+            let sx: Vec<f64> = cur
+                .iter()
+                .map(|&v| {
+                    let xq = (v / q.a_scale).round().clamp(0.0, m);
+                    (2.0 * xq - m) as f64
+                })
+                .collect();
+            let w64: Vec<f64> = q.w_q.iter().map(|&w| w as f64).collect();
+            kernels::rowdot_f64(&sx, &w64, n, n_in, n_out, workers)
+        }
+    };
 
     let mut out = vec![0f32; n * n_out];
     for i in 0..n {
@@ -754,11 +782,36 @@ fn forward_conv(
                 .collect()
         })
         .collect();
-    let (sx_i, oh, ow) = gemm::conv3x3_signed_rows(&images_q, c, h, w, 1, q.cfg.r_in, q.rows);
-    debug_assert_eq!((oh, ow), (h, w));
-    let sx: Vec<f64> = sx_i.iter().map(|&v| v as f64).collect();
-    let w64: Vec<f64> = q.w_q.iter().map(|&w| w as f64).collect();
-    let dots = gemm::rowdot_f64(&sx, &w64, n * n_pix, q.rows, c_out, workers);
+    let dots: Vec<f64> = match kernels::quantized_rowmajor_i32(&q.w_q, c_out, q.rows)
+        .filter(|&(_, wmax)| kernels::quantized_dot_fits_i32(q.rows, q.cfg.r_in, wmax))
+    {
+        Some((wi, _)) => {
+            // Stream the batch through the direct conv kernel: per-worker
+            // im2col scratch, SIMD or bit-plane dots per the dispatch.
+            let (dots_i, oh, ow) = kernels::conv3x3_direct(
+                &images_q,
+                c,
+                h,
+                w,
+                1,
+                q.cfg.r_in,
+                &wi,
+                q.rows,
+                c_out,
+                workers,
+            );
+            debug_assert_eq!((oh, ow), (h, w));
+            dots_i.into_iter().map(|d| d as f64).collect()
+        }
+        None => {
+            let (sx_i, oh, ow) =
+                gemm::conv3x3_signed_rows(&images_q, c, h, w, 1, q.cfg.r_in, q.rows);
+            debug_assert_eq!((oh, ow), (h, w));
+            let sx: Vec<f64> = sx_i.iter().map(|&v| v as f64).collect();
+            let w64: Vec<f64> = q.w_q.iter().map(|&w| w as f64).collect();
+            kernels::rowdot_f64(&sx, &w64, n * n_pix, q.rows, c_out, workers)
+        }
+    };
 
     let mut out = vec![0f32; n * c_out * n_pix];
     for img in 0..n {

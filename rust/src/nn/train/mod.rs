@@ -77,8 +77,10 @@ pub struct TrainConfig {
     /// Remap (activation ranges, γ, α) every this many epochs (0 ⇒ only
     /// once, before the first epoch).
     pub recalibrate_every: usize,
-    /// Worker threads for the batched matmuls (does not affect results —
-    /// the kernels are bit-identical across splits).
+    /// Worker threads for the batched matmuls *and* the chunked backward
+    /// pass (does not affect results — the forward kernels are
+    /// bit-identical across splits, and the backward reduces fixed-size
+    /// image-chunk partials in chunk order regardless of worker count).
     pub workers: usize,
 }
 
@@ -369,10 +371,12 @@ pub fn train_graph(
                     let grads = {
                         let cache = caches[ni].as_ref().unwrap();
                         match &graph.nodes[ni] {
-                            Node::Dense(_) => states[ci].backward_dense(cache, &delta, n),
+                            Node::Dense(_) => {
+                                states[ci].backward_dense(cache, &delta, n, workers)
+                            }
                             Node::Conv3x3(_) => {
                                 let [c, h, w] = chw(&shapes[ni])?;
-                                states[ci].backward_conv(cache, &delta, n, c, h, w)
+                                states[ci].backward_conv(cache, &delta, n, c, h, w, workers)
                             }
                             _ => unreachable!(),
                         }
@@ -583,6 +587,76 @@ mod tests {
             report.epoch_losses
         );
         assert_eq!(report.noise_lsb, 0.25);
+    }
+
+    #[test]
+    fn training_is_bit_identical_across_worker_counts() {
+        // batch 20 → backward chunks of 8+8+4: the fixed chunk grid and
+        // chunk-order reduction make every float result — losses and
+        // final weights — identical no matter how many workers ran.
+        let p = MacroParams::paper();
+        let run = |workers: usize| {
+            let train = toy_task(60, 21);
+            let mut g = mlp_graph(7);
+            let cfg = TrainConfig {
+                epochs: 2,
+                batch: 20,
+                workers,
+                noise: NoiseInjection::Lsb(0.3),
+                ..TrainConfig::default()
+            };
+            let report = train_graph(&mut g, &train, &p, &cfg).unwrap();
+            let weights: Vec<Vec<f32>> = g
+                .nodes
+                .iter()
+                .filter_map(|n| match n {
+                    Node::Dense(d) => Some(d.dense.w.clone()),
+                    _ => None,
+                })
+                .collect();
+            (report.epoch_losses, weights)
+        };
+        let (losses_1, w_1) = run(1);
+        for workers in [2usize, 3, 8] {
+            let (losses_n, w_n) = run(workers);
+            assert_eq!(losses_1, losses_n, "losses diverged at workers={workers}");
+            assert_eq!(w_1, w_n, "weights diverged at workers={workers}");
+        }
+    }
+
+    #[test]
+    fn conv_training_is_bit_identical_across_worker_counts() {
+        let p = MacroParams::paper();
+        let run = |workers: usize| {
+            let mut rng = Rng::new(5);
+            let mut g = Graph::new("train_cnn_workers", vec![1, 6, 6])
+                .with(Node::Conv3x3(Conv3x3::new(1, 4, &mut rng)))
+                .with(Node::Relu)
+                .with(Node::Flatten)
+                .with(Node::Dense(DenseNode::new(Dense::new(4 * 6 * 6, 4, &mut rng))));
+            let train = Dataset::synthetic(24, vec![1, 6, 6], 4, 9, 1, 0.18);
+            let cfg = TrainConfig {
+                epochs: 1,
+                batch: 12,
+                workers,
+                noise: NoiseInjection::Off,
+                ..TrainConfig::default()
+            };
+            let report = train_graph(&mut g, &train, &p, &cfg).unwrap();
+            let conv_w: Vec<f32> = g
+                .nodes
+                .iter()
+                .find_map(|n| match n {
+                    Node::Conv3x3(c) => Some(c.w.clone()),
+                    _ => None,
+                })
+                .unwrap();
+            (report.epoch_losses, conv_w)
+        };
+        let (losses_1, w_1) = run(1);
+        let (losses_4, w_4) = run(4);
+        assert_eq!(losses_1, losses_4);
+        assert_eq!(w_1, w_4);
     }
 
     #[test]

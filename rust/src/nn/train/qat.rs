@@ -25,12 +25,28 @@
 //! Conv nodes replicate the macro's im2col border convention: out-of-map
 //! taps read the mid-rail constant (signed factor +1), not zero — the
 //! network trains against the exact arithmetic it will be lowered onto.
+//!
+//! Both halves are threaded. The forward dots go through the engine's
+//! precision/ISA-adaptive [`kernels`] dispatch (the quantized weights
+//! and signed factors are exact small integers, so the i32 kernels are
+//! bit-identical to the f64 rowdot). The backward pass splits the batch
+//! into **fixed-size** image chunks ([`BACKWARD_IMG_CHUNK`]) via
+//! [`kernels::scoped_chunk_map`] and reduces the per-chunk gradient
+//! partials in chunk order — the chunk grid depends only on the batch
+//! size, never on the worker count, so training results are
+//! bit-identical across worker counts.
 
 use crate::config::params::MacroParams;
-use crate::engine::gemm;
+use crate::engine::{gemm, kernels};
 use crate::nn::graph::{macro_contract_masked, permute_conv_rows, quantize_weights, CimKind, QNode};
 use crate::nn::layers::Node;
 use crate::util::rng::Rng;
+
+/// Fixed image-chunk size of the parallel backward pass. Each chunk's
+/// gradient partial is accumulated image-sequentially and the partials
+/// are reduced in chunk order, so the float result depends only on the
+/// batch size — not on how many workers happened to run the chunks.
+pub(crate) const BACKWARD_IMG_CHUNK: usize = 8;
 
 /// Everything the backward pass needs from one quantized forward.
 pub(crate) struct CimCache {
@@ -144,9 +160,22 @@ impl TrainNode {
         };
         let (m, half, top, lsb, dv_unit) = self.q.contract_consts(p);
         let (x_q, x_tilde, in_mask) = self.quantize_input(x, m);
-        let sx: Vec<f64> = x_q.iter().map(|&q| (2.0 * q - m) as f64).collect();
-        let w64: Vec<f64> = self.q.w_q.iter().map(|&w| w as f64).collect();
-        let dots = gemm::rowdot_f64(&sx, &w64, n, n_in, n_out, workers);
+        let dots: Vec<f64> = match kernels::quantized_rowmajor_i32(&self.q.w_q, n_out, n_in)
+            .filter(|&(_, wmax)| kernels::quantized_dot_fits_i32(n_in, self.q.cfg.r_in, wmax))
+        {
+            Some((wi, _)) => {
+                let sx_i: Vec<i32> = x_q.iter().map(|&q| (2.0 * q - m) as i32).collect();
+                kernels::matmul_i32(&sx_i, &wi, n, n_in, n_out, workers, Some(self.q.cfg.r_in))
+                    .into_iter()
+                    .map(|d| d as f64)
+                    .collect()
+            }
+            None => {
+                let sx: Vec<f64> = x_q.iter().map(|&q| (2.0 * q - m) as f64).collect();
+                let w64: Vec<f64> = self.q.w_q.iter().map(|&w| w as f64).collect();
+                kernels::rowdot_f64(&sx, &w64, n, n_in, n_out, workers)
+            }
+        };
 
         let mut out = vec![0f32; n * n_out];
         let mut out_mask = vec![false; n * n_out];
@@ -170,19 +199,43 @@ impl TrainNode {
         (out, CimCache { x_tilde, in_mask, out_mask })
     }
 
-    /// Dense STE backward: `delta` is `∂L/∂y`, `[n × n_out]`.
-    pub fn backward_dense(&self, cache: &CimCache, delta: &[f32], n: usize) -> NodeGrads {
+    /// Dense STE backward: `delta` is `∂L/∂y`, `[n × n_out]`. Splits the
+    /// batch into fixed [`BACKWARD_IMG_CHUNK`]-image chunks across
+    /// `workers` threads; results are bit-identical for every worker
+    /// count (the chunk grid and reduction order never change).
+    pub fn backward_dense(
+        &self,
+        cache: &CimCache,
+        delta: &[f32],
+        n: usize,
+        workers: usize,
+    ) -> NodeGrads {
         let (n_in, n_out) = match self.q.kind {
             CimKind::Dense { n_in, n_out } => (n_in, n_out),
             _ => unreachable!(),
         };
+        let parts = kernels::scoped_chunk_map(n, BACKWARD_IMG_CHUNK, workers, |_, range| {
+            self.backward_dense_range(cache, delta, n_in, n_out, range)
+        });
+        merge_grads(parts, n_out * n_in, n_out)
+    }
+
+    fn backward_dense_range(
+        &self,
+        cache: &CimCache,
+        delta: &[f32],
+        n_in: usize,
+        n_out: usize,
+        range: std::ops::Range<usize>,
+    ) -> NodeGrads {
         let ws = self.q.w_scale;
         let mut gw = vec![0f32; n_out * n_in];
         let mut gb = vec![0f32; n_out];
-        let mut dx = vec![0f32; n * n_in];
-        for i in 0..n {
+        let mut dx = vec![0f32; range.len() * n_in];
+        for i in range.clone() {
             let x_t = &cache.x_tilde[i * n_in..(i + 1) * n_in];
-            let dxi = &mut dx[i * n_in..(i + 1) * n_in];
+            let li = i - range.start;
+            let dxi = &mut dx[li * n_in..(li + 1) * n_in];
             for o in 0..n_out {
                 let d_raw = delta[i * n_out + o];
                 if d_raw == 0.0 {
@@ -233,12 +286,25 @@ impl TrainNode {
             .chunks(in_len)
             .map(|img| img.iter().map(|&q| q as u8).collect())
             .collect();
-        let (sx_i, oh, ow) =
-            gemm::conv3x3_signed_rows(&images_q, c, h, w, 1, self.q.cfg.r_in, self.q.rows);
-        debug_assert_eq!((oh, ow), (h, w));
-        let sx: Vec<f64> = sx_i.iter().map(|&v| v as f64).collect();
-        let w64: Vec<f64> = self.q.w_q.iter().map(|&wv| wv as f64).collect();
-        let dots = gemm::rowdot_f64(&sx, &w64, n * n_pix, self.q.rows, c_out, workers);
+        let rows = self.q.rows;
+        let r_in = self.q.cfg.r_in;
+        let dots: Vec<f64> = match kernels::quantized_rowmajor_i32(&self.q.w_q, c_out, rows)
+            .filter(|&(_, wmax)| kernels::quantized_dot_fits_i32(rows, r_in, wmax))
+        {
+            Some((wi, _)) => {
+                let (dots_i, oh, ow) =
+                    kernels::conv3x3_direct(&images_q, c, h, w, 1, r_in, &wi, rows, c_out, workers);
+                debug_assert_eq!((oh, ow), (h, w));
+                dots_i.into_iter().map(|d| d as f64).collect()
+            }
+            None => {
+                let (sx_i, oh, ow) = gemm::conv3x3_signed_rows(&images_q, c, h, w, 1, r_in, rows);
+                debug_assert_eq!((oh, ow), (h, w));
+                let sx: Vec<f64> = sx_i.iter().map(|&v| v as f64).collect();
+                let w64: Vec<f64> = self.q.w_q.iter().map(|&wv| wv as f64).collect();
+                kernels::rowdot_f64(&sx, &w64, n * n_pix, rows, c_out, workers)
+            }
+        };
 
         let mut out = vec![0f32; n * c_out * n_pix];
         let mut out_mask = vec![false; n * c_out * n_pix];
@@ -261,7 +327,10 @@ impl TrainNode {
 
     /// Conv STE backward. Border taps read the mid-rail constant in the
     /// forward, so they contribute a constant-input term to the weight
-    /// gradient and no input gradient.
+    /// gradient and no input gradient. Parallelized over fixed
+    /// [`BACKWARD_IMG_CHUNK`]-image chunks like
+    /// [`backward_dense`](Self::backward_dense) — bit-identical across
+    /// worker counts.
     #[allow(clippy::too_many_arguments)]
     pub fn backward_conv(
         &self,
@@ -271,6 +340,24 @@ impl TrainNode {
         c: usize,
         h: usize,
         w: usize,
+        workers: usize,
+    ) -> NodeGrads {
+        let c_out = self.q.n_out();
+        let parts = kernels::scoped_chunk_map(n, BACKWARD_IMG_CHUNK, workers, |_, range| {
+            self.backward_conv_range(cache, delta, c, h, w, range)
+        });
+        merge_grads(parts, c_out * 9 * c, c_out)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn backward_conv_range(
+        &self,
+        cache: &CimCache,
+        delta: &[f32],
+        c: usize,
+        h: usize,
+        w: usize,
+        range: std::ops::Range<usize>,
     ) -> NodeGrads {
         let c_out = self.q.n_out();
         let ws = self.q.w_scale;
@@ -280,10 +367,11 @@ impl TrainNode {
         let in_len = c * n_pix;
         let mut gw = vec![0f32; c_out * 9 * c];
         let mut gb = vec![0f32; c_out];
-        let mut dx = vec![0f32; n * in_len];
-        for img in 0..n {
+        let mut dx = vec![0f32; range.len() * in_len];
+        for img in range.clone() {
             let x_t = &cache.x_tilde[img * in_len..(img + 1) * in_len];
-            let dxi = &mut dx[img * in_len..(img + 1) * in_len];
+            let li = img - range.start;
+            let dxi = &mut dx[li * in_len..(li + 1) * in_len];
             let dimg = &delta[img * c_out * n_pix..(img + 1) * c_out * n_pix];
             let mimg = &cache.out_mask[img * c_out * n_pix..(img + 1) * c_out * n_pix];
             for oc in 0..c_out {
@@ -327,4 +415,23 @@ impl TrainNode {
         }
         NodeGrads { gw, gb, dx }
     }
+}
+
+/// Reduce per-chunk gradient partials **in chunk order**. Combined with
+/// the fixed chunk grid of [`kernels::scoped_chunk_map`], this makes
+/// the parallel backward deterministic and worker-count invariant.
+fn merge_grads(parts: Vec<NodeGrads>, w_len: usize, b_len: usize) -> NodeGrads {
+    let mut gw = vec![0f32; w_len];
+    let mut gb = vec![0f32; b_len];
+    let mut dx = Vec::new();
+    for part in parts {
+        for (acc, v) in gw.iter_mut().zip(&part.gw) {
+            *acc += v;
+        }
+        for (acc, v) in gb.iter_mut().zip(&part.gb) {
+            *acc += v;
+        }
+        dx.extend_from_slice(&part.dx);
+    }
+    NodeGrads { gw, gb, dx }
 }

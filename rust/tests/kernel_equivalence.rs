@@ -1,0 +1,327 @@
+//! The kernel-dispatch subsystem against the scalar reference — the
+//! PR's hard contract: every path `engine::kernels` can take (portable
+//! SIMD, explicit AVX2/NEON, bit-plane popcount, direct conv, f64
+//! lanes) must be **bit-identical** to the `engine::gemm` scalar
+//! kernels, across odd shapes, every `n_vec % 4` remainder class,
+//! worker counts, and the full `r_in` grid — in both the default and
+//! `--features simd` builds (CI runs both).
+
+use imagine::config::params::MacroParams;
+use imagine::coordinator::executor::{Backend, Executor};
+use imagine::coordinator::manifest::NetworkModel;
+use imagine::engine::{gemm, kernels, BatchIdeal};
+use imagine::engine::kernels::{Caps, KernelPath};
+use imagine::util::rng::Rng;
+
+/// Random antipodal input factors `2q − M` for `q ∈ [0, M]`.
+fn random_factors(rng: &mut Rng, n: usize, r_in: u32) -> Vec<i32> {
+    let m = (1i32 << r_in) - 1;
+    (0..n).map(|_| 2 * rng.below(1 + m as u64) as i32 - m).collect()
+}
+
+/// Random odd antipodal weight levels `{±1, ±3, …, ±15}`, with a
+/// `zero_frac` share of exact zeros (conv padding rows).
+fn random_levels(rng: &mut Rng, n: usize, zero_frac: f64) -> Vec<i32> {
+    (0..n)
+        .map(|_| {
+            if rng.bool(zero_frac) {
+                0
+            } else {
+                2 * rng.below(16) as i32 - 15
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn dispatch_matches_scalar_on_all_shapes_and_remainders() {
+    let mut rng = Rng::new(0x51AD);
+    for (rows, n_out) in [(29usize, 11usize), (64, 8), (129, 6), (36, 32), (7, 1)] {
+        for n_vec in [0usize, 1, 2, 3, 4, 5, 7, 8, 13, 32] {
+            let a: Vec<i32> = (0..n_vec * rows).map(|_| rng.int_range(-255, 255) as i32).collect();
+            let w: Vec<i32> = (0..rows * n_out).map(|_| rng.int_range(-15, 15) as i32).collect();
+            let want = gemm::matmul_i32(&a, &w, n_vec, rows, n_out, 1);
+            for workers in [1usize, 2, 5] {
+                let got = kernels::matmul_i32(&a, &w, n_vec, rows, n_out, workers, None);
+                assert_eq!(got, want, "rows={rows} n_out={n_out} n_vec={n_vec} workers={workers}");
+            }
+        }
+    }
+}
+
+#[test]
+fn every_available_path_is_bit_identical() {
+    let mut rng = Rng::new(0xBEEF);
+    let (rows, n_out) = (100usize, 24usize);
+    for n_vec in [1usize, 3, 4, 6, 9] {
+        // Arbitrary i32 inputs for the SIMD tiers; antipodal factors so
+        // the bit-plane path is exercised on the same comparison.
+        let a = random_factors(&mut rng, n_vec * rows, 2);
+        let w = random_levels(&mut rng, rows * n_out, 0.1);
+        let want = gemm::matmul_i32(&a, &w, n_vec, rows, n_out, 1);
+        for path in [
+            KernelPath::Scalar,
+            KernelPath::Portable,
+            KernelPath::Avx2,
+            KernelPath::Neon,
+            KernelPath::BitPlane,
+        ] {
+            for workers in [1usize, 3] {
+                match kernels::matmul_i32_with(path, &a, &w, n_vec, rows, n_out, workers, Some(2)) {
+                    Some(got) => assert_eq!(
+                        got,
+                        want,
+                        "path={} n_vec={n_vec} workers={workers}",
+                        path.name()
+                    ),
+                    None => assert!(
+                        !kernels::path_available(path),
+                        "available path {} refused to run",
+                        path.name()
+                    ),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn bitplane_matches_scalar_across_rin_grid() {
+    let mut rng = Rng::new(0xB117);
+    for r_in in [1u32, 2, 4, 8] {
+        for (rows, n_out, n_vec) in [(36usize, 5usize, 9usize), (64, 8, 4), (144, 32, 13)] {
+            let a = random_factors(&mut rng, n_vec * rows, r_in);
+            let w = random_levels(&mut rng, rows * n_out, 0.15);
+            let want = gemm::matmul_i32(&a, &w, n_vec, rows, n_out, 1);
+            for workers in [1usize, 3] {
+                let got = kernels::matmul_i32_with(
+                    KernelPath::BitPlane,
+                    &a,
+                    &w,
+                    n_vec,
+                    rows,
+                    n_out,
+                    workers,
+                    Some(r_in),
+                )
+                .expect("bit-plane refused eligible weights");
+                assert_eq!(got, want, "r_in={r_in} rows={rows} n_out={n_out} workers={workers}");
+            }
+        }
+    }
+}
+
+#[test]
+fn bitplane_handles_all_zero_and_all_nonzero_columns() {
+    // An output column whose weights are all zero must come back exactly
+    // 0 (pop(Z) = 0), and a rows % 64 != 0 shape exercises the final
+    // partial word of the masks.
+    let mut rng = Rng::new(0x0C01);
+    let (rows, n_out, n_vec) = (70usize, 3usize, 5usize);
+    let mut w = random_levels(&mut rng, rows * n_out, 0.0);
+    for r in 0..rows {
+        w[r * n_out + 1] = 0; // column 1 entirely padding
+    }
+    let a = random_factors(&mut rng, n_vec * rows, 1);
+    let got =
+        kernels::matmul_i32_with(KernelPath::BitPlane, &a, &w, n_vec, rows, n_out, 1, Some(1))
+            .unwrap();
+    let want = gemm::matmul_i32(&a, &w, n_vec, rows, n_out, 1);
+    assert_eq!(got, want);
+    for v in 0..n_vec {
+        assert_eq!(got[v * n_out + 1], 0, "all-zero column must dot to 0");
+    }
+}
+
+#[test]
+fn bitplane_falls_back_per_vector_on_non_antipodal_inputs() {
+    // One vector violates the factor grid (even value for r_in=1): the
+    // engine must fall back to scalar for that vector and still return
+    // the exact scalar result everywhere.
+    let mut rng = Rng::new(0xFA11);
+    let (rows, n_out, n_vec) = (40usize, 6usize, 4usize);
+    let w = random_levels(&mut rng, rows * n_out, 0.1);
+    let mut a = random_factors(&mut rng, n_vec * rows, 1);
+    a[2 * rows + 5] = 2; // not a valid ±1 factor
+    let got =
+        kernels::matmul_i32_with(KernelPath::BitPlane, &a, &w, n_vec, rows, n_out, 1, Some(1))
+            .unwrap();
+    let want = gemm::matmul_i32(&a, &w, n_vec, rows, n_out, 1);
+    assert_eq!(got, want);
+}
+
+#[test]
+fn ineligible_weights_never_select_bitplane() {
+    let mut rng = Rng::new(0x0DD5);
+    let (rows, n_out, n_vec) = (64usize, 16usize, 8usize);
+    let mut w = random_levels(&mut rng, rows * n_out, 0.0);
+    w[17] = 4; // an even nonzero weight breaks the antipodal decomposition
+    assert!(!kernels::weights_bitplane_eligible(&w));
+    let path = kernels::select_gemm(Some(1), rows, n_out, n_vec, &w);
+    assert_ne!(path, KernelPath::BitPlane);
+    assert!(kernels::matmul_i32_with(
+        KernelPath::BitPlane,
+        &vec![0i32; n_vec * rows],
+        &w,
+        n_vec,
+        rows,
+        n_out,
+        1,
+        Some(1)
+    )
+    .is_none());
+    // The dispatcher still answers correctly through the SIMD tier.
+    let a = random_factors(&mut rng, n_vec * rows, 1);
+    let got = kernels::matmul_i32(&a, &w, n_vec, rows, n_out, 2, Some(1));
+    assert_eq!(got, gemm::matmul_i32(&a, &w, n_vec, rows, n_out, 1));
+}
+
+#[test]
+fn forced_fallback_without_feature_or_isa() {
+    // With no detected ISA the selector must stop at the portable tier…
+    let w = vec![1i32; 576 * 32];
+    let no_caps = Caps::default();
+    for r_in in [None, Some(8u32)] {
+        let p = kernels::select_gemm_with(no_caps, r_in, 576, 32, 2, &w);
+        assert!(
+            p == KernelPath::Portable || p == KernelPath::Scalar,
+            "selected {} with no ISA caps",
+            p.name()
+        );
+    }
+    // …and small outputs stay scalar.
+    assert_eq!(
+        kernels::select_gemm_with(no_caps, None, 576, 4, 2, &w[..576 * 4]),
+        KernelPath::Scalar
+    );
+    // Without the `simd` feature there is no explicit ISA at all and the
+    // explicit paths must refuse to run.
+    #[cfg(not(feature = "simd"))]
+    {
+        assert_eq!(kernels::explicit_isa(), None);
+        assert_eq!(kernels::caps(), Caps::default());
+        for path in [KernelPath::Avx2, KernelPath::Neon] {
+            assert!(!kernels::path_available(path));
+            assert!(
+                kernels::matmul_i32_with(path, &[1; 8], &w[..8 * 32], 1, 8, 32, 1, None).is_none()
+            );
+        }
+    }
+    // With the feature on, a selected explicit path implies detection.
+    #[cfg(feature = "simd")]
+    {
+        let sel = kernels::select_gemm(None, 576, 32, 8, &w);
+        if sel == KernelPath::Avx2 || sel == KernelPath::Neon {
+            assert!(kernels::path_available(sel));
+        }
+    }
+}
+
+#[test]
+fn conv_direct_matches_materialized_batch() {
+    let mut rng = Rng::new(0xC0DE);
+    for (c, h, w, stride) in [(1usize, 5usize, 7usize, 1usize), (3, 6, 6, 2), (5, 9, 5, 1)] {
+        for r_in in [1u32, 2, 4, 8] {
+            let rows = c.div_ceil(4) * 36;
+            let n_out = 6;
+            let m = (1u64 << r_in) - 1;
+            let images_q: Vec<Vec<u8>> = (0..5)
+                .map(|_| (0..c * h * w).map(|_| rng.below(m + 1) as u8).collect())
+                .collect();
+            let w_phys = random_levels(&mut rng, rows * n_out, 0.1);
+            let (want, oh_w, ow_w) =
+                gemm::conv3x3_batch(&images_q, c, h, w, stride, r_in, &w_phys, rows, n_out, 1);
+            for workers in [1usize, 2, 4] {
+                let (got, oh, ow) = kernels::conv3x3_direct(
+                    &images_q,
+                    c,
+                    h,
+                    w,
+                    stride,
+                    r_in,
+                    &w_phys,
+                    rows,
+                    n_out,
+                    workers,
+                );
+                assert_eq!((oh, ow), (oh_w, ow_w));
+                assert_eq!(got, want, "c={c} h={h} stride={stride} r_in={r_in} wk={workers}");
+            }
+        }
+    }
+    // Empty batch degrades like the materialized path.
+    let (empty, _, _) = kernels::conv3x3_direct(&[], 3, 5, 5, 1, 8, &[1; 36 * 2], 36, 2, 2);
+    assert!(empty.is_empty());
+}
+
+#[test]
+fn rowdot_lanes_bit_identical_to_scalar() {
+    let mut rng = Rng::new(0xF64D);
+    for (n_vec, k_dim, n_out) in
+        [(1usize, 7usize, 3usize), (2, 8, 4), (9, 33, 5), (5, 40, 11), (4, 16, 8)]
+    {
+        let x: Vec<f64> = (0..n_vec * k_dim).map(|_| rng.uniform_range(-2.0, 2.0)).collect();
+        let w: Vec<f64> = (0..n_out * k_dim).map(|_| rng.uniform_range(-1.0, 1.0)).collect();
+        let want = gemm::rowdot_f64(&x, &w, n_vec, k_dim, n_out, 1);
+        for workers in [1usize, 3] {
+            let got = kernels::rowdot_f64(&x, &w, n_vec, k_dim, n_out, workers);
+            // f64: lane-per-output preserves the exact scalar operation
+            // order, so this is full bitwise equality, not a tolerance.
+            assert_eq!(got, want, "n_vec={n_vec} k={k_dim} n_out={n_out} workers={workers}");
+            let forced =
+                kernels::rowdot_f64_with(KernelPath::Portable, &x, &w, n_vec, k_dim, n_out, workers)
+                    .unwrap();
+            assert_eq!(forced, want);
+        }
+    }
+    assert!(kernels::rowdot_f64_with(KernelPath::BitPlane, &[], &[], 0, 0, 0, 1).is_none());
+}
+
+#[test]
+fn integer_fast_path_matches_f64_rowdot_bitwise() {
+    // The trainer/graph forward computes its f64 dots through the i32
+    // kernels when weights and factors are exact small integers. The
+    // cast chain must be lossless: identical f64 words.
+    let mut rng = Rng::new(0x1F64);
+    for r_in in [1u32, 2, 8] {
+        let (n_vec, k_dim, n_out) = (6usize, 52usize, 10usize);
+        // Row-per-output f32 quantized weights (odd levels + zeros).
+        let w_q: Vec<f32> =
+            random_levels(&mut rng, n_out * k_dim, 0.1).iter().map(|&v| v as f32).collect();
+        let sx_i = random_factors(&mut rng, n_vec * k_dim, r_in);
+        let sx: Vec<f64> = sx_i.iter().map(|&v| v as f64).collect();
+        let w64: Vec<f64> = w_q.iter().map(|&v| v as f64).collect();
+        let want = gemm::rowdot_f64(&sx, &w64, n_vec, k_dim, n_out, 1);
+
+        let (wi, wmax) = kernels::quantized_rowmajor_i32(&w_q, n_out, k_dim).unwrap();
+        assert!(kernels::quantized_dot_fits_i32(k_dim, r_in, wmax));
+        let got: Vec<f64> = kernels::matmul_i32(&sx_i, &wi, n_vec, k_dim, n_out, 1, Some(r_in))
+            .into_iter()
+            .map(|d| d as f64)
+            .collect();
+        assert_eq!(got, want, "r_in={r_in}");
+    }
+}
+
+#[test]
+fn engine_bitplane_end_to_end_matches_executor() {
+    // BatchIdeal now routes its dense/conv dots through the dispatcher,
+    // which at r_in ∈ {1,2} takes the bit-plane engine on physical
+    // manifest weights — the end-to-end safety net on top of the kernel
+    // unit contracts.
+    let p = MacroParams::paper();
+    let mut rng = Rng::new(0xE2E);
+    for r_in in [1u32, 2] {
+        let model = NetworkModel::synthetic_mlp(&[100, 40, 10], r_in, 4, 6, rng.next_u64(), &p);
+        let images: Vec<Vec<f32>> = (0..9)
+            .map(|_| (0..100).map(|_| rng.uniform() as f32).collect())
+            .collect();
+        let mut exec = Executor::new(model.clone(), p.clone(), Backend::Ideal).unwrap();
+        let expected: Vec<Vec<f32>> = images.iter().map(|im| exec.forward(im).unwrap()).collect();
+        for workers in [1usize, 3] {
+            let mut engine = BatchIdeal::new(model.clone(), p.clone(), workers).unwrap();
+            let got = engine.forward_batch(&images).unwrap();
+            assert_eq!(got, expected, "r_in={r_in} workers={workers}");
+        }
+    }
+}
