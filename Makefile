@@ -2,7 +2,7 @@
 # artifact-dependent integration tests skip with a message until
 # `make artifacts` has been run (requires python3 with jax + numpy).
 
-.PHONY: build test artifacts bench bench-check fmt pytest ci
+.PHONY: build test artifacts bench bench-check cluster-test fmt pytest ci
 
 build:
 	cargo build --release
@@ -30,6 +30,13 @@ bench-check: bench
 	  --merge rust/bench_out/perf.json rust/bench_out/train_smoke.json \
 	  --out BENCH_report.json --baseline BENCH_baseline.json \
 	  --suggest BENCH_suggested.json
+
+# What the CI cluster job runs: the router/fleet end-to-end suite. It
+# spawns real worker processes and binds ephemeral ports, so it runs
+# release, single-threaded, under a hard timeout (a wedged fleet fails
+# in minutes, not hours).
+cluster-test:
+	timeout 900 cargo test --release --test cluster_integration -- --test-threads 1
 
 fmt:
 	cargo fmt --all --check

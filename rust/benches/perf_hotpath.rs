@@ -433,6 +433,93 @@ fn main() {
         ));
     }
 
+    // ---- 4c. router proxy overhead vs direct worker serving ----
+    // One real worker (`serve_listener` on an ephemeral port, empty hub)
+    // fronted by an in-process `cluster::Router` that deploys the model
+    // from artifacts and proxies requests. Sequential round-trips on
+    // loopback; the delta is pure router cost (admission + routing +
+    // one extra TCP hop).
+    {
+        use imagine::api::ModelHub;
+        use imagine::cluster::{ModelSpec, Router, RouterConfig, WorkerClient};
+        use imagine::coordinator::server::{serve_listener, ServerState, Stats};
+        use std::net::TcpListener;
+        use std::sync::Arc;
+        use std::time::Duration;
+
+        let dir = std::env::temp_dir().join(format!("imagine_bench_router_{}", std::process::id()));
+        let dir_s = dir.to_str().unwrap().to_string();
+        let small = NetworkModel::synthetic_mlp(&[144, 32, 10], 8, 4, 8, 5, &p);
+        small.save(&dir_s, "bench").unwrap();
+
+        let hub = ModelHub::builder().batch(32).workers(workers).flush_micros(200).build().unwrap();
+        let state = Arc::new(ServerState::new(hub, Stats::default()));
+        let worker_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let worker_addr = worker_listener.local_addr().unwrap().to_string();
+        let worker_state = Arc::clone(&state);
+        let worker_thread =
+            std::thread::spawn(move || serve_listener(&worker_state, worker_listener, None));
+
+        let mut router = Router::new(RouterConfig {
+            replicas: 1,
+            probe_interval: Duration::from_secs(60),
+            ..RouterConfig::default()
+        });
+        router.attach_worker(worker_addr.as_str());
+        router.register(ModelSpec::new("bench", dir_s.as_str())).unwrap();
+        let router = Arc::new(router);
+        let router_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let router_addr = router_listener.local_addr().unwrap().to_string();
+        let serve_router = Arc::clone(&router);
+        let router_thread =
+            std::thread::spawn(move || serve_router.serve_listener(router_listener, None));
+
+        let mut rline = String::from("{\"model\":\"bench\",\"image\":[");
+        for i in 0..144 {
+            if i > 0 {
+                rline.push(',');
+            }
+            rline.push_str(&format!("{}", (i % 16) as f32 * 0.0625));
+        }
+        rline.push_str("]}");
+
+        let req_per_s = |addr: &str| -> f64 {
+            let mut c = WorkerClient::connect(addr, Duration::from_secs(30)).unwrap();
+            let n = 400usize;
+            for _ in 0..8 {
+                c.request(&rline).unwrap(); // warmup
+            }
+            let t0 = Instant::now();
+            for _ in 0..n {
+                std::hint::black_box(c.request(&rline).unwrap());
+            }
+            n as f64 / t0.elapsed().as_secs_f64()
+        };
+        let direct = req_per_s(&worker_addr);
+        let proxied = req_per_s(&router_addr);
+        out.line("");
+        out.line("# router proxy overhead (144-32-10 ideal model, sequential loopback)");
+        out.line(format!(
+            "direct worker                            {direct:>10.0} req/s"
+        ));
+        out.line(format!(
+            "via router                               {proxied:>10.0} req/s ({:.2}x of direct)",
+            proxied / direct
+        ));
+        metrics.metric("serve_direct_req_per_s", direct);
+        metrics.metric("router_proxy_req_per_s", proxied);
+
+        let mut c = WorkerClient::connect(&router_addr, Duration::from_secs(10)).unwrap();
+        c.request(r#"{"cmd":"shutdown"}"#).unwrap();
+        drop(c);
+        router_thread.join().unwrap().unwrap();
+        let mut c = WorkerClient::connect(&worker_addr, Duration::from_secs(10)).unwrap();
+        c.request(r#"{"cmd":"shutdown"}"#).unwrap();
+        drop(c);
+        worker_thread.join().unwrap().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
     // ---- 5. multi-die analog pool ----
     let small = NetworkModel::synthetic_mlp(&[144, 32, 10], 4, 2, 6, 9, &p);
     let analog_images: Vec<Vec<f32>> = (0..32)

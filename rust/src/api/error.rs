@@ -44,6 +44,14 @@ pub enum ImagineError {
     /// The CIM-aware trainer rejected its configuration or data, or a
     /// training-time evaluation/lowering failed.
     Train { message: String },
+    /// The cluster router shed this request: every replica of the model
+    /// is at its in-flight cap and the router-side overflow queue is
+    /// full (or the queued wait timed out). Clients should back off and
+    /// retry; the request was never dispatched to a worker.
+    Overloaded { model: String, queue_depth: usize },
+    /// No healthy worker currently hosts this model (all its replicas
+    /// are down and failover has not yet re-placed it).
+    NoHealthyWorkers { model: String },
 }
 
 impl ImagineError {
@@ -55,6 +63,18 @@ impl ImagineError {
     /// Wrap a trainer-layer error crossing the facade boundary.
     pub(crate) fn train(e: anyhow::Error) -> Self {
         ImagineError::Train { message: format!("{e:#}") }
+    }
+
+    /// Stable machine-readable code for errors the cluster router puts
+    /// on the wire as a `"code"` field next to the human `"error"` text,
+    /// so clients can branch (back off / fail over) without parsing
+    /// prose. `None` for errors that have no protocol-level class.
+    pub fn code(&self) -> Option<&'static str> {
+        match self {
+            ImagineError::Overloaded { .. } => Some("overloaded"),
+            ImagineError::NoHealthyWorkers { .. } => Some("unavailable"),
+            _ => None,
+        }
     }
 }
 
@@ -79,6 +99,16 @@ impl fmt::Display for ImagineError {
             ImagineError::Input { message } => write!(f, "bad inference input: {message}"),
             ImagineError::Engine { message } => write!(f, "inference engine error: {message}"),
             ImagineError::Train { message } => write!(f, "training error: {message}"),
+            ImagineError::Overloaded { model, queue_depth } => {
+                write!(
+                    f,
+                    "cluster overloaded: model '{model}' replicas at capacity \
+                     (router queue bound {queue_depth} reached)"
+                )
+            }
+            ImagineError::NoHealthyWorkers { model } => {
+                write!(f, "no healthy worker for model '{model}'")
+            }
         }
     }
 }
@@ -104,6 +134,21 @@ mod tests {
             reason: "no feature".to_string(),
         };
         assert!(format!("{e}").contains("pjrt"));
+    }
+
+    #[test]
+    fn cluster_errors_carry_wire_codes() {
+        let e = ImagineError::Overloaded { model: "m".to_string(), queue_depth: 128 };
+        assert_eq!(e.code(), Some("overloaded"));
+        assert!(format!("{e}").contains("overloaded"), "{e}");
+        let e = ImagineError::NoHealthyWorkers { model: "m".to_string() };
+        assert_eq!(e.code(), Some("unavailable"));
+        assert!(format!("{e}").contains("no healthy worker"), "{e}");
+        // Non-cluster errors stay code-less on the wire.
+        assert_eq!(
+            ImagineError::Input { message: "x".to_string() }.code(),
+            None
+        );
     }
 
     #[test]

@@ -1,0 +1,128 @@
+//! Blocking line-JSON TCP client for driving workers — used by the
+//! router's proxy path, health probes and deploy fan-out, and handy for
+//! tests talking protocol v3 to anything.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// One connection to a protocol-v3 server, with request/response
+/// framing and hard timeouts on connect, read and write. Any IO error
+/// poisons the connection — callers drop it and reconnect (the router's
+/// failure handling depends on errors surfacing, not being retried
+/// silently inside the client).
+pub struct WorkerClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl WorkerClient {
+    /// Connect to `addr` (`host:port`) with `timeout` applied to the
+    /// connection attempt and to every subsequent read/write.
+    pub fn connect(addr: &str, timeout: Duration) -> Result<WorkerClient> {
+        let sock: SocketAddr = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving {addr}"))?
+            .next()
+            .ok_or_else(|| anyhow!("{addr} resolved to no address"))?;
+        let stream = TcpStream::connect_timeout(&sock, timeout)
+            .with_context(|| format!("connecting {addr}"))?;
+        stream.set_read_timeout(Some(timeout)).context("read timeout")?;
+        stream.set_write_timeout(Some(timeout)).context("write timeout")?;
+        // Request/response round-trips, one line each way: coalescing
+        // delays would dominate the router's added latency.
+        let _ = stream.set_nodelay(true);
+        let writer = stream.try_clone().context("cloning stream")?;
+        Ok(WorkerClient { reader: BufReader::new(stream), writer })
+    }
+
+    /// Re-arm the read/write timeouts (e.g. the long request timeout on
+    /// a connection that was opened with the short probe timeout).
+    pub fn set_timeout(&mut self, timeout: Duration) -> Result<()> {
+        let s = self.reader.get_ref();
+        s.set_read_timeout(Some(timeout)).context("read timeout")?;
+        s.set_write_timeout(Some(timeout)).context("write timeout")?;
+        Ok(())
+    }
+
+    /// Send one request line (newline appended).
+    pub fn send_line(&mut self, line: &str) -> Result<()> {
+        self.writer.write_all(line.as_bytes()).context("writing request")?;
+        self.writer.write_all(b"\n").context("writing newline")?;
+        Ok(())
+    }
+
+    /// Read one response line (newline stripped). EOF is an error: a
+    /// v3 server never half-closes mid-exchange, so EOF means the peer
+    /// died or dropped us.
+    pub fn recv_line(&mut self) -> Result<String> {
+        let mut buf = Vec::new();
+        let n = self.reader.read_until(b'\n', &mut buf).context("reading response")?;
+        if n == 0 {
+            return Err(anyhow!("connection closed by peer"));
+        }
+        if buf.last() != Some(&b'\n') {
+            // Timed-out or torn mid-line read: the stream framing is
+            // gone; the connection cannot be reused.
+            return Err(anyhow!("short read (no newline) — torn response"));
+        }
+        let s = String::from_utf8(buf).context("response not utf-8")?;
+        Ok(s.trim_end_matches(['\n', '\r']).to_string())
+    }
+
+    /// One request/response round trip, returning the raw response line
+    /// (the router forwards this verbatim for bit-identity).
+    pub fn request(&mut self, line: &str) -> Result<String> {
+        self.send_line(line)?;
+        self.recv_line()
+    }
+
+    /// Round trip + JSON parse, for control-plane exchanges (probes,
+    /// deploy acks) where the router reads fields instead of forwarding.
+    pub fn request_json(&mut self, line: &str) -> Result<Json> {
+        let resp = self.request(line)?;
+        Json::parse(&resp).map_err(|e| anyhow!("bad response json: {e} in {resp:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn round_trips_lines_and_surfaces_eof() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let mut w = stream;
+            w.write_all(format!("echo:{}\n", line.trim()).as_bytes()).unwrap();
+            // Then close without answering the second request.
+        });
+        let mut c = WorkerClient::connect(&addr, Duration::from_secs(2)).unwrap();
+        assert_eq!(c.request("{\"x\":1}").unwrap(), "echo:{\"x\":1}");
+        let err = c.request("again").unwrap_err();
+        assert!(format!("{err:#}").contains("closed"), "{err:#}");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn connect_to_dead_port_errors_fast() {
+        // Bind-then-drop guarantees an unused port; connect must fail
+        // (refused), not hang past the timeout.
+        let port = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let t0 = std::time::Instant::now();
+        let res = WorkerClient::connect(&format!("127.0.0.1:{port}"), Duration::from_secs(2));
+        assert!(res.is_err());
+        assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+}

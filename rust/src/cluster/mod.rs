@@ -1,0 +1,55 @@
+//! Sharded multi-process serving — `imagine router` in front of N
+//! `imagine serve` workers.
+//!
+//! The [`ModelHub`](crate::api::ModelHub) made one process multi-tenant;
+//! this module makes many processes one service. A [`Router`] accepts
+//! the same protocol-v3 client connections as a worker and shards every
+//! request across a fleet of worker processes it spawned (or was
+//! attached to with `--worker HOST:PORT`):
+//!
+//! * **Placement** ([`placement`]): consistent-hash model → worker
+//!   mapping with a per-model replication factor. The effective shard
+//!   set of a model is the first `replicas` *healthy* workers along the
+//!   ring from the model's hash point, so failover needs no ring
+//!   mutation — a dead worker simply stops being eligible and the next
+//!   worker on the ring inherits its load.
+//! * **Deploy fan-out**: models are registered at the router as
+//!   [`ModelSpec`]s (tensorfile artifact locations); the router drives
+//!   each worker's v3 `deploy` cmd to materialize the placement, and
+//!   re-drives it whenever health changes (failover re-deploy).
+//! * **Health + failover** ([`pool`], [`router`]): a probe thread polls
+//!   every worker's `stats` cmd under a timeout; consecutive failures
+//!   mark a worker dead, its models are re-placed onto survivors, and
+//!   spawned workers that exited are restarted and re-admitted (their
+//!   deployments re-driven) once they answer probes again. Inference
+//!   requests that hit a dying worker are retried on another replica —
+//!   inference is pure, so retries are safe and clients see zero
+//!   failures across a worker kill.
+//! * **Back-pressure** ([`Router`]): per-worker in-flight caps
+//!   (router-side admission counters, cross-checked against the worker's
+//!   reported `queue_depth`); excess requests queue at the router up to
+//!   a bound, then are shed with the typed
+//!   [`ImagineError::Overloaded`](crate::api::ImagineError) as an
+//!   in-band `{"error": ..., "code": "overloaded"}` line.
+//! * **Fleet cmds**: `stats` / `models` / `deploy` / `undeploy` fan out
+//!   to every worker and aggregate (weighted latency-bucket merge for
+//!   fleet p50/p99 via
+//!   [`merge_histogram_buckets`](crate::util::stats::merge_histogram_buckets),
+//!   per-shard occupancy and queue depth); `info` / `graph_info` and
+//!   inference route to one replica.
+//!
+//! Bit-identity contract: the router forwards the client's request line
+//! and the worker's response line **verbatim** — it never re-serializes
+//! an inference payload — so responses are bit-identical to a
+//! single-process hub serving the same deployment (the engine backends
+//! are deterministic given the same artifacts, seed and precision).
+
+mod client;
+mod placement;
+mod pool;
+mod router;
+
+pub use client::WorkerClient;
+pub use placement::{hash64, ModelSpec, Ring};
+pub use pool::{WorkerId, WorkerPool, WorkerSlot};
+pub use router::{Router, RouterConfig};

@@ -1,0 +1,217 @@
+//! Consistent-hash model placement.
+//!
+//! Worker slots are hashed onto a ring at `vnodes` points each; a model
+//! is placed by walking the ring clockwise from its own hash point and
+//! collecting the first `replicas` *distinct, healthy* slots. Two
+//! properties matter for the cluster:
+//!
+//! * **Stability** — placement depends only on (slot id, vnodes, model
+//!   name), so every router restart and every health flap computes the
+//!   same preferred order; a returning worker gets its old models back.
+//! * **Implicit failover** — health is a filter applied at lookup time,
+//!   not a ring mutation: when a worker dies, each of its models slides
+//!   to the next healthy slot on *its own* ring walk, spreading the
+//!   dead worker's load across the fleet instead of dumping it on one
+//!   neighbor.
+
+use crate::util::json::{obj, Json};
+
+/// FNV-1a, the same cheap stable hash used across the codebase for
+/// deterministic seeding. Placement must be identical across router
+/// restarts and builds, so no std `Hasher` (its output is unspecified).
+pub fn hash64(key: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in key.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// How a model is deployed onto the fleet: everything the router needs
+/// to (re-)drive a worker's v3 `deploy` cmd from tensorfile artifacts.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    /// Serving name (what requests' `"model"` field routes on).
+    pub name: String,
+    /// Artifact directory holding `<manifest>.manifest.json` + weights.
+    pub dir: String,
+    /// Manifest base name (defaults to `name`).
+    pub manifest: String,
+    /// Backend spelling forwarded to the worker (`auto` resolves there).
+    pub backend: String,
+    /// Default (r_in, r_out) for the deployment, if pinned.
+    pub precision: Option<(u32, u32)>,
+    /// Engine seed override, if pinned (keeps analog draws identical
+    /// across replicas).
+    pub seed: Option<u64>,
+    /// Per-model replica count; 0 ⇒ the router-wide `--replicas`.
+    pub replicas: usize,
+}
+
+impl ModelSpec {
+    pub fn new(name: impl Into<String>, dir: impl Into<String>) -> ModelSpec {
+        let name = name.into();
+        ModelSpec {
+            manifest: name.clone(),
+            name,
+            dir: dir.into(),
+            backend: "auto".to_string(),
+            precision: None,
+            seed: None,
+            replicas: 0,
+        }
+    }
+
+    /// The v3 `deploy` request line that materializes this model on a
+    /// worker.
+    pub fn deploy_line(&self) -> String {
+        let mut pairs = vec![
+            ("cmd", Json::Str("deploy".to_string())),
+            ("name", Json::Str(self.name.clone())),
+            ("dir", Json::Str(self.dir.clone())),
+            ("manifest", Json::Str(self.manifest.clone())),
+            ("backend", Json::Str(self.backend.clone())),
+        ];
+        if let Some((r_in, r_out)) = self.precision {
+            pairs.push(("precision", Json::Str(format!("{r_in},{r_out}"))));
+        }
+        if let Some(seed) = self.seed {
+            pairs.push(("seed", Json::Num(seed as f64)));
+        }
+        obj(pairs).to_string_compact()
+    }
+}
+
+/// The hash ring: sorted (hash, slot) points, `vnodes` per slot.
+#[derive(Debug, Default)]
+pub struct Ring {
+    points: Vec<(u64, usize)>,
+}
+
+impl Ring {
+    pub fn new() -> Ring {
+        Ring::default()
+    }
+
+    /// Add a worker slot at `vnodes` ring points. Slots are added once,
+    /// during router setup; health changes never touch the ring.
+    pub fn add_slot(&mut self, slot: usize, vnodes: usize) {
+        for v in 0..vnodes.max(1) {
+            self.points.push((hash64(&format!("slot-{slot}#{v}")), slot));
+        }
+        // Hash ties are broken by slot id so the walk order is total.
+        self.points.sort_unstable();
+    }
+
+    /// The first `replicas` distinct slots for `key` walking clockwise
+    /// from its hash point, keeping only slots where `alive` holds.
+    /// Returns fewer than `replicas` when the fleet is too small or too
+    /// dead; empty when nothing alive remains.
+    pub fn shards(&self, key: &str, replicas: usize, alive: impl Fn(usize) -> bool) -> Vec<usize> {
+        if self.points.is_empty() || replicas == 0 {
+            return Vec::new();
+        }
+        let start = self.points.partition_point(|&(h, _)| h < hash64(key));
+        let mut picked = Vec::with_capacity(replicas);
+        for i in 0..self.points.len() {
+            let (_, slot) = self.points[(start + i) % self.points.len()];
+            if !picked.contains(&slot) && alive(slot) {
+                picked.push(slot);
+                if picked.len() == replicas {
+                    break;
+                }
+            }
+        }
+        picked
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ring(n: usize) -> Ring {
+        let mut r = Ring::new();
+        for s in 0..n {
+            r.add_slot(s, 16);
+        }
+        r
+    }
+
+    #[test]
+    fn placement_is_stable_and_replicated() {
+        let r = ring(4);
+        let a = r.shards("mnist", 2, |_| true);
+        let b = r.shards("mnist", 2, |_| true);
+        assert_eq!(a, b, "same key must place identically");
+        assert_eq!(a.len(), 2);
+        assert_ne!(a[0], a[1], "replicas are distinct slots");
+        // A fresh ring built the same way places the same (stability
+        // across router restarts).
+        assert_eq!(ring(4).shards("mnist", 2, |_| true), a);
+    }
+
+    #[test]
+    fn failover_slides_to_next_healthy_slot() {
+        let r = ring(4);
+        let healthy = r.shards("m", 2, |_| true);
+        let primary = healthy[0];
+        let degraded = r.shards("m", 2, |s| s != primary);
+        assert_eq!(degraded.len(), 2);
+        assert!(!degraded.contains(&primary));
+        // The surviving replica keeps its copy — failover only moves
+        // the dead worker's share.
+        assert!(degraded.contains(&healthy[1]));
+    }
+
+    #[test]
+    fn shards_degrade_gracefully() {
+        let r = ring(3);
+        // More replicas than workers: everything, once each.
+        let all = r.shards("x", 9, |_| true);
+        assert_eq!(all.len(), 3);
+        // All dead: empty, not a hang or panic.
+        assert!(r.shards("x", 2, |_| false).is_empty());
+        // Zero replicas requested: empty.
+        assert!(r.shards("x", 0, |_| true).is_empty());
+        // Empty ring: empty.
+        assert!(Ring::new().shards("x", 2, |_| true).is_empty());
+    }
+
+    #[test]
+    fn keys_spread_across_slots() {
+        // Not a uniformity proof — just that placement isn't collapsing
+        // onto one slot.
+        let r = ring(4);
+        let mut seen = [false; 4];
+        for i in 0..64 {
+            let s = r.shards(&format!("model-{i}"), 1, |_| true);
+            seen[s[0]] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "{seen:?}");
+    }
+
+    #[test]
+    fn deploy_line_carries_the_spec() {
+        let mut spec = ModelSpec::new("m", "arts");
+        spec.precision = Some((2, 4));
+        spec.seed = Some(42);
+        spec.backend = "ideal".to_string();
+        let j = Json::parse(&spec.deploy_line()).unwrap();
+        assert_eq!(j.get("cmd").unwrap().as_str(), Some("deploy"));
+        assert_eq!(j.get("name").unwrap().as_str(), Some("m"));
+        assert_eq!(j.get("dir").unwrap().as_str(), Some("arts"));
+        assert_eq!(j.get("manifest").unwrap().as_str(), Some("m"));
+        assert_eq!(j.get("backend").unwrap().as_str(), Some("ideal"));
+        assert_eq!(j.get("precision").unwrap().as_str(), Some("2,4"));
+        assert_eq!(j.get("seed").unwrap().as_f64(), Some(42.0));
+    }
+
+    #[test]
+    fn hash64_is_the_published_fnv1a() {
+        // Reference vectors (FNV-1a 64-bit).
+        assert_eq!(hash64(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(hash64("a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

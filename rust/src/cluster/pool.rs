@@ -1,0 +1,360 @@
+//! The worker pool: per-worker state (address, health, in-flight count,
+//! deployed set, child process handle) and the spawn/respawn machinery.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeSet;
+use std::io::BufRead;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Stable slot index of a worker in the pool — the identity hashed onto
+/// the placement ring. A respawned worker keeps its slot (and therefore
+/// its placement) even though its process and port change.
+pub type WorkerId = usize;
+
+/// How long to wait for a spawned worker's `READY port=<n>` line.
+const SPAWN_READY_TIMEOUT: Duration = Duration::from_secs(20);
+
+/// Mutable worker state guarded by the slot lock.
+#[derive(Debug)]
+struct SlotState {
+    addr: String,
+    healthy: bool,
+    consecutive_failures: u32,
+    /// Child handle for spawned workers (`None` for attached ones).
+    child: Option<Child>,
+    /// Models the router believes are deployed here (what
+    /// `ensure_placement` diffs against).
+    deployed: BTreeSet<String>,
+    /// The worker's own `queue_depth` gauge at the last probe.
+    reported_depth: u64,
+    /// Raw latency buckets from the last probe (fleet-merge input).
+    latency_buckets: Vec<(u64, u64)>,
+    /// (requests, errors) counters from the last probe.
+    worker_counters: (u64, u64),
+}
+
+/// One worker in the fleet.
+#[derive(Debug)]
+pub struct WorkerSlot {
+    pub id: WorkerId,
+    /// Whether this slot was spawned by the router (restartable) or
+    /// attached (external lifecycle; re-admitted but never restarted).
+    pub spawned: bool,
+    state: Mutex<SlotState>,
+    /// Router-side admission counter: requests currently dispatched to
+    /// this worker through the router. Authoritative for back-pressure
+    /// (the probe-reported depth lags).
+    pub in_flight: AtomicUsize,
+    /// Requests the router has routed here (lifetime).
+    pub routed: AtomicU64,
+}
+
+impl WorkerSlot {
+    fn new(id: WorkerId, addr: String, spawned: bool, child: Option<Child>) -> WorkerSlot {
+        WorkerSlot {
+            id,
+            spawned,
+            state: Mutex::new(SlotState {
+                addr,
+                healthy: true,
+                consecutive_failures: 0,
+                child,
+                deployed: BTreeSet::new(),
+                reported_depth: 0,
+                latency_buckets: Vec::new(),
+                worker_counters: (0, 0),
+            }),
+            in_flight: AtomicUsize::new(0),
+            routed: AtomicU64::new(0),
+        }
+    }
+
+    pub fn addr(&self) -> String {
+        self.state.lock().unwrap().addr.clone()
+    }
+
+    pub fn healthy(&self) -> bool {
+        self.state.lock().unwrap().healthy
+    }
+
+    /// Spawned worker's OS pid, if the process handle is live.
+    pub fn pid(&self) -> Option<u32> {
+        self.state.lock().unwrap().child.as_ref().map(Child::id)
+    }
+
+    pub fn deployed_models(&self) -> Vec<String> {
+        self.state.lock().unwrap().deployed.iter().cloned().collect()
+    }
+
+    pub fn is_deployed(&self, model: &str) -> bool {
+        self.state.lock().unwrap().deployed.contains(model)
+    }
+
+    pub fn note_deployed(&self, model: &str) {
+        self.state.lock().unwrap().deployed.insert(model.to_string());
+    }
+
+    pub fn note_undeployed(&self, model: &str) {
+        self.state.lock().unwrap().deployed.remove(model);
+    }
+
+    /// Last probe's (queue_depth, latency_buckets, requests, errors).
+    pub fn probe_snapshot(&self) -> (u64, Vec<(u64, u64)>, u64, u64) {
+        let s = self.state.lock().unwrap();
+        let (req, err) = s.worker_counters;
+        (s.reported_depth, s.latency_buckets.clone(), req, err)
+    }
+
+    /// Record a successful probe. Returns `true` when this flipped the
+    /// worker dead → healthy (the caller must then re-drive placement:
+    /// a restarted process came back empty).
+    pub fn note_probe_ok(&self, depth: u64, buckets: Vec<(u64, u64)>, counters: (u64, u64)) -> bool {
+        let mut s = self.state.lock().unwrap();
+        s.consecutive_failures = 0;
+        s.reported_depth = depth;
+        s.latency_buckets = buckets;
+        s.worker_counters = counters;
+        let readmitted = !s.healthy;
+        if readmitted {
+            // Whatever we believed was deployed died with the old
+            // process (or went stale while unreachable): start from
+            // nothing and let ensure_placement re-drive deploys.
+            s.deployed.clear();
+            s.healthy = true;
+        }
+        readmitted
+    }
+
+    /// Record a probe/request failure. Returns `true` when this flipped
+    /// the worker healthy → dead (after `fail_after` consecutive
+    /// failures; a request-path connection error passes
+    /// `fail_after = 1` to fail fast).
+    pub fn note_failure(&self, fail_after: u32) -> bool {
+        let mut s = self.state.lock().unwrap();
+        s.consecutive_failures = s.consecutive_failures.saturating_add(1);
+        if s.healthy && s.consecutive_failures >= fail_after.max(1) {
+            s.healthy = false;
+            return true;
+        }
+        false
+    }
+
+    /// For spawned workers: reap an exited child. Returns `true` if the
+    /// process is gone (exited or handle lost) and the slot was marked
+    /// dead.
+    pub fn reap_if_exited(&self) -> bool {
+        let mut s = self.state.lock().unwrap();
+        let exited = match s.child.as_mut() {
+            Some(child) => child.try_wait().map(|st| st.is_some()).unwrap_or(true),
+            None => false,
+        };
+        if exited {
+            s.child = None;
+            s.healthy = false;
+            s.consecutive_failures = u32::MAX;
+        }
+        exited
+    }
+
+    /// Replace a dead spawned worker's process: new child, new address,
+    /// empty deployed set, healthy again (the caller re-drives
+    /// placement).
+    pub fn adopt_respawn(&self, child: Child, addr: String) {
+        let mut s = self.state.lock().unwrap();
+        if let Some(old) = s.child.as_mut() {
+            // Shouldn't happen (respawn only runs after reap), but never
+            // leak a process.
+            let _ = old.kill();
+            let _ = old.wait();
+        }
+        s.child = Some(child);
+        s.addr = addr;
+        s.healthy = true;
+        s.consecutive_failures = 0;
+        s.deployed.clear();
+        s.reported_depth = 0;
+        s.latency_buckets = Vec::new();
+    }
+
+    /// Kill and reap a spawned child (router shutdown). Best-effort.
+    pub fn kill_child(&self) {
+        let mut s = self.state.lock().unwrap();
+        if let Some(child) = s.child.as_mut() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+        s.child = None;
+        s.healthy = false;
+    }
+}
+
+/// The fleet. Slots are added during router setup and never removed;
+/// health changes and respawns mutate slot state in place so slot ids
+/// (and with them, ring placement) stay stable.
+#[derive(Debug, Default)]
+pub struct WorkerPool {
+    slots: Vec<WorkerSlot>,
+}
+
+impl WorkerPool {
+    pub fn new() -> WorkerPool {
+        WorkerPool::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn slot(&self, id: WorkerId) -> &WorkerSlot {
+        &self.slots[id]
+    }
+
+    pub fn slots(&self) -> impl Iterator<Item = &WorkerSlot> {
+        self.slots.iter()
+    }
+
+    pub fn healthy_count(&self) -> usize {
+        self.slots.iter().filter(|s| s.healthy()).count()
+    }
+
+    /// Attach an externally managed worker at `addr`.
+    pub fn attach(&mut self, addr: impl Into<String>) -> WorkerId {
+        let id = self.slots.len();
+        self.slots.push(WorkerSlot::new(id, addr.into(), false, None));
+        id
+    }
+
+    /// Spawn a worker process (`exe serve --no-model --addr
+    /// 127.0.0.1:0 <extra_args>`), wait for its `READY port=<n>` line,
+    /// and add it to the pool.
+    pub fn spawn(&mut self, exe: &std::path::Path, extra_args: &[String]) -> Result<WorkerId> {
+        let (child, addr) = spawn_worker_process(exe, extra_args)?;
+        let id = self.slots.len();
+        self.slots.push(WorkerSlot::new(id, addr, true, Some(child)));
+        Ok(id)
+    }
+
+    /// Spawn a replacement process for a dead spawned slot.
+    pub fn respawn(&self, id: WorkerId, exe: &std::path::Path, extra_args: &[String]) -> Result<()> {
+        let slot = self.slot(id);
+        if !slot.spawned {
+            bail!("worker {id} is attached, not spawned; cannot restart it");
+        }
+        let (child, addr) = spawn_worker_process(exe, extra_args)?;
+        slot.adopt_respawn(child, addr);
+        Ok(())
+    }
+}
+
+/// Launch one worker process and parse the readiness line. stdout is
+/// piped (it carries exactly the `READY port=<n>` line); stderr is
+/// inherited so worker logs land in the router's log stream, prefixed
+/// by nothing — workers already label themselves.
+fn spawn_worker_process(exe: &std::path::Path, extra_args: &[String]) -> Result<(Child, String)> {
+    let mut cmd = Command::new(exe);
+    cmd.arg("serve")
+        .arg("--no-model")
+        .arg("--addr")
+        .arg("127.0.0.1:0")
+        .args(extra_args)
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit());
+    let mut child = cmd.spawn().with_context(|| format!("spawning {exe:?} serve"))?;
+    let stdout = child.stdout.take().ok_or_else(|| anyhow!("no stdout pipe"))?;
+
+    // Read the READY line on a helper thread so a wedged child cannot
+    // hang router startup past SPAWN_READY_TIMEOUT. After readiness the
+    // worker writes nothing more to stdout, so dropping the reader (and
+    // with it the pipe) is fine.
+    let (tx, rx) = std::sync::mpsc::channel::<Result<u16>>();
+    std::thread::spawn(move || {
+        let mut reader = std::io::BufReader::new(stdout);
+        let mut line = String::new();
+        let res = match reader.read_line(&mut line) {
+            Ok(0) => Err(anyhow!("worker exited before READY")),
+            Ok(_) => parse_ready_port(line.trim())
+                .ok_or_else(|| anyhow!("unexpected readiness line {line:?}")),
+            Err(e) => Err(anyhow!("reading readiness line: {e}")),
+        };
+        let _ = tx.send(res);
+    });
+    match rx.recv_timeout(SPAWN_READY_TIMEOUT) {
+        Ok(Ok(port)) => Ok((child, format!("127.0.0.1:{port}"))),
+        Ok(Err(e)) => {
+            let _ = child.kill();
+            let _ = child.wait();
+            Err(e.context("worker startup"))
+        }
+        Err(_) => {
+            let _ = child.kill();
+            let _ = child.wait();
+            bail!("worker did not print READY within {SPAWN_READY_TIMEOUT:?}")
+        }
+    }
+}
+
+/// Parse `READY port=<n>`.
+fn parse_ready_port(line: &str) -> Option<u16> {
+    line.strip_prefix("READY port=")?.trim().parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ready_line_parses() {
+        assert_eq!(parse_ready_port("READY port=8080"), Some(8080));
+        assert_eq!(parse_ready_port("READY port=0"), Some(0));
+        assert_eq!(parse_ready_port("ready port=1"), None);
+        assert_eq!(parse_ready_port("READY port=x"), None);
+        assert_eq!(parse_ready_port(""), None);
+    }
+
+    #[test]
+    fn health_transitions_and_deploy_bookkeeping() {
+        let mut pool = WorkerPool::new();
+        let id = pool.attach("127.0.0.1:1");
+        let slot = pool.slot(id);
+        assert!(slot.healthy());
+        assert!(!slot.spawned);
+
+        slot.note_deployed("m");
+        assert!(slot.is_deployed("m"));
+
+        // One failure below the threshold: still healthy.
+        assert!(!slot.note_failure(2));
+        assert!(slot.healthy());
+        // Second consecutive failure: flips dead exactly once.
+        assert!(slot.note_failure(2));
+        assert!(!slot.healthy());
+        assert!(!slot.note_failure(2), "already dead — no second flip");
+
+        // Probe success re-admits and clears the deployed set (the new
+        // process knows nothing).
+        assert!(slot.note_probe_ok(0, Vec::new(), (0, 0)));
+        assert!(slot.healthy());
+        assert!(!slot.is_deployed("m"));
+        // Steady-state probe success is not a re-admission.
+        assert!(!slot.note_probe_ok(3, vec![(8, 1)], (10, 1)));
+        let (depth, buckets, req, err) = slot.probe_snapshot();
+        assert_eq!((depth, req, err), (3, 10, 1));
+        assert_eq!(buckets, vec![(8, 1)]);
+    }
+
+    #[test]
+    fn respawn_rejects_attached_workers() {
+        let mut pool = WorkerPool::new();
+        let id = pool.attach("127.0.0.1:1");
+        let err = pool.respawn(id, std::path::Path::new("/bin/true"), &[]).unwrap_err();
+        assert!(format!("{err}").contains("attached"), "{err}");
+    }
+}

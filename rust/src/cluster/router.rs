@@ -1,0 +1,1210 @@
+//! The router: protocol-v3 front process sharding requests across the
+//! worker fleet.
+//!
+//! One [`Router`] owns a [`WorkerPool`] and a placement [`Ring`]. Every
+//! client connection gets a handler thread (same accept loop shape as
+//! the worker server); a background health thread probes workers,
+//! restarts spawned ones that exited, and re-drives model placement
+//! whenever the healthy set changes. Inference requests go through
+//! admission (per-worker in-flight caps, bounded router queue, typed
+//! shed) and are then forwarded **verbatim** — the response line a
+//! client sees is exactly the bytes the worker wrote.
+
+use super::client::WorkerClient;
+use super::placement::{ModelSpec, Ring};
+use super::pool::{WorkerId, WorkerPool};
+use crate::api::ImagineError;
+use crate::coordinator::server::{sigint_release, StopTarget, PROTOCOL_VERSION};
+use crate::util::json::{obj, Json};
+use crate::util::stats::{
+    bucket_percentile, buckets_from_json, buckets_to_json, merge_histogram_buckets, pow2_bounds,
+    AtomicHistogram,
+};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// How long handler reads block before checking the stop flag (same
+/// rationale as the worker server's READ_POLL).
+const READ_POLL: Duration = Duration::from_millis(250);
+
+/// Bound on a blocked client-response write.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Forward attempts per request: first try + up to three failovers
+/// (marked-dead worker, placement repair race, torn connection).
+const MAX_ATTEMPTS: usize = 4;
+
+/// Grace given to a spawned worker between the v3 `shutdown` cmd and a
+/// hard kill at router shutdown.
+const WORKER_STOP_GRACE: Duration = Duration::from_secs(3);
+
+/// Router tuning knobs — every one surfaced as an `imagine router` flag.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Default replication factor for models that don't pin their own.
+    pub replicas: usize,
+    /// Per-worker in-flight cap (admission is router-side counting; the
+    /// worker's probed `queue_depth` is the cross-check in `stats`).
+    pub max_inflight: usize,
+    /// Bound on requests queued at the router once every replica is at
+    /// its cap; beyond it requests are shed with `code: "overloaded"`.
+    pub queue_depth: usize,
+    /// How long a queued request waits for a slot before being shed.
+    pub queue_wait: Duration,
+    /// Health probe period.
+    pub probe_interval: Duration,
+    /// Timeout on one health probe (connect + stats round trip).
+    pub probe_timeout: Duration,
+    /// Timeout on a forwarded request round trip (and on deploy
+    /// fan-out, which loads artifacts worker-side).
+    pub request_timeout: Duration,
+    /// Consecutive failed probes before a worker is marked dead. The
+    /// request path marks dead after a single connection error —
+    /// probes tolerate flap, live traffic cannot.
+    pub fail_after: u32,
+    /// Virtual nodes per worker on the placement ring.
+    pub vnodes: usize,
+    /// Worker binary for `--spawn` / restarts; `None` = this binary.
+    pub worker_exe: Option<PathBuf>,
+    /// Extra args appended to every spawned worker's command line
+    /// (e.g. `--workers 2 --flush-us 100`).
+    pub worker_args: Vec<String>,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            replicas: 2,
+            max_inflight: 64,
+            queue_depth: 128,
+            queue_wait: Duration::from_secs(2),
+            probe_interval: Duration::from_millis(500),
+            probe_timeout: Duration::from_secs(1),
+            request_timeout: Duration::from_secs(30),
+            fail_after: 2,
+            vnodes: 16,
+            worker_exe: None,
+            worker_args: Vec::new(),
+        }
+    }
+}
+
+/// The front process. Built in two phases: a `&mut` setup phase
+/// (attach/spawn workers, register models), then the shared serving
+/// phase (`serve` / `serve_listener`, handler + health threads).
+pub struct Router {
+    cfg: RouterConfig,
+    pool: WorkerPool,
+    ring: Ring,
+    /// Registered models, registration order; the first entry is the
+    /// fleet's default model (what requests without a `model` field
+    /// route to).
+    registry: Mutex<Vec<ModelSpec>>,
+    // Serving counters.
+    requests: AtomicU64,
+    errors: AtomicU64,
+    retries: AtomicU64,
+    shed: AtomicU64,
+    /// Requests currently waiting in the router overflow queue.
+    queued: AtomicUsize,
+    /// Router-side end-to-end latency (admission wait + forward) [µs].
+    latency: AtomicHistogram,
+    stop: AtomicBool,
+    /// Set when the accept loop exits: lets the health thread wind down
+    /// even when the loop ended via `max_conns` rather than a stop.
+    accept_done: AtomicBool,
+    /// Queued requests park here; every in-flight release notifies.
+    queue_lock: Mutex<()>,
+    queue_cv: Condvar,
+    /// Serializes placement repair (health thread, request-path
+    /// failover and deploys would otherwise race duplicate fan-outs).
+    repair: Mutex<()>,
+}
+
+impl Router {
+    pub fn new(cfg: RouterConfig) -> Router {
+        Router {
+            cfg,
+            pool: WorkerPool::new(),
+            ring: Ring::new(),
+            registry: Mutex::new(Vec::new()),
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            queued: AtomicUsize::new(0),
+            latency: AtomicHistogram::new(pow2_bounds(26)),
+            stop: AtomicBool::new(false),
+            accept_done: AtomicBool::new(false),
+            queue_lock: Mutex::new(()),
+            queue_cv: Condvar::new(),
+            repair: Mutex::new(()),
+        }
+    }
+
+    pub fn config(&self) -> &RouterConfig {
+        &self.cfg
+    }
+
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
+    }
+
+    /// Attach an externally managed worker. Setup phase only; liveness
+    /// is established by the first probe, not here.
+    pub fn attach_worker(&mut self, addr: impl Into<String>) -> WorkerId {
+        let id = self.pool.attach(addr);
+        self.ring.add_slot(id, self.cfg.vnodes);
+        id
+    }
+
+    /// Spawn `n` worker processes (this binary's `serve --no-model` on
+    /// ephemeral ports) and add them to the fleet.
+    pub fn spawn_workers(&mut self, n: usize) -> Result<Vec<WorkerId>> {
+        let exe = self.worker_exe()?;
+        let mut ids = Vec::with_capacity(n);
+        for _ in 0..n {
+            let id = self.pool.spawn(&exe, &self.cfg.worker_args)?;
+            self.ring.add_slot(id, self.cfg.vnodes);
+            ids.push(id);
+        }
+        Ok(ids)
+    }
+
+    fn worker_exe(&self) -> Result<PathBuf> {
+        match &self.cfg.worker_exe {
+            Some(p) => Ok(p.clone()),
+            None => std::env::current_exe().context("resolving worker binary"),
+        }
+    }
+
+    /// Register a model and deploy it onto its placement. Errors if no
+    /// healthy worker accepted it (bad artifacts error here, at
+    /// registration, not at first request). Registering an existing
+    /// name re-deploys (hot reload through the fleet).
+    pub fn register(&self, spec: ModelSpec) -> Result<Vec<WorkerId>> {
+        {
+            let mut reg = self.registry.lock().unwrap();
+            reg.retain(|s| s.name != spec.name);
+            reg.push(spec.clone());
+        }
+        let _g = self.repair.lock().unwrap();
+        self.place_spec(&spec)
+    }
+
+    fn unregister(&self, name: &str) -> bool {
+        let mut reg = self.registry.lock().unwrap();
+        let before = reg.len();
+        reg.retain(|s| s.name != name);
+        reg.len() != before
+    }
+
+    fn spec_of(&self, name: &str) -> Option<ModelSpec> {
+        self.registry.lock().unwrap().iter().find(|s| s.name == name).cloned()
+    }
+
+    fn default_model(&self) -> Option<String> {
+        self.registry.lock().unwrap().first().map(|s| s.name.clone())
+    }
+
+    fn effective_replicas(&self, spec_replicas: usize) -> usize {
+        let r = if spec_replicas > 0 { spec_replicas } else { self.cfg.replicas };
+        r.max(1)
+    }
+
+    /// The model's current shard set: first `replicas` healthy workers
+    /// along the ring.
+    fn effective_shards(&self, name: &str, spec_replicas: usize) -> Vec<WorkerId> {
+        self.ring.shards(name, self.effective_replicas(spec_replicas), |s| {
+            self.pool.slot(s).healthy()
+        })
+    }
+
+    // ---- placement -----------------------------------------------------
+
+    /// Deploy `spec` onto every shard that doesn't hold it yet. Returns
+    /// the shard set; errors when nothing healthy accepted the model.
+    /// Caller holds the repair lock.
+    fn place_spec(&self, spec: &ModelSpec) -> Result<Vec<WorkerId>> {
+        let shards = self.effective_shards(&spec.name, spec.replicas);
+        if shards.is_empty() {
+            bail!("{}", ImagineError::NoHealthyWorkers { model: spec.name.clone() });
+        }
+        let mut placed = Vec::with_capacity(shards.len());
+        let mut first_err: Option<anyhow::Error> = None;
+        for &id in &shards {
+            let slot = self.pool.slot(id);
+            if slot.is_deployed(&spec.name) {
+                placed.push(id);
+                continue;
+            }
+            match self.deploy_to(id, spec) {
+                Ok(()) => {
+                    slot.note_deployed(&spec.name);
+                    placed.push(id);
+                }
+                Err(e) => {
+                    first_err.get_or_insert(e.context(format!("deploying onto worker {id}")));
+                }
+            }
+        }
+        if placed.is_empty() {
+            Err(first_err.unwrap_or_else(|| anyhow!("no shard accepted '{}'", spec.name)))
+        } else {
+            Ok(placed)
+        }
+    }
+
+    /// One worker-side `deploy` round trip from the spec's tensorfile
+    /// artifacts.
+    fn deploy_to(&self, id: WorkerId, spec: &ModelSpec) -> Result<()> {
+        let addr = self.pool.slot(id).addr();
+        let mut c = WorkerClient::connect(&addr, self.cfg.probe_timeout)?;
+        // Deploys load artifacts worker-side: give the round trip the
+        // full request timeout, not the probe timeout.
+        c.set_timeout(self.cfg.request_timeout)?;
+        let resp = c.request_json(&spec.deploy_line())?;
+        if let Some(err) = resp.get("error").and_then(Json::as_str) {
+            bail!("worker rejected deploy: {err}");
+        }
+        Ok(())
+    }
+
+    /// Re-drive the placement of every registered model (after any
+    /// health change). Best-effort: a model with no healthy shard stays
+    /// unplaced until the next repair.
+    fn repair_placement(&self) {
+        let _g = self.repair.lock().unwrap();
+        let specs: Vec<ModelSpec> = self.registry.lock().unwrap().clone();
+        for spec in &specs {
+            if let Err(e) = self.place_spec(spec) {
+                eprintln!("router: placement of '{}' incomplete: {e:#}", spec.name);
+            }
+        }
+    }
+
+    // ---- health --------------------------------------------------------
+
+    /// Probe one worker (restarting a spawned one that exited). Returns
+    /// `true` when placement must be re-driven: the worker died, came
+    /// back, or was just restarted empty.
+    fn check_worker(&self, id: WorkerId) -> bool {
+        let slot = self.pool.slot(id);
+        let mut need_repair = false;
+        if slot.spawned && slot.reap_if_exited() {
+            eprintln!("router: worker {id} exited; restarting");
+            match self.worker_exe().and_then(|exe| {
+                self.pool.respawn(id, &exe, &self.cfg.worker_args)
+            }) {
+                Ok(()) => {
+                    eprintln!("router: worker {id} restarted at {}", slot.addr());
+                    // Fresh process, empty hub: re-deploy its share.
+                    need_repair = true;
+                }
+                Err(e) => {
+                    eprintln!("router: restarting worker {id} failed: {e:#}");
+                    // Dead and not coming back this tick: survivors
+                    // must cover its models.
+                    return true;
+                }
+            }
+        }
+        let probe = WorkerClient::connect(&slot.addr(), self.cfg.probe_timeout)
+            .and_then(|mut c| c.request_json(r#"{"cmd":"stats"}"#));
+        match probe {
+            Ok(j) => {
+                let depth = j.get("queue_depth").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+                let buckets = buckets_from_json(j.get("latency_buckets"));
+                let req = j.get("requests").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+                let err = j.get("errors").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+                if slot.note_probe_ok(depth, buckets, (req, err)) {
+                    eprintln!("router: worker {id} back at {}; re-deploying", slot.addr());
+                    need_repair = true;
+                }
+            }
+            Err(_) => {
+                if slot.note_failure(self.cfg.fail_after) {
+                    eprintln!("router: worker {id} ({}) marked dead", slot.addr());
+                    need_repair = true;
+                }
+            }
+        }
+        need_repair
+    }
+
+    /// Probe every worker once; repair placement if anything changed.
+    fn health_tick(&self) {
+        let mut need_repair = false;
+        for slot in self.pool.slots() {
+            need_repair |= self.check_worker(slot.id);
+        }
+        if need_repair {
+            self.repair_placement();
+        }
+    }
+
+    fn health_loop(&self) {
+        while !self.stop_requested() && !self.accept_done.load(Ordering::SeqCst) {
+            self.health_tick();
+            // Sleep in short slices so shutdown isn't held hostage by
+            // the probe period.
+            let deadline = Instant::now() + self.cfg.probe_interval;
+            while Instant::now() < deadline {
+                if self.stop_requested() || self.accept_done.load(Ordering::SeqCst) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        }
+    }
+
+    // ---- admission / back-pressure -------------------------------------
+
+    /// Claim an in-flight token on the least-loaded shard below its
+    /// cap, or `None` if every shard is saturated.
+    fn try_admit(&self, shards: &[WorkerId]) -> Option<WorkerId> {
+        loop {
+            let mut best: Option<(usize, WorkerId)> = None;
+            for &id in shards {
+                let slot = self.pool.slot(id);
+                if !slot.healthy() {
+                    continue;
+                }
+                let load = slot.in_flight.load(Ordering::SeqCst);
+                if load < self.cfg.max_inflight && best.is_none_or(|(b, _)| load < b) {
+                    best = Some((load, id));
+                }
+            }
+            let (_, id) = best?;
+            // Claim-then-verify: concurrent admissions may have filled
+            // the slot between the scan and the claim.
+            let prev = self.pool.slot(id).in_flight.fetch_add(1, Ordering::SeqCst);
+            if prev < self.cfg.max_inflight {
+                return Some(id);
+            }
+            self.pool.slot(id).in_flight.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Admit a request for `name`: immediate token, or a bounded wait
+    /// in the router queue, or a typed shed. The shard set is
+    /// recomputed on every wakeup so a queued request rides out a
+    /// failover instead of timing out against a dead shard.
+    fn admit(&self, name: &str, spec_replicas: usize) -> Result<WorkerId, ImagineError> {
+        let shards = self.effective_shards(name, spec_replicas);
+        if shards.is_empty() {
+            return Err(ImagineError::NoHealthyWorkers { model: name.to_string() });
+        }
+        if let Some(id) = self.try_admit(&shards) {
+            return Ok(id);
+        }
+        // Every replica is at its cap: queue at the router, bounded.
+        let waiting = self.queued.fetch_add(1, Ordering::SeqCst);
+        if waiting >= self.cfg.queue_depth {
+            self.queued.fetch_sub(1, Ordering::SeqCst);
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(ImagineError::Overloaded {
+                model: name.to_string(),
+                queue_depth: self.cfg.queue_depth,
+            });
+        }
+        let deadline = Instant::now() + self.cfg.queue_wait;
+        let mut guard = self.queue_lock.lock().unwrap();
+        loop {
+            let shards = self.effective_shards(name, spec_replicas);
+            if shards.is_empty() {
+                self.queued.fetch_sub(1, Ordering::SeqCst);
+                return Err(ImagineError::NoHealthyWorkers { model: name.to_string() });
+            }
+            if let Some(id) = self.try_admit(&shards) {
+                self.queued.fetch_sub(1, Ordering::SeqCst);
+                return Ok(id);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                self.queued.fetch_sub(1, Ordering::SeqCst);
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(ImagineError::Overloaded {
+                    model: name.to_string(),
+                    queue_depth: self.cfg.queue_depth,
+                });
+            }
+            // Bounded slices: a release notifies, but a failover that
+            // frees capacity doesn't, so never park unbounded.
+            let wait = (deadline - now).min(Duration::from_millis(50));
+            let (g, _) = self.queue_cv.wait_timeout(guard, wait).unwrap();
+            guard = g;
+        }
+    }
+
+    /// Return an in-flight token and wake one queued request.
+    fn release(&self, id: WorkerId) {
+        self.pool.slot(id).in_flight.fetch_sub(1, Ordering::SeqCst);
+        let _g = self.queue_lock.lock().unwrap();
+        self.queue_cv.notify_all();
+    }
+
+    // ---- forwarding ----------------------------------------------------
+
+    /// Forward an inference line to a shard of `name`, with failover:
+    /// connection errors mark the worker dead, repair placement and
+    /// retry on the next replica; a worker answering "no deployed
+    /// model" (deploy race after failover) triggers one repair + retry.
+    /// Success responses are returned byte-for-byte as the worker sent
+    /// them.
+    fn forward_inference(&self, cache: &mut ConnCache, name: &str, line: &str) -> String {
+        let spec_replicas = self.spec_of(name).map(|s| s.replicas).unwrap_or(0);
+        let t0 = Instant::now();
+        let mut last_err: Option<String> = None;
+        for attempt in 0..MAX_ATTEMPTS {
+            let id = match self.admit(name, spec_replicas) {
+                Ok(id) => id,
+                Err(e) => {
+                    self.errors.fetch_add(1, Ordering::Relaxed);
+                    return error_line(&e);
+                }
+            };
+            self.pool.slot(id).routed.fetch_add(1, Ordering::Relaxed);
+            let res = cache.get(self, id).and_then(|c| c.request(line));
+            self.release(id);
+            match res {
+                Ok(resp) => {
+                    if attempt + 1 < MAX_ATTEMPTS && is_missing_model_error(&resp) {
+                        // The worker is healthy but doesn't hold the
+                        // model (failover re-deploy hasn't landed):
+                        // repair and retry rather than failing the
+                        // client.
+                        self.retries.fetch_add(1, Ordering::Relaxed);
+                        self.repair_placement();
+                        continue;
+                    }
+                    self.requests.fetch_add(1, Ordering::Relaxed);
+                    self.latency.record(t0.elapsed().as_micros() as u64);
+                    return resp;
+                }
+                Err(e) => {
+                    cache.drop_conn(id);
+                    // Live traffic fails a worker on the first
+                    // connection error — retrying into a dead socket
+                    // is what probes are for tolerating, not clients.
+                    if self.pool.slot(id).note_failure(1) {
+                        eprintln!("router: worker {id} failed a request; marked dead");
+                    }
+                    self.retries.fetch_add(1, Ordering::Relaxed);
+                    self.repair_placement();
+                    last_err = Some(format!("{e:#}"));
+                }
+            }
+        }
+        self.errors.fetch_add(1, Ordering::Relaxed);
+        let detail = last_err.unwrap_or_else(|| "exhausted retries".to_string());
+        error_line_raw(&format!(
+            "request for '{name}' failed after {MAX_ATTEMPTS} attempts: {detail}"
+        ))
+    }
+
+    /// Route a control cmd (`info` / `graph_info`) to one replica and
+    /// forward the answer verbatim.
+    fn route_control(&self, cache: &mut ConnCache, name: &str, line: &str) -> String {
+        let spec_replicas = self.spec_of(name).map(|s| s.replicas).unwrap_or(0);
+        let shards = self.effective_shards(name, spec_replicas);
+        let mut last_err: Option<String> = None;
+        for id in shards {
+            match cache.get(self, id).and_then(|c| c.request(line)) {
+                Ok(resp) => return resp,
+                Err(e) => {
+                    cache.drop_conn(id);
+                    last_err = Some(format!("{e:#}"));
+                }
+            }
+        }
+        self.errors.fetch_add(1, Ordering::Relaxed);
+        match last_err {
+            Some(e) => error_line_raw(&format!("no replica of '{name}' answered: {e}")),
+            None => error_line(&ImagineError::NoHealthyWorkers { model: name.to_string() }),
+        }
+    }
+
+    // ---- fleet cmds ----------------------------------------------------
+
+    /// Router `stats`: probe the fleet live (also fast-paths dead-worker
+    /// re-admission), then aggregate — router counters, per-shard
+    /// occupancy, and fleet latency percentiles from the weighted
+    /// bucket merge.
+    fn stats_json(&self) -> Json {
+        self.health_tick();
+        let mut shard_rows = Vec::with_capacity(self.pool.len());
+        let mut all_buckets = Vec::with_capacity(self.pool.len());
+        let mut fleet_requests = 0u64;
+        let mut fleet_errors = 0u64;
+        for slot in self.pool.slots() {
+            let (depth, buckets, req, err) = slot.probe_snapshot();
+            fleet_requests += req;
+            fleet_errors += err;
+            let models: Vec<Json> =
+                slot.deployed_models().into_iter().map(Json::Str).collect();
+            shard_rows.push(obj(vec![
+                ("id", Json::Num(slot.id as f64)),
+                ("addr", Json::Str(slot.addr())),
+                ("healthy", Json::Bool(slot.healthy())),
+                ("spawned", Json::Bool(slot.spawned)),
+                (
+                    "pid",
+                    slot.pid().map(|p| Json::Num(p as f64)).unwrap_or(Json::Null),
+                ),
+                (
+                    "in_flight",
+                    Json::Num(slot.in_flight.load(Ordering::SeqCst) as f64),
+                ),
+                ("queue_depth", Json::Num(depth as f64)),
+                (
+                    "routed",
+                    Json::Num(slot.routed.load(Ordering::Relaxed) as f64),
+                ),
+                ("requests", Json::Num(req as f64)),
+                ("errors", Json::Num(err as f64)),
+                ("models", Json::Arr(models)),
+            ]));
+            all_buckets.push(buckets);
+        }
+        let fleet = merge_histogram_buckets(&all_buckets);
+        let placements: Vec<Json> = self
+            .registry
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|spec| {
+                let shards = self.effective_shards(&spec.name, spec.replicas);
+                obj(vec![
+                    ("name", Json::Str(spec.name.clone())),
+                    (
+                        "replicas",
+                        Json::Num(self.effective_replicas(spec.replicas) as f64),
+                    ),
+                    (
+                        "shards",
+                        Json::Arr(shards.into_iter().map(|s| Json::Num(s as f64)).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("protocol", Json::Num(PROTOCOL_VERSION as f64)),
+            ("role", Json::Str("router".to_string())),
+            ("workers", Json::Num(self.pool.len() as f64)),
+            ("healthy_workers", Json::Num(self.pool.healthy_count() as f64)),
+            ("requests", Json::Num(self.requests.load(Ordering::Relaxed) as f64)),
+            ("errors", Json::Num(self.errors.load(Ordering::Relaxed) as f64)),
+            ("retries", Json::Num(self.retries.load(Ordering::Relaxed) as f64)),
+            ("shed", Json::Num(self.shed.load(Ordering::Relaxed) as f64)),
+            ("queued", Json::Num(self.queued.load(Ordering::SeqCst) as f64)),
+            ("queue_bound", Json::Num(self.cfg.queue_depth as f64)),
+            ("max_inflight", Json::Num(self.cfg.max_inflight as f64)),
+            // Fleet-wide latency percentiles: weighted merge of every
+            // worker's raw buckets (not an average of percentiles).
+            ("fleet_requests", Json::Num(fleet_requests as f64)),
+            ("fleet_errors", Json::Num(fleet_errors as f64)),
+            (
+                "p50_latency_micros",
+                Json::Num(bucket_percentile(&fleet, 50.0) as f64),
+            ),
+            (
+                "p99_latency_micros",
+                Json::Num(bucket_percentile(&fleet, 99.0) as f64),
+            ),
+            ("latency_buckets", buckets_to_json(&fleet)),
+            // Router-side end-to-end latency (includes queue wait).
+            (
+                "router_p50_micros",
+                Json::Num(self.latency.percentile(50.0) as f64),
+            ),
+            (
+                "router_p99_micros",
+                Json::Num(self.latency.percentile(99.0) as f64),
+            ),
+            ("shards", Json::Arr(shard_rows)),
+            ("models", Json::Arr(placements)),
+        ])
+    }
+
+    /// Router `models`: the registry with placements, plus per-model
+    /// served-image totals summed across the fleet.
+    fn models_json(&self) -> Json {
+        let mut images: HashMap<String, u64> = HashMap::new();
+        for slot in self.pool.slots() {
+            if !slot.healthy() {
+                continue;
+            }
+            let fetched = WorkerClient::connect(&slot.addr(), self.cfg.probe_timeout)
+                .and_then(|mut c| c.request_json(r#"{"cmd":"models"}"#));
+            if let Ok(j) = fetched {
+                for m in j.get("models").and_then(Json::as_arr).unwrap_or_default() {
+                    if let (Some(name), Some(n)) = (
+                        m.get("name").and_then(Json::as_str),
+                        m.get("images").and_then(Json::as_f64),
+                    ) {
+                        *images.entry(name.to_string()).or_insert(0) += n as u64;
+                    }
+                }
+            }
+        }
+        let models: Vec<Json> = self
+            .registry
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|spec| {
+                let shards = self.effective_shards(&spec.name, spec.replicas);
+                obj(vec![
+                    ("name", Json::Str(spec.name.clone())),
+                    ("dir", Json::Str(spec.dir.clone())),
+                    ("manifest", Json::Str(spec.manifest.clone())),
+                    ("backend", Json::Str(spec.backend.clone())),
+                    (
+                        "replicas",
+                        Json::Num(self.effective_replicas(spec.replicas) as f64),
+                    ),
+                    (
+                        "shards",
+                        Json::Arr(shards.into_iter().map(|s| Json::Num(s as f64)).collect()),
+                    ),
+                    (
+                        "images",
+                        Json::Num(*images.get(&spec.name).unwrap_or(&0) as f64),
+                    ),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("protocol", Json::Num(PROTOCOL_VERSION as f64)),
+            ("role", Json::Str("router".to_string())),
+            (
+                "default",
+                self.default_model().map(Json::Str).unwrap_or(Json::Null),
+            ),
+            ("n_models", Json::Num(models.len() as f64)),
+            ("models", Json::Arr(models)),
+        ])
+    }
+
+    /// Router `deploy`: register the spec and fan the deploy out to its
+    /// placement.
+    fn cmd_deploy(&self, parsed: &Json) -> String {
+        let Some(name) = parsed.get("name").and_then(Json::as_str) else {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+            return error_line_raw("deploy needs a \"name\"");
+        };
+        let mut spec = ModelSpec::new(
+            name,
+            parsed.get("dir").and_then(Json::as_str).unwrap_or("artifacts"),
+        );
+        if let Some(m) = parsed.get("manifest").and_then(Json::as_str) {
+            spec.manifest = m.to_string();
+        }
+        if let Some(b) = parsed.get("backend").and_then(Json::as_str) {
+            spec.backend = b.to_string();
+        }
+        match crate::coordinator::server::request_precision(parsed) {
+            Ok(p) => spec.precision = p,
+            Err(e) => {
+                self.errors.fetch_add(1, Ordering::Relaxed);
+                return error_line(&e);
+            }
+        }
+        spec.seed = parsed.get("seed").and_then(Json::as_usize).map(|s| s as u64);
+        spec.replicas = parsed.get("replicas").and_then(Json::as_usize).unwrap_or(0);
+        match self.register(spec.clone()) {
+            Ok(shards) => obj(vec![
+                ("protocol", Json::Num(PROTOCOL_VERSION as f64)),
+                ("deployed", Json::Str(name.to_string())),
+                (
+                    "replicas",
+                    Json::Num(self.effective_replicas(spec.replicas) as f64),
+                ),
+                (
+                    "shards",
+                    Json::Arr(shards.into_iter().map(|s| Json::Num(s as f64)).collect()),
+                ),
+            ])
+            .to_string_compact(),
+            Err(e) => {
+                self.unregister(name);
+                self.errors.fetch_add(1, Ordering::Relaxed);
+                error_line_raw(&format!("{e:#}"))
+            }
+        }
+    }
+
+    /// Router `undeploy`: fan out to every worker holding the model,
+    /// then drop it from the registry.
+    fn cmd_undeploy(&self, parsed: &Json) -> String {
+        let Some(name) = parsed.get("name").and_then(Json::as_str) else {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+            return error_line_raw("undeploy needs a \"name\"");
+        };
+        if !self.unregister(name) {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+            return error_line(&ImagineError::UnknownModel { model: name.to_string() });
+        }
+        let _g = self.repair.lock().unwrap();
+        let line = obj(vec![
+            ("cmd", Json::Str("undeploy".to_string())),
+            ("name", Json::Str(name.to_string())),
+        ])
+        .to_string_compact();
+        let mut removed = 0usize;
+        for slot in self.pool.slots() {
+            if !slot.is_deployed(name) {
+                continue;
+            }
+            let res = WorkerClient::connect(&slot.addr(), self.cfg.probe_timeout)
+                .and_then(|mut c| c.request(&line));
+            if res.is_ok() {
+                removed += 1;
+            }
+            // Forget it either way: an unreachable worker's copy is
+            // re-driven from the (now smaller) registry when it
+            // returns, which no longer includes this model.
+            slot.note_undeployed(name);
+        }
+        obj(vec![
+            ("protocol", Json::Num(PROTOCOL_VERSION as f64)),
+            ("undeployed", Json::Str(name.to_string())),
+            ("shards_cleared", Json::Num(removed as f64)),
+        ])
+        .to_string_compact()
+    }
+
+    // ---- request dispatch ----------------------------------------------
+
+    /// Handle one client line. `None` closes the connection (`quit`).
+    fn handle_line(&self, cache: &mut ConnCache, line: &str) -> Option<String> {
+        let parsed = match Json::parse(line) {
+            Ok(j) => j,
+            Err(e) => {
+                self.errors.fetch_add(1, Ordering::Relaxed);
+                return Some(error_line_raw(&format!("bad json: {e}")));
+            }
+        };
+        if let Some(cmd) = parsed.get("cmd").and_then(Json::as_str) {
+            return match cmd {
+                "stats" => Some(self.stats_json().to_string_compact()),
+                "models" => Some(self.models_json().to_string_compact()),
+                "deploy" => Some(self.cmd_deploy(&parsed)),
+                "undeploy" => Some(self.cmd_undeploy(&parsed)),
+                "info" | "graph_info" => {
+                    let name = match self.resolve_model(&parsed) {
+                        Ok(n) => n,
+                        Err(resp) => return Some(resp),
+                    };
+                    Some(self.route_control(cache, &name, line))
+                }
+                "shutdown" => {
+                    self.request_stop();
+                    Some(
+                        obj(vec![
+                            ("protocol", Json::Num(PROTOCOL_VERSION as f64)),
+                            ("shutting_down", Json::Bool(true)),
+                        ])
+                        .to_string_compact(),
+                    )
+                }
+                "quit" => None,
+                other => Some(error_line_raw(&format!("unknown cmd '{other}'"))),
+            };
+        }
+        // Inference: resolve the routing model, forward verbatim. A
+        // request without a model field is stamped with the fleet
+        // default before forwarding — each worker's own default can
+        // differ (deploy order varies per worker), and routing and
+        // execution must agree on the model.
+        let named = parsed.get("model").and_then(Json::as_str).is_some();
+        let name = match self.resolve_model(&parsed) {
+            Ok(n) => n,
+            Err(resp) => return Some(resp),
+        };
+        let line = if named {
+            line.to_string()
+        } else {
+            stamp_model(line, &name)
+        };
+        Some(self.forward_inference(cache, &name, &line))
+    }
+
+    /// The routing model for a request: its `model` field (must be
+    /// registered) or the fleet default. Err carries the in-band
+    /// response line.
+    fn resolve_model(&self, parsed: &Json) -> Result<String, String> {
+        match parsed.get("model").and_then(Json::as_str) {
+            Some(name) => {
+                if self.spec_of(name).is_some() {
+                    Ok(name.to_string())
+                } else {
+                    self.errors.fetch_add(1, Ordering::Relaxed);
+                    Err(error_line(&ImagineError::UnknownModel { model: name.to_string() }))
+                }
+            }
+            None => self.default_model().ok_or_else(|| {
+                self.errors.fetch_add(1, Ordering::Relaxed);
+                error_line_raw("no models registered at router")
+            }),
+        }
+    }
+
+    // ---- serving -------------------------------------------------------
+
+    fn serve_conn(&self, stream: TcpStream) -> Result<()> {
+        stream.set_read_timeout(Some(READ_POLL)).context("setting read timeout")?;
+        stream.set_write_timeout(Some(WRITE_TIMEOUT)).context("setting write timeout")?;
+        let mut writer = stream.try_clone().context("cloning stream")?;
+        let mut reader = BufReader::new(stream);
+        let mut cache = ConnCache::default();
+        let mut line = Vec::new();
+        loop {
+            match reader.read_until(b'\n', &mut line) {
+                Ok(0) => break,
+                Ok(_) => {
+                    let quit = {
+                        let text = String::from_utf8_lossy(&line);
+                        let text = text.trim();
+                        if text.is_empty() {
+                            false
+                        } else {
+                            match self.handle_line(&mut cache, text) {
+                                Some(resp) => {
+                                    writer.write_all(resp.as_bytes())?;
+                                    writer.write_all(b"\n")?;
+                                    false
+                                }
+                                None => true,
+                            }
+                        }
+                    };
+                    if quit {
+                        break;
+                    }
+                    line.clear();
+                    if self.stop_requested() {
+                        break;
+                    }
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    if self.stop_requested() {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(())
+    }
+
+    /// Serve client connections on an already-bound listener, with the
+    /// health/failover thread running alongside. Returns after a stop
+    /// is requested (`shutdown` cmd or SIGINT) or `max_conns`
+    /// connections were accepted; spawned workers are shut down
+    /// gracefully on the way out.
+    pub fn serve_listener(&self, listener: TcpListener, max_conns: Option<usize>) -> Result<()> {
+        listener.set_nonblocking(true).context("setting listener non-blocking")?;
+        // Make sure the initial placement exists even if the caller
+        // never registered a model through us (attach-only fleets that
+        // deploy via the router cmd later are fine too).
+        self.repair_placement();
+        std::thread::scope(|scope| -> Result<()> {
+            scope.spawn(|| self.health_loop());
+            let mut conns = 0usize;
+            loop {
+                if self.stop_requested() {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        if let Err(e) = stream.set_nonblocking(false) {
+                            eprintln!("accept error (set_nonblocking): {e}");
+                            continue;
+                        }
+                        scope.spawn(move || {
+                            let peer = stream.peer_addr().ok();
+                            if let Err(err) = self.serve_conn(stream) {
+                                eprintln!("router connection error ({peer:?}): {err:#}");
+                            }
+                        });
+                        conns += 1;
+                        if let Some(max) = max_conns {
+                            if conns >= max {
+                                break;
+                            }
+                        }
+                    }
+                    Err(e)
+                        if e.kind() == std::io::ErrorKind::WouldBlock
+                            || e.kind() == std::io::ErrorKind::Interrupted =>
+                    {
+                        std::thread::sleep(Duration::from_millis(25));
+                    }
+                    Err(e) => {
+                        eprintln!("accept error: {e}");
+                        std::thread::sleep(Duration::from_millis(25));
+                    }
+                }
+            }
+            // Unblocks the health thread; handler threads wind down on
+            // their own read-timeout stop checks.
+            self.accept_done.store(true, Ordering::SeqCst);
+            Ok(())
+        })?;
+        self.shutdown_workers();
+        sigint_release(self);
+        eprintln!(
+            "router stats: requests {} errors {} retries {} shed {}",
+            self.requests.load(Ordering::Relaxed),
+            self.errors.load(Ordering::Relaxed),
+            self.retries.load(Ordering::Relaxed),
+            self.shed.load(Ordering::Relaxed),
+        );
+        Ok(())
+    }
+
+    /// Bind `addr`, print the machine-readable `READY port=<n>` line,
+    /// and serve (blocks until stop).
+    pub fn serve(&self, addr: &str, max_conns: Option<usize>) -> Result<()> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr().context("resolving bound address")?;
+        {
+            let mut out = std::io::stdout();
+            let _ = writeln!(out, "READY port={}", local.port());
+            let _ = out.flush();
+        }
+        let models: Vec<String> =
+            self.registry.lock().unwrap().iter().map(|s| s.name.clone()).collect();
+        eprintln!(
+            "imagine router listening on {addr} ({local}): {} workers, models {models:?}",
+            self.pool.len(),
+        );
+        self.serve_listener(listener, max_conns)
+    }
+
+    /// Stop spawned workers: polite v3 `shutdown`, bounded wait, then
+    /// kill. Attached workers are left running — the router does not
+    /// own their lifecycle.
+    fn shutdown_workers(&self) {
+        for slot in self.pool.slots() {
+            if !slot.spawned {
+                continue;
+            }
+            let _ = WorkerClient::connect(&slot.addr(), self.cfg.probe_timeout)
+                .and_then(|mut c| c.request(r#"{"cmd":"shutdown"}"#));
+            let deadline = Instant::now() + WORKER_STOP_GRACE;
+            while Instant::now() < deadline {
+                if slot.reap_if_exited() {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            slot.kill_child();
+        }
+    }
+
+    pub fn request_stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake queued admissions so they re-check and fail fast.
+        let _g = self.queue_lock.lock().unwrap();
+        self.queue_cv.notify_all();
+    }
+
+    pub fn stop_requested(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+}
+
+impl StopTarget for Router {
+    fn request_stop(&self) {
+        Router::request_stop(self);
+    }
+    fn stop_requested(&self) -> bool {
+        Router::stop_requested(self)
+    }
+}
+
+/// Per-client-connection cache of worker connections, keyed by slot id
+/// and invalidated when the slot's address changes (restarted worker).
+#[derive(Default)]
+struct ConnCache {
+    conns: HashMap<WorkerId, (String, WorkerClient)>,
+}
+
+impl ConnCache {
+    fn get(&mut self, router: &Router, id: WorkerId) -> Result<&mut WorkerClient> {
+        let addr = router.pool.slot(id).addr();
+        let stale = self.conns.get(&id).is_none_or(|(a, _)| *a != addr);
+        if stale {
+            let client = WorkerClient::connect(&addr, router.cfg.request_timeout)?;
+            self.conns.insert(id, (addr, client));
+        }
+        Ok(&mut self.conns.get_mut(&id).expect("just inserted").1)
+    }
+
+    fn drop_conn(&mut self, id: WorkerId) {
+        self.conns.remove(&id);
+    }
+}
+
+/// In-band error with the machine-readable `code` when the error class
+/// has one.
+fn error_line(e: &ImagineError) -> String {
+    let mut pairs = vec![("error", Json::Str(format!("{e}")))];
+    if let Some(code) = e.code() {
+        pairs.push(("code", Json::Str(code.to_string())));
+    }
+    obj(pairs).to_string_compact()
+}
+
+fn error_line_raw(message: &str) -> String {
+    obj(vec![("error", Json::Str(message.to_string()))]).to_string_compact()
+}
+
+/// A worker response meaning "I don't hold that model" — retryable via
+/// placement repair (matches `ImagineError::UnknownModel`'s wire text).
+fn is_missing_model_error(resp: &str) -> bool {
+    match Json::parse(resp) {
+        Ok(j) => j
+            .get("error")
+            .and_then(Json::as_str)
+            .is_some_and(|e| e.contains("no deployed model")),
+        Err(_) => false,
+    }
+}
+
+/// Stamp the routing model into a request that lacks one, preserving
+/// every other byte of the line (the image payload is never
+/// re-serialized). The line is a parsed-valid JSON object, so inserting
+/// after the opening brace is safe; inference objects are never empty
+/// (they carry at least `image`).
+fn stamp_model(line: &str, model: &str) -> String {
+    match line.find('{') {
+        Some(i) => {
+            let mut out = String::with_capacity(line.len() + model.len() + 12);
+            out.push_str(&line[..=i]);
+            out.push_str(&format!("\"model\":\"{model}\","));
+            out.push_str(&line[i + 1..]);
+            out
+        }
+        None => line.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults_are_sane() {
+        let cfg = RouterConfig::default();
+        assert!(cfg.replicas >= 1);
+        assert!(cfg.max_inflight >= 1);
+        assert!(cfg.queue_depth >= cfg.max_inflight);
+        assert!(cfg.probe_timeout <= cfg.request_timeout);
+    }
+
+    #[test]
+    fn stamp_model_preserves_payload_bytes() {
+        let line = r#"{"image":[0.125,0.25],"precision":"2,4"}"#;
+        let stamped = stamp_model(line, "mnist");
+        assert_eq!(stamped, r#"{"model":"mnist","image":[0.125,0.25],"precision":"2,4"}"#);
+        let j = Json::parse(&stamped).unwrap();
+        assert_eq!(j.get("model").unwrap().as_str(), Some("mnist"));
+        // Payload text after the stamp is byte-identical to the input.
+        assert!(stamped.ends_with(&line[1..]));
+    }
+
+    #[test]
+    fn missing_model_errors_are_recognized() {
+        let worker_err = error_line(&ImagineError::UnknownModel { model: "m".to_string() });
+        assert!(is_missing_model_error(&worker_err), "{worker_err}");
+        assert!(!is_missing_model_error(r#"{"error":"bad inference input"}"#));
+        assert!(!is_missing_model_error(r#"{"logits":[1.0]}"#));
+        assert!(!is_missing_model_error("not json"));
+    }
+
+    #[test]
+    fn error_lines_carry_codes_for_cluster_errors() {
+        let shed = error_line(&ImagineError::Overloaded {
+            model: "m".to_string(),
+            queue_depth: 8,
+        });
+        let j = Json::parse(&shed).unwrap();
+        assert_eq!(j.get("code").unwrap().as_str(), Some("overloaded"));
+        let plain = error_line(&ImagineError::Input { message: "x".to_string() });
+        assert!(Json::parse(&plain).unwrap().get("code").is_none());
+    }
+
+    /// Admission accounting exercised without any live worker: attach
+    /// fake addresses (admission never connects — only forwarding
+    /// does), saturate the one shard, watch the shed.
+    #[test]
+    fn admission_caps_queue_and_sheds() {
+        let mut router = Router::new(RouterConfig {
+            replicas: 1,
+            max_inflight: 1,
+            queue_depth: 0,
+            queue_wait: Duration::from_millis(20),
+            ..RouterConfig::default()
+        });
+        router.attach_worker("127.0.0.1:9");
+        router
+            .registry
+            .lock()
+            .unwrap()
+            .push(ModelSpec::new("m", "arts"));
+
+        let first = router.admit("m", 0).unwrap();
+        // Cap hit + zero queue bound: immediate typed shed.
+        let err = router.admit("m", 0).unwrap_err();
+        assert_eq!(err.code(), Some("overloaded"), "{err}");
+        assert_eq!(router.shed.load(Ordering::Relaxed), 1);
+        // Release frees the slot for the next admission.
+        router.release(first);
+        let again = router.admit("m", 0).unwrap();
+        assert_eq!(again, first);
+        router.release(again);
+        assert_eq!(router.pool.slot(first).in_flight.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn queued_admission_times_out_with_a_shed() {
+        let mut router = Router::new(RouterConfig {
+            replicas: 1,
+            max_inflight: 1,
+            queue_depth: 4,
+            queue_wait: Duration::from_millis(30),
+            ..RouterConfig::default()
+        });
+        router.attach_worker("127.0.0.1:9");
+        let held = router.admit("m", 0).unwrap();
+        let t0 = Instant::now();
+        let err = router.admit("m", 0).unwrap_err();
+        assert_eq!(err.code(), Some("overloaded"), "{err}");
+        assert!(t0.elapsed() >= Duration::from_millis(25), "waited before shedding");
+        assert_eq!(router.queued.load(Ordering::SeqCst), 0, "queue slot returned");
+        router.release(held);
+    }
+
+    #[test]
+    fn admission_fails_typed_when_everything_is_dead() {
+        let mut router = Router::new(RouterConfig::default());
+        router.attach_worker("127.0.0.1:9");
+        router.pool.slot(0).note_failure(1);
+        let err = router.admit("m", 0).unwrap_err();
+        assert_eq!(err.code(), Some("unavailable"), "{err}");
+    }
+}

@@ -164,8 +164,8 @@ impl NetworkModel {
         if beta.len() != out_features {
             bail!("{name}: beta length mismatch");
         }
-        let a_scale = tf.req(&format!("{name}/a_scale"))?.as_f32()?[0];
-        let out_gain = tf.req(&format!("{name}/out_gain"))?.as_f32()?[0];
+        let a_scale = scalar_f32(tf, &format!("{name}/a_scale"))?;
+        let out_gain = scalar_f32(tf, &format!("{name}/out_gain"))?;
 
         Ok(Layer {
             name,
@@ -461,6 +461,16 @@ impl Layer {
     }
 }
 
+/// First element of a 1-element f32 tensor — a corrupt weight file with
+/// an empty scale tensor must be a typed error, not an index panic (the
+/// cluster failover path re-loads manifests while serving traffic).
+fn scalar_f32(tf: &TensorFile, name: &str) -> Result<f32> {
+    let v = tf.req(name)?.as_f32()?;
+    v.first()
+        .copied()
+        .ok_or_else(|| anyhow!("tensor '{name}' is empty (expected 1 scalar)"))
+}
+
 /// Valid antipodal `r_w`-bit weight levels: odd values in [−(2^r_w−1), 2^r_w−1].
 fn synthetic_weights(rng: &mut Rng, n: usize, r_w: u32) -> Vec<i32> {
     let max = (1i32 << r_w) - 1;
@@ -530,6 +540,59 @@ mod tests {
             assert_eq!(a.a_scale.to_bits(), b.a_scale.to_bits());
             assert_eq!(a.out_gain.to_bits(), b.out_gain.to_bits());
         }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_artifacts_load_as_typed_errors_not_panics() {
+        // Failover re-deploys read artifacts at the worst possible time;
+        // every corruption mode must come back as Err.
+        let p = MacroParams::paper();
+        let m = NetworkModel::synthetic_mlp(&[20, 8, 4], 8, 4, 8, 7, &p);
+        let dir =
+            std::env::temp_dir().join(format!("imagine_manifest_corrupt_{}", std::process::id()));
+        m.save(&dir, "c").unwrap();
+        let imgt = dir.join("c.imgt");
+        let good = std::fs::read(&imgt).unwrap();
+
+        // Truncated weight file (half the bytes).
+        std::fs::write(&imgt, &good[..good.len() / 2]).unwrap();
+        assert!(NetworkModel::load(&dir, "c").is_err());
+
+        // Empty weight file.
+        std::fs::write(&imgt, b"").unwrap();
+        assert!(NetworkModel::load(&dir, "c").is_err());
+
+        // Garbage weight file (right length, wrong magic).
+        std::fs::write(&imgt, vec![0xA5u8; good.len()]).unwrap();
+        assert!(NetworkModel::load(&dir, "c").is_err());
+
+        // Empty a_scale tensor: rebuild the tensorfile with fc0/a_scale
+        // as a 0-element tensor — must be a typed error, not `[0]`.
+        let orig = TensorFile::read_from(&mut good.as_slice()).unwrap();
+        let mut tf = TensorFile::new();
+        for t in &orig.tensors {
+            let mut t = t.clone();
+            if t.name == "fc0/a_scale" {
+                t.dims = vec![0];
+                t.data = crate::util::tensorfile::TensorData::F32(Vec::new());
+            }
+            tf.push(t);
+        }
+        tf.save(&imgt).unwrap();
+        let err = NetworkModel::load(&dir, "c").unwrap_err();
+        assert!(err.to_string().contains("empty"), "{err}");
+
+        // Truncated manifest JSON.
+        std::fs::write(&imgt, &good).unwrap();
+        let man_path = dir.join("c.manifest.json");
+        let man = std::fs::read_to_string(&man_path).unwrap();
+        std::fs::write(&man_path, &man[..man.len() / 2]).unwrap();
+        assert!(NetworkModel::load(&dir, "c").is_err());
+
+        // Restore and confirm the fixture still loads.
+        std::fs::write(&man_path, &man).unwrap();
+        assert!(NetworkModel::load(&dir, "c").is_ok());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

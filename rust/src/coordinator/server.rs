@@ -31,7 +31,9 @@
 //! * `{"cmd": "graph_info", "model": ...}` — a served model's layer
 //!   graph with per-layer modeled accelerator cost;
 //! * `{"cmd": "stats"}` — aggregate serving counters and latency /
-//!   batch-occupancy percentiles;
+//!   batch-occupancy percentiles, plus the live `queue_depth` gauge and
+//!   raw `latency_buckets` a cluster router consumes for back-pressure
+//!   and fleet-wide percentile merges;
 //! * `{"cmd": "quit"}` — close this connection;
 //! * `{"cmd": "shutdown"}` — gracefully stop the whole server: stop
 //!   accepting, let in-flight requests finish, drain the engine queue,
@@ -75,6 +77,9 @@ pub struct Stats {
     pub requests: AtomicU64,
     pub errors: AtomicU64,
     pub total_micros: AtomicU64,
+    /// Inference requests currently executing (the worker's queue depth
+    /// as seen by a cluster router's back-pressure probes).
+    pub inflight: AtomicU64,
     /// Per-request end-to-end latency [µs].
     pub latency: AtomicHistogram,
     /// Images per dispatched batch (shared with the engine dispatcher).
@@ -87,6 +92,7 @@ impl Default for Stats {
             requests: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             total_micros: AtomicU64::new(0),
+            inflight: AtomicU64::new(0),
             // 1 µs .. ~67 s in power-of-two buckets.
             latency: AtomicHistogram::new(pow2_bounds(26)),
             // Batch sizes 1 .. 1024.
@@ -109,6 +115,17 @@ impl Stats {
             ),
             ("p50_latency_micros", Json::Num(self.latency.percentile(50.0) as f64)),
             ("p99_latency_micros", Json::Num(self.latency.percentile(99.0) as f64)),
+            // Raw latency buckets + live queue depth: what a cluster
+            // router needs for fleet-wide percentile merges and
+            // back-pressure (see util::stats::merge_histogram_buckets).
+            (
+                "queue_depth",
+                Json::Num(self.inflight.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "latency_buckets",
+                crate::util::stats::buckets_to_json(&self.latency.nonzero_buckets()),
+            ),
             ("batches", Json::Num(self.occupancy.count() as f64)),
             ("mean_batch_occupancy", Json::Num(self.occupancy.mean())),
             (
@@ -242,8 +259,9 @@ fn error_json(message: impl std::fmt::Display) -> String {
 }
 
 /// The request's precision override: a number `R` or a string
-/// `"R_IN,R_OUT"`; absent/null = the deployment default.
-fn request_precision(parsed: &Json) -> Result<Option<(u32, u32)>, ImagineError> {
+/// `"R_IN,R_OUT"`; absent/null = the deployment default. Shared with
+/// the cluster router, which parses the same wire shape.
+pub(crate) fn request_precision(parsed: &Json) -> Result<Option<(u32, u32)>, ImagineError> {
     match parsed.get("precision") {
         None | Some(Json::Null) => Ok(None),
         Some(Json::Str(s)) => parse_precision(s).map(Some),
@@ -521,7 +539,10 @@ pub fn handle_line(state: &ServerState, cache: &mut SessionCache, line: &str) ->
         }
     };
     let t0 = std::time::Instant::now();
-    match session.infer_one(image) {
+    stats.inflight.fetch_add(1, Ordering::Relaxed);
+    let inferred = session.infer_one(image);
+    stats.inflight.fetch_sub(1, Ordering::Relaxed);
+    match inferred {
         Ok(logits) => {
             let us = t0.elapsed().as_micros() as u64;
             stats.requests.fetch_add(1, Ordering::Relaxed);
@@ -699,31 +720,61 @@ pub fn serve_listener(
 /// is requested, then drains gracefully).
 pub fn serve(state: &ServerState, addr: &str, max_conns: Option<usize>) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    let local = listener.local_addr().context("resolving bound address")?;
+    // Machine-readable readiness line on stdout (the human log goes to
+    // stderr): spawners — the cluster router, test harnesses, scripts —
+    // bind `--addr host:0` and parse the ephemeral port from this line.
+    // Explicitly flushed: stdout is block-buffered when piped, and a
+    // spawner blocks on this exact line.
+    {
+        let mut out = std::io::stdout();
+        let _ = writeln!(out, "READY port={}", local.port());
+        let _ = out.flush();
+    }
     eprintln!(
-        "imagine server listening on {addr} ({}), serving {:?} (default {:?})",
-        listener.local_addr().map(|a| a.to_string()).unwrap_or_default(),
+        "imagine server listening on {addr} ({local}), serving {:?} (default {:?})",
         state.hub.models(),
         state.hub.default_model(),
     );
     serve_listener(state, listener, max_conns)
 }
 
+/// Anything SIGINT can gracefully stop: the worker server
+/// ([`ServerState`]) or the cluster router
+/// ([`Router`](crate::cluster::Router)). The watcher thread only needs
+/// "ask it to stop" and "has it already been asked".
+pub trait StopTarget: Send + Sync {
+    /// Ask the target to shut down gracefully.
+    fn request_stop(&self);
+    /// Whether a stop has already been requested.
+    fn stop_requested(&self) -> bool;
+}
+
+impl StopTarget for ServerState {
+    fn request_stop(&self) {
+        ServerState::request_stop(self);
+    }
+    fn stop_requested(&self) -> bool {
+        ServerState::stop_requested(self)
+    }
+}
+
 #[cfg(unix)]
 static SIGINT_HIT: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
 #[cfg(unix)]
-static SIGINT_ACTIVE: std::sync::Mutex<Option<Arc<ServerState>>> = std::sync::Mutex::new(None);
+static SIGINT_ACTIVE: std::sync::Mutex<Option<Arc<dyn StopTarget>>> = std::sync::Mutex::new(None);
 
-/// Install a SIGINT handler that requests a graceful server stop (drain
-/// in-flight engine batches, then return from `serve`) instead of
-/// killing the process with queued work. A second Ctrl-C while a stop
-/// is already in progress force-quits (exit 130) — the drain may be
-/// stuck behind a wedged batch. One watcher thread serves the whole
-/// process: re-installing for a later server re-points it, and
-/// `serve_listener` releases the registration (dropping the state) when
-/// it returns, so a Ctrl-C with no server running exits instead of
-/// being swallowed. No-op off unix.
+/// Install a SIGINT handler that requests a graceful stop (drain
+/// in-flight work, then return from the serve loop) instead of killing
+/// the process with queued work. A second Ctrl-C while a stop is
+/// already in progress force-quits (exit 130) — the drain may be stuck
+/// behind a wedged batch. One watcher thread serves the whole process:
+/// re-installing for a later server re-points it, and the serve loop
+/// releases the registration (dropping the target) when it returns, so
+/// a Ctrl-C with no server running exits instead of being swallowed.
+/// No-op off unix.
 #[cfg(unix)]
-pub fn install_sigint_stop(state: Arc<ServerState>) {
+pub fn install_sigint_stop(target: Arc<dyn StopTarget>) {
     static WATCHER: std::sync::Once = std::sync::Once::new();
     extern "C" fn on_sigint(_sig: i32) {
         // Only async-signal-safe work here: set the flag, nothing else.
@@ -734,7 +785,7 @@ pub fn install_sigint_stop(state: Arc<ServerState>) {
         // rather than pulling a crate into the vendored dependency set.
         fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
     }
-    *SIGINT_ACTIVE.lock().unwrap() = Some(state);
+    *SIGINT_ACTIVE.lock().unwrap() = Some(target);
     WATCHER.call_once(|| {
         const SIGINT: i32 = 2;
         let _ = unsafe { signal(SIGINT, on_sigint) };
@@ -743,12 +794,12 @@ pub fn install_sigint_stop(state: Arc<ServerState>) {
             if SIGINT_HIT.swap(false, Ordering::SeqCst) {
                 let active = SIGINT_ACTIVE.lock().unwrap().clone();
                 match active {
-                    Some(state) if !state.stop_requested() => {
+                    Some(target) if !target.stop_requested() => {
                         eprintln!(
-                            "SIGINT: draining in-flight batches, shutting down \
+                            "SIGINT: draining in-flight work, shutting down \
                              (Ctrl-C again to force quit)..."
                         );
-                        state.request_stop();
+                        target.request_stop();
                     }
                     // Stop already in progress (wedged drain?) or no
                     // server registered: behave like an unhandled ^C.
@@ -764,23 +815,24 @@ pub fn install_sigint_stop(state: Arc<ServerState>) {
 }
 
 #[cfg(not(unix))]
-pub fn install_sigint_stop(_state: Arc<ServerState>) {}
+pub fn install_sigint_stop(_target: Arc<dyn StopTarget>) {}
 
-/// Drop the SIGINT registration if it points at `state` — called when
-/// its server returns, so the watcher does not retain a dead hub or
+/// Drop the SIGINT registration if it points at `target` — called when
+/// its serve loop returns, so the watcher does not retain a dead hub or
 /// swallow signals meant for nobody.
-fn sigint_release(state: &ServerState) {
+pub(crate) fn sigint_release(target: &dyn StopTarget) {
     #[cfg(unix)]
     {
         let mut active = SIGINT_ACTIVE.lock().unwrap();
         if let Some(current) = active.as_ref() {
-            if std::ptr::eq(current.as_ref(), state) {
+            let cur = Arc::as_ptr(current) as *const ();
+            if std::ptr::eq(cur, target as *const dyn StopTarget as *const ()) {
                 *active = None;
             }
         }
     }
     #[cfg(not(unix))]
-    let _ = state;
+    let _ = target;
 }
 
 #[cfg(test)]
@@ -990,6 +1042,15 @@ mod tests {
         assert_eq!(j.get("requests").unwrap().as_f64(), Some(4.0));
         assert_eq!(j.get("mean_latency_micros").unwrap().as_f64(), Some(100.0));
         assert_eq!(j.get("batches").unwrap().as_f64(), Some(0.0));
+        // Router-facing fields: live queue depth + raw latency buckets.
+        assert_eq!(j.get("queue_depth").unwrap().as_f64(), Some(0.0));
+        s.inflight.fetch_add(3, Ordering::Relaxed);
+        s.latency.record(12);
+        let j = s.snapshot_json();
+        assert_eq!(j.get("queue_depth").unwrap().as_f64(), Some(3.0));
+        let buckets =
+            crate::util::stats::buckets_from_json(j.get("latency_buckets"));
+        assert_eq!(buckets, vec![(16, 1)]);
     }
 
     #[test]

@@ -20,6 +20,9 @@
 //! * [`energy`] — energy/area/timing models regenerating the paper's
 //!   efficiency figures and Table I;
 //! * [`coordinator`] — layer scheduler, network executor, CLI server;
+//! * [`cluster`] — sharded multi-process serving: the `imagine router`
+//!   front process (consistent-hash placement, health/failover,
+//!   back-pressure, fleet-aggregated stats) over N worker servers;
 //! * [`runtime`] — PJRT loader executing the AOT-compiled JAX/Pallas
 //!   artifacts (HLO text) on the request path, python-free;
 //! * [`nn`] — the rust-native NN stack: the layer-graph IR and the
@@ -31,6 +34,7 @@
 
 pub mod analog;
 pub mod api;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod dataflow;

@@ -27,7 +27,18 @@
 //!                 (model, precision), and models hot-deploy/undeploy at
 //!                 runtime via the `deploy`/`undeploy` commands. SIGINT
 //!                 or `{"cmd":"shutdown"}` drains in-flight batches
-//!                 before exit.
+//!                 before exit. `--addr host:0` binds an ephemeral port
+//!                 and reports it on stdout as `READY port=<n>`;
+//!                 `--no-model` starts an empty hub (a cluster router
+//!                 deploys onto it)
+//!   imagine router --spawn N | --worker HOST:PORT (repeatable)
+//!                 [--model NAME[=DIR]] [--replicas R] [--addr A]
+//!                 [--backend ...] [--precision ...] [--seed S]
+//!                 [--max-inflight N] [--queue-depth N] [--probe-ms T]
+//!                 sharded serving front: same protocol v3 as `serve`,
+//!                 but requests fan out across a fleet of workers with
+//!                 consistent-hash placement, health-checked failover
+//!                 and typed back-pressure (see `imagine::cluster`)
 //!
 //! Both `run` and `serve` construct their backends through the one
 //! `ModelHub` registry (`imagine::api`): the same `--backend analog
@@ -39,13 +50,14 @@
 use anyhow::{bail, Context, Result};
 use imagine::analog::macro_model::OpConfig;
 use imagine::api::{
-    parse_corner, parse_precision, parse_supply, BackendKind, Deployment, ModelHub,
+    parse_corner, parse_precision, parse_supply, BackendKind, Deployment, LrSchedule, ModelHub,
     NoiseInjection, Session, TrainConfig, Trainer,
 };
+use imagine::cluster::{ModelSpec, Router, RouterConfig};
 use imagine::config::params::{MacroParams, Supply};
 use imagine::coordinator::manifest::NetworkModel;
 use imagine::coordinator::scheduler;
-use imagine::coordinator::server::{self, serve, ServerState, Stats};
+use imagine::coordinator::server::{self, serve, ServerState, Stats, StopTarget};
 use imagine::energy::{analog as ea, area, system, timing};
 use imagine::engine::default_workers;
 use imagine::nn::dataset::Dataset;
@@ -443,6 +455,10 @@ fn cmd_train(flags: &Flags) -> Result<()> {
         workers: flag_usize(flags, "workers", 0)?,
         ..TrainConfig::default()
     };
+    if let Some(s) = flags.get("lr-schedule") {
+        config.lr_schedule = LrSchedule::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("--lr-schedule expects const|cosine, got '{s}'"))?;
+    }
     if let Some(s) = flags.get("precision") {
         let (r_in, r_out) = parse_precision(s)?;
         config.r_in = r_in;
@@ -462,7 +478,7 @@ fn cmd_train(flags: &Flags) -> Result<()> {
     let graph = train_arch(arch, &train_set.shape, classes, seed)?;
     println!(
         "training {arch} on {} images ({} classes, shape {:?}) | r_in={} r_out={} | \
-         noise {:?} | supply {:.2}/{:.2} V corner {} | epochs {} batch {} lr {} \
+         noise {:?} | supply {:.2}/{:.2} V corner {} | epochs {} batch {} lr {} ({}) \
          momentum {} seed {}",
         train_set.n,
         classes,
@@ -476,6 +492,7 @@ fn cmd_train(flags: &Flags) -> Result<()> {
         config.epochs,
         config.batch,
         config.lr,
+        config.lr_schedule.name(),
         config.momentum,
         config.seed
     );
@@ -533,7 +550,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         .build()?;
 
     let mut specs: Vec<String> = flags.all("model").map(str::to_string).collect();
-    if specs.is_empty() {
+    if specs.is_empty() && flags.get("no-model").is_none() {
         specs.push(SERVE_DEFAULTS.model.to_string());
     }
     for model_spec in &specs {
@@ -548,13 +565,76 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     serve(&state, addr, None)
 }
 
+fn cmd_router(flags: &Flags) -> Result<()> {
+    let addr = flags.get("addr").unwrap_or("127.0.0.1:7979");
+    let default_dir = flags.get("dir").unwrap_or("artifacts");
+    let seed = flag_u64(flags, "seed", 42)?;
+
+    let mut cfg = RouterConfig {
+        replicas: flag_usize(flags, "replicas", 2)?.max(1),
+        max_inflight: flag_usize(flags, "max-inflight", 64)?.max(1),
+        queue_depth: flag_usize(flags, "queue-depth", 128)?,
+        queue_wait: std::time::Duration::from_millis(flag_u64(flags, "queue-wait-ms", 2000)?),
+        probe_interval: std::time::Duration::from_millis(
+            flag_u64(flags, "probe-ms", 500)?.max(10),
+        ),
+        ..RouterConfig::default()
+    };
+    // Engine knobs forwarded to every spawned worker; the seed is
+    // pinned on all of them so replicas draw identical analog dies and
+    // responses stay bit-identical across shards.
+    for key in ["workers", "batch", "flush-us"] {
+        if let Some(v) = flags.get(key) {
+            cfg.worker_args.push(format!("--{key}"));
+            cfg.worker_args.push(v.to_string());
+        }
+    }
+    cfg.worker_args.push("--seed".to_string());
+    cfg.worker_args.push(seed.to_string());
+
+    let mut router = Router::new(cfg);
+    for worker in flags.all("worker") {
+        let id = router.attach_worker(worker);
+        eprintln!("attached worker {id} at {worker}");
+    }
+    let spawn_n = flag_usize(flags, "spawn", 0)?;
+    if spawn_n > 0 {
+        for id in router.spawn_workers(spawn_n)? {
+            eprintln!("spawned worker {id} at {}", router.pool().slot(id).addr());
+        }
+    }
+    if router.pool().is_empty() {
+        bail!("router needs a fleet: --spawn N and/or --worker HOST:PORT");
+    }
+
+    for model_spec in flags.all("model") {
+        let (name, dir) = split_model_spec(model_spec, default_dir);
+        let mut spec = ModelSpec::new(name, dir);
+        if let Some(b) = flags.get("backend") {
+            spec.backend = b.to_string();
+        }
+        if let Some(s) = flags.get("precision") {
+            spec.precision = Some(parse_precision(s)?);
+        }
+        spec.replicas = flag_usize(flags, "replicas", 0)?;
+        spec.seed = Some(seed);
+        let shards = router.register(spec)?;
+        eprintln!("registered '{name}' from {dir} on shards {shards:?}");
+    }
+
+    let router = Arc::new(router);
+    server::install_sigint_stop(Arc::clone(&router) as Arc<dyn StopTarget>);
+    router.serve(addr, None)
+}
+
 fn usage() {
-    println!("usage: imagine <info|run|plan|train|serve> [--model NAME] [--dir artifacts]");
+    println!("usage: imagine <info|run|plan|train|serve|router> [--model NAME] [--dir artifacts]");
     println!("  run:   [--n 200] [--backend ideal|analog|pjrt|auto] [--precision R[,R_OUT]]");
     println!("         [--supply nominal|low-power|L/H] [--corner tt|ff|ss|fs|sf]");
     println!("         [--batch 64] [--workers N] [--seed 42]");
     println!("  train: [--arch mlp|cnn] [--data synthetic|PATH.imgt] [--n 480] [--classes 10]");
-    println!("         [--epochs 6] [--batch 32] [--lr 0.04] [--momentum 0.9]");
+    println!("         [--epochs 6] [--batch 32] [--lr 0.04] [--lr-schedule const|cosine]");
+    println!("         [--momentum 0.9]");
     println!("         [--noise probe|off|SIGMA] [--precision R[,R_OUT]]");
     println!("         [--supply nominal|low-power|L/H] [--corner tt|ff|ss|fs|sf]");
     println!("         [--seed 7] [--workers N] [--out DIR] [--name cim_net]");
@@ -563,10 +643,20 @@ fn usage() {
     println!("  serve: --model NAME[=DIR] (repeatable: one deployment per flag)");
     println!("         [--addr 127.0.0.1:7878] [--backend auto|ideal|analog|pjrt]");
     println!("         [--precision R[,R_OUT]] [--supply ...] [--corner ...]");
-    println!("         [--batch 32] [--workers N] [--seed 42] [--flush-us 500]");
+    println!("         [--batch 32] [--workers N] [--seed 42] [--flush-us 500] [--no-model]");
     println!("         protocol v3: image requests route per (model, precision);");
     println!("         commands: models | deploy | undeploy | info | graph_info |");
-    println!("         stats | quit | shutdown (SIGINT/shutdown drain in-flight work)");
+    println!("         stats | quit | shutdown (SIGINT/shutdown drain in-flight work);");
+    println!("         --addr host:0 binds an ephemeral port, printed as READY port=<n>");
+    println!("  router: --spawn N and/or --worker HOST:PORT (repeatable)");
+    println!("         [--model NAME[=DIR]] (repeatable) [--replicas 2]");
+    println!("         [--addr 127.0.0.1:7979] [--backend auto|ideal|analog|pjrt]");
+    println!("         [--precision R[,R_OUT]] [--seed 42] [--max-inflight 64]");
+    println!("         [--queue-depth 128] [--queue-wait-ms 2000] [--probe-ms 500]");
+    println!("         [--workers N] [--batch B] [--flush-us T]   (worker engine knobs)");
+    println!("         sharded serving: consistent-hash placement with replication,");
+    println!("         health-checked failover, per-worker back-pressure; stats/models");
+    println!("         fan out and aggregate, deploy/undeploy re-drive the placement");
 }
 
 fn main() -> Result<()> {
@@ -592,8 +682,9 @@ fn main() -> Result<()> {
             "train",
             rest,
             &[
-                "arch", "data", "n", "classes", "epochs", "batch", "lr", "momentum", "noise",
-                "precision", "supply", "corner", "seed", "workers", "out", "name",
+                "arch", "data", "n", "classes", "epochs", "batch", "lr", "lr-schedule",
+                "momentum", "noise", "precision", "supply", "corner", "seed", "workers", "out",
+                "name",
             ],
         )?),
         "serve" => cmd_serve(&parse_flags(
@@ -601,7 +692,16 @@ fn main() -> Result<()> {
             rest,
             &[
                 "model", "dir", "addr", "backend", "precision", "supply", "corner", "batch",
-                "workers", "seed", "flush-us",
+                "workers", "seed", "flush-us", "no-model",
+            ],
+        )?),
+        "router" => cmd_router(&parse_flags(
+            "router",
+            rest,
+            &[
+                "addr", "dir", "spawn", "worker", "model", "replicas", "backend", "precision",
+                "seed", "max-inflight", "queue-depth", "queue-wait-ms", "probe-ms", "workers",
+                "batch", "flush-us",
             ],
         )?),
         "help" | "--help" | "-h" => {

@@ -253,6 +253,97 @@ impl AtomicHistogram {
     }
 }
 
+/// Weighted merge of per-worker `(bound, count)` bucket lists (the shape
+/// produced by [`AtomicHistogram::nonzero_buckets`]) into one fleet-wide
+/// list. Counts for the same bound accumulate; the overflow bucket keeps
+/// its `u64::MAX` bound and sorts last. Workers with different bucket
+/// layouts merge correctly because buckets are keyed by bound, not index.
+pub fn merge_histogram_buckets(sources: &[Vec<(u64, u64)>]) -> Vec<(u64, u64)> {
+    let mut merged: std::collections::BTreeMap<u64, u64> = std::collections::BTreeMap::new();
+    for src in sources {
+        for &(bound, count) in src {
+            *merged.entry(bound).or_insert(0) += count;
+        }
+    }
+    merged.into_iter().filter(|&(_, c)| c != 0).collect()
+}
+
+/// Approximate percentile over a merged `(bound, count)` bucket list,
+/// using the same rank convention as [`AtomicHistogram::percentile`]:
+/// the upper edge of the bucket containing the p-th sample. The overflow
+/// bucket (`u64::MAX` bound) reports the largest finite bound, matching
+/// the single-histogram clamp. Returns 0 for an empty fleet.
+pub fn bucket_percentile(buckets: &[(u64, u64)], p: f64) -> u64 {
+    let n: u64 = buckets.iter().map(|&(_, c)| c).sum();
+    if n == 0 {
+        return 0;
+    }
+    let last_finite = buckets
+        .iter()
+        .rev()
+        .map(|&(b, _)| b)
+        .find(|&b| b != u64::MAX)
+        .unwrap_or(0);
+    let rank = ((p / 100.0) * n as f64).ceil().max(1.0) as u64;
+    let mut seen = 0u64;
+    for &(bound, count) in buckets {
+        seen += count;
+        if seen >= rank {
+            return if bound == u64::MAX { last_finite } else { bound };
+        }
+    }
+    last_finite
+}
+
+/// Serialize a `(bound, count)` bucket list as a JSON array of
+/// `[bound, count]` pairs for the server `stats` response. The overflow
+/// bound `u64::MAX` is not representable as a JSON number and is
+/// serialized as `null`.
+pub fn buckets_to_json(buckets: &[(u64, u64)]) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    Json::Arr(
+        buckets
+            .iter()
+            .map(|&(bound, count)| {
+                let b = if bound == u64::MAX {
+                    Json::Null
+                } else {
+                    Json::Num(bound as f64)
+                };
+                Json::Arr(vec![b, Json::Num(count as f64)])
+            })
+            .collect(),
+    )
+}
+
+/// Parse a bucket list serialized by [`buckets_to_json`] back into
+/// `(bound, count)` pairs (`null` bound → `u64::MAX`). Tolerant of a
+/// missing or malformed field — the router treats that as an empty
+/// histogram rather than failing the whole stats aggregation.
+pub fn buckets_from_json(j: Option<&crate::util::json::Json>) -> Vec<(u64, u64)> {
+    use crate::util::json::Json;
+    let Some(Json::Arr(items)) = j else {
+        return Vec::new();
+    };
+    let mut out = Vec::with_capacity(items.len());
+    for item in items {
+        let Json::Arr(pair) = item else { continue };
+        if pair.len() != 2 {
+            continue;
+        }
+        let bound = match &pair[0] {
+            Json::Null => u64::MAX,
+            Json::Num(b) if *b >= 0.0 => *b as u64,
+            _ => continue,
+        };
+        let Json::Num(count) = pair[1] else { continue };
+        if count >= 0.0 {
+            out.push((bound, count as u64));
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -376,6 +467,98 @@ mod tests {
             assert_eq!(h.percentile(p), 8, "p={p}");
         }
         assert_eq!(h.nonzero_buckets(), vec![(8, 1)]);
+    }
+
+    #[test]
+    fn bucket_merge_empty_fleet() {
+        // No shards, or shards that have served nothing: empty merge,
+        // every percentile 0 — not a panic.
+        assert!(merge_histogram_buckets(&[]).is_empty());
+        let merged = merge_histogram_buckets(&[Vec::new(), Vec::new()]);
+        assert!(merged.is_empty());
+        assert_eq!(bucket_percentile(&merged, 50.0), 0);
+        assert_eq!(bucket_percentile(&merged, 99.0), 0);
+    }
+
+    #[test]
+    fn bucket_merge_single_sample() {
+        // One shard, one sample: every percentile is that bucket's edge.
+        let h = AtomicHistogram::new(pow2_bounds(6));
+        h.record(5);
+        let merged = merge_histogram_buckets(&[h.nonzero_buckets(), Vec::new()]);
+        assert_eq!(merged, vec![(8, 1)]);
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(bucket_percentile(&merged, p), 8, "p={p}");
+        }
+    }
+
+    #[test]
+    fn bucket_merge_is_weighted() {
+        // A shard with 90 fast samples and a shard with 10 slow samples:
+        // fleet p50 must sit in the fast bucket, fleet p99 in the slow
+        // one — a weighted merge, not an average of per-shard p50s.
+        let fast = AtomicHistogram::new(pow2_bounds(10));
+        let slow = AtomicHistogram::new(pow2_bounds(10));
+        for _ in 0..90 {
+            fast.record(3); // (2, 4] bucket
+        }
+        for _ in 0..10 {
+            slow.record(700); // (512, 1024] bucket
+        }
+        let merged = merge_histogram_buckets(&[fast.nonzero_buckets(), slow.nonzero_buckets()]);
+        assert_eq!(merged, vec![(4, 90), (1024, 10)]);
+        assert_eq!(bucket_percentile(&merged, 50.0), 4);
+        assert_eq!(bucket_percentile(&merged, 90.0), 4);
+        assert_eq!(bucket_percentile(&merged, 99.0), 1024);
+    }
+
+    #[test]
+    fn bucket_merge_matches_single_histogram() {
+        // Splitting one sample stream across two shards and merging must
+        // reproduce the percentiles of recording everything in one
+        // histogram (same bounds, same rank convention).
+        let whole = AtomicHistogram::new(pow2_bounds(10));
+        let a = AtomicHistogram::new(pow2_bounds(10));
+        let b = AtomicHistogram::new(pow2_bounds(10));
+        for v in 1..=100u64 {
+            whole.record(v);
+            if v % 2 == 0 { &a } else { &b }.record(v);
+        }
+        let merged = merge_histogram_buckets(&[a.nonzero_buckets(), b.nonzero_buckets()]);
+        for p in [0.0, 25.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(bucket_percentile(&merged, p), whole.percentile(p), "p={p}");
+        }
+    }
+
+    #[test]
+    fn bucket_merge_overflow_reports_last_finite_bound() {
+        let h = AtomicHistogram::new(vec![1, 2, 4]);
+        h.record(9); // overflow bucket
+        let merged = merge_histogram_buckets(&[h.nonzero_buckets()]);
+        assert_eq!(merged, vec![(u64::MAX, 1)]);
+        // Same clamp as AtomicHistogram::percentile: report the largest
+        // finite bound the histogram knows about — here there is none in
+        // the merged list besides the overflow marker, so 0.
+        assert_eq!(bucket_percentile(&merged, 99.0), 0);
+        h.record(3);
+        let merged = merge_histogram_buckets(&[h.nonzero_buckets()]);
+        assert_eq!(bucket_percentile(&merged, 100.0), 4);
+        assert_eq!(h.percentile(100.0), 4);
+    }
+
+    #[test]
+    fn buckets_json_roundtrip() {
+        let buckets = vec![(1u64, 3u64), (64, 9), (u64::MAX, 2)];
+        let j = buckets_to_json(&buckets);
+        let text = j.to_string_compact();
+        // The overflow bound must serialize as null, not a huge float.
+        assert!(text.contains("null"), "{text}");
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(buckets_from_json(Some(&parsed)), buckets);
+        // Missing / malformed fields degrade to an empty histogram.
+        assert!(buckets_from_json(None).is_empty());
+        let junk = crate::util::json::Json::parse("{\"x\":1}").unwrap();
+        assert!(buckets_from_json(Some(&junk)).is_empty());
     }
 
     #[test]

@@ -185,7 +185,7 @@ impl TensorFile {
 
     pub fn read_from(r: &mut impl Read) -> Result<Self> {
         let mut magic = [0u8; 4];
-        r.read_exact(&mut magic)?;
+        r.read_exact(&mut magic).context("truncated IMGT header")?;
         if &magic != MAGIC {
             bail!("bad magic: {:?} (not an IMGT tensor file)", magic);
         }
@@ -217,34 +217,49 @@ impl TensorFile {
             for _ in 0..ndim {
                 dims.push(read_u32(r)? as usize);
             }
-            let n: usize = dims.iter().product();
+            // A corrupt header must not panic (checked multiply — u32 dims
+            // can overflow usize arithmetic when multiplied) and must not
+            // allocate the claimed size up front: the data is read through
+            // a bounded `take`, so a tensor whose header claims gigabytes
+            // but whose file is truncated fails with a typed error after
+            // reading only what is actually there.
+            let n = dims
+                .iter()
+                .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+                .ok_or_else(|| anyhow!("tensor '{name}' dims {dims:?} overflow"))?;
             if n > 512 * 1024 * 1024 {
                 bail!("implausible tensor size {n}");
             }
+            let elem_bytes = match dtype {
+                DType::F32 | DType::I32 => 4usize,
+                DType::I8 => 1,
+            };
+            let want = n
+                .checked_mul(elem_bytes)
+                .ok_or_else(|| anyhow!("tensor '{name}' byte size overflows"))?;
+            let mut buf = Vec::new();
+            r.by_ref()
+                .take(want as u64)
+                .read_to_end(&mut buf)
+                .with_context(|| format!("reading data of tensor '{name}'"))?;
+            if buf.len() != want {
+                bail!(
+                    "tensor '{name}' truncated: got {} of {want} data bytes",
+                    buf.len()
+                );
+            }
             let data = match dtype {
-                DType::F32 => {
-                    let mut buf = vec![0u8; n * 4];
-                    r.read_exact(&mut buf)?;
-                    TensorData::F32(
-                        buf.chunks_exact(4)
-                            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                            .collect(),
-                    )
-                }
-                DType::I8 => {
-                    let mut buf = vec![0u8; n];
-                    r.read_exact(&mut buf)?;
-                    TensorData::I8(buf.into_iter().map(|b| b as i8).collect())
-                }
-                DType::I32 => {
-                    let mut buf = vec![0u8; n * 4];
-                    r.read_exact(&mut buf)?;
-                    TensorData::I32(
-                        buf.chunks_exact(4)
-                            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                            .collect(),
-                    )
-                }
+                DType::F32 => TensorData::F32(
+                    buf.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                ),
+                DType::I8 => TensorData::I8(buf.into_iter().map(|b| b as i8).collect()),
+                DType::I32 => TensorData::I32(
+                    buf.chunks_exact(4)
+                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                ),
             };
             tf.push(Tensor { name, dims, data });
         }
@@ -323,6 +338,69 @@ mod tests {
     fn to_f32_converts_integers() {
         let tf = sample();
         assert_eq!(tf.req("q").unwrap().to_f32(), vec![-128.0, -1.0, 0.0, 127.0]);
+    }
+
+    #[test]
+    fn empty_input_is_typed_error() {
+        let err = TensorFile::read_from(&mut [].as_slice()).unwrap_err();
+        assert!(err.to_string().contains("truncated IMGT header"), "{err}");
+    }
+
+    #[test]
+    fn every_truncation_point_errors_without_panic() {
+        // The router's failover path re-reads tensorfiles at the worst
+        // possible time; a half-written or half-copied file must surface
+        // as Err at EVERY prefix length — header, name, dims, or data.
+        let mut buf = Vec::new();
+        sample().write_to(&mut buf).unwrap();
+        for cut in 0..buf.len() {
+            let res = TensorFile::read_from(&mut &buf[..cut]);
+            assert!(res.is_err(), "prefix of {cut}/{} bytes parsed", buf.len());
+        }
+        // Sanity: the full buffer still parses.
+        assert!(TensorFile::read_from(&mut buf.as_slice()).is_ok());
+    }
+
+    #[test]
+    fn corrupt_huge_dims_error_without_allocating() {
+        // Header claims a tensor of u32::MAX^4 elements: the checked
+        // product must reject it (on 64-bit this overflows usize; the
+        // plausibility bound catches what doesn't).
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&1u32.to_le_bytes()); // count
+        buf.extend_from_slice(&1u32.to_le_bytes()); // name_len
+        buf.push(b'x');
+        buf.push(0); // dtype f32
+        buf.extend_from_slice(&4u32.to_le_bytes()); // ndim
+        for _ in 0..4 {
+            buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        }
+        let err = TensorFile::read_from(&mut buf.as_slice()).unwrap_err();
+        let msg = err.to_string();
+        assert!(
+            msg.contains("overflow") || msg.contains("implausible"),
+            "{msg}"
+        );
+    }
+
+    #[test]
+    fn plausible_header_with_missing_data_is_truncation_error() {
+        // Header claims 1M f32 elements but carries no data: must fail
+        // with a truncation error after reading 0 bytes, not allocate
+        // 4 MB and fail mid-read_exact with a generic EOF.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&1u32.to_le_bytes()); // count
+        buf.extend_from_slice(&1u32.to_le_bytes()); // name_len
+        buf.push(b'w');
+        buf.push(0); // dtype f32
+        buf.extend_from_slice(&1u32.to_le_bytes()); // ndim
+        buf.extend_from_slice(&1_000_000u32.to_le_bytes());
+        let err = TensorFile::read_from(&mut buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
     }
 
     #[test]

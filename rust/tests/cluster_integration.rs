@@ -1,0 +1,473 @@
+//! Cluster serving integration: the `imagine router` front process over
+//! real spawned workers, plus in-process back-pressure coverage against
+//! a deliberately slow mock worker.
+//!
+//! The end-to-end test exercises the whole PR contract: a 2-worker
+//! fleet serving 2 models × 2 precisions to 8 concurrent clients, with
+//! responses **bit-identical** to a single-process `ModelHub` baseline;
+//! then a worker is SIGKILLed mid-traffic and clients must see zero
+//! failed requests while the fleet converges back to full health.
+
+use imagine::api::{BackendKind, Deployment, ModelHub};
+use imagine::cluster::{ModelSpec, Router, RouterConfig, WorkerClient};
+use imagine::config::params::MacroParams;
+use imagine::coordinator::manifest::NetworkModel;
+use imagine::coordinator::server::{handle_line, ServerState, SessionCache, Stats};
+use imagine::util::json::Json;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+/// (name, widths) of the two fleet models — different input lengths so
+/// a response from the wrong deployment cannot accidentally match.
+const MODELS: [(&str, &[usize]); 2] = [("alpha", &[20, 8, 4]), ("beta", &[12, 6, 3])];
+const PRECISIONS: [&str; 2] = ["8", "2,4"];
+const IMAGES_PER_COMBO: usize = 3;
+const SEED: u64 = 42;
+
+fn save_fleet_models(dir: &str) {
+    let p = MacroParams::paper();
+    for (i, (name, widths)) in MODELS.iter().enumerate() {
+        let model = NetworkModel::synthetic_mlp(widths, 8, 4, 8, 7 + i as u64, &p);
+        model.save(dir, name).unwrap();
+    }
+}
+
+/// One deterministic request line. Image values are exact binary
+/// fractions so their JSON text parses identically everywhere.
+fn request_line(model: &str, precision: &str, input_len: usize, img_idx: usize) -> String {
+    let vals: Vec<String> = (0..input_len)
+        .map(|k| format!("{}", ((k + 3 * img_idx) % 16) as f32 * 0.0625))
+        .collect();
+    format!(
+        "{{\"model\":\"{model}\",\"precision\":\"{precision}\",\"image\":[{}]}}",
+        vals.join(",")
+    )
+}
+
+fn all_request_lines() -> Vec<String> {
+    let mut lines = Vec::new();
+    for (name, widths) in MODELS {
+        for precision in PRECISIONS {
+            for img in 0..IMAGES_PER_COMBO {
+                lines.push(request_line(name, precision, widths[0], img));
+            }
+        }
+    }
+    lines
+}
+
+/// The single-process ground truth: the same artifacts deployed into
+/// one in-process `ModelHub`, driven through the worker's own
+/// `handle_line`. Maps request line → (model, class, logits).
+fn baseline_responses(dir: &str) -> HashMap<String, (String, f64, Vec<Json>)> {
+    let hub = ModelHub::builder()
+        .batch(32)
+        .workers(2)
+        .flush_micros(500)
+        .seed(SEED)
+        .build()
+        .unwrap();
+    for (name, _) in MODELS {
+        hub.deploy(
+            name,
+            Deployment::from_artifacts(dir, name)
+                .unwrap()
+                .backend(BackendKind::Ideal)
+                .seed(SEED),
+        )
+        .unwrap();
+    }
+    let state = ServerState::new(hub, Stats::default());
+    let mut cache = SessionCache::new();
+    let mut expected = HashMap::new();
+    for line in all_request_lines() {
+        let resp = handle_line(&state, &mut cache, &line).unwrap();
+        let j = Json::parse(&resp).expect(&resp);
+        assert!(j.get("error").is_none(), "baseline failed: {resp}");
+        expected.insert(
+            line,
+            (
+                j.get("model").unwrap().as_str().unwrap().to_string(),
+                j.get("class").unwrap().as_f64().unwrap(),
+                j.get("logits").unwrap().as_arr().unwrap().to_vec(),
+            ),
+        );
+    }
+    expected
+}
+
+/// Assert one routed response matches the single-process baseline
+/// bit-for-bit (model, class and every logit; `micros` is the only
+/// field allowed to differ).
+fn check_response(line: &str, resp: &str, expected: &HashMap<String, (String, f64, Vec<Json>)>) {
+    let j = Json::parse(resp).unwrap_or_else(|e| panic!("bad response json {e}: {resp}"));
+    assert!(j.get("error").is_none(), "request failed through router: {resp}");
+    let (model, class, logits) = &expected[line];
+    assert_eq!(j.get("model").unwrap().as_str(), Some(model.as_str()), "{resp}");
+    assert_eq!(j.get("class").unwrap().as_f64(), Some(*class), "{resp}");
+    assert_eq!(
+        j.get("logits").unwrap().as_arr().unwrap(),
+        logits,
+        "logits not bit-identical to the single-process hub: {resp}"
+    );
+}
+
+/// 8 concurrent clients each replay every (model, precision, image)
+/// combination against the router; every response must match the
+/// baseline. Panics (failing the test) on any error response.
+fn traffic_wave(addr: &str, expected: &HashMap<String, (String, f64, Vec<Json>)>) {
+    let lines = all_request_lines();
+    std::thread::scope(|scope| {
+        for t in 0..8 {
+            let lines = &lines;
+            let addr = &addr;
+            scope.spawn(move || {
+                let mut c = WorkerClient::connect(addr, Duration::from_secs(30)).unwrap();
+                // Stagger the replay order across clients so shards see
+                // interleaved models/precisions, not lock-step waves.
+                for i in 0..lines.len() {
+                    let line = &lines[(i + t) % lines.len()];
+                    let resp = c.request(line).unwrap();
+                    check_response(line, &resp, expected);
+                }
+            });
+        }
+    });
+}
+
+fn router_stats(addr: &str) -> Json {
+    let mut c = WorkerClient::connect(addr, Duration::from_secs(30)).unwrap();
+    c.request_json(r#"{"cmd":"stats"}"#).unwrap()
+}
+
+/// Wait for the router's readiness line on its stdout.
+fn read_ready(child: &mut Child) -> String {
+    let stdout = child.stdout.take().expect("stdout piped");
+    let mut reader = BufReader::new(stdout);
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("reading READY line");
+    let port: u16 = line
+        .trim()
+        .strip_prefix("READY port=")
+        .unwrap_or_else(|| panic!("unexpected readiness line {line:?}"))
+        .parse()
+        .unwrap();
+    format!("127.0.0.1:{port}")
+}
+
+fn wait_exit(child: &mut Child, timeout: Duration) -> bool {
+    let deadline = Instant::now() + timeout;
+    while Instant::now() < deadline {
+        if child.try_wait().unwrap().is_some() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    false
+}
+
+/// The tentpole acceptance test: spawn a 2-worker fleet through the
+/// `imagine router` CLI, drive concurrent multi-model multi-precision
+/// traffic, SIGKILL a worker mid-traffic (zero client-visible
+/// failures), and watch the fleet converge back to full placement.
+#[cfg(unix)]
+#[test]
+fn router_cluster_survives_a_worker_kill_with_bit_identical_responses() {
+    let dir = std::env::temp_dir().join(format!("imagine_cluster_e2e_{}", std::process::id()));
+    let dir = dir.to_str().unwrap().to_string();
+    save_fleet_models(&dir);
+    let expected = baseline_responses(&dir);
+
+    let exe = env!("CARGO_BIN_EXE_imagine");
+    let mut router = Command::new(exe)
+        .args([
+            "router",
+            "--addr",
+            "127.0.0.1:0",
+            "--spawn",
+            "2",
+            "--replicas",
+            "2",
+            "--backend",
+            "ideal",
+            "--seed",
+            "42",
+            "--probe-ms",
+            "200",
+            "--model",
+            &format!("alpha={dir}"),
+            "--model",
+            &format!("beta={dir}"),
+        ])
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .unwrap();
+    let addr = read_ready(&mut router);
+
+    // Wave 1: healthy fleet, 8 clients, every (model, precision) pair —
+    // responses bit-identical to the single-process hub.
+    traffic_wave(&addr, &expected);
+
+    // Both workers healthy and fully placed before the kill.
+    let stats = router_stats(&addr);
+    assert_eq!(stats.get("role").unwrap().as_str(), Some("router"));
+    assert_eq!(stats.get("healthy_workers").unwrap().as_f64(), Some(2.0), "{stats:?}");
+    let shards = stats.get("shards").unwrap().as_arr().unwrap();
+    assert_eq!(shards.len(), 2);
+    let victim_pid = shards[0].get("pid").unwrap().as_f64().expect("spawned worker pid") as u64;
+
+    // SIGKILL one worker, then immediately resume traffic: the router
+    // must fail over with zero client-visible failures.
+    let killed = Command::new("kill")
+        .args(["-9", &victim_pid.to_string()])
+        .status()
+        .unwrap();
+    assert!(killed.success(), "kill -9 {victim_pid} failed");
+    traffic_wave(&addr, &expected);
+
+    // Convergence: the router restarts the dead worker, re-admits it
+    // and re-drives full placement (every model on both shards).
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let stats = router_stats(&addr);
+        let healthy = stats.get("healthy_workers").unwrap().as_f64().unwrap();
+        let placements = stats.get("models").unwrap().as_arr().unwrap();
+        let fully_placed = placements.len() == 2
+            && placements
+                .iter()
+                .all(|m| m.get("shards").unwrap().as_arr().unwrap().len() == 2);
+        let all_deployed = stats.get("shards").unwrap().as_arr().unwrap().iter().all(|s| {
+            s.get("models").unwrap().as_arr().unwrap().len() == 2
+        });
+        if healthy == 2.0 && fully_placed && all_deployed {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "fleet did not converge after worker kill: {}",
+            stats.to_string_compact()
+        );
+        std::thread::sleep(Duration::from_millis(200));
+    }
+
+    // Wave 3: the restarted worker serves bit-identical responses too.
+    traffic_wave(&addr, &expected);
+
+    // Graceful shutdown via the protocol; the router reaps its workers
+    // and exits cleanly.
+    let mut c = WorkerClient::connect(&addr, Duration::from_secs(10)).unwrap();
+    let resp = c.request_json(r#"{"cmd":"shutdown"}"#).unwrap();
+    assert_eq!(resp.get("shutting_down").unwrap().as_bool(), Some(true));
+    drop(c);
+    if !wait_exit(&mut router, Duration::from_secs(30)) {
+        let _ = router.kill();
+        panic!("router did not exit after shutdown cmd");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- back-pressure against a slow mock worker --------------------------
+
+/// A protocol-v3 worker stand-in that acks control commands instantly
+/// but holds every inference for `latency` — saturating the router's
+/// per-worker cap on demand.
+fn spawn_mock_worker(latency: Duration) -> (String, Arc<AtomicBool>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let accept_stop = Arc::clone(&stop);
+    std::thread::spawn(move || {
+        listener.set_nonblocking(true).unwrap();
+        while !accept_stop.load(Ordering::SeqCst) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let conn_stop = Arc::clone(&accept_stop);
+                    std::thread::spawn(move || mock_conn(stream, latency, conn_stop));
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(10)),
+            }
+        }
+    });
+    (addr, stop)
+}
+
+fn mock_conn(stream: TcpStream, latency: Duration, stop: Arc<AtomicBool>) {
+    stream.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    while !stop.load(Ordering::SeqCst) {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return,
+            Ok(_) => {
+                let resp = if line.contains("\"cmd\"") {
+                    if line.contains("\"stats\"") {
+                        concat!(
+                            "{\"protocol\":3,\"requests\":4,\"errors\":0,",
+                            "\"queue_depth\":0,\"latency_buckets\":[[8,4]]}"
+                        )
+                    } else if line.contains("\"deploy\"") {
+                        "{\"protocol\":3,\"deployed\":\"slow\"}"
+                    } else {
+                        "{\"protocol\":3,\"ok\":true}"
+                    }
+                } else {
+                    std::thread::sleep(latency);
+                    "{\"model\":\"slow\",\"logits\":[1.0,0.0],\"class\":0,\"micros\":1}"
+                };
+                if writer.write_all(resp.as_bytes()).is_err()
+                    || writer.write_all(b"\n").is_err()
+                {
+                    return;
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(_) => return,
+        }
+    }
+}
+
+/// Back-pressure contract: with one slow worker at `max_inflight 1`
+/// and a 1-deep router queue, concurrent clients get a *typed*
+/// `overloaded` error line — not a hang, not a reset — and the router's
+/// own stats expose per-shard occupancy and the shed counter.
+#[test]
+fn router_sheds_overload_with_typed_errors() {
+    let (worker_addr, mock_stop) = spawn_mock_worker(Duration::from_millis(400));
+    let mut router = Router::new(RouterConfig {
+        replicas: 1,
+        max_inflight: 1,
+        queue_depth: 1,
+        queue_wait: Duration::from_millis(150),
+        probe_interval: Duration::from_secs(60),
+        probe_timeout: Duration::from_secs(2),
+        request_timeout: Duration::from_secs(10),
+        ..RouterConfig::default()
+    });
+    router.attach_worker(worker_addr.as_str());
+    let shards = router.register(ModelSpec::new("slow", "unused")).unwrap();
+    assert_eq!(shards, vec![0]);
+
+    let router = Arc::new(router);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let serve_router = Arc::clone(&router);
+    let serve_thread =
+        std::thread::spawn(move || serve_router.serve_listener(listener, None).unwrap());
+
+    // 6 clients fire simultaneously at a worker that can hold exactly
+    // one request (plus one queued). Collect every response line.
+    let barrier = Arc::new(Barrier::new(6));
+    let mut clients = Vec::new();
+    for _ in 0..6 {
+        let addr = addr.clone();
+        let barrier = Arc::clone(&barrier);
+        clients.push(std::thread::spawn(move || {
+            let mut c = WorkerClient::connect(&addr, Duration::from_secs(30)).unwrap();
+            let line = r#"{"image":[0.5,0.25]}"#;
+            barrier.wait();
+            c.request(line).unwrap()
+        }));
+    }
+    let responses: Vec<String> = clients.into_iter().map(|c| c.join().unwrap()).collect();
+
+    let mut ok = 0usize;
+    let mut shed = 0usize;
+    for resp in &responses {
+        let j = Json::parse(resp).expect(resp);
+        match j.get("error") {
+            None => {
+                assert_eq!(j.get("model").unwrap().as_str(), Some("slow"), "{resp}");
+                ok += 1;
+            }
+            Some(err) => {
+                // Typed shed: machine-readable code + the queue bound in
+                // the human text. Nothing else may fail.
+                assert_eq!(j.get("code").unwrap().as_str(), Some("overloaded"), "{resp}");
+                assert!(err.as_str().unwrap().contains("overloaded"), "{resp}");
+                shed += 1;
+            }
+        }
+    }
+    assert_eq!(ok + shed, 6);
+    assert!(ok >= 1, "at least one request must get through: {responses:?}");
+    assert!(shed >= 3, "cap 1 + queue 1 must shed most of 6 concurrent: {responses:?}");
+
+    // Router stats: role, per-shard occupancy row, shed counter, and
+    // the fleet percentile fields derived from the worker's buckets.
+    let stats = router_stats(&addr);
+    assert_eq!(stats.get("role").unwrap().as_str(), Some("router"));
+    assert_eq!(stats.get("healthy_workers").unwrap().as_f64(), Some(1.0));
+    assert!(stats.get("shed").unwrap().as_f64().unwrap() >= shed as f64 - 0.5);
+    assert_eq!(stats.get("queued").unwrap().as_f64(), Some(0.0));
+    let shard_rows = stats.get("shards").unwrap().as_arr().unwrap();
+    assert_eq!(shard_rows.len(), 1);
+    assert!(shard_rows[0].get("queue_depth").is_some());
+    assert!(shard_rows[0].get("in_flight").unwrap().as_f64().unwrap() >= 0.0);
+    assert_eq!(
+        shard_rows[0].get("models").unwrap().as_arr().unwrap(),
+        &vec![Json::Str("slow".to_string())]
+    );
+    // Mock reports 4 requests in bucket (<=8 µs): the fleet merge must
+    // surface them.
+    assert_eq!(stats.get("fleet_requests").unwrap().as_f64(), Some(4.0));
+    assert_eq!(stats.get("p99_latency_micros").unwrap().as_f64(), Some(8.0));
+
+    // Wind down: shutdown cmd stops the serve loop; attached mock
+    // worker is left running (the router doesn't own it) and is stopped
+    // by its own flag.
+    let mut c = WorkerClient::connect(&addr, Duration::from_secs(10)).unwrap();
+    let resp = c.request_json(r#"{"cmd":"shutdown"}"#).unwrap();
+    assert_eq!(resp.get("shutting_down").unwrap().as_bool(), Some(true));
+    drop(c);
+    serve_thread.join().unwrap();
+    mock_stop.store(true, Ordering::SeqCst);
+}
+
+/// Requests naming a model the router has never seen must fail fast and
+/// in-band — not be forwarded to an arbitrary shard.
+#[test]
+fn unknown_model_is_rejected_at_the_router() {
+    let (worker_addr, mock_stop) = spawn_mock_worker(Duration::from_millis(1));
+    let mut router = Router::new(RouterConfig {
+        probe_interval: Duration::from_secs(60),
+        ..RouterConfig::default()
+    });
+    router.attach_worker(worker_addr.as_str());
+    router.register(ModelSpec::new("slow", "unused")).unwrap();
+
+    let router = Arc::new(router);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let serve_router = Arc::clone(&router);
+    let serve_thread =
+        std::thread::spawn(move || serve_router.serve_listener(listener, None).unwrap());
+
+    let mut c = WorkerClient::connect(&addr, Duration::from_secs(10)).unwrap();
+    let j = c
+        .request_json(r#"{"model":"nope","image":[0.5]}"#)
+        .unwrap();
+    assert!(
+        j.get("error").unwrap().as_str().unwrap().contains("nope"),
+        "{j:?}"
+    );
+    // The default-model route (no model field) still works and is
+    // stamped with the registry default.
+    let j = c.request_json(r#"{"image":[0.5,0.25]}"#).unwrap();
+    assert_eq!(j.get("model").unwrap().as_str(), Some("slow"));
+    let resp = c.request_json(r#"{"cmd":"shutdown"}"#).unwrap();
+    assert_eq!(resp.get("shutting_down").unwrap().as_bool(), Some(true));
+    drop(c);
+    serve_thread.join().unwrap();
+    mock_stop.store(true, Ordering::SeqCst);
+}

@@ -15,7 +15,7 @@
 //! * a trained graph saves artifacts that deploy through the `ModelHub`
 //!   and serve with ≥90 % argmax agreement vs the in-process evaluation.
 
-use imagine::api::{BackendKind, NoiseInjection, Session, TrainConfig, Trainer};
+use imagine::api::{BackendKind, LrSchedule, NoiseInjection, Session, TrainConfig, Trainer};
 use imagine::config::params::{MacroParams, Supply};
 use imagine::coordinator::manifest::NetworkModel;
 use imagine::nn::dataset::Dataset;
@@ -117,6 +117,60 @@ fn same_seed_runs_are_bit_identical() {
             other => panic!("node mismatch {other:?}"),
         }
     }
+}
+
+/// Every trained `Dense` weight and bias as raw bits, for exact
+/// run-to-run comparisons.
+fn dense_bits(graph: &Graph) -> Vec<u32> {
+    let mut bits = Vec::new();
+    for node in &graph.nodes {
+        if let Node::Dense(d) = node {
+            bits.extend(d.dense.w.iter().map(|w| w.to_bits()));
+            bits.extend(d.dense.b.iter().map(|b| b.to_bits()));
+        }
+    }
+    bits
+}
+
+#[test]
+fn cosine_lr_schedule_converges_and_is_deterministic() {
+    let data = train_set();
+    let run = |schedule: LrSchedule| {
+        let mut graph = digit_graph(13);
+        let cfg = TrainConfig {
+            epochs: 5,
+            lr_schedule: schedule,
+            ..base_config(13, NoiseInjection::Off)
+        };
+        let report =
+            imagine::nn::train::train_graph(&mut graph, &data, &MacroParams::paper(), &cfg)
+                .unwrap();
+        (graph, report)
+    };
+    let (ga, ra) = run(LrSchedule::Cosine);
+    let (gb, rb) = run(LrSchedule::Cosine);
+    // Same seed + cosine annealing → bit-identical losses and weights.
+    assert_eq!(ra.epoch_losses.len(), rb.epoch_losses.len());
+    for (a, b) in ra.epoch_losses.iter().zip(&rb.epoch_losses) {
+        assert_eq!(a.to_bits(), b.to_bits(), "cosine runs must be bit-identical");
+    }
+    assert_eq!(dense_bits(&ga), dense_bits(&gb), "weights must be bit-identical");
+    // The annealed run still converges on the synthetic task.
+    for w in ra.epoch_losses.windows(2) {
+        assert!(w[1] < w[0], "cosine loss must decrease: {:?}", ra.epoch_losses);
+    }
+    assert!(
+        ra.final_loss() < ra.epoch_losses[0] / 2.0,
+        "cosine schedule should at least halve the loss: {:?}",
+        ra.epoch_losses
+    );
+    // And the schedule actually changes the trajectory vs constant LR.
+    let (gc, _) = run(LrSchedule::Const);
+    assert_ne!(
+        dense_bits(&ga),
+        dense_bits(&gc),
+        "cosine and const schedules produced identical weights"
+    );
 }
 
 /// Train the (noise-injected, noise-free) pair for one seed; returns the
