@@ -384,6 +384,34 @@ fn main() {
     metrics.metric("engine_batch32_images_per_s", ips_b32);
     metrics.metric("engine_batch32_ns_per_image", 1e9 / ips_b32.max(1e-9));
 
+    // ---- 4a. zero-allocation steady state ----
+    // Same model and batch=32 workload, but the serving-loop shape: one
+    // long-lived engine, `forward_batch_into` with a reused output
+    // buffer, warm thread-local arenas. Per-request heap traffic is zero
+    // after warm-up (pinned by tests/alloc_steady_state.rs); this row
+    // measures what that buys over the allocating wrapper above.
+    {
+        let mut engine = BatchIdeal::new(model.clone(), p.clone(), workers).unwrap();
+        let mut buf: Vec<Vec<f32>> = Vec::new();
+        for chunk in images.chunks(32) {
+            engine.forward_batch_into(chunk, &mut buf).unwrap(); // warmup
+        }
+        let reps = 4usize;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            for chunk in images.chunks(32) {
+                engine.forward_batch_into(chunk, &mut buf).unwrap();
+                std::hint::black_box(&buf);
+            }
+        }
+        let steady = (reps * n_images) as f64 / t0.elapsed().as_secs_f64();
+        out.line(format!(
+            "engine batch=32 steady (buffer reuse)    {steady:>10.0} images/s ({:.2}x of cold)",
+            steady / ips_b32.max(1e-9)
+        ));
+        metrics.metric("engine_steady_batch32_images_per_s", steady);
+    }
+
     // ---- 4b. hub routing overhead: 1 vs 4 deployments ----
     // Same total image count through the ModelHub's submit path; the
     // difference is pure multi-tenant routing + per-key coalescing cost.
@@ -508,6 +536,33 @@ fn main() {
         ));
         metrics.metric("serve_direct_req_per_s", direct);
         metrics.metric("router_proxy_req_per_s", proxied);
+
+        // Concurrent load: 8 client connections in flight against the
+        // router at once — admission control, routing and per-worker
+        // back-pressure under parallel clients instead of one pipelined
+        // stream. Connection setup is inside the clock (it is part of a
+        // real client's cost); the hub and worker are warm from above.
+        let clients = 8usize;
+        let n_conc = 100usize;
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for _ in 0..clients {
+                let addr = router_addr.as_str();
+                let req = rline.as_str();
+                s.spawn(move || {
+                    let mut c = WorkerClient::connect(addr, Duration::from_secs(30)).unwrap();
+                    for _ in 0..n_conc {
+                        std::hint::black_box(c.request(req).unwrap());
+                    }
+                });
+            }
+        });
+        let conc = (clients * n_conc) as f64 / t0.elapsed().as_secs_f64();
+        out.line(format!(
+            "via router, {clients} concurrent clients         {conc:>10.0} req/s ({:.2}x of sequential)",
+            conc / proxied.max(1e-9)
+        ));
+        metrics.metric("router_concurrent8_req_per_s", conc);
 
         let mut c = WorkerClient::connect(&router_addr, Duration::from_secs(10)).unwrap();
         c.request(r#"{"cmd":"shutdown"}"#).unwrap();

@@ -314,6 +314,12 @@ impl ModelHub {
     /// sessions already routed to the old deployment get clean in-band
     /// errors, new sessions see the new model, and no other tenant is
     /// disturbed.
+    ///
+    /// Backend construction is also where the per-deployment
+    /// packed-weight caches (bit-plane planes, validity masks) are
+    /// built; they are shared read-only by every batch and worker
+    /// thread until the deployment is retargeted or replaced, so
+    /// steady-state inference never re-derives weight-side packing.
     pub fn deploy(&self, name: &str, spec: Deployment) -> Result<(), ImagineError> {
         if name.is_empty() {
             return Err(ImagineError::InvalidConfig {
@@ -594,7 +600,10 @@ impl Session {
     /// no backend is rebuilt — the deployed backend re-shapes itself
     /// (from a pristine model copy) when a batch at this precision is
     /// dispatched, so the logits are bit-identical to a dedicated
-    /// session built at this precision.
+    /// session built at this precision. Re-shaping also rebuilds the
+    /// backend's packed-weight caches for the new precision (the one
+    /// cache-rebuild event besides deploy itself); batches at an
+    /// unchanged precision keep hitting the existing packs.
     pub fn with_precision(&self, r_in: u32, r_out: u32) -> Result<Session, ImagineError> {
         validate_precision(r_in, r_out)?;
         let mut config = (*self.dep.config).clone();

@@ -38,7 +38,7 @@ mod registry;
 mod session;
 mod train;
 
-pub use crate::nn::train::{LrSchedule, NoiseInjection, TrainConfig, TrainReport};
+pub use crate::nn::train::{LrSchedule, NoiseInjection, OptimizerKind, TrainConfig, TrainReport};
 pub use error::ImagineError;
 pub use hub::{Deployment, HubBuilder, ModelHub, PendingInference, Session};
 pub use session::{

@@ -231,17 +231,21 @@ impl Executor {
 /// batched engine: offset-binary recentering, output gain, optional ReLU.
 pub fn post_adc(layer: &Layer, codes: &[u32]) -> Vec<f32> {
     let half = (1u32 << (layer.cfg.r_out - 1)) as f32;
-    codes
-        .iter()
-        .map(|&c| {
-            let v = (c as f32 - half) * layer.out_gain;
-            if layer.relu {
-                v.max(0.0)
-            } else {
-                v
-            }
-        })
-        .collect()
+    codes.iter().map(|&c| post_adc_code(layer, half, c)).collect()
+}
+
+/// One output of [`post_adc`], with `half = 2^(r_out−1)` hoisted by the
+/// caller — the allocation-free form the chunk-pipelined engine streams
+/// codes through. Same float expression, so bit-identical by
+/// construction.
+#[inline]
+pub fn post_adc_code(layer: &Layer, half: f32, code: u32) -> f32 {
+    let v = (code as f32 - half) * layer.out_gain;
+    if layer.relu {
+        v.max(0.0)
+    } else {
+        v
+    }
 }
 
 /// Per-layer constants of the closed-form macro contract (the python
@@ -309,20 +313,38 @@ pub fn apply_pool(
     w: usize,
     pool: Pool,
 ) -> (Vec<f32>, usize, usize) {
+    let mut out = Vec::new();
+    let (ph, pw) = apply_pool_into(fmap, c, h, w, pool, &mut out);
+    (out, ph, pw)
+}
+
+/// [`apply_pool`] appending the pooled map to a caller-owned buffer —
+/// the allocation-free form the chunk-pipelined engine uses. Values are
+/// produced in the exact element order (and by the exact float
+/// expressions) of the allocating form.
+pub fn apply_pool_into(
+    fmap: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    pool: Pool,
+    out: &mut Vec<f32>,
+) -> (usize, usize) {
     match pool {
-        Pool::None => (fmap.to_vec(), h, w),
+        Pool::None => {
+            out.extend_from_slice(fmap);
+            (h, w)
+        }
         Pool::Gap => {
-            let mut out = vec![0f32; c];
             for ch in 0..c {
                 let s: f32 = fmap[ch * h * w..(ch + 1) * h * w].iter().sum();
-                out[ch] = s / (h * w) as f32;
+                out.push(s / (h * w) as f32);
             }
-            (out, 1, 1)
+            (1, 1)
         }
         Pool::Max2 | Pool::Avg2 => {
             let (h2, w2) = ((h / 2) * 2, (w / 2) * 2);
             let (ph, pw) = (h2 / 2, w2 / 2);
-            let mut out = vec![0f32; c * ph * pw];
             for ch in 0..c {
                 for py in 0..ph {
                     for px in 0..pw {
@@ -332,15 +354,15 @@ pub fn apply_pool(
                             fmap[ch * h * w + (2 * py + 1) * w + 2 * px],
                             fmap[ch * h * w + (2 * py + 1) * w + 2 * px + 1],
                         ];
-                        out[ch * ph * pw + py * pw + px] = if pool == Pool::Max2 {
+                        out.push(if pool == Pool::Max2 {
                             vals.iter().cloned().fold(f32::MIN, f32::max)
                         } else {
                             vals.iter().sum::<f32>() / 4.0
-                        };
+                        });
                     }
                 }
             }
-            (out, ph, pw)
+            (ph, pw)
         }
     }
 }

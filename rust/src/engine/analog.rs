@@ -128,35 +128,55 @@ impl AnalogPool {
     /// Run a batch of images, split contiguously across the dies; results
     /// come back in submission order.
     pub fn forward_batch(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::new();
+        self.forward_batch_into(images, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`Self::forward_batch`] writing into a caller-owned buffer
+    /// (capacity reused across batches): die `d` fills its contiguous
+    /// slice of `out` in place, so no intermediate per-die result
+    /// vectors are assembled and re-spliced per batch. On error the
+    /// buffer's contents are unspecified (errors are still reported in
+    /// die order, matching the historical path).
+    pub fn forward_batch_into(
+        &mut self,
+        images: &[Vec<f32>],
+        out: &mut Vec<Vec<f32>>,
+    ) -> Result<()> {
+        out.resize_with(images.len(), Vec::new);
         if images.is_empty() {
-            return Ok(Vec::new());
+            return Ok(());
         }
         let n_dies = self.dies.len().min(images.len());
         let chunk = images.len().div_ceil(n_dies);
-        let mut per_die: Vec<Result<Vec<Vec<f32>>>> = Vec::new();
+        let mut statuses: Vec<Result<()>> = Vec::new();
         std::thread::scope(|s| {
             let mut handles = Vec::new();
-            for (die, imgs) in self.dies.iter_mut().zip(images.chunks(chunk)) {
-                handles.push(s.spawn(move || -> Result<Vec<Vec<f32>>> {
-                    imgs.iter().map(|im| die.forward(im)).collect()
+            let spans = images.chunks(chunk).zip(out.chunks_mut(chunk));
+            for ((imgs, slots), die) in spans.zip(self.dies.iter_mut()) {
+                handles.push(s.spawn(move || -> Result<()> {
+                    for (slot, im) in slots.iter_mut().zip(imgs) {
+                        *slot = die.forward(im)?;
+                    }
+                    Ok(())
                 }));
             }
             for h in handles {
-                per_die.push(
+                statuses.push(
                     h.join()
                         .unwrap_or_else(|_| Err(anyhow!("analog worker panicked"))),
                 );
             }
         });
-        let mut out = Vec::with_capacity(images.len());
-        for r in per_die {
-            out.extend(r?);
+        for status in statuses {
+            status?;
         }
         let n = images.len() as u64;
         self.images += n;
         for (acc, per_image) in self.accum_layers.iter_mut().zip(&self.per_layer_image) {
             acc.accumulate(&per_image.scaled(n));
         }
-        Ok(out)
+        Ok(())
     }
 }

@@ -1,0 +1,102 @@
+//! Thread-local scratch arenas for the engine hot path.
+//!
+//! The macro streams activations through weight-stationary arrays
+//! without ever re-allocating its line buffers; the software engine
+//! mirrors that with per-thread, high-water-mark buffer pools. A
+//! `take_*` call pops a previously returned buffer (empty, capacity
+//! retained) or creates a fresh one; `put_*` clears it and pushes it
+//! back. Capacities only grow, so after one warm-up batch every
+//! steady-state `take_*`/`put_*` pair on a live thread is
+//! allocation-free — the invariant `tests/alloc_steady_state.rs` pins
+//! with a counting global allocator.
+//!
+//! # Discipline
+//!
+//! * Pools are **thread-local**: buffers taken on a thread must be put
+//!   back on the same thread. Scoped worker threads get their own pools
+//!   that live for the batch they serve; the long-lived dispatcher (or
+//!   a `workers = 1` caller) keeps its pool across requests, which is
+//!   where the zero-allocation steady state holds.
+//! * `take_*` returns an **empty** vector with at least the requested
+//!   capacity — callers `resize`/`extend` it themselves (both are
+//!   alloc-free within capacity).
+//! * Buffers are never shrunk or freed while the thread lives
+//!   ("reset, never freed"): the pool converges to the largest shapes
+//!   the thread has processed.
+
+use std::cell::RefCell;
+
+#[derive(Default)]
+struct Pools {
+    u8s: Vec<Vec<u8>>,
+    u32s: Vec<Vec<u32>>,
+    u64s: Vec<Vec<u64>>,
+    i32s: Vec<Vec<i32>>,
+    f32s: Vec<Vec<f32>>,
+    f64s: Vec<Vec<f64>>,
+}
+
+thread_local! {
+    static POOLS: RefCell<Pools> = RefCell::new(Pools::default());
+}
+
+macro_rules! arena_pool {
+    ($take:ident, $put:ident, $field:ident, $t:ty) => {
+        /// Take an empty scratch buffer with capacity ≥ `cap` from this
+        /// thread's pool (allocating only if the pool has never held one
+        /// this large).
+        pub fn $take(cap: usize) -> Vec<$t> {
+            let mut v = POOLS.with(|p| p.borrow_mut().$field.pop()).unwrap_or_default();
+            v.clear();
+            v.reserve(cap);
+            v
+        }
+
+        /// Return a scratch buffer to this thread's pool (cleared,
+        /// capacity retained).
+        pub fn $put(v: Vec<$t>) {
+            let mut v = v;
+            v.clear();
+            POOLS.with(|p| p.borrow_mut().$field.push(v));
+        }
+    };
+}
+
+arena_pool!(take_u8, put_u8, u8s, u8);
+arena_pool!(take_u32, put_u32, u32s, u32);
+arena_pool!(take_u64, put_u64, u64s, u64);
+arena_pool!(take_i32, put_i32, i32s, i32);
+arena_pool!(take_f32, put_f32, f32s, f32);
+arena_pool!(take_f64, put_f64, f64s, f64);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_put_retains_capacity() {
+        let mut v = take_i32(1000);
+        let cap = v.capacity();
+        assert!(cap >= 1000);
+        v.extend(0..100);
+        put_i32(v);
+        // The same (empty) buffer comes back, no matter the requested cap.
+        let v2 = take_i32(10);
+        assert_eq!(v2.capacity(), cap);
+        assert!(v2.is_empty());
+        put_i32(v2);
+    }
+
+    #[test]
+    fn pools_grow_to_concurrent_demand() {
+        let a = take_u8(16);
+        let b = take_u8(16);
+        put_u8(a);
+        put_u8(b);
+        let a2 = take_u8(16);
+        let b2 = take_u8(16);
+        assert!(a2.capacity() >= 16 && b2.capacity() >= 16);
+        put_u8(a2);
+        put_u8(b2);
+    }
+}

@@ -128,6 +128,15 @@ pub fn conv3x3_signed_rows(
 /// streams the batch through a per-worker scratch buffer with this,
 /// instead of materializing the whole-batch `[(img·oh·ow) × rows]`
 /// matrix.
+///
+/// The row factors are computed straight from the CHW image through a
+/// per-call row map (macro row → channel/tap, from
+/// [`crate::dataflow::im2col::row_order`] semantics) held in the
+/// thread-local scratch arena — no per-pixel patch vectors are
+/// materialized, so the conv hot path stays allocation-free once the
+/// arena is warm. Bit-identical to lowering through
+/// [`crate::dataflow::im2col::im2col_image`]: padding rows carry the
+/// mid-rail constant, out-of-image taps the zero-pad value.
 #[allow(clippy::too_many_arguments)]
 pub fn conv3x3_signed_rows_into(
     xq: &[u8],
@@ -139,18 +148,50 @@ pub fn conv3x3_signed_rows_into(
     rows: usize,
     sx: &mut Vec<i32>,
 ) -> (usize, usize) {
+    assert_eq!(xq.len(), c * h * w);
     let m = (1i32 << r_in) - 1;
     let pad = ((1u32 << r_in) / 2) as u8;
-    let (row_vecs, oh, ow) = crate::dataflow::im2col::im2col_image(xq, c, h, w, stride, pad);
-    sx.reserve(row_vecs.len() * rows);
-    for rv in &row_vecs {
-        for &q in rv.iter().take(rows) {
-            sx.push(2 * q as i32 - m);
-        }
-        for _ in rv.len()..rows {
-            sx.push(2 * pad as i32 - m);
+    let s_pad = 2 * pad as i32 - m;
+    let oh = h.div_ceil(stride);
+    let ow = w.div_ceil(stride);
+    // Macro row → packed (channel, tap) descriptor, or −1 for a padding
+    // row (feature slot past the real channel count, or row past the
+    // im2col extent). Encoding: ch·16 + dy·4 + dx.
+    let n_rows = c.div_ceil(4) * 36;
+    let mut rowmap = crate::engine::arena::take_i32(rows);
+    for r in 0..rows {
+        let ch = 4 * (r / 36) + r % 4;
+        let tap = (r % 36) / 4;
+        rowmap.push(if r < n_rows && ch < c {
+            (ch * 16 + (tap / 3) * 4 + tap % 3) as i32
+        } else {
+            -1
+        });
+    }
+    sx.reserve(oh * ow * rows);
+    for oy in 0..oh {
+        let by = (oy * stride) as isize - 1;
+        for ox in 0..ow {
+            let bx = (ox * stride) as isize - 1;
+            for &e in rowmap.iter() {
+                if e < 0 {
+                    sx.push(s_pad);
+                    continue;
+                }
+                let iy = by + ((e >> 2) & 3) as isize;
+                let ix = bx + (e & 3) as isize;
+                let inside = iy >= 0 && ix >= 0 && iy < h as isize && ix < w as isize;
+                let q = if inside {
+                    let ch = (e >> 4) as usize;
+                    xq[ch * h * w + iy as usize * w + ix as usize] as i32
+                } else {
+                    0
+                };
+                sx.push(2 * q - m);
+            }
         }
     }
+    crate::engine::arena::put_i32(rowmap);
     (oh, ow)
 }
 
@@ -290,6 +331,36 @@ mod tests {
                 acc += (2 * q as i32 - m) * w_phys[r * n_out + o];
             }
             assert_eq!(dots[(oh * ow + pix) * n_out + o], acc, "o={o}");
+        }
+    }
+
+    #[test]
+    fn signed_rows_match_im2col_lowering() {
+        // The direct row-map lowering must agree with the reference
+        // patch-vector path for partial DP units (c=5), strided images,
+        // padded row tails (rows > units·36) and truncated row budgets.
+        let mut rng = Rng::new(9);
+        let cases = [
+            (5usize, 4usize, 4usize, 1usize, 4u32, 72usize),
+            (2, 5, 5, 2, 2, 40),
+            (3, 4, 4, 1, 4, 20),
+        ];
+        for (c, h, w, stride, r_in, rows) in cases {
+            let xq: Vec<u8> = (0..c * h * w).map(|_| rng.below(1u64 << r_in) as u8).collect();
+            let mut sx = Vec::new();
+            let (oh, ow) = conv3x3_signed_rows_into(&xq, c, h, w, stride, r_in, rows, &mut sx);
+            let m = (1i32 << r_in) - 1;
+            let pad = ((1u32 << r_in) / 2) as u8;
+            let (rvs, oh2, ow2) = crate::dataflow::im2col::im2col_image(&xq, c, h, w, stride, pad);
+            assert_eq!((oh, ow), (oh2, ow2), "c={c} stride={stride}");
+            let mut want = Vec::new();
+            for rv in &rvs {
+                for r in 0..rows {
+                    let q = rv.get(r).copied().unwrap_or(pad);
+                    want.push(2 * q as i32 - m);
+                }
+            }
+            assert_eq!(sx, want, "c={c} stride={stride} rows={rows}");
         }
     }
 

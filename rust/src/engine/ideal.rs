@@ -10,6 +10,27 @@
 //! `r_in ≤ 2`, and a streaming direct conv that never materializes the
 //! whole-batch im2col matrix — split across worker threads.
 //!
+//! # Steady-state execution model
+//!
+//! [`BatchIdeal::forward_batch`] is **chunk-pipelined**: the batch is cut
+//! into fixed [`PIPELINE_CHUNK`]-image chunks on a grid that depends only
+//! on the batch size, and each worker thread carries its chunks through
+//! *all* layers depth-first — while one worker runs layer `k+1` of chunk
+//! `i`, another is still in layer `k` of chunk `j`. Deep graphs stop
+//! paying full-batch layer barriers, per-chunk activations stay
+//! cache-resident across layers, and one thread-spawn per batch replaces
+//! one per layer. Per-image results are data-independent of each other
+//! and integer dots are order-independent, so chunked execution is
+//! bit-identical to the barriered reference
+//! ([`BatchIdeal::forward_batch_barriered`]) for every worker count —
+//! asserted by `tests/engine_equivalence.rs`.
+//!
+//! Weight-side packs ([`PackedWeights`]) are built once at construction
+//! and rebuilt on [`BatchIdeal::retarget`] (the bit-plane pack is keyed
+//! to `r_in`); all per-batch scratch comes from the thread-local
+//! [`arena`](crate::engine::arena), so a warm `forward_batch_into` call
+//! performs no allocations (`tests/alloc_steady_state.rs`).
+//!
 //! Bit-exactness: the integer dot products are order-independent, and the
 //! float mapping from dot product to ADC code goes through the *same*
 //! [`IdealContract::code`] expression the per-image path uses, so outputs
@@ -17,12 +38,21 @@
 //! `tests/engine_equivalence.rs`).
 
 use crate::config::params::MacroParams;
-use crate::coordinator::executor::{apply_pool, post_adc, IdealContract};
+use crate::coordinator::executor::{
+    apply_pool, apply_pool_into, post_adc, post_adc_code, IdealContract,
+};
 use crate::coordinator::manifest::{Kind, Layer, NetworkModel, Pool};
 use crate::dataflow::pipeline::LayerShape;
 use crate::energy::system::{layer_cost, LayerCost};
-use crate::engine::kernels;
+use crate::engine::packed::PackedWeights;
+use crate::engine::{arena, kernels};
 use anyhow::{ensure, Result};
+
+/// Images per pipeline chunk. Four matches the register blocking of the
+/// portable/SIMD gemm tiles (4 batch vectors per weight pass) and the
+/// bit-plane tier's minimum vector count, so a full chunk always
+/// dispatches to the same kernel the whole batch would have.
+pub const PIPELINE_CHUNK: usize = 4;
 
 /// The batched ideal-contract inference backend.
 pub struct BatchIdeal {
@@ -36,6 +66,16 @@ pub struct BatchIdeal {
     /// freshly built at each point (float rescaling is not associative).
     base: NetworkModel,
     contracts: Vec<IdealContract>,
+    /// Per-layer deploy-time weight packs at the *current* operating
+    /// point (the bit-plane pack is keyed to `r_in`), shared read-only
+    /// across workers and batches.
+    packed: Vec<PackedWeights>,
+    /// Per-layer (input, output) activation shapes — data-independent,
+    /// computed once so chunk workers never re-derive them.
+    io_shapes: Vec<(Vec<usize>, Vec<usize>)>,
+    /// Largest flat activation length any layer boundary sees (sizes the
+    /// chunk double-buffers).
+    max_act_len: usize,
     /// Per-layer dataflow/energy cost of one image at the *current*
     /// operating point (data-independent).
     per_layer_image: Vec<LayerCost>,
@@ -91,6 +131,9 @@ impl BatchIdeal {
             .iter()
             .map(|l| IdealContract::new(&params, l))
             .collect();
+        let packed = pack_layers(&model);
+        let io_shapes = layer_io_shapes(&model);
+        let max_act_len = max_boundary_len(&model, &io_shapes);
         let per_layer_image = network_layer_costs(&model, &params);
         let per_image_cost = sum_costs(&per_layer_image);
         let accum_layers = vec![LayerCost::default(); model.layers.len()];
@@ -100,6 +143,9 @@ impl BatchIdeal {
             params,
             workers: workers.max(1),
             contracts,
+            packed,
+            io_shapes,
+            max_act_len,
             per_layer_image,
             per_image_cost,
             accum_layers,
@@ -110,15 +156,18 @@ impl BatchIdeal {
 
     /// Re-shape the served model to (r_in, r_out), or back to its
     /// as-constructed precision (`None`), re-deriving the per-layer
-    /// contracts and cost bookings. Always reshapes from the pristine
-    /// base operating point — restoring the base scalars and replaying
-    /// [`NetworkModel::retarget_precision`] performs the exact float
-    /// operations a fresh clone would see, so the results after any
-    /// sequence of re-targets are bit-identical to a `BatchIdeal` built
-    /// directly at the requested point, without cloning any weight
-    /// tensor (re-targeting is O(layers), so interleaved multi-precision
-    /// traffic does not thrash). All-or-nothing: a point that fails
-    /// validation leaves the backend untouched.
+    /// contracts, weight packs and cost bookings. Always reshapes from
+    /// the pristine base operating point — restoring the base scalars
+    /// and replaying [`NetworkModel::retarget_precision`] performs the
+    /// exact float operations a fresh clone would see, so the results
+    /// after any sequence of re-targets are bit-identical to a
+    /// `BatchIdeal` built directly at the requested point, without
+    /// cloning any weight tensor (re-targeting is O(layers), so
+    /// interleaved multi-precision traffic does not thrash). The
+    /// bit-plane weight pack is keyed to `r_in`, so a precision hop
+    /// invalidates and rebuilds it here — never mid-batch.
+    /// All-or-nothing: a point that fails validation leaves the backend
+    /// untouched.
     pub fn retarget(&mut self, precision: Option<(u32, u32)>) -> Result<()> {
         Self::validate_at(&self.base, precision)?;
         self.model.copy_precision_fields_from(&self.base);
@@ -131,6 +180,7 @@ impl BatchIdeal {
             .iter()
             .map(|l| IdealContract::new(&self.params, l))
             .collect();
+        self.packed = pack_layers(&self.model);
         self.per_layer_image = network_layer_costs(&self.model, &self.params);
         self.per_image_cost = sum_costs(&self.per_layer_image);
         Ok(())
@@ -149,6 +199,68 @@ impl BatchIdeal {
     /// Run a batch of images (each in the model's natural input layout)
     /// through the whole network; returns per-image logits.
     pub fn forward_batch(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::new();
+        self.forward_batch_into(images, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`Self::forward_batch`] writing into a caller-owned output buffer
+    /// (outer and inner capacities reused) — with a warm buffer and warm
+    /// thread-local arenas this is the zero-allocation steady-state
+    /// entry point.
+    pub fn forward_batch_into(
+        &mut self,
+        images: &[Vec<f32>],
+        out: &mut Vec<Vec<f32>>,
+    ) -> Result<()> {
+        let input_len = self.input_len();
+        for (i, im) in images.iter().enumerate() {
+            ensure!(
+                im.len() == input_len,
+                "image {i}: expected {input_len} values, got {}",
+                im.len()
+            );
+        }
+        let n = images.len();
+        out.resize_with(n, Vec::new);
+        if n == 0 {
+            return Ok(());
+        }
+        let n_chunks = n.div_ceil(PIPELINE_CHUNK);
+        let workers = self.workers.clamp(1, n_chunks);
+        let this: &Self = self;
+        if workers == 1 {
+            for (imgs, outs) in images.chunks(PIPELINE_CHUNK).zip(out.chunks_mut(PIPELINE_CHUNK)) {
+                this.run_chunk(imgs, outs);
+            }
+        } else {
+            // Contiguous spans of whole chunks per worker: the chunk
+            // grid (and therefore every per-chunk kernel selection) is a
+            // function of `n` alone, so results are worker-invariant.
+            let span = n_chunks.div_ceil(workers) * PIPELINE_CHUNK;
+            std::thread::scope(|s| {
+                for (img_span, out_span) in images.chunks(span).zip(out.chunks_mut(span)) {
+                    s.spawn(move || {
+                        for (imgs, outs) in img_span
+                            .chunks(PIPELINE_CHUNK)
+                            .zip(out_span.chunks_mut(PIPELINE_CHUNK))
+                        {
+                            this.run_chunk(imgs, outs);
+                        }
+                    });
+                }
+            });
+        }
+        self.book_cost(n as u64);
+        Ok(())
+    }
+
+    /// Reference execution through full-batch layer barriers (the
+    /// pre-pipeline path): every layer runs over the whole batch before
+    /// the next starts, through the unpacked kernel entry points. Kept
+    /// as the bit-identity oracle the chunk pipeline is tested against;
+    /// books cost identically to [`Self::forward_batch`].
+    pub fn forward_batch_barriered(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         let input_len = self.input_len();
         for (i, im) in images.iter().enumerate() {
             ensure!(
@@ -167,13 +279,50 @@ impl BatchIdeal {
             acts = next;
             shape = next_shape;
         }
-        let n = images.len() as u64;
+        self.book_cost(images.len() as u64);
+        Ok(acts)
+    }
+
+    fn book_cost(&mut self, n: u64) {
         self.images += n;
         self.cost.accumulate(&self.per_image_cost.scaled(n));
         for (acc, per_image) in self.accum_layers.iter_mut().zip(&self.per_layer_image) {
             acc.accumulate(&per_image.scaled(n));
         }
-        Ok(acts)
+    }
+
+    /// Carry one chunk of images through every layer depth-first, using
+    /// double-buffered flat activations from the thread-local arena.
+    fn run_chunk(&self, imgs: &[Vec<f32>], outs: &mut [Vec<f32>]) {
+        let n = imgs.len();
+        let mut cur = arena::take_f32(n * self.max_act_len);
+        let mut next = arena::take_f32(n * self.max_act_len);
+        for im in imgs {
+            cur.extend_from_slice(im);
+        }
+        let mut cur_len = self.input_len();
+        for (li, layer) in self.model.layers.iter().enumerate() {
+            let (in_shape, out_shape) = &self.io_shapes[li];
+            let out_len = out_shape.iter().product();
+            forward_layer_chunk(
+                layer,
+                &self.contracts[li],
+                &self.packed[li],
+                in_shape,
+                &cur,
+                n,
+                cur_len,
+                &mut next,
+            );
+            std::mem::swap(&mut cur, &mut next);
+            cur_len = out_len;
+        }
+        for (slot, row) in outs.iter_mut().zip(cur.chunks_exact(cur_len)) {
+            slot.clear();
+            slot.extend_from_slice(row);
+        }
+        arena::put_f32(cur);
+        arena::put_f32(next);
     }
 }
 
@@ -190,6 +339,99 @@ fn signed_rows(layer: &Layer, contract: &IdealContract, act: &[f32], out: &mut V
     }
     for _ in act.len()..layer.rows {
         out.push(2 * pad - m);
+    }
+}
+
+/// One layer over one flat `[n_img × in_len]` chunk of activations,
+/// appending exactly `n_img · out_len` values to `next`. All scratch is
+/// arena-backed; the weight side comes from the deploy-time pack. The
+/// arithmetic — quantization, signed expansion, integer dots, contract
+/// code, post-ADC, pooling — is operation-for-operation the barriered
+/// path's, so outputs are bit-identical.
+#[allow(clippy::too_many_arguments)]
+fn forward_layer_chunk(
+    layer: &Layer,
+    contract: &IdealContract,
+    packed: &PackedWeights,
+    in_shape: &[usize],
+    acts: &[f32],
+    n_img: usize,
+    in_len: usize,
+    next: &mut Vec<f32>,
+) {
+    let n_out = layer.out_features;
+    let half = (1u32 << (layer.cfg.r_out - 1)) as f32;
+    next.clear();
+    match layer.kind {
+        Kind::Dense => {
+            let mut sx = arena::take_i32(n_img * layer.rows);
+            for act in acts[..n_img * in_len].chunks_exact(in_len) {
+                signed_rows(layer, contract, act, &mut sx);
+            }
+            let mut dots = arena::take_i32(n_img * n_out);
+            kernels::matmul_i32_packed_into(
+                &sx,
+                &layer.w_phys,
+                n_img,
+                layer.rows,
+                n_out,
+                1,
+                Some(layer.cfg.r_in),
+                packed.bitplanes(),
+                &mut dots,
+            );
+            for d in dots.chunks_exact(n_out.max(1)) {
+                for (&dot, &beta) in d.iter().zip(&layer.beta) {
+                    let code = contract.code(dot as i64, beta);
+                    next.push(post_adc_code(layer, half, code));
+                }
+            }
+            arena::put_i32(dots);
+            arena::put_i32(sx);
+        }
+        Kind::Conv3 => {
+            let (c, h, w) = (in_shape[0], in_shape[1], in_shape[2]);
+            debug_assert_eq!(c, layer.in_features);
+            let m_f = ((1u32 << layer.cfg.r_in) - 1) as f32;
+            let mut images_q = arena::take_u8(n_img * in_len);
+            for &v in &acts[..n_img * in_len] {
+                images_q.push((v / layer.a_scale).round().clamp(0.0, m_f) as u8);
+            }
+            let mut dots = arena::take_i32(0);
+            let (oh, ow) = kernels::conv3x3_direct_packed_into(
+                &images_q,
+                n_img,
+                c,
+                h,
+                w,
+                layer.stride,
+                layer.cfg.r_in,
+                &layer.w_phys,
+                layer.rows,
+                n_out,
+                1,
+                packed.bitplanes(),
+                &mut dots,
+            );
+            let n_pix = oh * ow;
+            let mut fmap = arena::take_f32(n_out * n_pix);
+            for img in 0..n_img {
+                fmap.clear();
+                fmap.resize(n_out * n_pix, 0.0);
+                for pix in 0..n_pix {
+                    let d = &dots[(img * n_pix + pix) * n_out..(img * n_pix + pix + 1) * n_out];
+                    let (py, px) = (pix / ow, pix % ow);
+                    for (oc, (&dot, &beta)) in d.iter().zip(&layer.beta).enumerate() {
+                        let code = contract.code(dot as i64, beta);
+                        fmap[oc * n_pix + py * ow + px] = post_adc_code(layer, half, code);
+                    }
+                }
+                apply_pool_into(&fmap, n_out, oh, ow, layer.pool, next);
+            }
+            arena::put_f32(fmap);
+            arena::put_i32(dots);
+            arena::put_u8(images_q);
+        }
     }
 }
 
@@ -288,6 +530,50 @@ fn forward_layer_batch(
             (outs, out_shape)
         }
     }
+}
+
+/// Deploy-time weight packs for every layer at its current `r_in`.
+fn pack_layers(model: &NetworkModel) -> Vec<PackedWeights> {
+    model
+        .layers
+        .iter()
+        .map(|l| PackedWeights::build(&l.w_phys, l.rows, l.out_features, l.cfg.r_in))
+        .collect()
+}
+
+/// Data-independent (input, output) activation shape of every layer —
+/// the same walk the cost model does, shared by the chunk pipeline so
+/// workers never re-derive shapes per batch.
+fn layer_io_shapes(model: &NetworkModel) -> Vec<(Vec<usize>, Vec<usize>)> {
+    let mut io = Vec::with_capacity(model.layers.len());
+    let mut shape = model.input_shape.clone();
+    for layer in &model.layers {
+        let next = match layer.kind {
+            Kind::Dense => vec![layer.out_features],
+            Kind::Conv3 => {
+                let (h, w) = (shape[1], shape[2]);
+                let (oh, ow) = (h.div_ceil(layer.stride), w.div_ceil(layer.stride));
+                match layer.pool {
+                    Pool::Gap => vec![layer.out_features],
+                    // Mirrors apply_pool's floor-crop: ph = (oh/2*2)/2.
+                    Pool::Max2 | Pool::Avg2 => vec![layer.out_features, oh / 2, ow / 2],
+                    Pool::None => vec![layer.out_features, oh, ow],
+                }
+            }
+        };
+        io.push((shape.clone(), next.clone()));
+        shape = next;
+    }
+    io
+}
+
+/// Largest flat activation length crossing any layer boundary.
+fn max_boundary_len(model: &NetworkModel, io: &[(Vec<usize>, Vec<usize>)]) -> usize {
+    let mut max: usize = model.input_shape.iter().product();
+    for (_, out_shape) in io {
+        max = max.max(out_shape.iter().product());
+    }
+    max
 }
 
 /// Per-layer dataflow/energy cost of one image through the network —

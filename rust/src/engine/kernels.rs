@@ -180,6 +180,14 @@ pub fn weights_bitplane_eligible(w: &[i32]) -> bool {
     w.iter().all(|&v| v == 0 || (v.abs() <= W_LEVEL_MAX && (v & 1) != 0))
 }
 
+/// Whether auto-selection can route calls at this input precision to
+/// the bit-plane tier — the `r_in` gate of [`select_gemm`], exposed so
+/// the deploy-time weight cache ([`super::packed`]) packs exactly the
+/// layers the dispatcher could use a pack for.
+pub fn bitplane_auto_rin(r_in: u32) -> bool {
+    (1..=BITPLANE_MAX_RIN).contains(&r_in)
+}
+
 /// [`select_gemm`] with injected [`Caps`] — lets tests pin the
 /// selection table without depending on the host CPU.
 pub fn select_gemm_with(
@@ -295,6 +303,44 @@ pub fn matmul_i32_with(
     Some(matmul_i32_path(path, a, w, n_vec, rows, n_out, workers, r_in))
 }
 
+/// [`matmul_i32`] writing into a caller-owned buffer (resized to
+/// `n_vec · n_out`, capacity reused), optionally reusing a pre-packed
+/// weight-side [`BitPlanes`] built at deploy time. The cached pack is
+/// honoured only when the selector chose the bit-plane path *and* the
+/// pack is keyed to this call's `r_in` — any mismatch falls back to
+/// packing in-call, so a stale cache can degrade performance but never
+/// change results. This is the steady-state entry point: with a warm
+/// cache and warm [`super::arena`] pools it performs no allocations.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_i32_packed_into(
+    a: &[i32],
+    w: &[i32],
+    n_vec: usize,
+    rows: usize,
+    n_out: usize,
+    workers: usize,
+    r_in: Option<u32>,
+    packed: Option<&BitPlanes>,
+    out: &mut Vec<i32>,
+) {
+    assert_eq!(a.len(), n_vec * rows);
+    assert_eq!(w.len(), rows * n_out);
+    out.clear();
+    out.resize(n_vec * n_out, 0);
+    if n_vec == 0 || n_out == 0 {
+        return;
+    }
+    let selected = select_gemm(r_in, rows, n_out, n_vec, w);
+    let cached = packed.filter(|bp| selected == KernelPath::BitPlane && r_in == Some(bp.r_in));
+    let (path, prep) = if cached.is_some() {
+        (KernelPath::BitPlane, None)
+    } else {
+        prepare_gemm(selected, w, rows, n_out, n_vec, r_in)
+    };
+    let bp = cached.or_else(|| prep.as_ref());
+    run_gemm_split(path, bp, a, w, n_vec, rows, n_out, workers, out);
+}
+
 #[allow(clippy::too_many_arguments)]
 fn matmul_i32_path(
     path: KernelPath,
@@ -313,22 +359,40 @@ fn matmul_i32_path(
     // Weight-side preparation is done once and shared by every worker
     // chunk, so bit-plane packing is amortized across the whole batch.
     let (path, prep) = prepare_gemm(path, w, rows, n_out, n_vec, r_in);
+    let bp = prep.as_ref();
+    run_gemm_split(path, bp, a, w, n_vec, rows, n_out, workers, &mut out);
+    out
+}
+
+/// Split the batch dimension over scoped worker threads (fixed
+/// `ceil(n_vec / workers)` chunk grid) and run the resolved kernel on
+/// each chunk. i32 accumulation is exact, so the split is bit-neutral.
+#[allow(clippy::too_many_arguments)]
+fn run_gemm_split(
+    path: KernelPath,
+    bp: Option<&BitPlanes>,
+    a: &[i32],
+    w: &[i32],
+    n_vec: usize,
+    rows: usize,
+    n_out: usize,
+    workers: usize,
+    out: &mut [i32],
+) {
     let workers = workers.clamp(1, n_vec);
-    let chunk_vecs = n_vec.div_ceil(workers);
     if workers == 1 {
-        run_gemm_chunk(path, prep.as_ref(), a, w, rows, n_out, &mut out);
-        return out;
+        run_gemm_chunk(path, bp, a, w, rows, n_out, out);
+        return;
     }
-    let prep_ref = prep.as_ref();
+    let chunk_vecs = n_vec.div_ceil(workers);
     std::thread::scope(|s| {
         for (a_chunk, out_chunk) in a
             .chunks(chunk_vecs * rows)
             .zip(out.chunks_mut(chunk_vecs * n_out))
         {
-            s.spawn(move || run_gemm_chunk(path, prep_ref, a_chunk, w, rows, n_out, out_chunk));
+            s.spawn(move || run_gemm_chunk(path, bp, a_chunk, w, rows, n_out, out_chunk));
         }
     });
-    out
 }
 
 /// Resolve the weight-side state for `path`; demotes `BitPlane` to the
@@ -593,7 +657,14 @@ mod arm {
 /// per output, four `u64` mask arrays (one per weight bit of
 /// `k = (w+15)/2`) plus a validity mask `Z` that excludes zero-weight
 /// padding rows and the unused tail of the last word.
-struct BitPlanes {
+///
+/// The pack is a pure function of `(w, rows, n_out, r_in)`, so a copy
+/// built once at deploy time ([`super::packed::PackedWeights`]) and
+/// handed back through [`matmul_i32_packed_into`] is indistinguishable
+/// from an in-call pack — the weight-stationary reuse the macro gets
+/// for free in silicon.
+#[derive(Clone, Debug)]
+pub struct BitPlanes {
     r_in: u32,
     words: usize,
     /// `[n_out × W_PLANES × words]`, plane-major per output.
@@ -605,7 +676,9 @@ struct BitPlanes {
 }
 
 impl BitPlanes {
-    fn pack(w: &[i32], rows: usize, n_out: usize, r_in: u32) -> Option<Self> {
+    /// Pack a weight matrix, or `None` if `r_in` is out of range or any
+    /// weight is not an antipodal level / zero.
+    pub fn pack(w: &[i32], rows: usize, n_out: usize, r_in: u32) -> Option<Self> {
         if !(1..=BITPLANE_RIN_LIMIT).contains(&r_in) || !weights_bitplane_eligible(w) {
             return None;
         }
@@ -672,7 +745,8 @@ fn bitplane_chunk(
     let words = bp.words;
     let r_bits = bp.r_in as usize;
     let base = W_LEVEL_MAX * ((1i32 << bp.r_in) - 1); // 15 · M
-    let mut a_planes = vec![0u64; r_bits * words];
+    let mut a_planes = super::arena::take_u64(r_bits * words);
+    a_planes.resize(r_bits * words, 0);
     for (sx, bo) in a.chunks_exact(rows).zip(out.chunks_exact_mut(n_out)) {
         a_planes.iter_mut().for_each(|p| *p = 0);
         if !pack_input_planes(sx, bp.r_in, words, &mut a_planes) {
@@ -701,6 +775,7 @@ fn bitplane_chunk(
             *slot = base * bp.zpop[o] - 2 * weighted;
         }
     }
+    super::arena::put_u64(a_planes);
 }
 
 // ---------------------------------------------------------------------------
@@ -728,30 +803,157 @@ pub fn conv3x3_direct(
     n_out: usize,
     workers: usize,
 ) -> (Vec<i32>, usize, usize) {
-    assert_eq!(w_phys.len(), rows * n_out);
     if images_q.is_empty() {
+        assert_eq!(w_phys.len(), rows * n_out);
         return (Vec::new(), 0, 0);
     }
     let oh = h.div_ceil(stride);
     let ow = w.div_ceil(stride);
+    let mut out = vec![0i32; images_q.len() * oh * ow * n_out];
+    let view = NestedImages(images_q);
+    let dims = conv3x3_direct_core(
+        &view,
+        c,
+        h,
+        w,
+        stride,
+        r_in,
+        w_phys,
+        rows,
+        n_out,
+        workers,
+        None,
+        &mut out,
+    );
+    debug_assert_eq!(dims, (oh, ow));
+    (out, oh, ow)
+}
+
+/// [`conv3x3_direct`] over a flat `[n_img × c·h·w]` image buffer,
+/// writing into a caller-owned dot buffer and honouring a deploy-time
+/// weight pack — the zero-allocation steady-state form used by the
+/// chunk-pipelined engine. Same bit-identity contract as
+/// `conv3x3_direct` (the flat layout only changes how an image slice is
+/// addressed, not any arithmetic).
+#[allow(clippy::too_many_arguments)]
+pub fn conv3x3_direct_packed_into(
+    images_q: &[u8],
+    n_img: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    stride: usize,
+    r_in: u32,
+    w_phys: &[i32],
+    rows: usize,
+    n_out: usize,
+    workers: usize,
+    packed: Option<&BitPlanes>,
+    out: &mut Vec<i32>,
+) -> (usize, usize) {
+    assert_eq!(images_q.len(), n_img * c * h * w);
+    if n_img == 0 {
+        assert_eq!(w_phys.len(), rows * n_out);
+        out.clear();
+        return (0, 0);
+    }
+    let oh = h.div_ceil(stride);
+    let ow = w.div_ceil(stride);
+    out.clear();
+    out.resize(n_img * oh * ow * n_out, 0);
+    let view = FlatImages { data: images_q, img_len: c * h * w };
+    let dims = conv3x3_direct_core(
+        &view,
+        c,
+        h,
+        w,
+        stride,
+        r_in,
+        w_phys,
+        rows,
+        n_out,
+        workers,
+        packed,
+        out,
+    );
+    debug_assert_eq!(dims, (oh, ow));
+    (oh, ow)
+}
+
+/// Indexed read-only access to a batch of quantized images — lets the
+/// direct-conv core run identically over the historical per-image
+/// `Vec<Vec<u8>>` layout and the engine's flat arena buffer.
+trait ImageView: Sync {
+    fn n_img(&self) -> usize;
+    fn img(&self, i: usize) -> &[u8];
+}
+
+struct NestedImages<'a>(&'a [Vec<u8>]);
+
+impl ImageView for NestedImages<'_> {
+    fn n_img(&self) -> usize {
+        self.0.len()
+    }
+    fn img(&self, i: usize) -> &[u8] {
+        &self.0[i]
+    }
+}
+
+struct FlatImages<'a> {
+    data: &'a [u8],
+    img_len: usize,
+}
+
+impl ImageView for FlatImages<'_> {
+    fn n_img(&self) -> usize {
+        self.data.len() / self.img_len.max(1)
+    }
+    fn img(&self, i: usize) -> &[u8] {
+        &self.data[i * self.img_len..(i + 1) * self.img_len]
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn conv3x3_direct_core<V: ImageView>(
+    images: &V,
+    c: usize,
+    h: usize,
+    w: usize,
+    stride: usize,
+    r_in: u32,
+    w_phys: &[i32],
+    rows: usize,
+    n_out: usize,
+    workers: usize,
+    packed: Option<&BitPlanes>,
+    out: &mut [i32],
+) -> (usize, usize) {
+    assert_eq!(w_phys.len(), rows * n_out);
+    let oh = h.div_ceil(stride);
+    let ow = w.div_ceil(stride);
     let n_pix = oh * ow;
-    let n_img = images_q.len();
-    let mut out = vec![0i32; n_img * n_pix * n_out];
-    if n_out == 0 || n_pix == 0 {
-        return (out, oh, ow);
+    let n_img = images.n_img();
+    if n_out == 0 || n_pix == 0 || n_img == 0 {
+        return (oh, ow);
     }
     let selected = select_gemm(Some(r_in), rows, n_out, n_img * n_pix, w_phys);
-    let (path, prep) = prepare_gemm(selected, w_phys, rows, n_out, n_img * n_pix, Some(r_in));
-    let prep_ref = prep.as_ref();
-    let run_images = |imgs: &[Vec<u8>], out_chunk: &mut [i32]| {
-        let mut sx = Vec::with_capacity(n_pix * rows);
-        for (i, img) in imgs.iter().enumerate() {
+    let cached = packed.filter(|bp| selected == KernelPath::BitPlane && bp.r_in == r_in);
+    let (path, prep) = if cached.is_some() {
+        (KernelPath::BitPlane, None)
+    } else {
+        prepare_gemm(selected, w_phys, rows, n_out, n_img * n_pix, Some(r_in))
+    };
+    let bp = cached.or_else(|| prep.as_ref());
+    let run_images = |first: usize, count: usize, out_chunk: &mut [i32]| {
+        let mut sx = super::arena::take_i32(n_pix * rows);
+        for i in 0..count {
             sx.clear();
+            let img = images.img(first + i);
             let dims = gemm::conv3x3_signed_rows_into(img, c, h, w, stride, r_in, rows, &mut sx);
             debug_assert_eq!(dims, (oh, ow));
             run_gemm_chunk(
                 path,
-                prep_ref,
+                bp,
                 &sx,
                 w_phys,
                 rows,
@@ -759,23 +961,23 @@ pub fn conv3x3_direct(
                 &mut out_chunk[i * n_pix * n_out..(i + 1) * n_pix * n_out],
             );
         }
+        super::arena::put_i32(sx);
     };
     let workers = workers.clamp(1, n_img);
     if workers == 1 {
-        run_images(images_q, &mut out);
-        return (out, oh, ow);
+        run_images(0, n_img, out);
+        return (oh, ow);
     }
     let chunk_imgs = n_img.div_ceil(workers);
     std::thread::scope(|s| {
-        for (imgs, out_chunk) in images_q
-            .chunks(chunk_imgs)
-            .zip(out.chunks_mut(chunk_imgs * n_pix * n_out))
-        {
+        for (ci, out_chunk) in out.chunks_mut(chunk_imgs * n_pix * n_out).enumerate() {
+            let first = ci * chunk_imgs;
+            let count = chunk_imgs.min(n_img - first);
             let run_images = &run_images;
-            s.spawn(move || run_images(imgs, out_chunk));
+            s.spawn(move || run_images(first, count, out_chunk));
         }
     });
-    (out, oh, ow)
+    (oh, ow)
 }
 
 // ---------------------------------------------------------------------------

@@ -14,8 +14,20 @@
 //!   engine at `r_in ∈ {1,2}` that makes software cost scale with input
 //!   precision like the silicon, and a direct conv3x3 that skips the
 //!   whole-batch im2col buffer — all bit-identical to [`gemm`];
+//! * [`arena`] — thread-local high-water-mark scratch pools: im2col
+//!   rows, input bit-plane packs and intermediate activations are taken
+//!   and returned per call instead of re-allocated, so the steady-state
+//!   hot path performs no allocations (pinned by
+//!   `tests/alloc_steady_state.rs`);
+//! * [`packed`] — persistent packed-weight caches built once at
+//!   deploy/retarget (bit-plane planes + validity masks, kernel-layout
+//!   i32 matrices) and shared read-only across workers and batches,
+//!   mirroring the macro's weight-stationary arrays;
 //! * [`ideal`] — [`BatchIdeal`]: whole-batch closed-form contract
-//!   evaluation, bit-identical to the per-image executor;
+//!   evaluation, bit-identical to the per-image executor; batches run
+//!   chunk-pipelined (each worker carries a fixed chunk of images
+//!   through *all* layers) instead of through full-batch layer
+//!   barriers;
 //! * [`analog`] — [`AnalogPool`]: one cloned circuit-behavioral die per
 //!   worker with deterministic per-die seeds;
 //! * [`noise`] — the equivalent-output-noise probe: measure the analog
@@ -33,10 +45,12 @@
 //!   engine (and one precision) per process.
 
 pub mod analog;
+pub mod arena;
 pub mod gemm;
 pub mod ideal;
 pub mod kernels;
 pub mod noise;
+pub mod packed;
 pub mod queue;
 
 pub use analog::AnalogPool;

@@ -1,0 +1,139 @@
+//! Persistent packed-weight caches for the engine and graph hot paths.
+//!
+//! The silicon keeps weights stationary in the array — packing them is
+//! a deploy-time cost, not a per-batch one. Before this module the
+//! software paid the opposite way around: every `forward_batch` re-ran
+//! `BitPlanes::pack` (bit-plane u64 planes + validity masks) and every
+//! graph/trainer forward re-derived the kernel-layout i32 weight matrix
+//! from the f32 training layout. Both forms are pure functions of the
+//! weights and the layer's input precision, so they are built **once**
+//! at deploy/retarget time and shared read-only across workers and
+//! batches:
+//!
+//! * [`PackedWeights`] — per physical layer: the pre-packed
+//!   [`kernels::BitPlanes`] for the layer's current `r_in`, threaded
+//!   into the gemm/conv dispatch so the bit-plane tier skips re-packing.
+//!   Rebuilt by `BatchIdeal::retarget` on precision hops (the pack is
+//!   keyed to `r_in`).
+//! * [`NodeKernel`] — per quantized graph node: the `[k × n_out]`
+//!   row-major i32 matrix (integer fast path) or the f64 rowdot layout
+//!   (fallback), replacing the per-forward `quantized_rowmajor_i32`
+//!   conversion. Rebuilt by the trainer's `refresh_weights` after every
+//!   optimizer step.
+//!
+//! Cache consistency is by construction: both forms are derived through
+//! the *same* eligibility predicates the per-call path used
+//! (`BitPlanes::pack`, `quantized_dot_fits_i32`), so kernel selection —
+//! and therefore bit-exact output — is unchanged; only the redundant
+//! re-derivation disappears.
+
+use super::kernels::{self, BitPlanes};
+
+/// Read-only packed forms of one physical layer's `[rows × n_out]`
+/// weight matrix, built once per (deployment, precision).
+#[derive(Clone, Debug)]
+pub struct PackedWeights {
+    r_in: u32,
+    bitplanes: Option<BitPlanes>,
+}
+
+impl PackedWeights {
+    /// Pack `w` for a layer running at input precision `r_in`. The
+    /// bit-plane form is built exactly when auto-selection could route
+    /// to the bit-plane tier (`r_in` within the auto gate and weights
+    /// antipodal-eligible) — mirroring `select_gemm`, so a cache hit
+    /// can never change which kernel runs.
+    pub fn build(w: &[i32], rows: usize, n_out: usize, r_in: u32) -> Self {
+        let bitplanes = if kernels::bitplane_auto_rin(r_in) {
+            BitPlanes::pack(w, rows, n_out, r_in)
+        } else {
+            None
+        };
+        PackedWeights { r_in, bitplanes }
+    }
+
+    /// The input precision this pack is keyed to.
+    pub fn r_in(&self) -> u32 {
+        self.r_in
+    }
+
+    /// The pre-packed bit-planes, if this layer is bit-plane eligible.
+    pub fn bitplanes(&self) -> Option<&BitPlanes> {
+        self.bitplanes.as_ref()
+    }
+}
+
+/// Cached kernel-side form of a quantized graph node's weights (the
+/// trainer/graph `[n_out × k]` f32 layout resolved into whichever
+/// kernel layout its forward will actually use).
+#[derive(Clone, Debug)]
+pub enum NodeKernel {
+    /// Exact-integer fast path: `[k × n_out]` row-major i32, `max |w|`
+    /// (the overflow-bound witness) and — when the node's `r_in` is in
+    /// the bit-plane auto gate and the weights are antipodal-eligible —
+    /// the pre-packed bit-planes for the popcount tier.
+    I32 {
+        wi: Vec<i32>,
+        wmax: i32,
+        planes: Option<BitPlanes>,
+    },
+    /// f64 rowdot fallback (non-integral or implausibly large weights).
+    F64 { w64: Vec<f64> },
+}
+
+impl NodeKernel {
+    /// Resolve the kernel form for weights `w_q` at input precision
+    /// `r_in` — the same decision the per-call path made
+    /// (`quantized_rowmajor_i32` + `quantized_dot_fits_i32`), hoisted
+    /// to build/refresh time.
+    pub fn build(w_q: &[f32], n_out: usize, k_dim: usize, r_in: u32) -> Self {
+        match kernels::quantized_rowmajor_i32(w_q, n_out, k_dim)
+            .filter(|&(_, wmax)| kernels::quantized_dot_fits_i32(k_dim, r_in, wmax))
+        {
+            Some((wi, wmax)) => {
+                let planes = if kernels::bitplane_auto_rin(r_in) {
+                    BitPlanes::pack(&wi, k_dim, n_out, r_in)
+                } else {
+                    None
+                };
+                NodeKernel::I32 { wi, wmax, planes }
+            }
+            None => NodeKernel::F64 { w64: w_q.iter().map(|&v| v as f64).collect() },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packed_weights_key_to_rin() {
+        // Antipodal weights, big enough matrix for the bit-plane tier.
+        let w = vec![3i32; 64 * 8];
+        let low = PackedWeights::build(&w, 64, 8, 1);
+        assert_eq!(low.r_in(), 1);
+        assert!(low.bitplanes().is_some());
+        // Outside the auto gate no pack is kept.
+        let high = PackedWeights::build(&w, 64, 8, 8);
+        assert!(high.bitplanes().is_none());
+        // Ineligible weights never pack.
+        let even = vec![2i32; 64 * 8];
+        assert!(PackedWeights::build(&even, 64, 8, 1).bitplanes().is_none());
+    }
+
+    #[test]
+    fn node_kernel_resolves_like_the_per_call_path() {
+        let wq = [1.0f32, -3.0, 15.0, 0.0];
+        match NodeKernel::build(&wq, 2, 2, 8) {
+            NodeKernel::I32 { wi, wmax, planes } => {
+                assert_eq!(wi, vec![1, 15, -3, 0]);
+                assert_eq!(wmax, 15);
+                assert!(planes.is_none(), "r_in=8 is outside the auto gate");
+            }
+            NodeKernel::F64 { .. } => panic!("integral weights must take the i32 path"),
+        }
+        let frac = [0.5f32, 1.0];
+        assert!(matches!(NodeKernel::build(&frac, 1, 2, 8), NodeKernel::F64 { .. }));
+    }
+}

@@ -51,7 +51,7 @@ use anyhow::{bail, Context, Result};
 use imagine::analog::macro_model::OpConfig;
 use imagine::api::{
     parse_corner, parse_precision, parse_supply, BackendKind, Deployment, LrSchedule, ModelHub,
-    NoiseInjection, Session, TrainConfig, Trainer,
+    NoiseInjection, OptimizerKind, Session, TrainConfig, Trainer,
 };
 use imagine::cluster::{ModelSpec, Router, RouterConfig};
 use imagine::config::params::{MacroParams, Supply};
@@ -459,6 +459,10 @@ fn cmd_train(flags: &Flags) -> Result<()> {
         config.lr_schedule = LrSchedule::parse(s)
             .ok_or_else(|| anyhow::anyhow!("--lr-schedule expects const|cosine, got '{s}'"))?;
     }
+    if let Some(s) = flags.get("optimizer") {
+        config.optimizer = OptimizerKind::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("--optimizer expects sgd|adam, got '{s}'"))?;
+    }
     if let Some(s) = flags.get("precision") {
         let (r_in, r_out) = parse_precision(s)?;
         config.r_in = r_in;
@@ -479,7 +483,7 @@ fn cmd_train(flags: &Flags) -> Result<()> {
     println!(
         "training {arch} on {} images ({} classes, shape {:?}) | r_in={} r_out={} | \
          noise {:?} | supply {:.2}/{:.2} V corner {} | epochs {} batch {} lr {} ({}) \
-         momentum {} seed {}",
+         optimizer {} momentum {} seed {}",
         train_set.n,
         classes,
         train_set.shape,
@@ -493,6 +497,7 @@ fn cmd_train(flags: &Flags) -> Result<()> {
         config.batch,
         config.lr,
         config.lr_schedule.name(),
+        config.optimizer.name(),
         config.momentum,
         config.seed
     );
@@ -634,7 +639,7 @@ fn usage() {
     println!("         [--batch 64] [--workers N] [--seed 42]");
     println!("  train: [--arch mlp|cnn] [--data synthetic|PATH.imgt] [--n 480] [--classes 10]");
     println!("         [--epochs 6] [--batch 32] [--lr 0.04] [--lr-schedule const|cosine]");
-    println!("         [--momentum 0.9]");
+    println!("         [--momentum 0.9] [--optimizer sgd|adam]");
     println!("         [--noise probe|off|SIGMA] [--precision R[,R_OUT]]");
     println!("         [--supply nominal|low-power|L/H] [--corner tt|ff|ss|fs|sf]");
     println!("         [--seed 7] [--workers N] [--out DIR] [--name cim_net]");
@@ -683,8 +688,8 @@ fn main() -> Result<()> {
             rest,
             &[
                 "arch", "data", "n", "classes", "epochs", "batch", "lr", "lr-schedule",
-                "momentum", "noise", "precision", "supply", "corner", "seed", "workers", "out",
-                "name",
+                "momentum", "optimizer", "noise", "precision", "supply", "corner", "seed",
+                "workers", "out", "name",
             ],
         )?),
         "serve" => cmd_serve(&parse_flags(

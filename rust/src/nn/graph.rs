@@ -37,7 +37,8 @@
 use crate::config::params::MacroParams;
 use crate::coordinator::manifest::{Kind, Layer, NetworkModel, Pool};
 use crate::dataflow::im2col;
-use crate::engine::{gemm, kernels};
+use crate::engine::packed::NodeKernel;
+use crate::engine::{arena, gemm, kernels};
 use crate::nn::cim_eval::EvalCfg;
 use crate::nn::dataset::Dataset;
 use crate::nn::layers::{chw, Conv3x3, DenseNode, Node, PoolKind};
@@ -232,6 +233,10 @@ pub struct QNode {
     pub gamma: f64,
     /// Resolved per-node CIM configuration.
     pub cfg: EvalCfg,
+    /// Kernel-resolved form of `w_q`, built once at mapping time (and
+    /// rebuilt by the trainer's weight refresh) instead of re-derived on
+    /// every forward — see [`NodeKernel`].
+    pub kernel: NodeKernel,
 }
 
 impl QNode {
@@ -547,6 +552,7 @@ fn map_dense(
     }
     let dv_sigma = (sq / cnt.max(1) as f64).sqrt().max(1e-9);
 
+    let kernel = NodeKernel::build(&w_q, layer.n_out, layer.n_in, cfg.r_in);
     QNode {
         kind: CimKind::Dense { n_in: layer.n_in, n_out: layer.n_out },
         rows: layer.n_in,
@@ -559,6 +565,7 @@ fn map_dense(
         alpha,
         gamma: gamma_from_sigma(dv_sigma, cfg, p),
         cfg: *cfg,
+        kernel,
     }
 }
 
@@ -623,6 +630,7 @@ fn map_conv(
     }
     let dv_sigma = (sq / cnt.max(1) as f64).sqrt().max(1e-9);
 
+    let kernel = NodeKernel::build(&w_q, c.c_out, rows, cfg.r_in);
     QNode {
         kind: CimKind::Conv { c_in: c.c_in, c_out: c.c_out },
         rows,
@@ -635,6 +643,7 @@ fn map_conv(
         alpha,
         gamma: gamma_from_sigma(dv_sigma, cfg, p),
         cfg: *cfg,
+        kernel,
     }
 }
 
@@ -694,7 +703,10 @@ fn macro_contract(
 /// factors are exact small integers, so (when the overflow bound
 /// holds) the dots are computed through the i32 kernel dispatch —
 /// picking up SIMD and, at `r_in ≤ 2`, the bit-plane engine — and cast
-/// back to f64, bit-identical to the f64 rowdot on the same data.
+/// back to f64, bit-identical to the f64 rowdot on the same data. The
+/// kernel form (and any bit-plane pack) comes pre-resolved from the
+/// node's [`NodeKernel`] cache; scratch buffers come from the
+/// thread-local [`arena`].
 fn forward_dense(
     q: &QNode,
     p: &MacroParams,
@@ -709,40 +721,49 @@ fn forward_dense(
     };
     let (m, half, top, lsb, dv_unit) = q.contract_consts(p);
 
-    let dots: Vec<f64> = match kernels::quantized_rowmajor_i32(&q.w_q, n_out, n_in)
-        .filter(|&(_, wmax)| kernels::quantized_dot_fits_i32(n_in, q.cfg.r_in, wmax))
-    {
-        Some((wi, _)) => {
-            let sx_i: Vec<i32> = cur
-                .iter()
-                .map(|&v| {
-                    let xq = (v / q.a_scale).round().clamp(0.0, m);
-                    (2.0 * xq - m) as i32
-                })
-                .collect();
-            kernels::matmul_i32(&sx_i, &wi, n, n_in, n_out, workers, Some(q.cfg.r_in))
-                .into_iter()
-                .map(|d| d as f64)
-                .collect()
-        }
-        None => {
-            let sx: Vec<f64> = cur
-                .iter()
-                .map(|&v| {
-                    let xq = (v / q.a_scale).round().clamp(0.0, m);
-                    (2.0 * xq - m) as f64
-                })
-                .collect();
-            let w64: Vec<f64> = q.w_q.iter().map(|&w| w as f64).collect();
-            kernels::rowdot_f64(&sx, &w64, n, n_in, n_out, workers)
-        }
-    };
-
     let mut out = vec![0f32; n * n_out];
-    for i in 0..n {
-        for o in 0..n_out {
-            out[i * n_out + o] =
-                macro_contract(q, dots[i * n_out + o], o, dv_unit, lsb, half, top, m, rng);
+    match &q.kernel {
+        NodeKernel::I32 { wi, planes, .. } => {
+            let mut sx_i = arena::take_i32(cur.len());
+            sx_i.extend(cur.iter().map(|&v| {
+                let xq = (v / q.a_scale).round().clamp(0.0, m);
+                (2.0 * xq - m) as i32
+            }));
+            let mut dots = arena::take_i32(n * n_out);
+            kernels::matmul_i32_packed_into(
+                &sx_i,
+                wi,
+                n,
+                n_in,
+                n_out,
+                workers,
+                Some(q.cfg.r_in),
+                planes.as_ref(),
+                &mut dots,
+            );
+            for i in 0..n {
+                for o in 0..n_out {
+                    let dot = dots[i * n_out + o] as f64;
+                    out[i * n_out + o] = macro_contract(q, dot, o, dv_unit, lsb, half, top, m, rng);
+                }
+            }
+            arena::put_i32(dots);
+            arena::put_i32(sx_i);
+        }
+        NodeKernel::F64 { w64 } => {
+            let mut sx = arena::take_f64(cur.len());
+            sx.extend(cur.iter().map(|&v| {
+                let xq = (v / q.a_scale).round().clamp(0.0, m);
+                (2.0 * xq - m) as f64
+            }));
+            let dots = kernels::rowdot_f64(&sx, w64, n, n_in, n_out, workers);
+            arena::put_f64(sx);
+            for i in 0..n {
+                for o in 0..n_out {
+                    out[i * n_out + o] =
+                        macro_contract(q, dots[i * n_out + o], o, dv_unit, lsb, half, top, m, rng);
+                }
+            }
         }
     }
     out
@@ -774,53 +795,71 @@ fn forward_conv(
     // and both paths stay in lock-step on the row-order convention).
     let in_len = c * h * w;
     let n_pix = h * w;
-    let images_q: Vec<Vec<u8>> = cur
-        .chunks(in_len)
-        .map(|img| {
-            img.iter()
-                .map(|&v| (v / q.a_scale).round().clamp(0.0, m) as u8)
-                .collect()
-        })
-        .collect();
-    let dots: Vec<f64> = match kernels::quantized_rowmajor_i32(&q.w_q, c_out, q.rows)
-        .filter(|&(_, wmax)| kernels::quantized_dot_fits_i32(q.rows, q.cfg.r_in, wmax))
-    {
-        Some((wi, _)) => {
-            // Stream the batch through the direct conv kernel: per-worker
-            // im2col scratch, SIMD or bit-plane dots per the dispatch.
-            let (dots_i, oh, ow) = kernels::conv3x3_direct(
+    let mut out = vec![0f32; n * c_out * n_pix];
+    match &q.kernel {
+        NodeKernel::I32 { wi, planes, .. } => {
+            // Stream the flat batch through the direct conv kernel:
+            // per-worker im2col scratch, SIMD or bit-plane dots per the
+            // dispatch, reusing the node's deploy-time pack.
+            let mut images_q = arena::take_u8(cur.len());
+            for &v in cur {
+                images_q.push((v / q.a_scale).round().clamp(0.0, m) as u8);
+            }
+            let mut dots = arena::take_i32(n * n_pix * c_out);
+            let (oh, ow) = kernels::conv3x3_direct_packed_into(
                 &images_q,
+                n,
                 c,
                 h,
                 w,
                 1,
                 q.cfg.r_in,
-                &wi,
+                wi,
                 q.rows,
                 c_out,
                 workers,
+                planes.as_ref(),
+                &mut dots,
             );
             debug_assert_eq!((oh, ow), (h, w));
-            dots_i.into_iter().map(|d| d as f64).collect()
+            for img in 0..n {
+                let fmap = &mut out[img * c_out * n_pix..(img + 1) * c_out * n_pix];
+                for pix in 0..n_pix {
+                    let base = (img * n_pix + pix) * c_out;
+                    let d = &dots[base..base + c_out];
+                    for (oc, &dot) in d.iter().enumerate() {
+                        fmap[oc * n_pix + pix] =
+                            macro_contract(q, dot as f64, oc, dv_unit, lsb, half, top, m, rng);
+                    }
+                }
+            }
+            arena::put_i32(dots);
+            arena::put_u8(images_q);
         }
-        None => {
+        NodeKernel::F64 { w64 } => {
+            let images_q: Vec<Vec<u8>> = cur
+                .chunks(in_len)
+                .map(|img| {
+                    img.iter()
+                        .map(|&v| (v / q.a_scale).round().clamp(0.0, m) as u8)
+                        .collect()
+                })
+                .collect();
             let (sx_i, oh, ow) =
                 gemm::conv3x3_signed_rows(&images_q, c, h, w, 1, q.cfg.r_in, q.rows);
             debug_assert_eq!((oh, ow), (h, w));
             let sx: Vec<f64> = sx_i.iter().map(|&v| v as f64).collect();
-            let w64: Vec<f64> = q.w_q.iter().map(|&w| w as f64).collect();
-            kernels::rowdot_f64(&sx, &w64, n * n_pix, q.rows, c_out, workers)
-        }
-    };
-
-    let mut out = vec![0f32; n * c_out * n_pix];
-    for img in 0..n {
-        let fmap = &mut out[img * c_out * n_pix..(img + 1) * c_out * n_pix];
-        for pix in 0..n_pix {
-            let d = &dots[(img * n_pix + pix) * c_out..(img * n_pix + pix + 1) * c_out];
-            for (oc, &dot) in d.iter().enumerate() {
-                fmap[oc * n_pix + pix] =
-                    macro_contract(q, dot, oc, dv_unit, lsb, half, top, m, rng);
+            let dots = kernels::rowdot_f64(&sx, w64, n * n_pix, q.rows, c_out, workers);
+            for img in 0..n {
+                let fmap = &mut out[img * c_out * n_pix..(img + 1) * c_out * n_pix];
+                for pix in 0..n_pix {
+                    let base = (img * n_pix + pix) * c_out;
+                    let d = &dots[base..base + c_out];
+                    for (oc, &dot) in d.iter().enumerate() {
+                        fmap[oc * n_pix + pix] =
+                            macro_contract(q, dot, oc, dv_unit, lsb, half, top, m, rng);
+                    }
+                }
             }
         }
     }

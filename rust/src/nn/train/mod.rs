@@ -2,7 +2,8 @@
 //! pillar: "including the post-silicon equivalent noise within a
 //! CIM-aware CNN training framework".
 //!
-//! [`train_graph`] runs minibatch SGD with momentum and softmax
+//! [`train_graph`] runs minibatch SGD with momentum — or Adam, see
+//! [`OptimizerKind`] — and softmax
 //! cross-entropy over a [`Graph`], where every macro-mapped node's
 //! forward is the *inference* contract itself (the same
 //! quantize/reconstruct/noise expression the executor evaluates — see
@@ -103,6 +104,36 @@ impl LrSchedule {
     }
 }
 
+/// Which optimizer moves the master float weights each minibatch.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OptimizerKind {
+    /// Minibatch SGD with momentum (the historical default).
+    #[default]
+    Sgd,
+    /// Adam: bias-corrected first/second moment estimates with
+    /// per-tensor state (β₁ = 0.9, β₂ = 0.999, ε = 1e-8).
+    Adam,
+}
+
+impl OptimizerKind {
+    /// CLI spelling → optimizer (`sgd` | `adam`).
+    pub fn parse(s: &str) -> Option<OptimizerKind> {
+        match s {
+            "sgd" => Some(OptimizerKind::Sgd),
+            "adam" => Some(OptimizerKind::Adam),
+            _ => None,
+        }
+    }
+
+    /// Protocol/CLI spelling of this optimizer.
+    pub fn name(self) -> &'static str {
+        match self {
+            OptimizerKind::Sgd => "sgd",
+            OptimizerKind::Adam => "adam",
+        }
+    }
+}
+
 /// Hyper-parameters and CIM operating point of one training run.
 #[derive(Clone, Copy, Debug)]
 pub struct TrainConfig {
@@ -111,6 +142,9 @@ pub struct TrainConfig {
     pub lr: f32,
     /// How `lr` evolves across epochs.
     pub lr_schedule: LrSchedule,
+    /// Which update rule consumes the STE gradients.
+    pub optimizer: OptimizerKind,
+    /// SGD momentum coefficient (ignored by Adam).
     pub momentum: f32,
     /// Seeds minibatch shuffling and the noise draws; two runs with the
     /// same config and seed are bit-identical.
@@ -141,6 +175,7 @@ impl Default for TrainConfig {
             batch: 32,
             lr: 0.04,
             lr_schedule: LrSchedule::Const,
+            optimizer: OptimizerKind::Sgd,
             momentum: 0.9,
             seed: 7,
             noise: NoiseInjection::Lsb(0.5),
@@ -222,22 +257,80 @@ impl TrainReport {
     }
 }
 
-/// Per-parameter-tensor SGD momentum state.
-struct Momentum {
-    vw: Vec<f32>,
-    vb: Vec<f32>,
+const ADAM_BETA1: f32 = 0.9;
+const ADAM_BETA2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+
+/// Per-parameter-tensor optimizer state ([`OptimizerKind`] resolved to
+/// its buffers).
+enum OptState {
+    /// SGD momentum velocities.
+    Sgd { vw: Vec<f32>, vb: Vec<f32> },
+    /// Adam first/second moments plus the bias-correction step count.
+    Adam {
+        mw: Vec<f32>,
+        vw: Vec<f32>,
+        mb: Vec<f32>,
+        vb: Vec<f32>,
+        t: u64,
+    },
 }
 
-impl Momentum {
+impl OptState {
+    fn new(kind: OptimizerKind, w_len: usize, b_len: usize) -> OptState {
+        match kind {
+            OptimizerKind::Sgd => OptState::Sgd { vw: vec![0.0; w_len], vb: vec![0.0; b_len] },
+            OptimizerKind::Adam => OptState::Adam {
+                mw: vec![0.0; w_len],
+                vw: vec![0.0; w_len],
+                mb: vec![0.0; b_len],
+                vb: vec![0.0; b_len],
+                t: 0,
+            },
+        }
+    }
+
     fn step(&mut self, w: &mut [f32], b: &mut [f32], g: &qat::NodeGrads, lr: f32, mu: f32) {
-        for (i, wv) in w.iter_mut().enumerate() {
-            self.vw[i] = mu * self.vw[i] - lr * g.gw[i];
-            *wv += self.vw[i];
+        match self {
+            OptState::Sgd { vw, vb } => {
+                for (i, wv) in w.iter_mut().enumerate() {
+                    vw[i] = mu * vw[i] - lr * g.gw[i];
+                    *wv += vw[i];
+                }
+                for (i, bv) in b.iter_mut().enumerate() {
+                    vb[i] = mu * vb[i] - lr * g.gb[i];
+                    *bv += vb[i];
+                }
+            }
+            OptState::Adam { mw, vw, mb, vb, t } => {
+                *t += 1;
+                let tt = (*t).min(i32::MAX as u64) as i32;
+                let bc1 = 1.0 - ADAM_BETA1.powi(tt);
+                let bc2 = 1.0 - ADAM_BETA2.powi(tt);
+                adam_tensor(w, &g.gw, mw, vw, lr, bc1, bc2);
+                adam_tensor(b, &g.gb, mb, vb, lr, bc1, bc2);
+            }
         }
-        for (i, bv) in b.iter_mut().enumerate() {
-            self.vb[i] = mu * self.vb[i] - lr * g.gb[i];
-            *bv += self.vb[i];
-        }
+    }
+}
+
+/// One bias-corrected Adam update over a parameter tensor. Element
+/// order is ascending, so updates are bit-identical run to run.
+fn adam_tensor(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    lr: f32,
+    bc1: f32,
+    bc2: f32,
+) {
+    for (i, pv) in p.iter_mut().enumerate() {
+        m[i] = ADAM_BETA1 * m[i] + (1.0 - ADAM_BETA1) * g[i];
+        v[i] = ADAM_BETA2 * v[i] + (1.0 - ADAM_BETA2) * g[i] * g[i];
+        let m_hat = m[i] / bc1;
+        let v_hat = v[i] / bc2;
+        *pv -= lr * m_hat / (v_hat.sqrt() + ADAM_EPS);
     }
 }
 
@@ -295,14 +388,11 @@ pub fn train_graph(
         .filter(|(_, n)| n.is_cim())
         .map(|(i, _)| i)
         .collect();
-    let mut momentum: Vec<Momentum> = cim_nodes
+    let mut opt: Vec<OptState> = cim_nodes
         .iter()
         .map(|&ni| match &graph.nodes[ni] {
-            Node::Dense(d) => Momentum {
-                vw: vec![0.0; d.dense.w.len()],
-                vb: vec![0.0; d.dense.b.len()],
-            },
-            Node::Conv3x3(c) => Momentum { vw: vec![0.0; c.w.len()], vb: vec![0.0; c.b.len()] },
+            Node::Dense(d) => OptState::new(cfg.optimizer, d.dense.w.len(), d.dense.b.len()),
+            Node::Conv3x3(c) => OptState::new(cfg.optimizer, c.w.len(), c.b.len()),
             _ => unreachable!(),
         })
         .collect();
@@ -436,7 +526,7 @@ pub fn train_graph(
                     // Parameter update on the master float weights.
                     apply_update(
                         &mut graph.nodes[ni],
-                        &mut momentum[ci],
+                        &mut opt[ci],
                         &grads,
                         epoch_lr,
                         cfg.momentum,
@@ -501,10 +591,10 @@ fn build_states(
         .collect())
 }
 
-fn apply_update(node: &mut Node, mom: &mut Momentum, grads: &qat::NodeGrads, lr: f32, mu: f32) {
+fn apply_update(node: &mut Node, opt: &mut OptState, grads: &qat::NodeGrads, lr: f32, mu: f32) {
     match node {
-        Node::Dense(d) => mom.step(&mut d.dense.w, &mut d.dense.b, grads, lr, mu),
-        Node::Conv3x3(c) => mom.step(&mut c.w, &mut c.b, grads, lr, mu),
+        Node::Dense(d) => opt.step(&mut d.dense.w, &mut d.dense.b, grads, lr, mu),
+        Node::Conv3x3(c) => opt.step(&mut c.w, &mut c.b, grads, lr, mu),
         _ => unreachable!(),
     }
 }
@@ -709,6 +799,80 @@ mod tests {
         let (losses_4, w_4) = run(4);
         assert_eq!(losses_1, losses_4);
         assert_eq!(w_1, w_4);
+    }
+
+    #[test]
+    fn adam_training_reduces_loss_and_learns() {
+        let train = toy_task(240, 11);
+        let mut g = mlp_graph(3);
+        let cfg = TrainConfig {
+            epochs: 5,
+            lr: 0.01,
+            optimizer: OptimizerKind::Adam,
+            noise: NoiseInjection::Off,
+            workers: 1,
+            ..TrainConfig::default()
+        };
+        let p = MacroParams::paper();
+        let report = train_graph(&mut g, &train, &p, &cfg).unwrap();
+        assert!(
+            report.final_loss() < report.epoch_losses[0] * 0.6,
+            "losses {:?}",
+            report.epoch_losses
+        );
+        let test = toy_task(120, 12);
+        let acc = crate::nn::graph::eval_graph_workers(
+            &g,
+            &test,
+            &p,
+            &cfg.eval_cfg(0.0),
+            1,
+        )
+        .unwrap();
+        assert!(acc > 0.8, "acc {acc}");
+    }
+
+    #[test]
+    fn adam_is_deterministic_and_distinct_from_sgd() {
+        // Same seed + config ⇒ bit-identical losses and weights; the
+        // optimizer choice itself must change the trajectory.
+        let p = MacroParams::paper();
+        let run = |optimizer: OptimizerKind| {
+            let train = toy_task(80, 31);
+            let mut g = mlp_graph(9);
+            let cfg = TrainConfig {
+                epochs: 2,
+                optimizer,
+                workers: 1,
+                noise: NoiseInjection::Lsb(0.3),
+                ..TrainConfig::default()
+            };
+            let report = train_graph(&mut g, &train, &p, &cfg).unwrap();
+            let weights: Vec<Vec<f32>> = g
+                .nodes
+                .iter()
+                .filter_map(|n| match n {
+                    Node::Dense(d) => Some(d.dense.w.clone()),
+                    _ => None,
+                })
+                .collect();
+            (report.epoch_losses, weights)
+        };
+        let (losses_a, w_a) = run(OptimizerKind::Adam);
+        let (losses_b, w_b) = run(OptimizerKind::Adam);
+        assert_eq!(losses_a, losses_b, "same-seed Adam runs diverged");
+        assert_eq!(w_a, w_b, "same-seed Adam weights diverged");
+        let (_, w_sgd) = run(OptimizerKind::Sgd);
+        assert_ne!(w_a, w_sgd, "optimizer choice must change the update");
+    }
+
+    #[test]
+    fn optimizer_kind_parses_and_names() {
+        assert_eq!(OptimizerKind::parse("sgd"), Some(OptimizerKind::Sgd));
+        assert_eq!(OptimizerKind::parse("adam"), Some(OptimizerKind::Adam));
+        assert_eq!(OptimizerKind::parse("lamb"), None);
+        assert_eq!(OptimizerKind::Adam.name(), "adam");
+        assert_eq!(OptimizerKind::default(), OptimizerKind::Sgd);
     }
 
     #[test]

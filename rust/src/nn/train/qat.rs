@@ -37,7 +37,8 @@
 //! bit-identical across worker counts.
 
 use crate::config::params::MacroParams;
-use crate::engine::{gemm, kernels};
+use crate::engine::packed::NodeKernel;
+use crate::engine::{arena, gemm, kernels};
 use crate::nn::graph::{macro_contract_masked, permute_conv_rows, quantize_weights, CimKind, QNode};
 use crate::nn::layers::Node;
 use crate::util::rng::Rng;
@@ -125,13 +126,27 @@ impl TrainNode {
             }
             other => unreachable!("TrainNode over a digital node {}", other.kind()),
         }
+        self.rebuild_kernel();
+    }
+
+    /// Re-resolve the cached kernel form ([`NodeKernel`]) after the
+    /// quantized weights changed — the train-side equivalent of the
+    /// engine's deploy-time packing.
+    fn rebuild_kernel(&mut self) {
+        let (n_out, k) = match self.q.kind {
+            CimKind::Dense { n_in, n_out } => (n_out, n_in),
+            CimKind::Conv { c_out, .. } => (c_out, self.q.rows),
+        };
+        self.q.kernel = NodeKernel::build(&self.q.w_q, n_out, k, self.q.cfg.r_in);
     }
 
     /// Quantize a batch of activations onto the node's r_in grid.
-    /// Returns `(x_q, x_tilde, in_mask)`.
+    /// Returns `(x_q, x_tilde, in_mask)`; `x_q` comes from the scratch
+    /// arena and the caller returns it with `arena::put_f32` once the
+    /// kernel pass consumed it.
     fn quantize_input(&self, x: &[f32], m: f32) -> (Vec<f32>, Vec<f32>, Vec<bool>) {
         let a = self.q.a_scale;
-        let mut x_q = Vec::with_capacity(x.len());
+        let mut x_q = arena::take_f32(x.len());
         let mut x_tilde = Vec::with_capacity(x.len());
         let mut in_mask = Vec::with_capacity(x.len());
         for &v in x {
@@ -160,22 +175,35 @@ impl TrainNode {
         };
         let (m, half, top, lsb, dv_unit) = self.q.contract_consts(p);
         let (x_q, x_tilde, in_mask) = self.quantize_input(x, m);
-        let dots: Vec<f64> = match kernels::quantized_rowmajor_i32(&self.q.w_q, n_out, n_in)
-            .filter(|&(_, wmax)| kernels::quantized_dot_fits_i32(n_in, self.q.cfg.r_in, wmax))
-        {
-            Some((wi, _)) => {
-                let sx_i: Vec<i32> = x_q.iter().map(|&q| (2.0 * q - m) as i32).collect();
-                kernels::matmul_i32(&sx_i, &wi, n, n_in, n_out, workers, Some(self.q.cfg.r_in))
-                    .into_iter()
-                    .map(|d| d as f64)
-                    .collect()
+        let mut dots = arena::take_f64(n * n_out);
+        match &self.q.kernel {
+            NodeKernel::I32 { wi, planes, .. } => {
+                let mut sx_i = arena::take_i32(x_q.len());
+                sx_i.extend(x_q.iter().map(|&q| (2.0 * q - m) as i32));
+                let mut di = arena::take_i32(n * n_out);
+                kernels::matmul_i32_packed_into(
+                    &sx_i,
+                    wi,
+                    n,
+                    n_in,
+                    n_out,
+                    workers,
+                    Some(self.q.cfg.r_in),
+                    planes.as_ref(),
+                    &mut di,
+                );
+                dots.extend(di.iter().map(|&d| d as f64));
+                arena::put_i32(di);
+                arena::put_i32(sx_i);
             }
-            None => {
-                let sx: Vec<f64> = x_q.iter().map(|&q| (2.0 * q - m) as f64).collect();
-                let w64: Vec<f64> = self.q.w_q.iter().map(|&w| w as f64).collect();
-                kernels::rowdot_f64(&sx, &w64, n, n_in, n_out, workers)
+            NodeKernel::F64 { w64 } => {
+                let mut sx = arena::take_f64(x_q.len());
+                sx.extend(x_q.iter().map(|&q| (2.0 * q - m) as f64));
+                dots.extend(kernels::rowdot_f64(&sx, w64, n, n_in, n_out, workers));
+                arena::put_f64(sx);
             }
-        };
+        }
+        arena::put_f32(x_q);
 
         let mut out = vec![0f32; n * n_out];
         let mut out_mask = vec![false; n * n_out];
@@ -196,6 +224,7 @@ impl TrainNode {
                 out_mask[i * n_out + o] = ok;
             }
         }
+        arena::put_f64(dots);
         (out, CimCache { x_tilde, in_mask, out_mask })
     }
 
@@ -282,29 +311,46 @@ impl TrainNode {
 
         let in_len = c * h * w;
         let n_pix = h * w;
-        let images_q: Vec<Vec<u8>> = x_q
-            .chunks(in_len)
-            .map(|img| img.iter().map(|&q| q as u8).collect())
-            .collect();
         let rows = self.q.rows;
         let r_in = self.q.cfg.r_in;
-        let dots: Vec<f64> = match kernels::quantized_rowmajor_i32(&self.q.w_q, c_out, rows)
-            .filter(|&(_, wmax)| kernels::quantized_dot_fits_i32(rows, r_in, wmax))
-        {
-            Some((wi, _)) => {
-                let (dots_i, oh, ow) =
-                    kernels::conv3x3_direct(&images_q, c, h, w, 1, r_in, &wi, rows, c_out, workers);
+        let mut dots = arena::take_f64(n * n_pix * c_out);
+        match &self.q.kernel {
+            NodeKernel::I32 { wi, planes, .. } => {
+                let mut images_q = arena::take_u8(x_q.len());
+                images_q.extend(x_q.iter().map(|&q| q as u8));
+                let mut di = arena::take_i32(n * n_pix * c_out);
+                let (oh, ow) = kernels::conv3x3_direct_packed_into(
+                    &images_q,
+                    n,
+                    c,
+                    h,
+                    w,
+                    1,
+                    r_in,
+                    wi,
+                    rows,
+                    c_out,
+                    workers,
+                    planes.as_ref(),
+                    &mut di,
+                );
                 debug_assert_eq!((oh, ow), (h, w));
-                dots_i.into_iter().map(|d| d as f64).collect()
+                dots.extend(di.iter().map(|&d| d as f64));
+                arena::put_i32(di);
+                arena::put_u8(images_q);
             }
-            None => {
+            NodeKernel::F64 { w64 } => {
+                let images_q: Vec<Vec<u8>> = x_q
+                    .chunks(in_len)
+                    .map(|img| img.iter().map(|&q| q as u8).collect())
+                    .collect();
                 let (sx_i, oh, ow) = gemm::conv3x3_signed_rows(&images_q, c, h, w, 1, r_in, rows);
                 debug_assert_eq!((oh, ow), (h, w));
                 let sx: Vec<f64> = sx_i.iter().map(|&v| v as f64).collect();
-                let w64: Vec<f64> = self.q.w_q.iter().map(|&wv| wv as f64).collect();
-                kernels::rowdot_f64(&sx, &w64, n * n_pix, rows, c_out, workers)
+                dots.extend(kernels::rowdot_f64(&sx, w64, n * n_pix, rows, c_out, workers));
             }
-        };
+        }
+        arena::put_f32(x_q);
 
         let mut out = vec![0f32; n * c_out * n_pix];
         let mut out_mask = vec![false; n * c_out * n_pix];
@@ -322,6 +368,7 @@ impl TrainNode {
                 }
             }
         }
+        arena::put_f64(dots);
         (out, CimCache { x_tilde, in_mask, out_mask })
     }
 

@@ -112,6 +112,52 @@ fn batch_split_is_irrelevant() {
 }
 
 #[test]
+fn pipelined_matches_barriered_across_worker_counts() {
+    // The chunk-pipelined default path must be bit-identical to the
+    // layer-barriered oracle for any worker count, on dense and conv
+    // models, including batches that do not divide evenly into chunks.
+    let p = MacroParams::paper();
+    let mut rng = Rng::new(0xF1FE);
+    let mlp = NetworkModel::synthetic_mlp(&[48, 24, 6], 8, 4, 8, rng.next_u64(), &p);
+    let cnn = random_cnn(&mut rng, &p);
+
+    for model in [mlp, cnn] {
+        let input_len: usize = model.input_shape.iter().product();
+        for n in [1usize, 5, 13] {
+            let images = random_images(&mut rng, n, input_len);
+            let mut oracle = BatchIdeal::new(model.clone(), p.clone(), 1).unwrap();
+            let expected = oracle.forward_batch_barriered(&images).unwrap();
+            for workers in [1usize, 2, 3, 8] {
+                let mut engine = BatchIdeal::new(model.clone(), p.clone(), workers).unwrap();
+                let got = engine.forward_batch(&images).unwrap();
+                assert_eq!(got, expected, "n {n} workers {workers}");
+                assert_eq!(engine.cost.cycles, oracle.cost.cycles, "n {n} workers {workers}");
+            }
+        }
+    }
+}
+
+#[test]
+fn forward_batch_into_reuses_buffers() {
+    // Steady-state serving reuses one output buffer across calls: stale
+    // contents (including longer previous results) must be overwritten,
+    // and results must match the allocating wrapper bit for bit.
+    let p = MacroParams::paper();
+    let mut rng = Rng::new(0xBEEF);
+    let model = NetworkModel::synthetic_mlp(&[40, 16, 5], 8, 4, 8, 3, &p);
+
+    let mut fresh = BatchIdeal::new(model.clone(), p.clone(), 2).unwrap();
+    let mut reused = BatchIdeal::new(model, p, 2).unwrap();
+    let mut out = vec![vec![9.0f32; 77]; 11];
+    for n in [6usize, 2, 6] {
+        let images = random_images(&mut rng, n, 40);
+        let expected = fresh.forward_batch(&images).unwrap();
+        reused.forward_batch_into(&images, &mut out).unwrap();
+        assert_eq!(out, expected, "batch of {n}");
+    }
+}
+
+#[test]
 fn engine_rejects_wrong_input_length() {
     let p = MacroParams::paper();
     let model = NetworkModel::synthetic_mlp(&[30, 5], 8, 4, 8, 1, &p);
