@@ -2,7 +2,7 @@
 # artifact-dependent integration tests skip with a message until
 # `make artifacts` has been run (requires python3 with jax + numpy).
 
-.PHONY: build test artifacts bench bench-check cluster-test fmt pytest ci
+.PHONY: build test artifacts bench bench-check cluster-test fmt lint pytest ci
 
 build:
 	cargo build --release
@@ -29,7 +29,7 @@ bench-check: bench
 	python3 scripts/bench_guard.py \
 	  --merge rust/bench_out/perf.json rust/bench_out/train_smoke.json \
 	  --out BENCH_report.json --baseline BENCH_baseline.json \
-	  --suggest BENCH_suggested.json
+	  --suggest BENCH_suggested.json --json BENCH_diag.json
 
 # What the CI cluster job runs: the router/fleet end-to-end suite. It
 # spawns real worker processes and binds ephemeral ports, so it runs
@@ -41,12 +41,19 @@ cluster-test:
 fmt:
 	cargo fmt --all --check
 
+# Repo-invariant static analysis (see rust/src/analysis/ and the
+# "Static analysis" section of rust/README.md). Exits non-zero on any
+# diagnostic; `imagine lint --json` emits the machine-readable report.
+lint: build
+	cargo run --release -p imagine -- lint
+
 pytest:
 	cd python && python3 -m pytest tests -q
 
 # Mirror the CI workflow locally (rust job matrix + lint job) so a push
 # that passes `make ci` passes the workflow: all feature-matrix arms
-# (build, test, bench compilation), blocking clippy/fmt.
+# (build, test, bench compilation), blocking clippy/fmt, and the
+# blocking `imagine lint` repo-invariant pass.
 ci:
 	cargo build --release --no-default-features
 	cargo test -q --no-default-features
@@ -59,3 +66,4 @@ ci:
 	cargo bench --no-run --features simd
 	cargo clippy --all-targets -- -D warnings
 	cargo fmt --all --check
+	cargo run --release -p imagine -- lint

@@ -1,0 +1,84 @@
+//! Diagnostic and report types shared by the human and machine output
+//! of `imagine lint`.
+//!
+//! The JSON shape is deliberately tool-generic —
+//! `{"tool": ..., "diagnostics": [{file, line, rule, message}], "count": N}`
+//! — and `scripts/bench_guard.py --json` emits the same shape, so CI
+//! consumers can parse lint findings and bench regressions with one
+//! reader.
+
+use std::fmt;
+
+use crate::util::json::{obj, Json};
+
+/// One finding: a rule violated at a `file:line` span.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Path relative to the crate `src/` root, `/`-separated.
+    pub file: String,
+    /// 1-based source line.
+    pub line: u32,
+    /// Rule name (one of [`super::rules::RULE_NAMES`], or `lint-allow`
+    /// for a malformed allow annotation).
+    pub rule: String,
+    /// Human-readable description of the violation.
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn new(file: &str, line: u32, rule: &str, message: impl Into<String>) -> Diagnostic {
+        Diagnostic {
+            file: file.to_string(),
+            line,
+            rule: rule.to_string(),
+            message: message.into(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("file", Json::Str(self.file.clone())),
+            ("line", Json::Num(self.line as f64)),
+            ("rule", Json::Str(self.rule.clone())),
+            ("message", Json::Str(self.message.clone())),
+        ])
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    /// `file:line: [rule] message` — the span is front so terminals and
+    /// editors can jump to it.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// The result of linting a tree: every finding plus enough metadata to
+/// prove the pass actually ran over something.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+    /// All findings, ordered by (file, line, rule, message).
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl Report {
+    /// True when the tree holds no violations (the CI gate).
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut items = Vec::new();
+        for d in &self.diagnostics {
+            items.push(d.to_json());
+        }
+        obj(vec![
+            ("tool", Json::Str("imagine-lint".to_string())),
+            ("files_scanned", Json::Num(self.files_scanned as f64)),
+            ("count", Json::Num(self.diagnostics.len() as f64)),
+            ("diagnostics", Json::Arr(items)),
+        ])
+    }
+}

@@ -1,0 +1,295 @@
+//! A minimal hand-rolled lexer over `.rs` source — just enough token
+//! structure for the [`rules`](super::rules) engine, with no `syn` (or
+//! any other) dependency, in keeping with the crate's vendored-shim
+//! offline constraint.
+//!
+//! Two outputs per file:
+//!
+//! * **tokens** — identifiers, numbers, single-char punctuation and
+//!   opaque literal placeholders, each carrying its 1-based source
+//!   line. String/char literal *contents* are dropped so rule patterns
+//!   can never match inside text, and comments never become tokens so
+//!   doc references like `` `gemm::rowdot_f64` `` cannot trip the
+//!   dispatch rule.
+//! * **comments** — the raw comment text with its start line, kept
+//!   separately because two rule mechanisms *do* read comments: the
+//!   `// lint:allow(<rule>) <justification>` annotations and the
+//!   `// SAFETY:` / `/// # Safety` audit of `unsafe`.
+//!
+//! The lexer scans bytes and only slices the source at ASCII
+//! delimiters (newline, quote, `*/`), so multi-byte UTF-8 in comments
+//! and strings passes through untouched.
+
+/// Token classes the rules distinguish.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `unsafe`, `Vec`, ...).
+    Ident,
+    /// One punctuation byte (`:`, `!`, `[`, ...).
+    Punct,
+    /// String / char / byte literal, contents dropped.
+    Lit,
+    /// Numeric literal.
+    Num,
+    /// Lifetime (`'a`) — kept distinct so it is never a char literal.
+    Life,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// One comment (line `//...` or block `/* ... */`, doc or plain) with
+/// the 1-based line it starts on. Block comment text may span lines.
+#[derive(Clone, Debug)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+}
+
+/// Lex `src` into (tokens, comments). Never fails: unexpected bytes
+/// become punctuation tokens and unterminated literals run to EOF —
+/// the lint pass must degrade gracefully on code it half-understands.
+pub fn tokenize(src: &str) -> (Vec<Tok>, Vec<Comment>) {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut comments = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+        } else if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+        } else if starts(b, i, b"//") {
+            let j = find_byte(b, i, b'\n').unwrap_or(n);
+            comments.push(Comment { line, text: lossy(&b[i..j]) });
+            i = j;
+        } else if starts(b, i, b"/*") {
+            let start_line = line;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if starts(b, j, b"/*") {
+                    depth += 1;
+                    j += 2;
+                } else if starts(b, j, b"*/") {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    if b[j] == b'\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+            }
+            comments.push(Comment { line: start_line, text: lossy(&b[i..j]) });
+            i = j;
+        } else if c == b'"' || is_raw_or_byte_string(b, i) {
+            let (j, nl) = skip_string(b, i);
+            line += nl;
+            toks.push(Tok { kind: TokKind::Lit, text: String::from("\"\""), line });
+            i = j;
+        } else if c == b'\'' {
+            // Lifetime (`'a` not followed by a closing quote) vs char.
+            if i + 2 < n && is_ident_byte(b[i + 1]) && b[i + 2] != b'\'' {
+                let mut j = i + 1;
+                while j < n && is_ident_byte(b[j]) {
+                    j += 1;
+                }
+                toks.push(Tok { kind: TokKind::Life, text: lossy(&b[i..j]), line });
+                i = j;
+            } else {
+                let mut j = i + 1;
+                while j < n {
+                    if b[j] == b'\\' {
+                        j += 2;
+                    } else if b[j] == b'\'' {
+                        j += 1;
+                        break;
+                    } else {
+                        if b[j] == b'\n' {
+                            line += 1;
+                        }
+                        j += 1;
+                    }
+                }
+                toks.push(Tok { kind: TokKind::Lit, text: String::from("''"), line });
+                i = j;
+            }
+        } else if c.is_ascii_alphabetic() || c == b'_' {
+            let mut j = i;
+            while j < n && is_ident_byte(b[j]) {
+                j += 1;
+            }
+            toks.push(Tok { kind: TokKind::Ident, text: lossy(&b[i..j]), line });
+            i = j;
+        } else if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n {
+                let d = b[j];
+                let part = d.is_ascii_alphanumeric() || d == b'_';
+                // Keep `1.5` together but stop before `..` ranges and
+                // method calls on integer literals (`4.max(x)`).
+                let dot = d == b'.' && j + 1 < n && b[j + 1].is_ascii_digit();
+                if !(part || dot) {
+                    break;
+                }
+                j += 1;
+            }
+            toks.push(Tok { kind: TokKind::Num, text: lossy(&b[i..j]), line });
+            i = j;
+        } else {
+            toks.push(Tok { kind: TokKind::Punct, text: lossy(&b[i..i + 1]), line });
+            i += 1;
+        }
+    }
+    (toks, comments)
+}
+
+fn is_ident_byte(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+fn starts(b: &[u8], i: usize, pat: &[u8]) -> bool {
+    b.len() >= i + pat.len() && &b[i..i + pat.len()] == pat
+}
+
+fn find_byte(b: &[u8], from: usize, what: u8) -> Option<usize> {
+    b[from..].iter().position(|&c| c == what).map(|p| from + p)
+}
+
+fn lossy(b: &[u8]) -> String {
+    String::from_utf8_lossy(b).into_owned()
+}
+
+/// `r"..."`, `r#"..."#`, `b"..."`, `br#"..."#` openers.
+fn is_raw_or_byte_string(b: &[u8], i: usize) -> bool {
+    let rest = &b[i..];
+    let after_prefix = |skip: usize| -> bool {
+        let mut j = skip;
+        while j < rest.len() && rest[j] == b'#' {
+            j += 1;
+        }
+        j < rest.len() && rest[j] == b'"'
+    };
+    match rest {
+        [b'r', ..] => after_prefix(1),
+        [b'b', b'r', ..] => after_prefix(2),
+        [b'b', b'"', ..] => true,
+        _ => false,
+    }
+}
+
+/// Skip a string literal starting at `i`; returns (index past the
+/// closing quote, newlines consumed).
+fn skip_string(b: &[u8], i: usize) -> (usize, u32) {
+    let n = b.len();
+    let mut nl = 0u32;
+    // Raw form: count hashes, find the matching `"##...` closer.
+    let mut p = i;
+    if p < n && b[p] == b'b' {
+        p += 1;
+    }
+    if p < n && b[p] == b'r' {
+        p += 1;
+        let mut hashes = 0usize;
+        while p < n && b[p] == b'#' {
+            hashes += 1;
+            p += 1;
+        }
+        if p < n && b[p] == b'"' {
+            p += 1;
+            loop {
+                match find_byte(b, p, b'"') {
+                    None => return (n, count_nl(&b[i..n])),
+                    Some(q) => {
+                        let close_end = q + 1 + hashes;
+                        if close_end <= n && b[q + 1..close_end].iter().all(|&c| c == b'#') {
+                            nl += count_nl(&b[i..close_end]);
+                            return (close_end, nl);
+                        }
+                        p = q + 1;
+                    }
+                }
+            }
+        }
+        // `r` that wasn't a raw string opener: treat as done elsewhere.
+        return (i + 1, 0);
+    }
+    // Plain (or `b"`) string with escapes.
+    let mut j = if b[p] == b'"' { p + 1 } else { i + 1 };
+    while j < n {
+        match b[j] {
+            b'\\' => j += 2,
+            b'"' => {
+                j += 1;
+                break;
+            }
+            b'\n' => {
+                nl += 1;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    (j, nl)
+}
+
+fn count_nl(b: &[u8]) -> u32 {
+    b.iter().filter(|&&c| c == b'\n').count() as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        tokenize(src)
+            .0
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_do_not_tokenize() {
+        let src = "let x = \"gemm::call()\"; // gemm::call()\n/* unsafe */ let y = 1;";
+        let ids = idents(src);
+        assert_eq!(ids, vec!["let", "x", "let", "y"]);
+        let (_, comments) = tokenize(src);
+        assert_eq!(comments.len(), 2);
+        assert!(comments[0].text.contains("gemm::call"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> char { 'x' }";
+        let (toks, _) = tokenize(src);
+        assert_eq!(toks.iter().filter(|t| t.kind == TokKind::Life).count(), 2);
+        assert_eq!(toks.iter().filter(|t| t.kind == TokKind::Lit).count(), 1);
+    }
+
+    #[test]
+    fn raw_strings_and_lines() {
+        let src = "let a = r#\"multi\nline \"quoted\" text\"#;\nlet b = 2;";
+        let (toks, _) = tokenize(src);
+        let b_tok = toks.iter().find(|t| t.text == "b").unwrap();
+        assert_eq!(b_tok.line, 3);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* outer /* inner */ still comment */ fn f() {}";
+        let ids = idents(src);
+        assert_eq!(ids, vec!["fn", "f"]);
+    }
+}

@@ -1,0 +1,75 @@
+//! `imagine lint` — a dependency-free static-analysis pass over the
+//! crate's own sources, enforcing the repo invariants that `rustc` and
+//! `clippy` cannot see because they are *policy*, not language rules:
+//!
+//! * the zero-allocation steady state of the engine hot paths
+//!   (`hot-path-alloc`),
+//! * the audited-`unsafe` contract of the SIMD kernels and the signal
+//!   shim (`unsafe-audit`),
+//! * bit-exact replay of the deterministic compute layers
+//!   (`determinism`),
+//! * the single kernel-dispatch entry point (`dispatch-discipline`),
+//! * typed-error-only request handling in the server and cluster
+//!   (`request-path-panic`).
+//!
+//! There is no `syn` (or any other parser dependency): a hand-rolled
+//! [`lexer`] produces a token stream plus the comment channel, and
+//! [`rules`] runs linear passes over it. That keeps the pass inside the
+//! crate's vendored-only dependency policy and fast enough to run on
+//! every `make ci`.
+//!
+//! Known violations are silenced in place with
+//! `// lint:allow(<rule>) <justification>` — see [`rules`] for the
+//! annotation contract (a justification is mandatory; a malformed
+//! allow is itself an error). The per-snippet entry point
+//! [`check_file`] takes a (relative path, source) pair so the
+//! self-check tests in `tests/lint_selfcheck.rs` can feed synthetic
+//! fixtures through the exact production rule engine.
+
+pub mod diag;
+pub mod lexer;
+pub mod rules;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+pub use diag::{Diagnostic, Report};
+pub use rules::{check_file, RULE_NAMES};
+
+/// Lint every `.rs` file under `src_root` (skipping `target/` and
+/// `vendor/`), returning the aggregate report. Paths in diagnostics are
+/// relative to `src_root` with `/` separators on every platform.
+pub fn lint_tree(src_root: &Path) -> Result<Report> {
+    let mut files = Vec::new();
+    collect_rs(src_root, &mut files)?;
+    files.sort();
+    let mut diagnostics = Vec::new();
+    for path in &files {
+        let rel = path.strip_prefix(src_root).unwrap_or(path);
+        let rel = rel.to_string_lossy().replace('\\', "/");
+        let src = fs::read_to_string(path)
+            .with_context(|| format!("reading {} for lint", path.display()))?;
+        diagnostics.extend(check_file(&rel, &src));
+    }
+    Ok(Report { files_scanned: files.len(), diagnostics })
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let entries = fs::read_dir(dir).with_context(|| format!("lint: listing {}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.with_context(|| format!("reading entry in {}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            let name = entry.file_name();
+            if name == "target" || name == "vendor" {
+                continue;
+            }
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,455 @@
+//! The rule engine: five repo invariants checked over the token stream
+//! of each `.rs` file, plus the meta-rule that polices the allow
+//! annotations themselves.
+//!
+//! | rule | invariant |
+//! |------|-----------|
+//! | `hot-path-alloc` | no allocating constructors inside the designated steady-state functions |
+//! | `unsafe-audit` | `unsafe` only in sanctioned modules, and always with a SAFETY justification |
+//! | `determinism` | no wall-clock or random-iteration-order state in deterministic compute layers |
+//! | `dispatch-discipline` | direct `gemm::` calls confined to the kernel dispatch hub |
+//! | `request-path-panic` | no panicking operators in the server / cluster request path |
+//! | `lint-allow` | (meta) every allow annotation names a known rule and carries a justification |
+//!
+//! A violation is silenced with a comment of the form
+//! `// lint:allow(<rule>) <justification>` on the offending line or the
+//! line above it. The justification is mandatory: an allow without one
+//! is itself a diagnostic, so the annotation doubles as documentation
+//! of *why* the site is exempt.
+//!
+//! Scopes are declared in this file as plain tables ([`hot_fns`],
+//! [`det_scope`], [`UNSAFE_OK`], [`DISPATCH_OK`], [`req_path`]) so
+//! adding a rule or widening a scope is a one-table edit with no
+//! traversal logic to touch.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::diag::Diagnostic;
+use super::lexer::{tokenize, Comment, Tok, TokKind};
+
+/// The five checkable rules, in the order they are documented. The
+/// `lint-allow` meta-rule is not listed: it cannot be allowed away.
+// One name per line: these tables are diffed and audited by hand.
+#[rustfmt::skip]
+pub const RULE_NAMES: [&str; 5] = [
+    "hot-path-alloc",
+    "unsafe-audit",
+    "determinism",
+    "dispatch-discipline",
+    "request-path-panic",
+];
+
+/// Steady-state functions per file: the zero-allocation contract from
+/// the arena/packed-cache work applies inside these bodies. Cold entry
+/// points in the same files (builders, `run()` wrappers that size
+/// scratch once) deliberately stay off the list.
+// One name per line: these tables are diffed and audited by hand.
+#[rustfmt::skip]
+fn hot_fns(rel: &str) -> Option<&'static [&'static str]> {
+    Some(match rel {
+        "engine/kernels.rs" => &[
+            "matmul_i32_packed_into",
+            "run_gemm_split",
+            "run_gemm_chunk",
+            "portable_i32_chunk",
+            "portable_i32_vecs",
+            "bitplane_chunk",
+            "pack_input_planes",
+            "conv3x3_direct_packed_into",
+            "conv3x3_direct_core",
+            "rowdot_lanes_chunk",
+            "matmul_i32_chunk_avx2",
+            "vecs_avx2",
+            "matmul_i32_chunk_neon",
+            "vecs_neon",
+        ],
+        "engine/gemm.rs" => &[
+            "matmul_i32_chunk",
+            "rowdot_f64_chunk",
+            "conv3x3_signed_rows_into",
+        ],
+        "engine/ideal.rs" => &[
+            "forward_batch_into",
+            "run_chunk",
+            "signed_rows",
+            "forward_layer_chunk",
+        ],
+        "nn/graph.rs" => &["forward_dense", "forward_conv"],
+        "nn/train/qat.rs" => &["forward_dense", "forward_conv"],
+        _ => return None,
+    })
+}
+
+/// Token sequences that allocate. Matched against the raw token texts,
+/// so `Vec :: new` is three-then-one tokens (`:` is a single-byte
+/// punct), and string/comment content can never match.
+const ALLOC: &[&[&str]] = &[
+    &["Vec", ":", ":", "new"],
+    &["Vec", ":", ":", "with_capacity"],
+    &["vec", "!"],
+    &[".", "to_vec", "("],
+    &[".", "collect"],
+    &[".", "clone", "("],
+    &["Box", ":", ":", "new"],
+    &["String", ":", ":"],
+    &[".", "to_string", "("],
+    &[".", "to_owned", "("],
+    &["format", "!"],
+];
+
+/// Deterministic compute layers: bit-exact replay across runs and
+/// replicas is part of their contract, so wall-clock reads and
+/// random-iteration-order containers are banned. `engine/queue.rs` is
+/// carved out — the work queue is timing infrastructure by design.
+fn det_scope(rel: &str) -> bool {
+    (rel.starts_with("engine/") && rel != "engine/queue.rs")
+        || rel.starts_with("nn/")
+        || rel.starts_with("analog/")
+}
+
+/// Modules allowed to contain `unsafe` at all: the ISA-gated SIMD
+/// kernels and the coordinator's libc signal shim.
+const UNSAFE_OK: &[&str] = &["engine/kernels.rs", "coordinator/server.rs"];
+
+/// Modules allowed to call `gemm::` directly: the dispatch hub itself
+/// and the reference module's own internals.
+const DISPATCH_OK: &[&str] = &["engine/kernels.rs", "engine/gemm.rs"];
+
+/// Request-path modules: a panic here kills a serving thread, so only
+/// typed errors may leave a handler.
+fn req_path(rel: &str) -> bool {
+    rel == "coordinator/server.rs" || rel.starts_with("cluster/")
+}
+
+/// Run every rule over one file. `rel` is the path relative to the
+/// crate `src/` root with `/` separators (it selects the scope tables);
+/// `src` is the file contents. Diagnostics come back sorted by line.
+pub fn check_file(rel: &str, src: &str) -> Vec<Diagnostic> {
+    let (toks, comments) = tokenize(src);
+    let st = analyze(&toks);
+    let (cover, mut out) = collect_allows(rel, &comments, &toks);
+
+    let hot = hot_fns(rel);
+    let in_det = det_scope(rel);
+    let in_req = req_path(rel);
+    let unsafe_ok = UNSAFE_OK.contains(&rel);
+    let dispatch_ok = DISPATCH_OK.contains(&rel);
+
+    let mut emit = |line: u32, rule: &str, message: String| {
+        let covered = cover.get(rule).is_some_and(|lines| lines.contains(&line));
+        if !covered {
+            out.push(Diagnostic::new(rel, line, rule, message));
+        }
+    };
+
+    for (i, t) in toks.iter().enumerate() {
+        if st.in_test[i] {
+            continue;
+        }
+        // hot-path-alloc
+        if let (Some(hot), Some(name_idx)) = (hot, st.fn_at[i]) {
+            let fname = toks[name_idx].text.as_str();
+            if hot.contains(&fname) {
+                for pat in ALLOC {
+                    if match_seq(&toks, i, pat) {
+                        let what = pat.concat();
+                        let msg = format!("allocating constructor `{what}` in hot fn {fname}");
+                        emit(t.line, "hot-path-alloc", msg);
+                        break;
+                    }
+                }
+            }
+        }
+        // unsafe-audit
+        if t.kind == TokKind::Ident && t.text == "unsafe" {
+            if !unsafe_ok {
+                emit(t.line, "unsafe-audit", "unsafe outside sanctioned modules".to_string());
+            } else if !has_safety(&comments, t.line, src) {
+                emit(t.line, "unsafe-audit", "unsafe without SAFETY justification".to_string());
+            }
+        }
+        // determinism
+        if in_det {
+            if match_seq(&toks, i, &["Instant", ":", ":", "now"]) {
+                emit(t.line, "determinism", "Instant::now in deterministic layer".to_string());
+            }
+            if t.text == "SystemTime" {
+                emit(t.line, "determinism", "SystemTime in deterministic layer".to_string());
+            }
+            if t.text == "HashMap" || t.text == "HashSet" {
+                let msg = format!("{} (random iteration order) in deterministic layer", t.text);
+                emit(t.line, "determinism", msg);
+            }
+        }
+        // dispatch-discipline
+        if !dispatch_ok
+            && t.text == "gemm"
+            && match_seq(&toks, i + 1, &[":", ":"])
+            && toks.get(i + 3).is_some_and(|n| n.kind == TokKind::Ident)
+            && toks.get(i + 4).is_some_and(|p| p.text == "(")
+        {
+            let msg = format!("direct gemm::{} call outside kernels", toks[i + 3].text);
+            emit(t.line, "dispatch-discipline", msg);
+        }
+        // request-path-panic
+        if in_req && t.text == "." {
+            let nxt = text_at(&toks, i + 1);
+            if nxt == "unwrap" && match_seq(&toks, i + 2, &["(", ")"]) && !lock_exempt(&toks, i) {
+                emit(t.line, "request-path-panic", ".unwrap() on request path".to_string());
+            }
+            if nxt == "expect" && text_at(&toks, i + 2) == "(" {
+                emit(t.line, "request-path-panic", ".expect() on request path".to_string());
+            }
+        }
+        if in_req
+            && t.kind == TokKind::Ident
+            && matches!(t.text.as_str(), "panic" | "unreachable" | "todo" | "unimplemented")
+            && toks.get(i + 1).is_some_and(|b| b.text == "!")
+        {
+            emit(t.line, "request-path-panic", format!("{}! on request path", t.text));
+        }
+        if in_req && t.kind == TokKind::Punct && t.text == "[" && i > 0 {
+            let p = &toks[i - 1];
+            if p.kind == TokKind::Ident || p.text == ")" || p.text == "]" {
+                emit(t.line, "request-path-panic", "slice index on request path".to_string());
+            }
+        }
+    }
+    out.sort_by(|a, b| (a.line, &a.rule, &a.message).cmp(&(b.line, &b.rule, &b.message)));
+    out
+}
+
+/// Per-token structure from one linear pass: the innermost enclosing
+/// named `fn` (as a token index of its name) and whether the token sits
+/// inside a `#[cfg(test)]`-gated item, whose contents every rule skips.
+struct Structure {
+    fn_at: Vec<Option<usize>>,
+    in_test: Vec<bool>,
+}
+
+fn analyze(toks: &[Tok]) -> Structure {
+    let n = toks.len();
+    let mut fn_at = vec![None; n];
+    let mut in_test = vec![false; n];
+    // Brace depths at which a cfg(test)-gated body opened.
+    let mut test_depths: Vec<i64> = Vec::new();
+    // (name token index, body depth) for every fn whose body is open.
+    let mut open_fns: Vec<(usize, i64)> = Vec::new();
+    let mut pending_fn: Option<usize> = None;
+    let mut pending_test = false;
+    let mut depth: i64 = 0;
+    let mut i = 0;
+    while i < n {
+        let t = &toks[i];
+        if t.kind == TokKind::Punct
+            && t.text == "#"
+            && toks.get(i + 1).is_some_and(|b| b.text == "[")
+        {
+            // Scan the whole attribute; `cfg(test)` / `cfg(all(test, ..))`
+            // gates the next item.
+            let mut j = i + 2;
+            let mut adepth = 1i64;
+            let mut attr: Vec<&str> = Vec::new();
+            while j < n && adepth > 0 {
+                match toks[j].text.as_str() {
+                    "[" => adepth += 1,
+                    "]" => adepth -= 1,
+                    _ => attr.push(&toks[j].text),
+                }
+                j += 1;
+            }
+            if attr_is_test(&attr) {
+                pending_test = true;
+            }
+            if !test_depths.is_empty() {
+                for flag in in_test.iter_mut().take(j).skip(i) {
+                    *flag = true;
+                }
+            }
+            i = j;
+            continue;
+        }
+        if t.kind == TokKind::Ident
+            && t.text == "fn"
+            && toks.get(i + 1).is_some_and(|nm| nm.kind == TokKind::Ident)
+        {
+            pending_fn = Some(i + 1);
+        }
+        if t.kind == TokKind::Punct && t.text == "{" {
+            depth += 1;
+            if pending_test {
+                test_depths.push(depth);
+                pending_test = false;
+            }
+            if let Some(p) = pending_fn.take() {
+                open_fns.push((p, depth));
+            }
+        } else if t.kind == TokKind::Punct && t.text == "}" {
+            if test_depths.last() == Some(&depth) {
+                test_depths.pop();
+            }
+            while open_fns.last().map(|&(_, d)| d) == Some(depth) {
+                open_fns.pop();
+            }
+            depth -= 1;
+        } else if t.kind == TokKind::Punct && t.text == ";" {
+            // Item ended without a body: drop any pending gating.
+            pending_test = false;
+            pending_fn = None;
+        }
+        fn_at[i] = open_fns.last().map(|&(p, _)| p);
+        in_test[i] = in_test[i] || !test_depths.is_empty() || pending_test;
+        i += 1;
+    }
+    Structure { fn_at, in_test }
+}
+
+/// `cfg ( test ..` or `cfg ( all ( test ..` as a token subsequence.
+/// `cfg(not(test))` and feature gates do not match.
+fn attr_is_test(attr: &[&str]) -> bool {
+    for (k, w) in attr.iter().enumerate() {
+        if *w == "cfg" && attr.get(k + 1) == Some(&"(") {
+            let mut m = k + 2;
+            if attr.get(m) == Some(&"all") && attr.get(m + 1) == Some(&"(") {
+                m += 2;
+            }
+            return attr.get(m) == Some(&"test");
+        }
+    }
+    false
+}
+
+/// Parse the allow annotations out of the comment stream.
+///
+/// Returns (rule -> covered lines, diagnostics for malformed allows).
+/// A well-formed allow covers its own line and the next line that
+/// carries any token, so it works both trailing and on the line above.
+fn collect_allows(
+    rel: &str,
+    comments: &[Comment],
+    toks: &[Tok],
+) -> (BTreeMap<String, BTreeSet<u32>>, Vec<Diagnostic>) {
+    let mut cover: BTreeMap<String, BTreeSet<u32>> = BTreeMap::new();
+    let mut diags = Vec::new();
+    let tok_lines: BTreeSet<u32> = toks.iter().map(|t| t.line).collect();
+    let tok_lines: Vec<u32> = tok_lines.into_iter().collect();
+    for c in comments {
+        let Some((rule, just)) = parse_allow(&c.text) else {
+            continue;
+        };
+        if !RULE_NAMES.contains(&rule.as_str()) {
+            diags.push(Diagnostic::new(
+                rel,
+                c.line,
+                "lint-allow",
+                format!("unknown rule '{rule}' in lint:allow"),
+            ));
+            continue;
+        }
+        if just.is_empty() {
+            diags.push(Diagnostic::new(
+                rel,
+                c.line,
+                "lint-allow",
+                "lint:allow without a justification".to_string(),
+            ));
+            continue;
+        }
+        let lines = cover.entry(rule).or_default();
+        lines.insert(c.line);
+        let next = tok_lines.partition_point(|&l| l <= c.line);
+        if let Some(&l) = tok_lines.get(next) {
+            lines.insert(l);
+        }
+    }
+    (cover, diags)
+}
+
+/// Extract `(rule, justification)` from a comment containing
+/// `lint:allow(<rule>) <justification>`; `None` when the comment holds
+/// no syntactically valid annotation. The justification runs to the end
+/// of the annotation's line.
+fn parse_allow(text: &str) -> Option<(String, String)> {
+    let pos = text.find("lint:allow(")?;
+    let rest = &text[pos + "lint:allow(".len()..];
+    let end = rest.find(')')?;
+    let rule = &rest[..end];
+    if rule.is_empty() || !rule.bytes().all(|b| b.is_ascii_lowercase() || b == b'-') {
+        return None;
+    }
+    let just = rest[end + 1..].split('\n').next().unwrap_or("").trim();
+    Some((rule.to_string(), just.to_string()))
+}
+
+fn match_seq(toks: &[Tok], i: usize, pat: &[&str]) -> bool {
+    pat.iter().enumerate().all(|(k, want)| toks.get(i + k).is_some_and(|t| t.text == *want))
+}
+
+/// Token text at index `i`, or `""` past the end: lets sequence checks
+/// read ahead without `Option` plumbing.
+fn text_at(toks: &[Tok], i: usize) -> &str {
+    toks.get(i).map_or("", |t| t.text.as_str())
+}
+
+/// `.unwrap()` chained directly onto `.lock(..)` / `.wait_timeout(..)`
+/// is exempt from `request-path-panic`: a poisoned mutex means another
+/// thread already panicked, and propagating is the sane response. The
+/// backscan is token-level, so multi-line chains qualify too.
+fn lock_exempt(toks: &[Tok], dot_i: usize) -> bool {
+    if dot_i == 0 || toks[dot_i - 1].text != ")" {
+        return false;
+    }
+    let mut depth = 1i64;
+    let mut j = dot_i as i64 - 2;
+    while j >= 0 && depth > 0 {
+        match toks[j as usize].text.as_str() {
+            ")" => depth += 1,
+            "(" => depth -= 1,
+            _ => {}
+        }
+        j -= 1;
+    }
+    if depth > 0 || j < 0 {
+        return false;
+    }
+    let t = &toks[j as usize];
+    t.kind == TokKind::Ident && (t.text == "lock" || t.text == "wait_timeout")
+}
+
+/// Is there a `SAFETY:` (or rustdoc `# Safety` section) justification
+/// on the `unsafe` line or in the contiguous comment/attribute block
+/// directly above it?
+fn has_safety(comments: &[Comment], line: u32, src: &str) -> bool {
+    let lines: Vec<&str> = src.split('\n').collect();
+    let mut comment_lines: BTreeMap<u32, Vec<&str>> = BTreeMap::new();
+    for c in comments {
+        for (k, part) in c.text.split('\n').enumerate() {
+            comment_lines.entry(c.line + k as u32).or_default().push(part);
+        }
+    }
+    let hit = |l: u32| comment_lines.get(&l).is_some_and(|p| p.iter().any(|t| is_marked(t)));
+    if hit(line) {
+        return true;
+    }
+    let mut l = line - 1;
+    while l >= 1 {
+        let raw = lines.get(l as usize - 1).map_or("", |s| s.trim());
+        let is_comment =
+            comment_lines.contains_key(&l) || raw.starts_with("//") || raw.starts_with('*');
+        let is_attr = raw.starts_with("#[") || raw.starts_with("#![");
+        if !(is_comment || is_attr) {
+            break;
+        }
+        if hit(l) || is_marked(raw) {
+            return true;
+        }
+        l -= 1;
+    }
+    false
+}
+
+/// The textual markers that count as an unsafe justification: a
+/// `SAFETY:` comment or a rustdoc `# Safety` section heading.
+fn is_marked(text: &str) -> bool {
+    text.contains("SAFETY:") || text.contains("# Safety")
+}

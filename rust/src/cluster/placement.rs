@@ -115,6 +115,7 @@ impl Ring {
         let start = self.points.partition_point(|&(h, _)| h < hash64(key));
         let mut picked = Vec::with_capacity(replicas);
         for i in 0..self.points.len() {
+            // lint:allow(request-path-panic) index reduced modulo points.len(), always in bounds
             let (_, slot) = self.points[(start + i) % self.points.len()];
             if !picked.contains(&slot) && alive(slot) {
                 picked.push(slot);

@@ -213,6 +213,7 @@ impl WorkerPool {
     }
 
     pub fn slot(&self, id: WorkerId) -> &WorkerSlot {
+        // lint:allow(request-path-panic) WorkerIds are pool-issued indexes and slots are append-only
         &self.slots[id]
     }
 

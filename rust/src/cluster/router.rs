@@ -1051,7 +1051,10 @@ impl ConnCache {
             let client = WorkerClient::connect(&addr, router.cfg.request_timeout)?;
             self.conns.insert(id, (addr, client));
         }
-        Ok(&mut self.conns.get_mut(&id).expect("just inserted").1)
+        self.conns
+            .get_mut(&id)
+            .map(|(_, client)| client)
+            .ok_or_else(|| anyhow!("connection cache lost the entry for worker {id}"))
     }
 
     fn drop_conn(&mut self, id: WorkerId) {
@@ -1094,8 +1097,10 @@ fn stamp_model(line: &str, model: &str) -> String {
     match line.find('{') {
         Some(i) => {
             let mut out = String::with_capacity(line.len() + model.len() + 12);
+            // lint:allow(request-path-panic) i is the byte index of an ASCII '{' from find — always an in-range char boundary
             out.push_str(&line[..=i]);
             out.push_str(&format!("\"model\":\"{model}\","));
+            // lint:allow(request-path-panic) i + 1 lands just past the ASCII '{' — in range, on a char boundary
             out.push_str(&line[i + 1..]);
             out
         }

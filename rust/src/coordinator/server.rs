@@ -281,6 +281,7 @@ pub(crate) fn request_precision(parsed: &Json) -> Result<Option<(u32, u32)>, Ima
 fn info_json(session: &Session) -> Json {
     let mut map = match session.config().to_json() {
         Json::Obj(map) => map,
+        // lint:allow(request-path-panic) SessionConfig::to_json structurally returns Json::Obj
         _ => unreachable!("SessionConfig::to_json returns an object"),
     };
     map.insert("protocol".to_string(), Json::Num(PROTOCOL_VERSION as f64));
@@ -317,6 +318,7 @@ fn graph_info_json(session: &Session) -> Json {
         .map(|(i, summary)| {
             let mut map = match summary.to_json() {
                 Json::Obj(map) => map,
+                // lint:allow(request-path-panic) LayerSummary::to_json structurally returns Json::Obj
                 _ => unreachable!("LayerSummary::to_json returns an object"),
             };
             if let Some(cost) = layer_costs.and_then(|c| c.get(i)) {
@@ -423,6 +425,7 @@ fn cmd_deploy(state: &ServerState, parsed: &Json) -> Result<String, ImagineError
     let config = state.hub.session(name)?.config().clone();
     let mut map = match config.to_json() {
         Json::Obj(map) => map,
+        // lint:allow(request-path-panic) SessionConfig::to_json structurally returns Json::Obj
         _ => unreachable!("SessionConfig::to_json returns an object"),
     };
     map.insert("protocol".to_string(), Json::Num(PROTOCOL_VERSION as f64));
@@ -788,6 +791,10 @@ pub fn install_sigint_stop(target: Arc<dyn StopTarget>) {
     *SIGINT_ACTIVE.lock().unwrap() = Some(target);
     WATCHER.call_once(|| {
         const SIGINT: i32 = 2;
+        // SAFETY: `signal` is the libc function declared above; the
+        // handler is an `extern "C" fn` that only stores to an atomic
+        // (async-signal-safe), and registration happens once under
+        // `Once` before any signal can be consumed by the watcher.
         let _ = unsafe { signal(SIGINT, on_sigint) };
         std::thread::spawn(|| loop {
             // swap, not load: consume each signal exactly once.

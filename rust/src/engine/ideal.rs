@@ -222,6 +222,7 @@ impl BatchIdeal {
             );
         }
         let n = images.len();
+        // lint:allow(hot-path-alloc) empty Vec::new allocates nothing; warm slots reuse capacity
         out.resize_with(n, Vec::new);
         if n == 0 {
             return Ok(());

@@ -65,6 +65,13 @@
 
 use super::gemm;
 
+/// Re-export of the scalar im2col row assembly so the graph executor
+/// and the trainer route through this dispatch hub instead of calling
+/// the `gemm` reference module directly (the `dispatch-discipline`
+/// lint rule keeps `gemm::` call sites confined to this module, tests
+/// and benches).
+pub use super::gemm::conv3x3_signed_rows;
+
 /// Antipodal weight level bound for the 4b weight path (`R_W = 4`,
 /// levels `2k − 15` for `k ∈ 0..16`).
 const W_LEVEL_MAX: i32 = 15;
@@ -539,6 +546,9 @@ mod x86 {
         }
     }
 
+    /// # Safety
+    /// AVX2 must be available; only called from `matmul_i32_chunk_avx2`,
+    /// whose caller has already verified the ISA at runtime.
     #[target_feature(enable = "avx2")]
     unsafe fn vecs_avx2<const B: usize>(
         a: &[i32],
@@ -607,6 +617,9 @@ mod arm {
         }
     }
 
+    /// # Safety
+    /// NEON must be available; only called from `matmul_i32_chunk_neon`,
+    /// whose caller has already verified the ISA at runtime.
     #[target_feature(enable = "neon")]
     unsafe fn vecs_neon<const B: usize>(
         a: &[i32],

@@ -33,6 +33,7 @@
 //! paper-vs-measured results.
 
 pub mod analog;
+pub mod analysis;
 pub mod api;
 pub mod cluster;
 pub mod config;

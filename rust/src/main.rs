@@ -31,6 +31,11 @@
 //!                 and reports it on stdout as `READY port=<n>`;
 //!                 `--no-model` starts an empty hub (a cluster router
 //!                 deploys onto it)
+//!   imagine lint  [--root DIR] [--json]        repo-invariant static analysis
+//!                 over the crate sources (hot-path allocation, unsafe
+//!                 audit, determinism, dispatch discipline, request-path
+//!                 panics — see `imagine::analysis`); exits non-zero on
+//!                 any diagnostic, so it runs blocking in `make ci`
 //!   imagine router --spawn N | --worker HOST:PORT (repeatable)
 //!                 [--model NAME[=DIR]] [--replicas R] [--addr A]
 //!                 [--backend ...] [--precision ...] [--seed S]
@@ -49,6 +54,7 @@
 
 use anyhow::{bail, Context, Result};
 use imagine::analog::macro_model::OpConfig;
+use imagine::analysis;
 use imagine::api::{
     parse_corner, parse_precision, parse_supply, BackendKind, Deployment, LrSchedule, ModelHub,
     NoiseInjection, OptimizerKind, Session, TrainConfig, Trainer,
@@ -62,6 +68,7 @@ use imagine::energy::{analog as ea, area, system, timing};
 use imagine::engine::default_workers;
 use imagine::nn::dataset::Dataset;
 use imagine::util::stats::argmax_f32 as argmax;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 /// Parsed `--key value` flags, in order. Repeatable keys (serve's
@@ -632,8 +639,38 @@ fn cmd_router(flags: &Flags) -> Result<()> {
     router.serve(addr, None)
 }
 
+fn cmd_lint(flags: &Flags) -> Result<()> {
+    // Default root: the crate `src/` tree, whether invoked from the repo
+    // root (CI, `make ci`) or from inside `rust/`.
+    let root = match flags.get("root") {
+        Some(r) => PathBuf::from(r),
+        None if Path::new("rust/src").is_dir() => PathBuf::from("rust/src"),
+        None => PathBuf::from("src"),
+    };
+    if !root.is_dir() {
+        bail!("lint root '{}' is not a directory (use --root DIR)", root.display());
+    }
+    let report = analysis::lint_tree(&root)?;
+    if flags.get("json").is_some() {
+        println!("{}", report.to_json().to_string_compact());
+    } else {
+        for d in &report.diagnostics {
+            println!("{d}");
+        }
+        eprintln!(
+            "imagine lint: {} file(s) scanned, {} diagnostic(s)",
+            report.files_scanned,
+            report.diagnostics.len(),
+        );
+    }
+    if !report.is_clean() {
+        bail!("lint failed with {} diagnostic(s)", report.diagnostics.len());
+    }
+    Ok(())
+}
+
 fn usage() {
-    println!("usage: imagine <info|run|plan|train|serve|router> [--model NAME] [--dir artifacts]");
+    println!("usage: imagine <info|run|plan|train|serve|router|lint> [--model NAME] [--dir DIR]");
     println!("  run:   [--n 200] [--backend ideal|analog|pjrt|auto] [--precision R[,R_OUT]]");
     println!("         [--supply nominal|low-power|L/H] [--corner tt|ff|ss|fs|sf]");
     println!("         [--batch 64] [--workers N] [--seed 42]");
@@ -662,6 +699,10 @@ fn usage() {
     println!("         sharded serving: consistent-hash placement with replication,");
     println!("         health-checked failover, per-worker back-pressure; stats/models");
     println!("         fan out and aggregate, deploy/undeploy re-drive the placement");
+    println!("  lint:  [--root rust/src] [--json]");
+    println!("         repo-invariant static analysis (hot-path-alloc, unsafe-audit,");
+    println!("         determinism, dispatch-discipline, request-path-panic); exits");
+    println!("         non-zero on any diagnostic; --json emits machine-readable output");
 }
 
 fn main() -> Result<()> {
@@ -709,6 +750,7 @@ fn main() -> Result<()> {
                 "batch", "flush-us",
             ],
         )?),
+        "lint" => cmd_lint(&parse_flags("lint", rest, &["root", "json"])?),
         "help" | "--help" | "-h" => {
             usage();
             Ok(())

@@ -21,7 +21,8 @@
 //!    patch of every image through the precision/ISA-adaptive
 //!    [`kernels`] dispatch (the quantized weights and signed factors are
 //!    exact small integers, so the i32 kernels — SIMD or bit-plane — are
-//!    bit-identical to [`gemm::rowdot_f64`] on the same data), then
+//!    bit-identical to [`gemm::rowdot_f64`](crate::engine::gemm::rowdot_f64)
+//!    on the same data), then
 //!    applies the macro contract per output (Eq. 7 code, equivalent
 //!    output noise, offset-binary reconstruction
 //!    `Σ X·W = (dot + M·ΣW)/2`, ABN gain/offset).
@@ -38,7 +39,7 @@ use crate::config::params::MacroParams;
 use crate::coordinator::manifest::{Kind, Layer, NetworkModel, Pool};
 use crate::dataflow::im2col;
 use crate::engine::packed::NodeKernel;
-use crate::engine::{arena, gemm, kernels};
+use crate::engine::{arena, kernels};
 use crate::nn::cim_eval::EvalCfg;
 use crate::nn::dataset::Dataset;
 use crate::nn::layers::{chw, Conv3x3, DenseNode, Node, PoolKind};
@@ -721,6 +722,7 @@ fn forward_dense(
     };
     let (m, half, top, lsb, dv_unit) = q.contract_consts(p);
 
+    // lint:allow(hot-path-alloc) one output buffer per batch, returned to the caller
     let mut out = vec![0f32; n * n_out];
     match &q.kernel {
         NodeKernel::I32 { wi, planes, .. } => {
@@ -785,6 +787,7 @@ fn forward_conv(
     rng: &mut Rng,
 ) -> Vec<f32> {
     if n == 0 {
+        // lint:allow(hot-path-alloc) empty Vec::new never touches the heap
         return Vec::new();
     }
     let c_out = q.n_out();
@@ -795,6 +798,7 @@ fn forward_conv(
     // and both paths stay in lock-step on the row-order convention).
     let in_len = c * h * w;
     let n_pix = h * w;
+    // lint:allow(hot-path-alloc) one output buffer per batch, returned to the caller
     let mut out = vec![0f32; n * c_out * n_pix];
     match &q.kernel {
         NodeKernel::I32 { wi, planes, .. } => {
@@ -837,17 +841,22 @@ fn forward_conv(
             arena::put_u8(images_q);
         }
         NodeKernel::F64 { w64 } => {
+            // lint:allow(hot-path-alloc) f64 fallback arm: engaged only when the
+            // dot cannot be proven to fit i32; allocates per batch by design.
             let images_q: Vec<Vec<u8>> = cur
                 .chunks(in_len)
                 .map(|img| {
                     img.iter()
                         .map(|&v| (v / q.a_scale).round().clamp(0.0, m) as u8)
+                        // lint:allow(hot-path-alloc) f64 fallback arm (see above)
                         .collect()
                 })
+                // lint:allow(hot-path-alloc) f64 fallback arm (see above)
                 .collect();
             let (sx_i, oh, ow) =
-                gemm::conv3x3_signed_rows(&images_q, c, h, w, 1, q.cfg.r_in, q.rows);
+                kernels::conv3x3_signed_rows(&images_q, c, h, w, 1, q.cfg.r_in, q.rows);
             debug_assert_eq!((oh, ow), (h, w));
+            // lint:allow(hot-path-alloc) f64 fallback arm (see above)
             let sx: Vec<f64> = sx_i.iter().map(|&v| v as f64).collect();
             let dots = kernels::rowdot_f64(&sx, w64, n * n_pix, q.rows, c_out, workers);
             for img in 0..n {

@@ -38,7 +38,7 @@
 
 use crate::config::params::MacroParams;
 use crate::engine::packed::NodeKernel;
-use crate::engine::{arena, gemm, kernels};
+use crate::engine::{arena, kernels};
 use crate::nn::graph::{macro_contract_masked, permute_conv_rows, quantize_weights, CimKind, QNode};
 use crate::nn::layers::Node;
 use crate::util::rng::Rng;
@@ -205,7 +205,9 @@ impl TrainNode {
         }
         arena::put_f32(x_q);
 
+        // lint:allow(hot-path-alloc) per-batch output + STE mask, returned in CimCache
         let mut out = vec![0f32; n * n_out];
+        // lint:allow(hot-path-alloc) per-batch output + STE mask, returned in CimCache
         let mut out_mask = vec![false; n * n_out];
         for i in 0..n {
             for o in 0..n_out {
@@ -342,17 +344,23 @@ impl TrainNode {
             NodeKernel::F64 { w64 } => {
                 let images_q: Vec<Vec<u8>> = x_q
                     .chunks(in_len)
+                    // lint:allow(hot-path-alloc) f64 fallback arm: per-batch buffers on the rare non-i32 path
                     .map(|img| img.iter().map(|&q| q as u8).collect())
+                    // lint:allow(hot-path-alloc) f64 fallback arm (see above)
                     .collect();
-                let (sx_i, oh, ow) = gemm::conv3x3_signed_rows(&images_q, c, h, w, 1, r_in, rows);
+                let (sx_i, oh, ow) =
+                    kernels::conv3x3_signed_rows(&images_q, c, h, w, 1, r_in, rows);
                 debug_assert_eq!((oh, ow), (h, w));
+                // lint:allow(hot-path-alloc) f64 fallback arm (see above)
                 let sx: Vec<f64> = sx_i.iter().map(|&v| v as f64).collect();
                 dots.extend(kernels::rowdot_f64(&sx, w64, n * n_pix, rows, c_out, workers));
             }
         }
         arena::put_f32(x_q);
 
+        // lint:allow(hot-path-alloc) per-batch output + STE mask, returned in CimCache
         let mut out = vec![0f32; n * c_out * n_pix];
+        // lint:allow(hot-path-alloc) per-batch output + STE mask, returned in CimCache
         let mut out_mask = vec![false; n * c_out * n_pix];
         for img in 0..n {
             let fmap = &mut out[img * c_out * n_pix..(img + 1) * c_out * n_pix];

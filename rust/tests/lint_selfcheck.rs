@@ -1,0 +1,224 @@
+//! Self-check for the `imagine lint` rule engine: every rule must fire
+//! on a minimal bad fixture, stay quiet on the annotated form, and the
+//! allow annotations themselves must be policed (an allow without a
+//! justification, or naming an unknown rule, is an error).
+//!
+//! Fixtures go through [`check_file`] with synthetic relative paths —
+//! the path selects the scope tables exactly as it does in production,
+//! so `"engine/gemm.rs"` puts a snippet inside the hot-path scope and
+//! `"cluster/router.rs"` inside the request path.
+//!
+//! The final test lints the real crate sources, pinning the tree-wide
+//! invariant CI enforces: HEAD carries zero diagnostics.
+
+use std::path::Path;
+
+use imagine::analysis::{check_file, lint_tree, RULE_NAMES};
+use imagine::util::json::Json;
+
+/// Rule names of every diagnostic, in report order.
+fn fired(rel: &str, src: &str) -> Vec<String> {
+    check_file(rel, src).into_iter().map(|d| d.rule).collect()
+}
+
+// ---- hot-path-alloc ------------------------------------------------------
+
+#[test]
+fn hot_path_alloc_fires_in_designated_fn() {
+    let src = "pub fn matmul_i32_chunk(n: usize) {\n    let buf: Vec<i32> = Vec::new();\n}\n";
+    let ds = check_file("engine/gemm.rs", src);
+    assert_eq!(ds.len(), 1, "{ds:?}");
+    assert_eq!(ds[0].rule, "hot-path-alloc");
+    assert_eq!(ds[0].line, 2);
+    assert!(ds[0].message.contains("matmul_i32_chunk"), "{}", ds[0].message);
+}
+
+#[test]
+fn hot_path_alloc_catches_macros_and_methods() {
+    let src = "pub fn matmul_i32_chunk(n: usize) {\n    let a = vec![0i32; n];\n    let b = a.clone();\n    let c: Vec<i32> = a.iter().copied().collect();\n}\n";
+    let rules = fired("engine/gemm.rs", src);
+    assert_eq!(rules, vec!["hot-path-alloc"; 3], "{rules:?}");
+}
+
+#[test]
+fn hot_path_alloc_ignores_cold_fns_and_other_files() {
+    let src = "pub fn build_scratch(n: usize) -> Vec<i32> {\n    vec![0i32; n]\n}\n";
+    // Cold fn in a hot file: quiet.
+    assert!(fired("engine/gemm.rs", src).is_empty());
+    // Hot fn name in a file with no hot set: quiet.
+    let hot = "pub fn matmul_i32_chunk(n: usize) {\n    let v = Vec::new();\n}\n";
+    assert!(fired("coordinator/scheduler.rs", hot).is_empty());
+}
+
+#[test]
+fn hot_path_alloc_respects_allow_annotation() {
+    let src = "pub fn matmul_i32_chunk(n: usize) {\n    // lint:allow(hot-path-alloc) scratch handed back to the arena by the caller\n    let buf: Vec<i32> = Vec::new();\n}\n";
+    assert!(fired("engine/gemm.rs", src).is_empty());
+    // Trailing on the same line works too.
+    let trailing = "pub fn matmul_i32_chunk(n: usize) {\n    let b = Vec::new(); // lint:allow(hot-path-alloc) empty vec never allocates\n}\n";
+    assert!(fired("engine/gemm.rs", trailing).is_empty());
+}
+
+#[test]
+fn allow_for_the_wrong_rule_does_not_suppress() {
+    let src = "pub fn matmul_i32_chunk(n: usize) {\n    // lint:allow(determinism) wrong rule for this site\n    let buf: Vec<i32> = Vec::new();\n}\n";
+    assert_eq!(fired("engine/gemm.rs", src), vec!["hot-path-alloc"]);
+}
+
+// ---- unsafe-audit --------------------------------------------------------
+
+#[test]
+fn unsafe_outside_sanctioned_modules_fires() {
+    let src = "pub fn f(p: *const u8) -> u8 {\n    // SAFETY: p is valid\n    unsafe { *p }\n}\n";
+    // Even with a SAFETY comment: nn/ may not hold unsafe at all.
+    assert_eq!(fired("nn/graph.rs", src), vec!["unsafe-audit"]);
+}
+
+#[test]
+fn unsafe_in_kernels_needs_safety_comment() {
+    let bare = "pub fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+    let ds = check_file("engine/kernels.rs", bare);
+    assert_eq!(ds.len(), 1);
+    assert!(ds[0].message.contains("SAFETY"), "{}", ds[0].message);
+
+    let justified = "pub fn f(p: *const u8) -> u8 {\n    // SAFETY: caller guarantees p points into the packed buffer\n    unsafe { *p }\n}\n";
+    assert!(fired("engine/kernels.rs", justified).is_empty());
+}
+
+#[test]
+fn unsafe_fn_doc_safety_section_counts() {
+    let src = "/// Reads a lane.\n///\n/// # Safety\n/// ISA must be verified by the caller.\nunsafe fn lane(p: *const u8) -> u8 {\n    *p\n}\n";
+    assert!(fired("engine/kernels.rs", src).is_empty());
+}
+
+// ---- determinism ---------------------------------------------------------
+
+#[test]
+fn determinism_bans_clocks_and_hash_iteration() {
+    let src = "pub fn step() {\n    let t = std::time::Instant::now();\n    let m: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();\n}\n";
+    let rules = fired("engine/ideal.rs", src);
+    assert_eq!(rules.iter().filter(|r| *r == "determinism").count(), 3, "{rules:?}");
+}
+
+#[test]
+fn determinism_scope_has_carve_outs() {
+    let src = "pub fn step() {\n    let t = std::time::Instant::now();\n}\n";
+    // The work queue is timing infrastructure by design.
+    assert!(fired("engine/queue.rs", src).is_empty());
+    // The cluster layer measures wall time legitimately.
+    assert!(fired("cluster/health.rs", src).is_empty());
+}
+
+// ---- dispatch-discipline -------------------------------------------------
+
+#[test]
+fn dispatch_discipline_confines_gemm_calls() {
+    let src = "pub fn go(a: &[i32]) {\n    let y = gemm::rowdot_f64(a);\n}\n";
+    assert_eq!(fired("nn/graph.rs", src), vec!["dispatch-discipline"]);
+    // The hub and the reference module itself are exempt.
+    assert!(fired("engine/kernels.rs", src).is_empty());
+    assert!(fired("engine/gemm.rs", src).is_empty());
+}
+
+#[test]
+fn dispatch_discipline_ignores_paths_without_a_call() {
+    // A `use` of the module (no call) and qualified non-call paths stay
+    // legal — only `gemm::<ident>(` trips the rule.
+    let src = "use crate::engine::gemm;\n\npub fn ty() -> usize {\n    gemm::WIDTH\n}\n";
+    assert!(fired("nn/graph.rs", src).is_empty());
+}
+
+// ---- request-path-panic --------------------------------------------------
+
+#[test]
+fn request_path_bans_panicking_operators() {
+    let src = "pub fn handle(xs: &[u8], i: usize) -> u8 {\n    let v = xs.first().unwrap();\n    let w = xs.first().expect(\"boom\");\n    if i > 9 { unreachable!(\"bad\") }\n    xs[i]\n}\n";
+    let rules = fired("cluster/router.rs", src);
+    assert_eq!(rules.iter().filter(|r| *r == "request-path-panic").count(), 4, "{rules:?}");
+    // Same code outside the request path: quiet.
+    assert!(fired("engine/queue.rs", src).is_empty());
+}
+
+#[test]
+fn lock_unwrap_is_exempt_even_multiline() {
+    let src = "pub fn g(m: &std::sync::Mutex<u32>) -> u32 {\n    let a = *m.lock().unwrap();\n    let b = *m\n        .lock()\n        .unwrap();\n    a + b\n}\n";
+    assert!(fired("cluster/router.rs", src).is_empty());
+}
+
+#[test]
+fn slice_index_heuristic_skips_types_and_macros() {
+    let src = "pub fn h(n: usize) -> Vec<u8> {\n    let a: &[u8] = &[1, 2];\n    let v = vec![0u8; n];\n    v\n}\n";
+    assert!(fired("cluster/pool.rs", src).is_empty());
+}
+
+// ---- cfg(test) regions ---------------------------------------------------
+
+#[test]
+fn cfg_test_regions_are_skipped() {
+    let src = "pub fn ok() {}\n\n#[cfg(test)]\nmod tests {\n    pub fn t(xs: &[u8]) -> u8 {\n        let y = gemm::rowdot_f64(xs);\n        xs.first().unwrap();\n        xs[0]\n    }\n}\n";
+    assert!(fired("cluster/router.rs", src).is_empty());
+}
+
+// ---- the lint-allow meta-rule --------------------------------------------
+
+#[test]
+fn allow_without_justification_is_an_error() {
+    let src = "pub fn matmul_i32_chunk(n: usize) {\n    // lint:allow(hot-path-alloc)\n    let buf: Vec<i32> = Vec::new();\n}\n";
+    let ds = check_file("engine/gemm.rs", src);
+    let rules: Vec<&str> = ds.iter().map(|d| d.rule.as_str()).collect();
+    // The malformed allow is flagged AND it suppresses nothing.
+    assert!(rules.contains(&"lint-allow"), "{ds:?}");
+    assert!(rules.contains(&"hot-path-alloc"), "{ds:?}");
+}
+
+#[test]
+fn allow_with_unknown_rule_is_an_error() {
+    let src = "pub fn free() {\n    // lint:allow(no-such-rule) justification present but rule bogus\n    let x = 1;\n}\n";
+    let ds = check_file("coordinator/scheduler.rs", src);
+    assert_eq!(ds.len(), 1, "{ds:?}");
+    assert_eq!(ds[0].rule, "lint-allow");
+    assert!(ds[0].message.contains("no-such-rule"), "{}", ds[0].message);
+}
+
+#[test]
+fn rule_names_are_the_documented_five() {
+    assert_eq!(RULE_NAMES.len(), 5);
+    assert_eq!(RULE_NAMES[0], "hot-path-alloc");
+    assert_eq!(RULE_NAMES[1], "unsafe-audit");
+    assert_eq!(RULE_NAMES[2], "determinism");
+    assert_eq!(RULE_NAMES[3], "dispatch-discipline");
+    assert_eq!(RULE_NAMES[4], "request-path-panic");
+}
+
+// ---- machine-readable output ---------------------------------------------
+
+#[test]
+fn report_json_has_the_shared_diagnostic_shape() {
+    let src = "pub fn matmul_i32_chunk(n: usize) {\n    let buf: Vec<i32> = Vec::new();\n}\n";
+    let report = imagine::analysis::Report {
+        files_scanned: 1,
+        diagnostics: check_file("engine/gemm.rs", src),
+    };
+    let j = Json::parse(&report.to_json().to_string_compact()).expect("valid json");
+    assert_eq!(j.get("tool").and_then(Json::as_str), Some("imagine-lint"));
+    assert_eq!(j.get("count").and_then(Json::as_usize), Some(1));
+    let ds = j.get("diagnostics").and_then(Json::as_arr).expect("array");
+    assert_eq!(ds[0].get("file").and_then(Json::as_str), Some("engine/gemm.rs"));
+    assert_eq!(ds[0].get("line").and_then(Json::as_usize), Some(2));
+    assert_eq!(ds[0].get("rule").and_then(Json::as_str), Some("hot-path-alloc"));
+    assert!(ds[0].get("message").and_then(Json::as_str).is_some());
+}
+
+// ---- the tree-wide invariant ---------------------------------------------
+
+#[test]
+fn head_sources_are_lint_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = lint_tree(&src).expect("lint walks the crate sources");
+    assert!(report.files_scanned > 30, "suspiciously few files: {}", report.files_scanned);
+    let mut rendered = Vec::new();
+    for d in &report.diagnostics {
+        rendered.push(d.to_string());
+    }
+    assert!(report.is_clean(), "lint diagnostics on HEAD:\n{}", rendered.join("\n"));
+}

@@ -5,7 +5,8 @@ Usage:
   python3 scripts/bench_guard.py \
       --merge bench_out/perf.json bench_out/train_smoke.json \
       --out BENCH_report.json --baseline BENCH_baseline.json \
-      [--tolerance 0.25] [--suggest BENCH_suggested.json]
+      [--tolerance 0.25] [--suggest BENCH_suggested.json] \
+      [--json bench_diag.json]
 
 Reads flat {metric: value} objects produced by the benches' MetricSink,
 merges them (later files win on key collisions), writes the merged report
@@ -20,6 +21,11 @@ to --out, and compares against the committed baseline:
     flagged IMPROVED and summarized at the end — the baseline is stale
   * --suggest <path> writes a tightened candidate baseline (current
     values, keeping baseline-only keys) for the CI artifact workflow
+  * --json <path> writes the findings in the shared diagnostic shape
+    emitted by `imagine lint --json` — {"tool", "count", "diagnostics":
+    [{"file", "line", "rule", "message"}]} — so CI consumers parse lint
+    findings and bench regressions with one reader (rules:
+    bench-regression, bench-improvement)
 
 Baselines committed from a developer machine are conservative floors; CI
 uploads the fresh report and the --suggest candidate as artifacts so the
@@ -48,6 +54,11 @@ def main() -> int:
         "--suggest",
         default=None,
         help="write a tightened candidate baseline (current values) to this path",
+    )
+    ap.add_argument(
+        "--json",
+        default=None,
+        help="write findings in the imagine-lint diagnostic shape to this path",
     )
     args = ap.parse_args()
 
@@ -102,6 +113,46 @@ def main() -> int:
             failures.append(key)
         elif improved:
             improvements.append((key, base, cur))
+
+    if args.json:
+        # Same shape as `imagine lint --json`: metrics have no source
+        # span, so `file` is the baseline the finding is relative to.
+        diagnostics = [
+            {
+                "file": args.baseline,
+                "line": 0,
+                "rule": "bench-regression",
+                "message": (
+                    f"{key}: {merged[key]:.1f} regressed more than "
+                    f"{args.tolerance:.0%} vs baseline {float(baseline[key]):.1f}"
+                ),
+            }
+            for key in failures
+        ] + [
+            {
+                "file": args.baseline,
+                "line": 0,
+                "rule": "bench-improvement",
+                "message": (
+                    f"{key}: {cur:.1f} improved more than {args.tolerance:.0%} "
+                    f"vs baseline {base:.1f} (baseline is stale)"
+                ),
+            }
+            for key, base, cur in improvements
+        ]
+        with open(args.json, "w") as fh:
+            json.dump(
+                {
+                    "tool": "bench-guard",
+                    "count": len(diagnostics),
+                    "diagnostics": diagnostics,
+                },
+                fh,
+                indent=2,
+                sort_keys=True,
+            )
+            fh.write("\n")
+        print(f"bench_guard: wrote {len(diagnostics)} diagnostic(s) to {args.json}")
 
     if improvements:
         print(
