@@ -2,7 +2,7 @@
 # artifact-dependent integration tests skip with a message until
 # `make artifacts` has been run (requires python3 with jax + numpy).
 
-.PHONY: build test artifacts bench bench-check cluster-test fmt lint pytest ci
+.PHONY: build test artifacts bench bench-check cluster-test docs fmt lint pytest ci
 
 build:
 	cargo build --release
@@ -38,6 +38,14 @@ bench-check: bench
 cluster-test:
 	timeout 900 cargo test --release --test cluster_integration -- --test-threads 1
 
+# What the CI docs job runs: rustdoc with warnings denied (the crate's
+# `#![warn(missing_docs)]` makes undocumented public items in the
+# non-opted-out modules hard errors here) + the dependency-free
+# relative-link checker over docs/*.md and the READMEs.
+docs:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+	python3 scripts/check_links.py
+
 fmt:
 	cargo fmt --all --check
 
@@ -50,10 +58,11 @@ lint: build
 pytest:
 	cd python && python3 -m pytest tests -q
 
-# Mirror the CI workflow locally (rust job matrix + lint job) so a push
-# that passes `make ci` passes the workflow: all feature-matrix arms
-# (build, test, bench compilation), blocking clippy/fmt, and the
-# blocking `imagine lint` repo-invariant pass.
+# Mirror the CI workflow locally (rust job matrix + lint + docs jobs)
+# so a push that passes `make ci` passes the workflow: all feature-
+# matrix arms (build, test, bench compilation), blocking clippy/fmt,
+# the blocking `imagine lint` repo-invariant pass, rustdoc with
+# warnings denied, and the docs link check.
 ci:
 	cargo build --release --no-default-features
 	cargo test -q --no-default-features
@@ -67,3 +76,5 @@ ci:
 	cargo clippy --all-targets -- -D warnings
 	cargo fmt --all --check
 	cargo run --release -p imagine -- lint
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+	python3 scripts/check_links.py

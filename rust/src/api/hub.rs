@@ -108,6 +108,8 @@ impl Deployment {
         &self.model.name
     }
 
+    /// Select the backend this deployment is served on
+    /// ([`BackendKind::Ideal`] by default).
     pub fn backend(mut self, kind: BackendKind) -> Self {
         self.backend = kind;
         self
@@ -129,11 +131,15 @@ impl Deployment {
         self
     }
 
+    /// Supply point of the simulated silicon for this deployment
+    /// (defaults to the base parameters' supply).
     pub fn supply(mut self, supply: crate::config::params::Supply) -> Self {
         self.supply = Some(supply);
         self
     }
 
+    /// Process corner of the simulated silicon for this deployment
+    /// (defaults to the base parameters' corner).
     pub fn corner(mut self, corner: crate::config::params::Corner) -> Self {
         self.corner = Some(corner);
         self
@@ -304,6 +310,8 @@ pub struct ModelHub {
 }
 
 impl ModelHub {
+    /// Start configuring a hub (engine-level knobs: batch, workers,
+    /// flush window, seed).
     pub fn builder() -> HubBuilder {
         HubBuilder::default()
     }

@@ -25,6 +25,11 @@
 //!   the macro's quantizers, post-silicon equivalent noise injected per
 //!   forward); a [`TrainedModel`] lowers, saves and deploys straight
 //!   into the hub — train → lower → serve in one binary;
+//! * [`AutotuneConfig`] / [`AutotuneReport`] — the per-layer precision
+//!   search ([`TrainedModel::autotune`]): minimize modeled energy under
+//!   an accuracy floor, bake the winning profile into the saved
+//!   manifest ([`TrainedModel::save_tuned`]) so hubs serve it by
+//!   default;
 //! * [`ImagineError`] — the typed error enum on this boundary.
 //!
 //! The CLI (`imagine run`, `imagine train`, `imagine serve`), the TCP
@@ -38,6 +43,10 @@ mod registry;
 mod session;
 mod train;
 
+pub use crate::nn::autotune::{
+    matrix_to_json, operating_point_matrix, AutotuneConfig, AutotuneReport, MatrixEntry,
+    MoveRecord, UniformPoint,
+};
 pub use crate::nn::train::{LrSchedule, NoiseInjection, OptimizerKind, TrainConfig, TrainReport};
 pub use error::ImagineError;
 pub use hub::{Deployment, HubBuilder, ModelHub, PendingInference, Session};

@@ -53,8 +53,10 @@ pub enum BackendKind {
 }
 
 impl BackendKind {
+    /// Every backend the registry knows, in resolution order.
     pub const ALL: [BackendKind; 3] = [BackendKind::Ideal, BackendKind::Analog, BackendKind::Pjrt];
 
+    /// The CLI/protocol spelling (`ideal` / `analog` / `pjrt`).
     pub fn name(self) -> &'static str {
         match self {
             BackendKind::Ideal => "ideal",
@@ -250,6 +252,7 @@ pub fn apply_precision(model: &mut NetworkModel, r_in: u32, r_out: u32) {
 /// do not retain the model tensors.
 #[derive(Clone, Debug)]
 pub struct LayerSummary {
+    /// Layer name from the manifest (e.g. `conv0`, `fc1`).
     pub name: String,
     /// `dense` or `conv3`.
     pub kind: &'static str,
@@ -259,10 +262,13 @@ pub struct LayerSummary {
     pub out_features: usize,
     /// Physical macro rows (padded to DP-unit multiples).
     pub rows: usize,
+    /// Resolved input precision in bits (1..=8).
     pub r_in: u32,
+    /// Resolved ADC output precision in bits (1..=8).
     pub r_out: u32,
     /// ABN gain.
     pub gamma: f64,
+    /// Whether a ReLU follows in the post-ADC digital datapath.
     pub relu: bool,
     /// `none`, `max2`, `avg2` or `gap`.
     pub pool: &'static str,
@@ -308,8 +314,11 @@ impl LayerSummary {
 pub struct SessionConfig {
     /// The deployment name this configuration is served under.
     pub model: String,
+    /// Input shape from the manifest (e.g. `[784]` or `[3, 16, 16]`).
     pub input_shape: Vec<usize>,
+    /// Flattened input length (the product of `input_shape`).
     pub input_len: usize,
+    /// The backend actually serving this deployment.
     pub backend: BackendKind,
     /// Why this backend was chosen when it was resolved (`--backend
     /// auto`) rather than requested — never a silent fallback.
@@ -317,11 +326,17 @@ pub struct SessionConfig {
     /// The session's effective (r_in, r_out) operating point (`None`
     /// keeps the per-layer manifest precision).
     pub precision: Option<(u32, u32)>,
+    /// Supply point of the simulated silicon.
     pub supply: Supply,
+    /// Process corner of the simulated silicon.
     pub corner: Corner,
+    /// Maximum images per coalesced engine batch.
     pub batch: usize,
+    /// Engine worker threads (analog: simulated dies).
     pub workers: usize,
+    /// Partial-batch flush window of the dispatcher, in microseconds.
     pub flush_micros: u64,
+    /// Engine base seed (analog die seeds derive from it).
     pub seed: u64,
     /// Human-readable backend description from the engine.
     pub engine: String,
@@ -432,6 +447,7 @@ impl SessionBuilder {
         self
     }
 
+    /// Select the inference backend ([`BackendKind::Ideal`] default).
     pub fn backend(mut self, kind: BackendKind) -> Self {
         self.spec = self.spec.backend(kind);
         self
@@ -451,11 +467,13 @@ impl SessionBuilder {
         self
     }
 
+    /// Supply point of the simulated silicon.
     pub fn supply(mut self, supply: Supply) -> Self {
         self.spec = self.spec.supply(supply);
         self
     }
 
+    /// Process corner of the simulated silicon.
     pub fn corner(mut self, corner: Corner) -> Self {
         self.spec = self.spec.corner(corner);
         self

@@ -28,8 +28,10 @@ use super::error::ImagineError;
 use super::hub::Deployment;
 use crate::config::params::MacroParams;
 use crate::coordinator::manifest::NetworkModel;
+use crate::nn::autotune::{self, AutotuneConfig, AutotuneReport, MatrixEntry};
 use crate::nn::dataset::Dataset;
 use crate::nn::graph::{eval_graph_workers, Graph};
+use crate::nn::layers::AbnSpec;
 use crate::nn::train::{train_graph, TrainConfig, TrainReport};
 use crate::util::json::{obj, Json};
 
@@ -47,6 +49,7 @@ impl Trainer {
         Trainer { graph, config: TrainConfig::default(), params: MacroParams::paper() }
     }
 
+    /// Replace the training configuration (epochs, lr, noise, seed, …).
     pub fn config(mut self, config: TrainConfig) -> Trainer {
         self.config = config;
         self
@@ -76,6 +79,7 @@ impl Trainer {
 pub struct TrainedModel {
     /// The trained float graph (master weights).
     pub graph: Graph,
+    /// Loss trajectory, throughput and the σ trained against.
     pub report: TrainReport,
     config: TrainConfig,
     params: MacroParams,
@@ -87,6 +91,7 @@ impl TrainedModel {
         &self.config
     }
 
+    /// The macro parameters the model was trained against.
     pub fn params(&self) -> &MacroParams {
         &self.params
     }
@@ -116,14 +121,69 @@ impl TrainedModel {
         .map_err(ImagineError::train)
     }
 
+    /// Search a per-layer `(r_in, r_out)` precision profile for this
+    /// model (see [`crate::nn::autotune`]): modeled system energy is
+    /// minimized subject to an accuracy floor, accuracy measured under
+    /// each candidate point's probed equivalent noise at the training
+    /// supply/corner. `calib` calibrates activation ranges; `eval`
+    /// scores candidates.
+    pub fn autotune(
+        &self,
+        calib: &Dataset,
+        eval: &Dataset,
+        at: &AutotuneConfig,
+    ) -> Result<AutotuneReport, ImagineError> {
+        let cfg = self.config.eval_cfg(self.report.noise_lsb);
+        autotune::autotune(&self.graph, calib, eval, &self.params, &cfg, at)
+            .map_err(ImagineError::train)
+    }
+
+    /// Sweep `{nominal, low-power} × {TT, FF, SS, FS, SF} ×` the uniform
+    /// precision grid on this model: the Fig. 3(b)-style accuracy/energy
+    /// atlas behind `imagine autotune --matrix` (see
+    /// [`crate::nn::autotune::operating_point_matrix`]).
+    pub fn operating_point_matrix(
+        &self,
+        calib: &Dataset,
+        eval: &Dataset,
+        at: &AutotuneConfig,
+    ) -> Result<Vec<MatrixEntry>, ImagineError> {
+        let cfg = self.config.eval_cfg(self.report.noise_lsb);
+        autotune::operating_point_matrix(&self.graph, calib, eval, &self.params, &cfg, at)
+            .map_err(ImagineError::train)
+    }
+
     /// Lower to a physical [`NetworkModel`] (integer antipodal weights in
     /// macro row order, 5b ABN offsets, post-ADC gains), calibrated on
     /// `calib` at the training operating point, with the training
     /// metrics recorded in the manifest's `metrics` field.
     pub fn lower(&self, calib: &Dataset) -> Result<NetworkModel, ImagineError> {
+        self.lower_impl(calib, &[])
+    }
+
+    /// [`TrainedModel::lower`] with an autotuned per-layer profile baked
+    /// in: each manifest layer is emitted at its own `(r_in, r_out)`
+    /// point and the manifest carries the versioned `precision_profile`
+    /// section, so [`ModelHub`](super::ModelHub) and `imagine serve`
+    /// pick the profile up with zero flags.
+    pub fn lower_tuned(
+        &self,
+        calib: &Dataset,
+        report: &AutotuneReport,
+    ) -> Result<NetworkModel, ImagineError> {
+        self.lower_impl(calib, &report.overrides())
+    }
+
+    fn lower_impl(
+        &self,
+        calib: &Dataset,
+        overrides: &[AbnSpec],
+    ) -> Result<NetworkModel, ImagineError> {
         let cfg = self.config.eval_cfg(self.report.noise_lsb);
-        let mut model =
-            self.graph.lower(calib, &self.params, &cfg).map_err(ImagineError::train)?;
+        let mut model = self
+            .graph
+            .lower_with(calib, &self.params, &cfg, overrides)
+            .map_err(ImagineError::train)?;
         model.metrics = obj(vec![
             ("trained_by", Json::Str("imagine-train".to_string())),
             ("epochs", Json::Num(self.report.epoch_losses.len() as f64)),
@@ -145,13 +205,21 @@ impl TrainedModel {
         name: &str,
         calib: &Dataset,
     ) -> Result<NetworkModel, ImagineError> {
-        let mut model = self.lower(calib)?;
-        model.name = name.to_string();
-        model.save(dir, name).map_err(|e| ImagineError::ModelLoad {
-            model: name.to_string(),
-            message: format!("{e:#}"),
-        })?;
-        Ok(model)
+        let model = self.lower(calib)?;
+        export_model(model, dir, name)
+    }
+
+    /// [`TrainedModel::save`] with an autotuned per-layer profile baked
+    /// into the exported manifest (see [`TrainedModel::lower_tuned`]).
+    pub fn save_tuned(
+        &self,
+        dir: &str,
+        name: &str,
+        calib: &Dataset,
+        report: &AutotuneReport,
+    ) -> Result<NetworkModel, ImagineError> {
+        let model = self.lower_tuned(calib, report)?;
+        export_model(model, dir, name)
     }
 
     /// Wrap the lowered model in a [`Deployment`] spec for
@@ -160,6 +228,20 @@ impl TrainedModel {
     pub fn deployment(&self, calib: &Dataset) -> Result<Deployment, ImagineError> {
         Ok(Deployment::new(self.lower(calib)?))
     }
+}
+
+/// Rename and write manifest + weight artifacts for `model`.
+fn export_model(
+    mut model: NetworkModel,
+    dir: &str,
+    name: &str,
+) -> Result<NetworkModel, ImagineError> {
+    model.name = name.to_string();
+    model.save(dir, name).map_err(|e| ImagineError::ModelLoad {
+        model: name.to_string(),
+        message: format!("{e:#}"),
+    })?;
+    Ok(model)
 }
 
 #[cfg(test)]

@@ -50,6 +50,8 @@ pub struct ModelSpec {
 }
 
 impl ModelSpec {
+    /// A spec for `name` served from `dir`, with router defaults
+    /// (manifest = name, `auto` backend, no pinned precision/seed).
     pub fn new(name: impl Into<String>, dir: impl Into<String>) -> ModelSpec {
         let name = name.into();
         ModelSpec {
@@ -90,6 +92,7 @@ pub struct Ring {
 }
 
 impl Ring {
+    /// An empty ring; populate with [`Ring::add_slot`].
     pub fn new() -> Ring {
         Ring::default()
     }

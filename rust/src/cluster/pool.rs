@@ -39,6 +39,7 @@ struct SlotState {
 /// One worker in the fleet.
 #[derive(Debug)]
 pub struct WorkerSlot {
+    /// Pool-issued slot index; stable for the router's lifetime.
     pub id: WorkerId,
     /// Whether this slot was spawned by the router (restartable) or
     /// attached (external lifecycle; re-admitted but never restarted).
@@ -72,10 +73,12 @@ impl WorkerSlot {
         }
     }
 
+    /// The worker's current `host:port` address.
     pub fn addr(&self) -> String {
         self.state.lock().unwrap().addr.clone()
     }
 
+    /// Whether the last probe round considered this worker healthy.
     pub fn healthy(&self) -> bool {
         self.state.lock().unwrap().healthy
     }
@@ -85,18 +88,22 @@ impl WorkerSlot {
         self.state.lock().unwrap().child.as_ref().map(Child::id)
     }
 
+    /// Models the router believes are deployed on this worker.
     pub fn deployed_models(&self) -> Vec<String> {
         self.state.lock().unwrap().deployed.iter().cloned().collect()
     }
 
+    /// Whether the router believes `model` is deployed on this worker.
     pub fn is_deployed(&self, model: &str) -> bool {
         self.state.lock().unwrap().deployed.contains(model)
     }
 
+    /// Record a successful deploy of `model` to this worker.
     pub fn note_deployed(&self, model: &str) {
         self.state.lock().unwrap().deployed.insert(model.to_string());
     }
 
+    /// Forget `model` after an undeploy or a worker restart.
     pub fn note_undeployed(&self, model: &str) {
         self.state.lock().unwrap().deployed.remove(model);
     }
@@ -200,27 +207,33 @@ pub struct WorkerPool {
 }
 
 impl WorkerPool {
+    /// An empty pool; add workers with the attach/spawn entry points.
     pub fn new() -> WorkerPool {
         WorkerPool::default()
     }
 
+    /// Total slots (healthy or not).
     pub fn len(&self) -> usize {
         self.slots.len()
     }
 
+    /// Whether the pool has no slots at all.
     pub fn is_empty(&self) -> bool {
         self.slots.is_empty()
     }
 
+    /// The slot with the given pool-issued id.
     pub fn slot(&self, id: WorkerId) -> &WorkerSlot {
         // lint:allow(request-path-panic) WorkerIds are pool-issued indexes and slots are append-only
         &self.slots[id]
     }
 
+    /// Every slot, in id order.
     pub fn slots(&self) -> impl Iterator<Item = &WorkerSlot> {
         self.slots.iter()
     }
 
+    /// Slots currently passing health probes.
     pub fn healthy_count(&self) -> usize {
         self.slots.iter().filter(|s| s.healthy()).count()
     }

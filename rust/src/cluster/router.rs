@@ -128,6 +128,8 @@ pub struct Router {
 }
 
 impl Router {
+    /// A router over an empty worker pool; attach or spawn workers,
+    /// then start serving.
     pub fn new(cfg: RouterConfig) -> Router {
         Router {
             cfg,
@@ -148,10 +150,12 @@ impl Router {
         }
     }
 
+    /// The configuration this router was built with.
     pub fn config(&self) -> &RouterConfig {
         &self.cfg
     }
 
+    /// The worker pool (slots, health, admission counters).
     pub fn pool(&self) -> &WorkerPool {
         &self.pool
     }
@@ -1015,6 +1019,7 @@ impl Router {
         }
     }
 
+    /// Ask the serve loop to stop; queued admissions fail fast.
     pub fn request_stop(&self) {
         self.stop.store(true, Ordering::SeqCst);
         // Wake queued admissions so they re-check and fail fast.
@@ -1022,6 +1027,7 @@ impl Router {
         self.queue_cv.notify_all();
     }
 
+    /// Whether [`Router::request_stop`] has been called.
     pub fn stop_requested(&self) -> bool {
         self.stop.load(Ordering::SeqCst)
     }

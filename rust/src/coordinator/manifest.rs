@@ -86,6 +86,103 @@ pub struct Layer {
     pub out_gain: f32,
 }
 
+/// One layer's entry in a [`PrecisionProfile`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ProfileEntry {
+    /// Manifest layer name this entry applies to.
+    pub name: String,
+    /// Input (activation) precision in bits, 1..=8.
+    pub r_in: u32,
+    /// Output (ADC) precision in bits, 1..=8.
+    pub r_out: u32,
+}
+
+/// A per-layer `(r_in, r_out)` assignment — the autotuner's product.
+///
+/// Serialized as the manifest's optional `"precision_profile"` section
+/// (versioned; absent in legacy manifests, which deploy with their
+/// uniform per-layer `cfg` untouched) so a saved deployment serves its
+/// mixed-precision operating point through `ModelHub` with zero flags.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PrecisionProfile {
+    /// Manifest-section format version (currently 1).
+    pub version: u32,
+    /// One entry per CIM layer, in layer order.
+    pub layers: Vec<ProfileEntry>,
+}
+
+impl PrecisionProfile {
+    /// The manifest-section format version this build writes and reads.
+    pub const VERSION: u32 = 1;
+
+    /// Capture the per-layer operating points a model currently runs at.
+    pub fn from_model(model: &NetworkModel) -> PrecisionProfile {
+        PrecisionProfile {
+            version: Self::VERSION,
+            layers: model
+                .layers
+                .iter()
+                .map(|l| ProfileEntry {
+                    name: l.name.clone(),
+                    r_in: l.cfg.r_in,
+                    r_out: l.cfg.r_out,
+                })
+                .collect(),
+        }
+    }
+
+    /// Per-layer `(r_in, r_out)` points in layer order.
+    pub fn points(&self) -> Vec<(u32, u32)> {
+        self.layers.iter().map(|e| (e.r_in, e.r_out)).collect()
+    }
+
+    /// Parse the manifest's `"precision_profile"` value.
+    pub fn from_json(j: &Json) -> Result<PrecisionProfile> {
+        let version = j.req_usize("version")? as u32;
+        if version != Self::VERSION {
+            bail!("unsupported precision_profile version {version}");
+        }
+        let mut layers = Vec::new();
+        for e in j.req_arr("layers")? {
+            let entry = ProfileEntry {
+                name: e.req_str("name")?.to_string(),
+                r_in: e.req_usize("r_in")? as u32,
+                r_out: e.req_usize("r_out")? as u32,
+            };
+            for (tag, r) in [("r_in", entry.r_in), ("r_out", entry.r_out)] {
+                if !(1..=8).contains(&r) {
+                    bail!("precision_profile {}: {tag}={r} outside 1..=8", entry.name);
+                }
+            }
+            layers.push(entry);
+        }
+        Ok(PrecisionProfile { version, layers })
+    }
+
+    /// Serialize as the manifest's `"precision_profile"` value.
+    pub fn to_json(&self) -> Json {
+        use crate::util::json::obj;
+        obj(vec![
+            ("version", Json::Num(self.version as f64)),
+            (
+                "layers",
+                Json::Arr(
+                    self.layers
+                        .iter()
+                        .map(|e| {
+                            obj(vec![
+                                ("name", Json::Str(e.name.clone())),
+                                ("r_in", Json::Num(e.r_in as f64)),
+                                ("r_out", Json::Num(e.r_out as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
 /// A fully loaded network.
 #[derive(Clone, Debug)]
 pub struct NetworkModel {
@@ -94,6 +191,9 @@ pub struct NetworkModel {
     pub layers: Vec<Layer>,
     /// Training metrics recorded by the compile path (accuracy etc.).
     pub metrics: Json,
+    /// Per-layer precision profile, when the model was autotuned.
+    /// `None` for legacy manifests — uniform per-layer `cfg` assumed.
+    pub profile: Option<PrecisionProfile>,
 }
 
 impl NetworkModel {
@@ -120,11 +220,31 @@ impl NetworkModel {
         for lj in man.req_arr("layers")? {
             layers.push(Self::load_layer(lj, &tf)?);
         }
+        let profile = match man.get("precision_profile") {
+            None | Some(Json::Null) => None,
+            Some(j) => {
+                let prof = PrecisionProfile::from_json(j)?;
+                if prof.layers.len() != layers.len() {
+                    bail!(
+                        "precision_profile covers {} layers, manifest has {}",
+                        prof.layers.len(),
+                        layers.len()
+                    );
+                }
+                for (e, l) in prof.layers.iter().zip(&layers) {
+                    if e.name != l.name {
+                        bail!("precision_profile entry '{}' != layer '{}'", e.name, l.name);
+                    }
+                }
+                Some(prof)
+            }
+        };
         Ok(NetworkModel {
             name: man.req_str("name")?.to_string(),
             input_shape,
             layers,
             metrics: man.get("metrics").cloned().unwrap_or(Json::Null),
+            profile,
         })
     }
 
@@ -216,6 +336,7 @@ impl NetworkModel {
             input_shape: vec![widths[0]],
             layers,
             metrics: Json::Null,
+            profile: None,
         }
     }
 
@@ -297,14 +418,18 @@ impl NetworkModel {
             ]));
         }
         tf.save(dir.join(&weights_file))?;
-        let manifest = obj(vec![
+        let mut fields = vec![
             ("format", Json::Str("imagine-model-v1".to_string())),
             ("name", Json::Str(self.name.clone())),
             ("weights_file", Json::Str(weights_file)),
             ("input_shape", arr_usize(&self.input_shape)),
             ("layers", Json::Arr(layers_json)),
             ("metrics", self.metrics.clone()),
-        ]);
+        ];
+        if let Some(prof) = &self.profile {
+            fields.push(("precision_profile", prof.to_json()));
+        }
+        let manifest = obj(fields);
         let man_path = dir.join(format!("{name}.manifest.json"));
         std::fs::write(&man_path, manifest.to_string_compact())
             .with_context(|| format!("writing {man_path:?}"))
@@ -326,15 +451,56 @@ impl NetworkModel {
     /// copy of the as-compiled model (what the engine backends do).
     pub fn retarget_precision(&mut self, r_in: u32, r_out: u32) {
         for layer in &mut self.layers {
-            let old_m = ((1u32 << layer.cfg.r_in) - 1) as f32;
-            let new_m = ((1u32 << r_in) - 1) as f32;
-            let old_half = (1u32 << (layer.cfg.r_out - 1)) as f32;
-            let new_half = (1u32 << (r_out - 1)) as f32;
-            layer.a_scale *= old_m / new_m;
-            layer.out_gain *= old_half / new_half;
-            layer.cfg.r_in = r_in;
-            layer.cfg.r_out = r_out;
+            Self::retarget_layer(layer, r_in, r_out);
         }
+        // The model is uniform now; a recorded mixed profile no longer
+        // describes it.
+        self.profile = None;
+    }
+
+    /// The per-layer body of [`NetworkModel::retarget_precision`] —
+    /// distribution-aware rescaling of one layer to a new operating
+    /// point. Shared with [`NetworkModel::apply_profile`].
+    fn retarget_layer(layer: &mut Layer, r_in: u32, r_out: u32) {
+        let old_m = ((1u32 << layer.cfg.r_in) - 1) as f32;
+        let new_m = ((1u32 << r_in) - 1) as f32;
+        let old_half = (1u32 << (layer.cfg.r_out - 1)) as f32;
+        let new_half = (1u32 << (r_out - 1)) as f32;
+        layer.a_scale *= old_m / new_m;
+        layer.out_gain *= old_half / new_half;
+        layer.cfg.r_in = r_in;
+        layer.cfg.r_out = r_out;
+    }
+
+    /// Re-shape each layer to its own operating point from `profile`
+    /// (same per-layer distribution-aware rescaling as
+    /// [`NetworkModel::retarget_precision`], applied non-uniformly) and
+    /// record the profile so [`NetworkModel::save`] emits it. Entry
+    /// count and names must match the model's layers.
+    pub fn apply_profile(&mut self, profile: &PrecisionProfile) -> Result<()> {
+        if profile.layers.len() != self.layers.len() {
+            bail!(
+                "profile covers {} layers, model '{}' has {}",
+                profile.layers.len(),
+                self.name,
+                self.layers.len()
+            );
+        }
+        for (entry, layer) in profile.layers.iter().zip(&self.layers) {
+            if entry.name != layer.name {
+                bail!("profile entry '{}' != layer '{}'", entry.name, layer.name);
+            }
+            for (tag, r) in [("r_in", entry.r_in), ("r_out", entry.r_out)] {
+                if !(1..=8).contains(&r) {
+                    bail!("profile {}: {tag}={r} outside 1..=8", entry.name);
+                }
+            }
+        }
+        for (entry, layer) in profile.layers.iter().zip(self.layers.iter_mut()) {
+            Self::retarget_layer(layer, entry.r_in, entry.r_out);
+        }
+        self.profile = Some(profile.clone());
+        Ok(())
     }
 
     /// Restore the precision-dependent scalar fields (`a_scale`,
@@ -352,6 +518,7 @@ impl NetworkModel {
             layer.cfg.r_in = base.cfg.r_in;
             layer.cfg.r_out = base.cfg.r_out;
         }
+        self.profile.clone_from(&other.profile);
     }
 
     /// Recorded test accuracy from the compile path, if present.
@@ -593,6 +760,45 @@ mod tests {
         // Restore and confirm the fixture still loads.
         std::fs::write(&man_path, &man).unwrap();
         assert!(NetworkModel::load(&dir, "c").is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn precision_profile_saves_loads_and_validates() {
+        let p = MacroParams::paper();
+        let mut m = NetworkModel::synthetic_mlp(&[30, 12, 5], 8, 4, 8, 33, &p);
+        let prof = PrecisionProfile {
+            version: PrecisionProfile::VERSION,
+            layers: vec![
+                ProfileEntry { name: "fc0".into(), r_in: 6, r_out: 4 },
+                ProfileEntry { name: "fc1".into(), r_in: 4, r_out: 8 },
+            ],
+        };
+        m.apply_profile(&prof).unwrap();
+        assert_eq!(m.layers[0].cfg.r_in, 6);
+        assert_eq!(m.layers[1].cfg.r_out, 8);
+        let dir = std::env::temp_dir().join(format!("imagine_profile_rt_{}", std::process::id()));
+        m.save(&dir, "prof").unwrap();
+        let loaded = NetworkModel::load(&dir, "prof").unwrap();
+        assert_eq!(loaded.profile.as_ref(), Some(&prof));
+        assert_eq!(loaded.layers[0].cfg.r_in, 6);
+        assert_eq!(loaded.layers[0].a_scale.to_bits(), m.layers[0].a_scale.to_bits());
+
+        // Mismatched entry name / count / range must be typed errors.
+        let mut bad = prof.clone();
+        bad.layers[0].name = "nope".into();
+        assert!(m.apply_profile(&bad).is_err());
+        let mut bad = prof.clone();
+        bad.layers.pop();
+        assert!(m.apply_profile(&bad).is_err());
+        let mut bad = prof.clone();
+        bad.layers[1].r_in = 9;
+        assert!(m.apply_profile(&bad).is_err());
+
+        // Uniform retarget invalidates a recorded mixed profile.
+        let mut u = loaded.clone();
+        u.retarget_precision(4, 4);
+        assert!(u.profile.is_none());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -583,33 +583,50 @@ fn max_boundary_len(model: &NetworkModel, io: &[(Vec<usize>, Vec<usize>)]) -> us
 /// what the engine probe and the server's `graph_info` command report
 /// layer by layer.
 pub fn network_layer_costs(model: &NetworkModel, p: &MacroParams) -> Vec<LayerCost> {
+    let points: Vec<(u32, u32)> = model
+        .layers
+        .iter()
+        .map(|l| (l.cfg.r_in, l.cfg.r_out))
+        .collect();
+    network_layer_costs_at(model, p, &points)
+}
+
+/// [`network_layer_costs`] with per-layer `(r_in, r_out)` operating
+/// points overriding each layer's own `cfg` — the autotuner's per-
+/// candidate energy accounting: one compiled model, re-costed at any
+/// per-layer precision assignment without re-lowering. A layer's cost
+/// depends only on its own shape and operating point, so a sweep builds
+/// an exact per-layer × per-point memo from calls to this.
+///
+/// # Panics
+///
+/// Panics if `points.len() != model.layers.len()` (an internal-misuse
+/// guard, matching the slice-length contracts of the engine layer).
+pub fn network_layer_costs_at(
+    model: &NetworkModel,
+    p: &MacroParams,
+    points: &[(u32, u32)],
+) -> Vec<LayerCost> {
+    assert_eq!(points.len(), model.layers.len(), "one (r_in, r_out) point per layer");
     let mut costs = Vec::with_capacity(model.layers.len());
     let mut shape = model.input_shape.clone();
-    for layer in &model.layers {
+    for (layer, &(r_in, r_out)) in model.layers.iter().zip(points) {
+        let mut cfg = layer.cfg;
+        cfg.r_in = r_in;
+        cfg.r_out = r_out;
         let col_passes = layer.out_features.div_ceil(p.n_blocks());
         match layer.kind {
             Kind::Dense => {
-                let ls = LayerShape::fc(
-                    layer.in_features,
-                    layer.out_features,
-                    layer.cfg.r_in,
-                    layer.cfg.r_out,
-                );
-                costs.push(layer_cost(p, &ls, &layer.cfg, col_passes, true));
+                let ls = LayerShape::fc(layer.in_features, layer.out_features, r_in, r_out);
+                costs.push(layer_cost(p, &ls, &cfg, col_passes, true));
                 shape = vec![layer.out_features];
             }
             Kind::Conv3 => {
                 let (h, w) = (shape[1], shape[2]);
                 let (oh, ow) = (h.div_ceil(layer.stride), w.div_ceil(layer.stride));
-                let ls = LayerShape::conv(
-                    layer.in_features,
-                    layer.out_features,
-                    layer.cfg.r_in,
-                    layer.cfg.r_out,
-                    oh,
-                    ow,
-                );
-                costs.push(layer_cost(p, &ls, &layer.cfg, col_passes, true));
+                let ls =
+                    LayerShape::conv(layer.in_features, layer.out_features, r_in, r_out, oh, ow);
+                costs.push(layer_cost(p, &ls, &cfg, col_passes, true));
                 shape = match layer.pool {
                     Pool::Gap => vec![layer.out_features],
                     // Mirrors apply_pool's floor-crop: ph = (oh/2*2)/2.

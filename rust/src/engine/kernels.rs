@@ -97,7 +97,9 @@ const F64_LANES: usize = 4;
 /// at the portable tier — the forced-fallback behaviour the tests pin.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct Caps {
+    /// x86-64 AVX2 available (feature-compiled and CPU-reported).
     pub avx2: bool,
+    /// aarch64 NEON available (feature-compiled and CPU-reported).
     pub neon: bool,
 }
 

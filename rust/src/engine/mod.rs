@@ -44,13 +44,23 @@
 //!   what the `ModelHub` serves every tenant through, instead of one
 //!   engine (and one precision) per process.
 
+// `missing_docs` enforcement (see lib.rs): the kernel dispatch layer is
+// part of the documented public surface; the other engine submodules are
+// internals-with-pub-items and opt out for now.
+#[allow(missing_docs)]
 pub mod analog;
+#[allow(missing_docs)]
 pub mod arena;
+#[allow(missing_docs)]
 pub mod gemm;
+#[allow(missing_docs)]
 pub mod ideal;
 pub mod kernels;
+#[allow(missing_docs)]
 pub mod noise;
+#[allow(missing_docs)]
 pub mod packed;
+#[allow(missing_docs)]
 pub mod queue;
 
 pub use analog::AnalogPool;

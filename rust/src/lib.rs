@@ -29,20 +29,38 @@
 //!   CIM-aware trainer (STE quantizers + equivalent-noise injection);
 //! * [`config`], [`util`] — parameters and support code.
 //!
-//! See DESIGN.md for the experiment index and EXPERIMENTS.md for
-//! paper-vs-measured results.
+//! See `docs/ARCHITECTURE.md` for the layer map and data flow,
+//! `docs/PROTOCOL.md` for the wire protocol and manifest format, and
+//! `docs/OPERATING_POINTS.md` for the precision/supply operating-point
+//! atlas.
+//!
+//! Public-item documentation is enforced (`missing_docs` is deny-by-CI)
+//! on the user-facing surface: [`api`], [`nn`], [`cluster`] and the
+//! engine's kernel dispatch layer. The remaining modules are
+//! internals-with-`pub`-items for the binaries and benches; they are
+//! allow-listed below and opt in as they stabilize.
 
+#![warn(missing_docs)]
+
+#[allow(missing_docs)]
 pub mod analog;
+#[allow(missing_docs)]
 pub mod analysis;
 pub mod api;
 pub mod cluster;
+#[allow(missing_docs)]
 pub mod config;
+#[allow(missing_docs)]
 pub mod coordinator;
+#[allow(missing_docs)]
 pub mod dataflow;
+#[allow(missing_docs)]
 pub mod energy;
 pub mod engine;
 pub mod nn;
+#[allow(missing_docs)]
 pub mod runtime;
+#[allow(missing_docs)]
 pub mod util;
 
 pub use api::{

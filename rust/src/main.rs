@@ -13,6 +13,17 @@
 //!                 forward (`probe` measures it at the configured
 //!                 supply/corner); --out exports artifacts that deploy
 //!                 straight into `imagine serve --model NAME=DIR`
+//!   imagine autotune [--arch mlp|cnn] [--data synthetic|PATH.imgt]
+//!                 [--floor-drop D] [--evals N] [--eval-n N] [--no-probe]
+//!                 [--json] [--out DIR] [--matrix]
+//!                 per-layer (r_in, r_out) precision search: minimize the
+//!                 modeled system energy subject to an accuracy floor,
+//!                 accuracy measured under each operating point's probed
+//!                 equivalent noise; `--out` bakes the winning profile
+//!                 into the exported manifest (versioned
+//!                 `precision_profile` section) so it serves with zero
+//!                 flags, and `--matrix` emits the supply/corner ×
+//!                 precision atlas that docs/OPERATING_POINTS.md renders
 //!   imagine run   --model NAME [--n N] [--backend ideal|analog|pjrt|auto]
 //!                 [--precision R[,R_OUT]] [--supply nominal|low-power|L/H]
 //!                 [--corner tt|ff|ss|fs|sf] [--batch B] [--workers W]
@@ -56,8 +67,8 @@ use anyhow::{bail, Context, Result};
 use imagine::analog::macro_model::OpConfig;
 use imagine::analysis;
 use imagine::api::{
-    parse_corner, parse_precision, parse_supply, BackendKind, Deployment, LrSchedule, ModelHub,
-    NoiseInjection, OptimizerKind, Session, TrainConfig, Trainer,
+    matrix_to_json, parse_corner, parse_precision, parse_supply, AutotuneConfig, BackendKind,
+    Deployment, LrSchedule, ModelHub, NoiseInjection, OptimizerKind, Session, TrainConfig, Trainer,
 };
 use imagine::cluster::{ModelSpec, Router, RouterConfig};
 use imagine::config::params::{MacroParams, Supply};
@@ -415,23 +426,20 @@ fn train_arch(
     }
 }
 
-fn cmd_train(flags: &Flags) -> Result<()> {
-    let seed = flag_u64(flags, "seed", 7)?;
-    let classes = flag_usize(flags, "classes", 10)?.max(2);
-    let arch = flags.get("arch").unwrap_or("mlp");
-
-    // Dataset: a file exported by the compile path, or the deterministic
-    // in-process synthetic task (templates fixed by --seed, so train and
-    // held-out draws share one task).
+/// Dataset pair for `train`/`autotune`: a file exported by the compile
+/// path (split 3:1 train/held-out), or the deterministic in-process
+/// synthetic task (templates fixed by `--seed`, so train and held-out
+/// draws share one task).
+fn load_task(flags: &Flags, seed: u64, classes: usize) -> Result<(Dataset, Dataset)> {
     let data_spec = flags.get("data").unwrap_or("synthetic");
-    let (train_set, test_set) = if data_spec == "synthetic" {
+    if data_spec == "synthetic" {
         let n = flag_usize(flags, "n", 480)?.max(classes * 4);
         let shape = vec![8usize, 8usize];
         let jitter = 0.22;
-        (
+        Ok((
             Dataset::synthetic(n, shape.clone(), classes, seed, seed ^ 0x11, jitter),
             Dataset::synthetic(n / 2, shape, classes, seed, seed ^ 0x22, jitter),
-        )
+        ))
     } else {
         let full = Dataset::load_imgt(data_spec)?;
         let n_test = (full.n / 4).max(1);
@@ -449,8 +457,16 @@ fn cmd_train(flags: &Flags) -> Result<()> {
             n: n_test,
             shape: full.shape,
         };
-        (train, test)
-    };
+        Ok((train, test))
+    }
+}
+
+fn cmd_train(flags: &Flags) -> Result<()> {
+    let seed = flag_u64(flags, "seed", 7)?;
+    let classes = flag_usize(flags, "classes", 10)?.max(2);
+    let arch = flags.get("arch").unwrap_or("mlp");
+
+    let (train_set, test_set) = load_task(flags, seed, classes)?;
 
     let mut config = TrainConfig {
         epochs: flag_usize(flags, "epochs", 6)?,
@@ -536,6 +552,110 @@ fn cmd_train(flags: &Flags) -> Result<()> {
         let name = flags.get("name").unwrap_or("cim_net");
         trained.save(out, name, &train_set)?;
         println!("exported {out}/{name}.manifest.json + {out}/{name}.imgt");
+        println!("deploy with: imagine serve --model {name}={out}");
+    }
+    Ok(())
+}
+
+fn cmd_autotune(flags: &Flags) -> Result<()> {
+    let seed = flag_u64(flags, "seed", 7)?;
+    let classes = flag_usize(flags, "classes", 10)?.max(2);
+    let arch = flags.get("arch").unwrap_or("cnn");
+    let (train_set, test_set) = load_task(flags, seed, classes)?;
+
+    let mut config = TrainConfig {
+        epochs: flag_usize(flags, "epochs", 6)?,
+        seed,
+        noise: parse_noise(flags.get("noise").unwrap_or("probe"))?,
+        workers: flag_usize(flags, "workers", 0)?,
+        ..TrainConfig::default()
+    };
+    if let Some(s) = flags.get("precision") {
+        let (r_in, r_out) = parse_precision(s)?;
+        config.r_in = r_in;
+        config.r_out = r_out;
+    }
+    let mut params = MacroParams::paper();
+    if let Some(s) = flags.get("supply") {
+        params.supply = parse_supply(s)?;
+    }
+    if let Some(s) = flags.get("corner") {
+        params.corner = parse_corner(s)?;
+    }
+
+    let workers = flag_usize(flags, "workers", 0)?;
+    let at = AutotuneConfig {
+        floor_drop: f64::from(flag_f32(flags, "floor-drop", 0.02)?),
+        max_evals: flag_usize(flags, "evals", 96)?.max(1),
+        eval_n: flag_usize(flags, "eval-n", 128)?.max(1),
+        workers: if workers == 0 { default_workers() } else { workers },
+        probe: flags.get("no-probe").is_none(),
+        ..AutotuneConfig::default()
+    };
+
+    let graph = train_arch(arch, &train_set.shape, classes, seed)?;
+    eprintln!(
+        "autotune: training {arch} on {} images ({} classes) | supply {:.2}/{:.2} V corner {} \
+         | floor-drop {} | probe {}",
+        train_set.n,
+        classes,
+        params.supply.vddl,
+        params.supply.vddh,
+        params.corner.name(),
+        at.floor_drop,
+        at.probe
+    );
+    let trained = Trainer::new(graph).config(config).params(params).fit(&train_set)?;
+
+    if flags.get("matrix").is_some() {
+        let entries = trained.operating_point_matrix(&train_set, &test_set, &at)?;
+        println!("{}", matrix_to_json(&entries).to_string_pretty());
+        return Ok(());
+    }
+
+    let report = trained.autotune(&train_set, &test_set, &at)?;
+    if flags.get("json").is_some() {
+        println!("{}", report.to_json().to_string_pretty());
+    } else {
+        println!(
+            "reference r_in={} r_out={}: accuracy {:.1}%, energy {:.3} nJ/image (floor {:.1}%)",
+            report.reference_point.0,
+            report.reference_point.1,
+            100.0 * report.reference_accuracy,
+            1e9 * report.reference_energy_j,
+            100.0 * report.floor
+        );
+        for u in &report.uniform {
+            let acc = match u.accuracy {
+                Some(a) => format!("{:5.1}%", 100.0 * a),
+                None => "   -  ".to_string(),
+            };
+            let tag = if u.feasible { "feasible" } else { "infeasible" };
+            println!(
+                "  uniform ({}, {}): energy {:8.3} nJ  acc {acc}  {tag}",
+                u.r_in,
+                u.r_out,
+                1e9 * u.energy_j
+            );
+        }
+        for (name, &(ri, ro)) in report.layer_names.iter().zip(&report.profile) {
+            println!("  layer {name}: r_in={ri} r_out={ro}");
+        }
+        println!(
+            "profile: accuracy {:.1}%, energy {:.3} nJ/image ({:.1}% below best uniform; \
+             {} moves, {} evals)",
+            100.0 * report.accuracy,
+            1e9 * report.energy_j,
+            100.0 * (1.0 - report.energy_j / report.best_uniform_energy_j),
+            report.moves.len(),
+            report.evals
+        );
+    }
+
+    if let Some(out) = flags.get("out") {
+        let name = flags.get("name").unwrap_or("cim_net");
+        trained.save_tuned(out, name, &train_set, &report)?;
+        println!("exported {out}/{name}.manifest.json + {out}/{name}.imgt (per-layer profile)");
         println!("deploy with: imagine serve --model {name}={out}");
     }
     Ok(())
@@ -670,7 +790,10 @@ fn cmd_lint(flags: &Flags) -> Result<()> {
 }
 
 fn usage() {
-    println!("usage: imagine <info|run|plan|train|serve|router|lint> [--model NAME] [--dir DIR]");
+    println!(
+        "usage: imagine <info|run|plan|train|autotune|serve|router|lint> \
+         [--model NAME] [--dir DIR]"
+    );
     println!("  run:   [--n 200] [--backend ideal|analog|pjrt|auto] [--precision R[,R_OUT]]");
     println!("         [--supply nominal|low-power|L/H] [--corner tt|ff|ss|fs|sf]");
     println!("         [--batch 64] [--workers N] [--seed 42]");
@@ -682,6 +805,17 @@ fn usage() {
     println!("         [--seed 7] [--workers N] [--out DIR] [--name cim_net]");
     println!("         CIM-aware training (STE quantizers + equivalent-noise injection);");
     println!("         --out exports artifacts `imagine serve --model NAME=DIR` deploys");
+    println!("  autotune: [--arch mlp|cnn] [--data synthetic|PATH.imgt] [--n 480]");
+    println!("         [--classes 10] [--epochs 6] [--noise probe|off|SIGMA]");
+    println!("         [--precision R[,R_OUT]] [--supply ...] [--corner ...] [--seed 7]");
+    println!("         [--floor-drop 0.02] [--evals 96] [--eval-n 128] [--no-probe]");
+    println!("         [--workers N] [--json] [--out DIR] [--name cim_net] [--matrix]");
+    println!("         per-layer (r_in, r_out) precision search: minimize modeled system");
+    println!("         energy s.t. accuracy >= reference - floor-drop, accuracy measured");
+    println!("         under each point's probed equivalent noise; --out exports the");
+    println!("         tuned manifest (versioned precision_profile section) that serves");
+    println!("         with zero flags; --matrix emits the supply/corner x precision");
+    println!("         atlas as JSON (see docs/OPERATING_POINTS.md)");
     println!("  serve: --model NAME[=DIR] (repeatable: one deployment per flag)");
     println!("         [--addr 127.0.0.1:7878] [--backend auto|ideal|analog|pjrt]");
     println!("         [--precision R[,R_OUT]] [--supply ...] [--corner ...]");
@@ -731,6 +865,15 @@ fn main() -> Result<()> {
                 "arch", "data", "n", "classes", "epochs", "batch", "lr", "lr-schedule",
                 "momentum", "optimizer", "noise", "precision", "supply", "corner", "seed",
                 "workers", "out", "name",
+            ],
+        )?),
+        "autotune" => cmd_autotune(&parse_flags(
+            "autotune",
+            rest,
+            &[
+                "arch", "data", "n", "classes", "epochs", "noise", "precision", "supply",
+                "corner", "seed", "workers", "floor-drop", "evals", "eval-n", "no-probe",
+                "matrix", "json", "out", "name",
             ],
         )?),
         "serve" => cmd_serve(&parse_flags(

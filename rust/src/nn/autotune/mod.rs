@@ -1,0 +1,881 @@
+//! Per-layer precision autotuner — the paper's workload-adaptive
+//! 1-to-8b claim turned into an automatic tool.
+//!
+//! IMAGINE's macro trades energy for precision across 0.15–8 POPS/W
+//! (§V; Fig. 24): halving `r_in`/`r_out` roughly halves charge moved
+//! per op, while distribution-aware reshaping keeps accuracy usable at
+//! the low end. The IR already carries per-layer overrides
+//! ([`AbnSpec`]) and the serving stack routes per-request precision —
+//! this module *searches* that space: a Pareto sweep over per-layer
+//! `(r_in, r_out)` assignments minimizing modeled system energy
+//! ([`crate::energy::system`]) subject to an accuracy floor, with
+//! accuracy measured under the *probed* equivalent noise of each
+//! operating point ([`crate::engine::noise`]) at the configured
+//! supply/corner — not just the ideal contract.
+//!
+//! The search exploits structure instead of brute-forcing the
+//! `(8×8)^layers` grid:
+//!
+//! 1. **Uniform sweep** — evaluate a small uniform-precision grid
+//!    ([`AutotuneConfig::uniform_points`]), keep the cheapest point
+//!    that clears the floor.
+//! 2. **Greedy per-layer refinement** — from the best uniform seed,
+//!    repeatedly try single-ladder-step-down moves (one layer, one
+//!    knob), ranked by *memoized* per-layer energy savings
+//!    ([`crate::engine::ideal::network_layer_costs_at`] — one cost
+//!    vector per operating point, reused across all candidates), and
+//!    accept the best-saving move that still clears the floor.
+//!
+//! Candidate evaluation never re-lowers or rebuilds a backend: the
+//! calibration pass runs once ([`GraphCalibration::collect`]) and each
+//! candidate binds against it with per-node overrides
+//! ([`MappedGraph::bind_with`]), exactly the O(layers) re-targeting the
+//! manifest path uses. Probed noise σ per `(r_in, r_out)` point is
+//! memoized too; points whose probe rails out (very low `r_out`) are
+//! marked unusable and skipped.
+//!
+//! The winning profile is exported as a versioned
+//! [`PrecisionProfile`] for the saved deployment manifest, so
+//! [`ModelHub`](crate::api::ModelHub) serves it with zero flags.
+//! [`operating_point_matrix`] produces the Fig. 3(b)-style
+//! supply/corner × precision atlas behind `imagine autotune --matrix`
+//! (rendered into `docs/OPERATING_POINTS.md`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::config::params::{Corner, MacroParams, Supply};
+use crate::coordinator::manifest::{NetworkModel, PrecisionProfile, ProfileEntry};
+use crate::engine::ideal::network_layer_costs_at;
+use crate::engine::noise::probe_equivalent_noise_with;
+use crate::nn::cim_eval::EvalCfg;
+use crate::nn::dataset::Dataset;
+use crate::nn::graph::{Graph, GraphCalibration, MappedGraph};
+use crate::nn::layers::AbnSpec;
+use crate::util::json::{obj, Json};
+use crate::util::stats::argmax_f32;
+
+/// Configuration of the per-layer precision search.
+#[derive(Clone, Debug)]
+pub struct AutotuneConfig {
+    /// Allowed accuracy drop below the full-precision reference: the
+    /// feasibility floor is `reference_accuracy - floor_drop`.
+    pub floor_drop: f64,
+    /// Uniform `(r_in, r_out)` seed grid swept before refinement.
+    pub uniform_points: Vec<(u32, u32)>,
+    /// Refinement ladder for `r_in` (any order; refinement steps to the
+    /// next lower rung). Its maximum defines the reference `r_in`.
+    pub r_in_ladder: Vec<u32>,
+    /// Refinement ladder for `r_out`; maximum defines the reference.
+    pub r_out_ladder: Vec<u32>,
+    /// Hard cap on accuracy evaluations (reference + sweep +
+    /// refinement); the search stops when the budget is spent.
+    pub max_evals: usize,
+    /// Images per accuracy evaluation (capped by the eval set size).
+    pub eval_n: usize,
+    /// Worker threads for the batched candidate forwards.
+    pub workers: usize,
+    /// Probe the analog die pool's equivalent noise per operating point
+    /// (`false` inherits the graph-level `noise_lsb` everywhere —
+    /// faster, used by deterministic smoke tests).
+    pub probe: bool,
+    /// Dies in the mismatch probe population.
+    pub probe_dies: usize,
+    /// Repeated reads per die for the temporal-noise estimate.
+    pub probe_repeats: usize,
+}
+
+impl Default for AutotuneConfig {
+    fn default() -> AutotuneConfig {
+        AutotuneConfig {
+            floor_drop: 0.02,
+            uniform_points: vec![(8, 8), (6, 6), (4, 4), (2, 2)],
+            r_in_ladder: vec![8, 7, 6, 5, 4, 3, 2],
+            r_out_ladder: vec![8, 7, 6, 5, 4, 3],
+            max_evals: 96,
+            eval_n: 128,
+            workers: crate::engine::default_workers(),
+            probe: true,
+            probe_dies: 2,
+            probe_repeats: 4,
+        }
+    }
+}
+
+impl AutotuneConfig {
+    fn validate(&self) -> Result<()> {
+        ensure!(self.floor_drop >= 0.0, "floor_drop must be >= 0");
+        ensure!(!self.uniform_points.is_empty(), "empty uniform sweep grid");
+        ensure!(!self.r_in_ladder.is_empty(), "empty r_in ladder");
+        ensure!(!self.r_out_ladder.is_empty(), "empty r_out ladder");
+        for &r in self.r_in_ladder.iter().chain(&self.r_out_ladder) {
+            ensure!((1..=8).contains(&r), "ladder precision {r} outside 1..=8");
+        }
+        for &(ri, ro) in &self.uniform_points {
+            ensure!(
+                (1..=8).contains(&ri) && (1..=8).contains(&ro),
+                "uniform point ({ri}, {ro}) outside 1..=8"
+            );
+        }
+        ensure!(self.max_evals >= 1, "max_evals must be >= 1");
+        ensure!(self.eval_n >= 1, "eval_n must be >= 1");
+        ensure!(self.workers >= 1, "workers must be >= 1");
+        ensure!(self.probe_dies >= 1, "probe_dies must be >= 1");
+        ensure!(self.probe_repeats >= 2, "probe_repeats must be >= 2");
+        Ok(())
+    }
+
+    /// The full-precision reference operating point: the maximum rung
+    /// of each ladder.
+    pub fn reference_point(&self) -> (u32, u32) {
+        let ri = self.r_in_ladder.iter().copied().max().unwrap_or(8);
+        let ro = self.r_out_ladder.iter().copied().max().unwrap_or(8);
+        (ri, ro)
+    }
+}
+
+/// One entry of the uniform-precision sweep.
+#[derive(Clone, Debug)]
+pub struct UniformPoint {
+    /// Input precision [bits].
+    pub r_in: u32,
+    /// Output (ADC) precision [bits].
+    pub r_out: u32,
+    /// Probed equivalent noise σ [ADC LSB]; `None` when the probe
+    /// railed out (point unusable).
+    pub sigma_lsb: Option<f64>,
+    /// Measured accuracy under that noise; `None` when unusable or the
+    /// eval budget ran out first.
+    pub accuracy: Option<f64>,
+    /// Modeled system energy per image [J].
+    pub energy_j: f64,
+    /// Did this point clear the accuracy floor?
+    pub feasible: bool,
+}
+
+/// One accepted refinement move.
+#[derive(Clone, Debug)]
+pub struct MoveRecord {
+    /// CIM-layer index the move touched.
+    pub layer: usize,
+    /// Operating point before the move.
+    pub from: (u32, u32),
+    /// Operating point after the move.
+    pub to: (u32, u32),
+    /// Accuracy measured after the move.
+    pub accuracy: f64,
+    /// Memoized per-image energy saving of the move [J].
+    pub saving_j: f64,
+}
+
+/// Result of a per-layer precision search.
+#[derive(Clone, Debug)]
+pub struct AutotuneReport {
+    /// Manifest layer names, index-aligned with [`AutotuneReport::profile`].
+    pub layer_names: Vec<String>,
+    /// Full-precision reference operating point.
+    pub reference_point: (u32, u32),
+    /// Reference accuracy (the floor's anchor).
+    pub reference_accuracy: f64,
+    /// Reference modeled energy per image [J].
+    pub reference_energy_j: f64,
+    /// Accuracy floor every accepted candidate must clear.
+    pub floor: f64,
+    /// The uniform-precision sweep, in grid order.
+    pub uniform: Vec<UniformPoint>,
+    /// Best feasible uniform point (the refinement seed; falls back to
+    /// the reference when no grid point is feasible).
+    pub best_uniform: (u32, u32),
+    /// Energy of the best uniform point [J/image].
+    pub best_uniform_energy_j: f64,
+    /// Accuracy of the best uniform point.
+    pub best_uniform_accuracy: f64,
+    /// The chosen per-layer `(r_in, r_out)` profile.
+    pub profile: Vec<(u32, u32)>,
+    /// Accuracy of the chosen profile.
+    pub accuracy: f64,
+    /// Modeled energy of the chosen profile [J/image].
+    pub energy_j: f64,
+    /// Accepted refinement moves, in order.
+    pub moves: Vec<MoveRecord>,
+    /// Accuracy evaluations spent (memoized hits not counted).
+    pub evals: usize,
+}
+
+impl AutotuneReport {
+    /// The chosen profile as a versioned manifest section.
+    pub fn precision_profile(&self) -> PrecisionProfile {
+        PrecisionProfile {
+            version: PrecisionProfile::VERSION,
+            layers: self
+                .layer_names
+                .iter()
+                .zip(&self.profile)
+                .map(|(name, &(r_in, r_out))| ProfileEntry { name: name.clone(), r_in, r_out })
+                .collect(),
+        }
+    }
+
+    /// Per-CIM-node [`AbnSpec`] overrides realizing the chosen profile
+    /// (for [`Graph::lower_with`] / [`MappedGraph::bind_with`]).
+    pub fn overrides(&self) -> Vec<AbnSpec> {
+        overrides_for(&self.profile)
+    }
+
+    /// JSON form of the report (the `imagine autotune --json` payload).
+    pub fn to_json(&self) -> Json {
+        let uniform = self
+            .uniform
+            .iter()
+            .map(|u| {
+                obj(vec![
+                    ("r_in", Json::Num(u.r_in as f64)),
+                    ("r_out", Json::Num(u.r_out as f64)),
+                    ("sigma_lsb", opt_num(u.sigma_lsb)),
+                    ("accuracy", opt_num(u.accuracy)),
+                    ("energy_j", Json::Num(u.energy_j)),
+                    ("feasible", Json::Bool(u.feasible)),
+                ])
+            })
+            .collect();
+        let profile = self
+            .layer_names
+            .iter()
+            .zip(&self.profile)
+            .map(|(name, &(ri, ro))| {
+                obj(vec![
+                    ("layer", Json::Str(name.clone())),
+                    ("r_in", Json::Num(ri as f64)),
+                    ("r_out", Json::Num(ro as f64)),
+                ])
+            })
+            .collect();
+        let moves = self
+            .moves
+            .iter()
+            .map(|m| {
+                obj(vec![
+                    ("layer", Json::Num(m.layer as f64)),
+                    ("from", point_json(m.from)),
+                    ("to", point_json(m.to)),
+                    ("accuracy", Json::Num(m.accuracy)),
+                    ("saving_j", Json::Num(m.saving_j)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("tool", Json::Str("imagine-autotune".into())),
+            ("reference", point_json(self.reference_point)),
+            ("reference_accuracy", Json::Num(self.reference_accuracy)),
+            ("reference_energy_j", Json::Num(self.reference_energy_j)),
+            ("floor", Json::Num(self.floor)),
+            ("uniform", Json::Arr(uniform)),
+            ("best_uniform", point_json(self.best_uniform)),
+            ("best_uniform_energy_j", Json::Num(self.best_uniform_energy_j)),
+            ("best_uniform_accuracy", Json::Num(self.best_uniform_accuracy)),
+            ("profile", Json::Arr(profile)),
+            ("accuracy", Json::Num(self.accuracy)),
+            ("energy_j", Json::Num(self.energy_j)),
+            ("moves", Json::Arr(moves)),
+            ("evals", Json::Num(self.evals as f64)),
+        ])
+    }
+}
+
+/// Per-CIM-node overrides pinning each node to its `(r_in, r_out)`
+/// point (noise inherited from the graph-level configuration).
+pub fn overrides_for(points: &[(u32, u32)]) -> Vec<AbnSpec> {
+    points
+        .iter()
+        .map(|&(ri, ro)| AbnSpec { r_in: Some(ri), r_out: Some(ro), ..AbnSpec::INHERIT })
+        .collect()
+}
+
+fn opt_num(v: Option<f64>) -> Json {
+    match v {
+        Some(x) => Json::Num(x),
+        None => Json::Null,
+    }
+}
+
+fn point_json((ri, ro): (u32, u32)) -> Json {
+    obj(vec![("r_in", Json::Num(ri as f64)), ("r_out", Json::Num(ro as f64))])
+}
+
+/// The next lower rung of a ladder, if any.
+fn next_lower(ladder: &[u32], v: u32) -> Option<u32> {
+    ladder.iter().copied().filter(|&x| x < v).max()
+}
+
+/// Shared candidate-evaluation state: one calibration, one lowered base
+/// model for energy memoization, and per-point σ / per-point layer-cost
+/// / per-candidate accuracy memos.
+struct Tuner<'a> {
+    graph: &'a Graph,
+    cal: GraphCalibration,
+    eval: &'a Dataset,
+    eval_n: usize,
+    p: &'a MacroParams,
+    cfg: EvalCfg,
+    at: &'a AutotuneConfig,
+    base: NetworkModel,
+    sigma: BTreeMap<(u32, u32), Option<f64>>,
+    layer_energy: BTreeMap<(u32, u32), Vec<f64>>,
+    acc_memo: BTreeMap<Vec<(u32, u32)>, f64>,
+    evals: usize,
+}
+
+impl Tuner<'_> {
+    /// Probed equivalent noise σ [LSB] of an operating point, memoized;
+    /// `None` marks the point unusable (the probe railed out).
+    fn sigma(&mut self, pt: (u32, u32)) -> Option<f64> {
+        if !self.at.probe {
+            return Some(self.cfg.noise_lsb);
+        }
+        if let Some(&s) = self.sigma.get(&pt) {
+            return s;
+        }
+        let s = probe_equivalent_noise_with(
+            self.p,
+            pt.0,
+            pt.1,
+            self.cfg.seed,
+            self.at.probe_dies,
+            self.at.probe_repeats,
+        )
+        .ok()
+        .map(|stats| stats.total_lsb());
+        self.sigma.insert(pt, s);
+        s
+    }
+
+    /// Per-layer modeled energy [J/image] with every layer at `pt`,
+    /// memoized — the basis for O(1) candidate-move savings.
+    fn layer_energies(&mut self, pt: (u32, u32)) -> Vec<f64> {
+        if let Some(v) = self.layer_energy.get(&pt) {
+            return v.clone();
+        }
+        let pts = vec![pt; self.base.layers.len()];
+        let v: Vec<f64> = network_layer_costs_at(&self.base, self.p, &pts)
+            .iter()
+            .map(|c| c.e_total())
+            .collect();
+        self.layer_energy.insert(pt, v.clone());
+        v
+    }
+
+    /// Total modeled energy [J/image] of a per-layer assignment.
+    fn energy_of(&mut self, points: &[(u32, u32)]) -> f64 {
+        points.iter().enumerate().map(|(li, &pt)| self.layer_energies(pt)[li]).sum()
+    }
+
+    /// Accuracy of a per-layer assignment under each point's probed
+    /// noise; memoized per assignment. Errors when any point has no
+    /// usable probe (callers screen with [`Tuner::sigma`] first).
+    fn accuracy(&mut self, points: &[(u32, u32)]) -> Result<f64> {
+        let key = points.to_vec();
+        if let Some(&a) = self.acc_memo.get(&key) {
+            return Ok(a);
+        }
+        let mut overrides = Vec::with_capacity(points.len());
+        for &pt in points {
+            let Some(sigma) = self.sigma(pt) else {
+                bail!("operating point ({}, {}) has no usable noise probe", pt.0, pt.1);
+            };
+            overrides.push(AbnSpec {
+                r_in: Some(pt.0),
+                r_out: Some(pt.1),
+                noise_lsb: Some(sigma),
+                ..AbnSpec::INHERIT
+            });
+        }
+        let acc = accuracy_with_overrides(
+            self.graph,
+            &self.cal,
+            self.p,
+            &self.cfg,
+            &overrides,
+            self.eval,
+            self.eval_n,
+            self.at.workers,
+        )?;
+        self.evals += 1;
+        self.acc_memo.insert(key, acc);
+        Ok(acc)
+    }
+}
+
+/// Bind the graph with per-node overrides and measure top-1 accuracy on
+/// the first `eval_n` images of `eval`.
+#[allow(clippy::too_many_arguments)]
+fn accuracy_with_overrides(
+    graph: &Graph,
+    cal: &GraphCalibration,
+    p: &MacroParams,
+    cfg: &EvalCfg,
+    overrides: &[AbnSpec],
+    eval: &Dataset,
+    eval_n: usize,
+    workers: usize,
+) -> Result<f64> {
+    let mapped = MappedGraph::bind_with(graph, cal, p, cfg, overrides)?;
+    let out = mapped.forward_flat(&eval.x[..eval_n * eval.image_len()], eval_n, workers)?;
+    let n_out = mapped.output_len();
+    let mut correct = 0usize;
+    for i in 0..eval_n {
+        if argmax_f32(&out[i * n_out..(i + 1) * n_out]) == eval.y[i] as usize {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / eval_n as f64)
+}
+
+/// Search a per-layer `(r_in, r_out)` profile minimizing modeled system
+/// energy subject to `reference_accuracy - floor_drop`.
+///
+/// `calib` calibrates activation ranges (once); `eval` measures
+/// candidate accuracy (first [`AutotuneConfig::eval_n`] images). The
+/// graph-level `cfg` supplies every non-precision knob (γ bits,
+/// adaptive swing, seed) and the fallback `noise_lsb` when probing is
+/// off. Deterministic: same inputs and seed, same profile.
+pub fn autotune(
+    graph: &Graph,
+    calib: &Dataset,
+    eval: &Dataset,
+    p: &MacroParams,
+    cfg: &EvalCfg,
+    at: &AutotuneConfig,
+) -> Result<AutotuneReport> {
+    at.validate()?;
+    let n_cim = graph.n_cim();
+    ensure!(n_cim > 0, "graph has no macro-mapped nodes to tune");
+    let eval_n = eval.n.min(at.eval_n);
+    ensure!(eval_n > 0, "empty evaluation set");
+
+    let ref_pt = at.reference_point();
+    let ref_cfg = EvalCfg { r_in: ref_pt.0, r_out: ref_pt.1, ..*cfg };
+    let base = graph.lower(calib, p, &ref_cfg)?;
+    ensure!(
+        base.layers.len() == n_cim,
+        "lowered model has {} layers for {n_cim} CIM nodes",
+        base.layers.len()
+    );
+    let layer_names: Vec<String> = base.layers.iter().map(|l| l.name.clone()).collect();
+    let cal = GraphCalibration::collect(graph, calib)?;
+
+    let mut t = Tuner {
+        graph,
+        cal,
+        eval,
+        eval_n,
+        p,
+        cfg: *cfg,
+        at,
+        base,
+        sigma: BTreeMap::new(),
+        layer_energy: BTreeMap::new(),
+        acc_memo: BTreeMap::new(),
+        evals: 0,
+    };
+
+    // Reference measurement anchors the floor; its probe must succeed.
+    ensure!(
+        t.sigma(ref_pt).is_some(),
+        "reference operating point ({}, {}): noise probe railed out",
+        ref_pt.0,
+        ref_pt.1
+    );
+    let ref_points = vec![ref_pt; n_cim];
+    let ref_acc = t.accuracy(&ref_points)?;
+    let ref_energy = t.energy_of(&ref_points);
+    let floor = ref_acc - at.floor_drop;
+
+    // Phase 1: uniform-precision sweep.
+    let mut uniform = Vec::with_capacity(at.uniform_points.len());
+    let mut best: Option<((u32, u32), f64, f64)> = None;
+    for &pt in &at.uniform_points {
+        let points = vec![pt; n_cim];
+        let energy = t.energy_of(&points);
+        let sigma = t.sigma(pt);
+        let accuracy = match sigma {
+            None => None,
+            Some(_) if t.evals >= at.max_evals => None,
+            Some(_) => Some(t.accuracy(&points)?),
+        };
+        let feasible = accuracy.is_some_and(|a| a >= floor);
+        if let Some(a) = accuracy {
+            if a >= floor && best.is_none_or(|(_, e, _)| energy < e) {
+                best = Some((pt, energy, a));
+            }
+        }
+        uniform.push(UniformPoint {
+            r_in: pt.0,
+            r_out: pt.1,
+            sigma_lsb: sigma,
+            accuracy,
+            energy_j: energy,
+            feasible,
+        });
+    }
+    let (best_pt, best_energy, best_acc) = best.unwrap_or((ref_pt, ref_energy, ref_acc));
+
+    // Phase 2: greedy per-layer refinement from the best uniform seed.
+    let mut cur = vec![best_pt; n_cim];
+    let mut cur_acc = best_acc;
+    let mut moves = Vec::new();
+    loop {
+        if t.evals >= at.max_evals {
+            break;
+        }
+        // Enumerate single-step-down candidates with their memoized
+        // savings; deterministic order (saving desc, then layer, then
+        // point) makes the whole search reproducible.
+        let mut cands: Vec<(f64, usize, (u32, u32))> = Vec::new();
+        for (li, &(ri, ro)) in cur.iter().enumerate() {
+            let mut opts = Vec::new();
+            if let Some(nri) = next_lower(&at.r_in_ladder, ri) {
+                opts.push((nri, ro));
+            }
+            if let Some(nro) = next_lower(&at.r_out_ladder, ro) {
+                opts.push((ri, nro));
+            }
+            for npt in opts {
+                if t.sigma(npt).is_none() {
+                    continue;
+                }
+                let saving = t.layer_energies((ri, ro))[li] - t.layer_energies(npt)[li];
+                if saving <= 0.0 {
+                    continue;
+                }
+                cands.push((saving, li, npt));
+            }
+        }
+        cands.sort_by(|a, b| {
+            b.0.partial_cmp(&a.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.1.cmp(&b.1))
+                .then(a.2.cmp(&b.2))
+        });
+        let mut accepted = false;
+        for (saving, li, npt) in cands {
+            if t.evals >= at.max_evals {
+                break;
+            }
+            let mut next = cur.clone();
+            next[li] = npt;
+            let acc = t.accuracy(&next)?;
+            if acc >= floor {
+                moves.push(MoveRecord {
+                    layer: li,
+                    from: cur[li],
+                    to: npt,
+                    accuracy: acc,
+                    saving_j: saving,
+                });
+                cur = next;
+                cur_acc = acc;
+                accepted = true;
+                break;
+            }
+        }
+        if !accepted {
+            break;
+        }
+    }
+    let cur_energy = t.energy_of(&cur);
+
+    Ok(AutotuneReport {
+        layer_names,
+        reference_point: ref_pt,
+        reference_accuracy: ref_acc,
+        reference_energy_j: ref_energy,
+        floor,
+        uniform,
+        best_uniform: best_pt,
+        best_uniform_energy_j: best_energy,
+        best_uniform_accuracy: best_acc,
+        profile: cur,
+        accuracy: cur_acc,
+        energy_j: cur_energy,
+        moves,
+        evals: t.evals,
+    })
+}
+
+/// One cell of the supply/corner × precision operating-point atlas.
+#[derive(Clone, Debug)]
+pub struct MatrixEntry {
+    /// Supply label (`"nominal"` / `"low-power"`).
+    pub supply: String,
+    /// Low rail V_DDL [V].
+    pub vddl: f64,
+    /// High rail V_DDH [V].
+    pub vddh: f64,
+    /// Process corner name (TT/FF/SS/FS/SF).
+    pub corner: String,
+    /// Input precision [bits].
+    pub r_in: u32,
+    /// Output (ADC) precision [bits].
+    pub r_out: u32,
+    /// Probed equivalent noise σ [ADC LSB]; `None` when railed out.
+    pub sigma_lsb: Option<f64>,
+    /// Accuracy under that noise; `None` when the point is unusable.
+    pub accuracy: Option<f64>,
+    /// Modeled system energy per image [J].
+    pub energy_j: f64,
+    /// 8b-normalized system energy efficiency [TOPS/W].
+    pub ee_tops_8b: f64,
+}
+
+/// Sweep `{nominal, low-power} × Corner::ALL ×`
+/// [`AutotuneConfig::uniform_points`] on a graph: the Fig. 3(b)-style
+/// accuracy/energy atlas behind `imagine autotune --matrix`.
+pub fn operating_point_matrix(
+    graph: &Graph,
+    calib: &Dataset,
+    eval: &Dataset,
+    base_p: &MacroParams,
+    cfg: &EvalCfg,
+    at: &AutotuneConfig,
+) -> Result<Vec<MatrixEntry>> {
+    at.validate()?;
+    ensure!(graph.n_cim() > 0, "graph has no macro-mapped nodes");
+    let eval_n = eval.n.min(at.eval_n);
+    ensure!(eval_n > 0, "empty evaluation set");
+    let cal = GraphCalibration::collect(graph, calib)?;
+    let ref_pt = at.reference_point();
+    let supplies = [("nominal", Supply::NOMINAL), ("low-power", Supply::LOW_POWER)];
+    let mut out = Vec::new();
+    for (supply_name, supply) in supplies {
+        for corner in Corner::ALL {
+            let p = base_p.clone().with_supply(supply).with_corner(corner);
+            let ref_cfg = EvalCfg { r_in: ref_pt.0, r_out: ref_pt.1, ..*cfg };
+            let base = graph.lower(calib, &p, &ref_cfg)?;
+            for &(ri, ro) in &at.uniform_points {
+                let pts = vec![(ri, ro); base.layers.len()];
+                let costs = network_layer_costs_at(&base, &p, &pts);
+                let energy_j: f64 = costs.iter().map(|c| c.e_total()).sum();
+                let ops_8b: f64 = costs.iter().map(|c| c.ops_8b).sum();
+                let sigma = if at.probe {
+                    probe_equivalent_noise_with(
+                        &p,
+                        ri,
+                        ro,
+                        cfg.seed,
+                        at.probe_dies,
+                        at.probe_repeats,
+                    )
+                    .ok()
+                    .map(|s| s.total_lsb())
+                } else {
+                    Some(cfg.noise_lsb)
+                };
+                let accuracy = match sigma {
+                    None => None,
+                    Some(s) => {
+                        let overrides: Vec<AbnSpec> = (0..graph.n_cim())
+                            .map(|_| AbnSpec {
+                                r_in: Some(ri),
+                                r_out: Some(ro),
+                                noise_lsb: Some(s),
+                                ..AbnSpec::INHERIT
+                            })
+                            .collect();
+                        Some(accuracy_with_overrides(
+                            graph,
+                            &cal,
+                            &p,
+                            cfg,
+                            &overrides,
+                            eval,
+                            eval_n,
+                            at.workers,
+                        )?)
+                    }
+                };
+                out.push(MatrixEntry {
+                    supply: supply_name.to_string(),
+                    vddl: supply.vddl,
+                    vddh: supply.vddh,
+                    corner: corner.name().to_string(),
+                    r_in: ri,
+                    r_out: ro,
+                    sigma_lsb: sigma,
+                    accuracy,
+                    energy_j,
+                    ee_tops_8b: ops_8b / energy_j / 1e12,
+                });
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// JSON form of the atlas (`imagine autotune --matrix` output; consumed
+/// by `scripts/operating_points.py`).
+pub fn matrix_to_json(entries: &[MatrixEntry]) -> Json {
+    let rows = entries
+        .iter()
+        .map(|e| {
+            obj(vec![
+                ("supply", Json::Str(e.supply.clone())),
+                ("vddl", Json::Num(e.vddl)),
+                ("vddh", Json::Num(e.vddh)),
+                ("corner", Json::Str(e.corner.clone())),
+                ("r_in", Json::Num(e.r_in as f64)),
+                ("r_out", Json::Num(e.r_out as f64)),
+                ("sigma_lsb", opt_num(e.sigma_lsb)),
+                ("accuracy", opt_num(e.accuracy)),
+                ("energy_j", Json::Num(e.energy_j)),
+                ("ee_tops_8b", Json::Num(e.ee_tops_8b)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("schema", Json::Str("imagine-operating-points/v1".into())),
+        ("entries", Json::Arr(rows)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::layers::{DenseNode, Node};
+    use crate::nn::mlp::Dense;
+    use crate::util::rng::Rng;
+
+    fn small_graph(seed: u64) -> Graph {
+        let mut rng = Rng::new(seed);
+        Graph::new("tune-t", vec![36])
+            .with(Node::Dense(DenseNode::new(Dense::new(36, 16, &mut rng))))
+            .with(Node::Relu)
+            .with(Node::Dense(DenseNode::new(Dense::new(16, 4, &mut rng))))
+    }
+
+    fn fast_config() -> AutotuneConfig {
+        AutotuneConfig {
+            floor_drop: 1.0,
+            uniform_points: vec![(8, 8), (4, 4)],
+            r_in_ladder: vec![8, 6, 4, 3, 2],
+            r_out_ladder: vec![8, 6, 4, 3],
+            max_evals: 24,
+            eval_n: 24,
+            workers: 1,
+            probe: false,
+            probe_dies: 1,
+            probe_repeats: 2,
+        }
+    }
+
+    #[test]
+    fn next_lower_steps_down_the_ladder() {
+        let ladder = [8, 6, 4, 3];
+        assert_eq!(next_lower(&ladder, 8), Some(6));
+        assert_eq!(next_lower(&ladder, 6), Some(4));
+        assert_eq!(next_lower(&ladder, 4), Some(3));
+        assert_eq!(next_lower(&ladder, 3), None);
+        assert_eq!(next_lower(&ladder, 5), Some(4));
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_grids() {
+        let ok = fast_config();
+        assert!(ok.validate().is_ok());
+        let mut bad = fast_config();
+        bad.r_in_ladder.clear();
+        assert!(bad.validate().is_err(), "empty ladder");
+        let mut bad = fast_config();
+        bad.uniform_points.push((0, 4));
+        assert!(bad.validate().is_err(), "precision 0");
+        let mut bad = fast_config();
+        bad.r_out_ladder.push(9);
+        assert!(bad.validate().is_err(), "precision 9");
+        let mut bad = fast_config();
+        bad.probe_repeats = 1;
+        assert!(bad.validate().is_err(), "probe needs >= 2 repeats");
+    }
+
+    #[test]
+    fn autotune_is_deterministic_and_never_beats_the_budget() {
+        let graph = small_graph(11);
+        let calib = Dataset::synthetic(48, vec![6, 6], 4, 5, 6, 0.2);
+        let eval = Dataset::synthetic(32, vec![6, 6], 4, 5, 7, 0.2);
+        let p = MacroParams::paper();
+        let cfg = EvalCfg::new(8, 5, true);
+        let at = fast_config();
+        let a = autotune(&graph, &calib, &eval, &p, &cfg, &at).unwrap();
+        let b = autotune(&graph, &calib, &eval, &p, &cfg, &at).unwrap();
+        assert_eq!(a.profile, b.profile, "same seed, same profile");
+        assert_eq!(a.evals, b.evals);
+        assert_eq!(a.moves.len(), b.moves.len());
+        assert!(a.evals <= at.max_evals);
+        assert_eq!(a.profile.len(), graph.n_cim());
+        assert_eq!(a.layer_names, vec!["fc0".to_string(), "fc1".to_string()]);
+        assert!(
+            a.energy_j <= a.best_uniform_energy_j + 1e-18,
+            "refinement never regresses the uniform seed"
+        );
+        // With a wide-open floor the greedy descent runs to the ladder
+        // floor for every layer, which uniform (4, 4) cannot match.
+        assert!(a.energy_j < a.best_uniform_energy_j);
+        assert!(!a.moves.is_empty());
+        let json = a.to_json().to_string_compact();
+        assert!(json.contains("\"tool\":\"imagine-autotune\""));
+    }
+
+    #[test]
+    fn probe_mode_memoizes_sigma_per_point() {
+        let graph = small_graph(3);
+        let calib = Dataset::synthetic(32, vec![6, 6], 4, 9, 10, 0.2);
+        let eval = Dataset::synthetic(16, vec![6, 6], 4, 9, 11, 0.2);
+        let p = MacroParams::paper();
+        let cfg = EvalCfg::new(8, 5, true);
+        let at = AutotuneConfig {
+            uniform_points: vec![(8, 8)],
+            r_in_ladder: vec![8],
+            r_out_ladder: vec![8],
+            max_evals: 4,
+            eval_n: 16,
+            workers: 1,
+            probe: true,
+            probe_dies: 1,
+            probe_repeats: 2,
+            ..fast_config()
+        };
+        let r = autotune(&graph, &calib, &eval, &p, &cfg, &at).unwrap();
+        assert_eq!(r.profile, vec![(8, 8); 2], "single-rung ladders cannot move");
+        let sigma = r.uniform[0].sigma_lsb.expect("probe succeeds at (8, 8)");
+        assert!(sigma > 0.0 && sigma.is_finite());
+        assert!(r.moves.is_empty());
+    }
+
+    #[test]
+    fn matrix_covers_the_supply_corner_grid() {
+        let graph = small_graph(7);
+        let calib = Dataset::synthetic(32, vec![6, 6], 4, 1, 2, 0.2);
+        let eval = Dataset::synthetic(8, vec![6, 6], 4, 1, 3, 0.2);
+        let p = MacroParams::paper();
+        let cfg = EvalCfg::new(8, 5, true);
+        let at = AutotuneConfig {
+            uniform_points: vec![(8, 8), (4, 4)],
+            eval_n: 8,
+            workers: 1,
+            probe: false,
+            ..fast_config()
+        };
+        let m = operating_point_matrix(&graph, &calib, &eval, &p, &cfg, &at).unwrap();
+        assert_eq!(m.len(), 2 * Corner::ALL.len() * 2);
+        for e in &m {
+            assert!(e.energy_j > 0.0);
+            assert!(e.accuracy.is_some(), "probe off: every point usable");
+        }
+        // Lower precision must cost less energy at fixed supply/corner.
+        let mut tt: Vec<&MatrixEntry> =
+            m.iter().filter(|e| e.supply == "nominal" && e.corner == "TT").collect();
+        tt.sort_by_key(|e| e.r_in);
+        assert!(tt[0].energy_j < tt[1].energy_j, "4b cheaper than 8b");
+        let json = matrix_to_json(&m).to_string_compact();
+        assert!(json.contains("imagine-operating-points/v1"));
+    }
+}

@@ -45,10 +45,14 @@ pub struct EvalCfg {
     pub adaptive_swing: bool,
     /// Equivalent output noise in LSB (0 disables).
     pub noise_lsb: f64,
+    /// Noise RNG seed (re-seeded per evaluation pass).
     pub seed: u64,
 }
 
 impl EvalCfg {
+    /// A configuration at the given ADC precision/γ-bits/swing mode,
+    /// with the defaults the Fig. 3(b) sweep uses for everything else
+    /// (8b inputs, σ = 0.5 LSB, seed 7).
     pub fn new(r_out: u32, gamma_bits: u32, adaptive_swing: bool) -> Self {
         Self {
             r_out,

@@ -67,12 +67,17 @@ fn validate_images(
 pub struct Dataset {
     /// Flattened images, `n × (c*h*w)`.
     pub x: Vec<f32>,
+    /// Class labels, one per image.
     pub y: Vec<i32>,
+    /// Number of images.
     pub n: usize,
-    pub shape: Vec<usize>, // per-image shape (e.g. [28,28] or [3,32,32])
+    /// Per-image shape (e.g. `[28, 28]` or `[3, 32, 32]`).
+    pub shape: Vec<usize>,
 }
 
 impl Dataset {
+    /// Load a dataset from an `.imgt` tensorfile (`x` float images,
+    /// `y` i32 labels), validating the CHW shape.
     pub fn load_imgt(path: impl AsRef<Path>) -> Result<Dataset> {
         let tf = TensorFile::load(path.as_ref())
             .with_context(|| format!("loading dataset {:?}", path.as_ref()))?;
@@ -102,10 +107,12 @@ impl Dataset {
         }
     }
 
+    /// Flattened length of one image (the product of `shape`).
     pub fn image_len(&self) -> usize {
         self.shape.iter().product()
     }
 
+    /// Image `i` as a flat CHW slice.
     pub fn image(&self, i: usize) -> &[f32] {
         let len = self.image_len();
         &self.x[i * len..(i + 1) * len]

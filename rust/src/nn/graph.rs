@@ -36,13 +36,13 @@
 //!    backends.
 
 use crate::config::params::MacroParams;
-use crate::coordinator::manifest::{Kind, Layer, NetworkModel, Pool};
+use crate::coordinator::manifest::{Kind, Layer, NetworkModel, Pool, PrecisionProfile, ProfileEntry};
 use crate::dataflow::im2col;
 use crate::engine::packed::NodeKernel;
 use crate::engine::{arena, kernels};
 use crate::nn::cim_eval::EvalCfg;
 use crate::nn::dataset::Dataset;
-use crate::nn::layers::{chw, Conv3x3, DenseNode, Node, PoolKind};
+use crate::nn::layers::{chw, AbnSpec, Conv3x3, DenseNode, Node, PoolKind};
 use crate::nn::mlp::Mlp;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -54,13 +54,17 @@ pub const R_W: u32 = 4;
 /// A feed-forward layer graph.
 #[derive(Clone, Debug)]
 pub struct Graph {
+    /// Graph name (becomes the lowered model's manifest name).
     pub name: String,
     /// Natural input shape (`[features]` or `[c, h, w]`).
     pub input_shape: Vec<usize>,
+    /// Nodes in execution order.
     pub nodes: Vec<Node>,
 }
 
 impl Graph {
+    /// An empty graph over the given input shape; append nodes with
+    /// [`Graph::with`].
     pub fn new(name: impl Into<String>, input_shape: Vec<usize>) -> Graph {
         Graph { name: name.into(), input_shape, nodes: Vec::new() }
     }
@@ -109,6 +113,7 @@ impl Graph {
         Ok(self.shapes()?.pop().unwrap())
     }
 
+    /// Flattened input length (the product of `input_shape`).
     pub fn input_len(&self) -> usize {
         self.input_shape.iter().product()
     }
@@ -149,7 +154,21 @@ impl Graph {
     /// manifest layer (the accelerator's post-ADC datapath); standalone
     /// digital nodes in other positions cannot be expressed and fail.
     pub fn lower(&self, calib: &Dataset, p: &MacroParams, cfg: &EvalCfg) -> Result<NetworkModel> {
-        let mapped = MappedGraph::build(self, calib, p, cfg)?;
+        self.lower_with(calib, p, cfg, &[])
+    }
+
+    /// [`Graph::lower`] with per-CIM-node [`AbnSpec`] overrides (see
+    /// [`MappedGraph::bind_with`]) — how an autotuned per-layer
+    /// precision profile is baked into the emitted manifest layers.
+    pub fn lower_with(
+        &self,
+        calib: &Dataset,
+        p: &MacroParams,
+        cfg: &EvalCfg,
+        overrides: &[AbnSpec],
+    ) -> Result<NetworkModel> {
+        let cal = GraphCalibration::collect(self, calib)?;
+        let mapped = MappedGraph::bind_with(self, &cal, p, cfg, overrides)?;
         let mut layers = Vec::new();
         let mut qi = 0usize;
         let mut i = 0usize;
@@ -192,11 +211,34 @@ impl Graph {
             }
             i += 1;
         }
+        // A graph whose nodes resolve to different (r_in, r_out) points
+        // is a mixed-precision model: record the per-layer profile so
+        // the saved manifest serves it with zero flags. Uniform models
+        // stay profile-free (the legacy manifest shape).
+        let uniform = layers
+            .windows(2)
+            .all(|w| (w[0].cfg.r_in, w[0].cfg.r_out) == (w[1].cfg.r_in, w[1].cfg.r_out));
+        let profile = if uniform {
+            None
+        } else {
+            Some(PrecisionProfile {
+                version: PrecisionProfile::VERSION,
+                layers: layers
+                    .iter()
+                    .map(|l| ProfileEntry {
+                        name: l.name.clone(),
+                        r_in: l.cfg.r_in,
+                        r_out: l.cfg.r_out,
+                    })
+                    .collect(),
+            })
+        };
         Ok(NetworkModel {
             name: self.name.clone(),
             input_shape: self.input_shape.clone(),
             layers,
             metrics: Json::Null,
+            profile,
         })
     }
 }
@@ -205,14 +247,27 @@ impl Graph {
 /// over the im2col patch grid.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CimKind {
-    Dense { n_in: usize, n_out: usize },
-    Conv { c_in: usize, c_out: usize },
+    /// Fully-connected: one gemm row per image.
+    Dense {
+        /// Input features.
+        n_in: usize,
+        /// Output features.
+        n_out: usize,
+    },
+    /// 3×3 conv: one gemm row per output pixel (im2col patch).
+    Conv {
+        /// Input channels.
+        c_in: usize,
+        /// Output channels.
+        c_out: usize,
+    },
 }
 
 /// Quantized per-node mapping state — the generalization of the QLayer
 /// `cim_eval` builds for dense layers.
 #[derive(Clone, Debug)]
 pub struct QNode {
+    /// What this node executes as (dense or conv).
     pub kind: CimKind,
     /// gemm reduction length: dense = `n_in` (no physical padding
     /// needed), conv = DP units × 36 macro rows (padding rows carry
@@ -225,8 +280,11 @@ pub struct QNode {
     pub w_q: Vec<f32>,
     /// Per-output ΣW (offset-binary reconstruction constant).
     pub sum_w: Vec<f32>,
+    /// Per-output float bias (rides the post-ADC ABN offset path).
     pub bias: Vec<f32>,
+    /// Weight dequantization scale (float weight ≈ `w_q · w_scale`).
     pub w_scale: f32,
+    /// Activation quantization scale from the calibrated range.
     pub a_scale: f32,
     /// Effective DPL swing α for this node's connected rows.
     pub alpha: f64,
@@ -241,6 +299,7 @@ pub struct QNode {
 }
 
 impl QNode {
+    /// Output features (dense) or output channels (conv).
     pub fn n_out(&self) -> usize {
         match self.kind {
             CimKind::Dense { n_out, .. } => n_out,
@@ -274,7 +333,9 @@ enum ExecOp {
 /// mapping state and the shape schedule — ready for batched execution.
 #[derive(Clone, Debug)]
 pub struct MappedGraph {
+    /// Graph name, carried through from [`Graph::name`].
     pub name: String,
+    /// Natural input shape (`[features]` or `[c, h, w]`).
     pub input_shape: Vec<usize>,
     /// Macro-mapped nodes in execution order.
     pub cim: Vec<QNode>,
@@ -288,14 +349,23 @@ pub struct MappedGraph {
     pub params: MacroParams,
 }
 
-impl MappedGraph {
-    /// Calibrate and quantize `graph` on (a subset of) `calib`.
-    pub fn build(
-        graph: &Graph,
-        calib: &Dataset,
-        p: &MacroParams,
-        cfg: &EvalCfg,
-    ) -> Result<MappedGraph> {
+/// The cfg-independent half of [`MappedGraph::build`]: float-forward
+/// calibration statistics (activation ranges entering each macro node
+/// plus a stash of early activations for the DP-voltage statistics),
+/// collected once per `(graph, calib)` pair and reusable across every
+/// precision binding — what lets the autotuner evaluate hundreds of
+/// per-layer `(r_in, r_out)` candidates without re-running the float
+/// forwards.
+#[derive(Clone, Debug)]
+pub struct GraphCalibration {
+    shapes: Vec<Vec<usize>>,
+    act_hi: Vec<f32>,
+    stash: Vec<Vec<Vec<f32>>>,
+}
+
+impl GraphCalibration {
+    /// Run the calibration float forwards on (a subset of) `calib`.
+    pub fn collect(graph: &Graph, calib: &Dataset) -> Result<GraphCalibration> {
         let shapes = graph.shapes()?;
         ensure!(calib.n > 0, "empty calibration set");
         ensure!(
@@ -305,8 +375,8 @@ impl MappedGraph {
             graph.input_len()
         );
 
-        // Pass 1: activation ranges entering each macro node, plus the
-        // first few activations stashed for the DP-voltage statistics.
+        // Activation ranges entering each macro node, plus the first few
+        // activations stashed for the DP-voltage statistics.
         let calib_n = calib.n.min(96);
         let n_keep = calib_n.min(32);
         let n_cim = graph.n_cim();
@@ -328,22 +398,83 @@ impl MappedGraph {
                 act = node.forward_float(&act, &shapes[ni])?;
             }
         }
+        Ok(GraphCalibration { shapes, act_hi, stash })
+    }
 
+    /// Number of macro-mapped nodes this calibration covers.
+    pub fn n_cim(&self) -> usize {
+        self.act_hi.len()
+    }
+}
+
+impl MappedGraph {
+    /// Calibrate and quantize `graph` on (a subset of) `calib` —
+    /// [`GraphCalibration::collect`] followed by [`MappedGraph::bind`].
+    pub fn build(
+        graph: &Graph,
+        calib: &Dataset,
+        p: &MacroParams,
+        cfg: &EvalCfg,
+    ) -> Result<MappedGraph> {
+        let cal = GraphCalibration::collect(graph, calib)?;
+        Self::bind(graph, &cal, p, cfg)
+    }
+
+    /// Quantize `graph` against pre-collected calibration statistics.
+    pub fn bind(
+        graph: &Graph,
+        cal: &GraphCalibration,
+        p: &MacroParams,
+        cfg: &EvalCfg,
+    ) -> Result<MappedGraph> {
+        Self::bind_with(graph, cal, p, cfg, &[])
+    }
+
+    /// [`MappedGraph::bind`] with per-CIM-node [`AbnSpec`] overrides
+    /// applied on top of each node's own spec (overrides win, then the
+    /// node's spec, then the graph-level `cfg`). `overrides` is indexed
+    /// by CIM-node position and must be empty or cover every CIM node —
+    /// the autotuner's candidate-binding entry point.
+    pub fn bind_with(
+        graph: &Graph,
+        cal: &GraphCalibration,
+        p: &MacroParams,
+        cfg: &EvalCfg,
+        overrides: &[AbnSpec],
+    ) -> Result<MappedGraph> {
+        let n_cim = graph.n_cim();
+        ensure!(
+            cal.n_cim() == n_cim,
+            "calibration covers {} CIM nodes, graph has {n_cim}",
+            cal.n_cim()
+        );
+        ensure!(
+            overrides.is_empty() || overrides.len() == n_cim,
+            "{} overrides for {n_cim} CIM nodes",
+            overrides.len()
+        );
+        let node_cfg = |abn: &AbnSpec, ci: usize| -> EvalCfg {
+            let base = abn.resolve(cfg);
+            match overrides.get(ci) {
+                Some(over) => over.resolve(&base),
+                None => base,
+            }
+        };
         let mut cim = Vec::with_capacity(n_cim);
         let mut ops = Vec::with_capacity(graph.nodes.len());
         let mut ci = 0usize;
         for (ni, node) in graph.nodes.iter().enumerate() {
             match node {
                 Node::Dense(d) => {
-                    let node_cfg = d.abn.resolve(cfg);
-                    cim.push(map_dense(d, &node_cfg, act_hi[ci], &stash[ci], p));
+                    let ncfg = node_cfg(&d.abn, ci);
+                    cim.push(map_dense(d, &ncfg, cal.act_hi[ci], &cal.stash[ci], p));
                     ops.push(ExecOp::Cim(ci));
                     ci += 1;
                 }
                 Node::Conv3x3(c) => {
-                    let node_cfg = c.abn.resolve(cfg);
-                    let [_, h, w] = chw(&shapes[ni])?;
-                    cim.push(map_conv(c, &node_cfg, act_hi[ci], &stash[ci], h, w, p));
+                    let ncfg = node_cfg(&c.abn, ci);
+                    let [_, h, w] = chw(&cal.shapes[ni])?;
+                    cim.push(map_conv(c, &ncfg, cal.act_hi[ci], &cal.stash[ci], h, w, p));
                     ops.push(ExecOp::Cim(ci));
                     ci += 1;
                 }
@@ -357,16 +488,18 @@ impl MappedGraph {
             input_shape: graph.input_shape.clone(),
             cim,
             ops,
-            shapes,
+            shapes: cal.shapes.clone(),
             cfg: *cfg,
             params: p.clone(),
         })
     }
 
+    /// Flattened input length (the product of `input_shape`).
     pub fn input_len(&self) -> usize {
         self.input_shape.iter().product()
     }
 
+    /// Flattened output length (logits per image).
     pub fn output_len(&self) -> usize {
         self.shapes.last().unwrap().iter().product()
     }

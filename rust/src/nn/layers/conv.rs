@@ -15,7 +15,9 @@ use crate::util::rng::Rng;
 /// A 3×3 convolution (zero padding 1, stride 1) with per-channel bias.
 #[derive(Clone, Debug)]
 pub struct Conv3x3 {
+    /// Input channels.
     pub c_in: usize,
+    /// Output channels.
     pub c_out: usize,
     /// Float weights `[c_out × (9·c_in)]`, natural patch order
     /// (`tap * c_in + ch`).

@@ -29,10 +29,18 @@ use anyhow::{bail, Result};
 /// inherits the graph-level [`EvalCfg`].
 #[derive(Clone, Copy, Debug, Default)]
 pub struct AbnSpec {
+    /// Input (activation) precision in bits, 1..=8.
     pub r_in: Option<u32>,
+    /// Output (ADC) precision in bits, 1..=8.
     pub r_out: Option<u32>,
+    /// ABN gain quantization bits.
     pub gamma_bits: Option<u32>,
+    /// Channel-adaptive DPL swing on/off.
     pub adaptive_swing: Option<bool>,
+    /// Equivalent output noise σ in ADC LSB injected at this node —
+    /// the autotuner sets this to the probed σ of the node's own
+    /// `(r_in, r_out)` operating point.
+    pub noise_lsb: Option<f64>,
 }
 
 impl AbnSpec {
@@ -42,6 +50,7 @@ impl AbnSpec {
         r_out: None,
         gamma_bits: None,
         adaptive_swing: None,
+        noise_lsb: None,
     };
 
     /// Resolve against the graph-level configuration.
@@ -51,6 +60,7 @@ impl AbnSpec {
             r_out: self.r_out.unwrap_or(cfg.r_out),
             gamma_bits: self.gamma_bits.unwrap_or(cfg.gamma_bits),
             adaptive_swing: self.adaptive_swing.unwrap_or(cfg.adaptive_swing),
+            noise_lsb: self.noise_lsb.unwrap_or(cfg.noise_lsb),
             ..*cfg
         }
     }
@@ -60,7 +70,9 @@ impl AbnSpec {
 /// semantics as the manifest executor's [`Pool::Max2`]/[`Pool::Avg2`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PoolKind {
+    /// Max-pooling.
     Max,
+    /// Average-pooling.
     Avg,
 }
 
@@ -78,11 +90,14 @@ impl PoolKind {
 /// mapping overrides.
 #[derive(Clone, Debug)]
 pub struct DenseNode {
+    /// The float dense layer (weights + bias).
     pub dense: Dense,
+    /// Per-layer CIM mapping overrides.
     pub abn: AbnSpec,
 }
 
 impl DenseNode {
+    /// Wrap a float dense layer with inherit-everything CIM overrides.
     pub fn new(dense: Dense) -> Self {
         DenseNode { dense, abn: AbnSpec::INHERIT }
     }

@@ -12,13 +12,18 @@ use crate::util::rng::Rng;
 /// One dense layer: row-major weights `[out × in]` + bias.
 #[derive(Clone, Debug)]
 pub struct Dense {
+    /// Row-major float weights `[n_out × n_in]`.
     pub w: Vec<f32>,
+    /// Per-output bias.
     pub b: Vec<f32>,
+    /// Input features.
     pub n_in: usize,
+    /// Output features.
     pub n_out: usize,
 }
 
 impl Dense {
+    /// He-initialized random layer (zero bias).
     pub fn new(n_in: usize, n_out: usize, rng: &mut Rng) -> Self {
         let scale = (2.0 / n_in as f64).sqrt();
         let w = (0..n_in * n_out)
@@ -55,6 +60,7 @@ impl Dense {
 /// The MLP: dense layers with ReLU between them.
 #[derive(Clone, Debug)]
 pub struct Mlp {
+    /// Dense layers in execution order (ReLU between them).
     pub layers: Vec<Dense>,
 }
 
@@ -113,6 +119,7 @@ impl Mlp {
         (acts, cur)
     }
 
+    /// Forward `x` through every layer; returns the final logits.
     pub fn logits(&self, x: &[f32]) -> Vec<f32> {
         self.forward_all(x).1
     }

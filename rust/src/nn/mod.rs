@@ -16,8 +16,12 @@
 //!   quantizers with the post-silicon equivalent noise injected into
 //!   every forward (the paper's distribution-aware training loop);
 //! * [`dataset`] — IMGT dataset loading with CHW validation and the
-//!   deterministic synthetic task generator the trainer smoke-tests on.
+//!   deterministic synthetic task generator the trainer smoke-tests on;
+//! * [`autotune`] — the per-layer `(r_in, r_out)` precision search:
+//!   modeled-energy minimization under an accuracy floor, with accuracy
+//!   measured at each point's probed equivalent noise.
 
+pub mod autotune;
 pub mod cim_eval;
 pub mod dataset;
 pub mod graph;

@@ -137,8 +137,11 @@ impl OptimizerKind {
 /// Hyper-parameters and CIM operating point of one training run.
 #[derive(Clone, Copy, Debug)]
 pub struct TrainConfig {
+    /// Passes over the training set.
     pub epochs: usize,
+    /// Minibatch size.
     pub batch: usize,
+    /// Base learning rate.
     pub lr: f32,
     /// How `lr` evolves across epochs.
     pub lr_schedule: LrSchedule,
@@ -149,12 +152,15 @@ pub struct TrainConfig {
     /// Seeds minibatch shuffling and the noise draws; two runs with the
     /// same config and seed are bit-identical.
     pub seed: u64,
+    /// Where the injected equivalent-noise σ comes from.
     pub noise: NoiseInjection,
     /// Input activation precision the network trains (and deploys) at.
     pub r_in: u32,
     /// ADC output precision.
     pub r_out: u32,
+    /// Bits available to represent the ABN gain (0 ⇒ γ ≡ 1).
     pub gamma_bits: u32,
+    /// Channel-adaptive DPL swing vs fixed full-array swing.
     pub adaptive_swing: bool,
     /// Calibration subset size for the per-epoch remapping.
     pub calib_n: usize,
@@ -236,22 +242,28 @@ pub struct TrainReport {
     /// Mean minibatch loss per epoch (measured with the configured noise
     /// injected, so it fluctuates with σ > 0).
     pub epoch_losses: Vec<f64>,
+    /// Optimizer steps taken.
     pub steps: u64,
+    /// Images consumed across all epochs.
     pub images: u64,
+    /// Wall-clock training time.
     pub wall_seconds: f64,
     /// The σ actually injected (resolved from [`NoiseInjection`]).
     pub noise_lsb: f64,
 }
 
 impl TrainReport {
+    /// Mean minibatch loss of the last epoch (NaN before any epoch).
     pub fn final_loss(&self) -> f64 {
         self.epoch_losses.last().copied().unwrap_or(f64::NAN)
     }
 
+    /// Optimizer steps per wall-clock second.
     pub fn steps_per_s(&self) -> f64 {
         self.steps as f64 / self.wall_seconds.max(1e-12)
     }
 
+    /// Images consumed per wall-clock second.
     pub fn images_per_s(&self) -> f64 {
         self.images as f64 / self.wall_seconds.max(1e-12)
     }

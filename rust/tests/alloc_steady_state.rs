@@ -115,6 +115,7 @@ fn inference_steady_state_is_allocation_free() {
         input_shape: vec![3, 8, 8],
         layers: vec![conv1, gap, head],
         metrics: Json::Null,
+        profile: None,
     };
     assert_steady(cnn, &mut rng, "conv");
 }

@@ -1,0 +1,163 @@
+//! End-to-end autotuner contract: on a trained synthetic CNN the
+//! per-layer search must find a *mixed*-precision profile with lower
+//! modeled system energy than the best uniform profile at the same
+//! accuracy floor, the tuned manifest must round-trip (save → load →
+//! serve) bit-identical to the in-memory lowered model, and legacy
+//! manifests (no `precision_profile` section) must keep deploying with
+//! uniform precision assumed.
+
+use imagine::api::{AutotuneConfig, Deployment, ModelHub, NoiseInjection, TrainConfig, Trainer};
+use imagine::coordinator::manifest::NetworkModel;
+use imagine::nn::dataset::Dataset;
+use imagine::nn::graph::Graph;
+use imagine::nn::layers::{Conv3x3, DenseNode, Node, PoolKind};
+use imagine::nn::mlp::Dense;
+use imagine::util::rng::Rng;
+
+const CLASSES: usize = 4;
+
+fn task(n: usize, draw_seed: u64) -> Dataset {
+    Dataset::synthetic(n, vec![8, 8], CLASSES, 5, draw_seed, 0.22)
+}
+
+/// conv(1→6) + ReLU + max-pool + dense head — two CIM layers with very
+/// different energy weights, so greedy refinement has real structure to
+/// exploit.
+fn cnn_graph(seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    Graph::new("tune_cnn", vec![1, 8, 8])
+        .with(Node::Conv3x3(Conv3x3::new(1, 6, &mut rng)))
+        .with(Node::Relu)
+        .with(Node::Pool2x2(PoolKind::Max))
+        .with(Node::Flatten)
+        .with(Node::Dense(DenseNode::new(Dense::new(96, CLASSES, &mut rng))))
+}
+
+fn train_cnn(seed: u64, data: &Dataset) -> imagine::api::TrainedModel {
+    let cfg = TrainConfig {
+        epochs: 3,
+        batch: 16,
+        noise: NoiseInjection::Off,
+        workers: 1,
+        seed,
+        ..TrainConfig::default()
+    };
+    Trainer::new(cnn_graph(seed)).config(cfg).fit(data).unwrap()
+}
+
+/// Deterministic, probe-free search with refinement ladders strictly
+/// finer than the uniform grid and a capped eval budget: the sweep
+/// spends 3 evals (the (8, 8) reference is memo-shared), leaving 5
+/// accepted single-step moves that necessarily split unevenly across
+/// the two layers.
+fn tune_cfg() -> AutotuneConfig {
+    AutotuneConfig {
+        floor_drop: 0.5,
+        uniform_points: vec![(8, 8), (6, 6), (4, 4)],
+        r_in_ladder: vec![8, 7, 6, 5, 4, 3, 2],
+        r_out_ladder: vec![8, 7, 6, 5, 4, 3],
+        max_evals: 8,
+        eval_n: 64,
+        workers: 1,
+        probe: false,
+        probe_dies: 1,
+        probe_repeats: 2,
+    }
+}
+
+#[test]
+fn mixed_profile_beats_best_uniform_at_the_same_floor() {
+    let train = task(240, 11);
+    let eval = task(96, 12);
+    let trained = train_cnn(3, &train);
+    let at = tune_cfg();
+    let report = trained.autotune(&train, &eval, &at).unwrap();
+
+    assert!(!report.moves.is_empty(), "refinement accepted no move");
+    assert!(
+        report.energy_j < report.best_uniform_energy_j,
+        "mixed {} J >= best uniform {} J",
+        report.energy_j,
+        report.best_uniform_energy_j
+    );
+    assert!(
+        report.accuracy >= report.floor,
+        "profile accuracy {} below floor {}",
+        report.accuracy,
+        report.floor
+    );
+    assert_eq!(report.profile.len(), 2);
+    assert_ne!(report.profile[0], report.profile[1], "profile is not mixed: {:?}", report.profile);
+    assert_eq!(report.layer_names, vec!["conv0".to_string(), "fc1".to_string()]);
+    assert!(report.evals <= at.max_evals);
+
+    // Same seed, same search: the whole report core is reproducible.
+    let again = trained.autotune(&train, &eval, &at).unwrap();
+    assert_eq!(report.profile, again.profile);
+    assert_eq!(report.evals, again.evals);
+    assert_eq!(report.moves.len(), again.moves.len());
+    assert_eq!(report.energy_j, again.energy_j);
+    assert_eq!(report.accuracy, again.accuracy);
+}
+
+#[test]
+fn tuned_manifest_roundtrips_and_serves_bit_identical() {
+    let train = task(240, 21);
+    let eval = task(48, 22);
+    let trained = train_cnn(9, &train);
+    let report = trained.autotune(&train, &eval, &tune_cfg()).unwrap();
+    assert_ne!(report.profile[0], report.profile[1], "need a mixed profile for the roundtrip");
+
+    let dir = std::env::temp_dir().join(format!("imagine_autotune_rt_{}", std::process::id()));
+    let dir = dir.to_str().unwrap().to_string();
+    let saved = trained.save_tuned(&dir, "tuned", &train, &report).unwrap();
+    assert!(saved.profile.is_some(), "tuned export must carry the profile");
+
+    // The persisted manifest declares the versioned per-layer section
+    // and loads back with the exact profile the search chose.
+    let manifest = std::fs::read_to_string(format!("{dir}/tuned.manifest.json")).unwrap();
+    assert!(manifest.contains("precision_profile"));
+    let loaded = NetworkModel::load(&dir, "tuned").unwrap();
+    assert_eq!(loaded.profile, Some(report.precision_profile()));
+    for (layer, &(r_in, r_out)) in loaded.layers.iter().zip(&report.profile) {
+        assert_eq!((layer.cfg.r_in, layer.cfg.r_out), (r_in, r_out));
+    }
+
+    // Zero-flag serving: artifacts → hub must match the in-memory
+    // lowered model bit for bit on every output.
+    let hub = ModelHub::builder().workers(1).build().unwrap();
+    hub.deploy("art", Deployment::from_artifacts(&dir, "tuned").unwrap()).unwrap();
+    hub.deploy("mem", Deployment::new(trained.lower_tuned(&train, &report).unwrap())).unwrap();
+    let art = hub.session("art").unwrap();
+    let mem = hub.session("mem").unwrap();
+    for i in 0..16 {
+        let a = art.infer_one(eval.image(i).to_vec()).unwrap();
+        let b = mem.infer_one(eval.image(i).to_vec()).unwrap();
+        assert_eq!(a, b, "image {i}: served logits diverge from in-process lowering");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn legacy_manifest_without_profile_still_deploys() {
+    let train = task(160, 31);
+    let trained = train_cnn(17, &train);
+    let dir = std::env::temp_dir().join(format!("imagine_autotune_legacy_{}", std::process::id()));
+    let dir = dir.to_str().unwrap().to_string();
+    trained.save(&dir, "plain", &train).unwrap();
+
+    // An untuned export is exactly the legacy manifest shape: no
+    // `precision_profile` key at all.
+    let manifest = std::fs::read_to_string(format!("{dir}/plain.manifest.json")).unwrap();
+    assert!(!manifest.contains("precision_profile"));
+    let loaded = NetworkModel::load(&dir, "plain").unwrap();
+    assert!(loaded.profile.is_none(), "legacy manifests assume uniform precision");
+
+    let hub = ModelHub::builder().workers(1).build().unwrap();
+    hub.deploy("plain", Deployment::from_artifacts(&dir, "plain").unwrap()).unwrap();
+    let session = hub.session("plain").unwrap();
+    let logits = session.infer_one(train.image(0).to_vec()).unwrap();
+    assert_eq!(logits.len(), CLASSES);
+    assert!(logits.iter().all(|v| v.is_finite()));
+    let _ = std::fs::remove_dir_all(&dir);
+}

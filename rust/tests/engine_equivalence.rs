@@ -36,6 +36,7 @@ fn random_cnn(rng: &mut Rng, p: &MacroParams) -> NetworkModel {
         input_shape: vec![c_in, h, w],
         layers: vec![conv1, gap, head],
         metrics: Json::Null,
+        profile: None,
     }
 }
 

@@ -1,0 +1,103 @@
+#!/usr/bin/env python3
+"""Check relative markdown links and anchors in the repo's docs.
+
+Usage:
+  python3 scripts/check_links.py [FILE.md ...]
+
+With no arguments, checks the default set: every `docs/*.md`, the root
+markdown files and `rust/README.md`. For each `[text](target)` link it
+verifies:
+
+  * http(s)/mailto targets are skipped (no network on CI);
+  * a relative path target resolves to an existing file or directory,
+    relative to the file containing the link;
+  * a `#fragment` (same-file or `path#fragment`) matches a heading in
+    the target file under GitHub's anchor rules (lowercase, spaces to
+    dashes, punctuation dropped).
+
+Exits non-zero listing every broken link. Stdlib only — runs on a bare
+CI runner.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$")
+# GitHub's anchor algorithm: keep word chars and dashes, spaces → dashes.
+ANCHOR_STRIP_RE = re.compile(r"[^\w\- ]", re.UNICODE)
+CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def default_files():
+    files = sorted((REPO / "docs").glob("*.md"))
+    files += sorted(REPO.glob("*.md"))
+    rust_readme = REPO / "rust" / "README.md"
+    if rust_readme.exists():
+        files.append(rust_readme)
+    return files
+
+
+def anchor_of(heading):
+    text = ANCHOR_STRIP_RE.sub("", heading.strip().lower())
+    return text.replace(" ", "-")
+
+
+def markdown_lines(path):
+    """Lines outside fenced code blocks, with their 1-based numbers."""
+    in_fence = False
+    for lineno, line in enumerate(path.read_text(encoding="utf-8").splitlines(), 1):
+        if CODE_FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            yield lineno, line
+
+
+def anchors_of(path, cache):
+    if path not in cache:
+        found = set()
+        for _, line in markdown_lines(path):
+            m = HEADING_RE.match(line)
+            if m:
+                found.add(anchor_of(m.group(1)))
+        cache[path] = found
+    return cache[path]
+
+
+def check_file(path, anchor_cache):
+    errors = []
+    for lineno, line in markdown_lines(path):
+        for target in LINK_RE.findall(line):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            rel, _, fragment = target.partition("#")
+            dest = (path.parent / rel).resolve() if rel else path
+            if not dest.exists():
+                errors.append(f"{path.relative_to(REPO)}:{lineno}: missing target {target}")
+                continue
+            if fragment and dest.suffix == ".md":
+                if fragment not in anchors_of(dest, anchor_cache):
+                    errors.append(
+                        f"{path.relative_to(REPO)}:{lineno}: "
+                        f"no heading for anchor #{fragment} in {rel or path.name}"
+                    )
+    return errors
+
+
+def main():
+    files = [Path(a).resolve() for a in sys.argv[1:]] or default_files()
+    anchor_cache = {}
+    errors = []
+    for path in files:
+        errors.extend(check_file(path, anchor_cache))
+    for err in errors:
+        print(err, file=sys.stderr)
+    print(f"check_links: {len(files)} files, {len(errors)} broken links")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
